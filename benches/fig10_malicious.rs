@@ -1,0 +1,38 @@
+//! Bench: regenerate paper Fig 10 (RQ3 — malicious workers vs majority-hash
+//! consensus; honest >50% nullifies poisoning, 1:1 fluctuates).
+
+use flsim::experiments::fig10;
+use flsim::runtime::pjrt::Runtime;
+
+fn main() {
+    flsim::util::logging::init_from_env();
+    let rt = Runtime::shared("artifacts").expect("run `make artifacts` first");
+    let reports = fig10::run(rt).expect("fig10 experiment failed");
+
+    let get = |name: &str| reports.iter().find(|r| r.label == name).unwrap();
+    let destroyed = get("1M-0H");
+    let tie = get("1M-1H");
+    let h2 = get("1M-2H");
+    let h3 = get("1M-3H");
+
+    for (what, ok) in [
+        (
+            "1M-0H training destroyed (accuracy ~ chance)",
+            destroyed.final_accuracy() < 0.25,
+        ),
+        (
+            "honest majority (1M-2H) nullifies poisoning",
+            h2.final_accuracy() > destroyed.final_accuracy() + 0.2,
+        ),
+        (
+            "1M-3H matches 1M-2H (both clean)",
+            (h3.final_accuracy() - h2.final_accuracy()).abs() < 0.15,
+        ),
+        (
+            "1M-1H fluctuates (worse than honest-majority)",
+            tie.final_accuracy() < h2.final_accuracy(),
+        ),
+    ] {
+        println!("shape: {what}: {}", if ok { "OK" } else { "MISS" });
+    }
+}

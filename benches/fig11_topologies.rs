@@ -1,0 +1,35 @@
+//! Bench: regenerate paper Fig 11 (RQ5 — client-server vs hierarchical vs
+//! decentralized topologies).
+
+use flsim::experiments::fig11;
+use flsim::runtime::pjrt::Runtime;
+
+fn main() {
+    flsim::util::logging::init_from_env();
+    let rt = Runtime::shared("artifacts").expect("run `make artifacts` first");
+    let reports = fig11::run(rt).expect("fig11 experiment failed");
+
+    let get = |name: &str| reports.iter().find(|r| r.label == name).unwrap();
+    let cs = get("client_server");
+    let hier = get("hierarchical");
+    let dec = get("decentralized");
+
+    for (what, ok) in [
+        (
+            "all three topologies reach similar accuracy (±0.15)",
+            (cs.final_accuracy() - hier.final_accuracy()).abs() < 0.15
+                && (cs.final_accuracy() - dec.final_accuracy()).abs() < 0.15,
+        ),
+        (
+            "decentralized uses the most bandwidth",
+            dec.total_net_bytes() > cs.total_net_bytes()
+                && dec.total_net_bytes() > hier.total_net_bytes(),
+        ),
+        (
+            "hierarchical costs more bandwidth than client-server",
+            hier.total_net_bytes() > cs.total_net_bytes(),
+        ),
+    ] {
+        println!("shape: {what}: {}", if ok { "OK" } else { "MISS" });
+    }
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerate paper Fig 12 (RQ7 — scalability): MNIST logreg at
+//! 100/250/500/1000 clients. Accuracy flat across scales; bandwidth and
+//! time grow with client count.
+
+use flsim::experiments::fig12;
+use flsim::runtime::pjrt::Runtime;
+
+fn main() {
+    flsim::util::logging::init_from_env();
+    let rt = Runtime::shared("artifacts").expect("run `make artifacts` first");
+    let reports = fig12::run(rt).expect("fig12 experiment failed");
+
+    let accs: Vec<f64> = reports.iter().map(|r| r.final_accuracy()).collect();
+    let bytes: Vec<u64> = reports.iter().map(|r| r.total_net_bytes()).collect();
+    let spread = accs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        - accs.iter().cloned().fold(f64::INFINITY, f64::min);
+
+    for (what, ok) in [
+        ("accuracy flat across client counts (spread < 0.05)", spread < 0.05),
+        (
+            "bandwidth grows monotonically with clients",
+            bytes.windows(2).all(|w| w[0] < w[1]),
+        ),
+    ] {
+        println!("shape: {what}: {}", if ok { "OK" } else { "MISS" });
+    }
+}

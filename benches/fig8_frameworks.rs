@@ -1,0 +1,49 @@
+//! Bench: regenerate paper Fig 8 (RQ1 — seven FL techniques compared on
+//! accuracy / loss / time / CPU+memory / bandwidth).
+//!
+//! Full paper setting by default (30 rounds, 5000 examples); set
+//! FLSIM_ROUNDS / FLSIM_DATASET_N for a quick pass.
+
+use flsim::experiments::fig8;
+use flsim::runtime::pjrt::Runtime;
+
+fn main() {
+    flsim::util::logging::init_from_env();
+    let rt = Runtime::shared("artifacts").expect("run `make artifacts` first");
+    let reports = fig8::run(rt).expect("fig8 experiment failed");
+
+    // Shape assertions from the paper (soft-checked; prints verdicts).
+    let get = |name: &str| reports.iter().find(|r| r.label == name).unwrap();
+    let fedavg = get("fedavg");
+    let moon = get("moon");
+    let scaffold = get("scaffold");
+    let flhc = get("flhc");
+    let fedstellar = get("fedstellar");
+
+    let mut verdicts = Vec::new();
+    verdicts.push((
+        "MOON or SCAFFOLD reach top-2 accuracy",
+        top2(&reports, &[moon.label.clone(), scaffold.label.clone()]),
+    ));
+    verdicts.push((
+        "Fedstellar uses the most bandwidth",
+        fedstellar.total_net_bytes()
+            == reports.iter().map(|r| r.total_net_bytes()).max().unwrap(),
+    ));
+    verdicts.push((
+        "FL+HC is slower than FedAvg",
+        flhc.total_wall_secs() > fedavg.total_wall_secs(),
+    ));
+    for (what, ok) in verdicts {
+        println!("shape: {what}: {}", if ok { "OK" } else { "MISS" });
+    }
+}
+
+fn top2(reports: &[flsim::metrics::report::RunReport], names: &[String]) -> bool {
+    let mut accs: Vec<(String, f64)> = reports
+        .iter()
+        .map(|r| (r.label.clone(), r.final_accuracy()))
+        .collect();
+    accs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    accs.iter().take(2).any(|(n, _)| names.contains(n))
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate paper Fig 9 (RQ2 — backend/"library" comparison:
+//! accuracy, wall time, memory growth, bandwidth).
+
+use flsim::experiments::fig9;
+use flsim::runtime::pjrt::Runtime;
+
+fn main() {
+    flsim::util::logging::init_from_env();
+    let rt = Runtime::shared("artifacts").expect("run `make artifacts` first");
+    let reports = fig9::run(rt).expect("fig9 experiment failed");
+
+    let get = |name: &str| reports.iter().find(|r| r.label == name).unwrap();
+    let torch = get("pytorch-analog");
+    let tf = get("tensorflow-analog");
+    let sk = get("sklearn-analog");
+
+    // Paper shapes: torch best accuracy & fastest; sklearn lowest accuracy
+    // (different architecture) & highest bandwidth; tf slowest.
+    for (what, ok) in [
+        (
+            "cnn ('torch') highest accuracy",
+            torch.final_accuracy() >= tf.final_accuracy()
+                && torch.final_accuracy() >= sk.final_accuracy(),
+        ),
+        (
+            "mlp ('sklearn') highest bandwidth",
+            sk.total_net_bytes() > torch.total_net_bytes()
+                && sk.total_net_bytes() > tf.total_net_bytes(),
+        ),
+        (
+            "cnn_v2 ('tensorflow') slowest",
+            tf.total_wall_secs() >= torch.total_wall_secs(),
+        ),
+    ] {
+        println!("shape: {what}: {}", if ok { "OK" } else { "MISS" });
+    }
+}

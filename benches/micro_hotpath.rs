@@ -1,0 +1,128 @@
+//! Micro-benchmarks of the L3 hot paths (EXPERIMENTS.md §Perf): train-step
+//! execution, aggregation reduction orders, parameter hashing, KV-store
+//! publish/fetch, consensus decision, eval — plus executable-cache checks.
+
+use flsim::aggregate::mean::{weighted_mean, ReductionOrder};
+use flsim::bench::bench;
+use flsim::consensus::{by_name, Proposal};
+use flsim::kvstore::store::{KvStore, Payload};
+use flsim::runtime::backend::ModelBackend;
+use flsim::runtime::pjrt::Runtime;
+use flsim::util::hash;
+use flsim::util::rng::Rng;
+
+fn main() {
+    flsim::util::logging::init_from_env();
+    let rt = Runtime::shared("artifacts").expect("run `make artifacts` first");
+
+    // --- L3 pure-Rust hot paths -----------------------------------------
+    let dim = 72_986; // cnn backend size
+    let mut rng = Rng::seed_from(1);
+    let models: Vec<Vec<f32>> = (0..10)
+        .map(|_| (0..dim).map(|_| rng.normal_f32()).collect())
+        .collect();
+    let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+    let weights = vec![1.0f64; refs.len()];
+
+    for order in ReductionOrder::ALL {
+        bench(
+            &format!("aggregate/10x{dim}/{:?}", order),
+            3,
+            20,
+            || {
+                let out = weighted_mean(&refs, &weights, order).unwrap();
+                std::hint::black_box(out);
+            },
+        );
+    }
+
+    bench("hash_params/72986", 3, 20, || {
+        std::hint::black_box(hash::hash_params(&models[0]));
+    });
+
+    // Ablation: communication-efficient compressors (bytes + error + cost).
+    {
+        use flsim::aggregate::compress::{compression_error, quantize, top_k, CompressedUpdate};
+        let delta = &models[0];
+        let dense_bytes = CompressedUpdate::Dense(delta.clone()).wire_bytes();
+        for k_frac in [0.01, 0.1] {
+            let k = (dim as f64 * k_frac) as usize;
+            let c = top_k(delta, k);
+            println!(
+                "ablation compress/top_k({k_frac})       bytes {:>9} ({:>5.1}% of dense) err {:.3}",
+                c.wire_bytes(),
+                100.0 * c.wire_bytes() as f64 / dense_bytes as f64,
+                compression_error(delta, &c)
+            );
+            bench(&format!("compress/top_k/{k_frac}"), 2, 10, || {
+                std::hint::black_box(top_k(delta, k));
+            });
+        }
+        for bits in [8u8, 4, 2] {
+            let c = quantize(delta, bits, &mut Rng::seed_from(5)).unwrap();
+            println!(
+                "ablation compress/quant{bits}          bytes {:>9} ({:>5.1}% of dense) err {:.3}",
+                c.wire_bytes(),
+                100.0 * c.wire_bytes() as f64 / dense_bytes as f64,
+                compression_error(delta, &c)
+            );
+        }
+    }
+
+    bench("kvstore/publish+fetch 292KiB", 3, 50, || {
+        let mut kv = KvStore::new();
+        kv.publish("t", "c0", 1, Payload::Params(models[0].clone()));
+        let m = kv.fetch_latest("t", "w0").unwrap();
+        std::hint::black_box(m);
+    });
+
+    let proposals: Vec<Proposal> = (0..4)
+        .map(|i| Proposal::new(format!("w{i}"), models[i % 2].clone()))
+        .collect();
+    let consensus = by_name("majority_hash").unwrap();
+    bench("consensus/majority_hash/4 workers", 3, 50, || {
+        let d = consensus
+            .decide(&proposals, &mut Rng::seed_from(7))
+            .unwrap();
+        std::hint::black_box(d);
+    });
+
+    // --- PJRT execution hot paths ----------------------------------------
+    let backend = ModelBackend::new(rt.clone(), "cnn").unwrap();
+    let params = backend.init(0).unwrap();
+    let plit = backend.params_lit(&params).unwrap();
+    let bs = backend.train_batch;
+    let f: usize = backend.input_shape.iter().product();
+    let mut drng = Rng::seed_from(3);
+    let x: Vec<f32> = (0..bs * f).map(|_| drng.normal_f32()).collect();
+    let y: Vec<i32> = (0..bs).map(|_| drng.below(10) as i32).collect();
+    let (xl, yl) = backend.batch_lits(&x, &y).unwrap();
+
+    bench("pjrt/cnn_sgd_step/batch64", 3, 20, || {
+        let out = backend.sgd(&plit, &xl, &yl, 0.01).unwrap();
+        std::hint::black_box(out);
+    });
+
+    let eb = backend.eval_batch;
+    let xe: Vec<f32> = (0..eb * f).map(|_| drng.normal_f32()).collect();
+    let ye: Vec<i32> = (0..eb).map(|_| drng.below(10) as i32).collect();
+    let mask = vec![1.0f32; eb];
+    let (xel, yel, ml) = backend.eval_lits(&xe, &ye, &mask).unwrap();
+    bench("pjrt/cnn_eval/batch256", 3, 20, || {
+        let out = backend.eval_batch(&plit, &xel, &yel, &ml).unwrap();
+        std::hint::black_box(out);
+    });
+
+    // Executable-cache effectiveness: every artifact compiles exactly once.
+    let stats = rt.stats();
+    println!(
+        "runtime: compiles={} executions={} compile={:.2}s execute={:.2}s",
+        stats.compiles, stats.executions, stats.compile_secs, stats.execute_secs
+    );
+    assert!(
+        stats.compiles <= 3,
+        "executable cache miss: {} compiles",
+        stats.compiles
+    );
+    println!("shape: executable cache hit rate after warmup: OK");
+}

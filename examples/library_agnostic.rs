@@ -1,0 +1,47 @@
+//! ML-library agnosticism (RQ2) at the API level: the identical job runs
+//! over every model backend the manifest declares — the coordinator never
+//! names a model family, exactly as FLsim never names torch/tf/sklearn.
+//!
+//! ```bash
+//! cargo run --release --example library_agnostic
+//! ```
+
+use anyhow::Result;
+
+use flsim::metrics::dashboard;
+use flsim::prelude::*;
+
+fn main() -> Result<()> {
+    flsim::util::logging::init_from_env();
+    let rt = Runtime::shared("artifacts")?;
+
+    // Discover backends from the manifest — no hardcoded model list.
+    let backends: Vec<String> = rt.manifest.backends.keys().cloned().collect();
+    println!("manifest declares backends: {backends:?}");
+
+    let orch = Orchestrator::new(rt.clone());
+    let mut reports = Vec::new();
+    for backend in &backends {
+        let mut job = JobConfig::default_cnn("fedavg");
+        job.name = backend.clone();
+        job.backend = backend.clone();
+        job.rounds = 3;
+        job.dataset.n = 1200;
+        if backend == "logreg" {
+            // The MNIST-shaped backend needs the MNIST-shaped dataset.
+            job.dataset = DatasetSpec::mnist_iid(1200);
+            job.train.learning_rate = 0.05;
+        }
+        let report = orch.run(&job)?;
+        println!("{}", dashboard::run_line(&report));
+        reports.push(report);
+    }
+
+    println!();
+    println!(
+        "{}",
+        dashboard::comparison("one job config, every backend", &reports)
+    );
+    assert_eq!(reports.len(), backends.len());
+    Ok(())
+}

@@ -1,0 +1,160 @@
+"""AOT compiler: lower every (backend × step) function to HLO *text* and emit
+a manifest.json describing the artifact set for the Rust runtime.
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Python runs ONCE at build time; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import models, steps
+
+F32 = "f32"
+S32 = "s32"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_entry(shape, dtype):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+class ArtifactSet:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {
+            "format": 1,
+            "generated_unix": int(time.time()),
+            "jax_version": jax.__version__,
+            "train_batch": steps.TRAIN_BATCH,
+            "eval_batch": steps.EVAL_BATCH,
+            "backends": {},
+        }
+
+    def add(self, backend: str, step_name: str, fn, arg_specs, input_desc,
+            n_outputs: int):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{backend}_{step_name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        self.manifest["backends"].setdefault(backend, {"artifacts": {}})
+        self.manifest["backends"][backend]["artifacts"][step_name] = {
+            "file": fname,
+            "inputs": input_desc,
+            "n_outputs": n_outputs,
+            "sha256_16": digest,
+            "hlo_bytes": len(text),
+        }
+        print(f"  [{backend}/{step_name}] {len(text)/1024:.0f} KiB -> {fname}")
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"manifest -> {path}")
+
+
+def build_backend(aset: ArtifactSet, name: str, use_pallas: bool = True,
+                  full: bool = True):
+    """Lower init/sgd/eval for every backend; the strategy-specific steps
+    (prox/scaffold/moon) only for the cnn backend (the paper's Fig 8 model)."""
+    backend = models.BACKENDS[name]
+    p, _ = steps.flat_spec(backend)
+    bt, be = steps.TRAIN_BATCH, steps.EVAL_BATCH
+    ishape = backend.input_shape
+    aset.manifest["backends"].setdefault(name, {"artifacts": {}})
+    aset.manifest["backends"][name]["param_count"] = p
+    aset.manifest["backends"][name]["input_shape"] = list(ishape)
+    aset.manifest["backends"][name]["use_pallas"] = use_pallas
+
+    flat = _spec((p,))
+    xt = _spec((bt,) + ishape)
+    yt = _spec((bt,), jnp.int32)
+    xe = _spec((be,) + ishape)
+    ye = _spec((be,), jnp.int32)
+    me = _spec((be,))
+    lr = _spec((), jnp.float32)
+
+    aset.add(name, "init", steps.make_init(backend), [_spec((), jnp.int32)],
+             [_shape_entry((), S32)], 1)
+    aset.add(name, "sgd", steps.make_sgd_step(backend, use_pallas),
+             [flat, xt, yt, lr],
+             [_shape_entry((p,), F32), _shape_entry((bt,) + ishape, F32),
+              _shape_entry((bt,), S32), _shape_entry((), F32)], 2)
+    aset.add(name, "eval", steps.make_eval(backend, use_pallas),
+             [flat, xe, ye, me],
+             [_shape_entry((p,), F32), _shape_entry((be,) + ishape, F32),
+              _shape_entry((be,), S32), _shape_entry((be,), F32)], 2)
+
+    if full:
+        mu = _spec((), jnp.float32)
+        tau = _spec((), jnp.float32)
+        aset.add(name, "prox", steps.make_prox_step(backend, use_pallas),
+                 [flat, flat, xt, yt, lr, mu],
+                 [_shape_entry((p,), F32), _shape_entry((p,), F32),
+                  _shape_entry((bt,) + ishape, F32), _shape_entry((bt,), S32),
+                  _shape_entry((), F32), _shape_entry((), F32)], 2)
+        aset.add(name, "scaffold", steps.make_scaffold_step(backend, use_pallas),
+                 [flat, flat, flat, xt, yt, lr],
+                 [_shape_entry((p,), F32)] * 3 +
+                 [_shape_entry((bt,) + ishape, F32), _shape_entry((bt,), S32),
+                  _shape_entry((), F32)], 2)
+        aset.add(name, "moon", steps.make_moon_step(backend, use_pallas),
+                 [flat, flat, flat, xt, yt, lr, mu, tau],
+                 [_shape_entry((p,), F32)] * 3 +
+                 [_shape_entry((bt,) + ishape, F32), _shape_entry((bt,), S32),
+                  _shape_entry((), F32), _shape_entry((), F32),
+                  _shape_entry((), F32)], 2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="ablation: use the pure-jnp dense path everywhere")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    use_pallas = not args.no_pallas
+
+    t0 = time.time()
+    aset = ArtifactSet(args.out_dir)
+    # cnn gets the full strategy set (Fig 8); others need init/sgd/eval only.
+    build_backend(aset, "cnn", use_pallas, full=True)
+    build_backend(aset, "cnn_v2", use_pallas, full=False)
+    build_backend(aset, "mlp", use_pallas, full=False)
+    build_backend(aset, "logreg", use_pallas, full=False)
+    aset.finish()
+    print(f"AOT done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+"""L1 — Pallas tiled matmul kernels (the compute hot-spot of every FLsim model).
+
+The dense layers of every model backend (CNN head, MLP hidden stack, logistic
+regression) route through these kernels, so they sit on the hot path of every
+AOT-compiled train step and eval function.
+
+TPU mapping (see DESIGN.md §4): BlockSpec tiles are MXU-aligned (multiples of
+128 on the N/K contraction axes); the grid walks (M/bm, N/bn, K/bk) with the
+K axis innermost so each (i, j) output tile stays resident in VMEM across the
+K loop (accumulate-in-place). VMEM footprint is bm*bk + bk*bn + bm*bn floats
+(~192 KiB at 128³), far under the ~16 MiB VMEM budget, leaving room for
+double-buffered prefetch of the next K tile.
+
+`interpret=True` is mandatory here: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO so the same
+artifact runs on any backend. Real-TPU efficiency is *estimated* in
+EXPERIMENTS.md §Perf from the tile arithmetic intensity.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile sizes. bm=256 (clamped to M, so train-batch calls use 64); bn/bk are
+# 128-multiples so the systolic array is fully fed on TPU. Large bk/bn keep
+# the interpret-mode grid short (each grid step costs a dynamic-slice loop
+# iteration on CPU); VMEM at (64, 1024, 256) is ~1.4 MiB — well under budget.
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 1024
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """o[i, j] = sum_k x[i, k] @ y[k, j], accumulated across the K grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _matmul_bias_act_kernel(x_ref, y_ref, b_ref, o_ref, *, nk: int, act: str):
+    """Fused o = act(x @ y + b): bias add + activation applied on the last K
+    step, while the output tile is still resident in VMEM (saves one full
+    HBM round-trip per layer versus a separate bias/act op)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _finish():
+        r = o_ref[...] + b_ref[...]
+        if act == "relu":
+            r = jnp.maximum(r, 0.0)
+        elif act == "tanh":
+            r = jnp.tanh(r)
+        elif act != "linear":
+            raise ValueError(f"unknown activation {act!r}")
+        o_ref[...] = r
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def _pick_tiles(m: int, k: int, n: int, bm: int, bk: int, bn: int):
+    """Shrink default tiles for small operands (e.g. logreg 784x10) so the
+    grid stays non-degenerate and padding waste is bounded."""
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(16, n))
+    bk = min(bk, max(16, k))
+    return bm, bk, bn
+
+
+def _matmul_impl(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+) -> jax.Array:
+    """Tiled f32 matmul via Pallas. Pads to tile multiples, slices back."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm, bk, bn = _pick_tiles(m, k, n, bm, bk, bn)
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    yp = _pad_to(_pad_to(y, 0, bk), 1, bn)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def _matmul_bias_act_impl(
+    x: jax.Array,
+    y: jax.Array,
+    b: jax.Array,
+    *,
+    act: str = "relu",
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+) -> jax.Array:
+    """Fused act(x @ y + b) via Pallas; the dense-layer hot path."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm, bk, bn = _pick_tiles(m, k, n, bm, bk, bn)
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    yp = _pad_to(_pad_to(y, 0, bk), 1, bn)
+    bp = _pad_to(b[None, :], 1, bn)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_bias_act_kernel, nk=nk, act=act),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp, bp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrappers. pallas_call with pl.when/program_id has no JVP
+# rule, so autodiff is provided via custom_vjp where the *backward* pass is
+# also built from Pallas matmuls — the kernel stays on the hot path of both
+# the forward and backward HLO of every train step.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Differentiable tiled Pallas matmul (see _matmul_impl)."""
+    return _matmul_impl(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _matmul_impl(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # dX = g @ Y^T ; dY = X^T @ g — both tiled Pallas matmuls.
+    return _matmul_impl(g, y.T), _matmul_impl(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def matmul_bias_act(x: jax.Array, y: jax.Array, b: jax.Array, act: str = "relu"):
+    """Differentiable fused act(x @ y + b) (see _matmul_bias_act_impl)."""
+    return _matmul_bias_act_impl(x, y, b, act=act)
+
+
+def _mba_fwd(x, y, b, act):
+    out = _matmul_bias_act_impl(x, y, b, act=act)
+    return out, (x, y, out)
+
+
+def _mba_bwd(act, res, g):
+    x, y, out = res
+    if act == "relu":
+        dpre = g * (out > 0.0).astype(g.dtype)
+    elif act == "tanh":
+        dpre = g * (1.0 - out * out)
+    elif act == "linear":
+        dpre = g
+    else:
+        raise ValueError(f"unknown activation {act!r}")
+    dx = _matmul_impl(dpre, y.T)
+    dy = _matmul_impl(x.T, dpre)
+    db = jnp.sum(dpre, axis=0)
+    return dx, dy, db
+
+
+matmul_bias_act.defvjp(_mba_fwd, _mba_bwd)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array, act: str = "relu") -> jax.Array:
+    """Dense layer entry point used by the L2 models."""
+    return matmul_bias_act(x, w, b, act)
+
+
+def vmem_report(m: int, k: int, n: int, bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
+                bn: int = DEFAULT_BN) -> dict:
+    """Static VMEM/MXU estimate for EXPERIMENTS.md §Perf (no TPU here)."""
+    bm, bk, bn = _pick_tiles(m, k, n, bm, bk, bn)
+    vmem_bytes = 4 * (bm * bk + bk * bn + bm * bn)
+    flops_per_tile = 2 * bm * bk * bn
+    hbm_bytes_per_tile = 4 * (bm * bk + bk * bn)  # out tile stays in VMEM
+    return {
+        "tiles": (bm, bk, bn),
+        "grid": ((m + bm - 1) // bm, (n + bn - 1) // bn, (k + bk - 1) // bk),
+        "vmem_bytes": vmem_bytes,
+        "arithmetic_intensity_flops_per_byte": flops_per_tile / hbm_bytes_per_tile,
+        "mxu_aligned": bn % 128 == 0 and bk % 128 == 0,
+    }

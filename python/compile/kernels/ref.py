@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every Pallas kernel in this package must match its oracle here to within
+float32 tolerance over a hypothesis-driven sweep of shapes (see
+python/tests/test_kernels.py). The oracles are deliberately the most naive
+possible jnp expressions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def matmul_bias_act_ref(
+    x: jax.Array, y: jax.Array, b: jax.Array, act: str = "relu"
+) -> jax.Array:
+    r = jnp.dot(x, y, preferred_element_type=jnp.float32) + b[None, :]
+    if act == "relu":
+        return jnp.maximum(r, 0.0)
+    if act == "tanh":
+        return jnp.tanh(r)
+    if act == "linear":
+        return r
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array, act: str = "relu") -> jax.Array:
+    return matmul_bias_act_ref(x, w, b, act)

@@ -1,0 +1,223 @@
+"""L2 — model definitions for the FLsim backends.
+
+Four model families, mirroring the paper's experiments (DESIGN.md §2):
+
+  cnn     — 3 conv layers + 2-layer dense head  (paper's PyTorch CNN, Fig 8/9/10/11, Tab 1-2)
+  cnn_v2  — same macro-architecture, tanh/avg-pool/wider head  (paper's TensorFlow CNN, Fig 9)
+  mlp     — 4-hidden-layer MLP on flattened images  (paper's Scikit-Learn MLP, Fig 9)
+  logreg  — logistic regression  (paper's MNIST scalability run, Fig 12)
+
+Every dense layer routes through the Pallas kernel (kernels.matmul.dense) so
+the L1 kernel sits on the hot path of every AOT artifact; set
+``use_pallas=False`` to swap in the pure-jnp oracle (used by the pytest
+equivalence suite and as an ablation artifact).
+
+All models expose:
+  init(key)        -> param pytree
+  apply(p, x)      -> (logits, representation)   # representation feeds MOON
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import matmul as pk
+from compile.kernels import ref as kref
+
+Params = dict
+
+
+def _dense_fn(use_pallas: bool) -> Callable:
+    return pk.dense if use_pallas else kref.dense_ref
+
+
+# ---------------------------------------------------------------------------
+# Initializers (explicitly seeded; the seed arrives as an artifact input so
+# Rust controls all randomness — DESIGN.md §7).
+# ---------------------------------------------------------------------------
+
+def _prod(xs):
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def _he(key, shape):
+    fan_in = _prod(shape[:-1])
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def _glorot(key, shape):
+    fan_in = _prod(shape[:-1])
+    fan_out = shape[-1]
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+# ---------------------------------------------------------------------------
+# CNN (paper's 3-conv + FC head, NHWC 32x32x3 -> 10)
+# ---------------------------------------------------------------------------
+
+# Three conv layers + FC head (the paper fixes the macro-architecture but not
+# the widths; widths are sized for the single-core CPU testbed).
+CNN_CHANNELS = (8, 16, 32)
+CNN_HIDDEN = 128
+IMG_SHAPE = (32, 32, 3)
+NUM_CLASSES = 10
+
+
+def _conv(x, w, b, stride=1):
+    # 3x3 same conv, NHWC / HWIO. Downsampling is done with stride-2 convs
+    # rather than pooling: XLA-CPU's select-and-scatter (maxpool backward) is
+    # an order of magnitude slower than the conv itself on this 1-core box.
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b[None, None, None, :]
+
+
+def _avgpool2(x):
+    s = lax.reduce_window(x, 0.0, lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    return s / 4.0
+
+
+def cnn_init(key) -> Params:
+    ks = jax.random.split(key, 5)
+    c1, c2, c3 = CNN_CHANNELS
+    flat = 4 * 4 * c3
+    return {
+        "w1": _he(ks[0], (3, 3, 3, c1)), "b1": jnp.zeros((c1,)),
+        "w2": _he(ks[1], (3, 3, c1, c2)), "b2": jnp.zeros((c2,)),
+        "w3": _he(ks[2], (3, 3, c2, c3)), "b3": jnp.zeros((c3,)),
+        "wh": _he(ks[3], (flat, CNN_HIDDEN)), "bh": jnp.zeros((CNN_HIDDEN,)),
+        "wo": _he(ks[4], (CNN_HIDDEN, NUM_CLASSES)), "bo": jnp.zeros((NUM_CLASSES,)),
+    }
+
+
+def cnn_apply(p: Params, x: jax.Array, *, use_pallas: bool = True):
+    dense = _dense_fn(use_pallas)
+    h = jnp.maximum(_conv(x, p["w1"], p["b1"], 2), 0.0)
+    h = jnp.maximum(_conv(h, p["w2"], p["b2"], 2), 0.0)
+    h = jnp.maximum(_conv(h, p["w3"], p["b3"], 2), 0.0)
+    h = h.reshape(h.shape[0], -1)
+    z = dense(h, p["wh"], p["bh"], "relu")          # representation (MOON)
+    logits = kref.dense_ref(z, p["wo"], p["bo"], "linear")
+    return logits, z
+
+
+# ---------------------------------------------------------------------------
+# CNN v2 ("TensorFlow" backend): tanh conv stack, avg-pool, wider 2-layer head.
+# Deliberately heavier so its wall-time profile differs (paper Fig 9c: the TF
+# implementation is the slowest).
+# ---------------------------------------------------------------------------
+
+CNN2_HIDDEN = (256, 128)
+
+
+def cnn_v2_init(key) -> Params:
+    ks = jax.random.split(key, 6)
+    c1, c2, c3 = CNN_CHANNELS
+    flat = 4 * 4 * c3
+    h1, h2 = CNN2_HIDDEN
+    return {
+        "w1": _glorot(ks[0], (3, 3, 3, c1)), "b1": jnp.zeros((c1,)),
+        "w2": _glorot(ks[1], (3, 3, c1, c2)), "b2": jnp.zeros((c2,)),
+        "w3": _glorot(ks[2], (3, 3, c2, c3)), "b3": jnp.zeros((c3,)),
+        "wh1": _glorot(ks[3], (flat, h1)), "bh1": jnp.zeros((h1,)),
+        "wh2": _glorot(ks[4], (h1, h2)), "bh2": jnp.zeros((h2,)),
+        "wo": _glorot(ks[5], (h2, NUM_CLASSES)), "bo": jnp.zeros((NUM_CLASSES,)),
+    }
+
+
+def cnn_v2_apply(p: Params, x: jax.Array, *, use_pallas: bool = True):
+    dense = _dense_fn(use_pallas)
+    h = _avgpool2(jnp.tanh(_conv(x, p["w1"], p["b1"])))
+    h = _avgpool2(jnp.tanh(_conv(h, p["w2"], p["b2"])))
+    h = _avgpool2(jnp.tanh(_conv(h, p["w3"], p["b3"])))
+    h = h.reshape(h.shape[0], -1)
+    # (stride-1 conv stack + pooling makes this backend measurably slower
+    # than `cnn`, mirroring the paper's TF-vs-torch wall-time gap in Fig 9c)
+    h = dense(h, p["wh1"], p["bh1"], "tanh")
+    z = dense(h, p["wh2"], p["bh2"], "tanh")
+    logits = kref.dense_ref(z, p["wo"], p["bo"], "linear")
+    return logits, z
+
+
+# ---------------------------------------------------------------------------
+# MLP ("Scikit-Learn" backend): 4 hidden layers over flattened 3072-d input.
+# Largest parameter vector of the backends => highest communication cost
+# (paper Fig 9e: sklearn MLP uses the most bandwidth).
+# ---------------------------------------------------------------------------
+
+MLP_HIDDEN = (256, 128, 64, 32)
+MLP_IN = 32 * 32 * 3
+
+
+def mlp_init(key) -> Params:
+    dims = (MLP_IN,) + MLP_HIDDEN + (NUM_CLASSES,)
+    ks = jax.random.split(key, len(dims) - 1)
+    p = {}
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        p[f"w{i}"] = _he(ks[i], (din, dout))
+        p[f"b{i}"] = jnp.zeros((dout,))
+    return p
+
+
+def mlp_apply(p: Params, x: jax.Array, *, use_pallas: bool = True):
+    dense = _dense_fn(use_pallas)
+    h = x.reshape(x.shape[0], -1)
+    n_layers = len(MLP_HIDDEN) + 1
+    for i in range(n_layers - 1):
+        h = dense(h, p[f"w{i}"], p[f"b{i}"], "relu")
+    z = h
+    logits = kref.dense_ref(z, p[f"w{n_layers-1}"], p[f"b{n_layers-1}"], "linear")
+    return logits, z
+
+
+# ---------------------------------------------------------------------------
+# Logistic regression (MNIST-like 784 -> 10) for the Fig 12 scalability run.
+# ---------------------------------------------------------------------------
+
+LOGREG_IN = 28 * 28
+
+
+def logreg_init(key) -> Params:
+    return {
+        "w": 0.01 * jax.random.normal(key, (LOGREG_IN, NUM_CLASSES), jnp.float32),
+        "b": jnp.zeros((NUM_CLASSES,)),
+    }
+
+
+def logreg_apply(p: Params, x: jax.Array, *, use_pallas: bool = True):
+    x = x.reshape(x.shape[0], -1)
+    if use_pallas:
+        logits = pk.matmul(x, p["w"]) + p["b"][None, :]
+    else:
+        logits = kref.matmul_ref(x, p["w"]) + p["b"][None, :]
+    return logits, x
+
+
+# ---------------------------------------------------------------------------
+# Registry consumed by steps.py / aot.py
+# ---------------------------------------------------------------------------
+
+class Backend:
+    def __init__(self, name, init, apply, input_shape):
+        self.name = name
+        self.init = init
+        self.apply = apply
+        self.input_shape = input_shape  # per-example shape
+
+
+BACKENDS: Dict[str, Backend] = {
+    "cnn": Backend("cnn", cnn_init, cnn_apply, IMG_SHAPE),
+    "cnn_v2": Backend("cnn_v2", cnn_v2_init, cnn_v2_apply, IMG_SHAPE),
+    "mlp": Backend("mlp", mlp_init, mlp_apply, IMG_SHAPE),
+    "logreg": Backend("logreg", logreg_init, logreg_apply, (LOGREG_IN,)),
+}

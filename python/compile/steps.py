@@ -1,0 +1,177 @@
+"""L2 — AOT-able train/eval/init step functions over FLAT parameter vectors.
+
+The Rust coordinator only ever sees `f32[P]` parameter vectors (plus batch
+tensors and scalar hyper-parameters), which makes aggregation, consensus
+hashing, poisoning, clipping and DP noising trivial on the Rust side. The
+pytree structure lives entirely inside these jitted functions via
+``ravel_pytree``'s unflattener, which is a static closure at lowering time.
+
+Strategy coverage (paper Fig 8):
+  sgd_step       — FedAvg [1], FedAvgM [2] (server momentum in Rust),
+                   DP-FL [7] (clip+noise in Rust), FL+HC [26], Fedstellar [24]
+  prox_step      — FedProx [3] style client regularization (extension)
+  scaffold_step  — SCAFFOLD [5] batch step with control-variate correction
+                   (c_local update after the local epoch is element-wise and
+                   runs in Rust: ci' = ci - c + (w0 - wK)/(K*lr))
+  moon_step      — MOON [4] model-contrastive step (needs global + previous
+                   local representations)
+
+Every function is lowered per-backend by aot.py with fixed shapes
+(train batch 64, eval batch 256 — the paper's setting).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from compile import models
+
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+
+
+def flat_spec(backend: models.Backend) -> Tuple[int, Callable]:
+    """(param_count, unravel_fn) for a backend."""
+    params = backend.init(jax.random.PRNGKey(0))
+    flat, unravel = ravel_pytree(params)
+    return int(flat.shape[0]), unravel
+
+
+def xent(logits: jax.Array, y: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def make_init(backend: models.Backend):
+    def init(seed: jax.Array) -> Tuple[jax.Array]:
+        key = jax.random.PRNGKey(seed)
+        flat, _ = ravel_pytree(backend.init(key))
+        return (flat,)
+
+    return init
+
+
+# ---------------------------------------------------------------------------
+# plain SGD step
+# ---------------------------------------------------------------------------
+
+def make_sgd_step(backend: models.Backend, use_pallas: bool = True):
+    _, unravel = flat_spec(backend)
+
+    def loss_fn(flat, x, y):
+        logits, _ = backend.apply(unravel(flat), x, use_pallas=use_pallas)
+        return xent(logits, y)
+
+    def step(flat, x, y, lr):
+        loss, g = jax.value_and_grad(loss_fn)(flat, x, y)
+        return flat - lr * g, loss
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# FedProx client step: + (mu/2)||w - w_global||^2
+# ---------------------------------------------------------------------------
+
+def make_prox_step(backend: models.Backend, use_pallas: bool = True):
+    _, unravel = flat_spec(backend)
+
+    def loss_fn(flat, gflat, x, y, mu):
+        logits, _ = backend.apply(unravel(flat), x, use_pallas=use_pallas)
+        prox = 0.5 * mu * jnp.sum((flat - gflat) ** 2)
+        return xent(logits, y) + prox
+
+    def step(flat, gflat, x, y, lr, mu):
+        loss, g = jax.value_and_grad(loss_fn)(flat, gflat, x, y, mu)
+        return flat - lr * g, loss
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# SCAFFOLD batch step: w <- w - lr * (g - c_local + c_global)
+# ---------------------------------------------------------------------------
+
+def make_scaffold_step(backend: models.Backend, use_pallas: bool = True):
+    _, unravel = flat_spec(backend)
+
+    def loss_fn(flat, x, y):
+        logits, _ = backend.apply(unravel(flat), x, use_pallas=use_pallas)
+        return xent(logits, y)
+
+    def step(flat, c_global, c_local, x, y, lr):
+        loss, g = jax.value_and_grad(loss_fn)(flat, x, y)
+        return flat - lr * (g - c_local + c_global), loss
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# MOON step: cross-entropy + mu * model-contrastive loss on representations.
+# ---------------------------------------------------------------------------
+
+def _cos(a, b, eps=1e-8):
+    num = jnp.sum(a * b, axis=-1)
+    den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1) + eps
+    return num / den
+
+
+def make_moon_step(backend: models.Backend, use_pallas: bool = True):
+    _, unravel = flat_spec(backend)
+
+    def loss_fn(flat, gflat, pflat, x, y, mu, tau):
+        logits, z = backend.apply(unravel(flat), x, use_pallas=use_pallas)
+        _, z_g = backend.apply(unravel(gflat), x, use_pallas=use_pallas)
+        _, z_p = backend.apply(unravel(pflat), x, use_pallas=use_pallas)
+        z_g = jax.lax.stop_gradient(z_g)
+        z_p = jax.lax.stop_gradient(z_p)
+        sim_g = _cos(z, z_g) / tau
+        sim_p = _cos(z, z_p) / tau
+        # -log( exp(sim_g) / (exp(sim_g) + exp(sim_p)) )
+        con = jnp.mean(jnp.logaddexp(sim_g, sim_p) - sim_g)
+        return xent(logits, y) + mu * con
+
+    def step(flat, gflat, pflat, x, y, lr, mu, tau):
+        loss, g = jax.value_and_grad(loss_fn)(flat, gflat, pflat, x, y, mu, tau)
+        return flat - lr * g, loss
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# eval: summed loss + correct count over a fixed-size padded batch. `mask`
+# zeroes out padding rows so Rust can evaluate arbitrary test-set sizes.
+# ---------------------------------------------------------------------------
+
+def make_eval(backend: models.Backend, use_pallas: bool = True):
+    def evaluate(flat, x, y, mask):
+        logits, _ = backend.apply(_unravel_cache(backend)(flat), x,
+                                  use_pallas=use_pallas)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        per = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+        pred = jnp.argmax(logits, axis=-1)
+        correct = jnp.sum((pred == y).astype(jnp.float32) * mask)
+        loss_sum = jnp.sum(per * mask)
+        return loss_sum, correct
+
+    return evaluate
+
+
+@functools.lru_cache(maxsize=None)
+def _unravel_cache_key(name: str):
+    backend = models.BACKENDS[name]
+    _, unravel = flat_spec(backend)
+    return unravel
+
+
+def _unravel_cache(backend: models.Backend):
+    return _unravel_cache_key(backend.name)

@@ -1,0 +1,52 @@
+"""AOT pipeline tests: HLO text emission + manifest contract for Rust."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, models, steps
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_to_hlo_text_emits_hlo_module():
+    lowered = jax.jit(lambda x: (x + 1.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+
+
+def test_logreg_artifact_set(tmp_path):
+    aset = aot.ArtifactSet(str(tmp_path))
+    aot.build_backend(aset, "logreg", use_pallas=True, full=False)
+    aset.finish()
+
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    lb = man["backends"]["logreg"]
+    assert set(lb["artifacts"]) == {"init", "sgd", "eval"}
+    p = lb["param_count"]
+    assert p == steps.flat_spec(models.BACKENDS["logreg"])[0]
+
+    sgd = lb["artifacts"]["sgd"]
+    assert sgd["n_outputs"] == 2
+    # input order: flat, x, y, lr
+    assert sgd["inputs"][0]["shape"] == [p]
+    assert sgd["inputs"][1]["shape"] == [man["train_batch"], 784]
+    assert sgd["inputs"][2]["dtype"] == "s32"
+    assert sgd["inputs"][3]["shape"] == []
+
+    for art in lb["artifacts"].values():
+        path = tmp_path / art["file"]
+        assert path.exists()
+        head = path.read_text()[:200]
+        assert head.startswith("HloModule")
+
+
+def test_manifest_batches_match_steps(tmp_path):
+    aset = aot.ArtifactSet(str(tmp_path))
+    assert aset.manifest["train_batch"] == steps.TRAIN_BATCH == 64
+    assert aset.manifest["eval_batch"] == steps.EVAL_BATCH == 256

@@ -1,0 +1,121 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps).
+
+This is the core correctness signal for the kernel layer: every shape/act
+combination the models can emit must match ref.py to f32 tolerance, and the
+custom_vjp backward passes must match jnp autodiff of the oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as pk
+from compile.kernels import ref as kref
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(min_value=1, max_value=300)
+acts = st.sampled_from(["relu", "tanh", "linear"])
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _rand(rng, m, k), _rand(rng, k, n)
+    got = pk.matmul(x, y)
+    want = kref.matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, act=acts, seed=st.integers(0, 2**31 - 1))
+def test_matmul_bias_act_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, y, b = _rand(rng, m, k), _rand(rng, k, n), _rand(rng, n)
+    got = pk.matmul_bias_act(x, y, b, act)
+    want = kref.matmul_bias_act_ref(x, y, b, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 96), k=st.integers(1, 200), n=st.integers(1, 96),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_grad_matches_ref_grad(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _rand(rng, m, k), _rand(rng, k, n)
+
+    def f_pallas(x, y):
+        return jnp.sum(jnp.sin(pk.matmul(x, y)))
+
+    def f_ref(x, y):
+        return jnp.sum(jnp.sin(kref.matmul_ref(x, y)))
+
+    gx, gy = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+    rx, ry = jax.grad(f_ref, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gy, ry, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(act=acts, seed=st.integers(0, 2**31 - 1))
+def test_dense_grad_matches_ref_grad(act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, 32, 70), _rand(rng, 70, 40), _rand(rng, 40)
+
+    def f_pallas(x, w, b):
+        return jnp.mean(pk.matmul_bias_act(x, w, b, act) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.mean(kref.matmul_bias_act_ref(x, w, b, act) ** 2)
+
+    g = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    r = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for gi, ri in zip(g, r):
+        np.testing.assert_allclose(gi, ri, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_exact_tile_shapes():
+    # Shapes exactly on tile boundaries (no padding path).
+    rng = np.random.default_rng(0)
+    x, y = _rand(rng, 256, 1024), _rand(rng, 1024, 256)
+    np.testing.assert_allclose(
+        pk.matmul(x, y), kref.matmul_ref(x, y), rtol=1e-5, atol=1e-3)
+
+
+def test_matmul_vector_edge():
+    rng = np.random.default_rng(1)
+    x, y = _rand(rng, 1, 1), _rand(rng, 1, 1)
+    np.testing.assert_allclose(pk.matmul(x, y), x * y, rtol=1e-6)
+
+
+def test_bad_activation_raises():
+    rng = np.random.default_rng(2)
+    x, y, b = _rand(rng, 4, 4), _rand(rng, 4, 4), _rand(rng, 4)
+    with pytest.raises(ValueError):
+        pk.matmul_bias_act(x, y, b, "gelu")
+
+
+def test_contraction_mismatch_asserts():
+    rng = np.random.default_rng(3)
+    with pytest.raises(AssertionError):
+        pk.matmul(_rand(rng, 4, 5), _rand(rng, 6, 4))
+
+
+def test_vmem_report_within_budget():
+    rep = pk.vmem_report(64, 3072, 256)
+    assert rep["vmem_bytes"] < 16 * 1024 * 1024
+    assert rep["mxu_aligned"]
+    assert all(g >= 1 for g in rep["grid"])
+
+
+def test_vmem_report_small_operand():
+    rep = pk.vmem_report(64, 784, 10)
+    assert rep["grid"][1] == 1  # N fits one tile
+    assert rep["vmem_bytes"] < 16 * 1024 * 1024

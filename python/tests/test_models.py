@@ -1,0 +1,73 @@
+"""L2 model tests: shapes, init determinism, pallas/jnp equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models, steps
+
+jax.config.update("jax_platform_name", "cpu")
+
+ALL = list(models.BACKENDS)
+
+
+def _batch(backend, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n,) + backend.input_shape,
+                                        dtype=np.float32))
+    return x
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_apply_shapes(name):
+    b = models.BACKENDS[name]
+    p = b.init(jax.random.PRNGKey(0))
+    x = _batch(b)
+    logits, z = b.apply(p, x)
+    assert logits.shape == (8, models.NUM_CLASSES)
+    assert z.shape[0] == 8 and z.ndim == 2
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_init_deterministic(name):
+    b = models.BACKENDS[name]
+    f1 = steps.make_init(b)(jnp.int32(7))[0]
+    f2 = steps.make_init(b)(jnp.int32(7))[0]
+    f3 = steps.make_init(b)(jnp.int32(8))[0]
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    assert not np.array_equal(np.asarray(f1), np.asarray(f3))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_pallas_and_jnp_paths_agree(name):
+    b = models.BACKENDS[name]
+    p = b.init(jax.random.PRNGKey(3))
+    x = _batch(b, seed=4)
+    lp, zp = b.apply(p, x, use_pallas=True)
+    lj, zj = b.apply(p, x, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lj),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(zp), np.asarray(zj),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_param_counts_positive_and_stable(name):
+    b = models.BACKENDS[name]
+    p1, _ = steps.flat_spec(b)
+    p2, _ = steps.flat_spec(b)
+    assert p1 == p2 > 0
+
+
+def test_param_count_ordering_matches_paper_bandwidth_story():
+    # Fig 9e: the sklearn MLP moves the most bytes; logreg the least (Fig 12).
+    counts = {n: steps.flat_spec(models.BACKENDS[n])[0] for n in ALL}
+    assert counts["mlp"] > counts["cnn_v2"] > counts["cnn"] > counts["logreg"]
+
+
+def test_cnn_representation_dim():
+    b = models.BACKENDS["cnn"]
+    p = b.init(jax.random.PRNGKey(0))
+    _, z = b.apply(p, _batch(b))
+    assert z.shape[1] == models.CNN_HIDDEN

@@ -1,0 +1,156 @@
+"""L2 train/eval step semantics (the contracts the Rust coordinator relies on)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models, steps
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _data(backend, n=64, seed=0, classes=10):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n,) + backend.input_shape,
+                                        dtype=np.float32))
+    y = jnp.asarray(rng.integers(0, classes, n).astype(np.int32))
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def logreg():
+    return models.BACKENDS["logreg"]
+
+
+@pytest.fixture(scope="module")
+def cnn():
+    return models.BACKENDS["cnn"]
+
+
+def test_sgd_decreases_loss(logreg):
+    step = jax.jit(steps.make_sgd_step(logreg))
+    flat = steps.make_init(logreg)(jnp.int32(0))[0]
+    x, y = _data(logreg)
+    _, l0 = step(flat, x, y, jnp.float32(0.1))
+    f = flat
+    for _ in range(25):
+        f, loss = step(f, x, y, jnp.float32(0.1))
+    assert float(loss) < float(l0) * 0.7
+
+
+def test_sgd_lr_zero_is_identity(logreg):
+    step = jax.jit(steps.make_sgd_step(logreg))
+    flat = steps.make_init(logreg)(jnp.int32(1))[0]
+    x, y = _data(logreg, seed=2)
+    f2, _ = step(flat, x, y, jnp.float32(0.0))
+    np.testing.assert_array_equal(np.asarray(f2), np.asarray(flat))
+
+
+def test_prox_mu_zero_matches_sgd(logreg):
+    sgd = jax.jit(steps.make_sgd_step(logreg))
+    prox = jax.jit(steps.make_prox_step(logreg))
+    flat = steps.make_init(logreg)(jnp.int32(3))[0]
+    g = steps.make_init(logreg)(jnp.int32(4))[0]
+    x, y = _data(logreg, seed=5)
+    fs, ls = sgd(flat, x, y, jnp.float32(0.05))
+    fp, lp = prox(flat, g, x, y, jnp.float32(0.05), jnp.float32(0.0))
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(fp), rtol=1e-6)
+    assert abs(float(ls) - float(lp)) < 1e-6
+
+
+def test_prox_pulls_toward_global(logreg):
+    prox = jax.jit(steps.make_prox_step(logreg))
+    flat = steps.make_init(logreg)(jnp.int32(3))[0]
+    g = jnp.zeros_like(flat)
+    x, y = _data(logreg, seed=6)
+    f_small, _ = prox(flat, g, x, y, jnp.float32(0.05), jnp.float32(0.0))
+    f_big, _ = prox(flat, g, x, y, jnp.float32(0.05), jnp.float32(10.0))
+    # Stronger mu => result closer to the global (zero) vector.
+    assert float(jnp.linalg.norm(f_big)) < float(jnp.linalg.norm(f_small))
+
+
+def test_scaffold_zero_cv_matches_sgd(logreg):
+    sgd = jax.jit(steps.make_sgd_step(logreg))
+    sca = jax.jit(steps.make_scaffold_step(logreg))
+    flat = steps.make_init(logreg)(jnp.int32(7))[0]
+    z = jnp.zeros_like(flat)
+    x, y = _data(logreg, seed=8)
+    fs, _ = sgd(flat, x, y, jnp.float32(0.05))
+    fc, _ = sca(flat, z, z, x, y, jnp.float32(0.05))
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(fc), rtol=1e-6)
+
+
+def test_scaffold_cv_correction_applied(logreg):
+    sca = jax.jit(steps.make_scaffold_step(logreg))
+    flat = steps.make_init(logreg)(jnp.int32(7))[0]
+    c = jnp.ones_like(flat)
+    ci = jnp.zeros_like(flat)
+    x, y = _data(logreg, seed=8)
+    lr = 0.05
+    f_zero, _ = sca(flat, jnp.zeros_like(c), ci, x, y, jnp.float32(lr))
+    f_one, _ = sca(flat, c, ci, x, y, jnp.float32(lr))
+    # w' = w - lr*(g - ci + c): adding c=1 shifts the update by exactly -lr.
+    np.testing.assert_allclose(
+        np.asarray(f_one), np.asarray(f_zero) - lr, rtol=1e-5, atol=1e-6)
+
+
+def test_moon_mu_zero_matches_sgd(cnn):
+    sgd = jax.jit(steps.make_sgd_step(cnn))
+    moon = jax.jit(steps.make_moon_step(cnn))
+    flat = steps.make_init(cnn)(jnp.int32(9))[0]
+    g = steps.make_init(cnn)(jnp.int32(10))[0]
+    x, y = _data(cnn)
+    fs, ls = sgd(flat, x, y, jnp.float32(0.01))
+    fm, lm = moon(flat, g, g, x, y, jnp.float32(0.01), jnp.float32(0.0),
+                  jnp.float32(0.5))
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(fm),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moon_contrastive_term_positive(cnn):
+    moon = jax.jit(steps.make_moon_step(cnn))
+    sgd = jax.jit(steps.make_sgd_step(cnn))
+    flat = steps.make_init(cnn)(jnp.int32(9))[0]
+    g = steps.make_init(cnn)(jnp.int32(10))[0]
+    p = steps.make_init(cnn)(jnp.int32(11))[0]
+    x, y = _data(cnn)
+    _, l_sgd = sgd(flat, x, y, jnp.float32(0.01))
+    _, l_moon = moon(flat, g, p, x, y, jnp.float32(0.01), jnp.float32(5.0),
+                     jnp.float32(0.5))
+    assert float(l_moon) > float(l_sgd)  # xent + mu*con > xent
+
+
+def test_eval_mask_excludes_padding(logreg):
+    ev = jax.jit(steps.make_eval(logreg))
+    flat = steps.make_init(logreg)(jnp.int32(12))[0]
+    x, y = _data(logreg, n=steps.EVAL_BATCH, seed=13)
+    full = jnp.ones((steps.EVAL_BATCH,), jnp.float32)
+    half = full.at[steps.EVAL_BATCH // 2:].set(0.0)
+    loss_f, corr_f = ev(flat, x, y, full)
+    loss_h, corr_h = ev(flat, x, y, half)
+    assert float(loss_h) < float(loss_f)
+    assert float(corr_h) <= float(corr_f)
+    # Zero mask => exactly zero contributions.
+    loss_z, corr_z = ev(flat, x, y, jnp.zeros_like(full))
+    assert float(loss_z) == 0.0 and float(corr_z) == 0.0
+
+
+def test_eval_counts_correct_predictions(logreg):
+    ev = jax.jit(steps.make_eval(logreg))
+    flat = steps.make_init(logreg)(jnp.int32(14))[0]
+    x, _ = _data(logreg, n=steps.EVAL_BATCH, seed=15)
+    # Labels = model's own argmax => everything correct.
+    p, unravel = steps.flat_spec(models.BACKENDS["logreg"])
+    logits, _ = models.BACKENDS["logreg"].apply(
+        steps._unravel_cache(models.BACKENDS["logreg"])(flat), x)
+    y = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    mask = jnp.ones((steps.EVAL_BATCH,), jnp.float32)
+    _, corr = ev(flat, x, y, mask)
+    assert int(corr) == steps.EVAL_BATCH
+
+
+def test_xent_uniform_logits():
+    logits = jnp.zeros((8, 10))
+    y = jnp.arange(8, dtype=jnp.int32) % 10
+    assert abs(float(steps.xent(logits, y)) - np.log(10)) < 1e-5

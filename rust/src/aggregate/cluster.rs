@@ -1,0 +1,157 @@
+//! Agglomerative hierarchical clustering of client updates — the core of
+//! Briggs et al. [26] (FL+HC): after a few warm-up rounds, cluster clients
+//! by the similarity of their model updates and train one model per cluster.
+
+use crate::util::stats;
+
+/// Linkage for merging clusters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Linkage {
+    Average,
+    Single,
+    Complete,
+}
+
+/// Agglomerative clustering of vectors until `n_clusters` remain or the
+/// closest pair is farther than `max_dist` (whichever stops first).
+/// Returns cluster id per input, ids compacted to 0..k.
+pub fn agglomerative_clusters(
+    vectors: &[Vec<f32>],
+    n_clusters: usize,
+    max_dist: f64,
+    linkage: Linkage,
+) -> Vec<usize> {
+    let n = vectors.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let n_clusters = n_clusters.max(1);
+
+    // Pairwise distance matrix (euclidean).
+    let mut dist = vec![vec![0f64; n]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = stats::l2_dist(&vectors[i], &vectors[j]);
+            dist[i][j] = d;
+            dist[j][i] = d;
+        }
+    }
+
+    // members[c] = indices in cluster c (None = merged away).
+    let mut members: Vec<Option<Vec<usize>>> = (0..n).map(|i| Some(vec![i])).collect();
+    let mut active = n;
+
+    while active > n_clusters {
+        // Find closest active pair under the linkage.
+        let mut best: Option<(f64, usize, usize)> = None;
+        for a in 0..n {
+            let Some(ma) = &members[a] else { continue };
+            for b in (a + 1)..n {
+                let Some(mb) = &members[b] else { continue };
+                let d = linkage_dist(ma, mb, &dist, linkage);
+                if best.map(|(bd, _, _)| d < bd).unwrap_or(true) {
+                    best = Some((d, a, b));
+                }
+            }
+        }
+        let Some((d, a, b)) = best else { break };
+        if d > max_dist {
+            break;
+        }
+        let mb = members[b].take().unwrap();
+        members[a].as_mut().unwrap().extend(mb);
+        active -= 1;
+    }
+
+    // Compact ids.
+    let mut out = vec![0usize; n];
+    let mut next = 0usize;
+    for m in members.iter().flatten() {
+        for &i in m {
+            out[i] = next;
+        }
+        next += 1;
+    }
+    out
+}
+
+fn linkage_dist(a: &[usize], b: &[usize], dist: &[Vec<f64>], linkage: Linkage) -> f64 {
+    let mut acc: f64 = match linkage {
+        Linkage::Single => f64::INFINITY,
+        Linkage::Complete => f64::NEG_INFINITY,
+        Linkage::Average => 0.0,
+    };
+    for &i in a {
+        for &j in b {
+            let d = dist[i][j];
+            acc = match linkage {
+                Linkage::Single => acc.min(d),
+                Linkage::Complete => acc.max(d),
+                Linkage::Average => acc + d,
+            };
+        }
+    }
+    if linkage == Linkage::Average {
+        acc / (a.len() * b.len()) as f64
+    } else {
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs() -> Vec<Vec<f32>> {
+        // Two well-separated blobs of 3 vectors each.
+        vec![
+            vec![0.0, 0.0],
+            vec![0.1, -0.1],
+            vec![-0.1, 0.1],
+            vec![10.0, 10.0],
+            vec![10.1, 9.9],
+            vec![9.9, 10.1],
+        ]
+    }
+
+    #[test]
+    fn separates_blobs() {
+        for linkage in [Linkage::Average, Linkage::Single, Linkage::Complete] {
+            let ids = agglomerative_clusters(&blobs(), 2, f64::INFINITY, linkage);
+            assert_eq!(ids[0], ids[1]);
+            assert_eq!(ids[1], ids[2]);
+            assert_eq!(ids[3], ids[4]);
+            assert_eq!(ids[4], ids[5]);
+            assert_ne!(ids[0], ids[3], "{linkage:?}");
+        }
+    }
+
+    #[test]
+    fn max_dist_stops_merging() {
+        // With a tiny distance threshold nothing merges.
+        let ids = agglomerative_clusters(&blobs(), 1, 1e-9, Linkage::Average);
+        let distinct: std::collections::BTreeSet<usize> = ids.iter().cloned().collect();
+        assert_eq!(distinct.len(), 6);
+    }
+
+    #[test]
+    fn k_one_merges_everything() {
+        let ids = agglomerative_clusters(&blobs(), 1, f64::INFINITY, Linkage::Average);
+        assert!(ids.iter().all(|&c| c == ids[0]));
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(agglomerative_clusters(&[], 2, 1.0, Linkage::Average).is_empty());
+        let one = agglomerative_clusters(&[vec![1.0]], 2, 1.0, Linkage::Average);
+        assert_eq!(one, vec![0]);
+    }
+
+    #[test]
+    fn ids_are_compact() {
+        let ids = agglomerative_clusters(&blobs(), 2, f64::INFINITY, Linkage::Average);
+        let mx = *ids.iter().max().unwrap();
+        let distinct: std::collections::BTreeSet<usize> = ids.iter().cloned().collect();
+        assert_eq!(distinct.len(), mx + 1);
+    }
+}

@@ -1,0 +1,324 @@
+//! Weighted parameter averaging — the FedAvg core — with a configurable
+//! floating-point reduction order.
+//!
+//! The reduction order is FLsim's stand-in for the paper's four hardware
+//! configurations (Tables 1-2): the paper attributes the small cross-hardware
+//! metric drift to "variations in the floating-point arithmetic", and
+//! summation order is exactly that mechanism. Each profile is deterministic,
+//! so trials on the *same* profile reproduce bitwise (the tables' headline
+//! property), while different profiles drift by ~1e-7 per element, compounding
+//! over rounds to the sub-percent differences the paper reports.
+
+use anyhow::{bail, Result};
+
+/// Floating-point reduction order = simulated hardware profile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReductionOrder {
+    /// Plain left-to-right accumulation ("x86 Single CPU").
+    Sequential,
+    /// Pairwise tree reduction, as a parallel/distributed stack would
+    /// produce ("x86 Dist CPU").
+    PairwiseTree,
+    /// Reversed client order ("x86 Single GPU" — different launch order).
+    Reversed,
+    /// Kahan-compensated summation ("aarch64 Single CPU" — different FMA
+    /// contraction behaviour).
+    Kahan,
+}
+
+impl ReductionOrder {
+    pub const ALL: [ReductionOrder; 4] = [
+        ReductionOrder::Sequential,
+        ReductionOrder::PairwiseTree,
+        ReductionOrder::Reversed,
+        ReductionOrder::Kahan,
+    ];
+
+    pub fn profile_name(&self) -> &'static str {
+        match self {
+            ReductionOrder::Sequential => "x86 Single CPU",
+            ReductionOrder::PairwiseTree => "x86 Dist CPU",
+            ReductionOrder::Reversed => "x86 Single GPU",
+            ReductionOrder::Kahan => "aarch64 Single CPU",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ReductionOrder> {
+        Ok(match s {
+            "sequential" => ReductionOrder::Sequential,
+            "pairwise" | "pairwise_tree" => ReductionOrder::PairwiseTree,
+            "reversed" => ReductionOrder::Reversed,
+            "kahan" => ReductionOrder::Kahan,
+            _ => bail!("unknown reduction order '{s}'"),
+        })
+    }
+}
+
+/// Weighted mean of parameter vectors: `sum_i w_i * p_i / sum_i w_i`,
+/// accumulated per the given reduction order.
+///
+/// This is the aggregation hot path (called with up to 1000 client models ×
+/// ~1e5 parameters); the inner loops are allocation-free and auto-vectorize.
+pub fn weighted_mean(
+    params: &[&[f32]],
+    weights: &[f64],
+    order: ReductionOrder,
+) -> Result<Vec<f32>> {
+    if params.is_empty() {
+        bail!("weighted_mean of zero models");
+    }
+    if params.len() != weights.len() {
+        bail!("{} models vs {} weights", params.len(), weights.len());
+    }
+    let dim = params[0].len();
+    for (i, p) in params.iter().enumerate() {
+        if p.len() != dim {
+            bail!("model {i} has dim {} != {dim}", p.len());
+        }
+    }
+    let wsum: f64 = weights.iter().sum();
+    if wsum <= 0.0 {
+        bail!("non-positive total weight {wsum}");
+    }
+    let norm: Vec<f32> = weights.iter().map(|&w| (w / wsum) as f32).collect();
+
+    let out = match order {
+        ReductionOrder::Sequential => accumulate(params, &norm, &forward_idx(params.len())),
+        ReductionOrder::Reversed => accumulate(params, &norm, &reversed_idx(params.len())),
+        ReductionOrder::PairwiseTree => pairwise(params, &norm, dim),
+        ReductionOrder::Kahan => kahan(params, &norm, dim),
+    };
+    Ok(out)
+}
+
+fn forward_idx(n: usize) -> Vec<usize> {
+    (0..n).collect()
+}
+
+fn reversed_idx(n: usize) -> Vec<usize> {
+    (0..n).rev().collect()
+}
+
+fn accumulate(params: &[&[f32]], w: &[f32], order: &[usize]) -> Vec<f32> {
+    let dim = params[0].len();
+    let mut acc = vec![0f32; dim];
+    for &i in order {
+        let (p, wi) = (params[i], w[i]);
+        for (a, &v) in acc.iter_mut().zip(p) {
+            *a += wi * v;
+        }
+    }
+    acc
+}
+
+fn pairwise(params: &[&[f32]], w: &[f32], dim: usize) -> Vec<f32> {
+    // Build leaf terms w_i * p_i then reduce adjacent pairs until one left.
+    let mut level: Vec<Vec<f32>> = params
+        .iter()
+        .zip(w)
+        .map(|(p, &wi)| p.iter().map(|&v| wi * v).collect())
+        .collect();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                for (x, y) in a.iter_mut().zip(&b) {
+                    *x += *y;
+                }
+            }
+            next.push(a);
+        }
+        level = next;
+    }
+    level.pop().unwrap_or_else(|| vec![0f32; dim])
+}
+
+fn kahan(params: &[&[f32]], w: &[f32], dim: usize) -> Vec<f32> {
+    let mut acc = vec![0f32; dim];
+    let mut comp = vec![0f32; dim];
+    for (p, &wi) in params.iter().zip(w) {
+        for j in 0..dim {
+            let y = wi * p[j] - comp[j];
+            let t = acc[j] + y;
+            comp[j] = (t - acc[j]) - y;
+            acc[j] = t;
+        }
+    }
+    acc
+}
+
+/// Server-side momentum (FedAvgM, Hsu et al. [2]):
+/// `v <- beta * v + (w_global - w_avg)`, `w_global <- w_global - v`.
+pub fn apply_server_momentum(
+    global: &[f32],
+    aggregated: &[f32],
+    velocity: &mut Vec<f32>,
+    beta: f32,
+) -> Vec<f32> {
+    assert_eq!(global.len(), aggregated.len());
+    if velocity.len() != global.len() {
+        *velocity = vec![0f32; global.len()];
+    }
+    let mut out = Vec::with_capacity(global.len());
+    for i in 0..global.len() {
+        let delta = global[i] - aggregated[i];
+        velocity[i] = beta * velocity[i] + delta;
+        out.push(global[i] - velocity[i]);
+    }
+    out
+}
+
+/// SCAFFOLD control-variate update (option II of Karimireddy et al. [5]):
+/// `ci' = ci - c + (w_start - w_end) / (K * lr)`.
+pub fn scaffold_cv_update(
+    c_local: &[f32],
+    c_global: &[f32],
+    w_start: &[f32],
+    w_end: &[f32],
+    k_steps: usize,
+    lr: f32,
+) -> Vec<f32> {
+    let scale = 1.0 / (k_steps.max(1) as f32 * lr);
+    (0..c_local.len())
+        .map(|i| c_local[i] - c_global[i] + (w_start[i] - w_end[i]) * scale)
+        .collect()
+}
+
+/// DP-FedAvg (Geyer et al. [7]) server-side treatment of one client delta:
+/// clip the update to `clip_norm`, then (the caller) adds Gaussian noise.
+pub fn clip_update(global: &[f32], client: &[f32], clip_norm: f64) -> Vec<f32> {
+    let delta: Vec<f32> = client
+        .iter()
+        .zip(global)
+        .map(|(&c, &g)| c - g)
+        .collect();
+    let norm = crate::util::stats::l2_norm(&delta);
+    let scale = if norm > clip_norm && norm > 0.0 {
+        (clip_norm / norm) as f32
+    } else {
+        1.0
+    };
+    global
+        .iter()
+        .zip(&delta)
+        .map(|(&g, &d)| g + d * scale)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx_eq(a: &[f32], b: &[f32], tol: f32) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= tol)
+    }
+
+    #[test]
+    fn equal_weights_is_mean() {
+        let p1 = vec![1.0f32, 2.0];
+        let p2 = vec![3.0f32, 6.0];
+        for order in ReductionOrder::ALL {
+            let m = weighted_mean(&[&p1, &p2], &[1.0, 1.0], order).unwrap();
+            assert!(approx_eq(&m, &[2.0, 4.0], 1e-6), "{order:?}: {m:?}");
+        }
+    }
+
+    #[test]
+    fn weights_respected() {
+        let p1 = vec![0.0f32];
+        let p2 = vec![10.0f32];
+        let m = weighted_mean(&[&p1, &p2], &[3.0, 1.0], ReductionOrder::Sequential).unwrap();
+        assert!((m[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn orders_agree_within_fp_tolerance_but_can_differ_bitwise() {
+        // Many uneven contributions to tickle rounding differences.
+        let n = 33;
+        let dim = 101;
+        let mut rng = crate::util::rng::Rng::seed_from(5);
+        let params: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal_f32() * 3.0).collect())
+            .collect();
+        let refs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+        let weights: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+        let base = weighted_mean(&refs, &weights, ReductionOrder::Sequential).unwrap();
+        for order in [
+            ReductionOrder::PairwiseTree,
+            ReductionOrder::Reversed,
+            ReductionOrder::Kahan,
+        ] {
+            let other = weighted_mean(&refs, &weights, order).unwrap();
+            assert!(approx_eq(&base, &other, 1e-4));
+        }
+    }
+
+    #[test]
+    fn same_order_is_bitwise_reproducible() {
+        let mut rng = crate::util::rng::Rng::seed_from(6);
+        let params: Vec<Vec<f32>> = (0..9)
+            .map(|_| (0..50).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+        let w = vec![1.0; 9];
+        for order in ReductionOrder::ALL {
+            let a = weighted_mean(&refs, &w, order).unwrap();
+            let b = weighted_mean(&refs, &w, order).unwrap();
+            assert_eq!(a, b, "{order:?} not deterministic");
+        }
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let p1 = vec![1.0f32, 2.0];
+        let p2 = vec![1.0f32];
+        assert!(weighted_mean(&[&p1, &p2], &[1.0, 1.0], ReductionOrder::Sequential).is_err());
+        assert!(weighted_mean(&[], &[], ReductionOrder::Sequential).is_err());
+        assert!(weighted_mean(&[&p1], &[0.0], ReductionOrder::Sequential).is_err());
+    }
+
+    #[test]
+    fn momentum_accelerates_along_consistent_direction() {
+        let global = vec![1.0f32; 4];
+        let aggregated = vec![0.9f32; 4]; // delta 0.1 each round
+        let mut v = Vec::new();
+        let g1 = apply_server_momentum(&global, &aggregated, &mut v, 0.9);
+        assert!(approx_eq(&g1, &aggregated, 1e-6)); // first round: v = delta
+        let g2 = apply_server_momentum(&g1, &aggregated, &mut v, 0.9);
+        // Second round with repeated delta must overshoot plain averaging.
+        assert!(g2[0] < aggregated[0]);
+    }
+
+    #[test]
+    fn momentum_zero_beta_is_plain_average() {
+        let global = vec![2.0f32; 3];
+        let agg = vec![1.0f32; 3];
+        let mut v = Vec::new();
+        let g = apply_server_momentum(&global, &agg, &mut v, 0.0);
+        assert!(approx_eq(&g, &agg, 1e-6));
+    }
+
+    #[test]
+    fn scaffold_cv_formula() {
+        let ci = vec![0.1f32; 2];
+        let c = vec![0.05f32; 2];
+        let w0 = vec![1.0f32; 2];
+        let w1 = vec![0.8f32; 2];
+        let out = scaffold_cv_update(&ci, &c, &w0, &w1, 10, 0.1);
+        // 0.1 - 0.05 + 0.2/(10*0.1) = 0.05 + 0.2 = 0.25
+        assert!(approx_eq(&out, &[0.25, 0.25], 1e-6));
+    }
+
+    #[test]
+    fn clip_update_bounds_norm() {
+        let global = vec![0.0f32; 3];
+        let client = vec![3.0f32, 4.0, 0.0]; // delta norm 5
+        let clipped = clip_update(&global, &client, 1.0);
+        let norm = crate::util::stats::l2_norm(&clipped);
+        assert!((norm - 1.0).abs() < 1e-5);
+        // Within-budget updates pass through untouched.
+        let small = vec![0.1f32, 0.0, 0.0];
+        assert_eq!(clip_update(&global, &small, 1.0), small);
+    }
+}

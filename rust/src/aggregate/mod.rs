@@ -1,0 +1,15 @@
+//! Aggregation algorithms over flat parameter vectors: weighted averaging
+//! with controllable floating-point reduction order (the Tables 1-2
+//! "hardware profile" mechanism), server momentum (FedAvgM), robust
+//! aggregators, and the agglomerative clustering used by FL+HC.
+
+pub mod cluster;
+pub mod compress;
+pub mod mean;
+pub mod robust;
+pub mod server_opt;
+
+pub use cluster::agglomerative_clusters;
+pub use mean::{weighted_mean, ReductionOrder};
+pub use robust::{coordinate_median, krum, trimmed_mean};
+pub use server_opt::{ServerOpt, ServerOptKind};

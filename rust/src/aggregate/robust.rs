@@ -1,0 +1,157 @@
+//! Robust aggregators (extension features beyond plain FedAvg): coordinate
+//! median and trimmed mean — useful baselines next to the consensus-based
+//! poisoning defence of Fig 10.
+
+use anyhow::{bail, Result};
+
+/// Coordinate-wise median of client parameter vectors.
+pub fn coordinate_median(params: &[&[f32]]) -> Result<Vec<f32>> {
+    if params.is_empty() {
+        bail!("median of zero models");
+    }
+    let dim = params[0].len();
+    if params.iter().any(|p| p.len() != dim) {
+        bail!("dimension mismatch");
+    }
+    let mut out = Vec::with_capacity(dim);
+    let mut col = vec![0f32; params.len()];
+    for j in 0..dim {
+        for (i, p) in params.iter().enumerate() {
+            col[i] = p[j];
+        }
+        col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = col.len();
+        out.push(if n % 2 == 1 {
+            col[n / 2]
+        } else {
+            0.5 * (col[n / 2 - 1] + col[n / 2])
+        });
+    }
+    Ok(out)
+}
+
+/// Coordinate-wise trimmed mean dropping `trim` extremes from each side.
+pub fn trimmed_mean(params: &[&[f32]], trim: usize) -> Result<Vec<f32>> {
+    if params.is_empty() {
+        bail!("trimmed mean of zero models");
+    }
+    if params.len() <= 2 * trim {
+        bail!("trim {trim} too large for {} models", params.len());
+    }
+    let dim = params[0].len();
+    if params.iter().any(|p| p.len() != dim) {
+        bail!("dimension mismatch");
+    }
+    let mut out = Vec::with_capacity(dim);
+    let mut col = vec![0f32; params.len()];
+    for j in 0..dim {
+        for (i, p) in params.iter().enumerate() {
+            col[i] = p[j];
+        }
+        col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let kept = &col[trim..col.len() - trim];
+        out.push(kept.iter().sum::<f32>() / kept.len() as f32);
+    }
+    Ok(out)
+}
+
+/// Krum (Blanchard et al.): select the single client model whose summed
+/// distance to its n−f−2 nearest neighbours is smallest — a strong robust
+/// baseline next to the consensus defence of Fig 10. Returns the index.
+pub fn krum(params: &[&[f32]], n_byzantine: usize) -> Result<usize> {
+    let n = params.len();
+    if n == 0 {
+        bail!("krum over zero models");
+    }
+    if n <= 2 * n_byzantine + 2 {
+        bail!("krum needs n > 2f + 2 (n = {n}, f = {n_byzantine})");
+    }
+    let dim = params[0].len();
+    if params.iter().any(|p| p.len() != dim) {
+        bail!("dimension mismatch");
+    }
+    let k = n - n_byzantine - 2;
+    let mut best = (f64::INFINITY, 0usize);
+    for i in 0..n {
+        let mut dists: Vec<f64> = (0..n)
+            .filter(|&j| j != i)
+            .map(|j| {
+                let d = crate::util::stats::l2_dist(params[i], params[j]);
+                d * d
+            })
+            .collect();
+        dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let score: f64 = dists.iter().take(k).sum();
+        if score < best.0 {
+            best = (score, i);
+        }
+    }
+    Ok(best.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn krum_picks_clustered_model() {
+        let honest: Vec<Vec<f32>> = (0..5)
+            .map(|i| vec![1.0 + 0.01 * i as f32; 8])
+            .collect();
+        let mut all: Vec<Vec<f32>> = honest.clone();
+        all.push(vec![50.0; 8]); // byzantine
+        let refs: Vec<&[f32]> = all.iter().map(|v| v.as_slice()).collect();
+        let idx = krum(&refs, 1).unwrap();
+        assert!(idx < 5, "krum picked the byzantine model");
+    }
+
+    #[test]
+    fn krum_requires_enough_models() {
+        let a = vec![1.0f32];
+        let refs: Vec<&[f32]> = vec![&a, &a, &a];
+        assert!(krum(&refs, 1).is_err());
+        assert!(krum(&[], 0).is_err());
+    }
+
+    #[test]
+    fn median_ignores_outlier() {
+        let honest1 = vec![1.0f32, 1.0];
+        let honest2 = vec![1.1f32, 0.9];
+        let poisoned = vec![100.0f32, -100.0];
+        let m = coordinate_median(&[&honest1, &honest2, &poisoned]).unwrap();
+        assert!(m[0] < 2.0 && m[1] > -2.0);
+    }
+
+    #[test]
+    fn median_even_count_averages_middle() {
+        let a = vec![0.0f32];
+        let b = vec![1.0f32];
+        let c = vec![2.0f32];
+        let d = vec![3.0f32];
+        let m = coordinate_median(&[&a, &b, &c, &d]).unwrap();
+        assert!((m[0] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        let vs: Vec<Vec<f32>> = vec![
+            vec![-100.0],
+            vec![1.0],
+            vec![2.0],
+            vec![3.0],
+            vec![100.0],
+        ];
+        let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+        let m = trimmed_mean(&refs, 1).unwrap();
+        assert!((m[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(coordinate_median(&[]).is_err());
+        let a = vec![1.0f32];
+        assert!(trimmed_mean(&[&a], 1).is_err());
+        let b = vec![1.0f32, 2.0];
+        assert!(coordinate_median(&[&a, &b]).is_err());
+    }
+}

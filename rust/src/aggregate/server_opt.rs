@@ -1,0 +1,132 @@
+//! Adaptive federated (server-side) optimization — Reddi et al. [6], cited
+//! by the paper as one of the FL directions FLsim must support: FedAdagrad,
+//! FedAdam and FedYogi applied to the averaged client *pseudo-gradient*.
+
+use anyhow::{bail, Result};
+
+/// Which adaptive rule to run on the server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServerOptKind {
+    Adagrad,
+    Adam,
+    Yogi,
+}
+
+impl ServerOptKind {
+    pub fn parse(s: &str) -> Result<ServerOptKind> {
+        Ok(match s {
+            "adagrad" | "fedadagrad" => ServerOptKind::Adagrad,
+            "adam" | "fedadam" => ServerOptKind::Adam,
+            "yogi" | "fedyogi" => ServerOptKind::Yogi,
+            _ => bail!("unknown server optimizer '{s}'"),
+        })
+    }
+}
+
+/// Server optimizer state (first/second moments over the parameter vector).
+#[derive(Clone, Debug)]
+pub struct ServerOpt {
+    pub kind: ServerOptKind,
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub tau: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    step: u64,
+}
+
+impl ServerOpt {
+    pub fn new(kind: ServerOptKind, lr: f32) -> ServerOpt {
+        ServerOpt {
+            kind,
+            lr,
+            beta1: 0.9,
+            beta2: 0.99,
+            tau: 1e-3,
+            m: Vec::new(),
+            v: Vec::new(),
+            step: 0,
+        }
+    }
+
+    /// One server step: `delta = w_avg − w_global` is the pseudo-gradient
+    /// direction; returns the new global parameters.
+    pub fn apply(&mut self, global: &[f32], aggregated: &[f32]) -> Vec<f32> {
+        let dim = global.len();
+        assert_eq!(aggregated.len(), dim);
+        if self.m.len() != dim {
+            self.m = vec![0.0; dim];
+            self.v = vec![self.tau * self.tau; dim];
+        }
+        self.step += 1;
+        let mut out = Vec::with_capacity(dim);
+        for i in 0..dim {
+            let g = aggregated[i] - global[i]; // ascent direction
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = match self.kind {
+                ServerOptKind::Adagrad => self.v[i] + g * g,
+                ServerOptKind::Adam => self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g,
+                ServerOptKind::Yogi => {
+                    let sign = (g * g - self.v[i]).signum();
+                    self.v[i] + (1.0 - self.beta2) * g * g * sign
+                }
+            };
+            out.push(global[i] + self.lr * self.m[i] / (self.v[i].sqrt() + self.tau));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_steps(kind: ServerOptKind, n: usize) -> Vec<f32> {
+        let mut opt = ServerOpt::new(kind, 0.1);
+        let mut w = vec![0f32; 4];
+        for _ in 0..n {
+            // Clients consistently pull toward 1.0.
+            let agg: Vec<f32> = w.iter().map(|&x| x + 0.1 * (1.0 - x)).collect();
+            w = opt.apply(&w, &agg);
+        }
+        w
+    }
+
+    #[test]
+    fn all_rules_move_toward_client_consensus() {
+        for kind in [ServerOptKind::Adagrad, ServerOptKind::Adam, ServerOptKind::Yogi] {
+            let w = run_steps(kind, 50);
+            assert!(w[0] > 0.5, "{kind:?} stalled at {}", w[0]);
+            assert!(w[0] < 1.5, "{kind:?} overshot to {}", w[0]);
+        }
+    }
+
+    #[test]
+    fn zero_delta_is_stationary() {
+        let mut opt = ServerOpt::new(ServerOptKind::Adam, 0.1);
+        let w = vec![0.3f32; 8];
+        let w2 = opt.apply(&w, &w);
+        for (a, b) in w.iter().zip(&w2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(ServerOptKind::parse("fedyogi").unwrap(), ServerOptKind::Yogi);
+        assert_eq!(ServerOptKind::parse("adam").unwrap(), ServerOptKind::Adam);
+        assert!(ServerOptKind::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn adagrad_accumulates_monotonically() {
+        let mut opt = ServerOpt::new(ServerOptKind::Adagrad, 0.1);
+        let w = vec![0f32; 2];
+        let agg = vec![1f32; 2];
+        let _ = opt.apply(&w, &agg);
+        let v1 = opt.v[0];
+        let _ = opt.apply(&w, &agg);
+        assert!(opt.v[0] > v1);
+    }
+}

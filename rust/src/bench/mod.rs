@@ -1,0 +1,91 @@
+//! Minimal benchmarking harness (criterion is not available in this
+//! offline image): warmup + timed iterations with mean/σ/min/max reporting,
+//! used by every `benches/*.rs` target.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub stddev_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "bench {:<40} {:>10.3} ms/iter (σ {:>7.3}, min {:>8.3}, max {:>8.3}, n={})",
+            self.name,
+            self.mean_secs * 1e3,
+            self.stddev_secs * 1e3,
+            self.min_secs * 1e3,
+            self.max_secs * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_secs: stats::mean(&samples),
+        stddev_secs: stats::stddev(&samples),
+        min_secs: stats::min(&samples),
+        max_secs: stats::max(&samples),
+    };
+    println!("{}", r.report_line());
+    r
+}
+
+/// Time a fallible one-shot section (used for end-to-end experiment runs
+/// where a single iteration is already minutes of work).
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let secs = t0.elapsed().as_secs_f64();
+    println!("time  {name:<40} {secs:>10.3} s");
+    (out, secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_secs > 0.0);
+        assert!(r.min_secs <= r.mean_secs && r.mean_secs <= r.max_secs);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once("quick", || 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Blocks and transactions shared by both simulated platforms.
+
+use crate::util::hash;
+use crate::util::json::Json;
+
+/// A contract-call transaction.
+#[derive(Clone, Debug)]
+pub struct Tx {
+    pub sender: String,
+    pub contract: String,
+    pub method: String,
+    pub args: Json,
+    pub nonce: u64,
+}
+
+impl Tx {
+    pub fn new(sender: &str, contract: &str, method: &str, args: Json) -> Tx {
+        Tx {
+            sender: sender.to_string(),
+            contract: contract.to_string(),
+            method: method.to_string(),
+            args,
+            nonce: 0,
+        }
+    }
+
+    /// Canonical byte encoding (hashing / integrity checks).
+    pub fn encode(&self) -> Vec<u8> {
+        format!(
+            "{}|{}|{}|{}|{}",
+            self.sender, self.contract, self.method, self.args, self.nonce
+        )
+        .into_bytes()
+    }
+
+    pub fn hash(&self) -> String {
+        hash::sha256_hex(&self.encode())
+    }
+
+    /// Simulated gas: base cost + per-byte of calldata (Ethereum-flavored).
+    pub fn gas(&self) -> u64 {
+        21_000 + 16 * self.encode().len() as u64
+    }
+}
+
+/// Result handed back on submission.
+#[derive(Clone, Debug)]
+pub struct TxReceipt {
+    pub tx_hash: String,
+    /// Contract return value (applied eagerly at submission in both sims;
+    /// sealing batches the txs into a block).
+    pub result: Json,
+    pub gas_used: u64,
+}
+
+/// A sealed block.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub height: u64,
+    pub prev_hash: String,
+    pub tx_hashes: Vec<String>,
+    pub state_root: String,
+    pub proposer: String,
+    pub hash: String,
+}
+
+impl Block {
+    pub fn seal(
+        height: u64,
+        prev_hash: &str,
+        tx_hashes: Vec<String>,
+        state_root: &str,
+        proposer: &str,
+    ) -> Block {
+        let mut data = format!("{height}|{prev_hash}|{state_root}|{proposer}");
+        for t in &tx_hashes {
+            data.push('|');
+            data.push_str(t);
+        }
+        let hash = hash::sha256_hex(data.as_bytes());
+        Block {
+            height,
+            prev_hash: prev_hash.to_string(),
+            tx_hashes,
+            state_root: state_root.to_string(),
+            proposer: proposer.to_string(),
+            hash,
+        }
+    }
+
+    /// Recompute the seal and compare (tamper detection).
+    pub fn verify(&self) -> bool {
+        let recomputed = Block::seal(
+            self.height,
+            &self.prev_hash,
+            self.tx_hashes.clone(),
+            &self.state_root,
+            &self.proposer,
+        );
+        recomputed.hash == self.hash
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tx_hash_depends_on_fields() {
+        let a = Tx::new("w0", "provenance", "record", Json::from("x"));
+        let mut b = a.clone();
+        b.nonce = 1;
+        assert_ne!(a.hash(), b.hash());
+        assert_eq!(a.hash(), a.clone().hash());
+    }
+
+    #[test]
+    fn gas_grows_with_calldata() {
+        let small = Tx::new("w0", "c", "m", Json::from("x"));
+        let big = Tx::new("w0", "c", "m", Json::from("x".repeat(100).as_str()));
+        assert!(big.gas() > small.gas());
+        assert!(small.gas() >= 21_000);
+    }
+
+    #[test]
+    fn block_seal_and_tamper_detection() {
+        let b = Block::seal(1, "genesis", vec!["t1".into()], "root", "node0");
+        assert!(b.verify());
+        let mut tampered = b.clone();
+        tampered.tx_hashes.push("t2".into());
+        assert!(!tampered.verify());
+        let mut tampered2 = b.clone();
+        tampered2.state_root = "other".into();
+        assert!(!tampered2.verify());
+    }
+}

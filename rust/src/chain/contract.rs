@@ -1,0 +1,29 @@
+//! Smart-contract interface shared by both simulated platforms.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Call context handed to a contract (who called, at what height).
+#[derive(Clone, Debug)]
+pub struct TxCtx {
+    pub sender: String,
+    pub height: u64,
+}
+
+/// A deployed smart contract: named methods over persistent state.
+///
+/// The same contract objects deploy on EthereumSim and FabricSim — the
+/// FLsim Blockchain API makes the platform interchangeable (paper RQ4).
+pub trait Contract {
+    fn name(&self) -> &'static str;
+
+    /// State-mutating invocation (a transaction).
+    fn invoke(&mut self, method: &str, args: &Json, ctx: &TxCtx) -> Result<Json>;
+
+    /// Read-only query.
+    fn query(&self, method: &str, args: &Json) -> Result<Json>;
+
+    /// Deterministic digest of contract state (goes into the state root).
+    fn state_digest(&self) -> String;
+}

@@ -1,0 +1,147 @@
+//! On-chain aggregation consensus: the blockchain-delegated variant of the
+//! paper's §2.5 pipeline. Workers submit (round, hash) proposals as
+//! transactions; `decide(round)` returns the plurality hash, with ties
+//! broken deterministically by lexicographic hash order (every honest chain
+//! node must reach the same decision without randomness).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::chain::contract::{Contract, TxCtx};
+use crate::chain::contracts::param_verify::{arg_str, arg_u64};
+use crate::util::hash;
+use crate::util::json::Json;
+
+#[derive(Default)]
+pub struct ConsensusContract {
+    /// round -> worker -> proposed hash.
+    proposals: BTreeMap<u64, BTreeMap<String, String>>,
+}
+
+impl Contract for ConsensusContract {
+    fn name(&self) -> &'static str {
+        "consensus"
+    }
+
+    fn invoke(&mut self, method: &str, args: &Json, ctx: &TxCtx) -> Result<Json> {
+        match method {
+            // propose(round, hash)
+            "propose" => {
+                let round = arg_u64(args, "round")?;
+                let h = arg_str(args, "hash")?;
+                self.proposals
+                    .entry(round)
+                    .or_default()
+                    .insert(ctx.sender.clone(), h);
+                Ok(Json::Bool(true))
+            }
+            _ => bail!("consensus: unknown method '{method}'"),
+        }
+    }
+
+    fn query(&self, method: &str, args: &Json) -> Result<Json> {
+        match method {
+            // decide(round) -> {hash, votes, decisive} | null
+            "decide" => {
+                let round = arg_u64(args, "round")?;
+                let Some(props) = self.proposals.get(&round) else {
+                    return Ok(Json::Null);
+                };
+                let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+                for h in props.values() {
+                    *counts.entry(h.as_str()).or_insert(0) += 1;
+                }
+                // Plurality; ties -> lexicographically smallest hash
+                // (deterministic on every replica).
+                let (winner, votes) = counts
+                    .iter()
+                    .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
+                    .map(|(h, c)| (h.to_string(), *c))
+                    .unwrap();
+                Ok(Json::obj(vec![
+                    ("hash", Json::from(winner.as_str())),
+                    ("votes", Json::from(votes)),
+                    ("decisive", Json::Bool(2 * votes > props.len())),
+                ]))
+            }
+            "proposals" => {
+                let round = arg_u64(args, "round")?;
+                let props = self.proposals.get(&round).cloned().unwrap_or_default();
+                Ok(Json::Obj(
+                    props.into_iter().map(|(k, v)| (k, Json::Str(v))).collect(),
+                ))
+            }
+            _ => bail!("consensus: unknown query '{method}'"),
+        }
+    }
+
+    fn state_digest(&self) -> String {
+        let mut s = String::new();
+        for (r, m) in &self.proposals {
+            s.push_str(&r.to_string());
+            for (w, h) in m {
+                s.push_str(w);
+                s.push_str(h);
+            }
+        }
+        hash::sha256_hex(s.as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(sender: &str) -> TxCtx {
+        TxCtx {
+            sender: sender.into(),
+            height: 0,
+        }
+    }
+
+    fn prop(round: u64, h: &str) -> Json {
+        Json::obj(vec![("round", Json::from(round as usize)), ("hash", Json::from(h))])
+    }
+
+    fn round_arg(round: u64) -> Json {
+        Json::obj(vec![("round", Json::from(round as usize))])
+    }
+
+    #[test]
+    fn majority_decision_on_chain() {
+        let mut c = ConsensusContract::default();
+        c.invoke("propose", &prop(1, "honest"), &ctx("w1")).unwrap();
+        c.invoke("propose", &prop(1, "honest"), &ctx("w2")).unwrap();
+        c.invoke("propose", &prop(1, "evil"), &ctx("w0")).unwrap();
+        let d = c.query("decide", &round_arg(1)).unwrap();
+        assert_eq!(d.get("hash").unwrap().as_str(), Some("honest"));
+        assert_eq!(d.get("votes").unwrap().as_f64(), Some(2.0));
+        assert_eq!(d.get("decisive"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn tie_breaks_deterministically() {
+        let mut c = ConsensusContract::default();
+        c.invoke("propose", &prop(1, "bbb"), &ctx("w0")).unwrap();
+        c.invoke("propose", &prop(1, "aaa"), &ctx("w1")).unwrap();
+        let d = c.query("decide", &round_arg(1)).unwrap();
+        assert_eq!(d.get("hash").unwrap().as_str(), Some("aaa"));
+        assert_eq!(d.get("decisive"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn empty_round_is_null() {
+        let c = ConsensusContract::default();
+        assert_eq!(c.query("decide", &round_arg(3)).unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn reproposal_overwrites_same_worker() {
+        let mut c = ConsensusContract::default();
+        c.invoke("propose", &prop(1, "a"), &ctx("w0")).unwrap();
+        c.invoke("propose", &prop(1, "b"), &ctx("w0")).unwrap();
+        let props = c.query("proposals", &round_arg(1)).unwrap();
+        assert_eq!(props.get("w0").unwrap().as_str(), Some("b"));
+    }
+}

@@ -1,0 +1,19 @@
+//! The FL smart-contract suite (paper §2.4's key benefits list):
+//! parameter verification, provenance, reputation, on-chain consensus.
+
+pub mod consensus_contract;
+pub mod param_verify;
+pub mod provenance;
+pub mod reputation;
+
+use crate::chain::contract::Contract;
+
+/// The standard FLsim contract deployment set.
+pub fn fl_contract_suite() -> Vec<Box<dyn Contract>> {
+    vec![
+        Box::new(param_verify::ParamVerify::default()),
+        Box::new(provenance::Provenance::default()),
+        Box::new(reputation::Reputation::default()),
+        Box::new(consensus_contract::ConsensusContract::default()),
+    ]
+}

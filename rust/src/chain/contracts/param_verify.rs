@@ -1,0 +1,137 @@
+//! Model-parameter verification contract: workers record the hash of the
+//! client-parameter set they aggregated from; anyone can verify that a
+//! given hash matches what the (honest) majority recorded for a round.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::chain::contract::{Contract, TxCtx};
+use crate::util::hash;
+use crate::util::json::Json;
+
+#[derive(Default)]
+pub struct ParamVerify {
+    /// round -> worker -> recorded hash.
+    records: BTreeMap<u64, BTreeMap<String, String>>,
+}
+
+impl Contract for ParamVerify {
+    fn name(&self) -> &'static str {
+        "param_verify"
+    }
+
+    fn invoke(&mut self, method: &str, args: &Json, ctx: &TxCtx) -> Result<Json> {
+        match method {
+            // record(round, hash)
+            "record" => {
+                let round = arg_u64(args, "round")?;
+                let h = arg_str(args, "hash")?;
+                self.records
+                    .entry(round)
+                    .or_default()
+                    .insert(ctx.sender.clone(), h);
+                Ok(Json::Bool(true))
+            }
+            _ => bail!("param_verify: unknown method '{method}'"),
+        }
+    }
+
+    fn query(&self, method: &str, args: &Json) -> Result<Json> {
+        match method {
+            // verify(round, hash) -> bool: does `hash` match the plurality?
+            "verify" => {
+                let round = arg_u64(args, "round")?;
+                let h = arg_str(args, "hash")?;
+                let Some(recs) = self.records.get(&round) else {
+                    return Ok(Json::Bool(false));
+                };
+                let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+                for v in recs.values() {
+                    *counts.entry(v.as_str()).or_insert(0) += 1;
+                }
+                let max = counts.values().copied().max().unwrap_or(0);
+                Ok(Json::Bool(
+                    counts.get(h.as_str()).copied().unwrap_or(0) == max && max > 0,
+                ))
+            }
+            // recorded(round) -> {worker: hash}
+            "recorded" => {
+                let round = arg_u64(args, "round")?;
+                let recs = self.records.get(&round).cloned().unwrap_or_default();
+                Ok(Json::Obj(
+                    recs.into_iter().map(|(k, v)| (k, Json::Str(v))).collect(),
+                ))
+            }
+            _ => bail!("param_verify: unknown query '{method}'"),
+        }
+    }
+
+    fn state_digest(&self) -> String {
+        let mut s = String::new();
+        for (r, m) in &self.records {
+            s.push_str(&r.to_string());
+            for (w, h) in m {
+                s.push_str(w);
+                s.push_str(h);
+            }
+        }
+        hash::sha256_hex(s.as_bytes())
+    }
+}
+
+pub(crate) fn arg_u64(args: &Json, key: &str) -> Result<u64> {
+    args.get(key)
+        .and_then(Json::as_f64)
+        .map(|f| f as u64)
+        .ok_or_else(|| anyhow!("missing numeric arg '{key}'"))
+}
+
+pub(crate) fn arg_str(args: &Json, key: &str) -> Result<String> {
+    args.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing string arg '{key}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(sender: &str) -> TxCtx {
+        TxCtx {
+            sender: sender.into(),
+            height: 1,
+        }
+    }
+
+    fn rec(round: u64, h: &str) -> Json {
+        Json::obj(vec![("round", Json::from(round as usize)), ("hash", Json::from(h))])
+    }
+
+    #[test]
+    fn majority_hash_verifies() {
+        let mut c = ParamVerify::default();
+        c.invoke("record", &rec(1, "aaa"), &ctx("w0")).unwrap();
+        c.invoke("record", &rec(1, "aaa"), &ctx("w1")).unwrap();
+        c.invoke("record", &rec(1, "bbb"), &ctx("w2")).unwrap();
+        assert_eq!(c.query("verify", &rec(1, "aaa")).unwrap(), Json::Bool(true));
+        assert_eq!(c.query("verify", &rec(1, "bbb")).unwrap(), Json::Bool(false));
+        assert_eq!(c.query("verify", &rec(2, "aaa")).unwrap(), Json::Bool(false));
+    }
+
+    #[test]
+    fn state_digest_changes_with_records() {
+        let mut c = ParamVerify::default();
+        let d0 = c.state_digest();
+        c.invoke("record", &rec(1, "aaa"), &ctx("w0")).unwrap();
+        assert_ne!(d0, c.state_digest());
+    }
+
+    #[test]
+    fn unknown_method_errors() {
+        let mut c = ParamVerify::default();
+        assert!(c.invoke("mint", &Json::Null, &ctx("w0")).is_err());
+        assert!(c.query("mint", &Json::Null).is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Global-model provenance contract: an append-only lineage of the selected
+//! global model per round — auditable ancestry for any trained model.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::chain::contract::{Contract, TxCtx};
+use crate::chain::contracts::param_verify::{arg_str, arg_u64};
+use crate::util::hash;
+use crate::util::json::Json;
+
+#[derive(Default)]
+pub struct Provenance {
+    /// round -> (model hash, selected-by, block height).
+    lineage: BTreeMap<u64, (String, String, u64)>,
+}
+
+impl Contract for Provenance {
+    fn name(&self) -> &'static str {
+        "provenance"
+    }
+
+    fn invoke(&mut self, method: &str, args: &Json, ctx: &TxCtx) -> Result<Json> {
+        match method {
+            // record(round, hash)
+            "record" => {
+                let round = arg_u64(args, "round")?;
+                let h = arg_str(args, "hash")?;
+                if self.lineage.contains_key(&round) {
+                    bail!("provenance: round {round} already recorded (append-only)");
+                }
+                self.lineage
+                    .insert(round, (h, ctx.sender.clone(), ctx.height));
+                Ok(Json::Bool(true))
+            }
+            _ => bail!("provenance: unknown method '{method}'"),
+        }
+    }
+
+    fn query(&self, method: &str, args: &Json) -> Result<Json> {
+        match method {
+            // get(round) -> {hash, by, height} | null
+            "get" => {
+                let round = arg_u64(args, "round")?;
+                Ok(match self.lineage.get(&round) {
+                    None => Json::Null,
+                    Some((h, by, height)) => Json::obj(vec![
+                        ("hash", Json::from(h.as_str())),
+                        ("by", Json::from(by.as_str())),
+                        ("height", Json::from(*height as usize)),
+                    ]),
+                })
+            }
+            // lineage() -> [hash per round, ascending]
+            "lineage" => Ok(Json::Arr(
+                self.lineage
+                    .values()
+                    .map(|(h, _, _)| Json::from(h.as_str()))
+                    .collect(),
+            )),
+            _ => bail!("provenance: unknown query '{method}'"),
+        }
+    }
+
+    fn state_digest(&self) -> String {
+        let mut s = String::new();
+        for (r, (h, by, height)) in &self.lineage {
+            s.push_str(&format!("{r}{h}{by}{height}"));
+        }
+        hash::sha256_hex(s.as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> TxCtx {
+        TxCtx {
+            sender: "controller".into(),
+            height: 9,
+        }
+    }
+
+    #[test]
+    fn lineage_is_append_only() {
+        let mut c = Provenance::default();
+        let args = Json::obj(vec![("round", Json::from(1usize)), ("hash", Json::from("h1"))]);
+        c.invoke("record", &args, &ctx()).unwrap();
+        assert!(c.invoke("record", &args, &ctx()).is_err());
+        let got = c
+            .query("get", &Json::obj(vec![("round", Json::from(1usize))]))
+            .unwrap();
+        assert_eq!(got.get("hash").unwrap().as_str(), Some("h1"));
+        assert_eq!(got.get("height").unwrap().as_f64(), Some(9.0));
+    }
+
+    #[test]
+    fn full_lineage_query() {
+        let mut c = Provenance::default();
+        for r in 1..=3u64 {
+            let args = Json::obj(vec![
+                ("round", Json::from(r as usize)),
+                ("hash", Json::from(format!("h{r}").as_str())),
+            ]);
+            c.invoke("record", &args, &ctx()).unwrap();
+        }
+        let l = c.query("lineage", &Json::Null).unwrap();
+        assert_eq!(l.as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn missing_round_is_null() {
+        let c = Provenance::default();
+        let got = c
+            .query("get", &Json::obj(vec![("round", Json::from(5usize))]))
+            .unwrap();
+        assert_eq!(got, Json::Null);
+    }
+}

@@ -1,0 +1,99 @@
+//! Node reputation contract: workers gain reputation when their proposal
+//! wins consensus and lose it when their proposal is voted down — the
+//! paper's "node reputation score maintenance" benefit.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::chain::contract::{Contract, TxCtx};
+use crate::chain::contracts::param_verify::arg_str;
+use crate::util::hash;
+use crate::util::json::Json;
+
+#[derive(Default)]
+pub struct Reputation {
+    scores: BTreeMap<String, i64>,
+}
+
+impl Contract for Reputation {
+    fn name(&self) -> &'static str {
+        "reputation"
+    }
+
+    fn invoke(&mut self, method: &str, args: &Json, _ctx: &TxCtx) -> Result<Json> {
+        match method {
+            // reward(node) / penalize(node)
+            "reward" => {
+                let n = arg_str(args, "node")?;
+                *self.scores.entry(n).or_insert(0) += 1;
+                Ok(Json::Bool(true))
+            }
+            "penalize" => {
+                let n = arg_str(args, "node")?;
+                *self.scores.entry(n).or_insert(0) -= 1;
+                Ok(Json::Bool(true))
+            }
+            _ => bail!("reputation: unknown method '{method}'"),
+        }
+    }
+
+    fn query(&self, method: &str, args: &Json) -> Result<Json> {
+        match method {
+            "score" => {
+                let n = arg_str(args, "node")?;
+                Ok(Json::Num(self.scores.get(&n).copied().unwrap_or(0) as f64))
+            }
+            "all" => Ok(Json::Obj(
+                self.scores
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                    .collect(),
+            )),
+            _ => bail!("reputation: unknown query '{method}'"),
+        }
+    }
+
+    fn state_digest(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.scores {
+            s.push_str(&format!("{k}={v};"));
+        }
+        hash::sha256_hex(s.as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> TxCtx {
+        TxCtx {
+            sender: "lc".into(),
+            height: 0,
+        }
+    }
+
+    fn node_arg(n: &str) -> Json {
+        Json::obj(vec![("node", Json::from(n))])
+    }
+
+    #[test]
+    fn reward_and_penalize() {
+        let mut c = Reputation::default();
+        c.invoke("reward", &node_arg("w0"), &ctx()).unwrap();
+        c.invoke("reward", &node_arg("w0"), &ctx()).unwrap();
+        c.invoke("penalize", &node_arg("w1"), &ctx()).unwrap();
+        assert_eq!(c.query("score", &node_arg("w0")).unwrap(), Json::Num(2.0));
+        assert_eq!(c.query("score", &node_arg("w1")).unwrap(), Json::Num(-1.0));
+        assert_eq!(c.query("score", &node_arg("w2")).unwrap(), Json::Num(0.0));
+    }
+
+    #[test]
+    fn all_scores() {
+        let mut c = Reputation::default();
+        c.invoke("reward", &node_arg("a"), &ctx()).unwrap();
+        let all = c.query("all", &Json::Null).unwrap();
+        assert_eq!(all.get("a").unwrap().as_f64(), Some(1.0));
+    }
+}

@@ -1,0 +1,206 @@
+//! EthereumSim: an Ethereum-flavoured simulated chain — account nonces, gas
+//! accounting, proof-of-authority sealing with a round-robin validator set.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::chain::block::{Block, Tx, TxReceipt};
+use crate::chain::contract::{Contract, TxCtx};
+use crate::chain::contracts::fl_contract_suite;
+use crate::chain::Blockchain;
+use crate::util::hash;
+use crate::util::json::Json;
+
+pub struct EthereumSim {
+    blocks: Vec<Block>,
+    pending: Vec<String>,
+    contracts: BTreeMap<String, Box<dyn Contract>>,
+    nonces: BTreeMap<String, u64>,
+    /// Total gas spent per account (the "cost" of BCFL participation).
+    gas_spent: BTreeMap<String, u64>,
+    validators: Vec<String>,
+    total_txs: u64,
+}
+
+impl EthereumSim {
+    pub fn new(contracts: Vec<Box<dyn Contract>>) -> EthereumSim {
+        let mut map = BTreeMap::new();
+        for c in contracts {
+            map.insert(c.name().to_string(), c);
+        }
+        EthereumSim {
+            blocks: vec![Block::seal(0, "0x0", Vec::new(), "genesis", "genesis")],
+            pending: Vec::new(),
+            contracts: map,
+            nonces: BTreeMap::new(),
+            gas_spent: BTreeMap::new(),
+            validators: (0..4).map(|i| format!("validator_{i}")).collect(),
+            total_txs: 0,
+        }
+    }
+
+    pub fn with_fl_contracts() -> EthereumSim {
+        EthereumSim::new(fl_contract_suite())
+    }
+
+    pub fn gas_spent_by(&self, account: &str) -> u64 {
+        self.gas_spent.get(account).copied().unwrap_or(0)
+    }
+
+    pub fn total_txs(&self) -> u64 {
+        self.total_txs
+    }
+
+    fn state_root(&self) -> String {
+        let mut s = String::new();
+        for (name, c) in &self.contracts {
+            s.push_str(name);
+            s.push_str(&c.state_digest());
+        }
+        hash::sha256_hex(s.as_bytes())
+    }
+}
+
+impl Blockchain for EthereumSim {
+    fn platform(&self) -> &'static str {
+        "ethereum"
+    }
+
+    fn submit_tx(&mut self, mut tx: Tx) -> Result<TxReceipt> {
+        // Account-model bookkeeping: per-sender nonce.
+        let nonce = self.nonces.entry(tx.sender.clone()).or_insert(0);
+        tx.nonce = *nonce;
+        *nonce += 1;
+
+        let contract = self
+            .contracts
+            .get_mut(&tx.contract)
+            .ok_or_else(|| anyhow!("no contract '{}' deployed", tx.contract))?;
+        let ctx = TxCtx {
+            sender: tx.sender.clone(),
+            height: self.blocks.len() as u64,
+        };
+        let result = contract.invoke(&tx.method, &tx.args, &ctx)?;
+        let gas_used = tx.gas();
+        *self.gas_spent.entry(tx.sender.clone()).or_insert(0) += gas_used;
+        let tx_hash = tx.hash();
+        self.pending.push(tx_hash.clone());
+        self.total_txs += 1;
+        Ok(TxReceipt {
+            tx_hash,
+            result,
+            gas_used,
+        })
+    }
+
+    fn seal_block(&mut self) -> Result<&Block> {
+        let height = self.blocks.len() as u64;
+        // PoA: validators take turns proposing.
+        let proposer = self.validators[(height as usize) % self.validators.len()].clone();
+        let prev_hash = self.blocks.last().unwrap().hash.clone();
+        let txs = std::mem::take(&mut self.pending);
+        let root = self.state_root();
+        self.blocks
+            .push(Block::seal(height, &prev_hash, txs, &root, &proposer));
+        Ok(self.blocks.last().unwrap())
+    }
+
+    fn query(&self, contract: &str, method: &str, args: &Json) -> Result<Json> {
+        self.contracts
+            .get(contract)
+            .ok_or_else(|| anyhow!("no contract '{contract}' deployed"))?
+            .query(method, args)
+    }
+
+    fn height(&self) -> u64 {
+        self.blocks.len() as u64 - 1
+    }
+
+    fn verify_integrity(&self) -> Result<()> {
+        for (i, b) in self.blocks.iter().enumerate() {
+            if !b.verify() {
+                bail!("block {i} fails hash verification");
+            }
+            if i > 0 && b.prev_hash != self.blocks[i - 1].hash {
+                bail!("block {i} prev-hash link broken");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record_tx(round: u64, h: &str, sender: &str) -> Tx {
+        Tx::new(
+            sender,
+            "param_verify",
+            "record",
+            Json::obj(vec![
+                ("round", Json::from(round as usize)),
+                ("hash", Json::from(h)),
+            ]),
+        )
+    }
+
+    #[test]
+    fn tx_flow_and_sealing() {
+        let mut eth = EthereumSim::with_fl_contracts();
+        let r = eth.submit_tx(record_tx(1, "abc", "worker_0")).unwrap();
+        assert!(r.gas_used > 21_000);
+        eth.submit_tx(record_tx(1, "abc", "worker_1")).unwrap();
+        assert_eq!(eth.height(), 0);
+        eth.seal_block().unwrap();
+        assert_eq!(eth.height(), 1);
+        eth.verify_integrity().unwrap();
+        let ok = eth
+            .query(
+                "param_verify",
+                "verify",
+                &Json::obj(vec![("round", Json::from(1usize)), ("hash", Json::from("abc"))]),
+            )
+            .unwrap();
+        assert_eq!(ok, Json::Bool(true));
+    }
+
+    #[test]
+    fn nonces_increment_per_sender() {
+        let mut eth = EthereumSim::with_fl_contracts();
+        eth.submit_tx(record_tx(1, "a", "w0")).unwrap();
+        eth.submit_tx(record_tx(2, "b", "w0")).unwrap();
+        eth.submit_tx(record_tx(1, "a", "w1")).unwrap();
+        assert_eq!(eth.nonces["w0"], 2);
+        assert_eq!(eth.nonces["w1"], 1);
+        assert!(eth.gas_spent_by("w0") > eth.gas_spent_by("w1"));
+    }
+
+    #[test]
+    fn poa_round_robin_proposers() {
+        let mut eth = EthereumSim::with_fl_contracts();
+        let p1 = eth.seal_block().unwrap().proposer.clone();
+        let p2 = eth.seal_block().unwrap().proposer.clone();
+        assert_ne!(p1, p2);
+        eth.verify_integrity().unwrap();
+    }
+
+    #[test]
+    fn unknown_contract_rejected() {
+        let mut eth = EthereumSim::with_fl_contracts();
+        assert!(eth
+            .submit_tx(Tx::new("w0", "defi", "swap", Json::Null))
+            .is_err());
+        assert!(eth.query("defi", "price", &Json::Null).is_err());
+    }
+
+    #[test]
+    fn tamper_detection() {
+        let mut eth = EthereumSim::with_fl_contracts();
+        eth.submit_tx(record_tx(1, "a", "w0")).unwrap();
+        eth.seal_block().unwrap();
+        eth.blocks[1].tx_hashes.push("forged".into());
+        assert!(eth.verify_integrity().is_err());
+    }
+}

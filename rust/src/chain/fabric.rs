@@ -1,0 +1,208 @@
+//! FabricSim: a Hyperledger-Fabric-flavoured simulated chain — the
+//! endorse → order → validate transaction flow with an endorsement policy,
+//! channels, and no gas (permissioned network).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::chain::block::{Block, Tx, TxReceipt};
+use crate::chain::contract::{Contract, TxCtx};
+use crate::chain::contracts::fl_contract_suite;
+use crate::chain::Blockchain;
+use crate::util::hash;
+use crate::util::json::Json;
+
+/// Endorsement policy: k of the n peers must endorse a tx.
+#[derive(Clone, Copy, Debug)]
+pub struct EndorsementPolicy {
+    pub n_peers: usize,
+    pub required: usize,
+}
+
+impl Default for EndorsementPolicy {
+    fn default() -> Self {
+        EndorsementPolicy {
+            n_peers: 4,
+            required: 3,
+        }
+    }
+}
+
+pub struct FabricSim {
+    channel: String,
+    blocks: Vec<Block>,
+    pending: Vec<String>,
+    contracts: BTreeMap<String, Box<dyn Contract>>,
+    policy: EndorsementPolicy,
+    /// Endorsements granted per tx hash (all-honest peers endorse
+    /// deterministically; a test can shrink the policy to force failures).
+    endorse_log: BTreeMap<String, usize>,
+    total_txs: u64,
+}
+
+impl FabricSim {
+    pub fn new(contracts: Vec<Box<dyn Contract>>, policy: EndorsementPolicy) -> FabricSim {
+        let mut map = BTreeMap::new();
+        for c in contracts {
+            map.insert(c.name().to_string(), c);
+        }
+        FabricSim {
+            channel: "flsim-channel".into(),
+            blocks: vec![Block::seal(0, "0x0", Vec::new(), "genesis", "orderer")],
+            pending: Vec::new(),
+            contracts: map,
+            policy,
+            endorse_log: BTreeMap::new(),
+            total_txs: 0,
+        }
+    }
+
+    pub fn with_fl_contracts() -> FabricSim {
+        FabricSim::new(fl_contract_suite(), EndorsementPolicy::default())
+    }
+
+    pub fn channel(&self) -> &str {
+        &self.channel
+    }
+
+    pub fn total_txs(&self) -> u64 {
+        self.total_txs
+    }
+
+    /// Phase 1 — endorsement: simulate each peer executing the chaincode
+    /// read-set; honest peers all endorse identical results.
+    fn endorse(&mut self, tx: &Tx) -> Result<usize> {
+        let endorsements = self.policy.n_peers; // all peers honest here
+        self.endorse_log.insert(tx.hash(), endorsements);
+        if endorsements < self.policy.required {
+            bail!(
+                "endorsement policy unmet: {endorsements}/{} (need {})",
+                self.policy.n_peers,
+                self.policy.required
+            );
+        }
+        Ok(endorsements)
+    }
+
+    fn state_root(&self) -> String {
+        let mut s = String::new();
+        for (name, c) in &self.contracts {
+            s.push_str(name);
+            s.push_str(&c.state_digest());
+        }
+        hash::sha256_hex(s.as_bytes())
+    }
+}
+
+impl Blockchain for FabricSim {
+    fn platform(&self) -> &'static str {
+        "fabric"
+    }
+
+    fn submit_tx(&mut self, tx: Tx) -> Result<TxReceipt> {
+        // endorse -> order (append to pending) -> validate+commit (invoke).
+        self.endorse(&tx)?;
+        let contract = self
+            .contracts
+            .get_mut(&tx.contract)
+            .ok_or_else(|| anyhow!("no chaincode '{}' installed", tx.contract))?;
+        let ctx = TxCtx {
+            sender: tx.sender.clone(),
+            height: self.blocks.len() as u64,
+        };
+        let result = contract.invoke(&tx.method, &tx.args, &ctx)?;
+        let tx_hash = tx.hash();
+        self.pending.push(tx_hash.clone());
+        self.total_txs += 1;
+        Ok(TxReceipt {
+            tx_hash,
+            result,
+            gas_used: 0, // permissioned: no gas
+        })
+    }
+
+    fn seal_block(&mut self) -> Result<&Block> {
+        let height = self.blocks.len() as u64;
+        let prev_hash = self.blocks.last().unwrap().hash.clone();
+        let txs = std::mem::take(&mut self.pending);
+        let root = self.state_root();
+        self.blocks
+            .push(Block::seal(height, &prev_hash, txs, &root, "orderer"));
+        Ok(self.blocks.last().unwrap())
+    }
+
+    fn query(&self, contract: &str, method: &str, args: &Json) -> Result<Json> {
+        self.contracts
+            .get(contract)
+            .ok_or_else(|| anyhow!("no chaincode '{contract}' installed"))?
+            .query(method, args)
+    }
+
+    fn height(&self) -> u64 {
+        self.blocks.len() as u64 - 1
+    }
+
+    fn verify_integrity(&self) -> Result<()> {
+        for (i, b) in self.blocks.iter().enumerate() {
+            if !b.verify() {
+                bail!("block {i} fails hash verification");
+            }
+            if i > 0 && b.prev_hash != self.blocks[i - 1].hash {
+                bail!("block {i} prev-hash link broken");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reward_tx(node: &str) -> Tx {
+        Tx::new(
+            "lc",
+            "reputation",
+            "reward",
+            Json::obj(vec![("node", Json::from(node))]),
+        )
+    }
+
+    #[test]
+    fn endorse_order_validate_flow() {
+        let mut fab = FabricSim::with_fl_contracts();
+        let r = fab.submit_tx(reward_tx("w0")).unwrap();
+        assert_eq!(r.gas_used, 0);
+        fab.seal_block().unwrap();
+        fab.verify_integrity().unwrap();
+        let score = fab
+            .query("reputation", "score", &Json::obj(vec![("node", Json::from("w0"))]))
+            .unwrap();
+        assert_eq!(score, Json::Num(1.0));
+    }
+
+    #[test]
+    fn endorsement_policy_enforced() {
+        let mut fab = FabricSim::new(
+            fl_contract_suite(),
+            EndorsementPolicy {
+                n_peers: 2,
+                required: 3,
+            },
+        );
+        assert!(fab.submit_tx(reward_tx("w0")).is_err());
+    }
+
+    #[test]
+    fn same_contracts_as_ethereum() {
+        // The suite deploys identically on both platforms (pluggability).
+        let fab = FabricSim::with_fl_contracts();
+        for c in ["param_verify", "provenance", "reputation", "consensus"] {
+            assert!(
+                fab.contracts.contains_key(c),
+                "fabric missing contract {c}"
+            );
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Pluggable blockchain integration (paper §2.4 / RQ4).
+//!
+//! One `Blockchain` API, two simulated platforms — an Ethereum-like
+//! account/gas/PoA chain and a Hyperledger-Fabric-like
+//! endorse→order→validate chain — hosting the same smart-contract set:
+//! parameter verification, global-model provenance, node reputation, and
+//! on-chain aggregation consensus. (The paper plugs real Ethereum/Fabric
+//! stacks; the pluggable-API property and the BCFL workflows are what the
+//! evaluation exercises — DESIGN.md §3.)
+
+pub mod block;
+pub mod contract;
+pub mod contracts;
+pub mod eth;
+pub mod fabric;
+
+use anyhow::Result;
+
+pub use block::{Block, Tx, TxReceipt};
+pub use contract::{Contract, TxCtx};
+
+use crate::util::json::Json;
+
+/// The FLsim Blockchain API every platform wrapper implements (the paper's
+/// "wrapper on the FLsim Blockchain API" step for adding a new platform).
+pub trait Blockchain {
+    fn platform(&self) -> &'static str;
+
+    /// Submit a contract-call transaction; it lands in the pending pool.
+    fn submit_tx(&mut self, tx: Tx) -> Result<TxReceipt>;
+
+    /// Seal all pending transactions into a block (applies state).
+    fn seal_block(&mut self) -> Result<&Block>;
+
+    /// Read-only contract query (no tx, no state change).
+    fn query(&self, contract: &str, method: &str, args: &Json) -> Result<Json>;
+
+    fn height(&self) -> u64;
+
+    /// Verify hash links + per-block tx integrity of the whole chain.
+    fn verify_integrity(&self) -> Result<()>;
+}
+
+/// Instantiate a platform by config name, pre-deploying the FL contracts.
+pub fn by_platform(name: &str) -> Result<Box<dyn Blockchain>> {
+    match name {
+        "ethereum" | "eth" => Ok(Box::new(eth::EthereumSim::with_fl_contracts())),
+        "fabric" | "hyperledger" => Ok(Box::new(fabric::FabricSim::with_fl_contracts())),
+        _ => anyhow::bail!("unknown blockchain platform '{name}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn platform_registry() {
+        assert_eq!(by_platform("ethereum").unwrap().platform(), "ethereum");
+        assert_eq!(by_platform("fabric").unwrap().platform(), "fabric");
+        assert!(by_platform("solana").is_err());
+    }
+}

@@ -1,0 +1,443 @@
+//! The FLsim job configuration.
+//!
+//! Mirrors the paper's Figure 2 sections: (a) dataset parameters,
+//! (b) consensus configuration, (c) topology/cluster configuration,
+//! (d) FL strategy configuration (with training + aggregation
+//! hyper-parameters), (e/f) node defaults & overrides. Configs load from the
+//! YAML subset in [`crate::util::yaml`] (anchors/merge keys included) or are
+//! built programmatically via the preset constructors.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::aggregate::mean::ReductionOrder;
+use crate::data::dataset::{DatasetSpec, Distribution};
+use crate::strategy::StrategyKind;
+use crate::topology::TopologyKind;
+use crate::util::yaml::Yaml;
+
+/// Training hyper-parameters (paper Fig 2d `train_params`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainParams {
+    pub learning_rate: f32,
+    pub local_epochs: usize,
+}
+
+impl Default for TrainParams {
+    fn default() -> Self {
+        // The paper's standard setting: 5 local epochs, batch 64 (batch size
+        // is baked into the AOT artifacts). The paper's lr is 0.001 on real
+        // CIFAR-10; the synthetic substitute learns on the same curve shape
+        // with 0.01 over 30 rounds (EXPERIMENTS.md documents the deviation).
+        TrainParams {
+            learning_rate: 0.01,
+            local_epochs: 5,
+        }
+    }
+}
+
+/// Consensus section (Fig 2b).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConsensusConfig {
+    /// Registry name: "majority_hash" | "score_vote" | "first".
+    pub runnable: String,
+    /// Worker names that behave maliciously (poison their aggregate).
+    pub malicious_workers: Vec<String>,
+    /// Delegate the decision to the blockchain contract instead of the
+    /// logic controller (requires `chain.enabled`).
+    pub on_chain: bool,
+}
+
+impl Default for ConsensusConfig {
+    fn default() -> Self {
+        ConsensusConfig {
+            runnable: "majority_hash".into(),
+            malicious_workers: Vec::new(),
+            on_chain: false,
+        }
+    }
+}
+
+/// Pluggable blockchain section (paper §2.4).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChainConfig {
+    pub enabled: bool,
+    /// "ethereum" | "fabric".
+    pub platform: String,
+}
+
+impl Default for ChainConfig {
+    fn default() -> Self {
+        ChainConfig {
+            enabled: false,
+            platform: "ethereum".into(),
+        }
+    }
+}
+
+/// A complete FLsim job.
+#[derive(Clone, Debug)]
+pub struct JobConfig {
+    pub name: String,
+    pub seed: u64,
+    pub rounds: u64,
+    pub backend: String,
+    pub strategy: StrategyKind,
+    pub topology: TopologyKind,
+    pub n_clients: usize,
+    pub n_workers: usize,
+    pub dataset: DatasetSpec,
+    pub train: TrainParams,
+    pub consensus: ConsensusConfig,
+    pub chain: ChainConfig,
+    /// Floating-point reduction order = simulated hardware profile (RQ6).
+    pub hw_profile: ReductionOrder,
+    /// Stop waiting for stragglers after this many simulated seconds
+    /// (Algorithm 1's `timeout()`); `None` waits forever.
+    pub round_timeout_secs: Option<f64>,
+    /// Fraction of clients sampled per round (1.0 = all, paper default).
+    pub client_fraction: f64,
+}
+
+impl JobConfig {
+    // ---------------------------------------------------------------------
+    // Presets (the paper's standard setting: 10 clients, Dirichlet 0.5,
+    // batch 64, 30 rounds, CNN on CIFAR-10).
+    // ---------------------------------------------------------------------
+
+    pub fn default_cnn(strategy: &str) -> JobConfig {
+        let strategy = StrategyKind::parse(strategy, &Yaml::Null)
+            .expect("valid strategy name");
+        JobConfig {
+            name: format!("{}_cnn", strategy.name()),
+            seed: 42,
+            rounds: 30,
+            backend: "cnn".into(),
+            topology: match strategy {
+                StrategyKind::Fedstellar { .. } => TopologyKind::FullyConnected,
+                _ => TopologyKind::ClientServer,
+            },
+            n_clients: 10,
+            n_workers: 1,
+            dataset: DatasetSpec::cifar_dirichlet(5000, 0.5),
+            train: TrainParams::default(),
+            consensus: ConsensusConfig::default(),
+            chain: ChainConfig::default(),
+            hw_profile: ReductionOrder::Sequential,
+            round_timeout_secs: None,
+            client_fraction: 1.0,
+            strategy,
+        }
+    }
+
+    /// Fig 12 preset: logistic regression on MNIST at scale.
+    pub fn scale_logreg(n_clients: usize) -> JobConfig {
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.name = format!("logreg_{n_clients}c");
+        j.backend = "logreg".into();
+        j.dataset = DatasetSpec {
+            name: "mnist_synth".into(),
+            n: 60_000,
+            train_frac: 0.9,
+            distribution: Distribution::Iid,
+        };
+        j.n_clients = n_clients;
+        j.train.learning_rate = 0.05;
+        j.train.local_epochs = 1;
+        j.rounds = 10;
+        j
+    }
+
+    // ---------------------------------------------------------------------
+    // YAML loading
+    // ---------------------------------------------------------------------
+
+    pub fn from_yaml_str(src: &str) -> Result<JobConfig> {
+        let y = Yaml::parse(src).map_err(|e| anyhow!("job config: {e}"))?;
+        Self::from_yaml(&y)
+    }
+
+    pub fn from_yaml_file(path: &str) -> Result<JobConfig> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading job config {path}: {e}"))?;
+        Self::from_yaml_str(&src)
+    }
+
+    pub fn from_yaml(y: &Yaml) -> Result<JobConfig> {
+        let job = y.get("job").unwrap_or(&Yaml::Null);
+        let name = get_str(job, "name").unwrap_or_else(|| "flsim_job".into());
+        let seed = get_i64(job, "seed").unwrap_or(42) as u64;
+        let rounds = get_i64(job, "rounds").unwrap_or(30) as u64;
+
+        // (a) dataset
+        let ds = y
+            .get("dataset")
+            .ok_or_else(|| anyhow!("job config: missing 'dataset' section"))?;
+        let dataset = parse_dataset(ds)?;
+
+        // (c) topology
+        let topo = y
+            .get("topology")
+            .ok_or_else(|| anyhow!("job config: missing 'topology' section"))?;
+        let topology = TopologyKind::parse(
+            &get_str(topo, "kind").ok_or_else(|| anyhow!("topology: missing kind"))?,
+        )?;
+        let n_clients = get_i64(topo, "clients").unwrap_or(10) as usize;
+        let n_workers = get_i64(topo, "workers").unwrap_or(1) as usize;
+        if n_clients == 0 {
+            bail!("topology: zero clients");
+        }
+
+        // (d) strategy
+        let st = y
+            .get("strategy")
+            .ok_or_else(|| anyhow!("job config: missing 'strategy' section"))?;
+        let strat_name =
+            get_str(st, "name").ok_or_else(|| anyhow!("strategy: missing name"))?;
+        let backend = get_str(st, "backend").unwrap_or_else(|| "cnn".into());
+        let extra = st.get("extra_params").cloned().unwrap_or(Yaml::Null);
+        let strategy = StrategyKind::parse(&strat_name, &extra)?;
+        let mut train = TrainParams::default();
+        if let Some(tp) = st.get("train_params") {
+            if let Some(lr) = get_f64(tp, "learning_rate") {
+                train.learning_rate = lr as f32;
+            }
+            if let Some(e) = get_i64(tp, "local_epochs") {
+                train.local_epochs = e as usize;
+            }
+        }
+
+        // (b) consensus
+        let mut consensus = ConsensusConfig::default();
+        if let Some(c) = y.get("consensus") {
+            if let Some(r) = get_str(c, "runnable") {
+                consensus.runnable = r;
+            }
+            if let Some(m) = c.get("malicious_workers").and_then(Yaml::as_seq) {
+                consensus.malicious_workers = m
+                    .iter()
+                    .filter_map(|v| v.as_str().map(str::to_string))
+                    .collect();
+            }
+            if let Some(b) = c.get("on_chain").and_then(Yaml::as_bool) {
+                consensus.on_chain = b;
+            }
+        }
+
+        // blockchain
+        let mut chain = ChainConfig::default();
+        if let Some(c) = y.get("chain") {
+            if let Some(b) = c.get("enabled").and_then(Yaml::as_bool) {
+                chain.enabled = b;
+            }
+            if let Some(p) = get_str(c, "platform") {
+                chain.platform = p;
+            }
+        }
+        if consensus.on_chain && !chain.enabled {
+            bail!("consensus.on_chain requires chain.enabled: true");
+        }
+
+        let hw_profile = match get_str(y, "hardware_profile") {
+            Some(s) => ReductionOrder::parse(&s)?,
+            None => ReductionOrder::Sequential,
+        };
+
+        let round_timeout_secs = job.get("round_timeout_secs").and_then(Yaml::as_f64);
+        let client_fraction = job
+            .get("client_fraction")
+            .and_then(Yaml::as_f64)
+            .unwrap_or(1.0);
+
+        let cfg = JobConfig {
+            name,
+            seed,
+            rounds,
+            backend,
+            strategy,
+            topology,
+            n_clients,
+            n_workers,
+            dataset,
+            train,
+            consensus,
+            chain,
+            hw_profile,
+            round_timeout_secs,
+            client_fraction,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.rounds == 0 {
+            bail!("rounds must be >= 1");
+        }
+        if self.n_clients == 0 {
+            bail!("need at least one client");
+        }
+        if self.client_fraction <= 0.0 || self.client_fraction > 1.0 {
+            bail!("client_fraction must be in (0, 1]");
+        }
+        if self.train.learning_rate <= 0.0 {
+            bail!("learning_rate must be positive");
+        }
+        if self.train.local_epochs == 0 {
+            bail!("local_epochs must be >= 1");
+        }
+        if self.dataset.n < self.n_clients {
+            bail!(
+                "dataset of {} examples cannot cover {} clients",
+                self.dataset.n,
+                self.n_clients
+            );
+        }
+        for w in &self.consensus.malicious_workers {
+            if !w.starts_with("worker_") && !w.starts_with("peer_") {
+                bail!("malicious worker '{w}' does not name a worker/peer node");
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_dataset(ds: &Yaml) -> Result<DatasetSpec> {
+    let name = get_str(ds, "name").ok_or_else(|| anyhow!("dataset: missing name"))?;
+    let n = get_i64(ds, "n").unwrap_or(5000) as usize;
+    let train_frac = ds
+        .get("train_test_split")
+        .and_then(|s| get_f64(s, "train"))
+        .unwrap_or(0.8);
+    let distribution = match ds.get("distribution") {
+        None => Distribution::Iid,
+        Some(d) => {
+            let kind = get_str(d, "kind").unwrap_or_else(|| "iid".into());
+            match kind.as_str() {
+                "iid" | "uniform" => Distribution::Iid,
+                "dirichlet" => Distribution::Dirichlet {
+                    alpha: get_f64(d, "alpha").unwrap_or(0.5),
+                },
+                "shards" => Distribution::Shards {
+                    shards_per_client: get_i64(d, "shards_per_client").unwrap_or(2) as usize,
+                },
+                other => bail!("unknown distribution kind '{other}'"),
+            }
+        }
+    };
+    if train_frac <= 0.0 || train_frac >= 1.0 {
+        bail!("train fraction {train_frac} out of (0,1)");
+    }
+    Ok(DatasetSpec {
+        name,
+        n,
+        train_frac,
+        distribution,
+    })
+}
+
+fn get_str(y: &Yaml, k: &str) -> Option<String> {
+    y.get(k)?.as_str().map(str::to_string)
+}
+
+fn get_i64(y: &Yaml, k: &str) -> Option<i64> {
+    y.get(k)?.as_i64()
+}
+
+fn get_f64(y: &Yaml, k: &str) -> Option<f64> {
+    y.get(k)?.as_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+job:
+  name: scaffold_test
+  seed: 7
+  rounds: 12
+dataset:
+  name: cifar10_synth
+  n: 2000
+  train_test_split: {train: 0.8, test: 0.2}
+  distribution:
+    kind: dirichlet
+    alpha: 0.5
+strategy:
+  name: scaffold
+  backend: cnn
+  train_params:
+    learning_rate: 0.01
+    local_epochs: 3
+topology:
+  kind: client_server
+  clients: 8
+  workers: 2
+consensus:
+  runnable: majority_hash
+  malicious_workers:
+    - worker_1
+hardware_profile: kahan
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let j = JobConfig::from_yaml_str(SAMPLE).unwrap();
+        assert_eq!(j.name, "scaffold_test");
+        assert_eq!(j.seed, 7);
+        assert_eq!(j.rounds, 12);
+        assert_eq!(j.strategy.name(), "scaffold");
+        assert_eq!(j.n_clients, 8);
+        assert_eq!(j.n_workers, 2);
+        assert_eq!(j.train.learning_rate, 0.01);
+        assert_eq!(j.train.local_epochs, 3);
+        assert_eq!(j.consensus.malicious_workers, vec!["worker_1"]);
+        assert_eq!(j.hw_profile, ReductionOrder::Kahan);
+        assert_eq!(
+            j.dataset.distribution,
+            Distribution::Dirichlet { alpha: 0.5 }
+        );
+    }
+
+    #[test]
+    fn missing_sections_error() {
+        assert!(JobConfig::from_yaml_str("job:\n  name: x\n").is_err());
+    }
+
+    #[test]
+    fn presets_validate() {
+        for s in [
+            "fedavg", "fedavgm", "fedprox", "scaffold", "moon", "dpfl", "flhc",
+            "fedstellar",
+        ] {
+            let j = JobConfig::default_cnn(s);
+            j.validate().unwrap_or_else(|e| panic!("{s}: {e}"));
+        }
+        JobConfig::scale_logreg(100).validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.rounds = 0;
+        assert!(j.validate().is_err());
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.train.learning_rate = -1.0;
+        assert!(j.validate().is_err());
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.consensus.malicious_workers = vec!["client_0".into()];
+        assert!(j.validate().is_err());
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.dataset.n = 3;
+        assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn on_chain_requires_chain() {
+        let bad = SAMPLE.replace(
+            "consensus:\n  runnable: majority_hash",
+            "consensus:\n  on_chain: true\n  runnable: majority_hash",
+        );
+        assert!(JobConfig::from_yaml_str(&bad).is_err());
+    }
+}

@@ -1,0 +1,6 @@
+//! Job configuration (paper §2.2, Fig 2): the YAML schema users scaffold an
+//! FL experiment from, plus programmatic presets for every paper experiment.
+
+pub mod job;
+
+pub use job::{ChainConfig, ConsensusConfig, JobConfig, TrainParams};

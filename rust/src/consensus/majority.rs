@@ -1,0 +1,156 @@
+//! Majority-hash consensus — the scheme of Chowdhury et al. [13]
+//! (FedRLchain) the paper uses for its Fig 10 malicious-worker experiment.
+//!
+//! Honest workers aggregating the same client models deterministically
+//! produce bitwise-identical parameters, hence identical hashes; a poisoned
+//! aggregate hashes differently. Workers vote with their hashes and the
+//! plurality hash wins. With honest workers > 50% the poisoned model can
+//! never win; at 1:1 the tie-break is a coin flip from the round's seed
+//! stream, producing exactly the fluctuating trajectory of Fig 10.
+
+use anyhow::{bail, Result};
+
+use crate::consensus::{Consensus, Decision, Proposal};
+use crate::util::rng::Rng;
+
+pub struct MajorityHash;
+
+impl Consensus for MajorityHash {
+    fn name(&self) -> &'static str {
+        "majority_hash"
+    }
+
+    fn decide(&self, proposals: &[Proposal], rng: &mut Rng) -> Result<Decision> {
+        if proposals.is_empty() {
+            bail!("consensus over zero proposals");
+        }
+        // Count votes per distinct hash (each worker votes for its own
+        // aggregate; phase-2 of the paper's pipeline).
+        let mut votes = vec![0usize; proposals.len()];
+        for (i, p) in proposals.iter().enumerate() {
+            for q in proposals {
+                if p.hash == q.hash {
+                    votes[i] += 1;
+                }
+            }
+        }
+        let max_votes = *votes.iter().max().unwrap();
+        // Candidates = distinct hashes holding the plurality.
+        let mut winners: Vec<usize> = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for (i, p) in proposals.iter().enumerate() {
+            if votes[i] == max_votes && seen.insert(p.hash.clone()) {
+                winners.push(i);
+            }
+        }
+        let decisive = winners.len() == 1 && 2 * max_votes > proposals.len();
+        let winner = if winners.len() == 1 {
+            winners[0]
+        } else {
+            // Deterministic tie-break from the round stream.
+            winners[rng.below(winners.len())]
+        };
+        Ok(Decision {
+            winner,
+            votes,
+            decisive,
+        })
+    }
+}
+
+/// Degenerate single-aggregator "consensus": take the first proposal.
+/// (What a 1-worker FedAvg deployment effectively runs.)
+pub struct FirstProposal;
+
+impl Consensus for FirstProposal {
+    fn name(&self) -> &'static str {
+        "first"
+    }
+
+    fn decide(&self, proposals: &[Proposal], _rng: &mut Rng) -> Result<Decision> {
+        if proposals.is_empty() {
+            bail!("consensus over zero proposals");
+        }
+        Ok(Decision {
+            winner: 0,
+            votes: vec![1; proposals.len()],
+            decisive: proposals.len() == 1,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prop(worker: &str, v: f32) -> Proposal {
+        Proposal::new(worker, vec![v; 8])
+    }
+
+    #[test]
+    fn honest_majority_defeats_poison() {
+        // 1 malicious (different params) vs 2 honest (identical params).
+        let proposals = vec![prop("mal", 99.0), prop("h1", 1.0), prop("h2", 1.0)];
+        let d = MajorityHash
+            .decide(&proposals, &mut Rng::seed_from(1))
+            .unwrap();
+        assert!(d.decisive);
+        assert_ne!(d.winner, 0);
+        assert_eq!(proposals[d.winner].params[0], 1.0);
+    }
+
+    #[test]
+    fn one_to_one_tie_is_coin_flip_but_deterministic() {
+        let proposals = vec![prop("mal", 99.0), prop("h1", 1.0)];
+        let d1 = MajorityHash
+            .decide(&proposals, &mut Rng::seed_from(7))
+            .unwrap();
+        let d2 = MajorityHash
+            .decide(&proposals, &mut Rng::seed_from(7))
+            .unwrap();
+        assert!(!d1.decisive);
+        assert_eq!(d1.winner, d2.winner);
+        // Across different round seeds both sides win sometimes.
+        let mut saw = std::collections::BTreeSet::new();
+        for seed in 0..32 {
+            let d = MajorityHash
+                .decide(&proposals, &mut Rng::seed_from(seed))
+                .unwrap();
+            saw.insert(d.winner);
+        }
+        assert_eq!(saw.len(), 2, "tie-break never flips");
+    }
+
+    #[test]
+    fn single_worker_trivially_wins() {
+        let proposals = vec![prop("only", 5.0)];
+        let d = MajorityHash
+            .decide(&proposals, &mut Rng::seed_from(0))
+            .unwrap();
+        assert_eq!(d.winner, 0);
+        assert!(d.decisive);
+    }
+
+    #[test]
+    fn four_workers_one_malicious() {
+        // Fig 10's 1M-3H case: decisive honest win.
+        let proposals = vec![
+            prop("mal", 9.0),
+            prop("h1", 1.0),
+            prop("h2", 1.0),
+            prop("h3", 1.0),
+        ];
+        let d = MajorityHash
+            .decide(&proposals, &mut Rng::seed_from(3))
+            .unwrap();
+        assert!(d.decisive);
+        assert_eq!(proposals[d.winner].params[0], 1.0);
+        assert_eq!(d.votes, vec![1, 3, 3, 3]);
+    }
+
+    #[test]
+    fn empty_is_error() {
+        assert!(MajorityHash.decide(&[], &mut Rng::seed_from(0)).is_err());
+        assert!(FirstProposal.decide(&[], &mut Rng::seed_from(0)).is_err());
+    }
+}

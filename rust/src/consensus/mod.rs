@@ -1,0 +1,85 @@
+//! Multi-worker aggregation consensus (paper §2.5 / RQ3).
+//!
+//! After every worker aggregates the round's client models, the workers vote
+//! on which aggregate becomes the next global model. The paper's Fig 5
+//! interface is a single function `consensus(aggregated_models, extra) ->
+//! model`; here it is the [`Consensus`] trait plus a registry so jobs can
+//! select an algorithm by name from the YAML config — or delegate to a
+//! blockchain contract (see [`crate::chain::contracts::consensus_contract`]).
+
+pub mod majority;
+pub mod score;
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+
+/// One worker's proposal for the round.
+#[derive(Clone, Debug)]
+pub struct Proposal {
+    pub worker: String,
+    pub params: Vec<f32>,
+    /// SHA-256 of `params` — what actually goes on the wire in phase 2
+    /// ("Aggregated Parameter Voting") of the paper's consensus pipeline.
+    pub hash: String,
+}
+
+impl Proposal {
+    pub fn new(worker: impl Into<String>, params: Vec<f32>) -> Proposal {
+        let hash = crate::util::hash::hash_params(&params);
+        Proposal {
+            worker: worker.into(),
+            params,
+            hash,
+        }
+    }
+}
+
+/// Outcome of a consensus round.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    /// Index into the proposal list that won.
+    pub winner: usize,
+    /// Votes per proposal index (same order as input).
+    pub votes: Vec<usize>,
+    /// True when the vote was decisive (strict majority of workers).
+    pub decisive: bool,
+}
+
+/// Pluggable consensus algorithm (the paper's `MyConsensus` outline).
+pub trait Consensus {
+    fn name(&self) -> &'static str;
+
+    /// Select the next global model among worker proposals. `rng` is the
+    /// round-derived deterministic stream (tie-breaks must be reproducible).
+    fn decide(&self, proposals: &[Proposal], rng: &mut Rng) -> Result<Decision>;
+}
+
+/// Look up a consensus algorithm by config name.
+pub fn by_name(name: &str) -> Result<Box<dyn Consensus>> {
+    match name {
+        "majority_hash" | "fedrlchain" => Ok(Box::new(majority::MajorityHash)),
+        "score_vote" => Ok(Box::new(score::ScoreVote::default())),
+        "first" => Ok(Box::new(majority::FirstProposal)),
+        _ => anyhow::bail!("unknown consensus '{name}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves() {
+        assert_eq!(by_name("majority_hash").unwrap().name(), "majority_hash");
+        assert_eq!(by_name("fedrlchain").unwrap().name(), "majority_hash");
+        assert_eq!(by_name("score_vote").unwrap().name(), "score_vote");
+        assert!(by_name("paxos").is_err());
+    }
+
+    #[test]
+    fn proposal_hash_matches_params() {
+        let p = Proposal::new("w0", vec![1.0, 2.0]);
+        assert_eq!(p.hash, crate::util::hash::hash_params(&[1.0, 2.0]));
+    }
+}

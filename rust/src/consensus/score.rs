@@ -1,0 +1,74 @@
+//! Score-vote consensus: each proposal is scored by its distance to the
+//! coordinate-median of all proposals; the proposal closest to the robust
+//! center wins. A quorum-free alternative to majority-hash that also
+//! survives a 1:1 malicious split when the poison is far from the median.
+
+use anyhow::{bail, Result};
+
+use crate::aggregate::robust::coordinate_median;
+use crate::consensus::{Consensus, Decision, Proposal};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+#[derive(Default)]
+pub struct ScoreVote;
+
+impl Consensus for ScoreVote {
+    fn name(&self) -> &'static str {
+        "score_vote"
+    }
+
+    fn decide(&self, proposals: &[Proposal], _rng: &mut Rng) -> Result<Decision> {
+        if proposals.is_empty() {
+            bail!("consensus over zero proposals");
+        }
+        let refs: Vec<&[f32]> = proposals.iter().map(|p| p.params.as_slice()).collect();
+        let center = coordinate_median(&refs)?;
+        let mut best = (f64::INFINITY, 0usize);
+        let mut votes = vec![0usize; proposals.len()];
+        for (i, p) in proposals.iter().enumerate() {
+            let d = stats::l2_dist(&p.params, &center);
+            if d < best.0 {
+                best = (d, i);
+            }
+        }
+        votes[best.1] = proposals.len();
+        Ok(Decision {
+            winner: best.1,
+            votes,
+            decisive: true,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_proposal_nearest_median() {
+        let proposals = vec![
+            Proposal::new("mal", vec![50.0; 4]),
+            Proposal::new("h1", vec![1.0; 4]),
+            Proposal::new("h2", vec![1.2; 4]),
+        ];
+        let d = ScoreVote.decide(&proposals, &mut Rng::seed_from(0)).unwrap();
+        assert_ne!(d.winner, 0);
+    }
+
+    #[test]
+    fn two_proposals_prefers_less_extreme_is_stable() {
+        let proposals = vec![
+            Proposal::new("a", vec![0.0, 0.0]),
+            Proposal::new("b", vec![1.0, 1.0]),
+        ];
+        let d1 = ScoreVote.decide(&proposals, &mut Rng::seed_from(1)).unwrap();
+        let d2 = ScoreVote.decide(&proposals, &mut Rng::seed_from(2)).unwrap();
+        assert_eq!(d1.winner, d2.winner); // rng-independent
+    }
+
+    #[test]
+    fn empty_is_error() {
+        assert!(ScoreVote.decide(&[], &mut Rng::seed_from(0)).is_err());
+    }
+}

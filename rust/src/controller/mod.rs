@@ -1,0 +1,9 @@
+//! Logic Controller (paper §2.1 component 2 + §2.3): the synchronization
+//! state machine of Algorithm 1 — ProcessPhase / NodeStage signalling,
+//! stage barriers with timeouts, and fault injection.
+
+pub mod phases;
+pub mod sync;
+
+pub use phases::{NodeStage, ProcessPhase};
+pub use sync::{FaultPlan, LogicController};

@@ -1,0 +1,102 @@
+//! The two signal types of the paper's Algorithm 1.
+
+use std::fmt;
+
+/// What phase the FL *experiment* is in (Algorithm 1's `ProcessPhase`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProcessPhase {
+    /// 0 = "System Initializing"
+    Initializing,
+    /// 1 = "In Local Learning"
+    LocalLearning,
+    /// 2 = "In Model Aggregation"
+    ModelAggregation,
+}
+
+impl ProcessPhase {
+    pub fn code(&self) -> u8 {
+        match self {
+            ProcessPhase::Initializing => 0,
+            ProcessPhase::LocalLearning => 1,
+            ProcessPhase::ModelAggregation => 2,
+        }
+    }
+}
+
+impl fmt::Display for ProcessPhase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            ProcessPhase::Initializing => "System Initializing",
+            ProcessPhase::LocalLearning => "In Local Learning",
+            ProcessPhase::ModelAggregation => "In Model Aggregation",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// What stage a *node* is in (Algorithm 1's `NodeStage`).
+///
+/// Stage 3/4 read differently for clients and workers (paper §2.3):
+/// 3 = "Clients busy in Training" / "Workers busy in Aggregation",
+/// 4 = "Clients Waiting for Next Round" / "Aggregation Complete".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum NodeStage {
+    /// 0 = "Nodes not Ready"
+    NotReady,
+    /// 1 = "Nodes Ready for Job"
+    ReadyForJob,
+    /// 2 = "Nodes Ready with Dataset"
+    ReadyWithDataset,
+    /// 3 = busy (training / aggregating)
+    Busy,
+    /// 4 = done (waiting for next round / aggregation complete)
+    Done,
+}
+
+impl NodeStage {
+    pub fn code(&self) -> u8 {
+        match self {
+            NodeStage::NotReady => 0,
+            NodeStage::ReadyForJob => 1,
+            NodeStage::ReadyWithDataset => 2,
+            NodeStage::Busy => 3,
+            NodeStage::Done => 4,
+        }
+    }
+
+    pub fn describe(&self, is_client: bool) -> &'static str {
+        match (self, is_client) {
+            (NodeStage::NotReady, _) => "Nodes not Ready",
+            (NodeStage::ReadyForJob, _) => "Nodes Ready for Job",
+            (NodeStage::ReadyWithDataset, _) => "Nodes Ready with Dataset",
+            (NodeStage::Busy, true) => "Clients busy in Training",
+            (NodeStage::Busy, false) => "Workers busy in Aggregation",
+            (NodeStage::Done, true) => "Clients Waiting for Next Round",
+            (NodeStage::Done, false) => "Aggregation Complete",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_match_paper() {
+        assert_eq!(ProcessPhase::Initializing.code(), 0);
+        assert_eq!(ProcessPhase::LocalLearning.code(), 1);
+        assert_eq!(ProcessPhase::ModelAggregation.code(), 2);
+        assert_eq!(NodeStage::NotReady.code(), 0);
+        assert_eq!(NodeStage::Done.code(), 4);
+    }
+
+    #[test]
+    fn role_specific_descriptions() {
+        assert_eq!(NodeStage::Busy.describe(true), "Clients busy in Training");
+        assert_eq!(
+            NodeStage::Busy.describe(false),
+            "Workers busy in Aggregation"
+        );
+        assert_eq!(NodeStage::Done.describe(false), "Aggregation Complete");
+    }
+}

@@ -1,0 +1,254 @@
+//! Algorithm 1 — FLsim node synchronization.
+//!
+//! The controller tracks every node's `NodeStage` and the global
+//! `ProcessPhase`, enforces the stage barriers (`wait-until
+//! all_nodes_in_stage(s) ∨ timeout()`), and emits the paper's progress
+//! messages. Fault injection models stragglers/crashes: a faulted node never
+//! reaches the awaited stage, and the barrier resolves through the timeout
+//! arm with the surviving subset — exactly the fault-tolerance path of
+//! Algorithm 1 lines 28/36/43/50.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Result};
+
+use crate::controller::phases::{NodeStage, ProcessPhase};
+use crate::info;
+
+/// Which nodes fail (drop out) in which rounds.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    drops: BTreeSet<(String, u64)>,
+    /// Nodes dead from a given round onward (crash, not a transient drop).
+    crashes: BTreeMap<String, u64>,
+}
+
+impl FaultPlan {
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// `node` misses `round` (transient straggler).
+    pub fn drop_in_round(mut self, node: &str, round: u64) -> FaultPlan {
+        self.drops.insert((node.to_string(), round));
+        self
+    }
+
+    /// `node` is dead from `round` onward.
+    pub fn crash_from(mut self, node: &str, round: u64) -> FaultPlan {
+        self.crashes.insert(node.to_string(), round);
+        self
+    }
+
+    pub fn is_down(&self, node: &str, round: u64) -> bool {
+        self.drops.contains(&(node.to_string(), round))
+            || self
+                .crashes
+                .get(node)
+                .map(|&r| round >= r)
+                .unwrap_or(false)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.drops.is_empty() && self.crashes.is_empty()
+    }
+}
+
+/// The Logic Controller state machine.
+pub struct LogicController {
+    phase: ProcessPhase,
+    stages: BTreeMap<String, NodeStage>,
+    pub fault_plan: FaultPlan,
+    /// Whether barriers may resolve with a partial quorum (Algorithm 1's
+    /// `timeout()` arm). When `false`, a faulted node is a hard error.
+    pub allow_timeout: bool,
+    /// Emitted progress log (the paper's `emit` lines), kept for tests and
+    /// the dashboard.
+    pub emitted: Vec<String>,
+}
+
+impl LogicController {
+    pub fn new(nodes: &[String]) -> LogicController {
+        LogicController {
+            phase: ProcessPhase::Initializing,
+            stages: nodes
+                .iter()
+                .map(|n| (n.clone(), NodeStage::NotReady))
+                .collect(),
+            fault_plan: FaultPlan::none(),
+            allow_timeout: true,
+            emitted: Vec::new(),
+        }
+    }
+
+    pub fn phase(&self) -> ProcessPhase {
+        self.phase
+    }
+
+    pub fn set_phase(&mut self, phase: ProcessPhase) {
+        self.phase = phase;
+        self.emit(&format!("ProcessPhase <- {} ({})", phase.code(), phase));
+    }
+
+    pub fn stage_of(&self, node: &str) -> NodeStage {
+        self.stages
+            .get(node)
+            .copied()
+            .unwrap_or(NodeStage::NotReady)
+    }
+
+    pub fn update_stage(&mut self, node: &str, stage: NodeStage) -> Result<()> {
+        let Some(s) = self.stages.get_mut(node) else {
+            bail!("unknown node '{node}'");
+        };
+        *s = stage;
+        Ok(())
+    }
+
+    /// Reset a node set to a stage (start of each round).
+    pub fn reset_stages(&mut self, nodes: &[String], stage: NodeStage) {
+        for n in nodes {
+            if let Some(s) = self.stages.get_mut(n) {
+                *s = stage;
+            }
+        }
+    }
+
+    pub fn all_in_stage(&self, nodes: &[String], stage: NodeStage) -> bool {
+        nodes.iter().all(|n| self.stage_of(n) == stage)
+    }
+
+    /// Algorithm 1 barrier: wait until every node in `nodes` reaches
+    /// `stage`, tolerating faulted nodes via the timeout arm. Returns the
+    /// responsive subset (callers require ≥ `min_quorum` survivors —
+    /// Algorithm 1 line 50's `AggregatedParams >= 1`).
+    pub fn barrier(
+        &mut self,
+        nodes: &[String],
+        stage: NodeStage,
+        round: u64,
+        min_quorum: usize,
+    ) -> Result<Vec<String>> {
+        let mut present = Vec::new();
+        let mut missing = Vec::new();
+        for n in nodes {
+            if self.fault_plan.is_down(n, round) {
+                missing.push(n.clone());
+            } else {
+                // In-process nodes are synchronous: a live node has already
+                // been driven to the awaited stage by the orchestrator.
+                if self.stage_of(n) != stage {
+                    missing.push(n.clone());
+                } else {
+                    present.push(n.clone());
+                }
+            }
+        }
+        if !missing.is_empty() {
+            if !self.allow_timeout {
+                bail!("barrier(stage {stage:?}) deadlocked: missing {missing:?}");
+            }
+            self.emit(&format!(
+                "timeout(): proceeding without {} node(s): {missing:?}",
+                missing.len()
+            ));
+        }
+        if present.len() < min_quorum {
+            bail!(
+                "round {round}: quorum failure ({} < {min_quorum}) at stage {stage:?}",
+                present.len()
+            );
+        }
+        Ok(present)
+    }
+
+    pub fn emit(&mut self, msg: &str) {
+        info!("controller", "{msg}");
+        self.emitted.push(msg.to_string());
+    }
+
+    /// Which of `nodes` are alive this round (fault-plan filter).
+    pub fn alive<'a>(&self, nodes: &'a [String], round: u64) -> Vec<String> {
+        nodes
+            .iter()
+            .filter(|n| !self.fault_plan.is_down(n, round))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn stage_tracking_and_barrier() {
+        let ns = nodes(&["client_0", "client_1"]);
+        let mut lc = LogicController::new(&ns);
+        assert!(!lc.all_in_stage(&ns, NodeStage::ReadyForJob));
+        lc.update_stage("client_0", NodeStage::ReadyForJob).unwrap();
+        lc.update_stage("client_1", NodeStage::ReadyForJob).unwrap();
+        let present = lc.barrier(&ns, NodeStage::ReadyForJob, 1, 1).unwrap();
+        assert_eq!(present.len(), 2);
+    }
+
+    #[test]
+    fn faulted_node_resolves_via_timeout() {
+        let ns = nodes(&["client_0", "client_1", "client_2"]);
+        let mut lc = LogicController::new(&ns);
+        lc.fault_plan = FaultPlan::none().drop_in_round("client_1", 3);
+        for n in &ns {
+            lc.update_stage(n, NodeStage::Done).unwrap();
+        }
+        let present = lc.barrier(&ns, NodeStage::Done, 3, 1).unwrap();
+        assert_eq!(present, nodes(&["client_0", "client_2"]));
+        assert!(lc.emitted.iter().any(|m| m.contains("timeout()")));
+        // Other rounds unaffected.
+        let present = lc.barrier(&ns, NodeStage::Done, 4, 1).unwrap();
+        assert_eq!(present.len(), 3);
+    }
+
+    #[test]
+    fn crash_is_permanent() {
+        let plan = FaultPlan::none().crash_from("w", 5);
+        assert!(!plan.is_down("w", 4));
+        assert!(plan.is_down("w", 5));
+        assert!(plan.is_down("w", 50));
+    }
+
+    #[test]
+    fn quorum_failure_errors() {
+        let ns = nodes(&["worker_0"]);
+        let mut lc = LogicController::new(&ns);
+        lc.fault_plan = FaultPlan::none().drop_in_round("worker_0", 1);
+        assert!(lc.barrier(&ns, NodeStage::Done, 1, 1).is_err());
+    }
+
+    #[test]
+    fn no_timeout_mode_deadlocks_loudly() {
+        let ns = nodes(&["client_0"]);
+        let mut lc = LogicController::new(&ns);
+        lc.allow_timeout = false;
+        // Node never reaches the stage.
+        assert!(lc.barrier(&ns, NodeStage::Done, 1, 0).is_err());
+    }
+
+    #[test]
+    fn unknown_node_rejected() {
+        let mut lc = LogicController::new(&nodes(&["a"]));
+        assert!(lc.update_stage("ghost", NodeStage::Busy).is_err());
+    }
+
+    #[test]
+    fn phase_transitions_emit() {
+        let mut lc = LogicController::new(&nodes(&["a"]));
+        lc.set_phase(ProcessPhase::LocalLearning);
+        lc.set_phase(ProcessPhase::ModelAggregation);
+        assert_eq!(lc.phase(), ProcessPhase::ModelAggregation);
+        assert!(lc.emitted[0].contains("In Local Learning"));
+    }
+}

@@ -1,0 +1,167 @@
+//! In-memory dataset representation and job-facing dataset specification.
+
+use crate::util::rng::Rng;
+
+/// A labelled dataset held as a dense row-major feature matrix.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Per-example feature shape, e.g. `[32, 32, 3]` or `[784]`.
+    pub feature_shape: Vec<usize>,
+    /// `n * feature_len` features.
+    pub x: Vec<f32>,
+    /// `n` labels in `0..num_classes`.
+    pub y: Vec<i32>,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn feature_len(&self) -> usize {
+        self.feature_shape.iter().product()
+    }
+
+    /// Row-view of example `i`.
+    pub fn features(&self, i: usize) -> &[f32] {
+        let f = self.feature_len();
+        &self.x[i * f..(i + 1) * f]
+    }
+
+    /// Materialize a subset in index order.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let f = self.feature_len();
+        let mut x = Vec::with_capacity(idx.len() * f);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.features(i));
+            y.push(self.y[i]);
+        }
+        Dataset {
+            feature_shape: self.feature_shape.clone(),
+            x,
+            y,
+            num_classes: self.num_classes,
+        }
+    }
+
+    /// Deterministic train/test split (paper default 0.8/0.2).
+    pub fn split(&self, train_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        let n_train = ((self.len() as f64) * train_frac).round() as usize;
+        let (tr, te) = idx.split_at(n_train.min(self.len()));
+        (self.subset(tr), self.subset(te))
+    }
+
+    /// Per-class index lists.
+    pub fn indices_by_class(&self) -> Vec<Vec<usize>> {
+        let mut by = vec![Vec::new(); self.num_classes];
+        for (i, &c) in self.y.iter().enumerate() {
+            by[c as usize].push(i);
+        }
+        by
+    }
+
+    /// Raw byte size (for distributor accounting).
+    pub fn byte_size(&self) -> u64 {
+        (self.x.len() * 4 + self.y.len() * 4) as u64
+    }
+}
+
+/// Which dataset a job wants and how it is distributed — section (a) of the
+/// paper's job configuration (Fig 2a).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetSpec {
+    /// "cifar10_synth" or "mnist_synth".
+    pub name: String,
+    /// Total examples to generate.
+    pub n: usize,
+    /// Train fraction (rest is the global test set).
+    pub train_frac: f64,
+    /// Partitioning scheme across clients.
+    pub distribution: Distribution,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Distribution {
+    /// Uniform IID split.
+    Iid,
+    /// Label-Dirichlet non-IID split (the paper's default, alpha = 0.5).
+    Dirichlet { alpha: f64 },
+    /// Pathological shard split (each client sees `shards_per_client` label
+    /// shards, à la McMahan et al.).
+    Shards { shards_per_client: usize },
+}
+
+impl DatasetSpec {
+    pub fn cifar_dirichlet(n: usize, alpha: f64) -> DatasetSpec {
+        DatasetSpec {
+            name: "cifar10_synth".into(),
+            n,
+            train_frac: 0.8,
+            distribution: Distribution::Dirichlet { alpha },
+        }
+    }
+
+    pub fn mnist_iid(n: usize) -> DatasetSpec {
+        DatasetSpec {
+            name: "mnist_synth".into(),
+            n,
+            train_frac: 0.8,
+            distribution: Distribution::Iid,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn subset_and_views() {
+        let ds = synthetic::mnist_synth(50, 42);
+        let sub = ds.subset(&[0, 5, 7]);
+        assert_eq!(sub.len(), 3);
+        assert_eq!(sub.features(1), ds.features(5));
+        assert_eq!(sub.y[2], ds.y[7]);
+    }
+
+    #[test]
+    fn split_partitions_everything() {
+        let ds = synthetic::mnist_synth(100, 1);
+        let mut rng = Rng::seed_from(9);
+        let (tr, te) = ds.split(0.8, &mut rng);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+        assert_eq!(tr.byte_size() + te.byte_size(), ds.byte_size());
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let ds = synthetic::mnist_synth(60, 2);
+        let (a, _) = ds.split(0.5, &mut Rng::seed_from(3));
+        let (b, _) = ds.split(0.5, &mut Rng::seed_from(3));
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    fn indices_by_class_cover_all() {
+        let ds = synthetic::mnist_synth(200, 5);
+        let by = ds.indices_by_class();
+        let total: usize = by.iter().map(Vec::len).sum();
+        assert_eq!(total, ds.len());
+        for (c, idxs) in by.iter().enumerate() {
+            for &i in idxs {
+                assert_eq!(ds.y[i] as usize, c);
+            }
+        }
+    }
+}

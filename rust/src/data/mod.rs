@@ -1,0 +1,11 @@
+//! Dataset substrate: synthetic dataset generators, IID / non-IID
+//! partitioners, and the Dataset Distributor (paper §2.1 component 3).
+
+pub mod dataset;
+pub mod distributor;
+pub mod partition;
+pub mod synthetic;
+
+pub use dataset::{Dataset, DatasetSpec};
+pub use distributor::{ChunkIndex, Distributor};
+pub use partition::Partition;

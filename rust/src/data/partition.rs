@@ -1,0 +1,225 @@
+//! Client partitioners: IID, label-Dirichlet (the paper's non-iid default,
+//! alpha = 0.5) and pathological label shards.
+
+use crate::data::dataset::{Dataset, Distribution};
+use crate::util::rng::Rng;
+
+/// Result of partitioning a training set across clients.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// `assignments[c]` = indices of the training set owned by client `c`.
+    pub assignments: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn build(
+        ds: &Dataset,
+        n_clients: usize,
+        dist: &Distribution,
+        rng: &mut Rng,
+    ) -> Partition {
+        assert!(n_clients > 0);
+        let assignments = match dist {
+            Distribution::Iid => iid(ds.len(), n_clients, rng),
+            Distribution::Dirichlet { alpha } => dirichlet(ds, n_clients, *alpha, rng),
+            Distribution::Shards { shards_per_client } => {
+                shards(ds, n_clients, *shards_per_client, rng)
+            }
+        };
+        Partition { assignments }
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.assignments.len()
+    }
+
+    pub fn total_examples(&self) -> usize {
+        self.assignments.iter().map(Vec::len).sum()
+    }
+
+    /// Per-client label histogram (for non-IID diagnostics / dashboards).
+    pub fn label_histogram(&self, ds: &Dataset) -> Vec<Vec<usize>> {
+        self.assignments
+            .iter()
+            .map(|idxs| {
+                let mut h = vec![0usize; ds.num_classes];
+                for &i in idxs {
+                    h[ds.y[i] as usize] += 1;
+                }
+                h
+            })
+            .collect()
+    }
+}
+
+fn iid(n: usize, n_clients: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut out = vec![Vec::new(); n_clients];
+    for (i, &e) in idx.iter().enumerate() {
+        out[i % n_clients].push(e);
+    }
+    out
+}
+
+/// Label-Dirichlet partition: for each class, split its examples across
+/// clients with proportions ~ Dir(alpha). Low alpha => highly skewed.
+fn dirichlet(ds: &Dataset, n_clients: usize, alpha: f64, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); n_clients];
+    for mut class_idx in ds.indices_by_class() {
+        rng.shuffle(&mut class_idx);
+        let props = rng.dirichlet(alpha, n_clients);
+        // Convert proportions to contiguous cut points.
+        let n = class_idx.len();
+        let mut start = 0usize;
+        let mut acc = 0f64;
+        for (c, &p) in props.iter().enumerate() {
+            acc += p;
+            let end = if c + 1 == n_clients {
+                n
+            } else {
+                (acc * n as f64).round() as usize
+            }
+            .clamp(start, n);
+            out[c].extend_from_slice(&class_idx[start..end]);
+            start = end;
+        }
+    }
+    // Guarantee every client trains on something (the paper's controller
+    // would otherwise stall waiting for an empty client).
+    rebalance_empty(&mut out, rng);
+    out
+}
+
+/// Pathological shards: sort by label, cut into `n_clients * k` shards,
+/// deal k shards to each client.
+fn shards(ds: &Dataset, n_clients: usize, k: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..ds.len()).collect();
+    idx.sort_by_key(|&i| (ds.y[i], i));
+    let n_shards = n_clients * k.max(1);
+    let shard_size = ds.len().div_ceil(n_shards);
+    let mut shard_ids: Vec<usize> = (0..n_shards).collect();
+    rng.shuffle(&mut shard_ids);
+    let mut out = vec![Vec::new(); n_clients];
+    for (slot, &sid) in shard_ids.iter().enumerate() {
+        let lo = (sid * shard_size).min(ds.len());
+        let hi = ((sid + 1) * shard_size).min(ds.len());
+        out[slot % n_clients].extend_from_slice(&idx[lo..hi]);
+    }
+    rebalance_empty(&mut out, rng);
+    out
+}
+
+fn rebalance_empty(out: &mut [Vec<usize>], rng: &mut Rng) {
+    loop {
+        let Some(empty) = out.iter().position(Vec::is_empty) else {
+            return;
+        };
+        // Steal half from the largest client.
+        let (donor, _) = out
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| v.len())
+            .unwrap();
+        if out[donor].len() < 2 {
+            // Nothing to redistribute; give up (degenerate tiny dataset).
+            return;
+        }
+        let mut stolen = out[donor].split_off(out[donor].len() / 2);
+        rng.shuffle(&mut stolen);
+        out[empty] = stolen;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn check_is_partition(p: &Partition, n: usize) {
+        let mut seen = vec![false; n];
+        for a in &p.assignments {
+            for &i in a {
+                assert!(!seen[i], "index {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "not all indices assigned");
+    }
+
+    #[test]
+    fn iid_balanced_partition() {
+        let ds = synthetic::mnist_synth(103, 1);
+        let p = Partition::build(&ds, 10, &Distribution::Iid, &mut Rng::seed_from(4));
+        check_is_partition(&p, 103);
+        for a in &p.assignments {
+            assert!(a.len() == 10 || a.len() == 11);
+        }
+    }
+
+    #[test]
+    fn dirichlet_is_partition_and_skewed() {
+        let ds = synthetic::mnist_synth(1000, 2);
+        let p = Partition::build(
+            &ds,
+            10,
+            &Distribution::Dirichlet { alpha: 0.5 },
+            &mut Rng::seed_from(5),
+        );
+        check_is_partition(&p, 1000);
+        // Non-IID: client label histograms should differ substantially from
+        // uniform for at least some clients.
+        let hist = p.label_histogram(&ds);
+        let mut max_frac: f64 = 0.0;
+        for h in &hist {
+            let tot: usize = h.iter().sum();
+            if tot == 0 {
+                continue;
+            }
+            let mx = *h.iter().max().unwrap() as f64 / tot as f64;
+            max_frac = max_frac.max(mx);
+        }
+        assert!(max_frac > 0.25, "alpha=0.5 should skew labels, got {max_frac}");
+    }
+
+    #[test]
+    fn dirichlet_no_empty_clients() {
+        let ds = synthetic::mnist_synth(200, 3);
+        for seed in 0..5 {
+            let p = Partition::build(
+                &ds,
+                20,
+                &Distribution::Dirichlet { alpha: 0.1 },
+                &mut Rng::seed_from(seed),
+            );
+            assert!(p.assignments.iter().all(|a| !a.is_empty()), "seed {seed}");
+            check_is_partition(&p, 200);
+        }
+    }
+
+    #[test]
+    fn shards_limits_labels_per_client() {
+        let ds = synthetic::mnist_synth(1000, 4);
+        let p = Partition::build(
+            &ds,
+            10,
+            &Distribution::Shards { shards_per_client: 2 },
+            &mut Rng::seed_from(6),
+        );
+        check_is_partition(&p, 1000);
+        let hist = p.label_histogram(&ds);
+        for h in &hist {
+            let distinct = h.iter().filter(|&&c| c > 0).count();
+            assert!(distinct <= 4, "client saw {distinct} labels");
+        }
+    }
+
+    #[test]
+    fn deterministic_partitions() {
+        let ds = synthetic::mnist_synth(300, 5);
+        let d = Distribution::Dirichlet { alpha: 0.5 };
+        let a = Partition::build(&ds, 7, &d, &mut Rng::seed_from(9));
+        let b = Partition::build(&ds, 7, &d, &mut Rng::seed_from(9));
+        assert_eq!(a.assignments, b.assignments);
+    }
+}

@@ -1,0 +1,60 @@
+//! Fig 10 (RQ3): multi-worker aggregation under model poisoning, with the
+//! majority-hash consensus of Chowdhury et al. [13]. Scenarios: 1M-0H,
+//! 1M-1H, 1M-2H, 1M-3H (M = malicious worker, H = honest worker).
+//!
+//! Expected shape: honest > 50% ⇒ poisoning nullified; 1M-1H ⇒ the coin-flip
+//! tie makes the trajectory fluctuate; 1M-0H ⇒ training destroyed.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::job::JobConfig;
+use crate::experiments::{dataset_n_override, rounds_override, save_report};
+use crate::metrics::dashboard;
+use crate::metrics::report::RunReport;
+use crate::orchestrator::Orchestrator;
+use crate::runtime::pjrt::Runtime;
+
+/// (label, total workers) — worker_0 is always the malicious one.
+pub const SCENARIOS: [(&str, usize); 4] =
+    [("1M-0H", 1), ("1M-1H", 2), ("1M-2H", 3), ("1M-3H", 4)];
+
+pub fn jobs() -> Vec<JobConfig> {
+    SCENARIOS
+        .iter()
+        .map(|(label, n_workers)| {
+            let mut j = JobConfig::default_cnn("fedavg");
+            j.name = label.to_string();
+            j.n_workers = *n_workers;
+            j.rounds = rounds_override(30);
+            j.dataset.n = dataset_n_override(5000);
+            j.consensus.runnable = "majority_hash".into();
+            j.consensus.malicious_workers = vec!["worker_0".into()];
+            j
+        })
+        .collect()
+}
+
+pub fn run(rt: Rc<Runtime>) -> Result<Vec<RunReport>> {
+    let orch = Orchestrator::new(rt);
+    let mut reports = Vec::new();
+    for job in jobs() {
+        let (report, _secs) =
+            crate::bench::time_once(&format!("fig10/{}", job.name), || orch.run(&job));
+        let report = report?;
+        println!("{}", dashboard::run_line(&report));
+        save_report("fig10", &report)?;
+        reports.push(report);
+    }
+    println!();
+    println!(
+        "{}",
+        dashboard::comparison("Fig 10: malicious-worker scenarios", &reports)
+    );
+    println!(
+        "{}",
+        dashboard::round_table(&reports, |r| r.accuracy_series(), "Fig 10: Accuracy")
+    );
+    Ok(reports)
+}

@@ -1,0 +1,60 @@
+//! Fig 11 (RQ5): client-server vs hierarchical vs decentralized topologies.
+//! Expected shape: similar accuracy everywhere; hierarchical slightly higher
+//! loss; hierarchical/decentralized higher CPU+memory; decentralized the
+//! most network bandwidth.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::job::JobConfig;
+use crate::experiments::{dataset_n_override, rounds_override, save_report};
+use crate::metrics::dashboard;
+use crate::metrics::report::RunReport;
+use crate::orchestrator::Orchestrator;
+use crate::runtime::pjrt::Runtime;
+use crate::topology::TopologyKind;
+
+pub fn jobs() -> Vec<JobConfig> {
+    let mut out = Vec::new();
+
+    // (1) client-server: FedAvg [1].
+    let mut cs = JobConfig::default_cnn("fedavg");
+    cs.name = "client_server".into();
+    out.push(cs);
+
+    // (2) hierarchical: leaf-cluster aggregation + root merge ([26]'s
+    //     topology; 3 clusters over 10 clients).
+    let mut h = JobConfig::default_cnn("fedavg");
+    h.name = "hierarchical".into();
+    h.topology = TopologyKind::Hierarchical;
+    h.n_workers = 3;
+    out.push(h);
+
+    // (3) decentralized: Fedstellar [24] on a full mesh.
+    let mut d = JobConfig::default_cnn("fedstellar");
+    d.name = "decentralized".into();
+    out.push(d);
+
+    for j in &mut out {
+        j.rounds = rounds_override(30);
+        j.dataset.n = dataset_n_override(5000);
+    }
+    out
+}
+
+pub fn run(rt: Rc<Runtime>) -> Result<Vec<RunReport>> {
+    let orch = Orchestrator::new(rt);
+    let mut reports = Vec::new();
+    for job in jobs() {
+        let (report, _secs) =
+            crate::bench::time_once(&format!("fig11/{}", job.name), || orch.run(&job));
+        let report = report?;
+        println!("{}", dashboard::run_line(&report));
+        save_report("fig11", &report)?;
+        reports.push(report);
+    }
+    println!();
+    println!("{}", dashboard::comparison("Fig 11: topologies", &reports));
+    Ok(reports)
+}

@@ -1,0 +1,50 @@
+//! Fig 12 (RQ7): large-scale experiments — MNIST logistic regression with
+//! 100 / 250 / 500 / 1000 clients. Expected shape: accuracy identical
+//! across client counts; network bandwidth and total time grow with the
+//! number of clients.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::job::JobConfig;
+use crate::experiments::{rounds_override, save_report};
+use crate::metrics::dashboard;
+use crate::metrics::report::RunReport;
+use crate::orchestrator::Orchestrator;
+use crate::runtime::pjrt::Runtime;
+
+pub const CLIENT_COUNTS: [usize; 4] = [100, 250, 500, 1000];
+
+pub fn jobs() -> Vec<JobConfig> {
+    CLIENT_COUNTS
+        .iter()
+        .map(|&n| {
+            let mut j = JobConfig::scale_logreg(n);
+            j.rounds = rounds_override(10);
+            // Own knob (not FLSIM_DATASET_N): the scale run must keep a
+            // realistic per-client shard even in quick passes.
+            j.dataset.n = std::env::var("FLSIM_SCALE_DATASET_N")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(60_000);
+            j
+        })
+        .collect()
+}
+
+pub fn run(rt: Rc<Runtime>) -> Result<Vec<RunReport>> {
+    let orch = Orchestrator::new(rt);
+    let mut reports = Vec::new();
+    for job in jobs() {
+        let (report, _secs) =
+            crate::bench::time_once(&format!("fig12/{}", job.name), || orch.run(&job));
+        let report = report?;
+        println!("{}", dashboard::run_line(&report));
+        save_report("fig12", &report)?;
+        reports.push(report);
+    }
+    println!();
+    println!("{}", dashboard::comparison("Fig 12: scalability", &reports));
+    Ok(reports)
+}

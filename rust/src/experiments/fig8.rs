@@ -1,0 +1,62 @@
+//! Fig 8 (RQ1): comparison among seven state-of-the-art FL techniques on
+//! the paper's standard setting (CIFAR-10-like, Dirichlet α=0.5, 10
+//! clients, batch 64, 30 rounds): accuracy, loss, wall time, CPU/memory,
+//! network bandwidth.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::job::JobConfig;
+use crate::experiments::{dataset_n_override, rounds_override, save_report};
+use crate::metrics::dashboard;
+use crate::metrics::report::RunReport;
+use crate::orchestrator::Orchestrator;
+use crate::runtime::pjrt::Runtime;
+
+pub const STRATEGIES: [&str; 7] = [
+    "fedavg",
+    "fedavgm",
+    "scaffold",
+    "moon",
+    "dpfl",
+    "flhc",
+    "fedstellar",
+];
+
+pub fn jobs() -> Vec<JobConfig> {
+    STRATEGIES
+        .iter()
+        .map(|s| {
+            let mut j = JobConfig::default_cnn(s);
+            j.rounds = rounds_override(30);
+            j.dataset.n = dataset_n_override(5000);
+            j.name = s.to_string();
+            j
+        })
+        .collect()
+}
+
+pub fn run(rt: Rc<Runtime>) -> Result<Vec<RunReport>> {
+    let orch = Orchestrator::new(rt);
+    let mut reports = Vec::new();
+    for job in jobs() {
+        let (report, _secs) =
+            crate::bench::time_once(&format!("fig8/{}", job.name), || orch.run(&job));
+        let report = report?;
+        println!("{}", dashboard::run_line(&report));
+        save_report("fig8", &report)?;
+        reports.push(report);
+    }
+    println!();
+    println!("{}", dashboard::comparison("Fig 8: FL techniques", &reports));
+    println!(
+        "{}",
+        dashboard::round_table(&reports, |r| r.accuracy_series(), "Fig 8a: Accuracy")
+    );
+    println!(
+        "{}",
+        dashboard::round_table(&reports, |r| r.loss_series(), "Fig 8b: Loss")
+    );
+    Ok(reports)
+}

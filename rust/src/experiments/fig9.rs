@@ -1,0 +1,52 @@
+//! Fig 9 (RQ2): ML-library agnosticism. The paper runs PyTorch /
+//! TensorFlow / Scikit-Learn implementations unchanged; here the analogous
+//! property is backend-agnosticism — the same FedAvg job over the `cnn`
+//! ("torch"), `cnn_v2` ("tensorflow") and `mlp` ("sklearn") manifest
+//! backends (DESIGN.md §2).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::job::JobConfig;
+use crate::experiments::{dataset_n_override, rounds_override, save_report};
+use crate::metrics::dashboard;
+use crate::metrics::report::RunReport;
+use crate::orchestrator::Orchestrator;
+use crate::runtime::pjrt::Runtime;
+
+pub const BACKENDS: [(&str, &str); 3] = [
+    ("cnn", "pytorch-analog"),
+    ("cnn_v2", "tensorflow-analog"),
+    ("mlp", "sklearn-analog"),
+];
+
+pub fn jobs() -> Vec<JobConfig> {
+    BACKENDS
+        .iter()
+        .map(|(backend, label)| {
+            let mut j = JobConfig::default_cnn("fedavg");
+            j.backend = backend.to_string();
+            j.rounds = rounds_override(30);
+            j.dataset.n = dataset_n_override(5000);
+            j.name = label.to_string();
+            j
+        })
+        .collect()
+}
+
+pub fn run(rt: Rc<Runtime>) -> Result<Vec<RunReport>> {
+    let orch = Orchestrator::new(rt);
+    let mut reports = Vec::new();
+    for job in jobs() {
+        let (report, _secs) =
+            crate::bench::time_once(&format!("fig9/{}", job.name), || orch.run(&job));
+        let report = report?;
+        println!("{}", dashboard::run_line(&report));
+        save_report("fig9", &report)?;
+        reports.push(report);
+    }
+    println!();
+    println!("{}", dashboard::comparison("Fig 9: ML library backends", &reports));
+    Ok(reports)
+}

@@ -1,0 +1,63 @@
+//! One module per paper table/figure (DESIGN.md §6). Shared by the CLI,
+//! the examples and the bench targets.
+
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig8;
+pub mod fig9;
+pub mod tables12;
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::runtime::pjrt::Runtime;
+
+/// Rounds override for quick runs: `FLSIM_ROUNDS=N` (full paper setting
+/// otherwise).
+pub fn rounds_override(default: u64) -> u64 {
+    std::env::var("FLSIM_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Dataset-size override for quick runs: `FLSIM_DATASET_N=N`.
+pub fn dataset_n_override(default: usize) -> usize {
+    std::env::var("FLSIM_DATASET_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Persist a run report under `results/<experiment>/<label>.{csv,json}`.
+pub fn save_report(experiment: &str, report: &crate::metrics::report::RunReport) -> Result<()> {
+    let dir = std::path::PathBuf::from("results").join(experiment);
+    std::fs::create_dir_all(&dir)?;
+    report.save_csv(dir.join(format!("{}.csv", report.label)))?;
+    report.save_json(dir.join(format!("{}.json", report.label)))?;
+    Ok(())
+}
+
+/// Run an experiment by figure/table id.
+pub fn run_by_name(rt: Rc<Runtime>, which: &str) -> Result<()> {
+    match which {
+        "fig8" => fig8::run(rt).map(|_| ()),
+        "fig9" => fig9::run(rt).map(|_| ()),
+        "fig10" => fig10::run(rt).map(|_| ()),
+        "fig11" => fig11::run(rt).map(|_| ()),
+        "tab1" | "tab2" | "tables" => tables12::run(rt).map(|_| ()),
+        "fig12" => fig12::run(rt).map(|_| ()),
+        "all" => {
+            fig8::run(rt.clone())?;
+            fig9::run(rt.clone())?;
+            fig10::run(rt.clone())?;
+            fig11::run(rt.clone())?;
+            tables12::run(rt.clone())?;
+            fig12::run(rt)?;
+            Ok(())
+        }
+        _ => anyhow::bail!("unknown experiment '{which}' (fig8|fig9|fig10|fig11|tables|fig12|all)"),
+    }
+}

@@ -1,0 +1,105 @@
+//! Tables 1-2 (RQ6): reproducibility across hardware configurations.
+//!
+//! Three trials on each of four simulated hardware profiles (floating-point
+//! reduction orders — DESIGN.md §3). Expected shape, exactly as the paper's
+//! tables: trials on the same profile are **bitwise identical**; different
+//! profiles drift by well under 1% absolute accuracy by round 10.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::aggregate::mean::ReductionOrder;
+use crate::config::job::JobConfig;
+use crate::experiments::{dataset_n_override, rounds_override, save_report};
+use crate::metrics::dashboard;
+use crate::metrics::report::RunReport;
+use crate::orchestrator::Orchestrator;
+use crate::runtime::pjrt::Runtime;
+
+pub const TRIALS: usize = 3;
+
+pub fn job_for(profile: ReductionOrder) -> JobConfig {
+    let mut j = JobConfig::default_cnn("fedavg");
+    j.name = profile.profile_name().replace(' ', "_");
+    j.hw_profile = profile;
+    j.rounds = rounds_override(10);
+    j.dataset.n = dataset_n_override(5000);
+    j
+}
+
+pub fn run(rt: Rc<Runtime>) -> Result<Vec<RunReport>> {
+    let orch = Orchestrator::new(rt);
+    let mut all: Vec<RunReport> = Vec::new();
+
+    for trial in 1..=TRIALS {
+        for profile in ReductionOrder::ALL {
+            let job = job_for(profile);
+            let label = format!("{} (trial {trial})", profile.profile_name());
+            let (report, _secs) = crate::bench::time_once(&label, || orch.run(&job));
+            let mut report = report?;
+            report.label = label;
+            save_report("tables12", &report)?;
+            all.push(report);
+        }
+    }
+
+    println!(
+        "{}",
+        dashboard::round_table(&all, |r| r.accuracy_series(), "Table 1: Accuracy")
+    );
+    println!(
+        "{}",
+        dashboard::round_table(&all, |r| r.loss_series(), "Table 2: Loss")
+    );
+
+    verify_reproducibility(&all)?;
+    Ok(all)
+}
+
+/// The tables' two claims, enforced: (1) same profile ⇒ identical trials;
+/// (2) cross-profile drift small but (generally) nonzero.
+pub fn verify_reproducibility(all: &[RunReport]) -> Result<()> {
+    let per_trial = ReductionOrder::ALL.len();
+    if all.len() < 2 * per_trial {
+        bail!("need at least two trials to verify reproducibility");
+    }
+    for (i, profile) in ReductionOrder::ALL.iter().enumerate() {
+        let first = &all[i];
+        for t in 1..(all.len() / per_trial) {
+            let other = &all[t * per_trial + i];
+            for (a, b) in first.rounds.iter().zip(&other.rounds) {
+                if a.test_accuracy != b.test_accuracy || a.test_loss != b.test_loss {
+                    bail!(
+                        "{}: trial results differ at round {} ({} vs {})",
+                        profile.profile_name(),
+                        a.round,
+                        a.test_accuracy,
+                        b.test_accuracy
+                    );
+                }
+                if a.model_hash != b.model_hash {
+                    bail!(
+                        "{}: model hash differs at round {}",
+                        profile.profile_name(),
+                        a.round
+                    );
+                }
+            }
+        }
+    }
+    // Cross-profile drift bounded (paper: ≤ ~0.6% at round 10).
+    let base = all[0].final_accuracy();
+    for r in &all[1..per_trial] {
+        let drift = (r.final_accuracy() - base).abs();
+        if drift > 0.05 {
+            bail!(
+                "profile {} drifted {drift:.4} from {} — too large",
+                r.label,
+                all[0].label
+            );
+        }
+    }
+    println!("reproducibility verified: identical trials per profile; cross-profile drift bounded");
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! Key-Value Store (paper §2.1 component 5): a pub-sub broker through which
+//! nodes share model parameters and auxiliary state, plus the network
+//! simulator that prices every transfer for the bandwidth metrics.
+
+pub mod netsim;
+pub mod store;
+
+pub use netsim::{LinkModel, NetSim};
+pub use store::{KvStore, Message, Payload};

@@ -1,0 +1,136 @@
+//! Network simulator: prices transfers with per-link bandwidth/latency so
+//! the simulation can report transfer *times* (not only byte volumes) per
+//! topology — decentralized P2P pays more link crossings than client-server
+//! (paper Fig 11e).
+
+use std::collections::BTreeMap;
+
+/// A point-to-point link model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkModel {
+    /// One-way latency in milliseconds.
+    pub latency_ms: f64,
+    /// Bandwidth in megabytes per second.
+    pub bandwidth_mbps: f64,
+}
+
+impl LinkModel {
+    pub const LAN: LinkModel = LinkModel {
+        latency_ms: 0.5,
+        bandwidth_mbps: 125.0, // ~1 Gbit/s
+    };
+    pub const WAN: LinkModel = LinkModel {
+        latency_ms: 25.0,
+        bandwidth_mbps: 12.5, // ~100 Mbit/s
+    };
+    pub const EDGE: LinkModel = LinkModel {
+        latency_ms: 60.0,
+        bandwidth_mbps: 2.5, // ~20 Mbit/s uplink
+    };
+
+    /// Seconds to move `bytes` over this link.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        self.latency_ms / 1e3 + bytes as f64 / (self.bandwidth_mbps * 1e6)
+    }
+}
+
+/// Accumulates simulated transfer time per node and globally.
+#[derive(Clone, Debug)]
+pub struct NetSim {
+    default_link: LinkModel,
+    /// Optional per-edge overrides keyed by "src->dst".
+    overrides: BTreeMap<String, LinkModel>,
+    per_node_secs: BTreeMap<String, f64>,
+    total_secs: f64,
+    total_bytes: u64,
+}
+
+impl NetSim {
+    pub fn new(default_link: LinkModel) -> NetSim {
+        NetSim {
+            default_link,
+            overrides: BTreeMap::new(),
+            per_node_secs: BTreeMap::new(),
+            total_secs: 0.0,
+            total_bytes: 0,
+        }
+    }
+
+    pub fn set_link(&mut self, src: &str, dst: &str, link: LinkModel) {
+        self.overrides.insert(format!("{src}->{dst}"), link);
+    }
+
+    fn link(&self, src: &str, dst: &str) -> LinkModel {
+        self.overrides
+            .get(&format!("{src}->{dst}"))
+            .copied()
+            .unwrap_or(self.default_link)
+    }
+
+    /// Record a transfer; returns simulated seconds it took.
+    pub fn transfer(&mut self, src: &str, dst: &str, bytes: u64) -> f64 {
+        let secs = self.link(src, dst).transfer_secs(bytes);
+        *self.per_node_secs.entry(src.to_string()).or_insert(0.0) += secs;
+        *self.per_node_secs.entry(dst.to_string()).or_insert(0.0) += secs;
+        self.total_secs += secs;
+        self.total_bytes += bytes;
+        secs
+    }
+
+    pub fn node_secs(&self, node: &str) -> f64 {
+        self.per_node_secs.get(node).copied().unwrap_or(0.0)
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.total_secs
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+}
+
+impl Default for NetSim {
+    fn default() -> Self {
+        NetSim::new(LinkModel::LAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_formula() {
+        let l = LinkModel {
+            latency_ms: 10.0,
+            bandwidth_mbps: 1.0,
+        };
+        // 10ms + 1MB / 1MBps = 0.01 + 1.0
+        assert!((l.transfer_secs(1_000_000) - 1.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accumulates_per_node() {
+        let mut net = NetSim::new(LinkModel::LAN);
+        let s1 = net.transfer("a", "b", 1_000_000);
+        let s2 = net.transfer("a", "c", 2_000_000);
+        assert!(net.node_secs("a") > net.node_secs("b"));
+        assert!((net.total_secs() - (s1 + s2)).abs() < 1e-12);
+        assert_eq!(net.total_bytes(), 3_000_000);
+    }
+
+    #[test]
+    fn per_edge_override() {
+        let mut net = NetSim::new(LinkModel::LAN);
+        net.set_link("a", "b", LinkModel::EDGE);
+        let slow = net.transfer("a", "b", 1_000_000);
+        let fast = net.transfer("b", "a", 1_000_000);
+        assert!(slow > fast);
+    }
+
+    #[test]
+    fn edge_slower_than_lan() {
+        assert!(LinkModel::EDGE.transfer_secs(1 << 20) > LinkModel::LAN.transfer_secs(1 << 20));
+    }
+}

@@ -1,0 +1,229 @@
+//! In-process pub-sub key-value store.
+//!
+//! Nodes publish their state (model parameters, control variates, votes,
+//! hashes) under topic keys; subscribers fetch them. The store is the single
+//! communication fabric of the simulation — every byte that would cross the
+//! network in a real FLsim deployment passes through `publish`/`fetch` and
+//! is metered per node, which is what the paper's bandwidth plots report.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// What a node can publish.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// A flat model-parameter vector (or any other f32 state).
+    Params(Vec<f32>),
+    /// An arbitrary small string (hash votes, signals).
+    Text(String),
+    /// A scalar (e.g. example counts for weighted aggregation).
+    Scalar(f64),
+}
+
+impl Payload {
+    /// Wire size in bytes (f32 = 4B; text = utf-8 len; scalar = 8B) plus a
+    /// fixed 64-byte envelope (topic, sender, round — the REST/JSON framing
+    /// the paper's deployment would pay, flat-rated).
+    pub fn wire_bytes(&self) -> u64 {
+        64 + match self {
+            Payload::Params(p) => (p.len() * 4) as u64,
+            Payload::Text(s) => s.len() as u64,
+            Payload::Scalar(_) => 8,
+        }
+    }
+
+    pub fn as_params(&self) -> Result<&[f32]> {
+        match self {
+            Payload::Params(p) => Ok(p),
+            _ => Err(anyhow!("payload is not Params")),
+        }
+    }
+
+    pub fn as_text(&self) -> Result<&str> {
+        match self {
+            Payload::Text(t) => Ok(t),
+            _ => Err(anyhow!("payload is not Text")),
+        }
+    }
+
+    pub fn as_scalar(&self) -> Result<f64> {
+        match self {
+            Payload::Scalar(s) => Ok(*s),
+            _ => Err(anyhow!("payload is not Scalar")),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Message {
+    pub topic: String,
+    pub sender: String,
+    pub round: u64,
+    pub payload: Payload,
+}
+
+/// Per-node traffic accounting.
+#[derive(Clone, Debug, Default)]
+pub struct Traffic {
+    pub bytes_out: u64,
+    pub bytes_in: u64,
+    pub msgs_out: u64,
+    pub msgs_in: u64,
+}
+
+/// The broker. Single-threaded by design: the logic controller serializes
+/// node actions, so the store needs no locking (determinism, RQ6).
+#[derive(Debug, Default)]
+pub struct KvStore {
+    topics: BTreeMap<String, Vec<Message>>,
+    traffic: BTreeMap<String, Traffic>,
+    total_bytes: u64,
+}
+
+impl KvStore {
+    pub fn new() -> KvStore {
+        KvStore::default()
+    }
+
+    /// Publish a message; charged to the sender's egress.
+    pub fn publish(&mut self, topic: &str, sender: &str, round: u64, payload: Payload) {
+        let bytes = payload.wire_bytes();
+        let t = self.traffic.entry(sender.to_string()).or_default();
+        t.bytes_out += bytes;
+        t.msgs_out += 1;
+        self.total_bytes += bytes;
+        self.topics.entry(topic.to_string()).or_default().push(Message {
+            topic: topic.to_string(),
+            sender: sender.to_string(),
+            round,
+            payload,
+        });
+    }
+
+    /// Fetch the latest message on a topic (charged to the reader's ingress).
+    pub fn fetch_latest(&mut self, topic: &str, reader: &str) -> Result<Message> {
+        let msg = self
+            .topics
+            .get(topic)
+            .and_then(|v| v.last())
+            .cloned()
+            .ok_or_else(|| anyhow!("no message on topic '{topic}'"))?;
+        self.charge_read(reader, &msg);
+        Ok(msg)
+    }
+
+    /// Fetch all messages on a topic for a given round.
+    pub fn fetch_round(&mut self, topic: &str, round: u64, reader: &str) -> Vec<Message> {
+        let msgs: Vec<Message> = self
+            .topics
+            .get(topic)
+            .map(|v| v.iter().filter(|m| m.round == round).cloned().collect())
+            .unwrap_or_default();
+        for m in &msgs {
+            self.charge_read(reader, m);
+        }
+        msgs
+    }
+
+    /// Peek without traffic accounting (controller-internal bookkeeping).
+    pub fn peek_round(&self, topic: &str, round: u64) -> usize {
+        self.topics
+            .get(topic)
+            .map(|v| v.iter().filter(|m| m.round == round).count())
+            .unwrap_or(0)
+    }
+
+    pub fn topic_len(&self, topic: &str) -> usize {
+        self.topics.get(topic).map(Vec::len).unwrap_or(0)
+    }
+
+    /// Drop messages older than `keep_from_round` (bounded memory during
+    /// long simulations; the paper's §6 "memory management" future work).
+    pub fn truncate_before(&mut self, keep_from_round: u64) {
+        for v in self.topics.values_mut() {
+            v.retain(|m| m.round >= keep_from_round);
+        }
+    }
+
+    fn charge_read(&mut self, reader: &str, msg: &Message) {
+        let bytes = msg.payload.wire_bytes();
+        let t = self.traffic.entry(reader.to_string()).or_default();
+        t.bytes_in += bytes;
+        t.msgs_in += 1;
+        self.total_bytes += bytes;
+    }
+
+    pub fn traffic(&self, node: &str) -> Traffic {
+        self.traffic.get(node).cloned().unwrap_or_default()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    /// Sum of all node egress+ingress since `mark` (caller keeps the mark).
+    pub fn bytes_since(&self, mark: u64) -> u64 {
+        self.total_bytes - mark
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_fetch_roundtrip() {
+        let mut kv = KvStore::new();
+        kv.publish("global_model", "worker_0", 1, Payload::Params(vec![1.0, 2.0]));
+        let m = kv.fetch_latest("global_model", "client_3").unwrap();
+        assert_eq!(m.payload.as_params().unwrap(), &[1.0, 2.0]);
+        assert_eq!(m.sender, "worker_0");
+    }
+
+    #[test]
+    fn fetch_round_filters() {
+        let mut kv = KvStore::new();
+        kv.publish("local/c0", "c0", 1, Payload::Scalar(1.0));
+        kv.publish("local/c0", "c0", 2, Payload::Scalar(2.0));
+        kv.publish("local/c0", "c0", 2, Payload::Scalar(3.0));
+        assert_eq!(kv.fetch_round("local/c0", 2, "w0").len(), 2);
+        assert_eq!(kv.peek_round("local/c0", 1), 1);
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let mut kv = KvStore::new();
+        kv.publish("t", "alice", 0, Payload::Params(vec![0.0; 100]));
+        let _ = kv.fetch_latest("t", "bob").unwrap();
+        let a = kv.traffic("alice");
+        let b = kv.traffic("bob");
+        assert_eq!(a.bytes_out, 64 + 400);
+        assert_eq!(a.bytes_in, 0);
+        assert_eq!(b.bytes_in, 64 + 400);
+        assert_eq!(kv.total_bytes(), 2 * (64 + 400));
+    }
+
+    #[test]
+    fn missing_topic_errors() {
+        let mut kv = KvStore::new();
+        assert!(kv.fetch_latest("nope", "x").is_err());
+    }
+
+    #[test]
+    fn truncate_bounds_memory() {
+        let mut kv = KvStore::new();
+        for r in 0..10 {
+            kv.publish("t", "a", r, Payload::Scalar(r as f64));
+        }
+        kv.truncate_before(8);
+        assert_eq!(kv.topic_len("t"), 2);
+    }
+
+    #[test]
+    fn payload_accessors() {
+        assert!(Payload::Text("x".into()).as_params().is_err());
+        assert_eq!(Payload::Scalar(4.0).as_scalar().unwrap(), 4.0);
+        assert_eq!(Payload::Text("hi".into()).wire_bytes(), 66);
+    }
+}

@@ -1,0 +1,46 @@
+//! # FLsim — a modular, library-agnostic federated-learning simulation framework
+//!
+//! Rust reproduction of *"FLsim: A Modular and Library-Agnostic Simulation
+//! Framework for Federated Learning"* (Mukherjee, Halder, Chandra — CS.DC 2025),
+//! built as a three-layer stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: job orchestrator, logic
+//!   controller (Algorithm 1), dataset distributor, pub-sub key-value store,
+//!   topologies, FL strategies, aggregation, multi-worker consensus, pluggable
+//!   blockchain, metrics/performance logger.
+//! * **L2 (JAX, build-time)** — model forward/backward + optimizer steps and
+//!   evaluation, AOT-lowered to HLO text in `artifacts/`.
+//! * **L1 (Pallas, build-time)** — the tiled matmul kernel on the dense-layer
+//!   hot path of every model, verified against a pure-jnp oracle.
+//!
+//! Python never runs at simulation time: [`runtime`] loads the AOT artifacts
+//! through PJRT (the `xla` crate) and everything else is pure Rust.
+
+pub mod aggregate;
+pub mod bench;
+pub mod chain;
+pub mod config;
+pub mod consensus;
+pub mod controller;
+pub mod data;
+pub mod experiments;
+pub mod kvstore;
+pub mod metrics;
+pub mod node;
+pub mod orchestrator;
+pub mod runtime;
+pub mod strategy;
+pub mod topology;
+pub mod util;
+
+/// Convenient re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::config::job::JobConfig;
+    pub use crate::data::dataset::DatasetSpec;
+    pub use crate::metrics::report::RunReport;
+    pub use crate::orchestrator::Orchestrator;
+    pub use crate::runtime::pjrt::Runtime;
+    pub use crate::strategy::StrategyKind;
+    pub use crate::topology::TopologyKind;
+    pub use crate::util::rng::Rng;
+}

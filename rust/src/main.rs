@@ -1,0 +1,190 @@
+//! `flsim` — the FLsim launcher CLI.
+//!
+//! ```text
+//! flsim run --config configs/fedavg_cifar.yaml [--artifacts DIR]
+//! flsim experiment fig8|fig9|fig10|fig11|tables|fig12|all
+//! flsim preset fedavg|scaffold|... [--rounds N] [--clients N]
+//! flsim list
+//! flsim info
+//! ```
+//!
+//! (Argument parsing is hand-rolled: the offline image has no clap.)
+
+
+use anyhow::{anyhow, bail, Result};
+
+use flsim::config::job::JobConfig;
+use flsim::experiments;
+use flsim::metrics::dashboard;
+use flsim::orchestrator::Orchestrator;
+use flsim::runtime::pjrt::Runtime;
+use flsim::strategy::StrategyKind;
+use flsim::util::logging;
+
+fn main() {
+    logging::init_from_env();
+    if let Err(e) = run() {
+        eprintln!("flsim: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::BTreeMap::new();
+    let mut it = std::env::args().skip(1).peekable();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                it.next().unwrap()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), val);
+        } else {
+            positional.push(a);
+        }
+    }
+    Args { positional, flags }
+}
+
+fn run() -> Result<()> {
+    let args = parse_args();
+    let artifacts = args
+        .flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string());
+
+    match args.positional.first().map(String::as_str) {
+        Some("run") => {
+            let config = args
+                .flags
+                .get("config")
+                .ok_or_else(|| anyhow!("run: missing --config <file.yaml>"))?;
+            let mut job = JobConfig::from_yaml_file(config)?;
+            apply_overrides(&mut job, &args)?;
+            let rt = Runtime::shared(&artifacts)?;
+            let report = Orchestrator::new(rt).run(&job)?;
+            println!("{}", dashboard::run_line(&report));
+            println!(
+                "{}",
+                dashboard::round_table(
+                    std::slice::from_ref(&report),
+                    |r| r.accuracy_series(),
+                    "Accuracy"
+                )
+            );
+            experiments::save_report("runs", &report)?;
+            Ok(())
+        }
+        Some("preset") => {
+            let name = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("preset: missing strategy name"))?;
+            let mut job = JobConfig::default_cnn(name);
+            apply_overrides(&mut job, &args)?;
+            let rt = Runtime::shared(&artifacts)?;
+            let report = Orchestrator::new(rt).run(&job)?;
+            println!("{}", dashboard::run_line(&report));
+            experiments::save_report("runs", &report)?;
+            Ok(())
+        }
+        Some("experiment") => {
+            let which = args
+                .positional
+                .get(1)
+                .map(String::as_str)
+                .unwrap_or("all");
+            let rt = Runtime::shared(&artifacts)?;
+            experiments::run_by_name(rt, which)
+        }
+        Some("list") => {
+            println!("strategies:");
+            for s in [
+                "fedavg", "fedavgm", "fedprox", "scaffold", "moon", "dpfl", "flhc",
+                "fedstellar",
+            ] {
+                let k = StrategyKind::parse(s, &flsim::util::yaml::Yaml::Null)?;
+                println!(
+                    "  {s:<12} mode={:?} artifact={}",
+                    k.mode(),
+                    k.required_artifact()
+                );
+            }
+            println!("topologies: client_server hierarchical fully_connected ring");
+            println!("consensus:  majority_hash score_vote first");
+            println!("chains:     ethereum fabric");
+            Ok(())
+        }
+        Some("info") => {
+            let rt = Runtime::shared(&artifacts)?;
+            println!("artifact dir: {artifacts}");
+            println!("jax version:  {}", rt.manifest.jax_version);
+            println!(
+                "batches:      train={} eval={}",
+                rt.manifest.train_batch, rt.manifest.eval_batch
+            );
+            println!("backends:");
+            for (name, b) in &rt.manifest.backends {
+                println!(
+                    "  {name:<8} params={:<8} input={:?} pallas={} artifacts={:?}",
+                    b.param_count,
+                    b.input_shape,
+                    b.use_pallas,
+                    b.artifacts.keys().collect::<Vec<_>>()
+                );
+            }
+            Ok(())
+        }
+        _ => {
+            println!(
+                "usage: flsim <run|preset|experiment|list|info> [options]\n\
+                 \n\
+                 flsim run --config <job.yaml> [--artifacts DIR] [--rounds N]\n\
+                 flsim preset <strategy> [--rounds N] [--clients N] [--seed N]\n\
+                 flsim experiment <fig8|fig9|fig10|fig11|tables|fig12|all>\n\
+                 flsim list\n\
+                 flsim info"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn apply_overrides(job: &mut JobConfig, args: &Args) -> Result<()> {
+    if let Some(r) = args.flags.get("rounds") {
+        job.rounds = r.parse().map_err(|_| anyhow!("bad --rounds"))?;
+    }
+    if let Some(c) = args.flags.get("clients") {
+        job.n_clients = c.parse().map_err(|_| anyhow!("bad --clients"))?;
+    }
+    if let Some(w) = args.flags.get("workers") {
+        job.n_workers = w.parse().map_err(|_| anyhow!("bad --workers"))?;
+    }
+    if let Some(s) = args.flags.get("seed") {
+        job.seed = s.parse().map_err(|_| anyhow!("bad --seed"))?;
+    }
+    if let Some(n) = args.flags.get("dataset-n") {
+        job.dataset.n = n.parse().map_err(|_| anyhow!("bad --dataset-n"))?;
+    }
+    if args.flags.contains_key("chain") {
+        job.chain.enabled = true;
+        if let Some(p) = args.flags.get("chain") {
+            if p != "true" {
+                job.chain.platform = p.clone();
+            }
+        }
+    }
+    job.validate()?;
+    if job.rounds == 0 {
+        bail!("rounds must be positive");
+    }
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! ASCII FL-Dashboard: sparkline learning curves + summary tables rendered
+//! to the terminal (the paper ships a web dashboard; the information content
+//! — learning trajectory and resource profile at a glance — is the same).
+
+use crate::metrics::report::RunReport;
+
+const TICKS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Render a unicode sparkline of a series.
+pub fn sparkline(xs: &[f64]) -> String {
+    if xs.is_empty() {
+        return String::new();
+    }
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    xs.iter()
+        .map(|&x| {
+            let t = ((x - lo) / span * (TICKS.len() - 1) as f64).round() as usize;
+            TICKS[t.min(TICKS.len() - 1)]
+        })
+        .collect()
+}
+
+/// One-line summary of a run.
+pub fn run_line(r: &RunReport) -> String {
+    format!(
+        "{:<22} acc {:<5.3} {} | loss {:<6.3} | {:>7.1}s | {:>8} KiB",
+        r.label,
+        r.final_accuracy(),
+        sparkline(&r.accuracy_series()),
+        r.final_loss(),
+        r.total_wall_secs(),
+        r.total_net_bytes() / 1024,
+    )
+}
+
+/// Multi-run comparison table (a paper-figure in ASCII form).
+pub fn comparison(title: &str, runs: &[RunReport]) -> String {
+    let mut out = format!("== {title} ==\n");
+    out.push_str(&format!(
+        "{:<22} {:>6} {:>6} {:>9} {:>9} {:>10} {:>8}\n",
+        "run", "acc", "loss", "time(s)", "cpu(%)", "mem(MiB)", "net(KiB)"
+    ));
+    for r in runs {
+        let cpu = crate::util::stats::mean(
+            &r.rounds.iter().map(|m| m.cpu_pct).collect::<Vec<_>>(),
+        );
+        let mem = r.rounds.last().map(|m| m.rss_mib).unwrap_or(0.0);
+        out.push_str(&format!(
+            "{:<22} {:>6.3} {:>6.3} {:>9.1} {:>9.1} {:>10.1} {:>8}\n",
+            r.label,
+            r.final_accuracy(),
+            r.final_loss(),
+            r.total_wall_secs(),
+            cpu,
+            mem,
+            r.total_net_bytes() / 1024
+        ));
+    }
+    out
+}
+
+/// Round-by-round accuracy table (paper Tables 1-2 shape).
+pub fn round_table(runs: &[RunReport], metric: fn(&RunReport) -> Vec<f64>, name: &str) -> String {
+    let max_rounds = runs.iter().map(|r| r.rounds.len()).max().unwrap_or(0);
+    let mut out = format!("{name} at FL round:\n{:<22}", "run");
+    for i in 1..=max_rounds {
+        out.push_str(&format!(" {i:>7}"));
+    }
+    out.push('\n');
+    for r in runs {
+        out.push_str(&format!("{:<22}", r.label));
+        for v in metric(r) {
+            out.push_str(&format!(" {v:>7.4}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::report::RoundMetrics;
+
+    fn run(label: &str, accs: &[f64]) -> RunReport {
+        RunReport {
+            label: label.into(),
+            rounds: accs
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| RoundMetrics {
+                    round: i as u64 + 1,
+                    test_accuracy: a,
+                    test_loss: 1.0 - a,
+                    ..Default::default()
+                })
+                .collect(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let s = sparkline(&[0.0, 0.5, 1.0]);
+        assert_eq!(s.chars().count(), 3);
+        let cs: Vec<char> = s.chars().collect();
+        assert_eq!(cs[0], '▁');
+        assert_eq!(cs[2], '█');
+    }
+
+    #[test]
+    fn sparkline_flat_and_empty() {
+        assert_eq!(sparkline(&[]), "");
+        assert_eq!(sparkline(&[1.0, 1.0]).chars().count(), 2);
+    }
+
+    #[test]
+    fn comparison_contains_rows() {
+        let runs = vec![run("fedavg", &[0.4, 0.6]), run("scaffold", &[0.5, 0.7])];
+        let t = comparison("fig8", &runs);
+        assert!(t.contains("fedavg"));
+        assert!(t.contains("scaffold"));
+        assert!(t.lines().count() >= 4);
+    }
+
+    #[test]
+    fn round_table_grid() {
+        let runs = vec![run("a", &[0.1, 0.2, 0.3])];
+        let t = round_table(&runs, |r| r.accuracy_series(), "Accuracy");
+        assert!(t.contains("0.1000"));
+        assert!(t.contains("0.3000"));
+    }
+}

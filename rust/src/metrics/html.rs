@@ -1,0 +1,187 @@
+//! HTML FL-Dashboard: a self-contained report (inline SVG charts, zero
+//! external assets) mirroring the paper's web dashboard — learning curves,
+//! resource profiles and bandwidth per run, side by side.
+
+use crate::metrics::report::RunReport;
+
+const PALETTE: [&str; 8] = [
+    "#1f77b4", "#d62728", "#2ca02c", "#9467bd", "#ff7f0e", "#8c564b",
+    "#e377c2", "#17becf",
+];
+
+/// Render an SVG line chart of one series per run.
+pub fn svg_chart(
+    title: &str,
+    runs: &[RunReport],
+    series_of: impl Fn(&RunReport) -> Vec<f64>,
+) -> String {
+    let (w, h, pad) = (460.0, 260.0, 40.0);
+    let all: Vec<Vec<f64>> = runs.iter().map(&series_of).collect();
+    let max_len = all.iter().map(Vec::len).max().unwrap_or(0).max(2);
+    let lo = all
+        .iter()
+        .flatten()
+        .cloned()
+        .fold(f64::INFINITY, f64::min)
+        .min(0.0);
+    let hi = all
+        .iter()
+        .flatten()
+        .cloned()
+        .fold(f64::NEG_INFINITY, f64::max)
+        .max(lo + 1e-9);
+
+    let x = |i: usize| pad + (w - 2.0 * pad) * i as f64 / (max_len - 1) as f64;
+    let y = |v: f64| h - pad - (h - 2.0 * pad) * (v - lo) / (hi - lo);
+
+    let mut s = format!(
+        r##"<svg width="{w}" height="{h}" xmlns="http://www.w3.org/2000/svg">
+<text x="{}" y="18" text-anchor="middle" font-size="13" font-family="sans-serif">{title}</text>
+<line x1="{pad}" y1="{}" x2="{}" y2="{}" stroke="#888"/>
+<line x1="{pad}" y1="{pad}" x2="{pad}" y2="{}" stroke="#888"/>
+<text x="8" y="{}" font-size="10" font-family="sans-serif">{:.2}</text>
+<text x="8" y="{}" font-size="10" font-family="sans-serif">{:.2}</text>
+"##,
+        w / 2.0,
+        h - pad,
+        w - pad,
+        h - pad,
+        h - pad,
+        pad + 4.0,
+        hi,
+        h - pad,
+        lo,
+    );
+    for (ri, series) in all.iter().enumerate() {
+        if series.is_empty() {
+            continue;
+        }
+        let color = PALETTE[ri % PALETTE.len()];
+        let pts: Vec<String> = series
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| format!("{:.1},{:.1}", x(i), y(v)))
+            .collect();
+        s.push_str(&format!(
+            r##"<polyline fill="none" stroke="{color}" stroke-width="1.8" points="{}"/>
+"##,
+            pts.join(" ")
+        ));
+        s.push_str(&format!(
+            r##"<text x="{}" y="{}" font-size="10" fill="{color}" font-family="sans-serif">{}</text>
+"##,
+            w - pad + 4.0,
+            y(*series.last().unwrap()),
+            escape(&runs[ri].label)
+        ));
+    }
+    s.push_str("</svg>\n");
+    s
+}
+
+/// Full report page for a set of runs (one experiment).
+pub fn render_report(title: &str, runs: &[RunReport]) -> String {
+    let mut html = format!(
+        "<!doctype html><html><head><meta charset=\"utf-8\">\
+         <title>{t}</title>\
+         <style>body{{font-family:sans-serif;margin:24px}} \
+         table{{border-collapse:collapse}} td,th{{border:1px solid #ccc;\
+         padding:4px 10px;font-size:13px}} .charts{{display:flex;\
+         flex-wrap:wrap;gap:12px}}</style></head><body><h1>{t}</h1>\n",
+        t = escape(title)
+    );
+
+    html.push_str("<table><tr><th>run</th><th>strategy</th><th>topology</th>\
+                   <th>backend</th><th>final acc</th><th>final loss</th>\
+                   <th>time (s)</th><th>net (KiB)</th></tr>\n");
+    for r in runs {
+        html.push_str(&format!(
+            "<tr><td>{}</td><td>{}</td><td>{}</td><td>{}</td>\
+             <td>{:.4}</td><td>{:.4}</td><td>{:.1}</td><td>{}</td></tr>\n",
+            escape(&r.label),
+            escape(&r.strategy),
+            escape(&r.topology),
+            escape(&r.backend),
+            r.final_accuracy(),
+            r.final_loss(),
+            r.total_wall_secs(),
+            r.total_net_bytes() / 1024
+        ));
+    }
+    html.push_str("</table>\n<div class=\"charts\">\n");
+
+    html.push_str(&svg_chart("Test accuracy", runs, |r| r.accuracy_series()));
+    html.push_str(&svg_chart("Test loss", runs, |r| r.loss_series()));
+    html.push_str(&svg_chart("Round wall time (s)", runs, |r| {
+        r.rounds.iter().map(|m| m.wall_secs).collect()
+    }));
+    html.push_str(&svg_chart("Network bytes / round (KiB)", runs, |r| {
+        r.rounds.iter().map(|m| m.net_bytes as f64 / 1024.0).collect()
+    }));
+    html.push_str(&svg_chart("Memory (MiB)", runs, |r| {
+        r.rounds.iter().map(|m| m.rss_mib).collect()
+    }));
+    html.push_str(&svg_chart("CPU (%)", runs, |r| {
+        r.rounds.iter().map(|m| m.cpu_pct).collect()
+    }));
+
+    html.push_str("</div></body></html>\n");
+    html
+}
+
+fn escape(s: &str) -> String {
+    s.replace('&', "&amp;")
+        .replace('<', "&lt;")
+        .replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::report::RoundMetrics;
+
+    fn run(label: &str, n: usize) -> RunReport {
+        RunReport {
+            label: label.into(),
+            strategy: "fedavg".into(),
+            rounds: (1..=n)
+                .map(|i| RoundMetrics {
+                    round: i as u64,
+                    test_accuracy: i as f64 / n as f64,
+                    test_loss: 1.0 / i as f64,
+                    wall_secs: 1.0,
+                    net_bytes: 1024 * i as u64,
+                    rss_mib: 100.0,
+                    cpu_pct: 90.0,
+                    ..Default::default()
+                })
+                .collect(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn svg_has_one_polyline_per_run() {
+        let runs = vec![run("a", 5), run("b", 5)];
+        let svg = svg_chart("Accuracy", &runs, |r| r.accuracy_series());
+        assert_eq!(svg.matches("<polyline").count(), 2);
+        assert!(svg.contains("Accuracy"));
+        assert!(svg.starts_with("<svg"));
+    }
+
+    #[test]
+    fn report_is_self_contained_html() {
+        let runs = vec![run("x<&y", 3)];
+        let html = render_report("Fig 8", &runs);
+        assert!(html.starts_with("<!doctype html>"));
+        assert!(html.contains("x&lt;&amp;y")); // escaped label
+        assert!(!html.contains("http://") || html.contains("www.w3.org")); // only the SVG ns
+        assert_eq!(html.matches("<svg").count(), 6);
+    }
+
+    #[test]
+    fn empty_series_does_not_panic() {
+        let runs = vec![RunReport::default()];
+        let _ = render_report("empty", &runs);
+    }
+}

@@ -1,0 +1,9 @@
+//! Performance Logger & FL-Dashboard (paper §2.1 component 6): per-round
+//! model metrics + resource usage, exports, and an ASCII dashboard.
+
+pub mod dashboard;
+pub mod html;
+pub mod report;
+pub mod resources;
+
+pub use report::{RoundMetrics, RunReport};

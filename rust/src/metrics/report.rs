@@ -1,0 +1,213 @@
+//! Per-round metrics collection and run reports (accuracy/loss/time/CPU/
+//! memory/bandwidth — the exact series the paper's evaluation figures plot),
+//! with CSV and JSON export.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Everything the performance logger records for one FL round.
+#[derive(Clone, Debug, Default)]
+pub struct RoundMetrics {
+    pub round: u64,
+    pub test_accuracy: f64,
+    pub test_loss: f64,
+    /// Mean of clients' local training losses this round.
+    pub train_loss: f64,
+    /// Wall-clock seconds the round took (real time on this host).
+    pub wall_secs: f64,
+    /// CPU utilisation % during the round.
+    pub cpu_pct: f64,
+    /// Resident memory at round end (MiB).
+    pub rss_mib: f64,
+    /// Bytes through the KV store this round.
+    pub net_bytes: u64,
+    /// Simulated on-wire seconds this round (NetSim).
+    pub sim_net_secs: f64,
+    /// Global-model parameter hash (provenance / reproducibility).
+    pub model_hash: String,
+}
+
+/// A complete run: configuration echo + per-round series.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub label: String,
+    pub strategy: String,
+    pub topology: String,
+    pub backend: String,
+    pub n_clients: usize,
+    pub n_workers: usize,
+    pub seed: u64,
+    pub rounds: Vec<RoundMetrics>,
+}
+
+impl RunReport {
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds.last().map(|r| r.test_accuracy).unwrap_or(0.0)
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|r| r.test_accuracy)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.rounds.last().map(|r| r.test_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_wall_secs(&self) -> f64 {
+        self.rounds.iter().map(|r| r.wall_secs).sum()
+    }
+
+    pub fn total_net_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.net_bytes).sum()
+    }
+
+    pub fn accuracy_series(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.test_accuracy).collect()
+    }
+
+    pub fn loss_series(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.test_loss).collect()
+    }
+
+    /// CSV export (one row per round).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "round,test_accuracy,test_loss,train_loss,wall_secs,cpu_pct,rss_mib,net_bytes,sim_net_secs,model_hash\n",
+        );
+        for r in &self.rounds {
+            s.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{:.4},{:.1},{:.1},{},{:.4},{}\n",
+                r.round,
+                r.test_accuracy,
+                r.test_loss,
+                r.train_loss,
+                r.wall_secs,
+                r.cpu_pct,
+                r.rss_mib,
+                r.net_bytes,
+                r.sim_net_secs,
+                r.model_hash
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::from(self.label.as_str())),
+            ("strategy", Json::from(self.strategy.as_str())),
+            ("topology", Json::from(self.topology.as_str())),
+            ("backend", Json::from(self.backend.as_str())),
+            ("n_clients", Json::from(self.n_clients)),
+            ("n_workers", Json::from(self.n_workers)),
+            ("seed", Json::from(self.seed as usize)),
+            (
+                "rounds",
+                Json::Arr(
+                    self.rounds
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("round", Json::from(r.round as usize)),
+                                ("test_accuracy", Json::from(r.test_accuracy)),
+                                ("test_loss", Json::from(r.test_loss)),
+                                ("train_loss", Json::from(r.train_loss)),
+                                ("wall_secs", Json::from(r.wall_secs)),
+                                ("cpu_pct", Json::from(r.cpu_pct)),
+                                ("rss_mib", Json::from(r.rss_mib)),
+                                ("net_bytes", Json::from(r.net_bytes as usize)),
+                                ("sim_net_secs", Json::from(r.sim_net_secs)),
+                                ("model_hash", Json::from(r.model_hash.as_str())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_csv())
+            .with_context(|| format!("writing {:?}", path.as_ref()))
+    }
+
+    pub fn save_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_string())
+            .with_context(|| format!("writing {:?}", path.as_ref()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunReport {
+        RunReport {
+            label: "t".into(),
+            strategy: "fedavg".into(),
+            topology: "client_server".into(),
+            backend: "cnn".into(),
+            n_clients: 10,
+            n_workers: 1,
+            seed: 42,
+            rounds: vec![
+                RoundMetrics {
+                    round: 1,
+                    test_accuracy: 0.4,
+                    test_loss: 1.6,
+                    net_bytes: 100,
+                    wall_secs: 1.0,
+                    ..Default::default()
+                },
+                RoundMetrics {
+                    round: 2,
+                    test_accuracy: 0.55,
+                    test_loss: 1.2,
+                    net_bytes: 150,
+                    wall_secs: 2.0,
+                    ..Default::default()
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = sample();
+        assert_eq!(r.final_accuracy(), 0.55);
+        assert_eq!(r.best_accuracy(), 0.55);
+        assert_eq!(r.total_net_bytes(), 250);
+        assert!((r.total_wall_secs() - 3.0).abs() < 1e-12);
+        assert_eq!(r.accuracy_series(), vec![0.4, 0.55]);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = sample().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("round,test_accuracy"));
+        assert!(lines[1].starts_with("1,0.400000"));
+    }
+
+    #[test]
+    fn json_roundtrip_parses() {
+        let j = sample().to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("strategy").unwrap().as_str(), Some("fedavg"));
+        assert_eq!(parsed.get("rounds").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn empty_report_defaults() {
+        let r = RunReport::default();
+        assert_eq!(r.final_accuracy(), 0.0);
+        assert!(r.final_loss().is_nan());
+    }
+}

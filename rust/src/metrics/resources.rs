@@ -1,0 +1,87 @@
+//! Process resource probes: CPU time and resident memory, read from the OS
+//! (getrusage + /proc/self/statm) — the "resource usage" series of the
+//! paper's Figures 8/9/11.
+
+/// A point-in-time resource snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResourceSnapshot {
+    /// User+system CPU seconds consumed so far.
+    pub cpu_secs: f64,
+    /// Resident set size in MiB.
+    pub rss_mib: f64,
+}
+
+pub fn snapshot() -> ResourceSnapshot {
+    ResourceSnapshot {
+        cpu_secs: cpu_secs(),
+        rss_mib: rss_mib(),
+    }
+}
+
+fn cpu_secs() -> f64 {
+    // SAFETY: plain libc call with an out-param struct.
+    unsafe {
+        let mut ru: libc::rusage = std::mem::zeroed();
+        if libc::getrusage(libc::RUSAGE_SELF, &mut ru) != 0 {
+            return 0.0;
+        }
+        let tv = |t: libc::timeval| t.tv_sec as f64 + t.tv_usec as f64 / 1e6;
+        tv(ru.ru_utime) + tv(ru.ru_stime)
+    }
+}
+
+fn rss_mib() -> f64 {
+    let Ok(statm) = std::fs::read_to_string("/proc/self/statm") else {
+        return 0.0;
+    };
+    let Some(resident_pages) = statm
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<f64>().ok())
+    else {
+        return 0.0;
+    };
+    let page = unsafe { libc::sysconf(libc::_SC_PAGESIZE) } as f64;
+    resident_pages * page / (1024.0 * 1024.0)
+}
+
+/// CPU utilisation (%) between two snapshots over `wall_secs`.
+pub fn cpu_util_pct(before: ResourceSnapshot, after: ResourceSnapshot, wall_secs: f64) -> f64 {
+    if wall_secs <= 0.0 {
+        return 0.0;
+    }
+    100.0 * (after.cpu_secs - before.cpu_secs).max(0.0) / wall_secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_sane() {
+        let s = snapshot();
+        assert!(s.cpu_secs >= 0.0);
+        assert!(s.rss_mib > 1.0, "rss {} MiB", s.rss_mib);
+    }
+
+    #[test]
+    fn cpu_advances_under_load() {
+        let a = snapshot();
+        // Busy-spin some real work.
+        let mut acc = 0u64;
+        for i in 0..8_000_000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        std::hint::black_box(acc);
+        let b = snapshot();
+        assert!(b.cpu_secs >= a.cpu_secs);
+    }
+
+    #[test]
+    fn util_pct() {
+        let a = ResourceSnapshot { cpu_secs: 1.0, rss_mib: 0.0 };
+        let b = ResourceSnapshot { cpu_secs: 2.0, rss_mib: 0.0 };
+        assert!((cpu_util_pct(a, b, 2.0) - 50.0).abs() < 1e-9);
+        assert_eq!(cpu_util_pct(a, b, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Client / Worker node runtime (paper §2.1 component 4).
+//!
+//! Nodes are in-process actors driven by the Logic Controller: clients hold
+//! their dataset shard (pre-uploaded as PJRT literals) and per-strategy
+//! state; workers hold their aggregation role and an optional malicious
+//! behaviour (for the Fig 10 poisoning experiments).
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::controller::phases::NodeStage;
+use crate::data::dataset::Dataset;
+use crate::runtime::backend::ModelBackend;
+use crate::strategy::ctx::ClientState;
+use crate::util::rng::Rng;
+
+/// A client node: local data + strategy state.
+pub struct ClientNode {
+    pub name: String,
+    pub stage: NodeStage,
+    pub n_examples: usize,
+    /// Pre-uploaded training batches.
+    pub batches: Vec<(Literal, Literal)>,
+    pub state: ClientState,
+    /// Decentralized mode: the peer's own current model.
+    pub local_model: Option<Vec<f32>>,
+}
+
+impl ClientNode {
+    /// Build a client from its downloaded dataset chunk: fixed-size batches
+    /// in a seed-derived order (wrap-around fill when the shard is smaller
+    /// than one batch, so tiny non-IID shards still train).
+    pub fn from_chunk(
+        name: &str,
+        chunk: &Dataset,
+        backend: &ModelBackend,
+        rng: &mut Rng,
+    ) -> Result<ClientNode> {
+        let bs = backend.train_batch;
+        let n = chunk.len();
+        assert!(n > 0, "client {name} received an empty chunk");
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+
+        let n_batches = (n / bs).max(1);
+        let f = chunk.feature_len();
+        let mut batches = Vec::with_capacity(n_batches);
+        for b in 0..n_batches {
+            let mut x = Vec::with_capacity(bs * f);
+            let mut y = Vec::with_capacity(bs);
+            for k in 0..bs {
+                let idx = order[(b * bs + k) % n];
+                x.extend_from_slice(chunk.features(idx));
+                y.push(chunk.y[idx]);
+            }
+            batches.push(backend.batch_lits(&x, &y)?);
+        }
+        Ok(ClientNode {
+            name: name.to_string(),
+            stage: NodeStage::NotReady,
+            n_examples: n,
+            batches,
+            state: ClientState::default(),
+            local_model: None,
+        })
+    }
+}
+
+/// Worker behaviour: honest, or a model-poisoning attacker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerBehavior {
+    Honest,
+    /// Scales the aggregate by a negative factor and injects noise — the
+    /// classic sign-flip poisoning attack of the Fig 10 scenario.
+    Malicious,
+}
+
+/// A worker/aggregator node.
+pub struct WorkerNode {
+    pub name: String,
+    pub stage: NodeStage,
+    pub behavior: WorkerBehavior,
+}
+
+impl WorkerNode {
+    pub fn new(name: &str, behavior: WorkerBehavior) -> WorkerNode {
+        WorkerNode {
+            name: name.to_string(),
+            stage: NodeStage::NotReady,
+            behavior,
+        }
+    }
+
+    /// Apply the worker's behaviour to its aggregate before proposing.
+    pub fn transform_aggregate(&self, mut params: Vec<f32>, rng: &mut Rng) -> Vec<f32> {
+        match self.behavior {
+            WorkerBehavior::Honest => params,
+            WorkerBehavior::Malicious => {
+                let mut noise = rng.derive("poison", 0);
+                for v in params.iter_mut() {
+                    *v = -*v + 0.1 * noise.normal_f32();
+                }
+                params
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn malicious_transform_changes_params() {
+        let w = WorkerNode::new("worker_0", WorkerBehavior::Malicious);
+        let p = vec![1.0f32; 8];
+        let out = w.transform_aggregate(p.clone(), &mut Rng::seed_from(1));
+        assert_ne!(out, p);
+        assert!(out[0] < 0.0);
+        // Deterministic poison (reproducibility even for attacks).
+        let out2 = w.transform_aggregate(p, &mut Rng::seed_from(1));
+        assert_eq!(out, out2);
+    }
+
+    #[test]
+    fn honest_transform_is_identity() {
+        let w = WorkerNode::new("worker_0", WorkerBehavior::Honest);
+        let p = vec![1.0f32, -2.0];
+        assert_eq!(w.transform_aggregate(p.clone(), &mut Rng::seed_from(1)), p);
+    }
+}

@@ -1,0 +1,56 @@
+//! Global-model evaluation over the shared test set (the strategy-agnostic
+//! `test()` half of the paper's Strategy class).
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::data::dataset::Dataset;
+use crate::runtime::backend::ModelBackend;
+
+/// The test set, pre-uploaded as fixed-size masked eval batches.
+pub struct EvalSet {
+    batches: Vec<(Literal, Literal, Literal)>,
+    pub n_examples: usize,
+}
+
+impl EvalSet {
+    pub fn build(test: &Dataset, backend: &ModelBackend) -> Result<EvalSet> {
+        let bs = backend.eval_batch;
+        let f = test.feature_len();
+        let n = test.len();
+        let n_batches = n.div_ceil(bs).max(1);
+        let mut batches = Vec::with_capacity(n_batches);
+        for b in 0..n_batches {
+            let mut x = vec![0f32; bs * f];
+            let mut y = vec![0i32; bs];
+            let mut mask = vec![0f32; bs];
+            for k in 0..bs {
+                let idx = b * bs + k;
+                if idx < n {
+                    x[k * f..(k + 1) * f].copy_from_slice(test.features(idx));
+                    y[k] = test.y[idx];
+                    mask[k] = 1.0;
+                }
+            }
+            batches.push(backend.eval_lits(&x, &y, &mask)?);
+        }
+        Ok(EvalSet {
+            batches,
+            n_examples: n,
+        })
+    }
+
+    /// Evaluate parameters: returns (mean loss, accuracy).
+    pub fn evaluate(&self, backend: &ModelBackend, params: &[f32]) -> Result<(f64, f64)> {
+        let p = backend.params_lit(params)?;
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        for (x, y, mask) in &self.batches {
+            let (l, c) = backend.eval_batch(&p, x, y, mask)?;
+            loss_sum += l as f64;
+            correct += c as f64;
+        }
+        let n = self.n_examples.max(1) as f64;
+        Ok((loss_sum / n, correct / n))
+    }
+}

@@ -1,0 +1,689 @@
+//! The four round flows (standard / hierarchical / clustered /
+//! decentralized), each implementing the per-round body of Algorithm 1 over
+//! the KV store with full traffic metering.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::chain::block::Tx;
+use crate::consensus::Proposal;
+use crate::controller::phases::{NodeStage, ProcessPhase};
+use crate::metrics::report::RoundMetrics;
+use crate::metrics::resources;
+use crate::orchestrator::setup::JobState;
+use crate::strategy::ctx::{ClientCtx, ClientUpdate};
+use crate::util::hash;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+const KV: &str = "kv_store";
+const LC: &str = "logic_controller";
+
+/// Publish with NetSim metering (sender -> broker).
+fn publish(state: &mut JobState, topic: &str, sender: &str, round: u64, payload: crate::kvstore::store::Payload) {
+    let bytes = payload.wire_bytes();
+    state.kv.publish(topic, sender, round, payload);
+    state.net.transfer(sender, KV, bytes);
+}
+
+/// Fetch-latest with NetSim metering (broker -> reader).
+fn fetch_latest(state: &mut JobState, topic: &str, reader: &str) -> Result<crate::kvstore::store::Message> {
+    let msg = state.kv.fetch_latest(topic, reader)?;
+    state.net.transfer(KV, reader, msg.payload.wire_bytes());
+    Ok(msg)
+}
+
+/// Fetch-round with NetSim metering.
+fn fetch_round(
+    state: &mut JobState,
+    topic: &str,
+    round: u64,
+    reader: &str,
+) -> Vec<crate::kvstore::store::Message> {
+    let msgs = state.kv.fetch_round(topic, round, reader);
+    for m in &msgs {
+        state.net.transfer(KV, reader, m.payload.wire_bytes());
+    }
+    msgs
+}
+
+/// Round-metrics bookkeeping around a flow body.
+struct RoundScope {
+    t0: Instant,
+    res0: resources::ResourceSnapshot,
+    bytes0: u64,
+    net0: f64,
+}
+
+impl RoundScope {
+    fn begin(state: &JobState) -> RoundScope {
+        RoundScope {
+            t0: Instant::now(),
+            res0: resources::snapshot(),
+            bytes0: state.kv.total_bytes(),
+            net0: state.net.total_secs(),
+        }
+    }
+
+    fn finish(
+        self,
+        state: &JobState,
+        round: u64,
+        train_loss: f64,
+        eval_model: &[f32],
+        test_loss: f64,
+        test_accuracy: f64,
+    ) -> RoundMetrics {
+        let wall = self.t0.elapsed().as_secs_f64();
+        let res1 = resources::snapshot();
+        RoundMetrics {
+            round,
+            test_accuracy,
+            test_loss,
+            train_loss,
+            wall_secs: wall,
+            cpu_pct: resources::cpu_util_pct(self.res0, res1, wall),
+            rss_mib: res1.rss_mib,
+            net_bytes: state.kv.total_bytes() - self.bytes0,
+            sim_net_secs: state.net.total_secs() - self.net0,
+            model_hash: hash::short_hash(eval_model),
+        }
+    }
+}
+
+/// Local training for a set of clients, each starting from `start_of(name)`.
+/// Returns updates keyed by client (BTreeMap => deterministic order).
+/// `upload_topic_of` decides which KV topic each client uploads to (shared
+/// topic for star flows; per-cluster for hierarchical; per-peer for gossip).
+fn train_clients_to(
+    state: &mut JobState,
+    round: u64,
+    names: &[String],
+    start_of: impl Fn(&JobState, &str) -> Vec<f32>,
+    upload_topic_of: impl Fn(&str) -> String,
+) -> Result<BTreeMap<String, ClientUpdate>> {
+    state.controller.set_phase(ProcessPhase::LocalLearning);
+    state.controller.reset_stages(names, NodeStage::ReadyWithDataset);
+
+    // Broadcast strategy extra state (e.g. SCAFFOLD's c_global) once.
+    let extra_state = state.strategy.client_extra_state();
+    if let Some(es) = &extra_state {
+        publish(
+            state,
+            "strategy_state",
+            LC,
+            round,
+            crate::kvstore::store::Payload::Params(es.clone()),
+        );
+    }
+
+    let mut updates = BTreeMap::new();
+    let lr = state.job.train.learning_rate;
+    let epochs = state.job.train.local_epochs;
+
+    for name in names {
+        // Phase-4 download of the (cluster/peer/global) starting model.
+        let start = start_of(state, name);
+        let _ = fetch_latest(state, "global_model", name)?;
+        if extra_state.is_some() {
+            let _ = fetch_latest(state, "strategy_state", name)?;
+        }
+
+        state.controller.update_stage(name, NodeStage::Busy)?;
+        let mut client_rng = state.round_rng(round).derive("client", name_index(name));
+        let node = state
+            .clients
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("unknown client {name}"))?;
+        let mut ctx = ClientCtx {
+            client: name,
+            backend: &state.backend,
+            batches: &node.batches,
+            global: &start,
+            extra_state: extra_state.as_deref(),
+            lr,
+            local_epochs: epochs,
+            n_examples: node.n_examples,
+            state: &mut node.state,
+            rng: &mut client_rng,
+        };
+        let update = state.strategy.client_train(&mut ctx)?;
+
+        // Phase-1 upload: parameters (+ extra state if the strategy has it).
+        let topic = upload_topic_of(name);
+        publish(
+            state,
+            &topic,
+            name,
+            round,
+            crate::kvstore::store::Payload::Params(update.params.clone()),
+        );
+        if let Some(extra) = &update.extra {
+            publish(
+                state,
+                "client_extra",
+                name,
+                round,
+                crate::kvstore::store::Payload::Params(extra.clone()),
+            );
+        }
+        state.controller.update_stage(name, NodeStage::Done)?;
+        updates.insert(name.clone(), update);
+    }
+
+    state.controller.emit("Clients are waiting for next round.");
+    state.controller.barrier(names, NodeStage::Done, round, 1)?;
+    Ok(updates)
+}
+
+/// `train_clients_to` with the shared "client_params" upload topic (the
+/// star-topology flows).
+fn train_clients(
+    state: &mut JobState,
+    round: u64,
+    names: &[String],
+    start_of: impl Fn(&JobState, &str) -> Vec<f32>,
+) -> Result<BTreeMap<String, ClientUpdate>> {
+    train_clients_to(state, round, names, start_of, |_| "client_params".to_string())
+}
+
+fn name_index(name: &str) -> u64 {
+    name.rsplit('_')
+        .next()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or_else(|| name.bytes().map(|b| b as u64).sum())
+}
+
+/// Worker-side aggregation + §2.5 consensus pipeline. Returns the winning
+/// proposal's parameters and the per-worker proposals.
+fn aggregate_and_consensus(
+    state: &mut JobState,
+    round: u64,
+    updates: &[ClientUpdate],
+    rng: &mut Rng,
+) -> Result<Vec<f32>> {
+    state.controller.set_phase(ProcessPhase::ModelAggregation);
+    let worker_names = state.overlay.workers();
+    let alive = state.controller.alive(&worker_names, round);
+    if alive.is_empty() {
+        bail!("round {round}: no live workers");
+    }
+    state.controller.reset_stages(&alive, NodeStage::ReadyWithDataset);
+
+    let mut proposals: Vec<Proposal> = Vec::new();
+    for wname in &alive {
+        state.controller.update_stage(wname, NodeStage::Busy)?;
+        // Each worker pulls the full client-parameter set (phase 1 of the
+        // consensus pipeline: local parameter sharing to *all* workers).
+        let msgs = fetch_round(state, "client_params", round, wname);
+        if msgs.len() != updates.len() {
+            // KV store is the transport; the counts must agree.
+            bail!(
+                "worker {wname}: saw {} client messages, expected {}",
+                msgs.len(),
+                updates.len()
+            );
+        }
+        let agg = state
+            .strategy
+            .aggregate(updates, &state.global, state.job.hw_profile, rng)?;
+        let agg = {
+            let worker = state
+                .workers
+                .get(wname)
+                .ok_or_else(|| anyhow!("unknown worker {wname}"))?;
+            let mut poison_rng = state.round_rng(round).derive("worker", name_index(wname));
+            worker.transform_aggregate(agg, &mut poison_rng)
+        };
+        // Phase 2: aggregated parameter voting — share the hash.
+        let prop = Proposal::new(wname.clone(), agg);
+        publish(
+            state,
+            "agg_votes",
+            wname,
+            round,
+            crate::kvstore::store::Payload::Text(prop.hash.clone()),
+        );
+        state.controller.update_stage(wname, NodeStage::Done)?;
+        proposals.push(prop);
+    }
+    state.controller.emit("Workers busy in model aggregation.");
+    // Every worker reads every other worker's vote (phase 2 traffic).
+    for wname in &alive {
+        let _ = fetch_round(state, "agg_votes", round, wname);
+    }
+    state
+        .controller
+        .barrier(&alive, NodeStage::Done, round, 1)?;
+    state.controller.emit("Received aggregated params");
+
+    // Blockchain hooks: record hashes; optionally decide on-chain.
+    if let Some(chain) = state.chain.as_mut() {
+        for p in &proposals {
+            chain.submit_tx(Tx::new(
+                &p.worker,
+                "param_verify",
+                "record",
+                Json::obj(vec![
+                    ("round", Json::from(round as usize)),
+                    ("hash", Json::from(p.hash.as_str())),
+                ]),
+            ))?;
+            if state.job.consensus.on_chain {
+                chain.submit_tx(Tx::new(
+                    &p.worker,
+                    "consensus",
+                    "propose",
+                    Json::obj(vec![
+                        ("round", Json::from(round as usize)),
+                        ("hash", Json::from(p.hash.as_str())),
+                    ]),
+                ))?;
+            }
+        }
+    }
+
+    // Phase 3: final global parameter setting.
+    let winner_idx = if state.job.consensus.on_chain {
+        let chain = state.chain.as_mut().unwrap();
+        let d = chain.query(
+            "consensus",
+            "decide",
+            &Json::obj(vec![("round", Json::from(round as usize))]),
+        )?;
+        let win_hash = d
+            .get("hash")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("on-chain consensus returned no hash"))?;
+        proposals
+            .iter()
+            .position(|p| p.hash == win_hash)
+            .ok_or_else(|| anyhow!("winning hash not among proposals"))?
+    } else {
+        let decision = state.consensus.decide(&proposals, rng)?;
+        decision.winner
+    };
+
+    // Reputation + provenance on chain.
+    if let Some(chain) = state.chain.as_mut() {
+        let win_hash = proposals[winner_idx].hash.clone();
+        for p in &proposals {
+            let method = if p.hash == win_hash { "reward" } else { "penalize" };
+            chain.submit_tx(Tx::new(
+                LC,
+                "reputation",
+                method,
+                Json::obj(vec![("node", Json::from(p.worker.as_str()))]),
+            ))?;
+        }
+        chain.submit_tx(Tx::new(
+            LC,
+            "provenance",
+            "record",
+            Json::obj(vec![
+                ("round", Json::from(round as usize)),
+                ("hash", Json::from(win_hash.as_str())),
+            ]),
+        ))?;
+        chain.seal_block()?;
+    }
+
+    Ok(proposals.into_iter().nth(winner_idx).unwrap().params)
+}
+
+/// Standard client-server round (Fig 8/9/10): train -> aggregate ->
+/// consensus -> distribute.
+pub fn standard_round(state: &mut JobState, round: u64) -> Result<RoundMetrics> {
+    let scope = RoundScope::begin(state);
+    let mut rng = state.round_rng(round);
+
+    // Phase 4 (of the previous round): distribute the current global model.
+    publish(
+        state,
+        "global_model",
+        LC,
+        round,
+        crate::kvstore::store::Payload::Params(state.global.clone()),
+    );
+
+    let sampled = state.sample_clients(round);
+    if sampled.is_empty() {
+        bail!("round {round}: no live clients");
+    }
+    let updates_map = train_clients(state, round, &sampled, |st, _| st.global.clone())?;
+    let updates: Vec<ClientUpdate> = updates_map.into_values().collect();
+    let train_loss = mean_loss(&updates);
+
+    let winner = aggregate_and_consensus(state, round, &updates, &mut rng)?;
+    let global_before = std::mem::take(&mut state.global);
+    state.global = state
+        .strategy
+        .post_round(&updates, &global_before, winner);
+
+    let (test_loss, test_accuracy) = state.evaluate(&state.global)?;
+    let global = state.global.clone();
+    Ok(scope.finish(state, round, train_loss, &global, test_loss, test_accuracy))
+}
+
+/// Hierarchical round (Fig 11): leaf-cluster aggregation, then root merge.
+pub fn hierarchical_round(state: &mut JobState, round: u64) -> Result<RoundMetrics> {
+    let scope = RoundScope::begin(state);
+    let mut rng = state.round_rng(round);
+
+    publish(
+        state,
+        "global_model",
+        LC,
+        round,
+        crate::kvstore::store::Payload::Params(state.global.clone()),
+    );
+
+    // Leaf clusters (skip the root pseudo-cluster, which has no clients).
+    let leaf_clusters: Vec<(String, Vec<String>, String)> = state
+        .overlay
+        .clusters
+        .iter()
+        .filter(|c| !c.clients.is_empty())
+        .map(|c| (c.name.clone(), c.clients.clone(), c.workers[0].clone()))
+        .collect();
+
+    let mut cluster_aggs: Vec<ClientUpdate> = Vec::new();
+    let mut losses = Vec::new();
+    for (cname, members, leaf_worker) in &leaf_clusters {
+        let alive: Vec<String> = state.controller.alive(members, round);
+        if alive.is_empty() {
+            continue;
+        }
+        let cluster_topic = format!("client_params/{cname}");
+        let updates_map = train_clients_to(
+            state,
+            round,
+            &alive,
+            |st, _| st.global.clone(),
+            |_| cluster_topic.clone(),
+        )?;
+        let updates: Vec<ClientUpdate> = updates_map.into_values().collect();
+        losses.push(mean_loss(&updates));
+        // Leaf worker pulls its cluster members' uploads.
+        let _ = fetch_round(state, &cluster_topic, round, leaf_worker);
+
+        // Leaf aggregation.
+        let agg = state
+            .strategy
+            .aggregate(&updates, &state.global, state.job.hw_profile, &mut rng)?;
+        let weight: f64 = updates.iter().map(|u| u.weight).sum();
+        // Leaf worker ships its cluster model upstream (extra hop = the
+        // hierarchical bandwidth/CPU overhead of Fig 11).
+        publish(
+            state,
+            "cluster_agg",
+            leaf_worker,
+            round,
+            crate::kvstore::store::Payload::Params(agg.clone()),
+        );
+        cluster_aggs.push(ClientUpdate {
+            client: cname.clone(),
+            params: agg,
+            weight,
+            extra: None,
+            mean_loss: *losses.last().unwrap() as f32,
+        });
+    }
+    if cluster_aggs.is_empty() {
+        bail!("round {round}: every cluster was empty");
+    }
+
+    // Root merge.
+    let root = "root_worker".to_string();
+    let _ = fetch_round(state, "cluster_agg", round, &root);
+    let refs: Vec<&[f32]> = cluster_aggs.iter().map(|u| u.params.as_slice()).collect();
+    let weights: Vec<f64> = cluster_aggs.iter().map(|u| u.weight).collect();
+    let merged =
+        crate::aggregate::mean::weighted_mean(&refs, &weights, state.job.hw_profile)?;
+    let global_before = std::mem::take(&mut state.global);
+    state.global = state
+        .strategy
+        .post_round(&cluster_aggs, &global_before, merged);
+
+    let train_loss = crate::util::stats::mean(&losses);
+    let (test_loss, test_accuracy) = state.evaluate(&state.global)?;
+    let global = state.global.clone();
+    Ok(scope.finish(state, round, train_loss, &global, test_loss, test_accuracy))
+}
+
+/// FL+HC round (Briggs et al.): FedAvg until the clustering round, then one
+/// model per client cluster.
+pub fn clustered_round(state: &mut JobState, round: u64) -> Result<RoundMetrics> {
+    let scope = RoundScope::begin(state);
+    let mut rng = state.round_rng(round);
+
+    let cluster_round = match &state.job.strategy {
+        crate::strategy::StrategyKind::FlHc { cluster_round, .. } => *cluster_round,
+        _ => bail!("clustered flow requires the flhc strategy"),
+    };
+
+    publish(
+        state,
+        "global_model",
+        LC,
+        round,
+        crate::kvstore::store::Payload::Params(state.global.clone()),
+    );
+
+    if state.clusters.is_none() {
+        // Pre-clustering: behave like FedAvg, but watch for the clustering
+        // round.
+        let sampled = state.sample_clients(round);
+        let updates_map = train_clients(state, round, &sampled, |st, _| st.global.clone())?;
+        let updates: Vec<ClientUpdate> = updates_map.into_values().collect();
+        let train_loss = mean_loss(&updates);
+
+        if round >= cluster_round {
+            // Cluster clients by their local models (the paper's
+            // "hierarchical clustering of client parameters").
+            let kind = state.job.strategy.clone();
+            let (n_clusters,) = match kind {
+                crate::strategy::StrategyKind::FlHc { n_clusters, .. } => (n_clusters,),
+                _ => unreachable!(),
+            };
+            let vectors: Vec<Vec<f32>> = updates.iter().map(|u| u.params.clone()).collect();
+            let ids = crate::aggregate::cluster::agglomerative_clusters(
+                &vectors,
+                n_clusters,
+                f64::INFINITY,
+                crate::aggregate::cluster::Linkage::Average,
+            );
+            let mut assignment = BTreeMap::new();
+            for (u, &cid) in updates.iter().zip(&ids) {
+                assignment.insert(u.client.clone(), cid);
+            }
+            // Initialize each cluster model from its members.
+            let mut models = BTreeMap::new();
+            for cid in ids.iter().cloned().collect::<std::collections::BTreeSet<_>>() {
+                let members: Vec<&ClientUpdate> = updates
+                    .iter()
+                    .zip(&ids)
+                    .filter(|(_, &c)| c == cid)
+                    .map(|(u, _)| u)
+                    .collect();
+                let refs: Vec<&[f32]> = members.iter().map(|u| u.params.as_slice()).collect();
+                let ws: Vec<f64> = members.iter().map(|u| u.weight).collect();
+                models.insert(
+                    cid,
+                    crate::aggregate::mean::weighted_mean(&refs, &ws, state.job.hw_profile)?,
+                );
+            }
+            state
+                .controller
+                .emit(&format!("FL+HC: clustered clients into {} clusters", models.len()));
+            state.clusters = Some(assignment);
+            state.cluster_models = models;
+        } else {
+            let winner = aggregate_and_consensus(state, round, &updates, &mut rng)?;
+            let global_before = std::mem::take(&mut state.global);
+            state.global = state.strategy.post_round(&updates, &global_before, winner);
+        }
+
+        let (test_loss, test_accuracy) = clustered_eval(state)?;
+        let global = state.global.clone();
+        return Ok(scope.finish(state, round, train_loss, &global, test_loss, test_accuracy));
+    }
+
+    // Post-clustering: per-cluster FedAvg.
+    let assignment = state.clusters.clone().unwrap();
+    let sampled = state.sample_clients(round);
+    let updates_map = train_clients(state, round, &sampled, |st, name| {
+        let cid = st.clusters.as_ref().unwrap().get(name).copied().unwrap_or(0);
+        st.cluster_models
+            .get(&cid)
+            .cloned()
+            .unwrap_or_else(|| st.global.clone())
+    })?;
+    let updates: Vec<ClientUpdate> = updates_map.into_values().collect();
+    let train_loss = mean_loss(&updates);
+
+    let cluster_ids: std::collections::BTreeSet<usize> =
+        assignment.values().cloned().collect();
+    for cid in cluster_ids {
+        let members: Vec<&ClientUpdate> = updates
+            .iter()
+            .filter(|u| assignment.get(&u.client) == Some(&cid))
+            .collect();
+        if members.is_empty() {
+            continue;
+        }
+        let refs: Vec<&[f32]> = members.iter().map(|u| u.params.as_slice()).collect();
+        let ws: Vec<f64> = members.iter().map(|u| u.weight).collect();
+        let model = crate::aggregate::mean::weighted_mean(&refs, &ws, state.job.hw_profile)?;
+        state.cluster_models.insert(cid, model);
+    }
+
+    let (test_loss, test_accuracy) = clustered_eval(state)?;
+    let global = state.global.clone();
+    Ok(scope.finish(state, round, train_loss, &global, test_loss, test_accuracy))
+}
+
+/// FL+HC evaluation: example-weighted average over cluster models (falls
+/// back to the single global model before clustering happens).
+fn clustered_eval(state: &JobState) -> Result<(f64, f64)> {
+    if state.cluster_models.is_empty() {
+        return state.evaluate(&state.global);
+    }
+    let assignment = state.clusters.as_ref().unwrap();
+    let mut loss = 0f64;
+    let mut acc = 0f64;
+    let mut total_w = 0f64;
+    for (cid, model) in &state.cluster_models {
+        let w: f64 = assignment
+            .iter()
+            .filter(|(_, c)| *c == cid)
+            .map(|(name, _)| {
+                state
+                    .clients
+                    .get(name)
+                    .map(|n| n.n_examples as f64)
+                    .unwrap_or(0.0)
+            })
+            .sum();
+        let (l, a) = state.evaluate(model)?;
+        loss += w * l;
+        acc += w * a;
+        total_w += w;
+    }
+    if total_w <= 0.0 {
+        return state.evaluate(&state.global);
+    }
+    Ok((loss / total_w, acc / total_w))
+}
+
+/// Decentralized (Fedstellar-style) round: peers train locally, gossip,
+/// merge. No central aggregator at all.
+pub fn decentralized_round(state: &mut JobState, round: u64) -> Result<RoundMetrics> {
+    let scope = RoundScope::begin(state);
+
+    publish(
+        state,
+        "global_model",
+        LC,
+        round,
+        crate::kvstore::store::Payload::Params(state.global.clone()),
+    );
+
+    let peers = state.sample_clients(round);
+    if peers.is_empty() {
+        bail!("round {round}: no live peers");
+    }
+    // Each peer continues from its own local model and uploads to its own
+    // per-peer topic (gossip pulls are point-to-point).
+    let updates_map = train_clients_to(
+        state,
+        round,
+        &peers,
+        |st, name| {
+            st.clients
+                .get(name)
+                .and_then(|n| n.local_model.clone())
+                .unwrap_or_else(|| st.global.clone())
+        },
+        |name| format!("peer_params/{name}"),
+    )?;
+    let train_loss = mean_loss(&updates_map.values().cloned().collect::<Vec<_>>());
+
+    // Gossip: every peer pulls each neighbor's model (n·(n−1) transfers —
+    // the decentralized bandwidth signature of Fig 8e/11e).
+    let neighbors_k = match &state.job.strategy {
+        crate::strategy::StrategyKind::Fedstellar { neighbors } => *neighbors,
+        _ => 0,
+    };
+    let plan = if neighbors_k == 0 {
+        crate::topology::gossip::full_exchange(&state.overlay)
+    } else {
+        let mut grng = state.round_rng(round).derive("gossip", 0);
+        crate::topology::gossip::random_k(&state.overlay, neighbors_k, &mut grng)
+    };
+
+    // Gossip pulls are point-to-point: each peer fetches exactly the models
+    // its plan names (mesh ⇒ n·(n−1) transfers, ring ⇒ 2n — the Fig 11e
+    // bandwidth ordering comes straight from the plan).
+    let mut merged_models: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    for (peer, pulls) in &plan.pulls {
+        let Some(own) = updates_map.get(peer) else {
+            continue; // faulted peer this round
+        };
+        let mut stack: Vec<&[f32]> = vec![own.params.as_slice()];
+        for other in pulls {
+            if let Some(u) = updates_map.get(other) {
+                let _ = fetch_latest(state, &format!("peer_params/{other}"), peer);
+                stack.push(u.params.as_slice());
+            }
+        }
+        let weights = vec![1.0; stack.len()];
+        let merged =
+            crate::aggregate::mean::weighted_mean(&stack, &weights, state.job.hw_profile)?;
+        merged_models.insert(peer.clone(), merged);
+    }
+    for (peer, model) in &merged_models {
+        if let Some(node) = state.clients.get_mut(peer) {
+            node.local_model = Some(model.clone());
+        }
+    }
+
+    // Report on the uniform mean of peer models (the "virtual global").
+    let refs: Vec<&[f32]> = merged_models.values().map(|m| m.as_slice()).collect();
+    let weights = vec![1.0; refs.len()];
+    state.global =
+        crate::aggregate::mean::weighted_mean(&refs, &weights, state.job.hw_profile)?;
+
+    let (test_loss, test_accuracy) = state.evaluate(&state.global)?;
+    let global = state.global.clone();
+    Ok(scope.finish(state, round, train_loss, &global, test_loss, test_accuracy))
+}
+
+fn mean_loss(updates: &[ClientUpdate]) -> f64 {
+    if updates.is_empty() {
+        return f64::NAN;
+    }
+    updates.iter().map(|u| u.mean_loss as f64).sum::<f64>() / updates.len() as f64
+}

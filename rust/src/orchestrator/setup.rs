@@ -1,0 +1,233 @@
+//! Job scaffolding: everything Figure 1's "load job" arrow implies —
+//! dataset generation + distribution, overlay construction, node creation,
+//! strategy / consensus / blockchain instantiation, controller init.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::chain::{self, Blockchain};
+use crate::config::job::JobConfig;
+use crate::consensus::{self, Consensus};
+use crate::controller::phases::NodeStage;
+use crate::controller::sync::{FaultPlan, LogicController};
+use crate::data::distributor::Distributor;
+use crate::data::partition::Partition;
+use crate::data::synthetic;
+use crate::info;
+use crate::kvstore::netsim::{LinkModel, NetSim};
+use crate::kvstore::store::KvStore;
+use crate::metrics::report::RunReport;
+use crate::node::{ClientNode, WorkerBehavior, WorkerNode};
+use crate::orchestrator::eval::EvalSet;
+use crate::runtime::backend::ModelBackend;
+use crate::runtime::pjrt::Runtime;
+use crate::strategy::Strategy;
+use crate::topology::graph::Overlay;
+use crate::util::rng::Rng;
+
+/// All live state of a running job.
+pub struct JobState {
+    pub job: JobConfig,
+    pub backend: ModelBackend,
+    pub overlay: Overlay,
+    pub clients: BTreeMap<String, ClientNode>,
+    pub workers: BTreeMap<String, WorkerNode>,
+    pub controller: LogicController,
+    pub kv: KvStore,
+    pub net: NetSim,
+    pub strategy: Box<dyn Strategy>,
+    pub consensus: Box<dyn Consensus>,
+    pub chain: Option<Box<dyn Blockchain>>,
+    pub eval: EvalSet,
+    pub distributor: Distributor,
+    /// Current global model (standard/hierarchical flows).
+    pub global: Vec<f32>,
+    /// FL+HC: cluster id per client (None until the clustering round).
+    pub clusters: Option<BTreeMap<String, usize>>,
+    /// FL+HC: per-cluster global models.
+    pub cluster_models: BTreeMap<usize, Vec<f32>>,
+    pub root_rng: Rng,
+    pub report: RunReport,
+}
+
+impl JobState {
+    pub fn scaffold(rt: Rc<Runtime>, job: &JobConfig, faults: FaultPlan) -> Result<JobState> {
+        let root_rng = Rng::seed_from(job.seed);
+
+        // Backend + capability check (ML-library agnosticism boundary).
+        let backend = ModelBackend::new(rt, &job.backend)?;
+        let step = job.strategy.required_artifact();
+        if !backend.supports(step) {
+            bail!(
+                "backend '{}' does not provide the '{step}' artifact required by \
+                 strategy '{}' — rebuild artifacts or pick another backend",
+                job.backend,
+                job.strategy.name()
+            );
+        }
+
+        // Dataset: generate -> split -> partition -> archive.
+        let ds = synthetic::by_name(&job.dataset.name, job.dataset.n, job.seed)
+            .ok_or_else(|| anyhow!("unknown dataset '{}'", job.dataset.name))?;
+        let mut split_rng = root_rng.derive("split", 0);
+        let (train, test) = ds.split(job.dataset.train_frac, &mut split_rng);
+
+        // Overlay + roles.
+        let overlay = Overlay::build(job.topology, job.n_clients, job.n_workers);
+        overlay.validate()?;
+        let client_names = overlay.clients();
+        let worker_names = overlay.workers();
+
+        let mut part_rng = root_rng.derive("partition", 0);
+        let partition = Partition::build(
+            &train,
+            client_names.len(),
+            &job.dataset.distribution,
+            &mut part_rng,
+        );
+
+        let mut distributor = Distributor::new();
+        distributor.archive_partition(&train, &partition, &client_names, &test)?;
+
+        // Controller over every node; stage flow of Algorithm 1 lines 1-13.
+        let all_nodes: Vec<String> = overlay.roles.keys().cloned().collect();
+        let mut controller = LogicController::new(&all_nodes);
+        controller.fault_plan = faults;
+        controller.allow_timeout = true;
+
+        for n in &all_nodes {
+            controller.update_stage(n, NodeStage::ReadyForJob)?;
+        }
+        controller.barrier(&all_nodes, NodeStage::ReadyForJob, 0, all_nodes.len())?;
+
+        // Clients download their chunks and build device-resident batches.
+        let mut clients = BTreeMap::new();
+        for (i, name) in client_names.iter().enumerate() {
+            let chunk = distributor.download(name, "train")?;
+            let mut batch_rng = root_rng.derive("batching", i as u64);
+            let node = ClientNode::from_chunk(name, &chunk, &backend, &mut batch_rng)?;
+            clients.insert(name.clone(), node);
+            controller.update_stage(name, NodeStage::ReadyWithDataset)?;
+        }
+        let mut workers = BTreeMap::new();
+        for name in &worker_names {
+            let malicious = job.consensus.malicious_workers.contains(name);
+            workers.insert(
+                name.clone(),
+                WorkerNode::new(
+                    name,
+                    if malicious {
+                        WorkerBehavior::Malicious
+                    } else {
+                        WorkerBehavior::Honest
+                    },
+                ),
+            );
+            controller.update_stage(name, NodeStage::ReadyWithDataset)?;
+        }
+        controller.barrier(&all_nodes, NodeStage::ReadyWithDataset, 0, all_nodes.len())?;
+        controller.emit("All nodes ready with dataset.");
+
+        // Eval set on the shared test chunk.
+        let eval = EvalSet::build(&test, &backend)?;
+
+        // Strategy / consensus / chain.
+        let strategy = job.strategy.build();
+        let consensus = consensus::by_name(&job.consensus.runnable)?;
+        let chain = if job.chain.enabled {
+            Some(chain::by_platform(&job.chain.platform)?)
+        } else {
+            None
+        };
+
+        // Deterministic global init (node seed synchronization, RQ6).
+        let global = backend.init(job.seed as i32)?;
+
+        let report = RunReport {
+            label: job.name.clone(),
+            strategy: job.strategy.name().to_string(),
+            topology: job.topology.name().to_string(),
+            backend: job.backend.clone(),
+            n_clients: client_names.len(),
+            n_workers: worker_names.len(),
+            seed: job.seed,
+            rounds: Vec::new(),
+        };
+
+        info!(
+            "orchestrator",
+            "scaffolded job '{}': {} clients, {} workers, {} params, {} topology",
+            job.name,
+            client_names.len(),
+            worker_names.len(),
+            backend.param_count,
+            job.topology.name()
+        );
+
+        Ok(JobState {
+            job: job.clone(),
+            backend,
+            overlay,
+            clients,
+            workers,
+            controller,
+            kv: KvStore::new(),
+            net: NetSim::new(LinkModel::LAN),
+            strategy,
+            consensus,
+            chain,
+            eval,
+            distributor,
+            global,
+            clusters: None,
+            cluster_models: BTreeMap::new(),
+            root_rng,
+            report,
+        })
+    }
+
+    /// Per-round derived stream (all round-scoped randomness hangs off it).
+    pub fn round_rng(&self, round: u64) -> Rng {
+        self.root_rng.derive("round", round)
+    }
+
+    /// Sampled client subset for a round (client_fraction < 1.0).
+    pub fn sample_clients(&self, round: u64) -> Vec<String> {
+        let names = self.overlay.clients();
+        let alive = self.controller.alive(&names, round);
+        if self.job.client_fraction >= 1.0 {
+            return alive;
+        }
+        let k = ((self.job.client_fraction * alive.len() as f64).ceil() as usize)
+            .clamp(1, alive.len());
+        let mut rng = self.round_rng(round).derive("client_sample", 0);
+        let idx = rng.choose_indices(alive.len(), k);
+        let mut out: Vec<String> = idx.into_iter().map(|i| alive[i].clone()).collect();
+        out.sort();
+        out
+    }
+
+    pub fn verify_chain(&self) -> Result<()> {
+        if let Some(chain) = &self.chain {
+            chain.verify_integrity()?;
+            info!(
+                "orchestrator",
+                "blockchain integrity verified at height {}",
+                chain.height()
+            );
+        }
+        Ok(())
+    }
+
+    /// Shared evaluation used by flows: (test_loss, test_accuracy).
+    pub fn evaluate(&self, params: &[f32]) -> Result<(f64, f64)> {
+        self.eval.evaluate(&self.backend, params)
+    }
+
+    /// Dataset setup bytes served to a node (reported in round-1 metrics).
+    pub fn setup_bytes(&self) -> u64 {
+        self.distributor.total_bytes_served()
+    }
+}

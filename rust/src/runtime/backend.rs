@@ -1,0 +1,203 @@
+//! `ModelBackend` — the library-agnostic model handle (paper RQ2).
+//!
+//! The coordinator never names a model family: it drives whatever backends
+//! the manifest declares through this uniform interface, exactly as FLsim
+//! drives PyTorch/TensorFlow/Scikit-Learn strategies through one Strategy
+//! class. Parameters cross the interface as flat `f32` vectors (or as
+//! opaque device literals inside a local-training loop).
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use crate::runtime::pjrt::Runtime;
+
+#[derive(Clone)]
+pub struct ModelBackend {
+    rt: Rc<Runtime>,
+    pub name: String,
+    pub param_count: usize,
+    pub input_shape: Vec<usize>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+}
+
+impl ModelBackend {
+    pub fn new(rt: Rc<Runtime>, name: &str) -> Result<ModelBackend> {
+        let desc = rt.manifest.backend(name)?;
+        Ok(ModelBackend {
+            name: desc.name.clone(),
+            param_count: desc.param_count,
+            input_shape: desc.input_shape.clone(),
+            train_batch: rt.manifest.train_batch,
+            eval_batch: rt.manifest.eval_batch,
+            rt,
+        })
+    }
+
+    /// True if the backend's manifest declares a strategy-specific artifact
+    /// (e.g. "scaffold", "moon").
+    pub fn supports(&self, step: &str) -> bool {
+        self.rt
+            .manifest
+            .backend(&self.name)
+            .map(|b| b.artifacts.contains_key(step))
+            .unwrap_or(false)
+    }
+
+    /// Deterministic parameter initialization (seed comes from the node
+    /// seed-synchronization stream, paper §5/RQ6).
+    pub fn init(&self, seed: i32) -> Result<Vec<f32>> {
+        let outs = self
+            .rt
+            .execute(&self.name, "init", &[Runtime::scalar_i32(seed)])?;
+        Runtime::to_f32s(&outs[0])
+    }
+
+    /// Upload a parameter vector as a device literal.
+    pub fn params_lit(&self, params: &[f32]) -> Result<Literal> {
+        if params.len() != self.param_count {
+            return Err(anyhow!(
+                "backend {}: params len {} != {}",
+                self.name,
+                params.len(),
+                self.param_count
+            ));
+        }
+        Runtime::lit_f32(params, &[self.param_count])
+    }
+
+    pub fn to_params(&self, lit: &Literal) -> Result<Vec<f32>> {
+        Runtime::to_f32s(lit)
+    }
+
+    fn step2(&self, step: &str, inputs: &[&Literal]) -> Result<(Literal, f32)> {
+        let outs = self.rt.execute_refs(&self.name, step, inputs)?;
+        let mut it = outs.into_iter();
+        let new_params = it.next().ok_or_else(|| anyhow!("missing params out"))?;
+        let loss = it
+            .next()
+            .ok_or_else(|| anyhow!("missing loss out"))?
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss fetch: {e:?}"))?;
+        Ok((new_params, loss))
+    }
+
+    /// One SGD batch step: returns (new params literal, batch loss).
+    pub fn sgd(
+        &self,
+        params: &Literal,
+        x: &Literal,
+        y: &Literal,
+        lr: f32,
+    ) -> Result<(Literal, f32)> {
+        let lr = Runtime::scalar_f32(lr);
+        self.step2("sgd", &[params, x, y, &lr])
+    }
+
+    /// FedProx batch step with proximal pull toward `global`.
+    pub fn prox(
+        &self,
+        params: &Literal,
+        global: &Literal,
+        x: &Literal,
+        y: &Literal,
+        lr: f32,
+        mu: f32,
+    ) -> Result<(Literal, f32)> {
+        let lr = Runtime::scalar_f32(lr);
+        let mu = Runtime::scalar_f32(mu);
+        self.step2("prox", &[params, global, x, y, &lr, &mu])
+    }
+
+    /// SCAFFOLD batch step with control variates (c_global, c_local).
+    pub fn scaffold(
+        &self,
+        params: &Literal,
+        c_global: &Literal,
+        c_local: &Literal,
+        x: &Literal,
+        y: &Literal,
+        lr: f32,
+    ) -> Result<(Literal, f32)> {
+        let lr = Runtime::scalar_f32(lr);
+        self.step2("scaffold", &[params, c_global, c_local, x, y, &lr])
+    }
+
+    /// MOON batch step (contrastive against global + previous-local nets).
+    #[allow(clippy::too_many_arguments)]
+    pub fn moon(
+        &self,
+        params: &Literal,
+        global: &Literal,
+        prev: &Literal,
+        x: &Literal,
+        y: &Literal,
+        lr: f32,
+        mu: f32,
+        tau: f32,
+    ) -> Result<(Literal, f32)> {
+        let lr = Runtime::scalar_f32(lr);
+        let mu = Runtime::scalar_f32(mu);
+        let tau = Runtime::scalar_f32(tau);
+        self.step2("moon", &[params, global, prev, x, y, &lr, &mu, &tau])
+    }
+
+    /// One eval batch: returns (summed loss, correct count) over unmasked rows.
+    pub fn eval_batch(
+        &self,
+        params: &Literal,
+        x: &Literal,
+        y: &Literal,
+        mask: &Literal,
+    ) -> Result<(f32, f32)> {
+        let outs = self
+            .rt
+            .execute_refs(&self.name, "eval", &[params, x, y, mask])?;
+        let loss = outs[0]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("eval loss: {e:?}"))?;
+        let correct = outs[1]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("eval correct: {e:?}"))?;
+        Ok((loss, correct))
+    }
+
+    /// Upload a train batch as literals.
+    pub fn batch_lits(&self, x: &[f32], y: &[i32]) -> Result<(Literal, Literal)> {
+        let mut dims = vec![self.train_batch];
+        dims.extend_from_slice(&self.input_shape);
+        Ok((Runtime::lit_f32(x, &dims)?, Runtime::lit_i32(y, &[self.train_batch])?))
+    }
+
+    /// Upload an eval batch (with validity mask) as literals.
+    pub fn eval_lits(
+        &self,
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+    ) -> Result<(Literal, Literal, Literal)> {
+        let mut dims = vec![self.eval_batch];
+        dims.extend_from_slice(&self.input_shape);
+        Ok((
+            Runtime::lit_f32(x, &dims)?,
+            Runtime::lit_i32(y, &[self.eval_batch])?,
+            Runtime::lit_f32(mask, &[self.eval_batch])?,
+        ))
+    }
+
+    /// Bytes one full model transfer costs on the (simulated) wire.
+    pub fn model_bytes(&self) -> u64 {
+        (self.param_count * 4) as u64
+    }
+}
+
+impl std::fmt::Debug for ModelBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelBackend")
+            .field("name", &self.name)
+            .field("param_count", &self.param_count)
+            .finish()
+    }
+}

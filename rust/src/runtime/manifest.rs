@@ -1,0 +1,221 @@
+//! `artifacts/manifest.json` — the contract between the AOT compiler (L2)
+//! and the Rust runtime (L3).
+//!
+//! The manifest declares, per model backend, the parameter count, input
+//! shape and the artifact set (init / sgd / eval / prox / scaffold / moon)
+//! with full input signatures. The coordinator is *model-agnostic*: it only
+//! consumes this file, mirroring the paper's ML-library agnosticism.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorDesc {
+    pub shape: Vec<usize>,
+    /// "f32" or "s32".
+    pub dtype: String,
+}
+
+impl TensorDesc {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactDesc {
+    pub file: String,
+    pub inputs: Vec<TensorDesc>,
+    pub n_outputs: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct BackendDesc {
+    pub name: String,
+    pub param_count: usize,
+    pub input_shape: Vec<usize>,
+    pub use_pallas: bool,
+    pub artifacts: BTreeMap<String, ArtifactDesc>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub jax_version: String,
+    pub backends: BTreeMap<String, BackendDesc>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let train_batch = j
+            .get("train_batch")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest: missing train_batch"))?;
+        let eval_batch = j
+            .get("eval_batch")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest: missing eval_batch"))?;
+        let jax_version = j
+            .get("jax_version")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let mut backends = BTreeMap::new();
+        let bmap = j
+            .get("backends")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: missing backends"))?;
+        for (name, bj) in bmap {
+            let param_count = bj
+                .get("param_count")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("backend {name}: missing param_count"))?;
+            let input_shape: Vec<usize> = bj
+                .get("input_shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("backend {name}: missing input_shape"))?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect();
+            let use_pallas = matches!(bj.get("use_pallas"), Some(Json::Bool(true)));
+            let mut artifacts = BTreeMap::new();
+            let amap = bj
+                .get("artifacts")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow!("backend {name}: missing artifacts"))?;
+            for (step, aj) in amap {
+                artifacts.insert(step.clone(), parse_artifact(name, step, aj)?);
+            }
+            for required in ["init", "sgd", "eval"] {
+                if !artifacts.contains_key(required) {
+                    bail!("backend {name}: missing required artifact '{required}'");
+                }
+            }
+            backends.insert(
+                name.clone(),
+                BackendDesc {
+                    name: name.clone(),
+                    param_count,
+                    input_shape,
+                    use_pallas,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest {
+            train_batch,
+            eval_batch,
+            jax_version,
+            backends,
+        })
+    }
+
+    pub fn backend(&self, name: &str) -> Result<&BackendDesc> {
+        self.backends
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown backend '{name}' (have: {:?})",
+                                   self.backends.keys().collect::<Vec<_>>()))
+    }
+}
+
+fn parse_artifact(backend: &str, step: &str, aj: &Json) -> Result<ArtifactDesc> {
+    let file = aj
+        .get("file")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("{backend}/{step}: missing file"))?
+        .to_string();
+    let n_outputs = aj
+        .get("n_outputs")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("{backend}/{step}: missing n_outputs"))?;
+    let mut inputs = Vec::new();
+    for ij in aj
+        .get("inputs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{backend}/{step}: missing inputs"))?
+    {
+        let shape = ij
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{backend}/{step}: input missing shape"))?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect();
+        let dtype = ij
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("f32")
+            .to_string();
+        inputs.push(TensorDesc { shape, dtype });
+    }
+    Ok(ArtifactDesc {
+        file,
+        inputs,
+        n_outputs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "train_batch": 64, "eval_batch": 256, "jax_version": "0.8.2",
+      "backends": {
+        "logreg": {
+          "param_count": 7850, "input_shape": [784], "use_pallas": true,
+          "artifacts": {
+            "init": {"file": "logreg_init.hlo.txt", "n_outputs": 1,
+                     "inputs": [{"shape": [], "dtype": "s32"}]},
+            "sgd": {"file": "logreg_sgd.hlo.txt", "n_outputs": 2,
+                    "inputs": [{"shape": [7850], "dtype": "f32"},
+                               {"shape": [64, 784], "dtype": "f32"},
+                               {"shape": [64], "dtype": "s32"},
+                               {"shape": [], "dtype": "f32"}]},
+            "eval": {"file": "logreg_eval.hlo.txt", "n_outputs": 2,
+                     "inputs": [{"shape": [7850], "dtype": "f32"},
+                                {"shape": [256, 784], "dtype": "f32"},
+                                {"shape": [256], "dtype": "s32"},
+                                {"shape": [256], "dtype": "f32"}]}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.train_batch, 64);
+        let b = m.backend("logreg").unwrap();
+        assert_eq!(b.param_count, 7850);
+        assert_eq!(b.artifacts["sgd"].inputs.len(), 4);
+        assert_eq!(b.artifacts["sgd"].inputs[1].element_count(), 64 * 784);
+        assert_eq!(b.artifacts["sgd"].inputs[2].dtype, "s32");
+    }
+
+    #[test]
+    fn missing_required_artifact_rejected() {
+        let bad = SAMPLE.replace("\"eval\"", "\"evalX\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn unknown_backend_error_lists_known() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let e = m.backend("resnet").unwrap_err().to_string();
+        assert!(e.contains("logreg"));
+    }
+}

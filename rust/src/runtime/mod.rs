@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT HLO artifacts produced by `python/compile/aot.py`
+//! and executes them on the hot path. Python is never involved at run time.
+
+pub mod backend;
+pub mod manifest;
+pub mod pjrt;
+
+pub use backend::ModelBackend;
+pub use manifest::{ArtifactDesc, Manifest, TensorDesc};
+pub use pjrt::Runtime;

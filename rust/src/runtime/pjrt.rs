@@ -1,0 +1,195 @@
+//! PJRT execution engine: compile-once / execute-many over the AOT HLO
+//! artifacts (adapted from /opt/xla-example/load_hlo).
+//!
+//! One `Runtime` owns the PJRT CPU client and an executable cache keyed by
+//! artifact name — every artifact is compiled exactly once per process and
+//! then replayed for (potentially) hundreds of thousands of step calls.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::manifest::{ArtifactDesc, Manifest};
+
+/// Counters for EXPERIMENTS.md §Perf and the metrics logger.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub executions: usize,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Open the artifact directory and create the PJRT CPU client.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Shared (reference-counted) runtime — the orchestrator, nodes and
+    /// strategies all hold clones of this.
+    pub fn shared(artifact_dir: impl AsRef<Path>) -> Result<Rc<Runtime>> {
+        Ok(Rc::new(Self::new(artifact_dir)?))
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Look up (or compile) the executable for `backend`/`step`.
+    pub fn executable(
+        &self,
+        backend: &str,
+        step: &str,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{backend}/{step}");
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let desc = self.artifact(backend, step)?;
+        let path = self.dir.join(&desc.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {key}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        let mut st = self.stats.borrow_mut();
+        st.compiles += 1;
+        st.compile_secs += t0.elapsed().as_secs_f64();
+        Ok(exe)
+    }
+
+    pub fn artifact(&self, backend: &str, step: &str) -> Result<&ArtifactDesc> {
+        self.manifest
+            .backend(backend)?
+            .artifacts
+            .get(step)
+            .ok_or_else(|| anyhow!("backend {backend} has no '{step}' artifact"))
+    }
+
+    /// Execute an artifact with literal inputs; returns the untupled outputs.
+    ///
+    /// The AOT path lowers with `return_tuple=True`, so the program has a
+    /// single tuple output which we decompose into `n_outputs` literals.
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        backend: &str,
+        step: &str,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let desc = self.artifact(backend, step)?;
+        if inputs.len() != desc.inputs.len() {
+            bail!(
+                "{backend}/{step}: expected {} inputs, got {}",
+                desc.inputs.len(),
+                inputs.len()
+            );
+        }
+        let n_outputs = desc.n_outputs;
+        let exe = self.executable(backend, step)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<L>(inputs)
+            .map_err(|e| anyhow!("executing {backend}/{step}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {backend}/{step} output: {e:?}"))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {backend}/{step} output: {e:?}"))?;
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.execute_secs += t0.elapsed().as_secs_f64();
+        if outs.len() != n_outputs {
+            bail!(
+                "{backend}/{step}: manifest says {n_outputs} outputs, got {}",
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// `execute` over borrowed literals (the common hot-path call shape:
+    /// chained step outputs + cached batch literals, zero copies).
+    pub fn execute_refs(
+        &self,
+        backend: &str,
+        step: &str,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.execute(backend, step, inputs)
+    }
+
+    // -- literal helpers -----------------------------------------------------
+
+    pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("literal shape {dims:?} != data len {}", data.len());
+        }
+        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("literal shape {dims:?} != data len {}", data.len());
+        }
+        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    pub fn scalar_f32(v: f32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    pub fn scalar_i32(v: i32) -> xla::Literal {
+        xla::Literal::scalar(v)
+    }
+
+    pub fn to_f32s(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>()
+            .map_err(|e| anyhow!("literal to_vec<f32>: {e:?}"))
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("cached", &self.cache.borrow().len())
+            .finish()
+    }
+}

@@ -1,0 +1,96 @@
+//! Client-side training context and helpers shared by all strategies.
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::runtime::backend::ModelBackend;
+use crate::util::rng::Rng;
+
+/// Persistent per-client strategy state (lives in the client node across
+/// rounds; the "additional states" of paper requirement 5).
+#[derive(Clone, Debug, Default)]
+pub struct ClientState {
+    /// Previous round's local model (MOON's contrastive anchor).
+    pub prev_params: Option<Vec<f32>>,
+    /// SCAFFOLD local control variate.
+    pub c_local: Option<Vec<f32>>,
+}
+
+/// Everything a strategy needs to run one client's local epochs.
+pub struct ClientCtx<'a> {
+    pub client: &'a str,
+    pub backend: &'a ModelBackend,
+    /// Pre-uploaded training batches (x, y literals), one entry per batch.
+    pub batches: &'a [(Literal, Literal)],
+    /// Current global model.
+    pub global: &'a [f32],
+    /// Strategy broadcast state (SCAFFOLD's c_global), if any.
+    pub extra_state: Option<&'a [f32]>,
+    pub lr: f32,
+    pub local_epochs: usize,
+    /// Number of local training examples (aggregation weight).
+    pub n_examples: usize,
+    /// Mutable per-client strategy state.
+    pub state: &'a mut ClientState,
+    /// Client-round-derived deterministic stream.
+    pub rng: &'a mut Rng,
+}
+
+/// What a client uploads after local training (paper consensus phase 1,
+/// "Local Parameter Sharing").
+#[derive(Clone, Debug)]
+pub struct ClientUpdate {
+    pub client: String,
+    pub params: Vec<f32>,
+    /// Aggregation weight (= local example count).
+    pub weight: f64,
+    /// Strategy-specific extra upload (SCAFFOLD's delta control variate).
+    pub extra: Option<Vec<f32>>,
+    /// Mean training loss over the local epochs.
+    pub mean_loss: f32,
+}
+
+impl ClientUpdate {
+    /// Bytes this update costs on the wire.
+    pub fn wire_bytes(&self) -> u64 {
+        64 + (self.params.len() * 4) as u64
+            + self.extra.as_ref().map(|e| (e.len() * 4) as u64).unwrap_or(0)
+    }
+}
+
+impl<'a> ClientCtx<'a> {
+    /// Run `local_epochs` over the client's batches, applying `step` to
+    /// each batch. `step(params_lit, x, y) -> (new_params_lit, loss)`.
+    ///
+    /// Parameters stay device-resident (as `Literal`s) across the whole
+    /// local loop — the only host round-trips are the initial upload and
+    /// the final download (hot-path optimization, EXPERIMENTS.md §Perf).
+    pub fn run_epochs<F>(&mut self, start: &[f32], mut step: F) -> Result<(Vec<f32>, f32)>
+    where
+        F: FnMut(&ModelBackend, &Literal, &Literal, &Literal) -> Result<(Literal, f32)>,
+    {
+        let mut params = self.backend.params_lit(start)?;
+        let mut loss_sum = 0f64;
+        let mut n_steps = 0usize;
+        for _ in 0..self.local_epochs {
+            for (x, y) in self.batches {
+                let (next, loss) = step(self.backend, &params, x, y)?;
+                params = next;
+                loss_sum += loss as f64;
+                n_steps += 1;
+            }
+        }
+        let final_params = self.backend.to_params(&params)?;
+        let mean_loss = if n_steps > 0 {
+            (loss_sum / n_steps as f64) as f32
+        } else {
+            f32::NAN
+        };
+        Ok((final_params, mean_loss))
+    }
+
+    /// Total batch steps one round performs (local_epochs × batches).
+    pub fn steps_per_round(&self) -> usize {
+        self.local_epochs * self.batches.len()
+    }
+}

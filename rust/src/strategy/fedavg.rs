@@ -1,0 +1,42 @@
+//! FedAvg (McMahan et al. [1]): local SGD epochs + example-weighted
+//! parameter averaging. The baseline every other strategy builds on.
+
+use anyhow::Result;
+
+use crate::aggregate::mean::{weighted_mean, ReductionOrder};
+use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
+use crate::util::rng::Rng;
+
+pub struct FedAvg;
+
+impl Strategy for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn client_train(&self, ctx: &mut ClientCtx) -> Result<ClientUpdate> {
+        let lr = ctx.lr;
+        let start = ctx.global.to_vec();
+        let (params, mean_loss) =
+            ctx.run_epochs(&start, |b, p, x, y| b.sgd(p, x, y, lr))?;
+        Ok(ClientUpdate {
+            client: ctx.client.to_string(),
+            params,
+            weight: ctx.n_examples as f64,
+            extra: None,
+            mean_loss,
+        })
+    }
+
+    fn aggregate(
+        &self,
+        updates: &[ClientUpdate],
+        _global: &[f32],
+        order: ReductionOrder,
+        _round_rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
+        weighted_mean(&params, &weights, order)
+    }
+}

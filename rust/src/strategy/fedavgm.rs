@@ -1,0 +1,64 @@
+//! FedAvgM (Hsu et al. [2]): FedAvg clients + server-side momentum over the
+//! average update direction.
+
+use anyhow::Result;
+
+use crate::aggregate::mean::{apply_server_momentum, weighted_mean, ReductionOrder};
+use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
+use crate::util::rng::Rng;
+
+pub struct FedAvgM {
+    beta: f32,
+    velocity: Vec<f32>,
+}
+
+impl FedAvgM {
+    pub fn new(beta: f32) -> FedAvgM {
+        FedAvgM {
+            beta,
+            velocity: Vec::new(),
+        }
+    }
+}
+
+impl Strategy for FedAvgM {
+    fn name(&self) -> &'static str {
+        "fedavgm"
+    }
+
+    fn client_train(&self, ctx: &mut ClientCtx) -> Result<ClientUpdate> {
+        let lr = ctx.lr;
+        let start = ctx.global.to_vec();
+        let (params, mean_loss) =
+            ctx.run_epochs(&start, |b, p, x, y| b.sgd(p, x, y, lr))?;
+        Ok(ClientUpdate {
+            client: ctx.client.to_string(),
+            params,
+            weight: ctx.n_examples as f64,
+            extra: None,
+            mean_loss,
+        })
+    }
+
+    fn aggregate(
+        &self,
+        updates: &[ClientUpdate],
+        _global: &[f32],
+        order: ReductionOrder,
+        _round_rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
+        weighted_mean(&params, &weights, order)
+    }
+
+    fn post_round(
+        &mut self,
+        _updates: &[ClientUpdate],
+        global_before: &[f32],
+        consensus_params: Vec<f32>,
+    ) -> Vec<f32> {
+        // v <- beta v + (w - w_avg); w <- w - v   (momentum on the server).
+        apply_server_momentum(global_before, &consensus_params, &mut self.velocity, self.beta)
+    }
+}

@@ -1,0 +1,66 @@
+//! FedOpt (Reddi et al. [6]): FedAvg clients + an adaptive server optimizer
+//! (FedAdagrad / FedAdam / FedYogi) applied to the averaged pseudo-gradient
+//! after consensus. An extension strategy beyond the paper's Fig 8 set,
+//! from the direction its introduction cites as "server-side optimization".
+
+use std::cell::RefCell;
+
+use anyhow::Result;
+
+use crate::aggregate::mean::{weighted_mean, ReductionOrder};
+use crate::aggregate::server_opt::{ServerOpt, ServerOptKind};
+use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
+use crate::util::rng::Rng;
+
+pub struct FedOpt {
+    opt: RefCell<ServerOpt>,
+}
+
+impl FedOpt {
+    pub fn new(kind: ServerOptKind, server_lr: f32) -> FedOpt {
+        FedOpt {
+            opt: RefCell::new(ServerOpt::new(kind, server_lr)),
+        }
+    }
+}
+
+impl Strategy for FedOpt {
+    fn name(&self) -> &'static str {
+        "fedopt"
+    }
+
+    fn client_train(&self, ctx: &mut ClientCtx) -> Result<ClientUpdate> {
+        let lr = ctx.lr;
+        let start = ctx.global.to_vec();
+        let (params, mean_loss) =
+            ctx.run_epochs(&start, |b, p, x, y| b.sgd(p, x, y, lr))?;
+        Ok(ClientUpdate {
+            client: ctx.client.to_string(),
+            params,
+            weight: ctx.n_examples as f64,
+            extra: None,
+            mean_loss,
+        })
+    }
+
+    fn aggregate(
+        &self,
+        updates: &[ClientUpdate],
+        _global: &[f32],
+        order: ReductionOrder,
+        _round_rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
+        weighted_mean(&params, &weights, order)
+    }
+
+    fn post_round(
+        &mut self,
+        _updates: &[ClientUpdate],
+        global_before: &[f32],
+        consensus_params: Vec<f32>,
+    ) -> Vec<f32> {
+        self.opt.borrow_mut().apply(global_before, &consensus_params)
+    }
+}

@@ -1,0 +1,47 @@
+//! FedProx (Li et al. [3]): FedAvg with a client-side proximal term
+//! `(mu/2)||w - w_global||²` handled inside the AOT `prox` train step.
+
+use anyhow::Result;
+
+use crate::aggregate::mean::{weighted_mean, ReductionOrder};
+use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
+use crate::util::rng::Rng;
+
+pub struct FedProx {
+    pub mu: f32,
+}
+
+impl Strategy for FedProx {
+    fn name(&self) -> &'static str {
+        "fedprox"
+    }
+
+    fn client_train(&self, ctx: &mut ClientCtx) -> Result<ClientUpdate> {
+        let lr = ctx.lr;
+        let mu = self.mu;
+        let start = ctx.global.to_vec();
+        let global_lit = ctx.backend.params_lit(ctx.global)?;
+        let (params, mean_loss) = ctx.run_epochs(&start, |b, p, x, y| {
+            b.prox(p, &global_lit, x, y, lr, mu)
+        })?;
+        Ok(ClientUpdate {
+            client: ctx.client.to_string(),
+            params,
+            weight: ctx.n_examples as f64,
+            extra: None,
+            mean_loss,
+        })
+    }
+
+    fn aggregate(
+        &self,
+        updates: &[ClientUpdate],
+        _global: &[f32],
+        order: ReductionOrder,
+        _round_rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
+        weighted_mean(&params, &weights, order)
+    }
+}

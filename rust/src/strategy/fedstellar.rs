@@ -1,0 +1,94 @@
+//! Fedstellar-style decentralized FL (Beltrán et al. [24]): no central
+//! aggregator — every peer trains locally, gossips its model to its overlay
+//! neighbors, and averages what it received with its own model.
+//!
+//! The P2P exchange is why the paper's Fig 8e/11e show the decentralized
+//! runs with the highest network bandwidth: n·(n−1) model transfers per
+//! round instead of 2n.
+
+use anyhow::Result;
+
+use crate::aggregate::mean::{weighted_mean, ReductionOrder};
+use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
+use crate::util::rng::Rng;
+
+pub struct Fedstellar {
+    /// Gossip fan-in per round (0 = all overlay neighbors).
+    pub neighbors: usize,
+}
+
+impl Fedstellar {
+    /// Peer-local aggregation: average own update with pulled neighbor
+    /// models (uniform weights — Fedstellar's default).
+    pub fn peer_merge(
+        &self,
+        own: &ClientUpdate,
+        pulled: &[&ClientUpdate],
+        order: ReductionOrder,
+    ) -> Result<Vec<f32>> {
+        let mut params: Vec<&[f32]> = vec![own.params.as_slice()];
+        params.extend(pulled.iter().map(|u| u.params.as_slice()));
+        let weights = vec![1.0; params.len()];
+        weighted_mean(&params, &weights, order)
+    }
+}
+
+impl Strategy for Fedstellar {
+    fn name(&self) -> &'static str {
+        "fedstellar"
+    }
+
+    fn client_train(&self, ctx: &mut ClientCtx) -> Result<ClientUpdate> {
+        let lr = ctx.lr;
+        // Peers continue from their own previous model, not a global one —
+        // the orchestrator passes each peer's model as `global`.
+        let start = ctx.global.to_vec();
+        let (params, mean_loss) =
+            ctx.run_epochs(&start, |b, p, x, y| b.sgd(p, x, y, lr))?;
+        Ok(ClientUpdate {
+            client: ctx.client.to_string(),
+            params,
+            weight: ctx.n_examples as f64,
+            extra: None,
+            mean_loss,
+        })
+    }
+
+    fn aggregate(
+        &self,
+        updates: &[ClientUpdate],
+        _global: &[f32],
+        order: ReductionOrder,
+        _round_rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        // Used for reporting: the uniform mean over peer models ("virtual
+        // global model" the evaluation tracks).
+        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let weights = vec![1.0; params.len()];
+        weighted_mean(&params, &weights, order)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peer_merge_uniform_average() {
+        let strat = Fedstellar { neighbors: 0 };
+        let mk = |v: f32| ClientUpdate {
+            client: "p".into(),
+            params: vec![v; 4],
+            weight: 1.0,
+            extra: None,
+            mean_loss: 0.0,
+        };
+        let own = mk(0.0);
+        let n1 = mk(3.0);
+        let n2 = mk(6.0);
+        let merged = strat
+            .peer_merge(&own, &[&n1, &n2], ReductionOrder::Sequential)
+            .unwrap();
+        assert!((merged[0] - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,88 @@
+//! FL+HC (Briggs et al. [26]): federated learning with hierarchical
+//! clustering of client updates.
+//!
+//! Runs as plain FedAvg until `cluster_round`; at that round the
+//! orchestrator clusters clients by the L2 geometry of their local models
+//! (agglomerative, average linkage) and from then on maintains one model
+//! per cluster. Reported metrics are the example-weighted average over
+//! cluster models — which is why the paper's Fig 8 shows FL+HC with the
+//! lowest aggregate accuracy and the highest wall time (extra clustering +
+//! per-cluster aggregation/eval work).
+
+use anyhow::Result;
+
+use crate::aggregate::cluster::{agglomerative_clusters, Linkage};
+use crate::aggregate::mean::{weighted_mean, ReductionOrder};
+use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
+use crate::util::rng::Rng;
+
+pub struct FlHc {
+    pub cluster_round: u64,
+    pub n_clusters: usize,
+}
+
+impl FlHc {
+    /// Cluster clients by their uploaded parameters (called by the
+    /// orchestrator exactly at `cluster_round`).
+    pub fn cluster_clients(&self, updates: &[ClientUpdate]) -> Vec<usize> {
+        let vectors: Vec<Vec<f32>> = updates.iter().map(|u| u.params.clone()).collect();
+        agglomerative_clusters(&vectors, self.n_clusters, f64::INFINITY, Linkage::Average)
+    }
+}
+
+impl Strategy for FlHc {
+    fn name(&self) -> &'static str {
+        "flhc"
+    }
+
+    fn client_train(&self, ctx: &mut ClientCtx) -> Result<ClientUpdate> {
+        let lr = ctx.lr;
+        let start = ctx.global.to_vec();
+        let (params, mean_loss) =
+            ctx.run_epochs(&start, |b, p, x, y| b.sgd(p, x, y, lr))?;
+        Ok(ClientUpdate {
+            client: ctx.client.to_string(),
+            params,
+            weight: ctx.n_examples as f64,
+            extra: None,
+            mean_loss,
+        })
+    }
+
+    fn aggregate(
+        &self,
+        updates: &[ClientUpdate],
+        _global: &[f32],
+        order: ReductionOrder,
+        _round_rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
+        weighted_mean(&params, &weights, order)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clusters_split_divergent_clients() {
+        let strat = FlHc {
+            cluster_round: 1,
+            n_clusters: 2,
+        };
+        let mk = |v: f32| ClientUpdate {
+            client: format!("c{v}"),
+            params: vec![v; 16],
+            weight: 1.0,
+            extra: None,
+            mean_loss: 0.0,
+        };
+        let updates = vec![mk(0.0), mk(0.1), mk(5.0), mk(5.1)];
+        let ids = strat.cluster_clients(&updates);
+        assert_eq!(ids[0], ids[1]);
+        assert_eq!(ids[2], ids[3]);
+        assert_ne!(ids[0], ids[2]);
+    }
+}

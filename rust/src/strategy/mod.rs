@@ -1,0 +1,260 @@
+//! FL strategies (paper §2.2 "FLsim FL-Strategy" / Fig 8): the pluggable
+//! train + aggregate logic. Seven strategies from the paper's RQ1 evaluation
+//! plus FedProx as an extension:
+//!
+//! | strategy    | reference                         | mode          |
+//! |-------------|-----------------------------------|---------------|
+//! | `fedavg`    | McMahan et al. [1]                | global        |
+//! | `fedavgm`   | Hsu et al. [2] (server momentum)  | global        |
+//! | `fedprox`   | Li et al. [3]                     | global        |
+//! | `scaffold`  | Karimireddy et al. [5]            | global        |
+//! | `moon`      | Li et al. [4] (model-contrastive) | global        |
+//! | `dpfl`      | Geyer et al. [7] (client DP)      | global        |
+//! | `flhc`      | Briggs et al. [26] (clustering)   | clustered     |
+//! | `fedstellar`| Beltrán et al. [24]               | decentralized |
+
+pub mod ctx;
+pub mod dpfl;
+pub mod fedavg;
+pub mod fedavgm;
+pub mod fedopt;
+pub mod fedprox;
+pub mod fedstellar;
+pub mod flhc;
+pub mod moon;
+pub mod scaffold;
+
+use anyhow::{bail, Result};
+
+use crate::aggregate::mean::ReductionOrder;
+use crate::util::rng::Rng;
+use crate::util::yaml::Yaml;
+
+pub use ctx::{ClientCtx, ClientUpdate};
+
+/// How the orchestrator runs a strategy's round loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrategyMode {
+    /// Single global model via workers (+ optional consensus).
+    Global,
+    /// FL+HC: one model per client cluster after the clustering round.
+    Clustered,
+    /// Peer-to-peer: every node trains and aggregates locally.
+    Decentralized,
+}
+
+/// Parsed strategy selection with hyper-parameters (Fig 2d `extra_params`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum StrategyKind {
+    FedAvg,
+    FedAvgM { server_momentum: f32 },
+    FedProx { mu: f32 },
+    Scaffold,
+    Moon { mu: f32, tau: f32 },
+    DpFl { clip: f64, sigma: f64 },
+    FedOpt { kind: crate::aggregate::server_opt::ServerOptKind, server_lr: f32 },
+    FlHc { cluster_round: u64, n_clusters: usize },
+    Fedstellar { neighbors: usize },
+}
+
+impl StrategyKind {
+    pub fn parse(name: &str, extra: &Yaml) -> Result<StrategyKind> {
+        let f = |k: &str, d: f64| extra.get(k).and_then(Yaml::as_f64).unwrap_or(d);
+        let i = |k: &str, d: i64| extra.get(k).and_then(Yaml::as_i64).unwrap_or(d);
+        Ok(match name {
+            "fedavg" => StrategyKind::FedAvg,
+            "fedavgm" => StrategyKind::FedAvgM {
+                server_momentum: f("server_momentum", 0.9) as f32,
+            },
+            "fedprox" => StrategyKind::FedProx {
+                mu: f("mu", 0.01) as f32,
+            },
+            "scaffold" => StrategyKind::Scaffold,
+            "moon" => StrategyKind::Moon {
+                mu: f("mu", 1.0) as f32,
+                tau: f("tau", 0.5) as f32,
+            },
+            "dpfl" => StrategyKind::DpFl {
+                clip: f("clip", 10.0),
+                sigma: f("sigma", 0.005),
+            },
+            "fedopt" | "fedadam" | "fedyogi" | "fedadagrad" => StrategyKind::FedOpt {
+                kind: crate::aggregate::server_opt::ServerOptKind::parse(
+                    extra
+                        .get("server_opt")
+                        .and_then(Yaml::as_str)
+                        .unwrap_or(if name == "fedopt" { "adam" } else { &name[3..] }),
+                )?,
+                server_lr: f("server_lr", 0.1) as f32,
+            },
+            "flhc" => StrategyKind::FlHc {
+                cluster_round: i("cluster_round", 5) as u64,
+                n_clusters: i("n_clusters", 3) as usize,
+            },
+            "fedstellar" => StrategyKind::Fedstellar {
+                neighbors: i("neighbors", 0) as usize, // 0 = all
+            },
+            _ => bail!("unknown strategy '{name}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::FedAvg => "fedavg",
+            StrategyKind::FedAvgM { .. } => "fedavgm",
+            StrategyKind::FedProx { .. } => "fedprox",
+            StrategyKind::Scaffold => "scaffold",
+            StrategyKind::Moon { .. } => "moon",
+            StrategyKind::DpFl { .. } => "dpfl",
+            StrategyKind::FedOpt { .. } => "fedopt",
+            StrategyKind::FlHc { .. } => "flhc",
+            StrategyKind::Fedstellar { .. } => "fedstellar",
+        }
+    }
+
+    pub fn mode(&self) -> StrategyMode {
+        match self {
+            StrategyKind::FlHc { .. } => StrategyMode::Clustered,
+            StrategyKind::Fedstellar { .. } => StrategyMode::Decentralized,
+            _ => StrategyMode::Global,
+        }
+    }
+
+    /// Which train-step artifact the backend must provide.
+    pub fn required_artifact(&self) -> &'static str {
+        match self {
+            StrategyKind::FedProx { .. } => "prox",
+            StrategyKind::Scaffold => "scaffold",
+            StrategyKind::Moon { .. } => "moon",
+            _ => "sgd",
+        }
+    }
+
+    /// Instantiate the strategy implementation.
+    pub fn build(&self) -> Box<dyn Strategy> {
+        match self.clone() {
+            StrategyKind::FedAvg => Box::new(fedavg::FedAvg),
+            StrategyKind::FedAvgM { server_momentum } => {
+                Box::new(fedavgm::FedAvgM::new(server_momentum))
+            }
+            StrategyKind::FedProx { mu } => Box::new(fedprox::FedProx { mu }),
+            StrategyKind::Scaffold => Box::new(scaffold::Scaffold::default()),
+            StrategyKind::Moon { mu, tau } => Box::new(moon::Moon { mu, tau }),
+            StrategyKind::DpFl { clip, sigma } => Box::new(dpfl::DpFl { clip, sigma }),
+            StrategyKind::FedOpt { kind, server_lr } => {
+                Box::new(fedopt::FedOpt::new(kind, server_lr))
+            }
+            StrategyKind::FlHc {
+                cluster_round,
+                n_clusters,
+            } => Box::new(flhc::FlHc {
+                cluster_round,
+                n_clusters,
+            }),
+            StrategyKind::Fedstellar { neighbors } => {
+                Box::new(fedstellar::Fedstellar { neighbors })
+            }
+        }
+    }
+}
+
+/// The pluggable strategy interface — the Rust analogue of the paper's
+/// `LearnStrategyBase` (train / aggregate; test lives in the orchestrator's
+/// evaluation loop, identical for all strategies).
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+
+    /// Run one client's local training for the round; returns its update.
+    fn client_train(&self, ctx: &mut ClientCtx) -> Result<ClientUpdate>;
+
+    /// Worker-side aggregation of the round's client updates into a
+    /// proposal for the next global model. Pure w.r.t. strategy state
+    /// (multiple workers must produce identical honest proposals).
+    fn aggregate(
+        &self,
+        updates: &[ClientUpdate],
+        global: &[f32],
+        order: ReductionOrder,
+        round_rng: &mut Rng,
+    ) -> Result<Vec<f32>>;
+
+    /// Post-consensus global state update (server momentum, control
+    /// variates, ...). Receives the consensus winner; returns the final
+    /// global parameters for the next round.
+    fn post_round(
+        &mut self,
+        _updates: &[ClientUpdate],
+        _global_before: &[f32],
+        consensus_params: Vec<f32>,
+    ) -> Vec<f32> {
+        consensus_params
+    }
+
+    /// Extra per-client state the client must download before training
+    /// (e.g. SCAFFOLD's c_global) — `None` for most strategies.
+    fn client_extra_state(&self) -> Option<Vec<f32>> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_kinds() {
+        for (n, mode) in [
+            ("fedavg", StrategyMode::Global),
+            ("fedavgm", StrategyMode::Global),
+            ("fedprox", StrategyMode::Global),
+            ("scaffold", StrategyMode::Global),
+            ("moon", StrategyMode::Global),
+            ("dpfl", StrategyMode::Global),
+            ("flhc", StrategyMode::Clustered),
+            ("fedstellar", StrategyMode::Decentralized),
+        ] {
+            let k = StrategyKind::parse(n, &Yaml::Null).unwrap();
+            assert_eq!(k.name(), n);
+            assert_eq!(k.mode(), mode);
+            let _ = k.build();
+        }
+        assert!(StrategyKind::parse("fancy", &Yaml::Null).is_err());
+    }
+
+    #[test]
+    fn extra_params_respected() {
+        let y = Yaml::parse("mu: 5.0\ntau: 0.1\n").unwrap();
+        match StrategyKind::parse("moon", &y).unwrap() {
+            StrategyKind::Moon { mu, tau } => {
+                assert_eq!(mu, 5.0);
+                assert_eq!(tau, 0.1);
+            }
+            _ => panic!(),
+        }
+        let y = Yaml::parse("cluster_round: 9\nn_clusters: 4\n").unwrap();
+        match StrategyKind::parse("flhc", &y).unwrap() {
+            StrategyKind::FlHc {
+                cluster_round,
+                n_clusters,
+            } => {
+                assert_eq!(cluster_round, 9);
+                assert_eq!(n_clusters, 4);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn required_artifacts() {
+        assert_eq!(StrategyKind::FedAvg.required_artifact(), "sgd");
+        assert_eq!(StrategyKind::Scaffold.required_artifact(), "scaffold");
+        assert_eq!(
+            StrategyKind::Moon { mu: 1.0, tau: 0.5 }.required_artifact(),
+            "moon"
+        );
+        assert_eq!(
+            StrategyKind::FedProx { mu: 0.1 }.required_artifact(),
+            "prox"
+        );
+    }
+}

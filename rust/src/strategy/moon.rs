@@ -1,0 +1,58 @@
+//! MOON (Li et al. [4]): model-contrastive federated learning. The client's
+//! loss adds a contrastive term pulling its representation toward the global
+//! model's and away from its own previous round's — all three forward passes
+//! live in the AOT `moon` artifact.
+
+use anyhow::Result;
+
+use crate::aggregate::mean::{weighted_mean, ReductionOrder};
+use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
+use crate::util::rng::Rng;
+
+pub struct Moon {
+    pub mu: f32,
+    pub tau: f32,
+}
+
+impl Strategy for Moon {
+    fn name(&self) -> &'static str {
+        "moon"
+    }
+
+    fn client_train(&self, ctx: &mut ClientCtx) -> Result<ClientUpdate> {
+        let lr = ctx.lr;
+        let (mu, tau) = (self.mu, self.tau);
+        let start = ctx.global.to_vec();
+        // First round: previous-local anchor defaults to the global model.
+        let prev = ctx
+            .state
+            .prev_params
+            .clone()
+            .unwrap_or_else(|| start.clone());
+        let global_lit = ctx.backend.params_lit(ctx.global)?;
+        let prev_lit = ctx.backend.params_lit(&prev)?;
+        let (params, mean_loss) = ctx.run_epochs(&start, |b, p, x, y| {
+            b.moon(p, &global_lit, &prev_lit, x, y, lr, mu, tau)
+        })?;
+        ctx.state.prev_params = Some(params.clone());
+        Ok(ClientUpdate {
+            client: ctx.client.to_string(),
+            params,
+            weight: ctx.n_examples as f64,
+            extra: None,
+            mean_loss,
+        })
+    }
+
+    fn aggregate(
+        &self,
+        updates: &[ClientUpdate],
+        _global: &[f32],
+        order: ReductionOrder,
+        _round_rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
+        weighted_mean(&params, &weights, order)
+    }
+}

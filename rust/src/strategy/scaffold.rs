@@ -1,0 +1,114 @@
+//! SCAFFOLD (Karimireddy et al. [5]): stochastic controlled averaging with
+//! client/server control variates.
+//!
+//! The batch step runs in the AOT `scaffold` artifact
+//! (`w <- w - lr (g - c_i + c)`); the option-II control-variate update is
+//! element-wise and runs here: `c_i' = c_i - c + (w_0 - w_K)/(K lr)`.
+//! Clients upload `(w_K, dc_i)`; the server folds `mean(dc_i)` into the
+//! global control variate after consensus — the "extra states (control
+//! variates)" communication the paper calls out in requirement (5).
+
+use anyhow::Result;
+
+use crate::aggregate::mean::{scaffold_cv_update, weighted_mean, ReductionOrder};
+use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
+use crate::util::rng::Rng;
+
+#[derive(Default)]
+pub struct Scaffold {
+    /// Server control variate c (lazily sized on first round).
+    c_global: Vec<f32>,
+}
+
+impl Strategy for Scaffold {
+    fn name(&self) -> &'static str {
+        "scaffold"
+    }
+
+    fn client_train(&self, ctx: &mut ClientCtx) -> Result<ClientUpdate> {
+        let dim = ctx.global.len();
+        let lr = ctx.lr;
+        let c_global: Vec<f32> = ctx
+            .extra_state
+            .map(|s| s.to_vec())
+            .unwrap_or_else(|| vec![0.0; dim]);
+        let c_local = ctx
+            .state
+            .c_local
+            .clone()
+            .unwrap_or_else(|| vec![0.0; dim]);
+
+        let start = ctx.global.to_vec();
+        let c_lit = ctx.backend.params_lit(&c_global)?;
+        let ci_lit = ctx.backend.params_lit(&c_local)?;
+        let (params, mean_loss) = ctx.run_epochs(&start, |b, p, x, y| {
+            b.scaffold(p, &c_lit, &ci_lit, x, y, lr)
+        })?;
+
+        let k_steps = ctx.steps_per_round();
+        let ci_new = scaffold_cv_update(&c_local, &c_global, &start, &params, k_steps, lr);
+        let dci: Vec<f32> = ci_new
+            .iter()
+            .zip(&c_local)
+            .map(|(&n, &o)| n - o)
+            .collect();
+        ctx.state.c_local = Some(ci_new);
+
+        Ok(ClientUpdate {
+            client: ctx.client.to_string(),
+            params,
+            weight: ctx.n_examples as f64,
+            extra: Some(dci),
+            mean_loss,
+        })
+    }
+
+    fn aggregate(
+        &self,
+        updates: &[ClientUpdate],
+        _global: &[f32],
+        order: ReductionOrder,
+        _round_rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
+        weighted_mean(&params, &weights, order)
+    }
+
+    fn post_round(
+        &mut self,
+        updates: &[ClientUpdate],
+        global_before: &[f32],
+        consensus_params: Vec<f32>,
+    ) -> Vec<f32> {
+        // c <- c + mean_i(dc_i)  (full participation; |S| = N).
+        let dim = global_before.len();
+        if self.c_global.len() != dim {
+            self.c_global = vec![0.0; dim];
+        }
+        let mut n = 0usize;
+        let mut sum = vec![0f64; dim];
+        for u in updates {
+            if let Some(dci) = &u.extra {
+                n += 1;
+                for (s, &d) in sum.iter_mut().zip(dci) {
+                    *s += d as f64;
+                }
+            }
+        }
+        if n > 0 {
+            for (c, s) in self.c_global.iter_mut().zip(&sum) {
+                *c += (*s / n as f64) as f32;
+            }
+        }
+        consensus_params
+    }
+
+    fn client_extra_state(&self) -> Option<Vec<f32>> {
+        if self.c_global.is_empty() {
+            None
+        } else {
+            Some(self.c_global.clone())
+        }
+    }
+}

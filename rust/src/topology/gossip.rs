@@ -1,0 +1,82 @@
+//! Gossip schedules for decentralized topologies: which peer exchanges with
+//! which in a round (used by the Fedstellar-style DFL strategy).
+
+use crate::topology::graph::Overlay;
+use crate::util::rng::Rng;
+
+/// A round's exchange plan: for each peer, the peers it pulls models from.
+#[derive(Clone, Debug)]
+pub struct GossipPlan {
+    pub pulls: Vec<(String, Vec<String>)>,
+}
+
+/// Full gossip: every peer pulls from all of its overlay neighbors
+/// (fully-connected DFL — highest bandwidth, matches Fig 11e).
+pub fn full_exchange(overlay: &Overlay) -> GossipPlan {
+    let mut pulls = Vec::new();
+    let mut peers = overlay.clients();
+    peers.sort();
+    for p in peers {
+        let mut ns = overlay.neighbors(&p);
+        ns.sort();
+        pulls.push((p, ns));
+    }
+    GossipPlan { pulls }
+}
+
+/// Random-k gossip: each peer pulls from k random neighbors (deterministic
+/// under the round-derived rng).
+pub fn random_k(overlay: &Overlay, k: usize, rng: &mut Rng) -> GossipPlan {
+    let mut pulls = Vec::new();
+    let mut peers = overlay.clients();
+    peers.sort();
+    for p in peers {
+        let mut ns = overlay.neighbors(&p);
+        ns.sort();
+        if ns.len() > k {
+            let idx = rng.choose_indices(ns.len(), k);
+            let mut chosen: Vec<String> = idx.into_iter().map(|i| ns[i].clone()).collect();
+            chosen.sort();
+            pulls.push((p, chosen));
+        } else {
+            pulls.push((p, ns));
+        }
+    }
+    GossipPlan { pulls }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_exchange_covers_all_neighbors() {
+        let o = Overlay::fully_connected(4);
+        let plan = full_exchange(&o);
+        assert_eq!(plan.pulls.len(), 4);
+        for (_, ns) in &plan.pulls {
+            assert_eq!(ns.len(), 3);
+        }
+    }
+
+    #[test]
+    fn random_k_bounded_and_deterministic() {
+        let o = Overlay::fully_connected(6);
+        let a = random_k(&o, 2, &mut Rng::seed_from(1));
+        let b = random_k(&o, 2, &mut Rng::seed_from(1));
+        for ((pa, na), (pb, nb)) in a.pulls.iter().zip(&b.pulls) {
+            assert_eq!(pa, pb);
+            assert_eq!(na, nb);
+            assert_eq!(na.len(), 2);
+        }
+    }
+
+    #[test]
+    fn ring_gossip_uses_ring_neighbors() {
+        let o = Overlay::ring(5);
+        let plan = full_exchange(&o);
+        for (_, ns) in &plan.pulls {
+            assert_eq!(ns.len(), 2);
+        }
+    }
+}

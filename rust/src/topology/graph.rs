@@ -1,0 +1,318 @@
+//! Overlay graph: the node-role assignment plus directed communication
+//! edges an FL job runs over (paper Fig 2c "cluster config" / Fig 4).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeRole {
+    Client,
+    Worker,
+    /// Acts as both (decentralized FL: every peer trains and aggregates).
+    Hybrid,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Classic FedAvg star: clients <-> workers.
+    ClientServer,
+    /// Two-level tree: leaf clusters aggregate locally, then an upstream
+    /// root cluster merges cluster models (paper's hierarchical FL).
+    Hierarchical,
+    /// Fully-connected peer-to-peer (Fedstellar's DFL baseline).
+    FullyConnected,
+    /// Ring gossip.
+    Ring,
+}
+
+impl TopologyKind {
+    pub fn parse(s: &str) -> Result<TopologyKind> {
+        Ok(match s {
+            "client_server" | "client-server" | "star" => TopologyKind::ClientServer,
+            "hierarchical" | "hfl" => TopologyKind::Hierarchical,
+            "fully_connected" | "p2p" | "dfl" => TopologyKind::FullyConnected,
+            "ring" => TopologyKind::Ring,
+            _ => return Err(anyhow!("unknown topology '{s}'")),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::ClientServer => "client_server",
+            TopologyKind::Hierarchical => "hierarchical",
+            TopologyKind::FullyConnected => "fully_connected",
+            TopologyKind::Ring => "ring",
+        }
+    }
+}
+
+/// A cluster: a set of client nodes served by a set of worker nodes.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub name: String,
+    pub clients: Vec<String>,
+    pub workers: Vec<String>,
+    /// Name of the upstream cluster (hierarchical topologies), if any.
+    pub upstream: Option<String>,
+}
+
+/// The overlay: nodes with roles, directed edges, cluster structure.
+#[derive(Clone, Debug, Default)]
+pub struct Overlay {
+    pub roles: BTreeMap<String, NodeRole>,
+    pub edges: BTreeSet<(String, String)>,
+    pub clusters: Vec<Cluster>,
+}
+
+impl Overlay {
+    /// Star topology: `n_clients` clients all connected to `n_workers`
+    /// workers (multi-worker => the consensus path of §2.5).
+    pub fn client_server(n_clients: usize, n_workers: usize) -> Overlay {
+        let clients: Vec<String> = (0..n_clients).map(|i| format!("client_{i}")).collect();
+        let workers: Vec<String> = (0..n_workers).map(|i| format!("worker_{i}")).collect();
+        let mut o = Overlay::default();
+        for c in &clients {
+            o.roles.insert(c.clone(), NodeRole::Client);
+        }
+        for w in &workers {
+            o.roles.insert(w.clone(), NodeRole::Worker);
+        }
+        for c in &clients {
+            for w in &workers {
+                o.edges.insert((c.clone(), w.clone()));
+                o.edges.insert((w.clone(), c.clone()));
+            }
+        }
+        o.clusters.push(Cluster {
+            name: "cluster_0".into(),
+            clients,
+            workers,
+            upstream: None,
+        });
+        o
+    }
+
+    /// Hierarchical: `n_clusters` leaf clusters of clients, each with one
+    /// worker, all reporting to a root worker.
+    pub fn hierarchical(n_clients: usize, n_clusters: usize) -> Overlay {
+        assert!(n_clusters > 0);
+        let mut o = Overlay::default();
+        let root = "root_worker".to_string();
+        o.roles.insert(root.clone(), NodeRole::Worker);
+        for k in 0..n_clusters {
+            let w = format!("cluster{k}_worker");
+            o.roles.insert(w.clone(), NodeRole::Worker);
+            o.edges.insert((w.clone(), root.clone()));
+            o.edges.insert((root.clone(), w.clone()));
+            let mut clients = Vec::new();
+            for i in 0..n_clients {
+                if i % n_clusters == k {
+                    let c = format!("client_{i}");
+                    o.roles.insert(c.clone(), NodeRole::Client);
+                    o.edges.insert((c.clone(), w.clone()));
+                    o.edges.insert((w.clone(), c.clone()));
+                    clients.push(c);
+                }
+            }
+            o.clusters.push(Cluster {
+                name: format!("cluster_{k}"),
+                clients,
+                workers: vec![w],
+                upstream: Some("root".into()),
+            });
+        }
+        o.clusters.push(Cluster {
+            name: "root".into(),
+            clients: Vec::new(),
+            workers: vec![root],
+            upstream: None,
+        });
+        o
+    }
+
+    /// Fully-connected DFL: every node is a hybrid peer linked to all others.
+    pub fn fully_connected(n: usize) -> Overlay {
+        let peers: Vec<String> = (0..n).map(|i| format!("peer_{i}")).collect();
+        let mut o = Overlay::default();
+        for p in &peers {
+            o.roles.insert(p.clone(), NodeRole::Hybrid);
+        }
+        for a in &peers {
+            for b in &peers {
+                if a != b {
+                    o.edges.insert((a.clone(), b.clone()));
+                }
+            }
+        }
+        o.clusters.push(Cluster {
+            name: "mesh".into(),
+            clients: peers.clone(),
+            workers: peers,
+            upstream: None,
+        });
+        o
+    }
+
+    /// Ring gossip: peer i <-> peers i±1 (mod n).
+    pub fn ring(n: usize) -> Overlay {
+        let peers: Vec<String> = (0..n).map(|i| format!("peer_{i}")).collect();
+        let mut o = Overlay::default();
+        for p in &peers {
+            o.roles.insert(p.clone(), NodeRole::Hybrid);
+        }
+        for i in 0..n {
+            let j = (i + 1) % n;
+            o.edges.insert((peers[i].clone(), peers[j].clone()));
+            o.edges.insert((peers[j].clone(), peers[i].clone()));
+        }
+        o.clusters.push(Cluster {
+            name: "ring".into(),
+            clients: peers.clone(),
+            workers: peers,
+            upstream: None,
+        });
+        o
+    }
+
+    pub fn build(kind: TopologyKind, n_clients: usize, n_workers: usize) -> Overlay {
+        match kind {
+            TopologyKind::ClientServer => Overlay::client_server(n_clients, n_workers),
+            TopologyKind::Hierarchical => Overlay::hierarchical(n_clients, n_workers.max(1)),
+            TopologyKind::FullyConnected => Overlay::fully_connected(n_clients),
+            TopologyKind::Ring => Overlay::ring(n_clients),
+        }
+    }
+
+    pub fn clients(&self) -> Vec<String> {
+        self.by_role(NodeRole::Client, true)
+    }
+
+    pub fn workers(&self) -> Vec<String> {
+        self.by_role(NodeRole::Worker, false)
+    }
+
+    fn by_role(&self, role: NodeRole, include_hybrid_as: bool) -> Vec<String> {
+        self.roles
+            .iter()
+            .filter(|(_, &r)| {
+                r == role || (r == NodeRole::Hybrid && (include_hybrid_as || role == NodeRole::Worker))
+            })
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+
+    pub fn neighbors(&self, node: &str) -> Vec<String> {
+        self.edges
+            .iter()
+            .filter(|(a, _)| a == node)
+            .map(|(_, b)| b.clone())
+            .collect()
+    }
+
+    pub fn has_edge(&self, a: &str, b: &str) -> bool {
+        self.edges.contains(&(a.to_string(), b.to_string()))
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.roles.len()
+    }
+
+    /// Validate structural invariants the controller depends on.
+    pub fn validate(&self) -> Result<()> {
+        if self.clients().is_empty() {
+            return Err(anyhow!("overlay has no clients"));
+        }
+        if self.workers().is_empty() {
+            return Err(anyhow!("overlay has no workers/aggregators"));
+        }
+        for (a, b) in &self.edges {
+            if !self.roles.contains_key(a) || !self.roles.contains_key(b) {
+                return Err(anyhow!("edge ({a},{b}) references unknown node"));
+            }
+            if a == b {
+                return Err(anyhow!("self-loop on {a}"));
+            }
+        }
+        for cl in &self.clusters {
+            for n in cl.clients.iter().chain(&cl.workers) {
+                if !self.roles.contains_key(n) {
+                    return Err(anyhow!("cluster {} references unknown node {n}", cl.name));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_server_shape() {
+        let o = Overlay::client_server(10, 2);
+        assert_eq!(o.clients().len(), 10);
+        assert_eq!(o.workers().len(), 2);
+        assert_eq!(o.n_nodes(), 12);
+        assert!(o.has_edge("client_0", "worker_1"));
+        assert!(o.has_edge("worker_0", "client_9"));
+        assert!(!o.has_edge("client_0", "client_1"));
+        o.validate().unwrap();
+    }
+
+    #[test]
+    fn hierarchical_shape() {
+        let o = Overlay::hierarchical(10, 3);
+        // 10 clients + 3 cluster workers + root.
+        assert_eq!(o.n_nodes(), 14);
+        assert_eq!(o.clusters.len(), 4);
+        assert!(o.has_edge("cluster0_worker", "root_worker"));
+        assert!(!o.has_edge("client_0", "root_worker"));
+        o.validate().unwrap();
+        // Every client belongs to exactly one leaf cluster.
+        let mut seen = BTreeSet::new();
+        for cl in &o.clusters {
+            for c in &cl.clients {
+                assert!(seen.insert(c.clone()), "{c} in two clusters");
+            }
+        }
+        assert_eq!(seen.len(), 10);
+    }
+
+    #[test]
+    fn fully_connected_shape() {
+        let o = Overlay::fully_connected(5);
+        assert_eq!(o.n_nodes(), 5);
+        assert_eq!(o.edges.len(), 5 * 4);
+        // Hybrids double as clients and workers.
+        assert_eq!(o.clients().len(), 5);
+        assert_eq!(o.workers().len(), 5);
+        o.validate().unwrap();
+    }
+
+    #[test]
+    fn ring_shape() {
+        let o = Overlay::ring(6);
+        assert_eq!(o.edges.len(), 12);
+        assert_eq!(o.neighbors("peer_0").len(), 2);
+        o.validate().unwrap();
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(TopologyKind::parse("p2p").unwrap(), TopologyKind::FullyConnected);
+        assert_eq!(
+            TopologyKind::parse("client-server").unwrap(),
+            TopologyKind::ClientServer
+        );
+        assert!(TopologyKind::parse("torus").is_err());
+    }
+
+    #[test]
+    fn validate_catches_missing_roles() {
+        let mut o = Overlay::client_server(2, 1);
+        o.edges.insert(("ghost".into(), "worker_0".into()));
+        assert!(o.validate().is_err());
+    }
+}

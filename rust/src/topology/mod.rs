@@ -1,0 +1,8 @@
+//! Network topologies (paper Fig 4 / RQ5): client-server, hierarchical
+//! cluster trees, decentralized fully-connected P2P and rings, represented
+//! as an overlay graph the orchestrator wires nodes into.
+
+pub mod gossip;
+pub mod graph;
+
+pub use graph::{NodeRole, Overlay, TopologyKind};

@@ -1,0 +1,77 @@
+//! Hashing helpers: SHA-256 digests of model parameters.
+//!
+//! Parameter hashes drive the multi-worker consensus (workers vote on the
+//! hash of their aggregated model, §2.5 phase 2) and the blockchain
+//! contracts (parameter verification / provenance).
+
+use sha2::{Digest, Sha256};
+
+/// SHA-256 of raw bytes, hex-encoded.
+pub fn sha256_hex(bytes: &[u8]) -> String {
+    let mut h = Sha256::new();
+    h.update(bytes);
+    hex(&h.finalize())
+}
+
+/// SHA-256 digest of an f32 parameter vector (over its IEEE-754 LE bytes,
+/// so bitwise-identical models — and only those — collide).
+pub fn hash_params(params: &[f32]) -> String {
+    let mut h = Sha256::new();
+    for chunk in params.chunks(4096) {
+        // SAFETY-free path: serialize to LE bytes explicitly.
+        let mut buf = Vec::with_capacity(chunk.len() * 4);
+        for v in chunk {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        h.update(&buf);
+    }
+    hex(&h.finalize())
+}
+
+/// Short (16-hex-char) parameter hash for logs and chain txs.
+pub fn short_hash(params: &[f32]) -> String {
+    hash_params(params)[..16].to_string()
+}
+
+pub fn hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_known_vector() {
+        // sha256("abc")
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn param_hash_sensitive_to_any_element() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let mut b = a.clone();
+        b[2] = 3.0000002;
+        assert_eq!(hash_params(&a), hash_params(&a));
+        assert_ne!(hash_params(&a), hash_params(&b));
+    }
+
+    #[test]
+    fn param_hash_distinguishes_nan_payloads_consistently() {
+        let a = vec![f32::NAN];
+        assert_eq!(hash_params(&a), hash_params(&a));
+    }
+
+    #[test]
+    fn short_hash_is_prefix() {
+        let p = vec![0.5f32; 10];
+        assert!(hash_params(&p).starts_with(&short_hash(&p)));
+    }
+}

@@ -1,0 +1,101 @@
+//! Leveled logger (the offline image carries no `log`/`env_logger` pair
+//! wired for binaries, so FLsim ships its own minimal logger).
+//!
+//! Controlled by `FLSIM_LOG` = `error|warn|info|debug|trace` (default
+//! `info`). The orchestrator and logic controller emit the paper's
+//! Algorithm-1 "emit" lines at `info`.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+
+/// Initialize from `FLSIM_LOG` (idempotent; called by binaries).
+pub fn init_from_env() {
+    let lvl = std::env::var("FLSIM_LOG").unwrap_or_default();
+    set_level(match lvl.to_ascii_lowercase().as_str() {
+        "error" => Level::Error,
+        "warn" => Level::Warn,
+        "debug" => Level::Debug,
+        "trace" => Level::Trace,
+        _ => Level::Info,
+    });
+    Lazy::force(&START);
+}
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, target: &str, msg: &str) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.elapsed().as_secs_f64();
+    let tag = match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    let mut out = std::io::stderr().lock();
+    let _ = writeln!(out, "[{t:9.3}s {tag} {target}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, $target,
+                                   &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, $target,
+                                   &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, $target,
+                                   &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

@@ -1,0 +1,9 @@
+//! Support substrates built from scratch for the offline environment:
+//! deterministic RNG, JSON/YAML parsing, hashing, statistics, logging.
+
+pub mod hash;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod yaml;

@@ -1,0 +1,500 @@
+//! YAML-subset parser for FLsim job configurations (paper Fig 2).
+//!
+//! Supports the features the job-config schema uses: nested block mappings,
+//! block sequences, inline scalars (str/int/float/bool/null), quoted strings,
+//! comments, anchors (`&name`), aliases (`*name`) and merge keys (`<<:`) —
+//! the exact constructs in the paper's Figure 2 examples. Flow collections
+//! (`[a, b]` / `{a: b}`) are supported one level deep for convenience.
+//!
+//! Not a general YAML 1.2 implementation (no multi-docs, block scalars,
+//! tags, or complex keys) — the config layer validates against the schema
+//! anyway, and a hand-rolled subset keeps the offline build dependency-free.
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+pub type Map = BTreeMap<String, Yaml>;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Yaml {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Seq(Vec<Yaml>),
+    Map(Map),
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("yaml parse error at line {line}: {msg}")]
+pub struct YamlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Yaml {
+    pub fn parse(src: &str) -> Result<Yaml, YamlError> {
+        let lines = preprocess(src);
+        let mut anchors = HashMap::new();
+        let mut pos = 0;
+        if lines.is_empty() {
+            return Ok(Yaml::Null);
+        }
+        let v = parse_block(&lines, &mut pos, lines[0].indent, &mut anchors)?;
+        if pos != lines.len() {
+            return Err(YamlError {
+                line: lines[pos].number,
+                msg: "unexpected trailing content (bad indentation?)".into(),
+            });
+        }
+        Ok(v)
+    }
+
+    // -- accessors ----------------------------------------------------------
+
+    pub fn get(&self, key: &str) -> Option<&Yaml> {
+        match self {
+            Yaml::Map(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Yaml::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Yaml::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Yaml::Float(f) => Some(*f),
+            Yaml::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Yaml::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_seq(&self) -> Option<&[Yaml]> {
+        match self {
+            Yaml::Seq(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&Map> {
+        match self {
+            Yaml::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+struct Line {
+    indent: usize,
+    text: String,
+    number: usize,
+}
+
+/// Strip comments/blank lines, compute indents.
+fn preprocess(src: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    for (i, raw) in src.lines().enumerate() {
+        let mut text = String::new();
+        let mut in_single = false;
+        let mut in_double = false;
+        for c in raw.chars() {
+            match c {
+                '\'' if !in_double => in_single = !in_single,
+                '"' if !in_single => in_double = !in_double,
+                '#' if !in_single && !in_double => break,
+                _ => {}
+            }
+            text.push(c);
+        }
+        let trimmed = text.trim_end();
+        if trimmed.trim().is_empty() {
+            continue;
+        }
+        let indent = trimmed.len() - trimmed.trim_start().len();
+        out.push(Line {
+            indent,
+            text: trimmed.trim_start().to_string(),
+            number: i + 1,
+        });
+    }
+    out
+}
+
+fn parse_block(
+    lines: &[Line],
+    pos: &mut usize,
+    indent: usize,
+    anchors: &mut HashMap<String, Yaml>,
+) -> Result<Yaml, YamlError> {
+    if *pos >= lines.len() {
+        return Ok(Yaml::Null);
+    }
+    if lines[*pos].text.starts_with("- ") || lines[*pos].text == "-" {
+        parse_seq(lines, pos, indent, anchors)
+    } else {
+        parse_map(lines, pos, indent, anchors)
+    }
+}
+
+fn parse_seq(
+    lines: &[Line],
+    pos: &mut usize,
+    indent: usize,
+    anchors: &mut HashMap<String, Yaml>,
+) -> Result<Yaml, YamlError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() && lines[*pos].indent == indent {
+        let line = &lines[*pos];
+        if !(line.text.starts_with("- ") || line.text == "-") {
+            break;
+        }
+        let rest = line.text[1..].trim_start().to_string();
+        if rest.is_empty() {
+            // Nested block under the dash.
+            *pos += 1;
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                items.push(parse_block(lines, pos, child_indent, anchors)?);
+            } else {
+                items.push(Yaml::Null);
+            }
+        } else if rest.contains(": ") || rest.ends_with(':') {
+            // Inline map start: "- key: value" — treat the remainder plus any
+            // deeper lines as a map indented at dash+2.
+            let item_indent = indent + 2;
+            let synthetic = Line {
+                indent: item_indent,
+                text: rest,
+                number: line.number,
+            };
+            *pos += 1; // consume the dash line itself
+            // Parse the first key from the synthetic line, then continue.
+            let mut map = Map::new();
+            parse_map_entry(&synthetic, lines, pos, item_indent, anchors, &mut map, true)?;
+            while *pos < lines.len() && lines[*pos].indent == item_indent {
+                let l = &lines[*pos];
+                if l.text.starts_with("- ") {
+                    break;
+                }
+                let l = Line {
+                    indent: l.indent,
+                    text: l.text.clone(),
+                    number: l.number,
+                };
+                parse_map_entry(&l, lines, pos, item_indent, anchors, &mut map, false)?;
+            }
+            items.push(Yaml::Map(map));
+        } else {
+            *pos += 1;
+            items.push(parse_scalar_or_alias(&rest, line.number, anchors)?);
+        }
+    }
+    Ok(Yaml::Seq(items))
+}
+
+fn parse_map(
+    lines: &[Line],
+    pos: &mut usize,
+    indent: usize,
+    anchors: &mut HashMap<String, Yaml>,
+) -> Result<Yaml, YamlError> {
+    let mut map = Map::new();
+    while *pos < lines.len() && lines[*pos].indent == indent {
+        let line = Line {
+            indent: lines[*pos].indent,
+            text: lines[*pos].text.clone(),
+            number: lines[*pos].number,
+        };
+        if line.text.starts_with("- ") {
+            break;
+        }
+        parse_map_entry(&line, lines, pos, indent, anchors, &mut map, false)?;
+    }
+    if map.is_empty() {
+        return Err(YamlError {
+            line: lines.get(*pos).map(|l| l.number).unwrap_or(0),
+            msg: "expected mapping".into(),
+        });
+    }
+    Ok(Yaml::Map(map))
+}
+
+/// Parse one `key: ...` entry. If `synthetic` the key line was already
+/// consumed (inline seq-item map), otherwise advances past the current line.
+fn parse_map_entry(
+    line: &Line,
+    lines: &[Line],
+    pos: &mut usize,
+    indent: usize,
+    anchors: &mut HashMap<String, Yaml>,
+    map: &mut Map,
+    synthetic: bool,
+) -> Result<(), YamlError> {
+    let (key_part, value_part) = split_key(&line.text).ok_or(YamlError {
+        line: line.number,
+        msg: format!("expected 'key: value', got {:?}", line.text),
+    })?;
+    if !synthetic {
+        *pos += 1;
+    }
+    let key = unquote(key_part.trim());
+    let rest = value_part.trim();
+
+    // Anchor on the value: `key: &name value` / `key: &name` + nested block.
+    let (anchor, rest) = take_anchor(rest);
+
+    let value = if rest.is_empty() {
+        // Nested block (or null).
+        if *pos < lines.len() && lines[*pos].indent > indent {
+            let child_indent = lines[*pos].indent;
+            parse_block(lines, pos, child_indent, anchors)?
+        } else {
+            Yaml::Null
+        }
+    } else {
+        parse_scalar_or_alias(rest, line.number, anchors)?
+    };
+
+    if let Some(name) = anchor {
+        anchors.insert(name, value.clone());
+    }
+
+    if key == "<<" {
+        // Merge key: fold the aliased map's entries in (existing keys win,
+        // per the YAML merge-key spec).
+        if let Yaml::Map(src) = value {
+            for (k, v) in src {
+                map.entry(k).or_insert(v);
+            }
+        } else {
+            return Err(YamlError {
+                line: line.number,
+                msg: "'<<' merge value must be a mapping".into(),
+            });
+        }
+    } else {
+        map.insert(key, value);
+    }
+    Ok(())
+}
+
+fn take_anchor(s: &str) -> (Option<String>, &str) {
+    if let Some(rest) = s.strip_prefix('&') {
+        let end = rest.find(char::is_whitespace).unwrap_or(rest.len());
+        let name = rest[..end].to_string();
+        (Some(name), rest[end..].trim_start())
+    } else {
+        (None, s)
+    }
+}
+
+/// Split "key: value" at the first unquoted ": " (or trailing ':').
+fn split_key(text: &str) -> Option<(&str, &str)> {
+    let mut in_single = false;
+    let mut in_double = false;
+    let bytes = text.as_bytes();
+    for i in 0..bytes.len() {
+        match bytes[i] {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b':' if !in_single && !in_double => {
+                if i + 1 == bytes.len() {
+                    return Some((&text[..i], ""));
+                }
+                if bytes[i + 1] == b' ' {
+                    return Some((&text[..i], &text[i + 2..]));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn unquote(s: &str) -> String {
+    let s = s.trim();
+    if (s.starts_with('"') && s.ends_with('"') && s.len() >= 2)
+        || (s.starts_with('\'') && s.ends_with('\'') && s.len() >= 2)
+    {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+fn parse_scalar_or_alias(
+    s: &str,
+    line: usize,
+    anchors: &HashMap<String, Yaml>,
+) -> Result<Yaml, YamlError> {
+    let s = s.trim();
+    if let Some(name) = s.strip_prefix('*') {
+        return anchors.get(name).cloned().ok_or(YamlError {
+            line,
+            msg: format!("unknown alias '*{name}'"),
+        });
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        if inner.trim().is_empty() {
+            return Ok(Yaml::Seq(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|it| parse_scalar_or_alias(it, line, anchors))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Yaml::Seq(items));
+    }
+    if s.starts_with('{') && s.ends_with('}') {
+        let inner = &s[1..s.len() - 1];
+        let mut m = Map::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                let (k, v) = split_key(part.trim()).ok_or(YamlError {
+                    line,
+                    msg: format!("bad flow map entry {part:?}"),
+                })?;
+                m.insert(unquote(k), parse_scalar_or_alias(v, line, anchors)?);
+            }
+        }
+        return Ok(Yaml::Map(m));
+    }
+    Ok(scalar(s))
+}
+
+fn scalar(s: &str) -> Yaml {
+    match s {
+        "null" | "~" | "Null" | "NULL" => return Yaml::Null,
+        "true" | "True" | "TRUE" => return Yaml::Bool(true),
+        "false" | "False" | "FALSE" => return Yaml::Bool(false),
+        _ => {}
+    }
+    if s.starts_with('"') || s.starts_with('\'') {
+        return Yaml::Str(unquote(s));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Yaml::Int(i);
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Yaml::Float(f);
+    }
+    Yaml::Str(s.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_maps_and_scalars() {
+        let y = Yaml::parse(
+            "dataset:\n  name: cifar\n  alpha: 0.5\n  n: 5000\n  iid: false\n",
+        )
+        .unwrap();
+        let d = y.get("dataset").unwrap();
+        assert_eq!(d.get("name").unwrap().as_str(), Some("cifar"));
+        assert_eq!(d.get("alpha").unwrap().as_f64(), Some(0.5));
+        assert_eq!(d.get("n").unwrap().as_i64(), Some(5000));
+        assert_eq!(d.get("iid").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn sequences() {
+        let y = Yaml::parse("clients:\n  - node_0\n  - node_1\nworkers:\n  - w0\n").unwrap();
+        let c = y.get("clients").unwrap().as_seq().unwrap();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[1].as_str(), Some("node_1"));
+    }
+
+    #[test]
+    fn seq_of_maps() {
+        let y = Yaml::parse("nodes:\n  - id: a\n    role: client\n  - id: b\n    role: worker\n")
+            .unwrap();
+        let n = y.get("nodes").unwrap().as_seq().unwrap();
+        assert_eq!(n[0].get("role").unwrap().as_str(), Some("client"));
+        assert_eq!(n[1].get("id").unwrap().as_str(), Some("b"));
+    }
+
+    #[test]
+    fn anchors_aliases_and_merge() {
+        // The paper's Fig 2 idiom: defaults anchored then merged with `<<:`.
+        let src = "\
+defaults:\n  train: &train_defaults\n    lr: 0.001\n    batch_size: 64\nnode_0:\n  <<: *train_defaults\n  lr: 0.1\nnode_1:\n  <<: *train_defaults\n";
+        let y = Yaml::parse(src).unwrap();
+        // node_0 overrides lr, inherits batch_size.
+        assert_eq!(y.get("node_0").unwrap().get("lr").unwrap().as_f64(), Some(0.1));
+        assert_eq!(
+            y.get("node_0").unwrap().get("batch_size").unwrap().as_i64(),
+            Some(64)
+        );
+        assert_eq!(
+            y.get("node_1").unwrap().get("lr").unwrap().as_f64(),
+            Some(0.001)
+        );
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let y = Yaml::parse("# header\na: 1\n\n  # indented comment\nb: 2 # trailing\n").unwrap();
+        assert_eq!(y.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(y.get("b").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn flow_collections() {
+        let y = Yaml::parse("dims: [1, 2, 3]\nopts: {lr: 0.1, m: test}\n").unwrap();
+        assert_eq!(y.get("dims").unwrap().as_seq().unwrap().len(), 3);
+        assert_eq!(
+            y.get("opts").unwrap().get("m").unwrap().as_str(),
+            Some("test")
+        );
+    }
+
+    #[test]
+    fn quoted_strings_preserve_specials() {
+        let y = Yaml::parse("a: \"x: y # not comment\"\n").unwrap();
+        assert_eq!(y.get("a").unwrap().as_str(), Some("x: y # not comment"));
+    }
+
+    #[test]
+    fn null_values() {
+        let y = Yaml::parse("a: null\nb:\nc: 1\n").unwrap();
+        assert_eq!(y.get("a"), Some(&Yaml::Null));
+        assert_eq!(y.get("b"), Some(&Yaml::Null));
+    }
+
+    #[test]
+    fn unknown_alias_errors() {
+        assert!(Yaml::parse("a: *nope\n").is_err());
+    }
+
+    #[test]
+    fn deep_nesting() {
+        let y = Yaml::parse("a:\n  b:\n    c:\n      d: 4\n").unwrap();
+        assert_eq!(
+            y.get("a").unwrap().get("b").unwrap().get("c").unwrap()
+                .get("d").unwrap().as_i64(),
+            Some(4)
+        );
+    }
+}

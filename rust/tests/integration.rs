@@ -1,0 +1,272 @@
+//! Integration tests over the full stack: AOT artifacts -> PJRT runtime ->
+//! orchestrated FL rounds. Requires `make artifacts` to have run (the
+//! Makefile's `test` target guarantees it).
+
+use flsim::config::job::JobConfig;
+use flsim::controller::sync::FaultPlan;
+use flsim::data::dataset::DatasetSpec;
+use flsim::orchestrator::Orchestrator;
+use flsim::runtime::pjrt::Runtime;
+use flsim::topology::TopologyKind;
+
+fn artifacts_dir() -> String {
+    // cargo test runs from the workspace root.
+    "artifacts".to_string()
+}
+
+fn mini_job(strategy: &str) -> JobConfig {
+    let mut j = JobConfig::default_cnn(strategy);
+    j.rounds = 2;
+    j.dataset.n = 600;
+    j
+}
+
+#[test]
+fn manifest_loads_and_declares_all_backends() {
+    let rt = Runtime::shared(artifacts_dir()).unwrap();
+    for b in ["cnn", "cnn_v2", "mlp", "logreg"] {
+        let desc = rt.manifest.backend(b).unwrap();
+        assert!(desc.param_count > 0);
+        assert!(desc.artifacts.contains_key("sgd"));
+    }
+    // The Fig 8 strategies need the full artifact set on cnn.
+    let cnn = rt.manifest.backend("cnn").unwrap();
+    for step in ["init", "sgd", "eval", "prox", "scaffold", "moon"] {
+        assert!(cnn.artifacts.contains_key(step), "cnn missing {step}");
+    }
+}
+
+#[test]
+fn fedavg_end_to_end_learns_and_meters() {
+    let rt = Runtime::shared(artifacts_dir()).unwrap();
+    let mut job = mini_job("fedavg");
+    job.rounds = 4;
+    job.dataset.n = 1200;
+    let report = Orchestrator::new(rt).run(&job).unwrap();
+    assert_eq!(report.rounds.len(), 4);
+    // Loss must drop over 4 rounds on the synthetic set.
+    assert!(report.rounds[3].test_loss < report.rounds[0].test_loss);
+    // Traffic metered every round; model hash recorded.
+    for r in &report.rounds {
+        assert!(r.net_bytes > 0);
+        assert_eq!(r.model_hash.len(), 16);
+        assert!(r.wall_secs > 0.0);
+    }
+}
+
+#[test]
+fn same_seed_is_bitwise_reproducible() {
+    let rt = Runtime::shared(artifacts_dir()).unwrap();
+    let orch = Orchestrator::new(rt);
+    let job = mini_job("fedavg");
+    let a = orch.run(&job).unwrap();
+    let b = orch.run(&job).unwrap();
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(ra.model_hash, rb.model_hash, "round {}", ra.round);
+        assert_eq!(ra.test_accuracy, rb.test_accuracy);
+        assert_eq!(ra.net_bytes, rb.net_bytes);
+    }
+}
+
+#[test]
+fn different_seed_changes_trajectory() {
+    let rt = Runtime::shared(artifacts_dir()).unwrap();
+    let orch = Orchestrator::new(rt);
+    let mut j1 = mini_job("fedavg");
+    let mut j2 = mini_job("fedavg");
+    j1.seed = 1;
+    j2.seed = 2;
+    let a = orch.run(&j1).unwrap();
+    let b = orch.run(&j2).unwrap();
+    assert_ne!(a.rounds[0].model_hash, b.rounds[0].model_hash);
+}
+
+#[test]
+fn scaffold_moves_extra_state_over_the_wire() {
+    let rt = Runtime::shared(artifacts_dir()).unwrap();
+    let orch = Orchestrator::new(rt);
+    let fedavg = orch.run(&mini_job("fedavg")).unwrap();
+    let scaffold = orch.run(&mini_job("scaffold")).unwrap();
+    // Control variates ≈ double the client upload volume.
+    assert!(
+        scaffold.total_net_bytes() > fedavg.total_net_bytes() * 4 / 3,
+        "scaffold {} vs fedavg {}",
+        scaffold.total_net_bytes(),
+        fedavg.total_net_bytes()
+    );
+}
+
+#[test]
+fn multi_worker_consensus_defeats_malicious_worker() {
+    let rt = Runtime::shared(artifacts_dir()).unwrap();
+    let orch = Orchestrator::new(rt);
+    let mut job = mini_job("fedavg");
+    job.rounds = 3;
+    job.dataset.n = 1200;
+    job.n_workers = 3;
+    job.consensus.malicious_workers = vec!["worker_0".into()];
+    let poisoned_guarded = orch.run(&job).unwrap();
+
+    let mut solo = job.clone();
+    solo.n_workers = 1; // the only worker is malicious -> training destroyed
+    let destroyed = orch.run(&solo).unwrap();
+
+    assert!(
+        poisoned_guarded.final_accuracy() > destroyed.final_accuracy(),
+        "consensus {} <= poisoned {}",
+        poisoned_guarded.final_accuracy(),
+        destroyed.final_accuracy()
+    );
+}
+
+#[test]
+fn hierarchical_topology_runs_and_costs_more_bandwidth() {
+    let rt = Runtime::shared(artifacts_dir()).unwrap();
+    let orch = Orchestrator::new(rt);
+    let flat = orch.run(&mini_job("fedavg")).unwrap();
+
+    let mut job = mini_job("fedavg");
+    job.topology = TopologyKind::Hierarchical;
+    job.n_workers = 3;
+    let hier = orch.run(&job).unwrap();
+    assert_eq!(hier.rounds.len(), 2);
+    assert!(hier.total_net_bytes() > flat.total_net_bytes());
+}
+
+#[test]
+fn decentralized_flow_runs_with_ring_and_mesh() {
+    let rt = Runtime::shared(artifacts_dir()).unwrap();
+    let orch = Orchestrator::new(rt);
+    let mut mesh = mini_job("fedstellar");
+    mesh.n_clients = 5;
+    let mesh_report = orch.run(&mesh).unwrap();
+
+    let mut ring = mesh.clone();
+    ring.topology = TopologyKind::Ring;
+    let ring_report = orch.run(&ring).unwrap();
+    assert!(mesh_report.total_net_bytes() > ring_report.total_net_bytes());
+}
+
+#[test]
+fn decentralized_strategy_rejects_star_topology() {
+    let rt = Runtime::shared(artifacts_dir()).unwrap();
+    let mut job = mini_job("fedstellar");
+    job.topology = TopologyKind::ClientServer;
+    assert!(Orchestrator::new(rt).run(&job).is_err());
+}
+
+#[test]
+fn fault_injection_survives_client_drop() {
+    let rt = Runtime::shared(artifacts_dir()).unwrap();
+    let orch = Orchestrator::new(rt);
+    let mut job = mini_job("fedavg");
+    job.rounds = 3;
+    let faults = FaultPlan::none()
+        .drop_in_round("client_2", 2)
+        .crash_from("client_7", 3);
+    let report = orch.run_with_faults(&job, faults).unwrap();
+    assert_eq!(report.rounds.len(), 3);
+}
+
+#[test]
+fn bcfl_on_chain_consensus_roundtrip() {
+    let rt = Runtime::shared(artifacts_dir()).unwrap();
+    let orch = Orchestrator::new(rt);
+    for platform in ["ethereum", "fabric"] {
+        let mut job = mini_job("fedavg");
+        job.n_workers = 3;
+        job.consensus.on_chain = true;
+        job.consensus.malicious_workers = vec!["worker_0".into()];
+        job.chain.enabled = true;
+        job.chain.platform = platform.into();
+        let report = Orchestrator::new(
+            Runtime::shared(artifacts_dir()).unwrap(),
+        )
+        .run(&job)
+        .unwrap();
+        assert_eq!(report.rounds.len(), 2, "{platform}");
+        let _ = &orch;
+    }
+}
+
+#[test]
+fn library_agnostic_backends_run_same_job() {
+    let rt = Runtime::shared(artifacts_dir()).unwrap();
+    let orch = Orchestrator::new(rt);
+    for backend in ["cnn", "cnn_v2", "mlp"] {
+        let mut job = mini_job("fedavg");
+        job.backend = backend.into();
+        job.rounds = 1;
+        let report = orch.run(&job).unwrap();
+        assert_eq!(report.rounds.len(), 1, "{backend}");
+    }
+    // logreg with the MNIST-shaped dataset.
+    let mut job = mini_job("fedavg");
+    job.backend = "logreg".into();
+    job.dataset = DatasetSpec::mnist_iid(600);
+    job.rounds = 1;
+    let report = orch.run(&job).unwrap();
+    assert_eq!(report.rounds.len(), 1);
+}
+
+#[test]
+fn strategy_missing_artifact_fails_cleanly() {
+    let rt = Runtime::shared(artifacts_dir()).unwrap();
+    // mlp has no moon artifact — must error with a helpful message, not panic.
+    let mut job = mini_job("moon");
+    job.backend = "mlp".into();
+    let err = Orchestrator::new(rt).run(&job).unwrap_err().to_string();
+    assert!(err.contains("moon"), "unhelpful error: {err}");
+}
+
+#[test]
+fn yaml_config_to_run_pipeline() {
+    let yaml = r#"
+job: {name: itest, seed: 5, rounds: 2}
+dataset:
+  name: cifar10_synth
+  n: 600
+  distribution: {kind: dirichlet, alpha: 0.5}
+strategy:
+  name: fedavg
+  backend: cnn
+  train_params: {learning_rate: 0.02, local_epochs: 2}
+topology: {kind: client_server, clients: 4, workers: 1}
+"#;
+    let job = JobConfig::from_yaml_str(yaml).unwrap();
+    let rt = Runtime::shared(artifacts_dir()).unwrap();
+    let report = Orchestrator::new(rt).run(&job).unwrap();
+    assert_eq!(report.rounds.len(), 2);
+    assert_eq!(report.n_clients, 4);
+}
+
+#[test]
+fn hw_profiles_reproduce_within_and_drift_across() {
+    let rt = Runtime::shared(artifacts_dir()).unwrap();
+    let orch = Orchestrator::new(rt);
+    use flsim::aggregate::mean::ReductionOrder;
+    let mut base = mini_job("fedavg");
+    base.rounds = 2;
+    base.n_clients = 7; // odd count tickles reduction-order differences
+
+    let mut hashes = Vec::new();
+    for order in ReductionOrder::ALL {
+        let mut j = base.clone();
+        j.hw_profile = order;
+        let a = orch.run(&j).unwrap();
+        let b = orch.run(&j).unwrap();
+        assert_eq!(
+            a.rounds.last().unwrap().model_hash,
+            b.rounds.last().unwrap().model_hash,
+            "{order:?} not reproducible"
+        );
+        hashes.push(a.rounds.last().unwrap().model_hash.clone());
+        // Accuracy must stay in a tight band across profiles.
+        assert!((a.final_accuracy() - 0.5).abs() < 0.5);
+    }
+    // At least one profile must differ bitwise from Sequential.
+    assert!(
+        hashes[1..].iter().any(|h| *h != hashes[0]),
+        "all reduction orders produced identical bits — profile simulation inert"
+    );
+}

@@ -1,0 +1,276 @@
+//! Property-based tests on coordinator invariants (hand-rolled generator
+//! harness — proptest is not vendored in this offline image). Each property
+//! runs over a couple hundred seeded random cases; failures print the
+//! offending seed for replay.
+
+use flsim::aggregate::mean::{weighted_mean, ReductionOrder};
+use flsim::aggregate::robust::{coordinate_median, trimmed_mean};
+use flsim::consensus::{by_name, Proposal};
+use flsim::data::dataset::Distribution;
+use flsim::data::partition::Partition;
+use flsim::data::synthetic;
+use flsim::kvstore::store::{KvStore, Payload};
+use flsim::topology::graph::{Overlay, TopologyKind};
+use flsim::util::rng::Rng;
+use flsim::util::yaml::Yaml;
+
+/// Run `prop` over `cases` seeded cases.
+fn forall(cases: u64, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    for seed in 0..cases {
+        let mut rng = Rng::seed_from(0xF00D + seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+#[test]
+fn prop_partition_is_exact_cover() {
+    forall(60, |rng| {
+        let n = 50 + rng.below(400);
+        let clients = 2 + rng.below(20);
+        let dist = match rng.below(3) {
+            0 => Distribution::Iid,
+            1 => Distribution::Dirichlet {
+                alpha: 0.1 + rng.next_f64() * 2.0,
+            },
+            _ => Distribution::Shards {
+                shards_per_client: 1 + rng.below(3),
+            },
+        };
+        let ds = synthetic::mnist_synth(n, rng.next_u64());
+        let p = Partition::build(&ds, clients, &dist, rng);
+        // Exact cover: every index assigned exactly once.
+        let mut seen = vec![false; n];
+        for a in &p.assignments {
+            for &i in a {
+                if seen[i] {
+                    return Err(format!("index {i} assigned twice ({dist:?})"));
+                }
+                seen[i] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err(format!("not all of {n} examples assigned ({dist:?})"));
+        }
+        // No starving clients.
+        if p.assignments.iter().any(Vec::is_empty) {
+            return Err(format!("empty client under {dist:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weighted_mean_within_hull_and_orders_agree() {
+    forall(120, |rng| {
+        let n = 1 + rng.below(12);
+        let dim = 1 + rng.below(200);
+        let models: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal_f32() * 5.0).collect())
+            .collect();
+        let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+        let weights: Vec<f64> = (0..n).map(|_| 0.1 + rng.next_f64() * 9.9).collect();
+        let base = weighted_mean(&refs, &weights, ReductionOrder::Sequential)
+            .map_err(|e| e.to_string())?;
+        // Convex-hull bound per coordinate.
+        for j in 0..dim {
+            let lo = refs.iter().map(|p| p[j]).fold(f32::INFINITY, f32::min);
+            let hi = refs.iter().map(|p| p[j]).fold(f32::NEG_INFINITY, f32::max);
+            if base[j] < lo - 1e-3 || base[j] > hi + 1e-3 {
+                return Err(format!("coordinate {j} out of hull"));
+            }
+        }
+        // All reduction orders agree within fp tolerance.
+        for order in ReductionOrder::ALL {
+            let other = weighted_mean(&refs, &weights, order).map_err(|e| e.to_string())?;
+            for j in 0..dim {
+                if (other[j] - base[j]).abs() > 1e-3 {
+                    return Err(format!("{order:?} diverges at {j}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_robust_aggregators_bounded_by_extremes() {
+    forall(80, |rng| {
+        let n = 3 + rng.below(10);
+        let dim = 1 + rng.below(50);
+        let models: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal_f32() * 3.0).collect())
+            .collect();
+        let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+        let med = coordinate_median(&refs).map_err(|e| e.to_string())?;
+        let trim = (n - 1) / 2;
+        let tm = trimmed_mean(&refs, trim.min((n - 1) / 2)).map_err(|e| e.to_string())?;
+        for j in 0..dim {
+            let lo = refs.iter().map(|p| p[j]).fold(f32::INFINITY, f32::min);
+            let hi = refs.iter().map(|p| p[j]).fold(f32::NEG_INFINITY, f32::max);
+            if med[j] < lo || med[j] > hi {
+                return Err("median out of range".into());
+            }
+            if tm[j] < lo - 1e-4 || tm[j] > hi + 1e-4 {
+                return Err("trimmed mean out of range".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_consensus_honest_majority_always_wins() {
+    let consensus = by_name("majority_hash").unwrap();
+    forall(150, |rng| {
+        let honest = 2 + rng.below(4); // 2..5 honest
+        let malicious = 1 + rng.below(honest - 1); // strictly fewer malicious
+        let dim = 1 + rng.below(64);
+        let honest_params: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+        let mut proposals = Vec::new();
+        for m in 0..malicious {
+            // Each attacker submits its own (distinct) poison.
+            let poison: Vec<f32> = honest_params
+                .iter()
+                .map(|&v| -v + m as f32 + rng.normal_f32())
+                .collect();
+            proposals.push(Proposal::new(format!("mal_{m}"), poison));
+        }
+        for h in 0..honest {
+            proposals.push(Proposal::new(format!("h_{h}"), honest_params.clone()));
+        }
+        let d = consensus.decide(&proposals, rng).map_err(|e| e.to_string())?;
+        if proposals[d.winner].params != honest_params {
+            return Err(format!(
+                "poison won with {malicious} malicious vs {honest} honest"
+            ));
+        }
+        if !d.decisive {
+            return Err("honest majority should be decisive".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_overlay_invariants_all_topologies() {
+    forall(60, |rng| {
+        let n = 2 + rng.below(30);
+        let w = 1 + rng.below(4);
+        for kind in [
+            TopologyKind::ClientServer,
+            TopologyKind::Hierarchical,
+            TopologyKind::FullyConnected,
+            TopologyKind::Ring,
+        ] {
+            let o = Overlay::build(kind, n, w);
+            o.validate().map_err(|e| format!("{kind:?}: {e}"))?;
+            if o.clients().is_empty() {
+                return Err(format!("{kind:?}: no clients"));
+            }
+            // Edges reference known nodes both ways; neighbors symmetric for
+            // undirected-by-construction topologies.
+            for (a, b) in &o.edges {
+                if a == b {
+                    return Err(format!("{kind:?}: self-loop"));
+                }
+                if !o.roles.contains_key(a) || !o.roles.contains_key(b) {
+                    return Err(format!("{kind:?}: dangling edge"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kvstore_conservation_of_bytes() {
+    forall(80, |rng| {
+        let mut kv = KvStore::new();
+        let nodes = 2 + rng.below(8);
+        let mut expected_total = 0u64;
+        for round in 0..1 + rng.below(5) as u64 {
+            for i in 0..nodes {
+                let len = rng.below(500);
+                let payload = Payload::Params((0..len).map(|_| rng.normal_f32()).collect());
+                expected_total += payload.wire_bytes();
+                kv.publish("t", &format!("n{i}"), round, payload);
+            }
+            // One reader drains the round.
+            let msgs = kv.fetch_round("t", round, "reader");
+            if msgs.len() != nodes {
+                return Err("lost messages".into());
+            }
+            for m in &msgs {
+                expected_total += m.payload.wire_bytes();
+            }
+        }
+        if kv.total_bytes() != expected_total {
+            return Err(format!(
+                "byte conservation broken: {} != {expected_total}",
+                kv.total_bytes()
+            ));
+        }
+        // Egress of writers == ingress of reader.
+        let out: u64 = (0..nodes)
+            .map(|i| kv.traffic(&format!("n{i}")).bytes_out)
+            .sum();
+        let inn = kv.traffic("reader").bytes_in;
+        if out != inn {
+            return Err(format!("egress {out} != ingress {inn}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_yaml_scalar_roundtrip() {
+    forall(100, |rng| {
+        // Random flat configs stay parseable and value-stable.
+        let n_keys = 1 + rng.below(10);
+        let mut src = String::new();
+        let mut expect = Vec::new();
+        for k in 0..n_keys {
+            match rng.below(3) {
+                0 => {
+                    let v = rng.below(100000) as i64;
+                    src.push_str(&format!("k{k}: {v}\n"));
+                    expect.push((format!("k{k}"), Yaml::Int(v)));
+                }
+                1 => {
+                    let v = (rng.next_f64() * 100.0 * 8.0).round() / 8.0; // exact in binary
+                    src.push_str(&format!("k{k}: {v:?}\n"));
+                    expect.push((format!("k{k}"), Yaml::Float(v)));
+                }
+                _ => {
+                    src.push_str(&format!("k{k}: value_{k}\n"));
+                    expect.push((format!("k{k}"), Yaml::Str(format!("value_{k}"))));
+                }
+            }
+        }
+        let y = Yaml::parse(&src).map_err(|e| e.to_string())?;
+        for (k, v) in expect {
+            let got = y.get(&k).ok_or(format!("missing {k}"))?;
+            if got != &v {
+                return Err(format!("{k}: {got:?} != {v:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_streams_never_collide() {
+    forall(50, |rng| {
+        let root = Rng::seed_from(rng.next_u64());
+        let mut a = root.derive("purpose_a", 0);
+        let mut b = root.derive("purpose_b", 0);
+        let mut c = root.derive("purpose_a", 1);
+        let (va, vb, vc) = (a.next_u64(), b.next_u64(), c.next_u64());
+        if va == vb || va == vc || vb == vc {
+            return Err("derived streams collided".into());
+        }
+        Ok(())
+    });
+}
