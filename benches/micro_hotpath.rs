@@ -1,11 +1,19 @@
 //! Micro-benchmarks of the L3 hot paths (EXPERIMENTS.md §Perf): train-step
-//! execution, aggregation reduction orders, parameter hashing, KV-store
-//! publish/fetch, consensus decision, eval — plus executable-cache checks.
+//! execution, aggregation reduction orders (sequential and block-parallel),
+//! parameter hashing, KV-store publish/fetch, consensus decision, eval —
+//! plus round-engine throughput at parallelism 1/4/8.
+//!
+//! Emits `BENCH_micro.json` (ns/op per hot path + rounds/sec per
+//! parallelism level) so the perf trajectory is tracked per PR. The
+//! pure-Rust sections always run; the engine-backed sections degrade to a
+//! skip message if the runtime cannot be opened.
 
-use flsim::aggregate::mean::{weighted_mean, ReductionOrder};
-use flsim::bench::bench;
+use flsim::aggregate::mean::{weighted_mean_plan, AggPlan, ReductionOrder};
+use flsim::bench::{bench, BenchSuite};
+use flsim::config::job::JobConfig;
 use flsim::consensus::{by_name, Proposal};
 use flsim::kvstore::store::{KvStore, Payload};
+use flsim::orchestrator::Orchestrator;
 use flsim::runtime::backend::ModelBackend;
 use flsim::runtime::pjrt::Runtime;
 use flsim::util::hash;
@@ -13,10 +21,10 @@ use flsim::util::rng::Rng;
 
 fn main() {
     flsim::util::logging::init_from_env();
-    let rt = Runtime::shared("artifacts").expect("run `make artifacts` first");
+    let mut suite = BenchSuite::new();
 
     // --- L3 pure-Rust hot paths -----------------------------------------
-    let dim = 72_986; // cnn backend size
+    let dim = 72_986; // cnn-class backend size
     let mut rng = Rng::seed_from(1);
     let models: Vec<Vec<f32>> = (0..10)
         .map(|_| (0..dim).map(|_| rng.normal_f32()).collect())
@@ -24,21 +32,46 @@ fn main() {
     let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
     let weights = vec![1.0f64; refs.len()];
 
+    // cnn-class dim caps out at 4 aggregation workers (chunk threshold), so
+    // bench p1/p4 here and p8 on a fig12-scale vector below where 8 workers
+    // genuinely engage.
     for order in ReductionOrder::ALL {
-        bench(
-            &format!("aggregate/10x{dim}/{:?}", order),
-            3,
-            20,
-            || {
-                let out = weighted_mean(&refs, &weights, order).unwrap();
+        for par in [1usize, 4] {
+            let plan = AggPlan::new(order, par);
+            let r = bench(
+                &format!("aggregate/10x{dim}/{order:?}/p{par}"),
+                3,
+                20,
+                || {
+                    let out = weighted_mean_plan(&refs, &weights, plan).unwrap();
+                    std::hint::black_box(out);
+                },
+            );
+            suite.push(&r);
+        }
+    }
+    {
+        let big_dim = 262_155; // fig12-scale parameter vector
+        let mut brng = Rng::seed_from(2);
+        let big: Vec<Vec<f32>> = (0..10)
+            .map(|_| (0..big_dim).map(|_| brng.normal_f32()).collect())
+            .collect();
+        let brefs: Vec<&[f32]> = big.iter().map(|m| m.as_slice()).collect();
+        let bweights = vec![1.0f64; brefs.len()];
+        for par in [1usize, 4, 8] {
+            let plan = AggPlan::new(ReductionOrder::Sequential, par);
+            let r = bench(&format!("aggregate/10x{big_dim}/Sequential/p{par}"), 2, 10, || {
+                let out = weighted_mean_plan(&brefs, &bweights, plan).unwrap();
                 std::hint::black_box(out);
-            },
-        );
+            });
+            suite.push(&r);
+        }
     }
 
-    bench("hash_params/72986", 3, 20, || {
+    let r = bench("hash_params/72986", 3, 20, || {
         std::hint::black_box(hash::hash_params(&models[0]));
     });
+    suite.push(&r);
 
     // Ablation: communication-efficient compressors (bytes + error + cost).
     {
@@ -54,9 +87,10 @@ fn main() {
                 100.0 * c.wire_bytes() as f64 / dense_bytes as f64,
                 compression_error(delta, &c)
             );
-            bench(&format!("compress/top_k/{k_frac}"), 2, 10, || {
+            let r = bench(&format!("compress/top_k/{k_frac}"), 2, 10, || {
                 std::hint::black_box(top_k(delta, k));
             });
+            suite.push(&r);
         }
         for bits in [8u8, 4, 2] {
             let c = quantize(delta, bits, &mut Rng::seed_from(5)).unwrap();
@@ -69,60 +103,109 @@ fn main() {
         }
     }
 
-    bench("kvstore/publish+fetch 292KiB", 3, 50, || {
+    // Zero-copy publish/fetch: payload construction pays one Arc conversion,
+    // every broker hop afterwards is a refcount bump.
+    let shared: std::sync::Arc<[f32]> = models[0].clone().into();
+    let r = bench("kvstore/publish+fetch 292KiB (arc)", 3, 50, || {
         let mut kv = KvStore::new();
-        kv.publish("t", "c0", 1, Payload::Params(models[0].clone()));
+        kv.publish("t", "c0", 1, Payload::Params(shared.clone()));
         let m = kv.fetch_latest("t", "w0").unwrap();
         std::hint::black_box(m);
     });
+    suite.push(&r);
 
     let proposals: Vec<Proposal> = (0..4)
         .map(|i| Proposal::new(format!("w{i}"), models[i % 2].clone()))
         .collect();
     let consensus = by_name("majority_hash").unwrap();
-    bench("consensus/majority_hash/4 workers", 3, 50, || {
+    let r = bench("consensus/majority_hash/4 workers", 3, 50, || {
         let d = consensus
             .decide(&proposals, &mut Rng::seed_from(7))
             .unwrap();
         std::hint::black_box(d);
     });
+    suite.push(&r);
 
-    // --- PJRT execution hot paths ----------------------------------------
-    let backend = ModelBackend::new(rt.clone(), "cnn").unwrap();
-    let params = backend.init(0).unwrap();
-    let plit = backend.params_lit(&params).unwrap();
-    let bs = backend.train_batch;
-    let f: usize = backend.input_shape.iter().product();
-    let mut drng = Rng::seed_from(3);
-    let x: Vec<f32> = (0..bs * f).map(|_| drng.normal_f32()).collect();
-    let y: Vec<i32> = (0..bs).map(|_| drng.below(10) as i32).collect();
-    let (xl, yl) = backend.batch_lits(&x, &y).unwrap();
+    // --- Engine-backed hot paths (gated: skip cleanly if unavailable) ----
+    match Runtime::shared("artifacts") {
+        Ok(rt) => {
+            let backend = ModelBackend::new(rt.clone(), "cnn").unwrap();
+            let params = backend.init(0).unwrap();
+            let plit = backend.params_lit(&params).unwrap();
+            let bs = backend.train_batch;
+            let f: usize = backend.input_shape.iter().product();
+            let mut drng = Rng::seed_from(3);
+            let x: Vec<f32> = (0..bs * f).map(|_| drng.normal_f32()).collect();
+            let y: Vec<i32> = (0..bs).map(|_| drng.below(10) as i32).collect();
+            let (xl, yl) = backend.batch_lits(&x, &y).unwrap();
 
-    bench("pjrt/cnn_sgd_step/batch64", 3, 20, || {
-        let out = backend.sgd(&plit, &xl, &yl, 0.01).unwrap();
-        std::hint::black_box(out);
-    });
+            let r = bench("engine/cnn_sgd_step/batch64", 3, 20, || {
+                let out = backend.sgd(&plit, &xl, &yl, 0.01).unwrap();
+                std::hint::black_box(out);
+            });
+            suite.push(&r);
 
-    let eb = backend.eval_batch;
-    let xe: Vec<f32> = (0..eb * f).map(|_| drng.normal_f32()).collect();
-    let ye: Vec<i32> = (0..eb).map(|_| drng.below(10) as i32).collect();
-    let mask = vec![1.0f32; eb];
-    let (xel, yel, ml) = backend.eval_lits(&xe, &ye, &mask).unwrap();
-    bench("pjrt/cnn_eval/batch256", 3, 20, || {
-        let out = backend.eval_batch(&plit, &xel, &yel, &ml).unwrap();
-        std::hint::black_box(out);
-    });
+            let eb = backend.eval_batch;
+            let xe: Vec<f32> = (0..eb * f).map(|_| drng.normal_f32()).collect();
+            let ye: Vec<i32> = (0..eb).map(|_| drng.below(10) as i32).collect();
+            let mask = vec![1.0f32; eb];
+            let (xel, yel, ml) = backend.eval_lits(&xe, &ye, &mask).unwrap();
+            let r = bench("engine/cnn_eval/batch256", 3, 20, || {
+                let out = backend.eval_batch(&plit, &xel, &yel, &ml).unwrap();
+                std::hint::black_box(out);
+            });
+            suite.push(&r);
 
-    // Executable-cache effectiveness: every artifact compiles exactly once.
-    let stats = rt.stats();
-    println!(
-        "runtime: compiles={} executions={} compile={:.2}s execute={:.2}s",
-        stats.compiles, stats.executions, stats.compile_secs, stats.execute_secs
-    );
-    assert!(
-        stats.compiles <= 3,
-        "executable cache miss: {} compiles",
-        stats.compiles
-    );
-    println!("shape: executable cache hit rate after warmup: OK");
+            // Round-engine throughput at parallelism 1/4/8 on a mini job.
+            // Same seed at every level — the per-round model hashes must
+            // agree bitwise while the wall clock drops.
+            let mut golden_hash: Option<String> = None;
+            for par in [1usize, 4, 8] {
+                let mut job = JobConfig::default_cnn("fedavg");
+                job.name = format!("bench_round_p{par}");
+                job.rounds = 2;
+                job.dataset.n = 1200;
+                job.n_clients = 8;
+                job.parallelism = par;
+                let orch = Orchestrator::new(rt.clone());
+                let t0 = std::time::Instant::now();
+                let report = orch.run(&job).unwrap();
+                let secs = t0.elapsed().as_secs_f64();
+                let rounds_per_sec = job.rounds as f64 / secs;
+                let h = report.rounds.last().unwrap().model_hash.clone();
+                match &golden_hash {
+                    None => golden_hash = Some(h),
+                    Some(g) => assert_eq!(
+                        g, &h,
+                        "parallelism {par} changed the model hash — determinism broken"
+                    ),
+                }
+                println!(
+                    "round_throughput parallelism={par}: {rounds_per_sec:.3} rounds/s ({secs:.2}s)"
+                );
+                suite.push_throughput(&format!("round/parallelism={par}"), rounds_per_sec);
+            }
+
+            let stats = rt.stats();
+            println!(
+                "runtime[{}]: compiles={} executions={} compile={:.2}s execute={:.2}s",
+                rt.engine_name(),
+                stats.compiles,
+                stats.executions,
+                stats.compile_secs,
+                stats.execute_secs
+            );
+            assert!(
+                stats.compiles <= 3,
+                "executable cache miss: {} compiles",
+                stats.compiles
+            );
+        }
+        Err(e) => {
+            println!("skipping engine-backed benches: {e}");
+        }
+    }
+
+    suite.write("BENCH_micro.json").expect("writing BENCH_micro.json");
+    println!("wrote BENCH_micro.json ({} results)", suite.results.len());
 }

@@ -10,7 +10,7 @@
 use anyhow::Result;
 
 use flsim::aggregate::compress::{top_k, CompressedUpdate};
-use flsim::aggregate::mean::{weighted_mean, ReductionOrder};
+use flsim::aggregate::mean::{weighted_mean_plan, AggPlan};
 use flsim::controller::sync::FaultPlan;
 use flsim::metrics::{dashboard, html};
 use flsim::orchestrator::JobState;
@@ -48,7 +48,7 @@ impl Strategy for FedTopK {
             .collect();
         Ok(ClientUpdate {
             client: ctx.client.to_string(),
-            params: recon,
+            params: recon.into(),
             weight: ctx.n_examples as f64,
             extra: None,
             mean_loss,
@@ -59,17 +59,17 @@ impl Strategy for FedTopK {
         &self,
         updates: &[ClientUpdate],
         _global: &[f32],
-        order: ReductionOrder,
+        plan: AggPlan,
         _rng: &mut FlRng,
     ) -> Result<Vec<f32>> {
-        let refs: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let refs: Vec<&[f32]> = updates.iter().map(|u| u.params.as_ref()).collect();
         let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
-        weighted_mean(&refs, &weights, order)
+        weighted_mean_plan(&refs, &weights, plan)
     }
 }
 
 fn run_with(
-    rt: std::rc::Rc<Runtime>,
+    rt: std::sync::Arc<Runtime>,
     label: &str,
     strategy: Option<Box<dyn Strategy>>,
 ) -> Result<flsim::metrics::report::RunReport> {

@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 
-use flsim::aggregate::mean::ReductionOrder;
+use flsim::aggregate::mean::AggPlan;
 use flsim::aggregate::robust::trimmed_mean;
 use flsim::controller::sync::FaultPlan;
 use flsim::metrics::dashboard;
@@ -35,7 +35,7 @@ impl Strategy for FedTrimmed {
         let (params, mean_loss) = ctx.run_epochs(&start, |b, p, x, y| b.sgd(p, x, y, lr))?;
         Ok(ClientUpdate {
             client: ctx.client.to_string(),
-            params,
+            params: params.into(),
             weight: ctx.n_examples as f64,
             extra: None,
             mean_loss,
@@ -46,10 +46,10 @@ impl Strategy for FedTrimmed {
         &self,
         updates: &[ClientUpdate],
         _global: &[f32],
-        _order: ReductionOrder,
+        _plan: AggPlan,
         _rng: &mut FlRng,
     ) -> Result<Vec<f32>> {
-        let refs: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let refs: Vec<&[f32]> = updates.iter().map(|u| u.params.as_ref()).collect();
         trimmed_mean(&refs, self.trim)
     }
 }

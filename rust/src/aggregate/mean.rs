@@ -8,6 +8,22 @@
 //! so trials on the *same* profile reproduce bitwise (the tables' headline
 //! property), while different profiles drift by ~1e-7 per element, compounding
 //! over rounds to the sub-percent differences the paper reports.
+//!
+//! ## Execution model
+//!
+//! The aggregation hot path (up to 1000 client models × ~1e5 parameters per
+//! round) is computed in fixed element chunks. Every output element depends
+//! only on the model values at its own index, and each chunk is reduced with
+//! the exact per-element operation order its `ReductionOrder` defines — so
+//! chunks are embarrassingly parallel *without* changing a single bit of the
+//! result. [`AggPlan::parallelism`] > 1 spreads chunks over a scoped thread
+//! pool; `parallelism == 1` runs them inline. Both produce bitwise-identical
+//! output (asserted by tests), which is what lets the orchestrator expose a
+//! free `parallelism` knob while keeping the RQ6 reproducibility contract.
+//!
+//! The pairwise tree is reduced with a chunked recursion over `O(log n)`
+//! bounded scratch buffers instead of the previous one-`Vec`-per-leaf
+//! construction (which allocated `n_models × dim` floats per call).
 
 use anyhow::{bail, Result};
 
@@ -54,15 +70,54 @@ impl ReductionOrder {
     }
 }
 
+/// How to execute an aggregation: which bit-exact reduction order (the
+/// simulated hardware profile) and how many worker threads may cooperate.
+/// Parallelism never changes the result — only the wall clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AggPlan {
+    pub order: ReductionOrder,
+    pub parallelism: usize,
+}
+
+impl AggPlan {
+    pub fn new(order: ReductionOrder, parallelism: usize) -> AggPlan {
+        AggPlan {
+            order,
+            parallelism: parallelism.max(1),
+        }
+    }
+
+    pub fn sequential(order: ReductionOrder) -> AggPlan {
+        AggPlan::new(order, 1)
+    }
+}
+
+impl From<ReductionOrder> for AggPlan {
+    fn from(order: ReductionOrder) -> AggPlan {
+        AggPlan::sequential(order)
+    }
+}
+
+/// Element chunk each reduction task covers (also bounds scratch memory:
+/// `O(log n_models × CHUNK)` floats per worker).
+const CHUNK: usize = 4096;
+
 /// Weighted mean of parameter vectors: `sum_i w_i * p_i / sum_i w_i`,
-/// accumulated per the given reduction order.
-///
-/// This is the aggregation hot path (called with up to 1000 client models ×
-/// ~1e5 parameters); the inner loops are allocation-free and auto-vectorize.
+/// accumulated per the given reduction order (single-threaded).
 pub fn weighted_mean(
     params: &[&[f32]],
     weights: &[f64],
     order: ReductionOrder,
+) -> Result<Vec<f32>> {
+    weighted_mean_plan(params, weights, AggPlan::sequential(order))
+}
+
+/// [`weighted_mean`] under an execution plan; `plan.parallelism` block-
+/// parallelizes over element chunks with bitwise-identical results.
+pub fn weighted_mean_plan(
+    params: &[&[f32]],
+    weights: &[f64],
+    plan: AggPlan,
 ) -> Result<Vec<f32>> {
     if params.is_empty() {
         bail!("weighted_mean of zero models");
@@ -82,70 +137,133 @@ pub fn weighted_mean(
     }
     let norm: Vec<f32> = weights.iter().map(|&w| (w / wsum) as f32).collect();
 
-    let out = match order {
-        ReductionOrder::Sequential => accumulate(params, &norm, &forward_idx(params.len())),
-        ReductionOrder::Reversed => accumulate(params, &norm, &reversed_idx(params.len())),
-        ReductionOrder::PairwiseTree => pairwise(params, &norm, dim),
-        ReductionOrder::Kahan => kahan(params, &norm, dim),
-    };
+    let mut out = vec![0f32; dim];
+    let n_chunks = dim.div_ceil(CHUNK).max(1);
+    // Spawning is only worth its cost when every worker gets several chunks
+    // of real work; small vectors always reduce inline. Thread count never
+    // affects the result, only the wall clock.
+    const MIN_CHUNKS_PER_THREAD: usize = 4;
+    let threads = plan
+        .parallelism
+        .max(1)
+        .min(n_chunks / MIN_CHUNKS_PER_THREAD)
+        .max(1);
+    if threads <= 1 {
+        let mut scratch = Vec::new();
+        for (ci, chunk) in out.chunks_mut(CHUNK).enumerate() {
+            fill_chunk(params, &norm, plan.order, ci * CHUNK, chunk, &mut scratch);
+        }
+    } else {
+        let norm = &norm;
+        std::thread::scope(|s| {
+            let mut buckets: Vec<Vec<(usize, &mut [f32])>> =
+                (0..threads).map(|_| Vec::new()).collect();
+            for (ci, chunk) in out.chunks_mut(CHUNK).enumerate() {
+                buckets[ci % threads].push((ci, chunk));
+            }
+            for bucket in buckets {
+                s.spawn(move || {
+                    let mut scratch = Vec::new();
+                    for (ci, chunk) in bucket {
+                        fill_chunk(params, norm, plan.order, ci * CHUNK, chunk, &mut scratch);
+                    }
+                });
+            }
+        });
+    }
     Ok(out)
 }
 
-fn forward_idx(n: usize) -> Vec<usize> {
-    (0..n).collect()
-}
-
-fn reversed_idx(n: usize) -> Vec<usize> {
-    (0..n).rev().collect()
-}
-
-fn accumulate(params: &[&[f32]], w: &[f32], order: &[usize]) -> Vec<f32> {
-    let dim = params[0].len();
-    let mut acc = vec![0f32; dim];
-    for &i in order {
-        let (p, wi) = (params[i], w[i]);
-        for (a, &v) in acc.iter_mut().zip(p) {
-            *a += wi * v;
+/// Reduce one element range `[lo, lo + out.len())` of the weighted sum into
+/// `out`, using exactly the per-element operation order the profile defines.
+fn fill_chunk(
+    params: &[&[f32]],
+    w: &[f32],
+    order: ReductionOrder,
+    lo: usize,
+    out: &mut [f32],
+    scratch: &mut Vec<f32>,
+) {
+    let len = out.len();
+    match order {
+        ReductionOrder::Sequential => {
+            out.fill(0.0);
+            for (p, &wi) in params.iter().zip(w) {
+                axpy(out, wi, &p[lo..lo + len]);
+            }
         }
-    }
-    acc
-}
-
-fn pairwise(params: &[&[f32]], w: &[f32], dim: usize) -> Vec<f32> {
-    // Build leaf terms w_i * p_i then reduce adjacent pairs until one left.
-    let mut level: Vec<Vec<f32>> = params
-        .iter()
-        .zip(w)
-        .map(|(p, &wi)| p.iter().map(|&v| wi * v).collect())
-        .collect();
-    while level.len() > 1 {
-        let mut next = Vec::with_capacity(level.len().div_ceil(2));
-        let mut it = level.into_iter();
-        while let Some(mut a) = it.next() {
-            if let Some(b) = it.next() {
-                for (x, y) in a.iter_mut().zip(&b) {
-                    *x += *y;
+        ReductionOrder::Reversed => {
+            out.fill(0.0);
+            for i in (0..params.len()).rev() {
+                axpy(out, w[i], &params[i][lo..lo + len]);
+            }
+        }
+        ReductionOrder::Kahan => {
+            out.fill(0.0);
+            scratch.clear();
+            scratch.resize(len, 0.0);
+            for (p, &wi) in params.iter().zip(w) {
+                let pc = &p[lo..lo + len];
+                for j in 0..len {
+                    let y = wi * pc[j] - scratch[j];
+                    let t = out[j] + y;
+                    scratch[j] = (t - out[j]) - y;
+                    out[j] = t;
                 }
             }
-            next.push(a);
         }
-        level = next;
+        ReductionOrder::PairwiseTree => {
+            // ceil(log2 n) recursion levels, one chunk-sized buffer each.
+            let n = params.len();
+            let depth = if n <= 1 {
+                1
+            } else {
+                (usize::BITS - (n - 1).leading_zeros()) as usize
+            };
+            scratch.clear();
+            scratch.resize(depth * len, 0.0);
+            pairwise_into(params, w, 0, n, lo, out, scratch);
+        }
     }
-    level.pop().unwrap_or_else(|| vec![0f32; dim])
 }
 
-fn kahan(params: &[&[f32]], w: &[f32], dim: usize) -> Vec<f32> {
-    let mut acc = vec![0f32; dim];
-    let mut comp = vec![0f32; dim];
-    for (p, &wi) in params.iter().zip(w) {
-        for j in 0..dim {
-            let y = wi * p[j] - comp[j];
-            let t = acc[j] + y;
-            comp[j] = (t - acc[j]) - y;
-            acc[j] = t;
-        }
+#[inline]
+fn axpy(out: &mut [f32], wi: f32, p: &[f32]) {
+    for (o, &v) in out.iter_mut().zip(p) {
+        *o += wi * v;
     }
-    acc
+}
+
+/// Adjacent-pair tree reduction of models `[mlo, mhi)` over one element
+/// chunk. Splitting at the largest power of two strictly below `n`
+/// reproduces, top-down, exactly the tree the old bottom-up level-by-level
+/// pairing built — same association, same bits (golden-tested below).
+fn pairwise_into(
+    params: &[&[f32]],
+    w: &[f32],
+    mlo: usize,
+    mhi: usize,
+    lo: usize,
+    out: &mut [f32],
+    scratch: &mut [f32],
+) {
+    let n = mhi - mlo;
+    let len = out.len();
+    if n == 1 {
+        let p = &params[mlo][lo..lo + len];
+        let wi = w[mlo];
+        for (o, &v) in out.iter_mut().zip(p) {
+            *o = wi * v;
+        }
+        return;
+    }
+    let split = 1usize << (n - 1).ilog2();
+    let (tmp, rest) = scratch.split_at_mut(len);
+    pairwise_into(params, w, mlo, mlo + split, lo, out, rest);
+    pairwise_into(params, w, mlo + split, mhi, lo, tmp, rest);
+    for (o, &t) in out.iter_mut().zip(tmp.iter()) {
+        *o += t;
+    }
 }
 
 /// Server-side momentum (FedAvgM, Hsu et al. [2]):
@@ -214,6 +332,43 @@ mod tests {
         a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= tol)
     }
 
+    fn random_models(seed: u64, n: usize, dim: usize) -> (Vec<Vec<f32>>, Vec<f64>) {
+        let mut rng = crate::util::rng::Rng::seed_from(seed);
+        let params: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal_f32() * 3.0).collect())
+            .collect();
+        let weights: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+        (params, weights)
+    }
+
+    /// The pre-refactor pairwise implementation (one Vec per leaf, bottom-up
+    /// level pairing) — kept verbatim as the golden reference the new
+    /// allocation-free recursion must match bit for bit.
+    fn pairwise_golden(params: &[&[f32]], weights: &[f64]) -> Vec<f32> {
+        let wsum: f64 = weights.iter().sum();
+        let w: Vec<f32> = weights.iter().map(|&x| (x / wsum) as f32).collect();
+        let dim = params[0].len();
+        let mut level: Vec<Vec<f32>> = params
+            .iter()
+            .zip(&w)
+            .map(|(p, &wi)| p.iter().map(|&v| wi * v).collect())
+            .collect();
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity(level.len().div_ceil(2));
+            let mut it = level.into_iter();
+            while let Some(mut a) = it.next() {
+                if let Some(b) = it.next() {
+                    for (x, y) in a.iter_mut().zip(&b) {
+                        *x += *y;
+                    }
+                }
+                next.push(a);
+            }
+            level = next;
+        }
+        level.pop().unwrap_or_else(|| vec![0f32; dim])
+    }
+
     #[test]
     fn equal_weights_is_mean() {
         let p1 = vec![1.0f32, 2.0];
@@ -235,14 +390,8 @@ mod tests {
     #[test]
     fn orders_agree_within_fp_tolerance_but_can_differ_bitwise() {
         // Many uneven contributions to tickle rounding differences.
-        let n = 33;
-        let dim = 101;
-        let mut rng = crate::util::rng::Rng::seed_from(5);
-        let params: Vec<Vec<f32>> = (0..n)
-            .map(|_| (0..dim).map(|_| rng.normal_f32() * 3.0).collect())
-            .collect();
+        let (params, weights) = random_models(5, 33, 101);
         let refs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
-        let weights: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
         let base = weighted_mean(&refs, &weights, ReductionOrder::Sequential).unwrap();
         for order in [
             ReductionOrder::PairwiseTree,
@@ -256,16 +405,40 @@ mod tests {
 
     #[test]
     fn same_order_is_bitwise_reproducible() {
-        let mut rng = crate::util::rng::Rng::seed_from(6);
-        let params: Vec<Vec<f32>> = (0..9)
-            .map(|_| (0..50).map(|_| rng.normal_f32()).collect())
-            .collect();
+        let (params, _) = random_models(6, 9, 50);
         let refs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
         let w = vec![1.0; 9];
         for order in ReductionOrder::ALL {
             let a = weighted_mean(&refs, &w, order).unwrap();
             let b = weighted_mean(&refs, &w, order).unwrap();
             assert_eq!(a, b, "{order:?} not deterministic");
+        }
+    }
+
+    #[test]
+    fn pairwise_matches_golden_per_leaf_implementation() {
+        // Cover n around every power-of-two boundary and chunk boundaries.
+        for n in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17, 33] {
+            let (params, weights) = random_models(100 + n as u64, n, CHUNK + 37);
+            let refs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+            let golden = pairwise_golden(&refs, &weights);
+            let new = weighted_mean(&refs, &weights, ReductionOrder::PairwiseTree).unwrap();
+            assert_eq!(new, golden, "pairwise tree shape changed at n={n}");
+        }
+    }
+
+    #[test]
+    fn parallel_plan_is_bitwise_equal_to_sequential_plan() {
+        // Large enough that the worker pool actually engages (the spawn
+        // threshold keeps small vectors inline).
+        let (params, weights) = random_models(7, 13, 16 * CHUNK + 11);
+        let refs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+        for order in ReductionOrder::ALL {
+            let seq = weighted_mean_plan(&refs, &weights, AggPlan::new(order, 1)).unwrap();
+            for par in [2usize, 4, 8] {
+                let p = weighted_mean_plan(&refs, &weights, AggPlan::new(order, par)).unwrap();
+                assert_eq!(seq, p, "{order:?} diverges at parallelism {par}");
+            }
         }
     }
 

@@ -10,6 +10,6 @@ pub mod robust;
 pub mod server_opt;
 
 pub use cluster::agglomerative_clusters;
-pub use mean::{weighted_mean, ReductionOrder};
+pub use mean::{weighted_mean, weighted_mean_plan, AggPlan, ReductionOrder};
 pub use robust::{coordinate_median, krum, trimmed_mean};
 pub use server_opt::{ServerOpt, ServerOptKind};

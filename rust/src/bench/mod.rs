@@ -1,8 +1,12 @@
 //! Minimal benchmarking harness (criterion is not available in this
 //! offline image): warmup + timed iterations with mean/σ/min/max reporting,
-//! used by every `benches/*.rs` target.
+//! used by every `benches/*.rs` target — plus a machine-readable
+//! [`BenchSuite`] collector that emits `BENCH_micro.json` so the perf
+//! trajectory is tracked per PR.
 
 use std::time::Instant;
+
+use anyhow::{Context, Result};
 
 use crate::util::stats;
 
@@ -64,6 +68,91 @@ pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
     (out, secs)
 }
 
+/// One entry of a machine-readable benchmark artifact.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub name: String,
+    /// Nanoseconds per operation (mean).
+    pub ns_per_op: f64,
+    pub iters: usize,
+}
+
+/// A throughput measurement (e.g. FL rounds per second at a parallelism
+/// level).
+#[derive(Clone, Debug)]
+pub struct ThroughputRecord {
+    pub name: String,
+    pub ops_per_sec: f64,
+}
+
+/// Collects bench results and serializes them as a stable JSON artifact
+/// (`BENCH_micro.json`) for per-PR perf tracking.
+#[derive(Clone, Debug, Default)]
+pub struct BenchSuite {
+    pub results: Vec<BenchRecord>,
+    pub throughput: Vec<ThroughputRecord>,
+}
+
+impl BenchSuite {
+    pub fn new() -> BenchSuite {
+        BenchSuite::default()
+    }
+
+    /// Record a timed bench result.
+    pub fn push(&mut self, r: &BenchResult) {
+        self.results.push(BenchRecord {
+            name: r.name.clone(),
+            ns_per_op: r.mean_secs * 1e9,
+            iters: r.iters,
+        });
+    }
+
+    /// Record a throughput number (ops — e.g. rounds — per second).
+    pub fn push_throughput(&mut self, name: &str, ops_per_sec: f64) {
+        self.throughput.push(ThroughputRecord {
+            name: name.to_string(),
+            ops_per_sec,
+        });
+    }
+
+    /// Serialize through [`crate::util::json::Json`] (escaping included).
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::from(r.name.as_str())),
+                    ("ns_per_op", Json::from((r.ns_per_op * 10.0).round() / 10.0)),
+                    ("iters", Json::from(r.iters)),
+                ])
+            })
+            .collect();
+        let throughput: Vec<Json> = self
+            .throughput
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("name", Json::from(t.name.as_str())),
+                    ("ops_per_sec", Json::from((t.ops_per_sec * 1e4).round() / 1e4)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("schema", Json::from("flsim-bench-v1")),
+            ("results", Json::Arr(results)),
+            ("throughput", Json::Arr(throughput)),
+        ]);
+        format!("{doc}\n")
+    }
+
+    /// Write the artifact to `path`.
+    pub fn write(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json()).with_context(|| format!("writing {path}"))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +176,40 @@ mod tests {
         let (v, secs) = time_once("quick", || 42);
         assert_eq!(v, 42);
         assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn suite_emits_valid_machine_readable_json() {
+        let mut suite = BenchSuite::new();
+        suite.push(&BenchResult {
+            name: "agg/\"q\"".into(),
+            iters: 5,
+            mean_secs: 1.5e-6,
+            stddev_secs: 0.0,
+            min_secs: 1e-6,
+            max_secs: 2e-6,
+        });
+        suite.push_throughput("round/parallelism=4", 12.5);
+        let j = suite.to_json();
+        // Parses with the in-repo JSON parser and carries the values.
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(
+            parsed.get("schema").and_then(crate::util::json::Json::as_str),
+            Some("flsim-bench-v1")
+        );
+        let results = parsed
+            .get("results")
+            .and_then(crate::util::json::Json::as_arr)
+            .unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(
+            results[0].get("ns_per_op").and_then(crate::util::json::Json::as_f64),
+            Some(1500.0)
+        );
+        let tp = parsed
+            .get("throughput")
+            .and_then(crate::util::json::Json::as_arr)
+            .unwrap();
+        assert_eq!(tp[0].get("ops_per_sec").and_then(crate::util::json::Json::as_f64), Some(12.5));
     }
 }

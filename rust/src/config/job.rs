@@ -96,6 +96,12 @@ pub struct JobConfig {
     pub round_timeout_secs: Option<f64>,
     /// Fraction of clients sampled per round (1.0 = all, paper default).
     pub client_fraction: f64,
+    /// Worker threads for the round engine (client training + aggregation).
+    /// `1` = fully sequential (the historical behaviour), `0` = one per
+    /// available core. Any value produces bitwise-identical results — model
+    /// hashes and byte counts never depend on this knob (see README
+    /// "Determinism contract").
+    pub parallelism: usize,
 }
 
 impl JobConfig {
@@ -125,6 +131,7 @@ impl JobConfig {
             hw_profile: ReductionOrder::Sequential,
             round_timeout_secs: None,
             client_fraction: 1.0,
+            parallelism: 1,
             strategy,
         }
     }
@@ -247,6 +254,10 @@ impl JobConfig {
             .get("client_fraction")
             .and_then(Yaml::as_f64)
             .unwrap_or(1.0);
+        let parallelism = match get_i64(job, "parallelism").unwrap_or(1) {
+            n if n < 0 => bail!("job.parallelism must be >= 0 (0 = auto), got {n}"),
+            n => n as usize,
+        };
 
         let cfg = JobConfig {
             name,
@@ -264,9 +275,21 @@ impl JobConfig {
             hw_profile,
             round_timeout_secs,
             client_fraction,
+            parallelism,
         };
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// The round engine's worker count: `parallelism`, with `0` resolved to
+    /// the number of available cores.
+    pub fn effective_parallelism(&self) -> usize {
+        match self.parallelism {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            n => n,
+        }
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -356,6 +379,7 @@ job:
   name: scaffold_test
   seed: 7
   rounds: 12
+  parallelism: 4
 dataset:
   name: cifar10_synth
   n: 2000
@@ -393,6 +417,8 @@ hardware_profile: kahan
         assert_eq!(j.train.local_epochs, 3);
         assert_eq!(j.consensus.malicious_workers, vec!["worker_1"]);
         assert_eq!(j.hw_profile, ReductionOrder::Kahan);
+        assert_eq!(j.parallelism, 4);
+        assert_eq!(j.effective_parallelism(), 4);
         assert_eq!(
             j.dataset.distribution,
             Distribution::Dirichlet { alpha: 0.5 }
@@ -430,6 +456,16 @@ hardware_profile: kahan
         let mut j = JobConfig::default_cnn("fedavg");
         j.dataset.n = 3;
         assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn parallelism_defaults_and_auto_resolves() {
+        let mut j = JobConfig::default_cnn("fedavg");
+        assert_eq!(j.parallelism, 1);
+        assert_eq!(j.effective_parallelism(), 1);
+        j.parallelism = 0; // auto
+        assert!(j.effective_parallelism() >= 1);
+        j.validate().unwrap();
     }
 
     #[test]

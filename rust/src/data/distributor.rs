@@ -3,19 +3,17 @@
 //! downloads with byte accounting.
 //!
 //! In the paper this is an HTTP chunk server; here chunks are compressed
-//! in-memory archives (flate2/zlib) handed to nodes through the same
-//! interface, with download volumes feeding the bandwidth metrics.
+//! in-memory archives (word-RLE, [`crate::util::codec`]) handed to nodes
+//! through the same interface, with download volumes feeding the bandwidth
+//! metrics.
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
 
 use anyhow::{anyhow, Result};
-use flate2::read::ZlibDecoder;
-use flate2::write::ZlibEncoder;
-use flate2::Compression;
 
 use crate::data::dataset::Dataset;
 use crate::data::partition::Partition;
+use crate::util::codec;
 use crate::util::hash;
 
 /// A compressed, content-addressed dataset chunk.
@@ -133,7 +131,7 @@ impl Default for Distributor {
 }
 
 /// Chunk wire format: header (shape / classes / counts) + LE f32/i32 bodies,
-/// zlib-compressed, content-addressed by SHA-256.
+/// word-RLE-compressed, content-addressed by SHA-256.
 fn encode_chunk(ds: &Dataset) -> Result<Chunk> {
     let mut raw = Vec::with_capacity(ds.x.len() * 4 + ds.y.len() * 4 + 64);
     raw.extend_from_slice(&(ds.feature_shape.len() as u32).to_le_bytes());
@@ -148,9 +146,7 @@ fn encode_chunk(ds: &Dataset) -> Result<Chunk> {
     for &v in &ds.y {
         raw.extend_from_slice(&v.to_le_bytes());
     }
-    let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
-    enc.write_all(&raw)?;
-    let bytes = enc.finish()?;
+    let bytes = codec::compress(&raw);
     Ok(Chunk {
         id: hash::sha256_hex(&bytes)[..32].to_string(),
         uncompressed_len: raw.len() as u64,
@@ -160,8 +156,14 @@ fn encode_chunk(ds: &Dataset) -> Result<Chunk> {
 }
 
 fn decode_chunk(chunk: &Chunk) -> Result<Dataset> {
-    let mut raw = Vec::with_capacity(chunk.uncompressed_len as usize);
-    ZlibDecoder::new(&chunk.bytes[..]).read_to_end(&mut raw)?;
+    let raw = codec::decompress(&chunk.bytes)?;
+    if raw.len() as u64 != chunk.uncompressed_len {
+        return Err(anyhow!(
+            "chunk decompressed to {} bytes, expected {}",
+            raw.len(),
+            chunk.uncompressed_len
+        ));
+    }
     let mut pos = 0usize;
     let mut take_u32 = |raw: &[u8]| -> Result<u32> {
         if pos + 4 > raw.len() {

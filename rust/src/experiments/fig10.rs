@@ -5,7 +5,7 @@
 //! Expected shape: honest > 50% ⇒ poisoning nullified; 1M-1H ⇒ the coin-flip
 //! tie makes the trajectory fluctuate; 1M-0H ⇒ training destroyed.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -36,7 +36,7 @@ pub fn jobs() -> Vec<JobConfig> {
         .collect()
 }
 
-pub fn run(rt: Rc<Runtime>) -> Result<Vec<RunReport>> {
+pub fn run(rt: Arc<Runtime>) -> Result<Vec<RunReport>> {
     let orch = Orchestrator::new(rt);
     let mut reports = Vec::new();
     for job in jobs() {

@@ -3,7 +3,7 @@
 //! loss; hierarchical/decentralized higher CPU+memory; decentralized the
 //! most network bandwidth.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -43,7 +43,7 @@ pub fn jobs() -> Vec<JobConfig> {
     out
 }
 
-pub fn run(rt: Rc<Runtime>) -> Result<Vec<RunReport>> {
+pub fn run(rt: Arc<Runtime>) -> Result<Vec<RunReport>> {
     let orch = Orchestrator::new(rt);
     let mut reports = Vec::new();
     for job in jobs() {

@@ -3,7 +3,7 @@
 //! across client counts; network bandwidth and total time grow with the
 //! number of clients.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -33,7 +33,7 @@ pub fn jobs() -> Vec<JobConfig> {
         .collect()
 }
 
-pub fn run(rt: Rc<Runtime>) -> Result<Vec<RunReport>> {
+pub fn run(rt: Arc<Runtime>) -> Result<Vec<RunReport>> {
     let orch = Orchestrator::new(rt);
     let mut reports = Vec::new();
     for job in jobs() {

@@ -3,7 +3,7 @@
 //! clients, batch 64, 30 rounds): accuracy, loss, wall time, CPU/memory,
 //! network bandwidth.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -37,7 +37,7 @@ pub fn jobs() -> Vec<JobConfig> {
         .collect()
 }
 
-pub fn run(rt: Rc<Runtime>) -> Result<Vec<RunReport>> {
+pub fn run(rt: Arc<Runtime>) -> Result<Vec<RunReport>> {
     let orch = Orchestrator::new(rt);
     let mut reports = Vec::new();
     for job in jobs() {

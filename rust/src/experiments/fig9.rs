@@ -4,7 +4,7 @@
 //! ("torch"), `cnn_v2` ("tensorflow") and `mlp` ("sklearn") manifest
 //! backends (DESIGN.md §2).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -35,7 +35,7 @@ pub fn jobs() -> Vec<JobConfig> {
         .collect()
 }
 
-pub fn run(rt: Rc<Runtime>) -> Result<Vec<RunReport>> {
+pub fn run(rt: Arc<Runtime>) -> Result<Vec<RunReport>> {
     let orch = Orchestrator::new(rt);
     let mut reports = Vec::new();
     for job in jobs() {

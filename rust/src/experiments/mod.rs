@@ -8,7 +8,7 @@ pub mod fig8;
 pub mod fig9;
 pub mod tables12;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -41,7 +41,7 @@ pub fn save_report(experiment: &str, report: &crate::metrics::report::RunReport)
 }
 
 /// Run an experiment by figure/table id.
-pub fn run_by_name(rt: Rc<Runtime>, which: &str) -> Result<()> {
+pub fn run_by_name(rt: Arc<Runtime>, which: &str) -> Result<()> {
     match which {
         "fig8" => fig8::run(rt).map(|_| ()),
         "fig9" => fig9::run(rt).map(|_| ()),

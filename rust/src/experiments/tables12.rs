@@ -5,7 +5,7 @@
 //! tables: trials on the same profile are **bitwise identical**; different
 //! profiles drift by well under 1% absolute accuracy by round 10.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -28,7 +28,7 @@ pub fn job_for(profile: ReductionOrder) -> JobConfig {
     j
 }
 
-pub fn run(rt: Rc<Runtime>) -> Result<Vec<RunReport>> {
+pub fn run(rt: Arc<Runtime>) -> Result<Vec<RunReport>> {
     let orch = Orchestrator::new(rt);
     let mut all: Vec<RunReport> = Vec::new();
 

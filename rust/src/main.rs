@@ -126,6 +126,7 @@ fn run() -> Result<()> {
         Some("info") => {
             let rt = Runtime::shared(&artifacts)?;
             println!("artifact dir: {artifacts}");
+            println!("engine:       {}", rt.engine_name());
             println!("jax version:  {}", rt.manifest.jax_version);
             println!(
                 "batches:      train={} eval={}",
@@ -147,8 +148,8 @@ fn run() -> Result<()> {
             println!(
                 "usage: flsim <run|preset|experiment|list|info> [options]\n\
                  \n\
-                 flsim run --config <job.yaml> [--artifacts DIR] [--rounds N]\n\
-                 flsim preset <strategy> [--rounds N] [--clients N] [--seed N]\n\
+                 flsim run --config <job.yaml> [--artifacts DIR] [--rounds N] [--parallelism N]\n\
+                 flsim preset <strategy> [--rounds N] [--clients N] [--seed N] [--parallelism N]\n\
                  flsim experiment <fig8|fig9|fig10|fig11|tables|fig12|all>\n\
                  flsim list\n\
                  flsim info"
@@ -173,6 +174,10 @@ fn apply_overrides(job: &mut JobConfig, args: &Args) -> Result<()> {
     }
     if let Some(n) = args.flags.get("dataset-n") {
         job.dataset.n = n.parse().map_err(|_| anyhow!("bad --dataset-n"))?;
+    }
+    if let Some(p) = args.flags.get("parallelism") {
+        // 0 = one worker per core; results are bitwise-identical either way.
+        job.parallelism = p.parse().map_err(|_| anyhow!("bad --parallelism"))?;
     }
     if args.flags.contains_key("chain") {
         job.chain.enabled = true;

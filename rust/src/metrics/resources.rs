@@ -1,6 +1,10 @@
-//! Process resource probes: CPU time and resident memory, read from the OS
-//! (getrusage + /proc/self/statm) — the "resource usage" series of the
-//! paper's Figures 8/9/11.
+//! Process resource probes: CPU time and resident memory, read from procfs
+//! (`/proc/self/stat`, `/proc/self/status`) — the "resource usage" series of
+//! the paper's Figures 8/9/11.
+//!
+//! Pure-std implementation (no `libc` in the offline image); on non-Linux
+//! hosts the probes degrade to zeros, which only blanks the resource columns
+//! of the report.
 
 /// A point-in-time resource snapshot.
 #[derive(Clone, Copy, Debug, Default)]
@@ -18,31 +22,46 @@ pub fn snapshot() -> ResourceSnapshot {
     }
 }
 
+/// Kernel clock ticks per second. `_SC_CLK_TCK` is 100 on every mainstream
+/// Linux configuration (procfs itself documents utime/stime in those units).
+const CLK_TCK: f64 = 100.0;
+
 fn cpu_secs() -> f64 {
-    // SAFETY: plain libc call with an out-param struct.
-    unsafe {
-        let mut ru: libc::rusage = std::mem::zeroed();
-        if libc::getrusage(libc::RUSAGE_SELF, &mut ru) != 0 {
-            return 0.0;
-        }
-        let tv = |t: libc::timeval| t.tv_sec as f64 + t.tv_usec as f64 / 1e6;
-        tv(ru.ru_utime) + tv(ru.ru_stime)
-    }
+    let Ok(stat) = std::fs::read_to_string("/proc/self/stat") else {
+        return 0.0;
+    };
+    // Fields after the comm, which is parenthesized and may contain spaces —
+    // split on the *last* ')'.
+    let Some(rest) = stat.rsplit_once(')').map(|(_, r)| r) else {
+        return 0.0;
+    };
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    // rest starts at field 3 ("state"); utime/stime are fields 14/15 of the
+    // full line, i.e. indexes 11/12 here.
+    let tick = |i: usize| {
+        fields
+            .get(i)
+            .and_then(|s| s.parse::<f64>().ok())
+            .unwrap_or(0.0)
+    };
+    (tick(11) + tick(12)) / CLK_TCK
 }
 
 fn rss_mib() -> f64 {
-    let Ok(statm) = std::fs::read_to_string("/proc/self/statm") else {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
         return 0.0;
     };
-    let Some(resident_pages) = statm
-        .split_whitespace()
-        .nth(1)
-        .and_then(|s| s.parse::<f64>().ok())
-    else {
-        return 0.0;
-    };
-    let page = unsafe { libc::sysconf(libc::_SC_PAGESIZE) } as f64;
-    resident_pages * page / (1024.0 * 1024.0)
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb = rest
+                .split_whitespace()
+                .next()
+                .and_then(|s| s.parse::<f64>().ok())
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
 }
 
 /// CPU utilisation (%) between two snapshots over `wall_secs`.

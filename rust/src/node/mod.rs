@@ -5,12 +5,14 @@
 //! state; workers hold their aggregation role and an optional malicious
 //! behaviour (for the Fig 10 poisoning experiments).
 
+use std::sync::Arc;
+
 use anyhow::Result;
-use xla::Literal;
 
 use crate::controller::phases::NodeStage;
 use crate::data::dataset::Dataset;
 use crate::runtime::backend::ModelBackend;
+use crate::runtime::tensor::Literal;
 use crate::strategy::ctx::ClientState;
 use crate::util::rng::Rng;
 
@@ -22,8 +24,9 @@ pub struct ClientNode {
     /// Pre-uploaded training batches.
     pub batches: Vec<(Literal, Literal)>,
     pub state: ClientState,
-    /// Decentralized mode: the peer's own current model.
-    pub local_model: Option<Vec<f32>>,
+    /// Decentralized mode: the peer's own current model (shared handle —
+    /// gossip merges hand the same allocation to the KV store and back).
+    pub local_model: Option<Arc<[f32]>>,
 }
 
 impl ClientNode {

@@ -2,10 +2,10 @@
 //! `test()` half of the paper's Strategy class).
 
 use anyhow::Result;
-use xla::Literal;
 
 use crate::data::dataset::Dataset;
 use crate::runtime::backend::ModelBackend;
+use crate::runtime::tensor::Literal;
 
 /// The test set, pre-uploaded as fixed-size masked eval batches.
 pub struct EvalSet {

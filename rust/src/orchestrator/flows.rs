@@ -1,8 +1,31 @@
 //! The four round flows (standard / hierarchical / clustered /
 //! decentralized), each implementing the per-round body of Algorithm 1 over
 //! the KV store with full traffic metering.
+//!
+//! ## The parallel round engine
+//!
+//! Client-local training — the dominant cost of every round — runs on a
+//! scoped worker pool sized by `JobConfig::parallelism`. Determinism (RQ6)
+//! is preserved *by construction*, not by locking:
+//!
+//! 1. **Phase A (serial, client order):** starting models are resolved,
+//!    downloads are metered and per-client RNG streams are derived — all in
+//!    deterministic client order, before any thread is spawned.
+//! 2. **Phase B (parallel):** clients train concurrently. Each task touches
+//!    only its own node state and pre-derived RNG stream plus
+//!    shared-immutable context (backend, strategy, broadcast state); the
+//!    reference engine is bitwise-deterministic per call, so scheduling
+//!    cannot influence any client's result.
+//! 3. **Phase C (serial, client order):** uploads, traffic metering and
+//!    controller stage transitions are committed in deterministic client
+//!    order, regardless of which worker finished first.
+//!
+//! Consequently `parallelism: N` produces bitwise-identical model hashes
+//! and byte counts to `parallelism: 1` (asserted by
+//! `rust/tests/parallel_engine.rs`).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -10,10 +33,14 @@ use anyhow::{anyhow, bail, Result};
 use crate::chain::block::Tx;
 use crate::consensus::Proposal;
 use crate::controller::phases::{NodeStage, ProcessPhase};
+use crate::kvstore::store::Payload;
 use crate::metrics::report::RoundMetrics;
 use crate::metrics::resources;
+use crate::node::ClientNode;
 use crate::orchestrator::setup::JobState;
+use crate::runtime::backend::ModelBackend;
 use crate::strategy::ctx::{ClientCtx, ClientUpdate};
+use crate::strategy::Strategy;
 use crate::util::hash;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -22,7 +49,7 @@ const KV: &str = "kv_store";
 const LC: &str = "logic_controller";
 
 /// Publish with NetSim metering (sender -> broker).
-fn publish(state: &mut JobState, topic: &str, sender: &str, round: u64, payload: crate::kvstore::store::Payload) {
+fn publish(state: &mut JobState, topic: &str, sender: &str, round: u64, payload: Payload) {
     let bytes = payload.wire_bytes();
     state.kv.publish(topic, sender, round, payload);
     state.net.transfer(sender, KV, bytes);
@@ -93,6 +120,97 @@ impl RoundScope {
     }
 }
 
+/// One client's unit of parallel work: everything phase B needs, owned or
+/// exclusively borrowed, so tasks can move to worker threads.
+struct TrainTask<'a> {
+    name: &'a str,
+    start: Arc<[f32]>,
+    rng: Rng,
+    node: &'a mut ClientNode,
+}
+
+/// Pair every sampled client name with a mutable borrow of its node (the
+/// borrows are disjoint — names are unique map keys).
+fn collect_tasks<'a>(
+    clients: &'a mut BTreeMap<String, ClientNode>,
+    names: &'a [String],
+    starts: Vec<Arc<[f32]>>,
+    rngs: Vec<Rng>,
+) -> Result<Vec<TrainTask<'a>>> {
+    let index_of: BTreeMap<&str, usize> = names
+        .iter()
+        .enumerate()
+        .map(|(i, n)| (n.as_str(), i))
+        .collect();
+    let mut nodes: Vec<Option<&'a mut ClientNode>> = Vec::new();
+    nodes.resize_with(names.len(), || None);
+    for (k, v) in clients.iter_mut() {
+        if let Some(&i) = index_of.get(k.as_str()) {
+            nodes[i] = Some(v);
+        }
+    }
+    let mut tasks = Vec::with_capacity(names.len());
+    for ((name, (start, rng)), node) in names
+        .iter()
+        .zip(starts.into_iter().zip(rngs))
+        .zip(nodes)
+    {
+        tasks.push(TrainTask {
+            name: name.as_str(),
+            start,
+            rng,
+            node: node.ok_or_else(|| anyhow!("unknown client {name}"))?,
+        });
+    }
+    Ok(tasks)
+}
+
+/// Phase B: run every task's local training, on a scoped worker pool when
+/// `par > 1`. Results come back in task (= client) order; worker scheduling
+/// cannot influence any value because each task reads only its own state
+/// plus shared-immutable context.
+fn train_tasks(
+    backend: &ModelBackend,
+    strategy: &dyn Strategy,
+    extra_state: Option<&[f32]>,
+    lr: f32,
+    epochs: usize,
+    tasks: &mut [TrainTask<'_>],
+    par: usize,
+) -> Vec<Result<ClientUpdate>> {
+    let run_one = |t: &mut TrainTask<'_>| -> Result<ClientUpdate> {
+        let mut ctx = ClientCtx {
+            client: t.name,
+            backend,
+            batches: &t.node.batches,
+            global: &t.start,
+            extra_state,
+            lr,
+            local_epochs: epochs,
+            n_examples: t.node.n_examples,
+            state: &mut t.node.state,
+            rng: &mut t.rng,
+        };
+        strategy.client_train(&mut ctx)
+    };
+    let workers = par.min(tasks.len()).max(1);
+    if workers <= 1 {
+        return tasks.iter_mut().map(run_one).collect();
+    }
+    let chunk = tasks.len().div_ceil(workers);
+    std::thread::scope(|s| {
+        let run_one = &run_one;
+        let mut handles = Vec::with_capacity(workers);
+        for slab in tasks.chunks_mut(chunk) {
+            handles.push(s.spawn(move || slab.iter_mut().map(run_one).collect::<Vec<_>>()));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("client training worker panicked"))
+            .collect()
+    })
+}
+
 /// Local training for a set of clients, each starting from `start_of(name)`.
 /// Returns updates keyed by client (BTreeMap => deterministic order).
 /// `upload_topic_of` decides which KV topic each client uploads to (shared
@@ -101,7 +219,7 @@ fn train_clients_to(
     state: &mut JobState,
     round: u64,
     names: &[String],
-    start_of: impl Fn(&JobState, &str) -> Vec<f32>,
+    start_of: impl Fn(&JobState, &str) -> Arc<[f32]>,
     upload_topic_of: impl Fn(&str) -> String,
 ) -> Result<BTreeMap<String, ClientUpdate>> {
     state.controller.set_phase(ProcessPhase::LocalLearning);
@@ -110,64 +228,58 @@ fn train_clients_to(
     // Broadcast strategy extra state (e.g. SCAFFOLD's c_global) once.
     let extra_state = state.strategy.client_extra_state();
     if let Some(es) = &extra_state {
-        publish(
-            state,
-            "strategy_state",
-            LC,
-            round,
-            crate::kvstore::store::Payload::Params(es.clone()),
-        );
+        let payload = Payload::params(es.clone());
+        publish(state, "strategy_state", LC, round, payload);
     }
 
-    let mut updates = BTreeMap::new();
     let lr = state.job.train.learning_rate;
     let epochs = state.job.train.local_epochs;
+    let par = state.parallelism();
 
+    // Phase A (serial, deterministic client order): resolve starting models,
+    // meter the phase-4 downloads, flip stages, derive RNG streams.
+    let mut starts = Vec::with_capacity(names.len());
+    let mut rngs = Vec::with_capacity(names.len());
     for name in names {
-        // Phase-4 download of the (cluster/peer/global) starting model.
         let start = start_of(state, name);
         let _ = fetch_latest(state, "global_model", name)?;
         if extra_state.is_some() {
             let _ = fetch_latest(state, "strategy_state", name)?;
         }
-
         state.controller.update_stage(name, NodeStage::Busy)?;
-        let mut client_rng = state.round_rng(round).derive("client", name_index(name));
-        let node = state
-            .clients
-            .get_mut(name)
-            .ok_or_else(|| anyhow!("unknown client {name}"))?;
-        let mut ctx = ClientCtx {
-            client: name,
-            backend: &state.backend,
-            batches: &node.batches,
-            global: &start,
-            extra_state: extra_state.as_deref(),
-            lr,
-            local_epochs: epochs,
-            n_examples: node.n_examples,
-            state: &mut node.state,
-            rng: &mut client_rng,
-        };
-        let update = state.strategy.client_train(&mut ctx)?;
+        rngs.push(state.round_rng(round).derive("client", name_index(name)));
+        starts.push(start);
+    }
 
-        // Phase-1 upload: parameters (+ extra state if the strategy has it).
+    // Phase B (parallel): local training on the worker pool.
+    let results = {
+        let backend = &state.backend;
+        let strategy: &dyn Strategy = state.strategy.as_ref();
+        let mut tasks = collect_tasks(&mut state.clients, names, starts, rngs)?;
+        train_tasks(
+            backend,
+            strategy,
+            extra_state.as_deref(),
+            lr,
+            epochs,
+            &mut tasks,
+            par,
+        )
+    };
+
+    // Phase C (serial, deterministic client order): phase-1 uploads, traffic
+    // metering and stage transitions — committed in client order no matter
+    // which worker finished first. Publishing a model is an Arc refcount
+    // bump; the floats trained in phase B are never copied again.
+    let mut updates = BTreeMap::new();
+    for (name, result) in names.iter().zip(results) {
+        let update = result?;
         let topic = upload_topic_of(name);
-        publish(
-            state,
-            &topic,
-            name,
-            round,
-            crate::kvstore::store::Payload::Params(update.params.clone()),
-        );
+        let payload = Payload::Params(update.params.clone());
+        publish(state, &topic, name, round, payload);
         if let Some(extra) = &update.extra {
-            publish(
-                state,
-                "client_extra",
-                name,
-                round,
-                crate::kvstore::store::Payload::Params(extra.clone()),
-            );
+            let payload = Payload::Params(extra.clone());
+            publish(state, "client_extra", name, round, payload);
         }
         state.controller.update_stage(name, NodeStage::Done)?;
         updates.insert(name.clone(), update);
@@ -184,7 +296,7 @@ fn train_clients(
     state: &mut JobState,
     round: u64,
     names: &[String],
-    start_of: impl Fn(&JobState, &str) -> Vec<f32>,
+    start_of: impl Fn(&JobState, &str) -> Arc<[f32]>,
 ) -> Result<BTreeMap<String, ClientUpdate>> {
     train_clients_to(state, round, names, start_of, |_| "client_params".to_string())
 }
@@ -211,12 +323,14 @@ fn aggregate_and_consensus(
         bail!("round {round}: no live workers");
     }
     state.controller.reset_stages(&alive, NodeStage::ReadyWithDataset);
+    let plan = state.agg_plan();
 
     let mut proposals: Vec<Proposal> = Vec::new();
     for wname in &alive {
         state.controller.update_stage(wname, NodeStage::Busy)?;
         // Each worker pulls the full client-parameter set (phase 1 of the
         // consensus pipeline: local parameter sharing to *all* workers).
+        // Zero-copy: every message hands back the client's own allocation.
         let msgs = fetch_round(state, "client_params", round, wname);
         if msgs.len() != updates.len() {
             // KV store is the transport; the counts must agree.
@@ -228,7 +342,7 @@ fn aggregate_and_consensus(
         }
         let agg = state
             .strategy
-            .aggregate(updates, &state.global, state.job.hw_profile, rng)?;
+            .aggregate(updates, &state.global, plan, rng)?;
         let agg = {
             let worker = state
                 .workers
@@ -239,13 +353,8 @@ fn aggregate_and_consensus(
         };
         // Phase 2: aggregated parameter voting — share the hash.
         let prop = Proposal::new(wname.clone(), agg);
-        publish(
-            state,
-            "agg_votes",
-            wname,
-            round,
-            crate::kvstore::store::Payload::Text(prop.hash.clone()),
-        );
+        let payload = Payload::Text(prop.hash.clone());
+        publish(state, "agg_votes", wname, round, payload);
         state.controller.update_stage(wname, NodeStage::Done)?;
         proposals.push(prop);
     }
@@ -339,14 +448,10 @@ pub fn standard_round(state: &mut JobState, round: u64) -> Result<RoundMetrics> 
     let scope = RoundScope::begin(state);
     let mut rng = state.round_rng(round);
 
-    // Phase 4 (of the previous round): distribute the current global model.
-    publish(
-        state,
-        "global_model",
-        LC,
-        round,
-        crate::kvstore::store::Payload::Params(state.global.clone()),
-    );
+    // Phase 4 (of the previous round): distribute the current global model
+    // (an Arc handle — the broadcast is a refcount bump).
+    let payload = Payload::Params(state.global.clone());
+    publish(state, "global_model", LC, round, payload);
 
     let sampled = state.sample_clients(round);
     if sampled.is_empty() {
@@ -357,10 +462,11 @@ pub fn standard_round(state: &mut JobState, round: u64) -> Result<RoundMetrics> 
     let train_loss = mean_loss(&updates);
 
     let winner = aggregate_and_consensus(state, round, &updates, &mut rng)?;
-    let global_before = std::mem::take(&mut state.global);
+    let global_before = state.global.clone();
     state.global = state
         .strategy
-        .post_round(&updates, &global_before, winner);
+        .post_round(&updates, &global_before, winner)
+        .into();
 
     let (test_loss, test_accuracy) = state.evaluate(&state.global)?;
     let global = state.global.clone();
@@ -372,13 +478,8 @@ pub fn hierarchical_round(state: &mut JobState, round: u64) -> Result<RoundMetri
     let scope = RoundScope::begin(state);
     let mut rng = state.round_rng(round);
 
-    publish(
-        state,
-        "global_model",
-        LC,
-        round,
-        crate::kvstore::store::Payload::Params(state.global.clone()),
-    );
+    let payload = Payload::Params(state.global.clone());
+    publish(state, "global_model", LC, round, payload);
 
     // Leaf clusters (skip the root pseudo-cluster, which has no clients).
     let leaf_clusters: Vec<(String, Vec<String>, String)> = state
@@ -389,6 +490,7 @@ pub fn hierarchical_round(state: &mut JobState, round: u64) -> Result<RoundMetri
         .map(|c| (c.name.clone(), c.clients.clone(), c.workers[0].clone()))
         .collect();
 
+    let plan = state.agg_plan();
     let mut cluster_aggs: Vec<ClientUpdate> = Vec::new();
     let mut losses = Vec::new();
     for (cname, members, leaf_worker) in &leaf_clusters {
@@ -410,19 +512,16 @@ pub fn hierarchical_round(state: &mut JobState, round: u64) -> Result<RoundMetri
         let _ = fetch_round(state, &cluster_topic, round, leaf_worker);
 
         // Leaf aggregation.
-        let agg = state
+        let agg: Arc<[f32]> = state
             .strategy
-            .aggregate(&updates, &state.global, state.job.hw_profile, &mut rng)?;
+            .aggregate(&updates, &state.global, plan, &mut rng)?
+            .into();
         let weight: f64 = updates.iter().map(|u| u.weight).sum();
         // Leaf worker ships its cluster model upstream (extra hop = the
-        // hierarchical bandwidth/CPU overhead of Fig 11).
-        publish(
-            state,
-            "cluster_agg",
-            leaf_worker,
-            round,
-            crate::kvstore::store::Payload::Params(agg.clone()),
-        );
+        // hierarchical bandwidth/CPU overhead of Fig 11); the payload shares
+        // the aggregate's allocation.
+        let payload = Payload::Params(agg.clone());
+        publish(state, "cluster_agg", leaf_worker, round, payload);
         cluster_aggs.push(ClientUpdate {
             client: cname.clone(),
             params: agg,
@@ -438,14 +537,14 @@ pub fn hierarchical_round(state: &mut JobState, round: u64) -> Result<RoundMetri
     // Root merge.
     let root = "root_worker".to_string();
     let _ = fetch_round(state, "cluster_agg", round, &root);
-    let refs: Vec<&[f32]> = cluster_aggs.iter().map(|u| u.params.as_slice()).collect();
+    let refs: Vec<&[f32]> = cluster_aggs.iter().map(|u| u.params.as_ref()).collect();
     let weights: Vec<f64> = cluster_aggs.iter().map(|u| u.weight).collect();
-    let merged =
-        crate::aggregate::mean::weighted_mean(&refs, &weights, state.job.hw_profile)?;
-    let global_before = std::mem::take(&mut state.global);
+    let merged = crate::aggregate::mean::weighted_mean_plan(&refs, &weights, plan)?;
+    let global_before = state.global.clone();
     state.global = state
         .strategy
-        .post_round(&cluster_aggs, &global_before, merged);
+        .post_round(&cluster_aggs, &global_before, merged)
+        .into();
 
     let train_loss = crate::util::stats::mean(&losses);
     let (test_loss, test_accuracy) = state.evaluate(&state.global)?;
@@ -464,14 +563,10 @@ pub fn clustered_round(state: &mut JobState, round: u64) -> Result<RoundMetrics>
         _ => bail!("clustered flow requires the flhc strategy"),
     };
 
-    publish(
-        state,
-        "global_model",
-        LC,
-        round,
-        crate::kvstore::store::Payload::Params(state.global.clone()),
-    );
+    let payload = Payload::Params(state.global.clone());
+    publish(state, "global_model", LC, round, payload);
 
+    let plan = state.agg_plan();
     if state.clusters.is_none() {
         // Pre-clustering: behave like FedAvg, but watch for the clustering
         // round.
@@ -488,7 +583,7 @@ pub fn clustered_round(state: &mut JobState, round: u64) -> Result<RoundMetrics>
                 crate::strategy::StrategyKind::FlHc { n_clusters, .. } => (n_clusters,),
                 _ => unreachable!(),
             };
-            let vectors: Vec<Vec<f32>> = updates.iter().map(|u| u.params.clone()).collect();
+            let vectors: Vec<Vec<f32>> = updates.iter().map(|u| u.params.to_vec()).collect();
             let ids = crate::aggregate::cluster::agglomerative_clusters(
                 &vectors,
                 n_clusters,
@@ -508,12 +603,11 @@ pub fn clustered_round(state: &mut JobState, round: u64) -> Result<RoundMetrics>
                     .filter(|(_, &c)| c == cid)
                     .map(|(u, _)| u)
                     .collect();
-                let refs: Vec<&[f32]> = members.iter().map(|u| u.params.as_slice()).collect();
+                let refs: Vec<&[f32]> = members.iter().map(|u| u.params.as_ref()).collect();
                 let ws: Vec<f64> = members.iter().map(|u| u.weight).collect();
-                models.insert(
-                    cid,
-                    crate::aggregate::mean::weighted_mean(&refs, &ws, state.job.hw_profile)?,
-                );
+                let model: Arc<[f32]> =
+                    crate::aggregate::mean::weighted_mean_plan(&refs, &ws, plan)?.into();
+                models.insert(cid, model);
             }
             state
                 .controller
@@ -522,8 +616,11 @@ pub fn clustered_round(state: &mut JobState, round: u64) -> Result<RoundMetrics>
             state.cluster_models = models;
         } else {
             let winner = aggregate_and_consensus(state, round, &updates, &mut rng)?;
-            let global_before = std::mem::take(&mut state.global);
-            state.global = state.strategy.post_round(&updates, &global_before, winner);
+            let global_before = state.global.clone();
+            state.global = state
+                .strategy
+                .post_round(&updates, &global_before, winner)
+                .into();
         }
 
         let (test_loss, test_accuracy) = clustered_eval(state)?;
@@ -554,10 +651,10 @@ pub fn clustered_round(state: &mut JobState, round: u64) -> Result<RoundMetrics>
         if members.is_empty() {
             continue;
         }
-        let refs: Vec<&[f32]> = members.iter().map(|u| u.params.as_slice()).collect();
+        let refs: Vec<&[f32]> = members.iter().map(|u| u.params.as_ref()).collect();
         let ws: Vec<f64> = members.iter().map(|u| u.weight).collect();
-        let model = crate::aggregate::mean::weighted_mean(&refs, &ws, state.job.hw_profile)?;
-        state.cluster_models.insert(cid, model);
+        let model = crate::aggregate::mean::weighted_mean_plan(&refs, &ws, plan)?;
+        state.cluster_models.insert(cid, model.into());
     }
 
     let (test_loss, test_accuracy) = clustered_eval(state)?;
@@ -603,13 +700,8 @@ fn clustered_eval(state: &JobState) -> Result<(f64, f64)> {
 pub fn decentralized_round(state: &mut JobState, round: u64) -> Result<RoundMetrics> {
     let scope = RoundScope::begin(state);
 
-    publish(
-        state,
-        "global_model",
-        LC,
-        round,
-        crate::kvstore::store::Payload::Params(state.global.clone()),
-    );
+    let payload = Payload::Params(state.global.clone());
+    publish(state, "global_model", LC, round, payload);
 
     let peers = state.sample_clients(round);
     if peers.is_empty() {
@@ -637,7 +729,8 @@ pub fn decentralized_round(state: &mut JobState, round: u64) -> Result<RoundMetr
         crate::strategy::StrategyKind::Fedstellar { neighbors } => *neighbors,
         _ => 0,
     };
-    let plan = if neighbors_k == 0 {
+    let plan = state.agg_plan();
+    let plan_gossip = if neighbors_k == 0 {
         crate::topology::gossip::full_exchange(&state.overlay)
     } else {
         let mut grng = state.round_rng(round).derive("gossip", 0);
@@ -646,23 +739,23 @@ pub fn decentralized_round(state: &mut JobState, round: u64) -> Result<RoundMetr
 
     // Gossip pulls are point-to-point: each peer fetches exactly the models
     // its plan names (mesh ⇒ n·(n−1) transfers, ring ⇒ 2n — the Fig 11e
-    // bandwidth ordering comes straight from the plan).
-    let mut merged_models: BTreeMap<String, Vec<f32>> = BTreeMap::new();
-    for (peer, pulls) in &plan.pulls {
+    // bandwidth ordering comes straight from the plan). A pull hands the
+    // sender's allocation over — no float copies on the fabric.
+    let mut merged_models: BTreeMap<String, Arc<[f32]>> = BTreeMap::new();
+    for (peer, pulls) in &plan_gossip.pulls {
         let Some(own) = updates_map.get(peer) else {
             continue; // faulted peer this round
         };
-        let mut stack: Vec<&[f32]> = vec![own.params.as_slice()];
+        let mut stack: Vec<&[f32]> = vec![own.params.as_ref()];
         for other in pulls {
             if let Some(u) = updates_map.get(other) {
                 let _ = fetch_latest(state, &format!("peer_params/{other}"), peer);
-                stack.push(u.params.as_slice());
+                stack.push(u.params.as_ref());
             }
         }
         let weights = vec![1.0; stack.len()];
-        let merged =
-            crate::aggregate::mean::weighted_mean(&stack, &weights, state.job.hw_profile)?;
-        merged_models.insert(peer.clone(), merged);
+        let merged = crate::aggregate::mean::weighted_mean_plan(&stack, &weights, plan)?;
+        merged_models.insert(peer.clone(), merged.into());
     }
     for (peer, model) in &merged_models {
         if let Some(node) = state.clients.get_mut(peer) {
@@ -671,10 +764,10 @@ pub fn decentralized_round(state: &mut JobState, round: u64) -> Result<RoundMetr
     }
 
     // Report on the uniform mean of peer models (the "virtual global").
-    let refs: Vec<&[f32]> = merged_models.values().map(|m| m.as_slice()).collect();
+    let refs: Vec<&[f32]> = merged_models.values().map(|m| m.as_ref()).collect();
     let weights = vec![1.0; refs.len()];
     state.global =
-        crate::aggregate::mean::weighted_mean(&refs, &weights, state.job.hw_profile)?;
+        crate::aggregate::mean::weighted_mean_plan(&refs, &weights, plan)?.into();
 
     let (test_loss, test_accuracy) = state.evaluate(&state.global)?;
     let global = state.global.clone();

@@ -13,7 +13,7 @@ pub mod eval;
 mod flows;
 mod setup;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -31,11 +31,11 @@ pub use flows::{
 pub use setup::JobState;
 
 pub struct Orchestrator {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
 }
 
 impl Orchestrator {
-    pub fn new(rt: Rc<Runtime>) -> Orchestrator {
+    pub fn new(rt: Arc<Runtime>) -> Orchestrator {
         Orchestrator { rt }
     }
 

@@ -3,10 +3,11 @@
 //! strategy / consensus / blockchain instantiation, controller init.
 
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::aggregate::mean::AggPlan;
 use crate::chain::{self, Blockchain};
 use crate::config::job::JobConfig;
 use crate::consensus::{self, Consensus};
@@ -42,18 +43,20 @@ pub struct JobState {
     pub chain: Option<Box<dyn Blockchain>>,
     pub eval: EvalSet,
     pub distributor: Distributor,
-    /// Current global model (standard/hierarchical flows).
-    pub global: Vec<f32>,
+    /// Current global model (standard/hierarchical flows). A shared handle:
+    /// the broadcast publish, every client's starting point and the
+    /// evaluation pass all reference this one allocation.
+    pub global: Arc<[f32]>,
     /// FL+HC: cluster id per client (None until the clustering round).
     pub clusters: Option<BTreeMap<String, usize>>,
     /// FL+HC: per-cluster global models.
-    pub cluster_models: BTreeMap<usize, Vec<f32>>,
+    pub cluster_models: BTreeMap<usize, Arc<[f32]>>,
     pub root_rng: Rng,
     pub report: RunReport,
 }
 
 impl JobState {
-    pub fn scaffold(rt: Rc<Runtime>, job: &JobConfig, faults: FaultPlan) -> Result<JobState> {
+    pub fn scaffold(rt: Arc<Runtime>, job: &JobConfig, faults: FaultPlan) -> Result<JobState> {
         let root_rng = Rng::seed_from(job.seed);
 
         // Backend + capability check (ML-library agnosticism boundary).
@@ -143,7 +146,7 @@ impl JobState {
         };
 
         // Deterministic global init (node seed synchronization, RQ6).
-        let global = backend.init(job.seed as i32)?;
+        let global: Arc<[f32]> = backend.init(job.seed as i32)?.into();
 
         let report = RunReport {
             label: job.name.clone(),
@@ -191,6 +194,18 @@ impl JobState {
     /// Per-round derived stream (all round-scoped randomness hangs off it).
     pub fn round_rng(&self, round: u64) -> Rng {
         self.root_rng.derive("round", round)
+    }
+
+    /// Worker threads the round engine may use (`job.parallelism`, with 0 =
+    /// one per core). Purely a wall-clock knob — every result is bitwise
+    /// identical at any value.
+    pub fn parallelism(&self) -> usize {
+        self.job.effective_parallelism()
+    }
+
+    /// Aggregation plan: the job's hardware profile plus its parallelism.
+    pub fn agg_plan(&self) -> AggPlan {
+        AggPlan::new(self.job.hw_profile, self.parallelism())
     }
 
     /// Sampled client subset for a round (client_fraction < 1.0).

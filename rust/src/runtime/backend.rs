@@ -6,16 +6,16 @@
 //! class. Parameters cross the interface as flat `f32` vectors (or as
 //! opaque device literals inside a local-training loop).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
-use xla::Literal;
 
 use crate::runtime::pjrt::Runtime;
+use crate::runtime::tensor::Literal;
 
 #[derive(Clone)]
 pub struct ModelBackend {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     pub name: String,
     pub param_count: usize,
     pub input_shape: Vec<usize>,
@@ -24,7 +24,7 @@ pub struct ModelBackend {
 }
 
 impl ModelBackend {
-    pub fn new(rt: Rc<Runtime>, name: &str) -> Result<ModelBackend> {
+    pub fn new(rt: Arc<Runtime>, name: &str) -> Result<ModelBackend> {
         let desc = rt.manifest.backend(name)?;
         Ok(ModelBackend {
             name: desc.name.clone(),
@@ -79,8 +79,7 @@ impl ModelBackend {
         let loss = it
             .next()
             .ok_or_else(|| anyhow!("missing loss out"))?
-            .get_first_element::<f32>()
-            .map_err(|e| anyhow!("loss fetch: {e:?}"))?;
+            .first_f32()?;
         Ok((new_params, loss))
     }
 
@@ -155,12 +154,8 @@ impl ModelBackend {
         let outs = self
             .rt
             .execute_refs(&self.name, "eval", &[params, x, y, mask])?;
-        let loss = outs[0]
-            .get_first_element::<f32>()
-            .map_err(|e| anyhow!("eval loss: {e:?}"))?;
-        let correct = outs[1]
-            .get_first_element::<f32>()
-            .map_err(|e| anyhow!("eval correct: {e:?}"))?;
+        let loss = outs[0].first_f32()?;
+        let correct = outs[1].first_f32()?;
         Ok((loss, correct))
     }
 

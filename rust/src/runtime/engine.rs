@@ -1,0 +1,27 @@
+//! The execution-engine boundary of the runtime layer.
+//!
+//! [`crate::runtime::pjrt::Runtime`] dispatches every step call through this
+//! trait, which is deliberately `Send + Sync`: the parallel round engine
+//! shares one `Arc<Runtime>` across all client worker threads, so an engine
+//! must tolerate concurrent `run` calls and must be deterministic per call
+//! (same inputs ⇒ bitwise-same outputs, regardless of which thread runs it).
+//!
+//! Two engines exist conceptually:
+//! * [`crate::runtime::reference::ReferenceEngine`] — the pure-Rust
+//!   deterministic engine compiled into every build (no external deps).
+//! * a PJRT engine executing the AOT HLO artifacts — requires the `xla`
+//!   native toolchain, which this offline image does not carry; the trait is
+//!   the slot it plugs back into.
+
+use anyhow::Result;
+
+use crate::runtime::tensor::Literal;
+
+pub trait Engine: Send + Sync {
+    /// Engine identifier for logs / `flsim info`.
+    fn name(&self) -> &'static str;
+
+    /// Execute one step artifact for a backend. Inputs and outputs follow
+    /// the manifest signature for `backend`/`step`.
+    fn run(&self, backend: &str, step: &str, inputs: &[&Literal]) -> Result<Vec<Literal>>;
+}

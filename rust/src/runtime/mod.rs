@@ -1,10 +1,18 @@
-//! PJRT runtime: loads the AOT HLO artifacts produced by `python/compile/aot.py`
-//! and executes them on the hot path. Python is never involved at run time.
+//! The runtime layer: a `Send + Sync` execution engine behind a manifest of
+//! model backends. The default engine is the pure-Rust deterministic
+//! [`reference`] engine; the PJRT/AOT path (HLO artifacts produced by
+//! `python/compile/aot.py`) plugs into the same [`engine::Engine`] trait
+//! when its native toolchain is available.
 
 pub mod backend;
+pub mod engine;
 pub mod manifest;
 pub mod pjrt;
+pub mod reference;
+pub mod tensor;
 
 pub use backend::ModelBackend;
+pub use engine::Engine;
 pub use manifest::{ArtifactDesc, Manifest, TensorDesc};
 pub use pjrt::Runtime;
+pub use tensor::Literal;

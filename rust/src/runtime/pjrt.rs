@@ -1,23 +1,37 @@
-//! PJRT execution engine: compile-once / execute-many over the AOT HLO
-//! artifacts (adapted from /opt/xla-example/load_hlo).
+//! The execution runtime: one `Runtime` owns the manifest and the execution
+//! engine, and replays step calls for (potentially) hundreds of thousands of
+//! invocations.
 //!
-//! One `Runtime` owns the PJRT CPU client and an executable cache keyed by
-//! artifact name — every artifact is compiled exactly once per process and
-//! then replayed for (potentially) hundreds of thousands of step calls.
+//! `Runtime` is `Send + Sync` by construction — the engine is a shared
+//! `Box<dyn Engine + Send + Sync>` and the stats counter sits behind a
+//! `Mutex` — so the orchestrator hands one `Arc<Runtime>` to every client
+//! worker thread of the parallel round engine (previously this was
+//! `Rc<Runtime>` + `RefCell`, which pinned the whole simulation to one
+//! thread).
+//!
+//! Engine selection: the pure-Rust [`ReferenceEngine`] is compiled into
+//! every build and needs no artifacts. The original PJRT/AOT path (HLO
+//! artifacts + the `xla` crate, see `python/compile/aot.py`) plugs into the
+//! same [`Engine`] trait when that native toolchain is present; builds
+//! without it — like this image — always run the reference engine, and an
+//! artifact directory containing a manifest is ignored with a warning
+//! (the `Manifest::load` plumbing stays for the PJRT engine to consume).
 
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
+use crate::runtime::engine::Engine;
 use crate::runtime::manifest::{ArtifactDesc, Manifest};
+use crate::runtime::reference::{reference_manifest, ReferenceEngine};
+use crate::runtime::tensor::Literal;
 
 /// Counters for EXPERIMENTS.md §Perf and the metrics logger.
 #[derive(Clone, Debug, Default)]
 pub struct RuntimeStats {
+    /// Artifact compilations (always 0 on the reference engine).
     pub compiles: usize,
     pub executions: usize,
     pub compile_secs: f64,
@@ -25,65 +39,50 @@ pub struct RuntimeStats {
 }
 
 pub struct Runtime {
-    client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    stats: RefCell<RuntimeStats>,
+    engine: Box<dyn Engine>,
+    stats: Mutex<RuntimeStats>,
 }
 
 impl Runtime {
-    /// Open the artifact directory and create the PJRT CPU client.
+    /// Open a runtime over `artifact_dir`. The directory is optional for the
+    /// reference engine; when it does contain AOT artifacts, say loudly that
+    /// they are being ignored rather than pretending to use them.
     pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = artifact_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        if dir.join("manifest.json").exists() {
+            crate::warnlog!(
+                "runtime",
+                "{dir:?} holds AOT artifacts, but this build carries no PJRT \
+                 engine — running on the pure-Rust reference engine instead"
+            );
+        }
         Ok(Runtime {
-            client,
             dir,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
+            manifest: reference_manifest(),
+            engine: Box::new(ReferenceEngine::new()),
+            stats: Mutex::new(RuntimeStats::default()),
         })
     }
 
-    /// Shared (reference-counted) runtime — the orchestrator, nodes and
-    /// strategies all hold clones of this.
-    pub fn shared(artifact_dir: impl AsRef<Path>) -> Result<Rc<Runtime>> {
-        Ok(Rc::new(Self::new(artifact_dir)?))
+    /// Shared (thread-safe, reference-counted) runtime — the orchestrator,
+    /// nodes and strategies all hold clones of this, and the parallel round
+    /// engine shares it across worker threads.
+    pub fn shared(artifact_dir: impl AsRef<Path>) -> Result<Arc<Runtime>> {
+        Ok(Arc::new(Self::new(artifact_dir)?))
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.stats.lock().expect("stats lock poisoned").clone()
     }
 
-    /// Look up (or compile) the executable for `backend`/`step`.
-    pub fn executable(
-        &self,
-        backend: &str,
-        step: &str,
-    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        let key = format!("{backend}/{step}");
-        if let Some(exe) = self.cache.borrow().get(&key) {
-            return Ok(exe.clone());
-        }
-        let desc = self.artifact(backend, step)?;
-        let path = self.dir.join(&desc.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {key}: {e:?}"))?;
-        let exe = Rc::new(exe);
-        self.cache.borrow_mut().insert(key, exe.clone());
-        let mut st = self.stats.borrow_mut();
-        st.compiles += 1;
-        st.compile_secs += t0.elapsed().as_secs_f64();
-        Ok(exe)
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
     }
 
     pub fn artifact(&self, backend: &str, step: &str) -> Result<&ArtifactDesc> {
@@ -91,19 +90,18 @@ impl Runtime {
             .backend(backend)?
             .artifacts
             .get(step)
-            .ok_or_else(|| anyhow!("backend {backend} has no '{step}' artifact"))
+            .ok_or_else(|| {
+                anyhow::anyhow!("backend {backend} has no '{step}' artifact")
+            })
     }
 
-    /// Execute an artifact with literal inputs; returns the untupled outputs.
-    ///
-    /// The AOT path lowers with `return_tuple=True`, so the program has a
-    /// single tuple output which we decompose into `n_outputs` literals.
-    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+    /// Execute an artifact; returns the untupled outputs.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
         &self,
         backend: &str,
         step: &str,
         inputs: &[L],
-    ) -> Result<Vec<xla::Literal>> {
+    ) -> Result<Vec<Literal>> {
         let desc = self.artifact(backend, step)?;
         if inputs.len() != desc.inputs.len() {
             bail!(
@@ -113,20 +111,14 @@ impl Runtime {
             );
         }
         let n_outputs = desc.n_outputs;
-        let exe = self.executable(backend, step)?;
+        let refs: Vec<&Literal> = inputs.iter().map(|l| l.borrow()).collect();
         let t0 = Instant::now();
-        let result = exe
-            .execute::<L>(inputs)
-            .map_err(|e| anyhow!("executing {backend}/{step}: {e:?}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {backend}/{step} output: {e:?}"))?;
-        let outs = tuple
-            .to_tuple()
-            .map_err(|e| anyhow!("untupling {backend}/{step} output: {e:?}"))?;
-        let mut st = self.stats.borrow_mut();
-        st.executions += 1;
-        st.execute_secs += t0.elapsed().as_secs_f64();
+        let outs = self.engine.run(backend, step, &refs)?;
+        {
+            let mut st = self.stats.lock().expect("stats lock poisoned");
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
         if outs.len() != n_outputs {
             bail!(
                 "{backend}/{step}: manifest says {n_outputs} outputs, got {}",
@@ -142,46 +134,31 @@ impl Runtime {
         &self,
         backend: &str,
         step: &str,
-        inputs: &[&xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
+        inputs: &[&Literal],
+    ) -> Result<Vec<Literal>> {
         self.execute(backend, step, inputs)
     }
 
     // -- literal helpers -----------------------------------------------------
 
-    pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-        let n: usize = dims.iter().product();
-        if n != data.len() {
-            bail!("literal shape {dims:?} != data len {}", data.len());
-        }
-        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-        xla::Literal::vec1(data)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("reshape: {e:?}"))
+    pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+        Literal::vec_f32(data.to_vec()).reshape(dims)
     }
 
-    pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
-        let n: usize = dims.iter().product();
-        if n != data.len() {
-            bail!("literal shape {dims:?} != data len {}", data.len());
-        }
-        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-        xla::Literal::vec1(data)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("reshape: {e:?}"))
+    pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+        Literal::vec_i32(data.to_vec()).reshape(dims)
     }
 
-    pub fn scalar_f32(v: f32) -> xla::Literal {
-        xla::Literal::scalar(v)
+    pub fn scalar_f32(v: f32) -> Literal {
+        Literal::scalar_f32(v)
     }
 
-    pub fn scalar_i32(v: i32) -> xla::Literal {
-        xla::Literal::scalar(v)
+    pub fn scalar_i32(v: i32) -> Literal {
+        Literal::scalar_i32(v)
     }
 
-    pub fn to_f32s(lit: &xla::Literal) -> Result<Vec<f32>> {
-        lit.to_vec::<f32>()
-            .map_err(|e| anyhow!("literal to_vec<f32>: {e:?}"))
+    pub fn to_f32s(lit: &Literal) -> Result<Vec<f32>> {
+        lit.to_f32_vec()
     }
 }
 
@@ -189,7 +166,65 @@ impl std::fmt::Debug for Runtime {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Runtime")
             .field("dir", &self.dir)
-            .field("cached", &self.cache.borrow().len())
+            .field("engine", &self.engine.name())
+            .field("backends", &self.manifest.backends.len())
             .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Runtime>();
+        assert_send_sync::<Arc<Runtime>>();
+    }
+
+    #[test]
+    fn execute_checks_input_count_and_meters() {
+        let rt = Runtime::new("artifacts").unwrap();
+        assert!(rt
+            .execute("logreg", "sgd", &[Runtime::scalar_i32(0)])
+            .is_err());
+        let out = rt
+            .execute("logreg", "init", &[Runtime::scalar_i32(3)])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(
+            out[0].f32s().unwrap().len(),
+            rt.manifest.backend("logreg").unwrap().param_count
+        );
+        let st = rt.stats();
+        assert_eq!(st.executions, 1);
+        assert_eq!(st.compiles, 0);
+    }
+
+    #[test]
+    fn shared_runtime_executes_from_many_threads() {
+        let rt = Runtime::shared("artifacts").unwrap();
+        let base = rt
+            .execute("logreg", "init", &[Runtime::scalar_i32(7)])
+            .unwrap()[0]
+            .f32s()
+            .unwrap()
+            .to_vec();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let rt = rt.clone();
+                std::thread::spawn(move || {
+                    rt.execute("logreg", "init", &[Runtime::scalar_i32(7)]).unwrap()[0]
+                        .f32s()
+                        .unwrap()
+                        .to_vec()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), base, "cross-thread init not bitwise");
+        }
+        assert_eq!(rt.stats().executions, 5);
     }
 }

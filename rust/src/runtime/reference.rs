@@ -1,0 +1,759 @@
+//! The pure-Rust reference execution engine.
+//!
+//! The original L2/L1 pipeline AOT-compiles JAX/Pallas models to HLO and
+//! replays them through PJRT. That native toolchain (the `xla` crate) is not
+//! available in this offline image, so the runtime ships this reference
+//! engine instead: every backend in the manifest is implemented as a dense
+//! MLP family (logreg = no hidden layer) over flattened inputs, with the
+//! exact step contract of the AOT artifacts — `init` / `sgd` / `eval` plus
+//! the strategy steps `prox`, `scaffold` and `moon`.
+//!
+//! Backend names and roles mirror the AOT manifest (`cnn`, `cnn_v2`, `mlp`,
+//! `logreg`); widths are sized for the single-core CI box, and the `cnn*`
+//! backends are dense stand-ins for the conv models (the coordinator is
+//! library-agnostic and only sees flat parameter vectors either way).
+//!
+//! Determinism contract (RQ6, and the parallel round engine's foundation):
+//! every operation is a fixed-order sequential f32 loop, so a step call is
+//! bitwise-reproducible on any thread at any worker count.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::engine::Engine;
+use crate::runtime::manifest::{ArtifactDesc, BackendDesc, Manifest, TensorDesc};
+use crate::runtime::tensor::Literal;
+use crate::util::rng::Rng;
+
+pub const TRAIN_BATCH: usize = 64;
+pub const EVAL_BATCH: usize = 256;
+const NUM_CLASSES: usize = 10;
+
+/// Inputs are scaled by this factor inside the model; it normalizes the
+/// effective per-step logit movement for the synthetic feature variance so
+/// the paper's learning rates (0.01–0.05) sit in the stable regime.
+const INPUT_SCALE: f32 = 0.5;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Tanh,
+}
+
+/// One reference backend: a dense stack `sizes[0] -> ... -> sizes.last()`.
+#[derive(Clone, Debug)]
+pub struct RefModel {
+    pub name: &'static str,
+    /// Manifest input shape (product = sizes[0]).
+    pub input_shape: &'static [usize],
+    /// Layer widths, input first, classes last.
+    pub sizes: &'static [usize],
+    pub act: Act,
+    /// Strategy artifacts beyond the required init/sgd/eval set.
+    pub extra_steps: &'static [&'static str],
+}
+
+/// The backend table — the reference analogue of `make artifacts`.
+pub const MODELS: &[RefModel] = &[
+    RefModel {
+        name: "cnn",
+        input_shape: &[32, 32, 3],
+        sizes: &[3072, 24, 10],
+        act: Act::Relu,
+        extra_steps: &["prox", "scaffold", "moon"],
+    },
+    RefModel {
+        name: "cnn_v2",
+        input_shape: &[32, 32, 3],
+        sizes: &[3072, 20, 10],
+        act: Act::Tanh,
+        extra_steps: &["prox"],
+    },
+    RefModel {
+        name: "mlp",
+        input_shape: &[3072],
+        sizes: &[3072, 32, 10],
+        act: Act::Relu,
+        extra_steps: &["prox", "scaffold"],
+    },
+    RefModel {
+        name: "logreg",
+        input_shape: &[784],
+        sizes: &[784, 10],
+        act: Act::Relu,
+        extra_steps: &[],
+    },
+];
+
+impl RefModel {
+    pub fn param_count(&self) -> usize {
+        self.layer_dims().map(|(fin, fout)| fin * fout + fout).sum()
+    }
+
+    fn n_layers(&self) -> usize {
+        self.sizes.len() - 1
+    }
+
+    fn layer_dims(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.sizes.windows(2).map(|w| (w[0], w[1]))
+    }
+
+    /// (offset, fan_in, fan_out) per layer into the flat parameter vector.
+    fn layer_offsets(&self) -> Vec<(usize, usize, usize)> {
+        let mut out = Vec::with_capacity(self.n_layers());
+        let mut off = 0usize;
+        for (fin, fout) in self.layer_dims() {
+            out.push((off, fin, fout));
+            off += fin * fout + fout;
+        }
+        out
+    }
+
+    /// Deterministic Glorot-uniform init (biases zero).
+    pub fn init(&self, seed: i32) -> Vec<f32> {
+        let mut rng = Rng::seed_from(0x5EED_0000_0000_0000 ^ (seed as i64 as u64));
+        let mut out = Vec::with_capacity(self.param_count());
+        for (fin, fout) in self.layer_dims() {
+            let lim = (6.0 / (fin + fout) as f64).sqrt();
+            for _ in 0..fin * fout {
+                out.push(((rng.next_f64() * 2.0 - 1.0) * lim) as f32);
+            }
+            for _ in 0..fout {
+                out.push(0.0);
+            }
+        }
+        out
+    }
+
+    /// Forward pass; returns post-activation values per layer (the last
+    /// entry is the raw logits).
+    fn forward(&self, w: &[f32], x: &[f32], bs: usize) -> Vec<Vec<f32>> {
+        let offsets = self.layer_offsets();
+        let n_layers = self.n_layers();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+        for (l, &(off, fin, fout)) in offsets.iter().enumerate() {
+            let z = {
+                let a_prev: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+                let scale = if l == 0 { INPUT_SCALE } else { 1.0 };
+                let wmat = &w[off..off + fin * fout];
+                let bias = &w[off + fin * fout..off + fin * fout + fout];
+                let mut z = vec![0f32; bs * fout];
+                for i in 0..bs {
+                    let xi = &a_prev[i * fin..(i + 1) * fin];
+                    let zi = &mut z[i * fout..(i + 1) * fout];
+                    zi.copy_from_slice(bias);
+                    for (k, &xk) in xi.iter().enumerate() {
+                        let xv = xk * scale;
+                        if xv != 0.0 {
+                            let wrow = &wmat[k * fout..(k + 1) * fout];
+                            for j in 0..fout {
+                                zi[j] += xv * wrow[j];
+                            }
+                        }
+                    }
+                }
+                if l + 1 < n_layers {
+                    match self.act {
+                        Act::Relu => {
+                            for v in z.iter_mut() {
+                                if *v < 0.0 {
+                                    *v = 0.0;
+                                }
+                            }
+                        }
+                        Act::Tanh => {
+                            for v in z.iter_mut() {
+                                *v = v.tanh();
+                            }
+                        }
+                    }
+                }
+                z
+            };
+            acts.push(z);
+        }
+        acts
+    }
+
+    /// Mean softmax cross-entropy and its parameter gradient over a batch.
+    fn grad(&self, w: &[f32], x: &[f32], y: &[i32], bs: usize) -> (Vec<f32>, f32) {
+        let offsets = self.layer_offsets();
+        let n_layers = self.n_layers();
+        let acts = self.forward(w, x, bs);
+        let logits = &acts[n_layers - 1];
+        let ncls = *self.sizes.last().unwrap();
+
+        // Softmax + CE + dL/dlogits.
+        let mut dz_cur = vec![0f32; bs * ncls];
+        let mut exps = vec![0f32; ncls];
+        let mut loss_sum = 0f64;
+        for i in 0..bs {
+            let zi = &logits[i * ncls..(i + 1) * ncls];
+            let m = zi.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0f32;
+            for j in 0..ncls {
+                let e = (zi[j] - m).exp();
+                exps[j] = e;
+                sum += e;
+            }
+            let yi = (y[i].max(0) as usize).min(ncls - 1);
+            let p_yi = (exps[yi] / sum).max(1e-12);
+            loss_sum += -(p_yi as f64).ln();
+            let dzi = &mut dz_cur[i * ncls..(i + 1) * ncls];
+            for j in 0..ncls {
+                let onehot = if j == yi { 1.0 } else { 0.0 };
+                dzi[j] = (exps[j] / sum - onehot) / bs as f32;
+            }
+        }
+
+        // Backprop through the dense stack.
+        let mut grad = vec![0f32; w.len()];
+        for l in (0..n_layers).rev() {
+            let (off, fin, fout) = offsets[l];
+            let scale = if l == 0 { INPUT_SCALE } else { 1.0 };
+            let a_prev: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+            {
+                let (gw, gb) =
+                    grad[off..off + fin * fout + fout].split_at_mut(fin * fout);
+                for i in 0..bs {
+                    let ai = &a_prev[i * fin..(i + 1) * fin];
+                    let dzi = &dz_cur[i * fout..(i + 1) * fout];
+                    for (k, &ak) in ai.iter().enumerate() {
+                        let av = ak * scale;
+                        if av != 0.0 {
+                            let gw_row = &mut gw[k * fout..(k + 1) * fout];
+                            for j in 0..fout {
+                                gw_row[j] += av * dzi[j];
+                            }
+                        }
+                    }
+                    for j in 0..fout {
+                        gb[j] += dzi[j];
+                    }
+                }
+            }
+            if l > 0 {
+                let wmat = &w[off..off + fin * fout];
+                let upstream = &acts[l - 1];
+                let mut dz_prev = vec![0f32; bs * fin];
+                for i in 0..bs {
+                    let dzi = &dz_cur[i * fout..(i + 1) * fout];
+                    let dpi = &mut dz_prev[i * fin..(i + 1) * fin];
+                    let ai = &upstream[i * fin..(i + 1) * fin];
+                    for k in 0..fin {
+                        let wrow = &wmat[k * fout..(k + 1) * fout];
+                        let mut s = 0f32;
+                        for j in 0..fout {
+                            s += dzi[j] * wrow[j];
+                        }
+                        // Activation derivative at the post-activation value.
+                        s = match self.act {
+                            Act::Relu => {
+                                if ai[k] > 0.0 {
+                                    s
+                                } else {
+                                    0.0
+                                }
+                            }
+                            Act::Tanh => s * (1.0 - ai[k] * ai[k]),
+                        };
+                        dpi[k] = s;
+                    }
+                }
+                dz_cur = dz_prev;
+            }
+        }
+        (grad, (loss_sum / bs as f64) as f32)
+    }
+
+    /// Masked evaluation: (summed CE loss, correct count) over `mask`.
+    fn eval(&self, w: &[f32], x: &[f32], y: &[i32], mask: &[f32], bs: usize) -> (f32, f32) {
+        let acts = self.forward(w, x, bs);
+        let logits = &acts[self.n_layers() - 1];
+        let ncls = *self.sizes.last().unwrap();
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        for i in 0..bs {
+            if mask[i] == 0.0 {
+                continue;
+            }
+            let zi = &logits[i * ncls..(i + 1) * ncls];
+            let m = zi.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0f32;
+            let mut best = 0usize;
+            for j in 0..ncls {
+                sum += (zi[j] - m).exp();
+                if zi[j] > zi[best] {
+                    best = j;
+                }
+            }
+            let yi = (y[i].max(0) as usize).min(ncls - 1);
+            let p_yi = (((zi[yi] - m).exp()) / sum).max(1e-12);
+            loss_sum += -(p_yi as f64).ln() * mask[i] as f64;
+            if best == yi {
+                correct += mask[i] as f64;
+            }
+        }
+        (loss_sum as f32, correct as f32)
+    }
+}
+
+/// Build the built-in manifest describing [`MODELS`] with full artifact
+/// signatures — the contract `Runtime`/`ModelBackend` consume.
+pub fn reference_manifest() -> Manifest {
+    let vecdesc = |shape: Vec<usize>, dtype: &str| TensorDesc {
+        shape,
+        dtype: dtype.to_string(),
+    };
+    let mut backends = BTreeMap::new();
+    for m in MODELS {
+        let p = m.param_count();
+        let f: usize = m.input_shape.iter().product();
+        let params = || vecdesc(vec![p], "f32");
+        let scalar_f = || vecdesc(vec![], "f32");
+        let train_x = || vecdesc(vec![TRAIN_BATCH, f], "f32");
+        let train_y = || vecdesc(vec![TRAIN_BATCH], "s32");
+
+        let mut artifacts = BTreeMap::new();
+        artifacts.insert(
+            "init".to_string(),
+            ArtifactDesc {
+                file: "<builtin>".into(),
+                inputs: vec![vecdesc(vec![], "s32")],
+                n_outputs: 1,
+            },
+        );
+        artifacts.insert(
+            "sgd".to_string(),
+            ArtifactDesc {
+                file: "<builtin>".into(),
+                inputs: vec![params(), train_x(), train_y(), scalar_f()],
+                n_outputs: 2,
+            },
+        );
+        artifacts.insert(
+            "eval".to_string(),
+            ArtifactDesc {
+                file: "<builtin>".into(),
+                inputs: vec![
+                    params(),
+                    vecdesc(vec![EVAL_BATCH, f], "f32"),
+                    vecdesc(vec![EVAL_BATCH], "s32"),
+                    vecdesc(vec![EVAL_BATCH], "f32"),
+                ],
+                n_outputs: 2,
+            },
+        );
+        for &step in m.extra_steps {
+            let inputs = match step {
+                "prox" => vec![
+                    params(),
+                    params(),
+                    train_x(),
+                    train_y(),
+                    scalar_f(),
+                    scalar_f(),
+                ],
+                "scaffold" => vec![
+                    params(),
+                    params(),
+                    params(),
+                    train_x(),
+                    train_y(),
+                    scalar_f(),
+                ],
+                "moon" => vec![
+                    params(),
+                    params(),
+                    params(),
+                    train_x(),
+                    train_y(),
+                    scalar_f(),
+                    scalar_f(),
+                    scalar_f(),
+                ],
+                other => unreachable!("unknown extra step '{other}'"),
+            };
+            artifacts.insert(
+                step.to_string(),
+                ArtifactDesc {
+                    file: "<builtin>".into(),
+                    inputs,
+                    n_outputs: 2,
+                },
+            );
+        }
+        backends.insert(
+            m.name.to_string(),
+            BackendDesc {
+                name: m.name.to_string(),
+                param_count: p,
+                input_shape: m.input_shape.to_vec(),
+                use_pallas: false,
+                artifacts,
+            },
+        );
+    }
+    Manifest {
+        train_batch: TRAIN_BATCH,
+        eval_batch: EVAL_BATCH,
+        jax_version: "reference (pure-rust)".to_string(),
+        backends,
+    }
+}
+
+/// The engine: stateless (models are immutable), hence trivially `Sync`.
+pub struct ReferenceEngine {
+    models: BTreeMap<&'static str, &'static RefModel>,
+}
+
+impl ReferenceEngine {
+    pub fn new() -> ReferenceEngine {
+        ReferenceEngine {
+            models: MODELS.iter().map(|m| (m.name, m)).collect(),
+        }
+    }
+
+    fn model(&self, backend: &str) -> Result<&RefModel> {
+        self.models
+            .get(backend)
+            .copied()
+            .ok_or_else(|| anyhow!("reference engine: unknown backend '{backend}'"))
+    }
+}
+
+impl Default for ReferenceEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Shared shape of every train-style step: unpack params/x/y, compute the
+/// base CE gradient, let the variant adjust (gradient, loss), apply SGD.
+struct TrainIn<'a> {
+    w: &'a [f32],
+    x: &'a [f32],
+    y: &'a [i32],
+    bs: usize,
+    lr: f32,
+}
+
+impl ReferenceEngine {
+    /// Validate an auxiliary parameter-shaped input (global model, previous
+    /// model, control variates): must be f32 and exactly `param_count` long
+    /// — a silent zip-truncation would apply corrections to a prefix only.
+    fn unpack_aux<'a>(
+        model: &RefModel,
+        what: &str,
+        lit: &'a Literal,
+    ) -> Result<&'a [f32]> {
+        let v = lit.f32s()?;
+        if v.len() != model.param_count() {
+            bail!(
+                "{}: {what} len {} != param_count {}",
+                model.name,
+                v.len(),
+                model.param_count()
+            );
+        }
+        Ok(v)
+    }
+
+    fn unpack_train<'a>(
+        model: &RefModel,
+        params: &'a Literal,
+        x: &'a Literal,
+        y: &'a Literal,
+        lr: &Literal,
+    ) -> Result<TrainIn<'a>> {
+        let w = params.f32s()?;
+        if w.len() != model.param_count() {
+            bail!(
+                "{}: params len {} != {}",
+                model.name,
+                w.len(),
+                model.param_count()
+            );
+        }
+        let xs = x.f32s()?;
+        let ys = y.i32s()?;
+        let fin: usize = model.sizes[0];
+        if xs.len() % fin != 0 {
+            bail!("{}: batch len {} not divisible by {fin}", model.name, xs.len());
+        }
+        let bs = xs.len() / fin;
+        if ys.len() != bs {
+            bail!("{}: {} labels for batch of {bs}", model.name, ys.len());
+        }
+        Ok(TrainIn {
+            w,
+            x: xs,
+            y: ys,
+            bs,
+            lr: lr.first_f32()?,
+        })
+    }
+
+    fn finish_step(t: &TrainIn, grad: &[f32], loss: f32) -> Vec<Literal> {
+        let new_w: Vec<f32> = t
+            .w
+            .iter()
+            .zip(grad)
+            .map(|(&w, &g)| w - t.lr * g)
+            .collect();
+        vec![Literal::vec_f32(new_w), Literal::scalar_f32(loss)]
+    }
+}
+
+impl Engine for ReferenceEngine {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn run(&self, backend: &str, step: &str, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let model = self.model(backend)?;
+        let declared = matches!(step, "init" | "sgd" | "eval")
+            || model.extra_steps.contains(&step);
+        if !declared {
+            bail!("reference engine: backend {backend} has no '{step}' artifact");
+        }
+        let need = match step {
+            "init" => 1,
+            "sgd" | "eval" => 4,
+            "prox" | "scaffold" => 6,
+            "moon" => 8,
+            _ => unreachable!(),
+        };
+        if inputs.len() != need {
+            bail!("{backend}/{step}: expected {need} inputs, got {}", inputs.len());
+        }
+        match step {
+            "init" => {
+                // Propagate dtype mismatches — a silent seed-0 fallback would
+                // mask caller bugs behind "deterministic" identical inits.
+                let seed = inputs[0].i32s()?.first().copied().unwrap_or(0);
+                Ok(vec![Literal::vec_f32(model.init(seed))])
+            }
+            "sgd" => {
+                let t = Self::unpack_train(model, inputs[0], inputs[1], inputs[2], inputs[3])?;
+                let (grad, loss) = model.grad(t.w, t.x, t.y, t.bs);
+                Ok(Self::finish_step(&t, &grad, loss))
+            }
+            "prox" => {
+                // [params, global, x, y, lr, mu]
+                let t = Self::unpack_train(model, inputs[0], inputs[2], inputs[3], inputs[4])?;
+                let global = Self::unpack_aux(model, "global", inputs[1])?;
+                let mu = inputs[5].first_f32()?;
+                let (mut grad, loss) = model.grad(t.w, t.x, t.y, t.bs);
+                for (g, (&w, &wg)) in grad.iter_mut().zip(t.w.iter().zip(global)) {
+                    *g += mu * (w - wg);
+                }
+                Ok(Self::finish_step(&t, &grad, loss))
+            }
+            "scaffold" => {
+                // [params, c_global, c_local, x, y, lr]
+                let t = Self::unpack_train(model, inputs[0], inputs[3], inputs[4], inputs[5])?;
+                let c_global = Self::unpack_aux(model, "c_global", inputs[1])?;
+                let c_local = Self::unpack_aux(model, "c_local", inputs[2])?;
+                let (mut grad, loss) = model.grad(t.w, t.x, t.y, t.bs);
+                for (g, (&cg, &cl)) in grad.iter_mut().zip(c_global.iter().zip(c_local)) {
+                    *g += cg - cl;
+                }
+                Ok(Self::finish_step(&t, &grad, loss))
+            }
+            "moon" => {
+                // [params, global, prev, x, y, lr, mu, tau]
+                // Parameter-space contrastive surrogate: pull toward the
+                // global model, push (half as hard) away from the previous
+                // local one — the drift-control effect of MOON's
+                // representation-level loss, expressible without a second
+                // and third forward graph.
+                let t = Self::unpack_train(model, inputs[0], inputs[3], inputs[4], inputs[5])?;
+                let global = Self::unpack_aux(model, "global", inputs[1])?;
+                let prev = Self::unpack_aux(model, "prev", inputs[2])?;
+                let mu = inputs[6].first_f32()?;
+                let tau = inputs[7].first_f32()?.max(1e-6);
+                let pull = 0.1 * mu / tau;
+                let (mut grad, loss) = model.grad(t.w, t.x, t.y, t.bs);
+                let mut sq_g = 0f64;
+                let mut sq_p = 0f64;
+                for i in 0..t.w.len() {
+                    let dg = t.w[i] - global[i];
+                    let dp = t.w[i] - prev[i];
+                    sq_g += (dg * dg) as f64;
+                    sq_p += (dp * dp) as f64;
+                    grad[i] += pull * (dg - 0.5 * dp);
+                }
+                let con = pull as f64 * (0.5 * sq_g - 0.25 * sq_p) / t.w.len().max(1) as f64;
+                Ok(Self::finish_step(&t, &grad, loss + con as f32))
+            }
+            "eval" => {
+                // [params, x, y, mask]
+                let w = inputs[0].f32s()?;
+                let xs = inputs[1].f32s()?;
+                let ys = inputs[2].i32s()?;
+                let mask = inputs[3].f32s()?;
+                let fin = model.sizes[0];
+                let bs = xs.len() / fin;
+                if ys.len() != bs || mask.len() != bs {
+                    bail!("{backend}/eval: inconsistent batch sizes");
+                }
+                let (loss_sum, correct) = model.eval(w, xs, ys, mask, bs);
+                Ok(vec![
+                    Literal::scalar_f32(loss_sum),
+                    Literal::scalar_f32(correct),
+                ])
+            }
+            other => bail!("reference engine: backend {backend} has no step '{other}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cnn() -> &'static RefModel {
+        MODELS.iter().find(|m| m.name == "cnn").unwrap()
+    }
+
+    fn logreg() -> &'static RefModel {
+        MODELS.iter().find(|m| m.name == "logreg").unwrap()
+    }
+
+    #[test]
+    fn param_counts_match_layout() {
+        assert_eq!(logreg().param_count(), 784 * 10 + 10);
+        assert_eq!(cnn().param_count(), 3072 * 24 + 24 + 24 * 10 + 10);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let m = logreg();
+        assert_eq!(m.init(7), m.init(7));
+        assert_ne!(m.init(7), m.init(8));
+        assert_eq!(m.init(7).len(), m.param_count());
+    }
+
+    #[test]
+    fn manifest_declares_required_artifacts() {
+        let mf = reference_manifest();
+        for name in ["cnn", "cnn_v2", "mlp", "logreg"] {
+            let b = mf.backend(name).unwrap();
+            for s in ["init", "sgd", "eval"] {
+                assert!(b.artifacts.contains_key(s), "{name} missing {s}");
+            }
+        }
+        assert!(mf.backend("cnn").unwrap().artifacts.contains_key("moon"));
+        assert!(!mf.backend("mlp").unwrap().artifacts.contains_key("moon"));
+    }
+
+    /// Central-difference check of the analytic gradient on a tiny batch.
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let m = logreg();
+        let mut rng = Rng::seed_from(3);
+        let w = m.init(1);
+        let bs = 3usize;
+        let x: Vec<f32> = (0..bs * 784).map(|_| rng.normal_f32()).collect();
+        let y: Vec<i32> = (0..bs).map(|_| rng.below(10) as i32).collect();
+        let (grad, _) = m.grad(&w, &x, &y, bs);
+        let loss_at = |w: &[f32]| {
+            let acts = m.forward(w, &x, bs);
+            let logits = acts.last().unwrap();
+            let mut s = 0f64;
+            for i in 0..bs {
+                let zi = &logits[i * 10..(i + 1) * 10];
+                let mx = zi.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let sum: f32 = zi.iter().map(|&z| (z - mx).exp()).sum();
+                let p = ((zi[y[i] as usize] - mx).exp() / sum).max(1e-12);
+                s += -(p as f64).ln();
+            }
+            s / bs as f64
+        };
+        // Check a spread of coordinates (weights + biases).
+        for &idx in &[0usize, 57, 784 * 10 - 1, 784 * 10 + 3] {
+            let eps = 1e-2f32;
+            let mut wp = w.clone();
+            wp[idx] += eps;
+            let mut wm = w.clone();
+            wm[idx] -= eps;
+            let num = (loss_at(&wp) - loss_at(&wm)) / (2.0 * eps as f64);
+            let ana = grad[idx] as f64;
+            assert!(
+                (num - ana).abs() < 1e-3 + 0.05 * ana.abs(),
+                "coord {idx}: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_reduces_loss_on_a_fixed_batch() {
+        let m = cnn();
+        let mut rng = Rng::seed_from(5);
+        let mut w = m.init(0);
+        let bs = 16usize;
+        // Learnable signal: class = sign pattern on the first features.
+        let mut x = vec![0f32; bs * 3072];
+        let mut y = vec![0i32; bs];
+        for i in 0..bs {
+            let c = (i % 10) as i32;
+            y[i] = c;
+            for k in 0..3072 {
+                x[i * 3072 + k] =
+                    if k % 10 == c as usize { 2.0 } else { 0.0 } + 0.3 * rng.normal_f32();
+            }
+        }
+        let (_, first_loss) = m.grad(&w, &x, &y, bs);
+        for _ in 0..30 {
+            let (g, _) = m.grad(&w, &x, &y, bs);
+            for (wv, gv) in w.iter_mut().zip(&g) {
+                *wv -= 0.05 * gv;
+            }
+        }
+        let (_, final_loss) = m.grad(&w, &x, &y, bs);
+        assert!(
+            final_loss < first_loss * 0.7,
+            "loss did not drop: {first_loss} -> {final_loss}"
+        );
+    }
+
+    #[test]
+    fn engine_steps_are_deterministic() {
+        let eng = ReferenceEngine::new();
+        let m = logreg();
+        let mut rng = Rng::seed_from(9);
+        let w = Literal::vec_f32(m.init(2));
+        let x = Literal::vec_f32((0..4 * 784).map(|_| rng.normal_f32()).collect());
+        let y = Literal::vec_i32((0..4).map(|_| rng.below(10) as i32).collect());
+        let lr = Literal::scalar_f32(0.05);
+        let a = eng.run("logreg", "sgd", &[&w, &x, &y, &lr]).unwrap();
+        let b = eng.run("logreg", "sgd", &[&w, &x, &y, &lr]).unwrap();
+        assert_eq!(a[0].f32s().unwrap(), b[0].f32s().unwrap());
+        assert_eq!(a[1].first_f32().unwrap(), b[1].first_f32().unwrap());
+        // And across threads (the parallel engine's determinism premise).
+        let eng = std::sync::Arc::new(eng);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let eng = eng.clone();
+                let (w, x, y, lr) = (w.clone(), x.clone(), y.clone(), lr.clone());
+                std::thread::spawn(move || {
+                    let out = eng.run("logreg", "sgd", &[&w, &x, &y, &lr]).unwrap();
+                    out[0].f32s().unwrap().to_vec()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), a[0].f32s().unwrap());
+        }
+    }
+
+    #[test]
+    fn unknown_backend_and_step_error() {
+        let eng = ReferenceEngine::new();
+        assert!(eng.run("resnet", "sgd", &[]).is_err());
+        let w = Literal::vec_f32(logreg().init(0));
+        assert!(eng.run("logreg", "moon", &[&w]).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Host tensor type crossing the runtime boundary.
+//!
+//! `Literal` replaces the `xla::Literal` device handle of the original PJRT
+//! backend with a pure-Rust, `Send + Sync` value: a shape plus an `Arc`-held
+//! buffer. Cloning a literal is a refcount bump, so chained step outputs and
+//! cached batch uploads stay zero-copy across the whole local-training loop
+//! — including when client loops run on worker threads (the parallel round
+//! engine relies on literals being freely shareable).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+/// The underlying buffer (f32 or i32, matching the manifest dtypes).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Buf {
+    F32(Arc<Vec<f32>>),
+    I32(Arc<Vec<i32>>),
+}
+
+/// A shaped host tensor. Scalars have an empty `dims`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<usize>,
+    buf: Buf,
+}
+
+impl Literal {
+    pub fn vec_f32(data: Vec<f32>) -> Literal {
+        Literal {
+            dims: vec![data.len()],
+            buf: Buf::F32(Arc::new(data)),
+        }
+    }
+
+    pub fn vec_i32(data: Vec<i32>) -> Literal {
+        Literal {
+            dims: vec![data.len()],
+            buf: Buf::I32(Arc::new(data)),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Literal {
+        Literal {
+            dims: Vec::new(),
+            buf: Buf::F32(Arc::new(vec![v])),
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> Literal {
+        Literal {
+            dims: Vec::new(),
+            buf: Buf::I32(Arc::new(vec![v])),
+        }
+    }
+
+    /// Reinterpret under a new shape (element count must match).
+    pub fn reshape(mut self, dims: &[usize]) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if n != self.element_count() {
+            bail!(
+                "reshape to {dims:?} ({n} elems) from {} elems",
+                self.element_count()
+            );
+        }
+        self.dims = dims.to_vec();
+        Ok(self)
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.buf {
+            Buf::F32(v) => v.len(),
+            Buf::I32(v) => v.len(),
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match &self.buf {
+            Buf::F32(_) => "f32",
+            Buf::I32(_) => "s32",
+        }
+    }
+
+    /// Borrow as f32 slice (errors on dtype mismatch).
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.buf {
+            Buf::F32(v) => Ok(v),
+            Buf::I32(_) => Err(anyhow!("literal is s32, expected f32")),
+        }
+    }
+
+    /// Borrow as i32 slice (errors on dtype mismatch).
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.buf {
+            Buf::I32(v) => Ok(v),
+            Buf::F32(_) => Err(anyhow!("literal is f32, expected s32")),
+        }
+    }
+
+    /// Copy out as an owned f32 vector.
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        Ok(self.f32s()?.to_vec())
+    }
+
+    /// First element as f32 (scalar reads on loss/metric outputs).
+    pub fn first_f32(&self) -> Result<f32> {
+        self.f32s()?
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow!("empty literal"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_reads() {
+        let l = Literal::vec_f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+            .reshape(&[2, 3])
+            .unwrap();
+        assert_eq!(l.dims(), &[2, 3]);
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(l.f32s().unwrap()[4], 5.0);
+        assert_eq!(l.first_f32().unwrap(), 1.0);
+        assert!(l.i32s().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        assert!(Literal::vec_f32(vec![0.0; 5]).reshape(&[2, 3]).is_err());
+        assert!(Literal::vec_i32(vec![0; 6]).reshape(&[3, 2]).is_ok());
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(Literal::scalar_f32(7.5).first_f32().unwrap(), 7.5);
+        assert_eq!(Literal::scalar_i32(3).i32s().unwrap(), &[3]);
+        assert!(Literal::scalar_f32(0.0).dims().is_empty());
+    }
+
+    #[test]
+    fn clone_is_shallow() {
+        let l = Literal::vec_f32(vec![0.0; 1024]);
+        let c = l.clone();
+        match (&l.buf, &c.buf) {
+            (Buf::F32(a), Buf::F32(b)) => assert!(Arc::ptr_eq(a, b)),
+            _ => unreachable!(),
+        }
+    }
+}

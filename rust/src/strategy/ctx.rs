@@ -1,9 +1,11 @@
 //! Client-side training context and helpers shared by all strategies.
 
+use std::sync::Arc;
+
 use anyhow::Result;
-use xla::Literal;
 
 use crate::runtime::backend::ModelBackend;
+use crate::runtime::tensor::Literal;
 use crate::util::rng::Rng;
 
 /// Persistent per-client strategy state (lives in the client node across
@@ -17,6 +19,11 @@ pub struct ClientState {
 }
 
 /// Everything a strategy needs to run one client's local epochs.
+///
+/// Contexts are built per client and handed to worker threads by the
+/// parallel round engine; every field is either shared-immutable or owned by
+/// exactly one client, so concurrent client training is data-race-free by
+/// construction.
 pub struct ClientCtx<'a> {
     pub client: &'a str,
     pub backend: &'a ModelBackend,
@@ -38,14 +45,18 @@ pub struct ClientCtx<'a> {
 
 /// What a client uploads after local training (paper consensus phase 1,
 /// "Local Parameter Sharing").
+///
+/// Parameters are `Arc<[f32]>`: the same allocation flows through the KV
+/// store, every worker's aggregation pull and the strategy's post-round hook
+/// with refcount bumps only.
 #[derive(Clone, Debug)]
 pub struct ClientUpdate {
     pub client: String,
-    pub params: Vec<f32>,
+    pub params: Arc<[f32]>,
     /// Aggregation weight (= local example count).
     pub weight: f64,
     /// Strategy-specific extra upload (SCAFFOLD's delta control variate).
-    pub extra: Option<Vec<f32>>,
+    pub extra: Option<Arc<[f32]>>,
     /// Mean training loss over the local epochs.
     pub mean_loss: f32,
 }
@@ -62,9 +73,9 @@ impl<'a> ClientCtx<'a> {
     /// Run `local_epochs` over the client's batches, applying `step` to
     /// each batch. `step(params_lit, x, y) -> (new_params_lit, loss)`.
     ///
-    /// Parameters stay device-resident (as `Literal`s) across the whole
-    /// local loop — the only host round-trips are the initial upload and
-    /// the final download (hot-path optimization, EXPERIMENTS.md §Perf).
+    /// Parameters stay literal-resident across the whole local loop — the
+    /// only materializations are the initial upload and the final download
+    /// (hot-path optimization, EXPERIMENTS.md §Perf).
     pub fn run_epochs<F>(&mut self, start: &[f32], mut step: F) -> Result<(Vec<f32>, f32)>
     where
         F: FnMut(&ModelBackend, &Literal, &Literal, &Literal) -> Result<(Literal, f32)>,

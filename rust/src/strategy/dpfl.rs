@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::aggregate::mean::{clip_update, weighted_mean, ReductionOrder};
+use crate::aggregate::mean::{clip_update, weighted_mean_plan, AggPlan};
 use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
 use crate::util::rng::Rng;
 
@@ -31,7 +31,7 @@ impl Strategy for DpFl {
             ctx.run_epochs(&start, |b, p, x, y| b.sgd(p, x, y, lr))?;
         Ok(ClientUpdate {
             client: ctx.client.to_string(),
-            params,
+            params: params.into(),
             weight: ctx.n_examples as f64,
             extra: None,
             mean_loss,
@@ -42,7 +42,7 @@ impl Strategy for DpFl {
         &self,
         updates: &[ClientUpdate],
         global: &[f32],
-        order: ReductionOrder,
+        plan: AggPlan,
         round_rng: &mut Rng,
     ) -> Result<Vec<f32>> {
         // Clip every client's delta to the budget, then average.
@@ -52,7 +52,7 @@ impl Strategy for DpFl {
             .collect();
         let refs: Vec<&[f32]> = clipped.iter().map(|c| c.as_slice()).collect();
         let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
-        let mut agg = weighted_mean(&refs, &weights, order)?;
+        let mut agg = weighted_mean_plan(&refs, &weights, plan)?;
         // Gaussian mechanism on the aggregate.
         let std = (self.sigma * self.clip / updates.len().max(1) as f64) as f32;
         let mut noise_rng = round_rng.derive("dp_noise", 0);

@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use crate::aggregate::mean::{weighted_mean, ReductionOrder};
+use crate::aggregate::mean::{weighted_mean_plan, AggPlan};
 use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
 use crate::util::rng::Rng;
 
@@ -21,7 +21,7 @@ impl Strategy for FedAvg {
             ctx.run_epochs(&start, |b, p, x, y| b.sgd(p, x, y, lr))?;
         Ok(ClientUpdate {
             client: ctx.client.to_string(),
-            params,
+            params: params.into(),
             weight: ctx.n_examples as f64,
             extra: None,
             mean_loss,
@@ -32,11 +32,11 @@ impl Strategy for FedAvg {
         &self,
         updates: &[ClientUpdate],
         _global: &[f32],
-        order: ReductionOrder,
+        plan: AggPlan,
         _round_rng: &mut Rng,
     ) -> Result<Vec<f32>> {
-        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_ref()).collect();
         let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
-        weighted_mean(&params, &weights, order)
+        weighted_mean_plan(&params, &weights, plan)
     }
 }

@@ -3,23 +3,24 @@
 //! after consensus. An extension strategy beyond the paper's Fig 8 set,
 //! from the direction its introduction cites as "server-side optimization".
 
-use std::cell::RefCell;
-
 use anyhow::Result;
 
-use crate::aggregate::mean::{weighted_mean, ReductionOrder};
+use crate::aggregate::mean::{weighted_mean_plan, AggPlan};
 use crate::aggregate::server_opt::{ServerOpt, ServerOptKind};
 use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
 use crate::util::rng::Rng;
 
 pub struct FedOpt {
-    opt: RefCell<ServerOpt>,
+    // Held directly (not RefCell-wrapped): mutation only happens in the
+    // serially-invoked `post_round(&mut self)`, and `Strategy: Send + Sync`
+    // forbids interior mutability reachable from the worker pool.
+    opt: ServerOpt,
 }
 
 impl FedOpt {
     pub fn new(kind: ServerOptKind, server_lr: f32) -> FedOpt {
         FedOpt {
-            opt: RefCell::new(ServerOpt::new(kind, server_lr)),
+            opt: ServerOpt::new(kind, server_lr),
         }
     }
 }
@@ -36,7 +37,7 @@ impl Strategy for FedOpt {
             ctx.run_epochs(&start, |b, p, x, y| b.sgd(p, x, y, lr))?;
         Ok(ClientUpdate {
             client: ctx.client.to_string(),
-            params,
+            params: params.into(),
             weight: ctx.n_examples as f64,
             extra: None,
             mean_loss,
@@ -47,12 +48,12 @@ impl Strategy for FedOpt {
         &self,
         updates: &[ClientUpdate],
         _global: &[f32],
-        order: ReductionOrder,
+        plan: AggPlan,
         _round_rng: &mut Rng,
     ) -> Result<Vec<f32>> {
-        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_ref()).collect();
         let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
-        weighted_mean(&params, &weights, order)
+        weighted_mean_plan(&params, &weights, plan)
     }
 
     fn post_round(
@@ -61,6 +62,6 @@ impl Strategy for FedOpt {
         global_before: &[f32],
         consensus_params: Vec<f32>,
     ) -> Vec<f32> {
-        self.opt.borrow_mut().apply(global_before, &consensus_params)
+        self.opt.apply(global_before, &consensus_params)
     }
 }

@@ -1,9 +1,9 @@
 //! FedProx (Li et al. [3]): FedAvg with a client-side proximal term
-//! `(mu/2)||w - w_global||²` handled inside the AOT `prox` train step.
+//! `(mu/2)||w - w_global||²` handled inside the backend's `prox` train step.
 
 use anyhow::Result;
 
-use crate::aggregate::mean::{weighted_mean, ReductionOrder};
+use crate::aggregate::mean::{weighted_mean_plan, AggPlan};
 use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
 use crate::util::rng::Rng;
 
@@ -26,7 +26,7 @@ impl Strategy for FedProx {
         })?;
         Ok(ClientUpdate {
             client: ctx.client.to_string(),
-            params,
+            params: params.into(),
             weight: ctx.n_examples as f64,
             extra: None,
             mean_loss,
@@ -37,11 +37,11 @@ impl Strategy for FedProx {
         &self,
         updates: &[ClientUpdate],
         _global: &[f32],
-        order: ReductionOrder,
+        plan: AggPlan,
         _round_rng: &mut Rng,
     ) -> Result<Vec<f32>> {
-        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_ref()).collect();
         let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
-        weighted_mean(&params, &weights, order)
+        weighted_mean_plan(&params, &weights, plan)
     }
 }

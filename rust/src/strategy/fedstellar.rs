@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::aggregate::mean::{weighted_mean, ReductionOrder};
+use crate::aggregate::mean::{weighted_mean_plan, AggPlan};
 use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
 use crate::util::rng::Rng;
 
@@ -24,12 +24,12 @@ impl Fedstellar {
         &self,
         own: &ClientUpdate,
         pulled: &[&ClientUpdate],
-        order: ReductionOrder,
+        plan: AggPlan,
     ) -> Result<Vec<f32>> {
-        let mut params: Vec<&[f32]> = vec![own.params.as_slice()];
-        params.extend(pulled.iter().map(|u| u.params.as_slice()));
+        let mut params: Vec<&[f32]> = vec![own.params.as_ref()];
+        params.extend(pulled.iter().map(|u| u.params.as_ref()));
         let weights = vec![1.0; params.len()];
-        weighted_mean(&params, &weights, order)
+        weighted_mean_plan(&params, &weights, plan)
     }
 }
 
@@ -47,7 +47,7 @@ impl Strategy for Fedstellar {
             ctx.run_epochs(&start, |b, p, x, y| b.sgd(p, x, y, lr))?;
         Ok(ClientUpdate {
             client: ctx.client.to_string(),
-            params,
+            params: params.into(),
             weight: ctx.n_examples as f64,
             extra: None,
             mean_loss,
@@ -58,27 +58,28 @@ impl Strategy for Fedstellar {
         &self,
         updates: &[ClientUpdate],
         _global: &[f32],
-        order: ReductionOrder,
+        plan: AggPlan,
         _round_rng: &mut Rng,
     ) -> Result<Vec<f32>> {
         // Used for reporting: the uniform mean over peer models ("virtual
         // global model" the evaluation tracks).
-        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_ref()).collect();
         let weights = vec![1.0; params.len()];
-        weighted_mean(&params, &weights, order)
+        weighted_mean_plan(&params, &weights, plan)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::aggregate::mean::ReductionOrder;
 
     #[test]
     fn peer_merge_uniform_average() {
         let strat = Fedstellar { neighbors: 0 };
         let mk = |v: f32| ClientUpdate {
             client: "p".into(),
-            params: vec![v; 4],
+            params: vec![v; 4].into(),
             weight: 1.0,
             extra: None,
             mean_loss: 0.0,
@@ -87,7 +88,7 @@ mod tests {
         let n1 = mk(3.0);
         let n2 = mk(6.0);
         let merged = strat
-            .peer_merge(&own, &[&n1, &n2], ReductionOrder::Sequential)
+            .peer_merge(&own, &[&n1, &n2], AggPlan::sequential(ReductionOrder::Sequential))
             .unwrap();
         assert!((merged[0] - 3.0).abs() < 1e-6);
     }

@@ -12,7 +12,7 @@
 use anyhow::Result;
 
 use crate::aggregate::cluster::{agglomerative_clusters, Linkage};
-use crate::aggregate::mean::{weighted_mean, ReductionOrder};
+use crate::aggregate::mean::{weighted_mean_plan, AggPlan};
 use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
 use crate::util::rng::Rng;
 
@@ -25,7 +25,7 @@ impl FlHc {
     /// Cluster clients by their uploaded parameters (called by the
     /// orchestrator exactly at `cluster_round`).
     pub fn cluster_clients(&self, updates: &[ClientUpdate]) -> Vec<usize> {
-        let vectors: Vec<Vec<f32>> = updates.iter().map(|u| u.params.clone()).collect();
+        let vectors: Vec<Vec<f32>> = updates.iter().map(|u| u.params.to_vec()).collect();
         agglomerative_clusters(&vectors, self.n_clusters, f64::INFINITY, Linkage::Average)
     }
 }
@@ -42,7 +42,7 @@ impl Strategy for FlHc {
             ctx.run_epochs(&start, |b, p, x, y| b.sgd(p, x, y, lr))?;
         Ok(ClientUpdate {
             client: ctx.client.to_string(),
-            params,
+            params: params.into(),
             weight: ctx.n_examples as f64,
             extra: None,
             mean_loss,
@@ -53,12 +53,12 @@ impl Strategy for FlHc {
         &self,
         updates: &[ClientUpdate],
         _global: &[f32],
-        order: ReductionOrder,
+        plan: AggPlan,
         _round_rng: &mut Rng,
     ) -> Result<Vec<f32>> {
-        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_ref()).collect();
         let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
-        weighted_mean(&params, &weights, order)
+        weighted_mean_plan(&params, &weights, plan)
     }
 }
 
@@ -74,7 +74,7 @@ mod tests {
         };
         let mk = |v: f32| ClientUpdate {
             client: format!("c{v}"),
-            params: vec![v; 16],
+            params: vec![v; 16].into(),
             weight: 1.0,
             extra: None,
             mean_loss: 0.0,

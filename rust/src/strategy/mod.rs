@@ -26,7 +26,7 @@ pub mod scaffold;
 
 use anyhow::{bail, Result};
 
-use crate::aggregate::mean::ReductionOrder;
+use crate::aggregate::mean::AggPlan;
 use crate::util::rng::Rng;
 use crate::util::yaml::Yaml;
 
@@ -161,20 +161,29 @@ impl StrategyKind {
 /// The pluggable strategy interface — the Rust analogue of the paper's
 /// `LearnStrategyBase` (train / aggregate; test lives in the orchestrator's
 /// evaluation loop, identical for all strategies).
-pub trait Strategy {
+///
+/// `Send + Sync` is part of the contract: the parallel round engine calls
+/// `client_train` concurrently from a worker pool through a shared `&dyn
+/// Strategy`, so implementations must keep round-scoped mutability inside
+/// `ClientCtx` (per-client) and strategy-global mutation inside the
+/// serially-invoked `post_round`.
+pub trait Strategy: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Run one client's local training for the round; returns its update.
+    /// May be called concurrently for different clients.
     fn client_train(&self, ctx: &mut ClientCtx) -> Result<ClientUpdate>;
 
     /// Worker-side aggregation of the round's client updates into a
     /// proposal for the next global model. Pure w.r.t. strategy state
-    /// (multiple workers must produce identical honest proposals).
+    /// (multiple workers must produce identical honest proposals). The
+    /// plan's parallelism is a wall-clock hint only — results are
+    /// bitwise-identical at any worker count.
     fn aggregate(
         &self,
         updates: &[ClientUpdate],
         global: &[f32],
-        order: ReductionOrder,
+        plan: AggPlan,
         round_rng: &mut Rng,
     ) -> Result<Vec<f32>>;
 

@@ -1,11 +1,11 @@
 //! MOON (Li et al. [4]): model-contrastive federated learning. The client's
 //! loss adds a contrastive term pulling its representation toward the global
-//! model's and away from its own previous round's — all three forward passes
-//! live in the AOT `moon` artifact.
+//! model's and away from its own previous round's — computed inside the
+//! backend's `moon` artifact.
 
 use anyhow::Result;
 
-use crate::aggregate::mean::{weighted_mean, ReductionOrder};
+use crate::aggregate::mean::{weighted_mean_plan, AggPlan};
 use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
 use crate::util::rng::Rng;
 
@@ -37,7 +37,7 @@ impl Strategy for Moon {
         ctx.state.prev_params = Some(params.clone());
         Ok(ClientUpdate {
             client: ctx.client.to_string(),
-            params,
+            params: params.into(),
             weight: ctx.n_examples as f64,
             extra: None,
             mean_loss,
@@ -48,11 +48,11 @@ impl Strategy for Moon {
         &self,
         updates: &[ClientUpdate],
         _global: &[f32],
-        order: ReductionOrder,
+        plan: AggPlan,
         _round_rng: &mut Rng,
     ) -> Result<Vec<f32>> {
-        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_ref()).collect();
         let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
-        weighted_mean(&params, &weights, order)
+        weighted_mean_plan(&params, &weights, plan)
     }
 }

@@ -1,7 +1,7 @@
 //! SCAFFOLD (Karimireddy et al. [5]): stochastic controlled averaging with
 //! client/server control variates.
 //!
-//! The batch step runs in the AOT `scaffold` artifact
+//! The batch step runs in the backend's `scaffold` artifact
 //! (`w <- w - lr (g - c_i + c)`); the option-II control-variate update is
 //! element-wise and runs here: `c_i' = c_i - c + (w_0 - w_K)/(K lr)`.
 //! Clients upload `(w_K, dc_i)`; the server folds `mean(dc_i)` into the
@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 
-use crate::aggregate::mean::{scaffold_cv_update, weighted_mean, ReductionOrder};
+use crate::aggregate::mean::{scaffold_cv_update, weighted_mean_plan, AggPlan};
 use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
 use crate::util::rng::Rng;
 
@@ -56,9 +56,9 @@ impl Strategy for Scaffold {
 
         Ok(ClientUpdate {
             client: ctx.client.to_string(),
-            params,
+            params: params.into(),
             weight: ctx.n_examples as f64,
-            extra: Some(dci),
+            extra: Some(dci.into()),
             mean_loss,
         })
     }
@@ -67,12 +67,12 @@ impl Strategy for Scaffold {
         &self,
         updates: &[ClientUpdate],
         _global: &[f32],
-        order: ReductionOrder,
+        plan: AggPlan,
         _round_rng: &mut Rng,
     ) -> Result<Vec<f32>> {
-        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_slice()).collect();
+        let params: Vec<&[f32]> = updates.iter().map(|u| u.params.as_ref()).collect();
         let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
-        weighted_mean(&params, &weights, order)
+        weighted_mean_plan(&params, &weights, plan)
     }
 
     fn post_round(
@@ -91,7 +91,7 @@ impl Strategy for Scaffold {
         for u in updates {
             if let Some(dci) = &u.extra {
                 n += 1;
-                for (s, &d) in sum.iter_mut().zip(dci) {
+                for (s, &d) in sum.iter_mut().zip(dci.iter()) {
                     *s += d as f64;
                 }
             }

@@ -1,0 +1,184 @@
+//! Chunk compression for the dataset distributor.
+//!
+//! The offline image carries no `flate2`, so the distributor uses this
+//! self-contained 32-bit-word run-length codec instead. It is tuned for the
+//! chunk wire format (LE f32/i32 words): constant or zero-heavy tensors
+//! collapse to a few bytes, while incompressible float data pays < 1% of
+//! framing overhead. Deterministic by construction (no dictionaries, no
+//! heuristics), which keeps chunk ids content-addressed and reproducible.
+//!
+//! Format:
+//! ```text
+//! [orig_len: u32 LE]
+//! tokens*:
+//!   0b1xxxxxxx  -> run: the next 4-byte word repeats (x+1) times (1..=127)
+//!   0b0xxxxxxx  -> literal: the next (x+1) words (1..=127) copied verbatim
+//! [remainder: orig_len % 4 raw bytes]
+//! ```
+
+use anyhow::{bail, Result};
+
+const MAX_RUN: usize = 127;
+
+/// Word `i` of `data` as a byte slice (scans in place — no staging copy of
+/// the input, which matters for multi-megabyte dataset chunks).
+#[inline]
+fn word(data: &[u8], i: usize) -> &[u8] {
+    &data[i * 4..i * 4 + 4]
+}
+
+/// Compress `data`; always succeeds, output is at most ~1% larger than the
+/// input on incompressible bytes.
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let n_words = data.len() / 4;
+    let mut out = Vec::with_capacity(8 + data.len() + data.len() / (4 * MAX_RUN) + 8);
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+
+    let mut i = 0usize;
+    while i < n_words {
+        // Measure the run starting at i.
+        let mut run = 1usize;
+        while run < MAX_RUN && i + run < n_words && word(data, i + run) == word(data, i) {
+            run += 1;
+        }
+        if run >= 2 {
+            out.push(0x80 | (run - 1) as u8);
+            out.extend_from_slice(word(data, i));
+            i += run;
+        } else {
+            // Literal stretch: scan ahead until the next run of >= 3 equal
+            // words (2 is break-even) or the cap.
+            let start = i;
+            let mut j = i + 1;
+            while j < n_words && j - start < MAX_RUN {
+                if j + 2 < n_words
+                    && word(data, j) == word(data, j + 1)
+                    && word(data, j) == word(data, j + 2)
+                {
+                    break;
+                }
+                j += 1;
+            }
+            out.push((j - start - 1) as u8);
+            out.extend_from_slice(&data[start * 4..j * 4]);
+            i = j;
+        }
+    }
+    out.extend_from_slice(&data[n_words * 4..]);
+    out
+}
+
+/// Decompress a [`compress`] buffer.
+pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
+    if data.len() < 4 {
+        bail!("codec: truncated header");
+    }
+    let orig_len = u32::from_le_bytes(data[..4].try_into().unwrap()) as usize;
+    let n_words = orig_len / 4;
+    let tail = orig_len % 4;
+    let mut out = Vec::with_capacity(orig_len);
+    let mut pos = 4usize;
+    while out.len() < n_words * 4 {
+        let Some(&ctrl) = data.get(pos) else {
+            bail!("codec: truncated token stream");
+        };
+        pos += 1;
+        let count = ((ctrl & 0x7F) as usize) + 1;
+        if ctrl & 0x80 != 0 {
+            if pos + 4 > data.len() {
+                bail!("codec: truncated run word");
+            }
+            let w = &data[pos..pos + 4];
+            pos += 4;
+            for _ in 0..count {
+                out.extend_from_slice(w);
+            }
+        } else {
+            let need = count * 4;
+            if pos + need > data.len() {
+                bail!("codec: truncated literal words");
+            }
+            out.extend_from_slice(&data[pos..pos + need]);
+            pos += need;
+        }
+    }
+    if out.len() != n_words * 4 {
+        bail!("codec: token stream overran {} words", n_words);
+    }
+    if pos + tail != data.len() {
+        bail!("codec: trailing-byte mismatch");
+    }
+    out.extend_from_slice(&data[pos..]);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(data: &[u8]) {
+        let c = compress(data);
+        let d = decompress(&c).unwrap();
+        assert_eq!(d, data, "roundtrip failed for len {}", data.len());
+    }
+
+    #[test]
+    fn roundtrips() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"abc");
+        roundtrip(b"abcd");
+        roundtrip(b"abcde");
+        roundtrip(&[0u8; 1000]);
+        let mut rng = Rng::seed_from(1);
+        for len in [3usize, 4, 7, 64, 257, 4096, 10_001] {
+            let data: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            roundtrip(&data);
+        }
+        // Mixed runs and literals.
+        let mut mixed = Vec::new();
+        for i in 0..2000u32 {
+            if i % 7 == 0 {
+                mixed.extend_from_slice(&[0u8; 4]);
+            } else {
+                mixed.extend_from_slice(&i.to_le_bytes());
+            }
+        }
+        roundtrip(&mixed);
+    }
+
+    #[test]
+    fn constant_data_compresses_hard() {
+        let data = vec![0x3Fu8; 20_000];
+        let c = compress(&data);
+        assert!(c.len() * 10 < data.len(), "{} vs {}", c.len(), data.len());
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn incompressible_overhead_is_small() {
+        let mut rng = Rng::seed_from(2);
+        let data: Vec<u8> = (0..100_000).map(|_| rng.next_u64() as u8).collect();
+        let c = compress(&data);
+        assert!(c.len() < data.len() + data.len() / 50 + 16);
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn corrupt_input_errors_not_panics() {
+        assert!(decompress(&[]).is_err());
+        assert!(decompress(&[1, 2]).is_err());
+        // Claims 8 words but provides none.
+        assert!(decompress(&32u32.to_le_bytes()).is_err());
+        let mut c = compress(&[7u8; 64]);
+        c.truncate(c.len() - 1);
+        assert!(decompress(&c).is_err());
+    }
+
+    #[test]
+    fn deterministic_output() {
+        let data: Vec<u8> = (0..999u32).flat_map(|i| (i % 50).to_le_bytes()).collect();
+        assert_eq!(compress(&data), compress(&data));
+    }
+}

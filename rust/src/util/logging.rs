@@ -7,9 +7,8 @@
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -21,7 +20,11 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(2);
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
 
 /// Initialize from `FLSIM_LOG` (idempotent; called by binaries).
 pub fn init_from_env() {
@@ -33,7 +36,7 @@ pub fn init_from_env() {
         "trace" => Level::Trace,
         _ => Level::Info,
     });
-    Lazy::force(&START);
+    let _ = start();
 }
 
 pub fn set_level(level: Level) {
@@ -48,7 +51,7 @@ pub fn log(level: Level, target: &str, msg: &str) {
     if !enabled(level) {
         return;
     }
-    let t = START.elapsed().as_secs_f64();
+    let t = start().elapsed().as_secs_f64();
     let tag = match level {
         Level::Error => "ERROR",
         Level::Warn => "WARN ",

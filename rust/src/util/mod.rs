@@ -1,6 +1,7 @@
 //! Support substrates built from scratch for the offline environment:
 //! deterministic RNG, JSON/YAML parsing, hashing, statistics, logging.
 
+pub mod codec;
 pub mod hash;
 pub mod json;
 pub mod logging;

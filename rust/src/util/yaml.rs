@@ -26,12 +26,19 @@ pub enum Yaml {
     Map(Map),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("yaml parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct YamlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for YamlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "yaml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for YamlError {}
 
 impl Yaml {
     pub fn parse(src: &str) -> Result<Yaml, YamlError> {

@@ -1,0 +1,175 @@
+//! The parallel round engine's determinism contract (the acceptance
+//! criterion of the zero-copy/parallelism PR): `parallelism: N` must produce
+//! bitwise-identical model hashes, byte counts and metric series to
+//! `parallelism: 1` on every flow — same seed + same reduction order ⇒ same
+//! bytes at any worker count.
+
+use flsim::config::job::JobConfig;
+use flsim::controller::sync::FaultPlan;
+use flsim::metrics::report::RunReport;
+use flsim::orchestrator::{JobState, Orchestrator};
+use flsim::runtime::pjrt::Runtime;
+use flsim::topology::TopologyKind;
+
+fn run_at(parallelism: usize, base: &JobConfig) -> RunReport {
+    let mut job = base.clone();
+    job.parallelism = parallelism;
+    let rt = Runtime::shared("artifacts").unwrap();
+    Orchestrator::new(rt).run(&job).unwrap()
+}
+
+fn assert_bitwise_equal(a: &RunReport, b: &RunReport, label: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{label}: round counts differ");
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(
+            ra.model_hash, rb.model_hash,
+            "{label}: round {} model hash differs",
+            ra.round
+        );
+        assert_eq!(
+            ra.net_bytes, rb.net_bytes,
+            "{label}: round {} net_bytes differ",
+            ra.round
+        );
+        assert_eq!(
+            ra.test_accuracy.to_bits(),
+            rb.test_accuracy.to_bits(),
+            "{label}: round {} accuracy differs",
+            ra.round
+        );
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{label}: round {} train loss differs",
+            ra.round
+        );
+    }
+}
+
+fn quickstart_mini() -> JobConfig {
+    let mut job = JobConfig::default_cnn("fedavg");
+    job.name = "quickstart_mini".into();
+    job.rounds = 3;
+    job.dataset.n = 1200;
+    job
+}
+
+#[test]
+fn parallel_equals_sequential_on_the_quickstart_job() {
+    let base = quickstart_mini();
+    let seq = run_at(1, &base);
+    for par in [2usize, 4, 8] {
+        let p = run_at(par, &base);
+        assert_bitwise_equal(&seq, &p, &format!("quickstart parallelism {par}"));
+    }
+    // Auto parallelism (0 = per-core) obeys the same contract.
+    let auto = run_at(0, &base);
+    assert_bitwise_equal(&seq, &auto, "quickstart parallelism auto");
+}
+
+#[test]
+fn parallel_equals_sequential_for_stateful_strategies() {
+    // SCAFFOLD moves broadcast state + per-client control variates; MOON
+    // carries per-client previous-round anchors — both exercise the
+    // cross-round client state the worker pool must not scramble.
+    for strategy in ["scaffold", "moon", "fedprox", "dpfl"] {
+        let mut base = JobConfig::default_cnn(strategy);
+        base.rounds = 2;
+        base.dataset.n = 600;
+        let seq = run_at(1, &base);
+        let par = run_at(4, &base);
+        assert_bitwise_equal(&seq, &par, strategy);
+    }
+}
+
+#[test]
+fn parallel_equals_sequential_on_hierarchical_flow() {
+    let mut base = quickstart_mini();
+    base.rounds = 2;
+    base.topology = TopologyKind::Hierarchical;
+    base.n_workers = 3;
+    let seq = run_at(1, &base);
+    let par = run_at(4, &base);
+    assert_bitwise_equal(&seq, &par, "hierarchical");
+}
+
+#[test]
+fn parallel_equals_sequential_on_decentralized_flow() {
+    let mut base = JobConfig::default_cnn("fedstellar");
+    base.rounds = 2;
+    base.dataset.n = 600;
+    base.n_clients = 5;
+    let seq = run_at(1, &base);
+    let par = run_at(4, &base);
+    assert_bitwise_equal(&seq, &par, "decentralized");
+}
+
+#[test]
+fn parallel_equals_sequential_under_sampling_and_faults() {
+    let mut base = quickstart_mini();
+    base.rounds = 3;
+    base.client_fraction = 0.5;
+    let faults = || {
+        FaultPlan::none()
+            .drop_in_round("client_2", 2)
+            .crash_from("client_7", 3)
+    };
+    let rt = Runtime::shared("artifacts").unwrap();
+    let mut j1 = base.clone();
+    j1.parallelism = 1;
+    let seq = Orchestrator::new(rt.clone())
+        .run_with_faults(&j1, faults())
+        .unwrap();
+    let mut j4 = base.clone();
+    j4.parallelism = 4;
+    let par = Orchestrator::new(rt).run_with_faults(&j4, faults()).unwrap();
+    assert_bitwise_equal(&seq, &par, "sampling+faults");
+}
+
+#[test]
+fn parallel_equals_sequential_across_hw_profiles() {
+    use flsim::aggregate::mean::ReductionOrder;
+    for order in ReductionOrder::ALL {
+        let mut base = quickstart_mini();
+        base.rounds = 2;
+        base.n_clients = 7; // odd count tickles reduction-order tree shapes
+        base.hw_profile = order;
+        let seq = run_at(1, &base);
+        let par = run_at(4, &base);
+        assert_bitwise_equal(&seq, &par, order.profile_name());
+    }
+}
+
+#[test]
+fn broker_memory_stays_bounded_across_a_long_run() {
+    // Drive the standard flow round-by-round through the public JobState
+    // API, truncating like the orchestrator does, and require the broker to
+    // hold at most one round's working set at all times.
+    let rt = Runtime::shared("artifacts").unwrap();
+    let mut job = quickstart_mini();
+    job.rounds = 12;
+    job.parallelism = 2;
+    let mut state = JobState::scaffold(rt, &job, FaultPlan::none()).unwrap();
+    let mut peak_msgs = 0usize;
+    let mut peak_bytes = 0u64;
+    for round in 1..=job.rounds {
+        let _ = flsim::orchestrator::run_standard_round(&mut state, round).unwrap();
+        state.kv.truncate_before(round);
+        peak_msgs = peak_msgs.max(state.kv.message_count());
+        peak_bytes = peak_bytes.max(state.kv.retained_bytes());
+        // No dead topics survive truncation.
+        assert!(
+            state.kv.topic_count() <= 4,
+            "round {round}: {} topics live",
+            state.kv.topic_count()
+        );
+    }
+    // One round's working set: global broadcast + n client uploads + votes.
+    let param_bytes = 64 + 4 * state.backend.param_count as u64;
+    let bound = (job.n_clients as u64 + 2) * param_bytes + 4096;
+    assert!(
+        peak_bytes <= bound,
+        "broker retained {peak_bytes} bytes (bound {bound})"
+    );
+    assert!(peak_msgs <= 2 * job.n_clients + 4);
+}
