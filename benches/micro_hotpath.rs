@@ -158,8 +158,10 @@ fn main() {
 
             // Round-engine throughput at parallelism 1/4/8 on a mini job.
             // Same seed at every level — the per-round model hashes must
-            // agree bitwise while the wall clock drops.
+            // agree bitwise while the wall clock drops, and the *virtual*
+            // makespan (sim_round_secs) must not move at all.
             let mut golden_hash: Option<String> = None;
+            let mut golden_sim: Option<f64> = None;
             for par in [1usize, 4, 8] {
                 let mut job = JobConfig::default_cnn("fedavg");
                 job.name = format!("bench_round_p{par}");
@@ -180,10 +182,54 @@ fn main() {
                         "parallelism {par} changed the model hash — determinism broken"
                     ),
                 }
+                let sim = report.total_sim_round_secs();
+                match golden_sim {
+                    None => golden_sim = Some(sim),
+                    Some(g) => assert_eq!(
+                        g.to_bits(),
+                        sim.to_bits(),
+                        "parallelism {par} changed the virtual makespan"
+                    ),
+                }
                 println!(
-                    "round_throughput parallelism={par}: {rounds_per_sec:.3} rounds/s ({secs:.2}s)"
+                    "round_throughput parallelism={par}: {rounds_per_sec:.3} rounds/s ({secs:.2}s, sim {sim:.2}s)"
                 );
                 suite.push_throughput(&format!("round/parallelism={par}"), rounds_per_sec);
+                suite.push_makespan(&format!("round/parallelism={par}"), sim);
+            }
+
+            // Virtual-clock makespan per topology at equal model size and
+            // rounds (the Fig 11e transfer-time ordering, as a tracked
+            // series: fully_connected > hierarchical > client_server).
+            let topo_jobs: Vec<(&str, JobConfig)> = vec![
+                ("client_server", {
+                    let mut j = JobConfig::default_cnn("fedavg");
+                    j.name = "bench_topo_cs".into();
+                    j
+                }),
+                ("hierarchical", {
+                    let mut j = JobConfig::default_cnn("fedavg");
+                    j.name = "bench_topo_hier".into();
+                    j.topology = flsim::topology::TopologyKind::Hierarchical;
+                    j.n_workers = 3;
+                    j
+                }),
+                ("fully_connected", {
+                    let mut j = JobConfig::default_cnn("fedstellar");
+                    j.name = "bench_topo_mesh".into();
+                    j
+                }),
+            ];
+            for (name, mut job) in topo_jobs {
+                job.rounds = 1;
+                job.dataset.n = 600;
+                job.n_clients = 6;
+                let orch = Orchestrator::new(rt.clone());
+                let report = orch.run(&job).unwrap();
+                let sim = report.total_sim_round_secs();
+                let net = report.total_sim_net_secs();
+                println!("topology_makespan {name}: sim_round {sim:.3}s, sim_net {net:.3}s");
+                suite.push_makespan(&format!("topology/{name}"), sim);
             }
 
             let stats = rt.stats();

@@ -43,12 +43,13 @@ fn main() -> Result<()> {
     for r in &report.rounds {
         println!(
             "round {:>2}: accuracy {:.4}  loss {:.4}  train-loss {:.4}  \
-             {:>6.2}s  {:>7} KiB  hash {}",
+             {:>6.2}s  sim {:>6.2}s  {:>7} KiB  hash {}",
             r.round,
             r.test_accuracy,
             r.test_loss,
             r.train_loss,
             r.wall_secs,
+            r.sim_round_secs,
             r.net_bytes / 1024,
             r.model_hash,
         );

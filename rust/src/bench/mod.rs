@@ -85,12 +85,22 @@ pub struct ThroughputRecord {
     pub ops_per_sec: f64,
 }
 
+/// A virtual-clock makespan measurement (`sim_round_secs` summed over a
+/// job's rounds): what the run takes on the *simulated* deployment, which
+/// is invariant to host speed and worker count.
+#[derive(Clone, Debug)]
+pub struct MakespanRecord {
+    pub name: String,
+    pub sim_round_secs: f64,
+}
+
 /// Collects bench results and serializes them as a stable JSON artifact
 /// (`BENCH_micro.json`) for per-PR perf tracking.
 #[derive(Clone, Debug, Default)]
 pub struct BenchSuite {
     pub results: Vec<BenchRecord>,
     pub throughput: Vec<ThroughputRecord>,
+    pub makespan: Vec<MakespanRecord>,
 }
 
 impl BenchSuite {
@@ -112,6 +122,14 @@ impl BenchSuite {
         self.throughput.push(ThroughputRecord {
             name: name.to_string(),
             ops_per_sec,
+        });
+    }
+
+    /// Record a virtual-clock makespan (summed `sim_round_secs` of a run).
+    pub fn push_makespan(&mut self, name: &str, sim_round_secs: f64) {
+        self.makespan.push(MakespanRecord {
+            name: name.to_string(),
+            sim_round_secs,
         });
     }
 
@@ -139,10 +157,24 @@ impl BenchSuite {
                 ])
             })
             .collect();
+        let makespan: Vec<Json> = self
+            .makespan
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("name", Json::from(m.name.as_str())),
+                    (
+                        "sim_round_secs",
+                        Json::from((m.sim_round_secs * 1e4).round() / 1e4),
+                    ),
+                ])
+            })
+            .collect();
         let doc = Json::obj(vec![
             ("schema", Json::from("flsim-bench-v1")),
             ("results", Json::Arr(results)),
             ("throughput", Json::Arr(throughput)),
+            ("makespan", Json::Arr(makespan)),
         ]);
         format!("{doc}\n")
     }
@@ -190,6 +222,7 @@ mod tests {
             max_secs: 2e-6,
         });
         suite.push_throughput("round/parallelism=4", 12.5);
+        suite.push_makespan("topology/client_server", 3.14159);
         let j = suite.to_json();
         // Parses with the in-repo JSON parser and carries the values.
         let parsed = crate::util::json::Json::parse(&j).unwrap();
@@ -211,5 +244,17 @@ mod tests {
             .and_then(crate::util::json::Json::as_arr)
             .unwrap();
         assert_eq!(tp[0].get("ops_per_sec").and_then(crate::util::json::Json::as_f64), Some(12.5));
+        let ms = parsed
+            .get("makespan")
+            .and_then(crate::util::json::Json::as_arr)
+            .unwrap();
+        assert_eq!(
+            ms[0].get("name").and_then(crate::util::json::Json::as_str),
+            Some("topology/client_server")
+        );
+        assert_eq!(
+            ms[0].get("sim_round_secs").and_then(crate::util::json::Json::as_f64),
+            Some(3.1416)
+        );
     }
 }

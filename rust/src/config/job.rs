@@ -11,6 +11,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::aggregate::mean::ReductionOrder;
 use crate::data::dataset::{DatasetSpec, Distribution};
+use crate::kvstore::netsim::{LinkModel, LinkPolicy};
 use crate::strategy::StrategyKind;
 use crate::topology::TopologyKind;
 use crate::util::yaml::Yaml;
@@ -94,6 +95,18 @@ pub struct JobConfig {
     /// Stop waiting for stragglers after this many simulated seconds
     /// (Algorithm 1's `timeout()`); `None` waits forever.
     pub round_timeout_secs: Option<f64>,
+    /// Per-edge-class link models of the virtual-clock network fabric (the
+    /// `network:` section; defaults = the built-in EDGE/LAN/WAN constants).
+    pub network: LinkPolicy,
+    /// Client compute heterogeneity: each client's simulated train time is
+    /// scaled by a deterministic factor in `[1, 1 + heterogeneity)` derived
+    /// from the seed and the client name. `0.0` = homogeneous fleet.
+    pub heterogeneity: f64,
+    /// Virtual-clock round deadline: clients whose simulated
+    /// download + train + upload time exceeds this are dropped through the
+    /// Logic Controller's barrier timeout arm (Algorithm 1's straggler
+    /// path). `None` = the clock is purely observational.
+    pub round_deadline_secs: Option<f64>,
     /// Fraction of clients sampled per round (1.0 = all, paper default).
     pub client_fraction: f64,
     /// Worker threads for the round engine (client training + aggregation).
@@ -130,6 +143,9 @@ impl JobConfig {
             chain: ChainConfig::default(),
             hw_profile: ReductionOrder::Sequential,
             round_timeout_secs: None,
+            network: LinkPolicy::default(),
+            heterogeneity: 0.0,
+            round_deadline_secs: None,
             client_fraction: 1.0,
             parallelism: 1,
             strategy,
@@ -250,6 +266,23 @@ impl JobConfig {
         };
 
         let round_timeout_secs = job.get("round_timeout_secs").and_then(Yaml::as_f64);
+        let round_deadline_secs = job.get("round_deadline_secs").and_then(Yaml::as_f64);
+        let heterogeneity = job
+            .get("heterogeneity")
+            .and_then(Yaml::as_f64)
+            .unwrap_or(0.0);
+        let mut network = LinkPolicy::default();
+        if let Some(n) = y.get("network") {
+            if let Some(l) = n.get("edge") {
+                network.edge = parse_link(l, network.edge);
+            }
+            if let Some(l) = n.get("lan") {
+                network.lan = parse_link(l, network.lan);
+            }
+            if let Some(l) = n.get("wan") {
+                network.wan = parse_link(l, network.wan);
+            }
+        }
         let client_fraction = job
             .get("client_fraction")
             .and_then(Yaml::as_f64)
@@ -274,6 +307,9 @@ impl JobConfig {
             chain,
             hw_profile,
             round_timeout_secs,
+            network,
+            heterogeneity,
+            round_deadline_secs,
             client_fraction,
             parallelism,
         };
@@ -320,8 +356,41 @@ impl JobConfig {
                 bail!("malicious worker '{w}' does not name a worker/peer node");
             }
         }
+        if self.heterogeneity < 0.0 {
+            bail!("heterogeneity must be >= 0, got {}", self.heterogeneity);
+        }
+        if let Some(d) = self.round_deadline_secs {
+            if d <= 0.0 {
+                bail!("round_deadline_secs must be positive, got {d}");
+            }
+        }
+        for (name, link) in [
+            ("edge", self.network.edge),
+            ("lan", self.network.lan),
+            ("wan", self.network.wan),
+        ] {
+            if link.bandwidth_mbps <= 0.0 || link.latency_ms < 0.0 {
+                bail!(
+                    "network.{name}: bandwidth must be > 0 and latency >= 0 \
+                     (got {} MBps, {} ms)",
+                    link.bandwidth_mbps,
+                    link.latency_ms
+                );
+            }
+        }
         Ok(())
     }
+}
+
+fn parse_link(y: &Yaml, base: LinkModel) -> LinkModel {
+    let mut m = base;
+    if let Some(v) = get_f64(y, "latency_ms") {
+        m.latency_ms = v;
+    }
+    if let Some(v) = get_f64(y, "bandwidth_mbps") {
+        m.bandwidth_mbps = v;
+    }
+    m
 }
 
 fn parse_dataset(ds: &Yaml) -> Result<DatasetSpec> {
@@ -466,6 +535,53 @@ hardware_profile: kahan
         j.parallelism = 0; // auto
         assert!(j.effective_parallelism() >= 1);
         j.validate().unwrap();
+    }
+
+    #[test]
+    fn network_heterogeneity_deadline_parse() {
+        let yaml = r#"
+job:
+  name: fabric_test
+  rounds: 2
+  heterogeneity: 0.5
+  round_deadline_secs: 12.5
+dataset: {name: cifar10_synth, n: 600}
+strategy: {name: fedavg, backend: cnn}
+topology: {kind: client_server, clients: 4, workers: 1}
+network:
+  edge: {latency_ms: 100.0, bandwidth_mbps: 1.0}
+  lan: {bandwidth_mbps: 250.0}
+"#;
+        let j = JobConfig::from_yaml_str(yaml).unwrap();
+        assert_eq!(j.heterogeneity, 0.5);
+        assert_eq!(j.round_deadline_secs, Some(12.5));
+        assert_eq!(j.network.edge.latency_ms, 100.0);
+        assert_eq!(j.network.edge.bandwidth_mbps, 1.0);
+        // Partial override keeps the unmentioned field.
+        assert_eq!(j.network.lan.bandwidth_mbps, 250.0);
+        assert_eq!(j.network.lan.latency_ms, LinkModel::LAN.latency_ms);
+        assert_eq!(j.network.wan, LinkModel::WAN);
+    }
+
+    #[test]
+    fn fabric_keys_default_off() {
+        let j = JobConfig::default_cnn("fedavg");
+        assert_eq!(j.heterogeneity, 0.0);
+        assert_eq!(j.round_deadline_secs, None);
+        assert_eq!(j.network, LinkPolicy::default());
+    }
+
+    #[test]
+    fn fabric_validation() {
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.heterogeneity = -0.1;
+        assert!(j.validate().is_err());
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.round_deadline_secs = Some(0.0);
+        assert!(j.validate().is_err());
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.network.edge.bandwidth_mbps = 0.0;
+        assert!(j.validate().is_err());
     }
 
     #[test]

@@ -59,6 +59,11 @@ pub struct LogicController {
     phase: ProcessPhase,
     stages: BTreeMap<String, NodeStage>,
     pub fault_plan: FaultPlan,
+    /// Nodes that missed the current round's virtual-clock deadline
+    /// (`round_deadline_secs`): dropped through the same barrier timeout
+    /// arm as fault-plan stragglers, but *emergent* — marked by the round
+    /// engine when a node's simulated finish time overruns the deadline.
+    late: BTreeSet<(String, u64)>,
     /// Whether barriers may resolve with a partial quorum (Algorithm 1's
     /// `timeout()` arm). When `false`, a faulted node is a hard error.
     pub allow_timeout: bool,
@@ -76,9 +81,32 @@ impl LogicController {
                 .map(|n| (n.clone(), NodeStage::NotReady))
                 .collect(),
             fault_plan: FaultPlan::none(),
+            late: BTreeSet::new(),
             allow_timeout: true,
             emitted: Vec::new(),
         }
+    }
+
+    /// Record that `node` overran the virtual-clock round deadline: it is
+    /// treated as down for `round` (barrier timeout arm + alive filter),
+    /// exactly like a fault-plan straggler. Entries from earlier rounds are
+    /// dead (only the current round is ever queried) and are pruned here so
+    /// chronic stragglers don't grow the set across a long run.
+    pub fn mark_late(&mut self, node: &str, round: u64) {
+        self.late.retain(|(_, r)| *r >= round);
+        self.late.insert((node.to_string(), round));
+        self.emit(&format!(
+            "straggler: {node} overran the round-{round} virtual deadline"
+        ));
+    }
+
+    pub fn is_late(&self, node: &str, round: u64) -> bool {
+        self.late.contains(&(node.to_string(), round))
+    }
+
+    /// Down this round: faulted by the plan, or late past the deadline.
+    fn is_down(&self, node: &str, round: u64) -> bool {
+        self.fault_plan.is_down(node, round) || self.is_late(node, round)
     }
 
     pub fn phase(&self) -> ProcessPhase {
@@ -132,7 +160,7 @@ impl LogicController {
         let mut present = Vec::new();
         let mut missing = Vec::new();
         for n in nodes {
-            if self.fault_plan.is_down(n, round) {
+            if self.is_down(n, round) {
                 missing.push(n.clone());
             } else {
                 // In-process nodes are synchronous: a live node has already
@@ -167,11 +195,11 @@ impl LogicController {
         self.emitted.push(msg.to_string());
     }
 
-    /// Which of `nodes` are alive this round (fault-plan filter).
+    /// Which of `nodes` are alive this round (fault-plan + deadline filter).
     pub fn alive<'a>(&self, nodes: &'a [String], round: u64) -> Vec<String> {
         nodes
             .iter()
-            .filter(|n| !self.fault_plan.is_down(n, round))
+            .filter(|n| !self.is_down(n, round))
             .cloned()
             .collect()
     }
@@ -210,6 +238,24 @@ mod tests {
         // Other rounds unaffected.
         let present = lc.barrier(&ns, NodeStage::Done, 4, 1).unwrap();
         assert_eq!(present.len(), 3);
+    }
+
+    #[test]
+    fn late_node_drops_via_timeout_arm_for_one_round() {
+        let ns = nodes(&["client_0", "client_1"]);
+        let mut lc = LogicController::new(&ns);
+        for n in &ns {
+            lc.update_stage(n, NodeStage::Done).unwrap();
+        }
+        lc.mark_late("client_1", 2);
+        assert!(lc.is_late("client_1", 2));
+        assert!(!lc.is_late("client_1", 3));
+        let present = lc.barrier(&ns, NodeStage::Done, 2, 1).unwrap();
+        assert_eq!(present, nodes(&["client_0"]));
+        assert!(lc.emitted.iter().any(|m| m.contains("timeout()")));
+        assert_eq!(lc.alive(&ns, 2), nodes(&["client_0"]));
+        // The drop is round-scoped, exactly like FaultPlan::drop_in_round.
+        assert_eq!(lc.barrier(&ns, NodeStage::Done, 3, 1).unwrap().len(), 2);
     }
 
     #[test]

@@ -5,5 +5,5 @@
 pub mod netsim;
 pub mod store;
 
-pub use netsim::{LinkModel, NetSim};
+pub use netsim::{LinkModel, LinkPolicy, NetSim, SIM_STEP_SECS};
 pub use store::{KvStore, Message, Payload};

@@ -1,9 +1,33 @@
-//! Network simulator: prices transfers with per-link bandwidth/latency so
-//! the simulation can report transfer *times* (not only byte volumes) per
-//! topology — decentralized P2P pays more link crossings than client-server
-//! (paper Fig 11e).
+//! Topology-aware virtual-clock network fabric.
+//!
+//! Every simulated transfer is priced over the *actual overlay route*
+//! between its two endpoints: a breadth-first shortest path over the
+//! [`Overlay`] edges, each hop billed with the [`LinkModel`] of its
+//! [`LinkClass`] (client↔worker and peer↔peer hops ride the EDGE uplink,
+//! server-tier hops ride LAN — overridable per class via the `network:`
+//! config section, or per directed edge via [`NetSim::set_link`]). This is
+//! what turns the paper's Fig 11e topology comparison into transfer *time*
+//! ordering instead of a message count: fully-connected DFL pays n·(n−1)
+//! EDGE crossings per round, hierarchical FL pays an extra LAN tier, the
+//! client-server star pays one EDGE hop each way.
+//!
+//! The clock is **virtual**: prices are accumulated observationally
+//! (`sim_net_secs`, per-round makespans) and never influence training
+//! results — unless a `round_deadline_secs` is configured, in which case
+//! clients whose virtual finish time exceeds the deadline are dropped
+//! through the Logic Controller's barrier timeout arm (Algorithm 1's
+//! emergent straggler path).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::topology::graph::{LinkClass, Overlay};
+
+/// Simulated compute seconds one local batch step costs on the *baseline*
+/// client device. A client's virtual train time is
+/// `steps × SIM_STEP_SECS × speed_factor`, where the per-client speed
+/// factor is derived deterministically from the job seed and scaled by the
+/// `heterogeneity` knob (0.0 = a homogeneous fleet).
+pub const SIM_STEP_SECS: f64 = 0.01;
 
 /// A point-to-point link model.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -34,12 +58,77 @@ impl LinkModel {
     }
 }
 
-/// Accumulates simulated transfer time per node and globally.
+/// Per-class link models — the `network:` section of a job config.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkPolicy {
+    pub edge: LinkModel,
+    pub lan: LinkModel,
+    pub wan: LinkModel,
+}
+
+impl LinkPolicy {
+    pub fn model(&self, class: LinkClass) -> LinkModel {
+        match class {
+            LinkClass::Edge => self.edge,
+            LinkClass::Lan => self.lan,
+            LinkClass::Wan => self.wan,
+        }
+    }
+}
+
+impl Default for LinkPolicy {
+    fn default() -> Self {
+        LinkPolicy {
+            edge: LinkModel::EDGE,
+            lan: LinkModel::LAN,
+            wan: LinkModel::WAN,
+        }
+    }
+}
+
+/// Pre-summed cost of a route: `secs(bytes) = latency + bytes · secs_per_byte`
+/// (per-hop latencies add; per-hop store-and-forward serialization adds).
+#[derive(Clone, Copy, Debug)]
+struct RouteCost {
+    latency_secs: f64,
+    secs_per_byte: f64,
+}
+
+impl RouteCost {
+    const ZERO: RouteCost = RouteCost {
+        latency_secs: 0.0,
+        secs_per_byte: 0.0,
+    };
+
+    fn from_link(l: LinkModel) -> RouteCost {
+        RouteCost {
+            latency_secs: l.latency_ms / 1e3,
+            secs_per_byte: 1.0 / (l.bandwidth_mbps * 1e6),
+        }
+    }
+
+    fn secs(&self, bytes: u64) -> f64 {
+        self.latency_secs + bytes as f64 * self.secs_per_byte
+    }
+}
+
+/// Accumulates simulated transfer time per node and globally, routing every
+/// transfer over the attached overlay.
 #[derive(Clone, Debug)]
 pub struct NetSim {
+    /// Per-class models for routed hops.
+    policy: LinkPolicy,
+    /// Single-hop model for endpoints outside the overlay (or when no
+    /// overlay is attached — the legacy flat-LAN behaviour).
     default_link: LinkModel,
-    /// Optional per-edge overrides keyed by "src->dst".
+    /// Undirected adjacency with per-edge classes (from the overlay).
+    adj: BTreeMap<String, Vec<(String, LinkClass)>>,
+    /// Optional per-directed-edge overrides keyed by "src->dst".
     overrides: BTreeMap<String, LinkModel>,
+    /// Route costs memoized as src -> dst -> cost (nested so a cache hit is
+    /// two borrowed lookups, no allocation — this sits on the per-delivery
+    /// metering hot path).
+    route_cache: BTreeMap<String, BTreeMap<String, RouteCost>>,
     per_node_secs: BTreeMap<String, f64>,
     total_secs: f64,
     total_bytes: u64,
@@ -48,28 +137,126 @@ pub struct NetSim {
 impl NetSim {
     pub fn new(default_link: LinkModel) -> NetSim {
         NetSim {
+            policy: LinkPolicy::default(),
             default_link,
+            adj: BTreeMap::new(),
             overrides: BTreeMap::new(),
+            route_cache: BTreeMap::new(),
             per_node_secs: BTreeMap::new(),
             total_secs: 0.0,
             total_bytes: 0,
         }
     }
 
+    /// Fabric with per-class link models (off-overlay endpoints fall back
+    /// to the LAN model).
+    pub fn with_policy(policy: LinkPolicy) -> NetSim {
+        let mut n = NetSim::new(policy.lan);
+        n.policy = policy;
+        n
+    }
+
+    /// Route future transfers over this overlay's edges. Classes are
+    /// derived from the endpoint roles ([`Overlay::link_class`]).
+    pub fn attach_overlay(&mut self, overlay: &Overlay) {
+        self.adj.clear();
+        self.route_cache.clear();
+        for (a, b) in &overlay.edges {
+            let class = overlay.link_class(a, b);
+            self.adj
+                .entry(a.clone())
+                .or_default()
+                .push((b.clone(), class));
+            self.adj
+                .entry(b.clone())
+                .or_default()
+                .push((a.clone(), class));
+        }
+        for ns in self.adj.values_mut() {
+            ns.sort();
+            ns.dedup();
+        }
+    }
+
     pub fn set_link(&mut self, src: &str, dst: &str, link: LinkModel) {
         self.overrides.insert(format!("{src}->{dst}"), link);
+        self.route_cache.clear();
     }
 
-    fn link(&self, src: &str, dst: &str) -> LinkModel {
-        self.overrides
-            .get(&format!("{src}->{dst}"))
-            .copied()
-            .unwrap_or(self.default_link)
+    /// Fewest-hop path src→dst over the overlay (deterministic: neighbor
+    /// lists are sorted). Returns the hop classes, or None when either
+    /// endpoint is off-overlay or unreachable.
+    fn bfs(&self, src: &str, dst: &str) -> Option<Vec<LinkClass>> {
+        if !self.adj.contains_key(src) || !self.adj.contains_key(dst) {
+            return None;
+        }
+        let mut prev: BTreeMap<&str, (&str, LinkClass)> = BTreeMap::new();
+        let mut queue: VecDeque<&str> = VecDeque::new();
+        queue.push_back(src);
+        while let Some(node) = queue.pop_front() {
+            if node == dst {
+                let mut hops = Vec::new();
+                let mut cur = dst;
+                while cur != src {
+                    let (p, class) = prev[cur];
+                    hops.push(class);
+                    cur = p;
+                }
+                hops.reverse();
+                return Some(hops);
+            }
+            if let Some(ns) = self.adj.get(node) {
+                for (n, class) in ns {
+                    if n.as_str() != src && !prev.contains_key(n.as_str()) {
+                        prev.insert(n, (node, *class));
+                        queue.push_back(n);
+                    }
+                }
+            }
+        }
+        None
     }
 
-    /// Record a transfer; returns simulated seconds it took.
+    fn route_cost(&mut self, src: &str, dst: &str) -> RouteCost {
+        if src == dst {
+            return RouteCost::ZERO;
+        }
+        if !self.overrides.is_empty() {
+            if let Some(l) = self.overrides.get(&format!("{src}->{dst}")) {
+                return RouteCost::from_link(*l);
+            }
+        }
+        if let Some(c) = self.route_cache.get(src).and_then(|m| m.get(dst)) {
+            return *c;
+        }
+        let cost = match self.bfs(src, dst) {
+            Some(hops) => {
+                let mut c = RouteCost::ZERO;
+                for class in hops {
+                    let h = RouteCost::from_link(self.policy.model(class));
+                    c.latency_secs += h.latency_secs;
+                    c.secs_per_byte += h.secs_per_byte;
+                }
+                c
+            }
+            None => RouteCost::from_link(self.default_link),
+        };
+        self.route_cache
+            .entry(src.to_string())
+            .or_default()
+            .insert(dst.to_string(), cost);
+        cost
+    }
+
+    /// Price a transfer without recording it (pure: used for critical-path
+    /// makespan components that are metered elsewhere).
+    pub fn price(&mut self, src: &str, dst: &str, bytes: u64) -> f64 {
+        self.route_cost(src, dst).secs(bytes)
+    }
+
+    /// Record a transfer; returns simulated seconds it took over the route.
     pub fn transfer(&mut self, src: &str, dst: &str, bytes: u64) -> f64 {
-        let secs = self.link(src, dst).transfer_secs(bytes);
+        let secs = self.price(src, dst, bytes);
         *self.per_node_secs.entry(src.to_string()).or_insert(0.0) += secs;
         *self.per_node_secs.entry(dst.to_string()).or_insert(0.0) += secs;
         self.total_secs += secs;
@@ -99,6 +286,7 @@ impl Default for NetSim {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::topology::graph::Overlay;
 
     #[test]
     fn transfer_time_formula() {
@@ -132,5 +320,69 @@ mod tests {
     #[test]
     fn edge_slower_than_lan() {
         assert!(LinkModel::EDGE.transfer_secs(1 << 20) > LinkModel::LAN.transfer_secs(1 << 20));
+    }
+
+    #[test]
+    fn routes_over_overlay_edge_classes() {
+        let mut net = NetSim::with_policy(LinkPolicy::default());
+        net.attach_overlay(&Overlay::client_server(4, 1));
+        let bytes = 1 << 20;
+        let up = net.price("client_0", "worker_0", bytes);
+        // Client uplink is an EDGE hop, exactly.
+        assert!((up - LinkModel::EDGE.transfer_secs(bytes)).abs() < 1e-12);
+        // Self-transfer is free.
+        assert_eq!(net.price("worker_0", "worker_0", bytes), 0.0);
+    }
+
+    #[test]
+    fn multi_hop_route_sums_hops() {
+        let mut net = NetSim::with_policy(LinkPolicy::default());
+        net.attach_overlay(&Overlay::hierarchical(6, 2));
+        let bytes = 1 << 20;
+        // root -> client crosses the LAN tier then the EDGE uplink.
+        let dl = net.price("root_worker", "client_0", bytes);
+        let expect = LinkModel::LAN.transfer_secs(bytes) + LinkModel::EDGE.transfer_secs(bytes);
+        assert!((dl - expect).abs() < 1e-12);
+        // Direct leaf -> root stays a single LAN hop.
+        let up = net.price("cluster0_worker", "root_worker", bytes);
+        assert!((up - LinkModel::LAN.transfer_secs(bytes)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn off_overlay_endpoints_fall_back_to_default() {
+        let mut net = NetSim::with_policy(LinkPolicy::default());
+        net.attach_overlay(&Overlay::client_server(2, 1));
+        let bytes = 1 << 20;
+        let secs = net.price("logic_controller", "client_0", bytes);
+        assert!((secs - LinkModel::LAN.transfer_secs(bytes)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_override_changes_class_pricing() {
+        let slow_edge = LinkModel {
+            latency_ms: 500.0,
+            bandwidth_mbps: 0.5,
+        };
+        let mut net = NetSim::with_policy(LinkPolicy {
+            edge: slow_edge,
+            ..LinkPolicy::default()
+        });
+        net.attach_overlay(&Overlay::client_server(2, 1));
+        let bytes = 1 << 20;
+        let up = net.price("client_0", "worker_0", bytes);
+        assert!((up - slow_edge.transfer_secs(bytes)).abs() < 1e-12);
+        assert!(up > LinkModel::EDGE.transfer_secs(bytes));
+    }
+
+    #[test]
+    fn route_cache_is_consistent() {
+        let mut net = NetSim::with_policy(LinkPolicy::default());
+        net.attach_overlay(&Overlay::ring(6));
+        let a = net.price("peer_0", "peer_3", 1000);
+        let b = net.price("peer_0", "peer_3", 1000);
+        assert_eq!(a, b);
+        // Ring distance 3 => three EDGE hops.
+        let expect = 3.0 * LinkModel::EDGE.transfer_secs(1000);
+        assert!((a - expect).abs() < 1e-12);
     }
 }

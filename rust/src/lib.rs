@@ -36,7 +36,9 @@ pub mod util;
 /// Convenient re-exports for examples and binaries.
 pub mod prelude {
     pub use crate::config::job::JobConfig;
+    pub use crate::controller::sync::FaultPlan;
     pub use crate::data::dataset::DatasetSpec;
+    pub use crate::kvstore::netsim::{LinkModel, LinkPolicy};
     pub use crate::metrics::report::RunReport;
     pub use crate::orchestrator::Orchestrator;
     pub use crate::runtime::pjrt::Runtime;

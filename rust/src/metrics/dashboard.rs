@@ -25,12 +25,13 @@ pub fn sparkline(xs: &[f64]) -> String {
 /// One-line summary of a run.
 pub fn run_line(r: &RunReport) -> String {
     format!(
-        "{:<22} acc {:<5.3} {} | loss {:<6.3} | {:>7.1}s | {:>8} KiB",
+        "{:<22} acc {:<5.3} {} | loss {:<6.3} | {:>7.1}s | sim {:>7.1}s | {:>8} KiB",
         r.label,
         r.final_accuracy(),
         sparkline(&r.accuracy_series()),
         r.final_loss(),
         r.total_wall_secs(),
+        r.total_sim_round_secs(),
         r.total_net_bytes() / 1024,
     )
 }
@@ -39,8 +40,8 @@ pub fn run_line(r: &RunReport) -> String {
 pub fn comparison(title: &str, runs: &[RunReport]) -> String {
     let mut out = format!("== {title} ==\n");
     out.push_str(&format!(
-        "{:<22} {:>6} {:>6} {:>9} {:>9} {:>10} {:>8}\n",
-        "run", "acc", "loss", "time(s)", "cpu(%)", "mem(MiB)", "net(KiB)"
+        "{:<22} {:>6} {:>6} {:>9} {:>9} {:>9} {:>10} {:>8}\n",
+        "run", "acc", "loss", "time(s)", "sim(s)", "cpu(%)", "mem(MiB)", "net(KiB)"
     ));
     for r in runs {
         let cpu = crate::util::stats::mean(
@@ -48,11 +49,12 @@ pub fn comparison(title: &str, runs: &[RunReport]) -> String {
         );
         let mem = r.rounds.last().map(|m| m.rss_mib).unwrap_or(0.0);
         out.push_str(&format!(
-            "{:<22} {:>6.3} {:>6.3} {:>9.1} {:>9.1} {:>10.1} {:>8}\n",
+            "{:<22} {:>6.3} {:>6.3} {:>9.1} {:>9.1} {:>9.1} {:>10.1} {:>8}\n",
             r.label,
             r.final_accuracy(),
             r.final_loss(),
             r.total_wall_secs(),
+            r.total_sim_round_secs(),
             cpu,
             mem,
             r.total_net_bytes() / 1024

@@ -24,8 +24,13 @@ pub struct RoundMetrics {
     pub rss_mib: f64,
     /// Bytes through the KV store this round.
     pub net_bytes: u64,
-    /// Simulated on-wire seconds this round (NetSim).
+    /// Simulated on-wire seconds this round (NetSim; sum over all
+    /// deliveries, each priced over its overlay route).
     pub sim_net_secs: f64,
+    /// Virtual-clock makespan of the round: the critical path through the
+    /// parallel client phase (max download + train + upload) plus serial
+    /// aggregation / consensus / gossip hops.
+    pub sim_round_secs: f64,
     /// Global-model parameter hash (provenance / reproducibility).
     pub model_hash: String,
 }
@@ -67,6 +72,17 @@ impl RunReport {
         self.rounds.iter().map(|r| r.net_bytes).sum()
     }
 
+    /// Total simulated on-wire seconds (per-delivery, route-priced).
+    pub fn total_sim_net_secs(&self) -> f64 {
+        self.rounds.iter().map(|r| r.sim_net_secs).sum()
+    }
+
+    /// Total virtual-clock makespan (what the run "takes" on the simulated
+    /// deployment, with clients running in parallel).
+    pub fn total_sim_round_secs(&self) -> f64 {
+        self.rounds.iter().map(|r| r.sim_round_secs).sum()
+    }
+
     pub fn accuracy_series(&self) -> Vec<f64> {
         self.rounds.iter().map(|r| r.test_accuracy).collect()
     }
@@ -78,11 +94,11 @@ impl RunReport {
     /// CSV export (one row per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,test_accuracy,test_loss,train_loss,wall_secs,cpu_pct,rss_mib,net_bytes,sim_net_secs,model_hash\n",
+            "round,test_accuracy,test_loss,train_loss,wall_secs,cpu_pct,rss_mib,net_bytes,sim_net_secs,sim_round_secs,model_hash\n",
         );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{:.4},{:.1},{:.1},{},{:.4},{}\n",
+                "{},{:.6},{:.6},{:.6},{:.4},{:.1},{:.1},{},{:.4},{:.4},{}\n",
                 r.round,
                 r.test_accuracy,
                 r.test_loss,
@@ -92,6 +108,7 @@ impl RunReport {
                 r.rss_mib,
                 r.net_bytes,
                 r.sim_net_secs,
+                r.sim_round_secs,
                 r.model_hash
             ));
         }
@@ -123,6 +140,7 @@ impl RunReport {
                                 ("rss_mib", Json::from(r.rss_mib)),
                                 ("net_bytes", Json::from(r.net_bytes as usize)),
                                 ("sim_net_secs", Json::from(r.sim_net_secs)),
+                                ("sim_round_secs", Json::from(r.sim_round_secs)),
                                 ("model_hash", Json::from(r.model_hash.as_str())),
                             ])
                         })
@@ -163,6 +181,8 @@ mod tests {
                     test_loss: 1.6,
                     net_bytes: 100,
                     wall_secs: 1.0,
+                    sim_net_secs: 2.0,
+                    sim_round_secs: 0.5,
                     ..Default::default()
                 },
                 RoundMetrics {
@@ -171,6 +191,8 @@ mod tests {
                     test_loss: 1.2,
                     net_bytes: 150,
                     wall_secs: 2.0,
+                    sim_net_secs: 3.0,
+                    sim_round_secs: 0.75,
                     ..Default::default()
                 },
             ],
@@ -184,6 +206,8 @@ mod tests {
         assert_eq!(r.best_accuracy(), 0.55);
         assert_eq!(r.total_net_bytes(), 250);
         assert!((r.total_wall_secs() - 3.0).abs() < 1e-12);
+        assert!((r.total_sim_net_secs() - 5.0).abs() < 1e-12);
+        assert!((r.total_sim_round_secs() - 1.25).abs() < 1e-12);
         assert_eq!(r.accuracy_series(), vec![0.4, 0.55]);
     }
 
@@ -201,7 +225,12 @@ mod tests {
         let j = sample().to_json().to_string();
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.get("strategy").unwrap().as_str(), Some("fedavg"));
-        assert_eq!(parsed.get("rounds").unwrap().as_arr().unwrap().len(), 2);
+        let rounds = parsed.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 2);
+        assert_eq!(
+            rounds[0].get("sim_round_secs").and_then(Json::as_f64),
+            Some(0.5)
+        );
     }
 
     #[test]

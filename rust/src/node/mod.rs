@@ -27,6 +27,11 @@ pub struct ClientNode {
     /// Decentralized mode: the peer's own current model (shared handle —
     /// gossip merges hand the same allocation to the KV store and back).
     pub local_model: Option<Arc<[f32]>>,
+    /// Simulated compute-speed multiplier (virtual train time per batch
+    /// step = `SIM_STEP_SECS × speed_factor`). 1.0 = the baseline device;
+    /// the scaffold derives larger factors deterministically from the seed
+    /// when the job's `heterogeneity` knob is set.
+    pub speed_factor: f64,
 }
 
 impl ClientNode {
@@ -65,7 +70,15 @@ impl ClientNode {
             batches,
             state: ClientState::default(),
             local_model: None,
+            speed_factor: 1.0,
         })
+    }
+
+    /// Simulated seconds this client's local training takes in one round.
+    pub fn sim_train_secs(&self, local_epochs: usize) -> f64 {
+        (local_epochs * self.batches.len()) as f64
+            * crate::kvstore::netsim::SIM_STEP_SECS
+            * self.speed_factor
     }
 }
 

@@ -23,6 +23,20 @@
 //! Consequently `parallelism: N` produces bitwise-identical model hashes
 //! and byte counts to `parallelism: 1` (asserted by
 //! `rust/tests/parallel_engine.rs`).
+//!
+//! ## The virtual clock
+//!
+//! Every delivery is priced over the overlay route between its real
+//! endpoints (`NetSim` + per-edge-class link models), and every client's
+//! round is assigned a simulated `download + train + upload` finish time
+//! (train time scales with the client's deterministic `speed_factor`).
+//! Each flow folds these into the round's **virtual makespan**
+//! (`sim_round_secs`): the parallel client phase contributes its maximum
+//! finish time, aggregation / gossip hops add on the critical path. The
+//! clock is purely observational — results are bitwise-identical with it
+//! on or off — unless `round_deadline_secs` is set, in which case clients
+//! that overrun the deadline are dropped through the Logic Controller's
+//! barrier timeout arm exactly like fault-plan stragglers.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -45,35 +59,41 @@ use crate::util::hash;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-const KV: &str = "kv_store";
 const LC: &str = "logic_controller";
 
-/// Publish with NetSim metering (sender -> broker).
+/// Publish to the KV broker (byte accounting only — a message costs wire
+/// *time* when it is delivered, priced over the sender→reader route).
 fn publish(state: &mut JobState, topic: &str, sender: &str, round: u64, payload: Payload) {
-    let bytes = payload.wire_bytes();
     state.kv.publish(topic, sender, round, payload);
-    state.net.transfer(sender, KV, bytes);
 }
 
-/// Fetch-latest with NetSim metering (broker -> reader).
-fn fetch_latest(state: &mut JobState, topic: &str, reader: &str) -> Result<crate::kvstore::store::Message> {
+/// Deliver the latest message on `topic` to `reader`, pricing the overlay
+/// route from the physical source `src`. Returns (message, virtual secs).
+fn deliver_latest(
+    state: &mut JobState,
+    topic: &str,
+    src: &str,
+    reader: &str,
+) -> Result<(crate::kvstore::store::Message, f64)> {
     let msg = state.kv.fetch_latest(topic, reader)?;
-    state.net.transfer(KV, reader, msg.payload.wire_bytes());
-    Ok(msg)
+    let secs = state.net.transfer(src, reader, msg.payload.wire_bytes());
+    Ok((msg, secs))
 }
 
-/// Fetch-round with NetSim metering.
-fn fetch_round(
+/// Deliver all of a round's messages on `topic` to `reader`, each priced
+/// over the route from its sender. Returns (messages, summed virtual secs).
+fn deliver_round(
     state: &mut JobState,
     topic: &str,
     round: u64,
     reader: &str,
-) -> Vec<crate::kvstore::store::Message> {
+) -> (Vec<crate::kvstore::store::Message>, f64) {
     let msgs = state.kv.fetch_round(topic, round, reader);
+    let mut secs = 0.0;
     for m in &msgs {
-        state.net.transfer(KV, reader, m.payload.wire_bytes());
+        secs += state.net.transfer(&m.sender, reader, m.payload.wire_bytes());
     }
-    msgs
+    (msgs, secs)
 }
 
 /// Round-metrics bookkeeping around a flow body.
@@ -85,7 +105,10 @@ struct RoundScope {
 }
 
 impl RoundScope {
-    fn begin(state: &JobState) -> RoundScope {
+    fn begin(state: &mut JobState) -> RoundScope {
+        // The virtual-clock record is per round: drop stale finish times of
+        // clients that were not sampled (or whose cluster faulted) earlier.
+        state.client_virtual_secs.clear();
         RoundScope {
             t0: Instant::now(),
             res0: resources::snapshot(),
@@ -94,6 +117,7 @@ impl RoundScope {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn finish(
         self,
         state: &JobState,
@@ -102,6 +126,7 @@ impl RoundScope {
         eval_model: &[f32],
         test_loss: f64,
         test_accuracy: f64,
+        sim_round_secs: f64,
     ) -> RoundMetrics {
         let wall = self.t0.elapsed().as_secs_f64();
         let res1 = resources::snapshot();
@@ -115,6 +140,7 @@ impl RoundScope {
             rss_mib: res1.rss_mib,
             net_bytes: state.kv.total_bytes() - self.bytes0,
             sim_net_secs: state.net.total_secs() - self.net0,
+            sim_round_secs,
             model_hash: hash::short_hash(eval_model),
         }
     }
@@ -213,13 +239,28 @@ fn train_tasks(
 
 /// Local training for a set of clients, each starting from `start_of(name)`.
 /// Returns updates keyed by client (BTreeMap => deterministic order).
-/// `upload_topic_of` decides which KV topic each client uploads to (shared
-/// topic for star flows; per-cluster for hierarchical; per-peer for gossip).
+///
+/// * `download_of` names the KV topic each client downloads its starting
+///   model from and the physical node serving it (None = the model is
+///   already resident, e.g. a decentralized peer resuming its own local
+///   model — nothing is fetched or metered).
+/// * `upload_dst_of` names the node a client's upload travels to (prices
+///   the upload leg of its virtual finish time; None = local hand-off).
+/// * `upload_topic_of` decides which KV topic each client uploads to
+///   (shared topic for star flows; per-cluster for hierarchical; per-peer
+///   for gossip).
+///
+/// Clients whose virtual `download + train + upload` time exceeds
+/// `round_deadline_secs` (when set) are marked late: their upload never
+/// lands, they are excluded from the returned updates, and the closing
+/// barrier resolves through the timeout arm without them.
 fn train_clients_to(
     state: &mut JobState,
     round: u64,
     names: &[String],
     start_of: impl Fn(&JobState, &str) -> Arc<[f32]>,
+    download_of: impl Fn(&JobState, &str) -> Option<(String, String)>,
+    upload_dst_of: impl Fn(&JobState, &str) -> Option<String>,
     upload_topic_of: impl Fn(&str) -> String,
 ) -> Result<BTreeMap<String, ClientUpdate>> {
     state.controller.set_phase(ProcessPhase::LocalLearning);
@@ -237,15 +278,29 @@ fn train_clients_to(
     let par = state.parallelism();
 
     // Phase A (serial, deterministic client order): resolve starting models,
-    // meter the phase-4 downloads, flip stages, derive RNG streams.
+    // meter the phase-4 downloads over their routes, accumulate each
+    // client's virtual download + train time, flip stages, derive RNG
+    // streams.
     let mut starts = Vec::with_capacity(names.len());
     let mut rngs = Vec::with_capacity(names.len());
+    let mut pre_secs = Vec::with_capacity(names.len());
     for name in names {
         let start = start_of(state, name);
-        let _ = fetch_latest(state, "global_model", name)?;
-        if extra_state.is_some() {
-            let _ = fetch_latest(state, "strategy_state", name)?;
+        let mut dl_secs = 0.0;
+        if let Some((topic, src)) = download_of(state, name) {
+            let (_msg, secs) = deliver_latest(state, &topic, &src, name)?;
+            dl_secs += secs;
+            if extra_state.is_some() {
+                let (_msg, secs) = deliver_latest(state, "strategy_state", &src, name)?;
+                dl_secs += secs;
+            }
         }
+        let train_secs = state
+            .clients
+            .get(name.as_str())
+            .map(|n| n.sim_train_secs(epochs))
+            .unwrap_or(0.0);
+        pre_secs.push(dl_secs + train_secs);
         state.controller.update_stage(name, NodeStage::Busy)?;
         rngs.push(state.round_rng(round).derive("client", name_index(name)));
         starts.push(start);
@@ -268,55 +323,129 @@ fn train_clients_to(
     };
 
     // Phase C (serial, deterministic client order): phase-1 uploads, traffic
-    // metering and stage transitions — committed in client order no matter
-    // which worker finished first. Publishing a model is an Arc refcount
-    // bump; the floats trained in phase B are never copied again.
+    // metering, virtual-clock accounting and stage transitions — committed
+    // in client order no matter which worker finished first. Publishing a
+    // model is an Arc refcount bump; the floats trained in phase B are
+    // never copied again.
+    let deadline = state.job.round_deadline_secs;
     let mut updates = BTreeMap::new();
-    for (name, result) in names.iter().zip(results) {
+    let mut phase_secs = 0f64;
+    for ((name, result), pre) in names.iter().zip(results).zip(pre_secs) {
         let update = result?;
+        let upload_dst = upload_dst_of(state, name);
+        let ul_secs = match &upload_dst {
+            Some(dst) => state.net.price(name, dst, update.wire_bytes()),
+            None => 0.0,
+        };
+        let finish = pre + ul_secs;
+        state.client_virtual_secs.insert(name.clone(), finish);
+        if deadline.map_or(false, |d| finish > d) {
+            // Straggler: its upload never lands. The barrier below resolves
+            // through the timeout arm without it — Algorithm 1's fault path,
+            // emergent from the virtual clock rather than scripted.
+            state.controller.mark_late(name, round);
+            phase_secs = phase_secs.max(deadline.unwrap_or(0.0));
+            continue;
+        }
+        phase_secs = phase_secs.max(finish);
         let topic = upload_topic_of(name);
         let payload = Payload::Params(update.params.clone());
         publish(state, &topic, name, round, payload);
         if let Some(extra) = &update.extra {
             let payload = Payload::Params(extra.clone());
+            let extra_bytes = payload.wire_bytes();
             publish(state, "client_extra", name, round, payload);
+            // Control-variate uploads ride the same uplink but have no
+            // KV reader (the strategy consumes them server-side from the
+            // returned updates), so their wire time is metered here.
+            if let Some(dst) = &upload_dst {
+                state.net.transfer(name, dst, extra_bytes);
+            }
         }
         state.controller.update_stage(name, NodeStage::Done)?;
         updates.insert(name.clone(), update);
     }
+    state.last_phase_secs = phase_secs;
 
     state.controller.emit("Clients are waiting for next round.");
-    state.controller.barrier(names, NodeStage::Done, round, 1)?;
+    // With a deadline configured an all-late phase is a legal outcome (the
+    // caller decides whether an empty quorum is fatal — a hierarchical flow
+    // drops the cluster, a star flow aborts the round); without one, a live
+    // client that never reached Done is a real failure.
+    let min_quorum = usize::from(deadline.is_none());
+    state
+        .controller
+        .barrier(names, NodeStage::Done, round, min_quorum)?;
     Ok(updates)
 }
 
-/// `train_clients_to` with the shared "client_params" upload topic (the
-/// star-topology flows).
+/// Flow-level guard for star flows: an empty update set after a training
+/// phase means every sampled client overran the round deadline.
+fn require_quorum(
+    updates: &BTreeMap<String, ClientUpdate>,
+    state: &JobState,
+    round: u64,
+) -> Result<()> {
+    if updates.is_empty() {
+        bail!(
+            "round {round}: every client overran round_deadline_secs={:?} — \
+             raise the deadline or lower heterogeneity",
+            state.job.round_deadline_secs
+        );
+    }
+    Ok(())
+}
+
+/// `train_clients_to` for the star-topology flows: the global model is
+/// served by the primary worker, uploads travel back to it, and everyone
+/// shares the "client_params" topic.
 fn train_clients(
     state: &mut JobState,
     round: u64,
     names: &[String],
     start_of: impl Fn(&JobState, &str) -> Arc<[f32]>,
 ) -> Result<BTreeMap<String, ClientUpdate>> {
-    train_clients_to(state, round, names, start_of, |_| "client_params".to_string())
+    let primary = state.primary_worker();
+    let dl_src = primary.clone();
+    train_clients_to(
+        state,
+        round,
+        names,
+        start_of,
+        move |_, _| Some(("global_model".to_string(), dl_src.clone())),
+        move |_, _| Some(primary.clone()),
+        |_| "client_params".to_string(),
+    )
 }
 
-fn name_index(name: &str) -> u64 {
+/// Stable per-name stream index: numeric `_N` suffixes map to N (the
+/// historical behaviour every seeded run depends on); anything else derives
+/// from a SHA-256 of the full name, so distinct names always get distinct
+/// RNG streams. (The old byte-sum fallback collided for anagram names —
+/// e.g. hierarchical workers `cluster12_worker` vs `cluster21_worker`.)
+pub(crate) fn name_index(name: &str) -> u64 {
     name.rsplit('_')
         .next()
         .and_then(|s| s.parse::<u64>().ok())
-        .unwrap_or_else(|| name.bytes().map(|b| b as u64).sum())
+        .unwrap_or_else(|| {
+            let mut h = hash::Sha256::new();
+            h.update(name.as_bytes());
+            let digest = h.finalize();
+            u64::from_be_bytes(digest[..8].try_into().expect("sha256 digest >= 8 bytes"))
+        })
 }
 
-/// Worker-side aggregation + §2.5 consensus pipeline. Returns the winning
-/// proposal's parameters and the per-worker proposals.
-fn aggregate_and_consensus(
+/// Consensus phases 1+2: every alive worker pulls the round's client
+/// updates, aggregates, and publishes a hash vote. Each worker aggregates
+/// with its *own* derived stream `round_rng(round).derive("agg", worker)`,
+/// so a proposal is invariant to which other workers are alive (a shared
+/// mutable RNG would let a dropped worker perturb every later proposal and
+/// make the winning model depend on the fault plan).
+fn worker_proposals(
     state: &mut JobState,
     round: u64,
     updates: &[ClientUpdate],
-    rng: &mut Rng,
-) -> Result<Vec<f32>> {
-    state.controller.set_phase(ProcessPhase::ModelAggregation);
+) -> Result<Vec<Proposal>> {
     let worker_names = state.overlay.workers();
     let alive = state.controller.alive(&worker_names, round);
     if alive.is_empty() {
@@ -331,7 +460,7 @@ fn aggregate_and_consensus(
         // Each worker pulls the full client-parameter set (phase 1 of the
         // consensus pipeline: local parameter sharing to *all* workers).
         // Zero-copy: every message hands back the client's own allocation.
-        let msgs = fetch_round(state, "client_params", round, wname);
+        let (msgs, _secs) = deliver_round(state, "client_params", round, wname);
         if msgs.len() != updates.len() {
             // KV store is the transport; the counts must agree.
             bail!(
@@ -340,9 +469,10 @@ fn aggregate_and_consensus(
                 updates.len()
             );
         }
+        let mut agg_rng = state.round_rng(round).derive("agg", name_index(wname));
         let agg = state
             .strategy
-            .aggregate(updates, &state.global, plan, rng)?;
+            .aggregate(updates, &state.global, plan, &mut agg_rng)?;
         let agg = {
             let worker = state
                 .workers
@@ -358,10 +488,30 @@ fn aggregate_and_consensus(
         state.controller.update_stage(wname, NodeStage::Done)?;
         proposals.push(prop);
     }
+    Ok(proposals)
+}
+
+/// Worker-side aggregation + §2.5 consensus pipeline. Returns the winning
+/// proposal's parameters and the consensus phase's virtual-clock cost (the
+/// slowest worker's vote-exchange time; client uploads were already paid in
+/// the training phase).
+fn aggregate_and_consensus(
+    state: &mut JobState,
+    round: u64,
+    updates: &[ClientUpdate],
+    rng: &mut Rng,
+) -> Result<(Vec<f32>, f64)> {
+    state.controller.set_phase(ProcessPhase::ModelAggregation);
+    let proposals = worker_proposals(state, round, updates)?;
+    let alive: Vec<String> = proposals.iter().map(|p| p.worker.clone()).collect();
+
     state.controller.emit("Workers busy in model aggregation.");
-    // Every worker reads every other worker's vote (phase 2 traffic).
+    // Every worker reads every other worker's vote (phase 2 traffic). The
+    // workers vote in parallel: the phase costs the slowest exchange.
+    let mut vote_secs = 0f64;
     for wname in &alive {
-        let _ = fetch_round(state, "agg_votes", round, wname);
+        let (_msgs, secs) = deliver_round(state, "agg_votes", round, wname);
+        vote_secs = vote_secs.max(secs);
     }
     state
         .controller
@@ -439,7 +589,10 @@ fn aggregate_and_consensus(
         chain.seal_block()?;
     }
 
-    Ok(proposals.into_iter().nth(winner_idx).unwrap().params)
+    Ok((
+        proposals.into_iter().nth(winner_idx).unwrap().params,
+        vote_secs,
+    ))
 }
 
 /// Standard client-server round (Fig 8/9/10): train -> aggregate ->
@@ -458,10 +611,12 @@ pub fn standard_round(state: &mut JobState, round: u64) -> Result<RoundMetrics> 
         bail!("round {round}: no live clients");
     }
     let updates_map = train_clients(state, round, &sampled, |st, _| st.global.clone())?;
+    require_quorum(&updates_map, state, round)?;
     let updates: Vec<ClientUpdate> = updates_map.into_values().collect();
     let train_loss = mean_loss(&updates);
+    let client_phase = state.last_phase_secs;
 
-    let winner = aggregate_and_consensus(state, round, &updates, &mut rng)?;
+    let (winner, agg_secs) = aggregate_and_consensus(state, round, &updates, &mut rng)?;
     let global_before = state.global.clone();
     state.global = state
         .strategy
@@ -470,16 +625,30 @@ pub fn standard_round(state: &mut JobState, round: u64) -> Result<RoundMetrics> 
 
     let (test_loss, test_accuracy) = state.evaluate(&state.global)?;
     let global = state.global.clone();
-    Ok(scope.finish(state, round, train_loss, &global, test_loss, test_accuracy))
+    Ok(scope.finish(
+        state,
+        round,
+        train_loss,
+        &global,
+        test_loss,
+        test_accuracy,
+        client_phase + agg_secs,
+    ))
 }
 
 /// Hierarchical round (Fig 11): leaf-cluster aggregation, then root merge.
 pub fn hierarchical_round(state: &mut JobState, round: u64) -> Result<RoundMetrics> {
     let scope = RoundScope::begin(state);
-    let mut rng = state.round_rng(round);
 
     let payload = Payload::Params(state.global.clone());
     publish(state, "global_model", LC, round, payload);
+
+    // The root aggregator comes from the overlay (don't hardcode its name —
+    // off-overlay endpoints silently price on the flat fallback link).
+    let root = state
+        .overlay
+        .root_worker()
+        .ok_or_else(|| anyhow!("hierarchical flow: overlay has no root cluster"))?;
 
     // Leaf clusters (skip the root pseudo-cluster, which has no clients).
     let leaf_clusters: Vec<(String, Vec<String>, String)> = state
@@ -492,7 +661,9 @@ pub fn hierarchical_round(state: &mut JobState, round: u64) -> Result<RoundMetri
 
     let plan = state.agg_plan();
     let mut cluster_aggs: Vec<ClientUpdate> = Vec::new();
-    let mut losses = Vec::new();
+    // Clusters run in parallel: the client phase costs the slowest cluster's
+    // critical path (its clients' max finish + its uplink to the root).
+    let mut clusters_phase = 0f64;
     for (cname, members, leaf_worker) in &leaf_clusters {
         let alive: Vec<String> = state.controller.alive(members, round);
         if alive.is_empty() {
@@ -504,30 +675,50 @@ pub fn hierarchical_round(state: &mut JobState, round: u64) -> Result<RoundMetri
             round,
             &alive,
             |st, _| st.global.clone(),
+            // The global broadcast physically travels root -> leaf -> client.
+            {
+                let root = root.clone();
+                move |_: &JobState, _: &str| Some(("global_model".to_string(), root.clone()))
+            },
+            {
+                let lw = leaf_worker.clone();
+                move |_, _| Some(lw.clone())
+            },
             |_| cluster_topic.clone(),
         )?;
         let updates: Vec<ClientUpdate> = updates_map.into_values().collect();
-        losses.push(mean_loss(&updates));
+        if updates.is_empty() {
+            // Every member overran the deadline: the barrier still waited
+            // for them, so the cluster costs the full phase on the clock.
+            clusters_phase = clusters_phase.max(state.last_phase_secs);
+            continue;
+        }
+        let closs = mean_loss(&updates);
         // Leaf worker pulls its cluster members' uploads.
-        let _ = fetch_round(state, &cluster_topic, round, leaf_worker);
+        let _ = deliver_round(state, &cluster_topic, round, leaf_worker);
 
-        // Leaf aggregation.
+        // Leaf aggregation (per-leaf derived stream — proposals must not
+        // couple across clusters through a shared RNG).
+        let mut agg_rng = state.round_rng(round).derive("agg", name_index(leaf_worker));
         let agg: Arc<[f32]> = state
             .strategy
-            .aggregate(&updates, &state.global, plan, &mut rng)?
+            .aggregate(&updates, &state.global, plan, &mut agg_rng)?
             .into();
         let weight: f64 = updates.iter().map(|u| u.weight).sum();
         // Leaf worker ships its cluster model upstream (extra hop = the
         // hierarchical bandwidth/CPU overhead of Fig 11); the payload shares
         // the aggregate's allocation.
         let payload = Payload::Params(agg.clone());
+        let up_bytes = payload.wire_bytes();
         publish(state, "cluster_agg", leaf_worker, round, payload);
+        let up_secs = state.net.price(leaf_worker, &root, up_bytes);
+        clusters_phase = clusters_phase.max(state.last_phase_secs + up_secs);
         cluster_aggs.push(ClientUpdate {
             client: cname.clone(),
             params: agg,
             weight,
             extra: None,
-            mean_loss: *losses.last().unwrap() as f32,
+            mean_loss: closs as f32,
         });
     }
     if cluster_aggs.is_empty() {
@@ -535,8 +726,7 @@ pub fn hierarchical_round(state: &mut JobState, round: u64) -> Result<RoundMetri
     }
 
     // Root merge.
-    let root = "root_worker".to_string();
-    let _ = fetch_round(state, "cluster_agg", round, &root);
+    let _ = deliver_round(state, "cluster_agg", round, &root);
     let refs: Vec<&[f32]> = cluster_aggs.iter().map(|u| u.params.as_ref()).collect();
     let weights: Vec<f64> = cluster_aggs.iter().map(|u| u.weight).collect();
     let merged = crate::aggregate::mean::weighted_mean_plan(&refs, &weights, plan)?;
@@ -546,10 +736,20 @@ pub fn hierarchical_round(state: &mut JobState, round: u64) -> Result<RoundMetri
         .post_round(&cluster_aggs, &global_before, merged)
         .into();
 
-    let train_loss = crate::util::stats::mean(&losses);
+    // Example-weighted over clusters (each cluster's loss is already
+    // example-weighted over its members, and carries its total weight).
+    let train_loss = mean_loss(&cluster_aggs);
     let (test_loss, test_accuracy) = state.evaluate(&state.global)?;
     let global = state.global.clone();
-    Ok(scope.finish(state, round, train_loss, &global, test_loss, test_accuracy))
+    Ok(scope.finish(
+        state,
+        round,
+        train_loss,
+        &global,
+        test_loss,
+        test_accuracy,
+        clusters_phase,
+    ))
 }
 
 /// FL+HC round (Briggs et al.): FedAvg until the clustering round, then one
@@ -563,17 +763,19 @@ pub fn clustered_round(state: &mut JobState, round: u64) -> Result<RoundMetrics>
         _ => bail!("clustered flow requires the flhc strategy"),
     };
 
-    let payload = Payload::Params(state.global.clone());
-    publish(state, "global_model", LC, round, payload);
-
     let plan = state.agg_plan();
     if state.clusters.is_none() {
         // Pre-clustering: behave like FedAvg, but watch for the clustering
         // round.
+        let payload = Payload::Params(state.global.clone());
+        publish(state, "global_model", LC, round, payload);
+
         let sampled = state.sample_clients(round);
         let updates_map = train_clients(state, round, &sampled, |st, _| st.global.clone())?;
+        require_quorum(&updates_map, state, round)?;
         let updates: Vec<ClientUpdate> = updates_map.into_values().collect();
         let train_loss = mean_loss(&updates);
+        let mut sim_round_secs = state.last_phase_secs;
 
         if round >= cluster_round {
             // Cluster clients by their local models (the paper's
@@ -615,7 +817,9 @@ pub fn clustered_round(state: &mut JobState, round: u64) -> Result<RoundMetrics>
             state.clusters = Some(assignment);
             state.cluster_models = models;
         } else {
-            let winner = aggregate_and_consensus(state, round, &updates, &mut rng)?;
+            let (winner, agg_secs) =
+                aggregate_and_consensus(state, round, &updates, &mut rng)?;
+            sim_round_secs += agg_secs;
             let global_before = state.global.clone();
             state.global = state
                 .strategy
@@ -625,19 +829,59 @@ pub fn clustered_round(state: &mut JobState, round: u64) -> Result<RoundMetrics>
 
         let (test_loss, test_accuracy) = clustered_eval(state)?;
         let global = state.global.clone();
-        return Ok(scope.finish(state, round, train_loss, &global, test_loss, test_accuracy));
+        return Ok(scope.finish(
+            state,
+            round,
+            train_loss,
+            &global,
+            test_loss,
+            test_accuracy,
+            sim_round_secs,
+        ));
     }
 
-    // Post-clustering: per-cluster FedAvg.
+    // Post-clustering: per-cluster FedAvg. Each cluster model is published
+    // to its own topic and every client downloads the model it actually
+    // trains from (metering the global broadcast here would be phantom
+    // traffic — no client reads it).
+    let primary = state.primary_worker();
+    for (cid, model) in state.cluster_models.clone() {
+        let payload = Payload::Params(model);
+        publish(state, &format!("cluster_model/{cid}"), &primary, round, payload);
+    }
+
     let assignment = state.clusters.clone().unwrap();
     let sampled = state.sample_clients(round);
-    let updates_map = train_clients(state, round, &sampled, |st, name| {
-        let cid = st.clusters.as_ref().unwrap().get(name).copied().unwrap_or(0);
-        st.cluster_models
-            .get(&cid)
-            .cloned()
-            .unwrap_or_else(|| st.global.clone())
-    })?;
+    let updates_map = train_clients_to(
+        state,
+        round,
+        &sampled,
+        |st, name| {
+            let cid = st.clusters.as_ref().unwrap().get(name).copied().unwrap_or(0);
+            st.cluster_models
+                .get(&cid)
+                .cloned()
+                .unwrap_or_else(|| st.global.clone())
+        },
+        {
+            let primary = primary.clone();
+            move |st: &JobState, name: &str| {
+                let cid = st.clusters.as_ref().unwrap().get(name).copied().unwrap_or(0);
+                st.cluster_models
+                    .contains_key(&cid)
+                    .then(|| (format!("cluster_model/{cid}"), primary.clone()))
+            }
+        },
+        {
+            let primary = primary.clone();
+            move |_: &JobState, _: &str| Some(primary.clone())
+        },
+        |_| "client_params".to_string(),
+    )?;
+    require_quorum(&updates_map, state, round)?;
+    // The primary worker pulls the uploads it re-clusters from (their wire
+    // time lands here — there is no consensus pipeline in this branch).
+    let _ = deliver_round(state, "client_params", round, &primary);
     let updates: Vec<ClientUpdate> = updates_map.into_values().collect();
     let train_loss = mean_loss(&updates);
 
@@ -659,7 +903,16 @@ pub fn clustered_round(state: &mut JobState, round: u64) -> Result<RoundMetrics>
 
     let (test_loss, test_accuracy) = clustered_eval(state)?;
     let global = state.global.clone();
-    Ok(scope.finish(state, round, train_loss, &global, test_loss, test_accuracy))
+    let sim_round_secs = state.last_phase_secs;
+    Ok(scope.finish(
+        state,
+        round,
+        train_loss,
+        &global,
+        test_loss,
+        test_accuracy,
+        sim_round_secs,
+    ))
 }
 
 /// FL+HC evaluation: example-weighted average over cluster models (falls
@@ -696,12 +949,12 @@ fn clustered_eval(state: &JobState) -> Result<(f64, f64)> {
 }
 
 /// Decentralized (Fedstellar-style) round: peers train locally, gossip,
-/// merge. No central aggregator at all.
+/// merge. No central aggregator at all — and no global broadcast either:
+/// every peer resumes its own local model (round 1 starts from the
+/// seed-synchronized init that every node derives identically, so nothing
+/// crosses the wire for model distribution).
 pub fn decentralized_round(state: &mut JobState, round: u64) -> Result<RoundMetrics> {
     let scope = RoundScope::begin(state);
-
-    let payload = Payload::Params(state.global.clone());
-    publish(state, "global_model", LC, round, payload);
 
     let peers = state.sample_clients(round);
     if peers.is_empty() {
@@ -719,9 +972,13 @@ pub fn decentralized_round(state: &mut JobState, round: u64) -> Result<RoundMetr
                 .and_then(|n| n.local_model.clone())
                 .unwrap_or_else(|| st.global.clone())
         },
+        |_, _| None,
+        |_, _| None,
         |name| format!("peer_params/{name}"),
     )?;
+    require_quorum(&updates_map, state, round)?;
     let train_loss = mean_loss(&updates_map.values().cloned().collect::<Vec<_>>());
+    let train_phase = state.last_phase_secs;
 
     // Gossip: every peer pulls each neighbor's model (n·(n−1) transfers —
     // the decentralized bandwidth signature of Fig 8e/11e).
@@ -739,20 +996,27 @@ pub fn decentralized_round(state: &mut JobState, round: u64) -> Result<RoundMetr
 
     // Gossip pulls are point-to-point: each peer fetches exactly the models
     // its plan names (mesh ⇒ n·(n−1) transfers, ring ⇒ 2n — the Fig 11e
-    // bandwidth ordering comes straight from the plan). A pull hands the
-    // sender's allocation over — no float copies on the fabric.
+    // bandwidth ordering comes straight from the plan), each priced over
+    // the peer↔peer route. A pull hands the sender's allocation over — no
+    // float copies on the fabric. Peers gossip concurrently, so the phase
+    // costs the slowest peer's pull schedule.
     let mut merged_models: BTreeMap<String, Arc<[f32]>> = BTreeMap::new();
+    let mut gossip_phase = 0f64;
     for (peer, pulls) in &plan_gossip.pulls {
         let Some(own) = updates_map.get(peer) else {
             continue; // faulted peer this round
         };
+        let mut peer_secs = 0f64;
         let mut stack: Vec<&[f32]> = vec![own.params.as_ref()];
         for other in pulls {
             if let Some(u) = updates_map.get(other) {
-                let _ = fetch_latest(state, &format!("peer_params/{other}"), peer);
+                let (_msg, secs) =
+                    deliver_latest(state, &format!("peer_params/{other}"), other, peer)?;
+                peer_secs += secs;
                 stack.push(u.params.as_ref());
             }
         }
+        gossip_phase = gossip_phase.max(peer_secs);
         let weights = vec![1.0; stack.len()];
         let merged = crate::aggregate::mean::weighted_mean_plan(&stack, &weights, plan)?;
         merged_models.insert(peer.clone(), merged.into());
@@ -771,12 +1035,129 @@ pub fn decentralized_round(state: &mut JobState, round: u64) -> Result<RoundMetr
 
     let (test_loss, test_accuracy) = state.evaluate(&state.global)?;
     let global = state.global.clone();
-    Ok(scope.finish(state, round, train_loss, &global, test_loss, test_accuracy))
+    Ok(scope.finish(
+        state,
+        round,
+        train_loss,
+        &global,
+        test_loss,
+        test_accuracy,
+        train_phase + gossip_phase,
+    ))
 }
 
+/// Example-weighted mean of the clients' local training losses: a
+/// 1000-example client moves the number 1000× more than a 1-example client
+/// (the unweighted mean let tiny shards swamp the series).
 fn mean_loss(updates: &[ClientUpdate]) -> f64 {
-    if updates.is_empty() {
+    let total_w: f64 = updates.iter().map(|u| u.weight).sum();
+    if updates.is_empty() || total_w <= 0.0 {
         return f64::NAN;
     }
-    updates.iter().map(|u| u.mean_loss as f64).sum::<f64>() / updates.len() as f64
+    updates
+        .iter()
+        .map(|u| u.mean_loss as f64 * u.weight)
+        .sum::<f64>()
+        / total_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::job::JobConfig;
+    use crate::controller::sync::FaultPlan;
+    use crate::runtime::pjrt::Runtime;
+
+    #[test]
+    fn name_index_numeric_suffix_is_stable() {
+        // The historical fast path every seeded run depends on.
+        assert_eq!(name_index("client_7"), 7);
+        assert_eq!(name_index("worker_0"), 0);
+        assert_eq!(name_index("peer_123"), 123);
+    }
+
+    #[test]
+    fn name_index_distinct_for_anagram_names() {
+        // `rsplit('_')` yields the non-numeric suffix "worker" for both, so
+        // the old byte-sum fallback collided on these anagrams.
+        let a = name_index("cluster12_worker");
+        let b = name_index("cluster21_worker");
+        assert_ne!(a, b, "anagram node names must get distinct RNG streams");
+        // And distinct streams downstream.
+        let root = Rng::seed_from(42);
+        let mut ra = root.derive("client", a);
+        let mut rb = root.derive("client", b);
+        assert_ne!(ra.next_u64(), rb.next_u64());
+        // Stable across calls.
+        assert_eq!(name_index("cluster12_worker"), a);
+    }
+
+    fn upd(client: &str, weight: f64, loss: f32) -> ClientUpdate {
+        ClientUpdate {
+            client: client.to_string(),
+            params: vec![0.0f32; 4].into(),
+            weight,
+            extra: None,
+            mean_loss: loss,
+        }
+    }
+
+    #[test]
+    fn mean_loss_is_example_weighted() {
+        // A 1-example straggler with a huge loss must barely move the mean
+        // against a 1000-example client.
+        let updates = vec![upd("tiny", 1.0, 100.0), upd("big", 1000.0, 1.0)];
+        let m = mean_loss(&updates);
+        let expect = (100.0 + 1000.0) / 1001.0;
+        assert!((m - expect).abs() < 1e-9, "got {m}, want {expect}");
+        assert!(m < 1.2, "tiny client dominated the mean: {m}");
+        // Degenerate cases stay NaN.
+        assert!(mean_loss(&[]).is_nan());
+    }
+
+    /// Satellite regression: a worker's aggregation proposal must be
+    /// invariant to which *other* workers are alive (independent per-worker
+    /// "agg" streams — dpfl consumes RNG in `aggregate`, so it would expose
+    /// any coupling).
+    #[test]
+    fn worker_proposals_invariant_to_dropped_workers() {
+        let mk_state = |faults: FaultPlan| {
+            let rt = Runtime::shared("artifacts").unwrap();
+            let mut job = JobConfig::default_cnn("dpfl");
+            job.rounds = 1;
+            job.dataset.n = 600;
+            job.n_clients = 4;
+            job.n_workers = 3;
+            JobState::scaffold(rt, &job, faults).unwrap()
+        };
+        let mut full = mk_state(FaultPlan::none());
+        let mut dropped = mk_state(FaultPlan::none().drop_in_round("worker_0", 1));
+
+        let dim = full.backend.param_count;
+        let updates: Vec<ClientUpdate> = (0..4)
+            .map(|i| upd(&format!("client_{i}"), 100.0, 1.0))
+            .map(|mut u| {
+                u.params = vec![0.01 * (name_index(&u.client) + 1) as f32; dim].into();
+                u
+            })
+            .collect();
+        for st in [&mut full, &mut dropped] {
+            for u in &updates {
+                st.kv
+                    .publish("client_params", &u.client, 1, Payload::Params(u.params.clone()));
+            }
+        }
+
+        let props_full = worker_proposals(&mut full, 1, &updates).unwrap();
+        let props_dropped = worker_proposals(&mut dropped, 1, &updates).unwrap();
+        assert_eq!(props_full.len(), 3);
+        assert_eq!(props_dropped.len(), 2);
+        // worker_1 / worker_2 propose the same model whether or not
+        // worker_0 is alive.
+        assert_eq!(props_full[1].worker, props_dropped[0].worker);
+        assert_eq!(props_full[1].hash, props_dropped[0].hash);
+        assert_eq!(props_full[2].hash, props_dropped[1].hash);
+        // And dpfl noise is genuinely per-worker (independent streams).
+        assert_ne!(props_full[1].hash, props_full[2].hash);
+    }
 }

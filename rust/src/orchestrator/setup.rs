@@ -17,7 +17,7 @@ use crate::data::distributor::Distributor;
 use crate::data::partition::Partition;
 use crate::data::synthetic;
 use crate::info;
-use crate::kvstore::netsim::{LinkModel, NetSim};
+use crate::kvstore::netsim::NetSim;
 use crate::kvstore::store::KvStore;
 use crate::metrics::report::RunReport;
 use crate::node::{ClientNode, WorkerBehavior, WorkerNode};
@@ -53,6 +53,12 @@ pub struct JobState {
     pub cluster_models: BTreeMap<usize, Arc<[f32]>>,
     pub root_rng: Rng,
     pub report: RunReport,
+    /// Virtual-clock record of the last parallel training phase: per-client
+    /// simulated finish times (download + train + upload) ...
+    pub client_virtual_secs: BTreeMap<String, f64>,
+    /// ... and its makespan (max over on-time clients, capped at the round
+    /// deadline when one is configured).
+    pub last_phase_secs: f64,
 }
 
 impl JobState {
@@ -106,11 +112,16 @@ impl JobState {
         controller.barrier(&all_nodes, NodeStage::ReadyForJob, 0, all_nodes.len())?;
 
         // Clients download their chunks and build device-resident batches.
+        // Each also gets a deterministic compute-speed profile: a factor in
+        // [1, 1 + heterogeneity) derived from the seed and the client name,
+        // scaling its *simulated* train time (virtual clock only).
         let mut clients = BTreeMap::new();
         for (i, name) in client_names.iter().enumerate() {
             let chunk = distributor.download(name, "train")?;
             let mut batch_rng = root_rng.derive("batching", i as u64);
-            let node = ClientNode::from_chunk(name, &chunk, &backend, &mut batch_rng)?;
+            let mut node = ClientNode::from_chunk(name, &chunk, &backend, &mut batch_rng)?;
+            let mut speed_rng = root_rng.derive("speed", super::flows::name_index(name));
+            node.speed_factor = 1.0 + job.heterogeneity * speed_rng.next_f64();
             clients.insert(name.clone(), node);
             controller.update_stage(name, NodeStage::ReadyWithDataset)?;
         }
@@ -169,6 +180,11 @@ impl JobState {
             job.topology.name()
         );
 
+        // Topology-aware fabric: transfers route over the overlay's edges
+        // with the job's per-class link models.
+        let mut net = NetSim::with_policy(job.network);
+        net.attach_overlay(&overlay);
+
         Ok(JobState {
             job: job.clone(),
             backend,
@@ -177,7 +193,7 @@ impl JobState {
             workers,
             controller,
             kv: KvStore::new(),
-            net: NetSim::new(LinkModel::LAN),
+            net,
             strategy,
             consensus,
             chain,
@@ -188,7 +204,19 @@ impl JobState {
             cluster_models: BTreeMap::new(),
             root_rng,
             report,
+            client_virtual_secs: BTreeMap::new(),
+            last_phase_secs: 0.0,
         })
+    }
+
+    /// The node that physically serves model downloads/uploads in star
+    /// flows (deterministic: first worker in overlay order).
+    pub fn primary_worker(&self) -> String {
+        self.overlay
+            .workers()
+            .into_iter()
+            .next()
+            .unwrap_or_else(|| "logic_controller".to_string())
     }
 
     /// Per-round derived stream (all round-scoped randomness hangs off it).

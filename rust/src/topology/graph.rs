@@ -13,6 +13,31 @@ pub enum NodeRole {
     Hybrid,
 }
 
+/// Communication class of an overlay edge — what kind of physical link a
+/// hop over this edge rides on. The network fabric prices each class with
+/// its own [`crate::kvstore::netsim::LinkModel`] (the `network:` config
+/// section), which is how topology choice turns into transfer *time*
+/// (paper Fig 11e) instead of just message counts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LinkClass {
+    /// Last-mile client uplink (client↔worker, peer↔peer).
+    Edge,
+    /// Server-tier datacenter link (worker↔worker, leaf↔root).
+    Lan,
+    /// Inter-site link (only reachable via explicit overrides).
+    Wan,
+}
+
+impl LinkClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkClass::Edge => "edge",
+            LinkClass::Lan => "lan",
+            LinkClass::Wan => "wan",
+        }
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TopologyKind {
     /// Classic FedAvg star: clients <-> workers.
@@ -82,6 +107,15 @@ impl Overlay {
             for w in &workers {
                 o.edges.insert((c.clone(), w.clone()));
                 o.edges.insert((w.clone(), c.clone()));
+            }
+        }
+        // The server tier is fully connected (consensus vote exchange rides
+        // LAN links, never a client uplink).
+        for a in &workers {
+            for b in &workers {
+                if a != b {
+                    o.edges.insert((a.clone(), b.clone()));
+                }
             }
         }
         o.clusters.push(Cluster {
@@ -214,6 +248,27 @@ impl Overlay {
         self.edges.contains(&(a.to_string(), b.to_string()))
     }
 
+    /// The hierarchical root aggregator: the worker of the upstream-less,
+    /// client-less cluster every leaf reports to (None for flat overlays).
+    pub fn root_worker(&self) -> Option<String> {
+        self.clusters
+            .iter()
+            .find(|c| c.upstream.is_none() && c.clients.is_empty())
+            .and_then(|c| c.workers.first().cloned())
+    }
+
+    /// Link class of the (a, b) edge, derived from the endpoint roles:
+    /// any client endpoint — and a pair of hybrid peers, which are edge
+    /// devices in DFL — rides the EDGE uplink; everything else (worker ↔
+    /// worker, including the hierarchical root) is server-tier LAN.
+    pub fn link_class(&self, a: &str, b: &str) -> LinkClass {
+        match (self.roles.get(a), self.roles.get(b)) {
+            (Some(NodeRole::Client), _) | (_, Some(NodeRole::Client)) => LinkClass::Edge,
+            (Some(NodeRole::Hybrid), Some(NodeRole::Hybrid)) => LinkClass::Edge,
+            _ => LinkClass::Lan,
+        }
+    }
+
     pub fn n_nodes(&self) -> usize {
         self.roles.len()
     }
@@ -258,6 +313,11 @@ mod tests {
         assert!(o.has_edge("client_0", "worker_1"));
         assert!(o.has_edge("worker_0", "client_9"));
         assert!(!o.has_edge("client_0", "client_1"));
+        // Server tier is meshed: vote exchange never routes via a client.
+        assert!(o.has_edge("worker_0", "worker_1"));
+        assert!(o.has_edge("worker_1", "worker_0"));
+        // Star overlays have no hierarchical root.
+        assert_eq!(o.root_worker(), None);
         o.validate().unwrap();
     }
 
@@ -269,6 +329,7 @@ mod tests {
         assert_eq!(o.clusters.len(), 4);
         assert!(o.has_edge("cluster0_worker", "root_worker"));
         assert!(!o.has_edge("client_0", "root_worker"));
+        assert_eq!(o.root_worker().as_deref(), Some("root_worker"));
         o.validate().unwrap();
         // Every client belongs to exactly one leaf cluster.
         let mut seen = BTreeSet::new();
@@ -297,6 +358,21 @@ mod tests {
         assert_eq!(o.edges.len(), 12);
         assert_eq!(o.neighbors("peer_0").len(), 2);
         o.validate().unwrap();
+    }
+
+    #[test]
+    fn link_classes_by_role() {
+        let o = Overlay::client_server(4, 2);
+        assert_eq!(o.link_class("client_0", "worker_0"), LinkClass::Edge);
+        assert_eq!(o.link_class("worker_0", "client_3"), LinkClass::Edge);
+        assert_eq!(o.link_class("worker_0", "worker_1"), LinkClass::Lan);
+
+        let h = Overlay::hierarchical(6, 2);
+        assert_eq!(h.link_class("client_0", "cluster0_worker"), LinkClass::Edge);
+        assert_eq!(h.link_class("cluster0_worker", "root_worker"), LinkClass::Lan);
+
+        let p = Overlay::fully_connected(3);
+        assert_eq!(p.link_class("peer_0", "peer_1"), LinkClass::Edge);
     }
 
     #[test]

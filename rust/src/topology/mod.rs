@@ -5,4 +5,4 @@
 pub mod gossip;
 pub mod graph;
 
-pub use graph::{NodeRole, Overlay, TopologyKind};
+pub use graph::{LinkClass, NodeRole, Overlay, TopologyKind};

@@ -1,0 +1,196 @@
+//! The topology-aware virtual-clock fabric's acceptance suite:
+//!
+//! * Fig 11e transfer-time ordering — at equal model size and rounds,
+//!   `sim_net_secs(fully_connected) > sim_net_secs(hierarchical) >
+//!   sim_net_secs(client_server)`, because the fabric routes every delivery
+//!   over the actual overlay edges instead of a flat default link.
+//! * Observationality — the virtual clock (network config + heterogeneity)
+//!   never changes training results until a deadline is configured.
+//! * Emergent stragglers — a `round_deadline_secs`-induced drop produces
+//!   the same surviving-quorum metrics as the equivalent
+//!   `FaultPlan`-scripted drop.
+
+use flsim::config::job::JobConfig;
+use flsim::controller::sync::FaultPlan;
+use flsim::kvstore::netsim::LinkModel;
+use flsim::metrics::report::RunReport;
+use flsim::orchestrator::{run_standard_round, JobState, Orchestrator};
+use flsim::runtime::pjrt::Runtime;
+use flsim::topology::TopologyKind;
+
+fn rt() -> std::sync::Arc<Runtime> {
+    Runtime::shared("artifacts").unwrap()
+}
+
+fn mini(strategy: &str) -> JobConfig {
+    let mut j = JobConfig::default_cnn(strategy);
+    j.rounds = 2;
+    j.dataset.n = 600;
+    j.n_clients = 6;
+    j
+}
+
+#[test]
+fn fig11e_topology_transfer_time_ordering() {
+    let orch = Orchestrator::new(rt());
+
+    let cs = orch.run(&mini("fedavg")).unwrap();
+
+    let mut hier_job = mini("fedavg");
+    hier_job.topology = TopologyKind::Hierarchical;
+    hier_job.n_workers = 3;
+    let hier = orch.run(&hier_job).unwrap();
+
+    let fc = orch.run(&mini("fedstellar")).unwrap();
+
+    let (cs_t, hier_t, fc_t) = (
+        cs.total_sim_net_secs(),
+        hier.total_sim_net_secs(),
+        fc.total_sim_net_secs(),
+    );
+    assert!(
+        fc_t > hier_t && hier_t > cs_t,
+        "Fig 11e ordering violated: fully_connected {fc_t:.3}s, \
+         hierarchical {hier_t:.3}s, client_server {cs_t:.3}s"
+    );
+    // The virtual makespan series is populated everywhere.
+    for r in [&cs, &hier, &fc] {
+        for m in &r.rounds {
+            assert!(m.sim_round_secs > 0.0, "{}: empty makespan", r.label);
+        }
+    }
+    // And the makespan ranks the same way: a mesh round serializes each
+    // peer's (n-1) pulls over its uplink, the star pays one round trip.
+    assert!(fc.total_sim_round_secs() > cs.total_sim_round_secs());
+}
+
+#[test]
+fn virtual_clock_is_observational_without_a_deadline() {
+    let orch = Orchestrator::new(rt());
+    let plain = orch.run(&mini("fedavg")).unwrap();
+
+    // Same job with a radically different fabric: slow uplinks, a 3x
+    // compute spread — but no deadline. Every training result must be
+    // bitwise identical; only the simulated times may move.
+    let mut fabric_job = mini("fedavg");
+    fabric_job.heterogeneity = 3.0;
+    fabric_job.network.edge = LinkModel {
+        latency_ms: 500.0,
+        bandwidth_mbps: 0.25,
+    };
+    let fabric = orch.run(&fabric_job).unwrap();
+
+    assert_eq!(plain.rounds.len(), fabric.rounds.len());
+    for (a, b) in plain.rounds.iter().zip(&fabric.rounds) {
+        assert_eq!(a.model_hash, b.model_hash, "round {}", a.round);
+        assert_eq!(a.test_accuracy.to_bits(), b.test_accuracy.to_bits());
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!(a.net_bytes, b.net_bytes);
+        // The fabric *did* slow the virtual clock down.
+        assert!(b.sim_round_secs > a.sim_round_secs, "round {}", a.round);
+    }
+}
+
+#[test]
+fn heterogeneity_profiles_are_deterministic_and_spread() {
+    let job = {
+        let mut j = mini("fedavg");
+        j.heterogeneity = 1.0;
+        j.rounds = 1;
+        j
+    };
+    let mut s1 = JobState::scaffold(rt(), &job, FaultPlan::none()).unwrap();
+    let mut s2 = JobState::scaffold(rt(), &job, FaultPlan::none()).unwrap();
+    let _ = run_standard_round(&mut s1, 1).unwrap();
+    let _ = run_standard_round(&mut s2, 1).unwrap();
+    assert!(!s1.client_virtual_secs.is_empty());
+    // Same seed => identical per-client virtual finishes.
+    for (name, secs) in &s1.client_virtual_secs {
+        assert_eq!(
+            secs.to_bits(),
+            s2.client_virtual_secs[name].to_bits(),
+            "{name} virtual time not reproducible"
+        );
+    }
+    // heterogeneity > 0 actually spreads the fleet.
+    let times: Vec<f64> = s1.client_virtual_secs.values().copied().collect();
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0f64, f64::max);
+    assert!(max > min, "no spread across clients ({min} .. {max})");
+}
+
+/// Find the slowest client's virtual finish and the runner-up's, so a
+/// deadline can be pinned between them.
+fn straggler_cutoff(job: &JobConfig) -> (String, f64) {
+    let mut probe = JobState::scaffold(rt(), job, FaultPlan::none()).unwrap();
+    let _ = run_standard_round(&mut probe, 1).unwrap();
+    let mut finishes: Vec<(String, f64)> = probe
+        .client_virtual_secs
+        .iter()
+        .map(|(k, v)| (k.clone(), *v))
+        .collect();
+    finishes.sort_by(|a, b| a.1.total_cmp(&b.1));
+    let slowest = finishes.last().unwrap().clone();
+    let runner_up = finishes[finishes.len() - 2].1;
+    assert!(
+        slowest.1 > runner_up,
+        "need a unique straggler to cut ({} vs {})",
+        slowest.1,
+        runner_up
+    );
+    (slowest.0, (runner_up + slowest.1) / 2.0)
+}
+
+#[test]
+fn deadline_straggler_drop_matches_fault_plan_drop() {
+    let mut base = mini("fedavg");
+    base.rounds = 3;
+    base.heterogeneity = 2.0;
+
+    let (straggler, deadline) = straggler_cutoff(&base);
+
+    // Emergent drop: the deadline cuts the straggler every round.
+    let mut deadline_job = base.clone();
+    deadline_job.round_deadline_secs = Some(deadline);
+    let emergent = Orchestrator::new(rt()).run(&deadline_job).unwrap();
+
+    // Scripted drop: the equivalent FaultPlan crash (same client, every
+    // round). The surviving quorum must produce identical training metrics.
+    let scripted: RunReport = Orchestrator::new(rt())
+        .run_with_faults(&base, FaultPlan::none().crash_from(&straggler, 1))
+        .unwrap();
+
+    assert_eq!(emergent.rounds.len(), scripted.rounds.len());
+    for (e, s) in emergent.rounds.iter().zip(&scripted.rounds) {
+        assert_eq!(
+            e.model_hash, s.model_hash,
+            "round {}: emergent straggler drop diverged from scripted drop",
+            e.round
+        );
+        assert_eq!(e.test_accuracy.to_bits(), s.test_accuracy.to_bits());
+        assert_eq!(e.train_loss.to_bits(), s.train_loss.to_bits());
+    }
+}
+
+#[test]
+fn deadline_straggler_is_reported_late_not_faulted() {
+    let mut job = mini("fedavg");
+    job.rounds = 1;
+    job.heterogeneity = 2.0;
+    let (straggler, deadline) = straggler_cutoff(&job);
+    job.round_deadline_secs = Some(deadline);
+
+    let mut state = JobState::scaffold(rt(), &job, FaultPlan::none()).unwrap();
+    let m = run_standard_round(&mut state, 1).unwrap();
+    // Dropped through the barrier's timeout arm...
+    assert!(state.controller.is_late(&straggler, 1));
+    assert!(state
+        .controller
+        .emitted
+        .iter()
+        .any(|l| l.contains("timeout()")));
+    // ...the round advanced at the deadline...
+    assert!(m.sim_round_secs >= deadline);
+    // ...and the straggler's recorded finish genuinely overran it.
+    assert!(state.client_virtual_secs[&straggler] > deadline);
+}
