@@ -9,6 +9,9 @@ use flsim::runtime::pjrt::Runtime;
 
 fn main() {
     flsim::util::logging::init_from_env();
+    // This is a measurement context: re-execute every campaign cell instead
+    // of serving stored wall clocks from the figure result cache.
+    std::env::set_var("FLSIM_REFRESH", "1");
     let rt = Runtime::shared("artifacts").expect("run `make artifacts` first");
     let reports = fig8::run(rt).expect("fig8 experiment failed");
 

@@ -6,6 +6,8 @@ use flsim::runtime::pjrt::Runtime;
 
 fn main() {
     flsim::util::logging::init_from_env();
+    // Measurement context: bypass the figure result cache (fresh wall clocks).
+    std::env::set_var("FLSIM_REFRESH", "1");
     let rt = Runtime::shared("artifacts").expect("run `make artifacts` first");
     let reports = fig9::run(rt).expect("fig9 experiment failed");
 

@@ -1,0 +1,51 @@
+//! Campaign engine demo: a 2×2 sweep (strategy × seed) built through the
+//! declarative builder API, run twice against the content-addressed result
+//! store — the second pass is all cache hits — then aggregated into one
+//! campaign report.
+//!
+//! ```bash
+//! cargo run --release --example campaign_sweep
+//! ```
+
+use anyhow::Result;
+
+use flsim::metrics::dashboard;
+use flsim::prelude::*;
+
+fn main() -> Result<()> {
+    flsim::util::logging::init_from_env();
+
+    let mut base = JobConfig::default_cnn("fedavg");
+    base.name = "sweep_base".into();
+    base.rounds = 2;
+    base.dataset.n = 600;
+    base.n_clients = 4;
+
+    let spec = CampaignSpec::builder("sweep_demo", base)
+        .axis_strs("strategy", &["fedavg", "fedprox"])
+        .axis_ints("seed", &[1, 2])
+        .jobs(2) // two cells in flight; results are schedule-invariant
+        .build();
+
+    let store = ResultStore::open("campaigns/cache")?;
+    let rt = Runtime::shared("artifacts")?;
+
+    let first = flsim::campaign::run(rt.clone(), &spec, &store)?;
+    println!("{}", first.summary());
+
+    // An immediate re-run resumes every cell from the result store.
+    let second = flsim::campaign::run(rt, &spec, &store)?;
+    println!("{}", second.summary());
+    assert!(second.all_cached(), "second pass must hit the result cache");
+
+    let report = CampaignReport::from_outcome(&second);
+    let (csv, json) = report.save("campaigns")?;
+    println!("wrote {} and {}", csv.display(), json.display());
+
+    println!();
+    println!(
+        "{}",
+        dashboard::comparison("campaign sweep_demo", &second.reports())
+    );
+    Ok(())
+}

@@ -68,6 +68,17 @@ impl ReductionOrder {
             _ => bail!("unknown reduction order '{s}'"),
         })
     }
+
+    /// Canonical config-file key (the inverse of [`ReductionOrder::parse`]);
+    /// used by the campaign cache's canonical job serialization.
+    pub fn key(&self) -> &'static str {
+        match self {
+            ReductionOrder::Sequential => "sequential",
+            ReductionOrder::PairwiseTree => "pairwise",
+            ReductionOrder::Reversed => "reversed",
+            ReductionOrder::Kahan => "kahan",
+        }
+    }
 }
 
 /// How to execute an aggregation: which bit-exact reduction order (the

@@ -21,6 +21,15 @@ impl ServerOptKind {
             _ => bail!("unknown server optimizer '{s}'"),
         })
     }
+
+    /// Canonical config-file key (the inverse of [`ServerOptKind::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServerOptKind::Adagrad => "adagrad",
+            ServerOptKind::Adam => "adam",
+            ServerOptKind::Yogi => "yogi",
+        }
+    }
 }
 
 /// Server optimizer state (first/second moments over the parameter vector).

@@ -1,0 +1,182 @@
+//! Content-addressed on-disk result store.
+//!
+//! Every completed cell is written to `<store>/<k[0..2]>/<key>.json`, where
+//! `key = SHA-256(ENGINE_VERSION ‖ canonical JobConfig JSON)`. Because the
+//! key covers every result-relevant config field (and the engine version)
+//! but *not* wall-clock knobs like `parallelism`, re-running a campaign
+//! resumes instantly: unchanged cells are cache hits at any schedule, and
+//! spec edits re-run exactly the cells they touch.
+//!
+//! A stored cell carries the full [`RunReport`] (including first-run wall
+//! times), so a resumed campaign reproduces its report **byte-identically**
+//! — enforced by `rust/tests/campaign.rs`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::job::JobConfig;
+use crate::metrics::report::RunReport;
+use crate::util::hash;
+use crate::util::json::Json;
+
+/// Bumped whenever the engine's numeric contract changes (a new reduction
+/// semantics, a retrained reference backend, ...) so stale cells re-run
+/// instead of being served from cache.
+pub const ENGINE_VERSION: &str = concat!("flsim-", env!("CARGO_PKG_VERSION"), "+engine.v3");
+
+/// Schema tag of one stored cell document.
+const CELL_SCHEMA: &str = "flsim-cell-v1";
+
+/// The content-addressed key of a resolved job config.
+pub fn cell_key(job: &JobConfig) -> String {
+    let doc = format!("{}\n{}", ENGINE_VERSION, job.canonical_json());
+    hash::sha256_hex(doc.as_bytes())
+}
+
+/// An on-disk result store rooted at one directory.
+pub struct ResultStore {
+    dir: PathBuf,
+}
+
+impl ResultStore {
+    pub fn open(dir: impl AsRef<Path>) -> Result<ResultStore> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating result store {dir:?}"))?;
+        Ok(ResultStore { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn shard(&self, key: &str) -> PathBuf {
+        self.dir.join(&key[..2])
+    }
+
+    /// Where a cell with this key lives (whether or not it exists yet).
+    pub fn path_of(&self, key: &str) -> PathBuf {
+        self.shard(key).join(format!("{key}.json"))
+    }
+
+    /// Whether a *loadable* entry exists — delegates to [`ResultStore::get`]
+    /// so `campaign list`'s cached/pending column agrees with what `run`
+    /// will actually do (a corrupt or stale-schema file is not "cached").
+    pub fn contains(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+
+    /// Load a cached cell report. Missing, corrupt, or stale-schema entries
+    /// all read as a miss (the cell simply re-runs and overwrites).
+    pub fn get(&self, key: &str) -> Option<RunReport> {
+        let src = std::fs::read_to_string(self.path_of(key)).ok()?;
+        let doc = Json::parse(&src).ok()?;
+        if doc.get("schema").and_then(Json::as_str) != Some(CELL_SCHEMA) {
+            return None;
+        }
+        if doc.get("engine").and_then(Json::as_str) != Some(ENGINE_VERSION) {
+            return None;
+        }
+        RunReport::from_json(doc.get("report")?).ok()
+    }
+
+    /// Persist one completed cell (atomic: temp file + rename, so a
+    /// concurrent or crashed campaign never leaves a half-written entry).
+    pub fn put(&self, key: &str, cell: &str, job: &JobConfig, report: &RunReport) -> Result<()> {
+        let doc = Json::obj(vec![
+            ("schema", Json::from(CELL_SCHEMA)),
+            ("key", Json::from(key)),
+            ("engine", Json::from(ENGINE_VERSION)),
+            ("cell", Json::from(cell)),
+            ("config", job.canonical_json()),
+            ("report", report.to_json()),
+        ]);
+        let shard = self.shard(key);
+        std::fs::create_dir_all(&shard)
+            .with_context(|| format!("creating store shard {shard:?}"))?;
+        // Per-process temp name: two *processes* sharing a store and racing
+        // on the same key must not interleave writes into one temp file
+        // (within a process, grid dedup guarantees distinct keys).
+        let tmp = shard.join(format!(".{key}.{}.tmp", std::process::id()));
+        let path = self.path_of(key);
+        std::fs::write(&tmp, format!("{doc}\n"))
+            .with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("committing {path:?}"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::report::RoundMetrics;
+
+    fn tmp_store(tag: &str) -> (ResultStore, PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "flsim_cache_test_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        (ResultStore::open(&dir).unwrap(), dir)
+    }
+
+    fn report() -> RunReport {
+        RunReport {
+            label: "cell_a".into(),
+            strategy: "fedavg".into(),
+            topology: "client_server".into(),
+            backend: "cnn".into(),
+            n_clients: 4,
+            n_workers: 1,
+            seed: 1,
+            rounds: vec![RoundMetrics {
+                round: 1,
+                test_accuracy: 0.42,
+                test_loss: 1.3,
+                wall_secs: 0.8,
+                net_bytes: 1024,
+                model_hash: "abc123".into(),
+                ..Default::default()
+            }],
+        }
+    }
+
+    #[test]
+    fn put_then_get_roundtrips() {
+        let (store, dir) = tmp_store("roundtrip");
+        let job = JobConfig::default_cnn("fedavg");
+        let key = cell_key(&job);
+        assert!(!store.contains(&key));
+        assert!(store.get(&key).is_none());
+        store.put(&key, "cell_a", &job, &report()).unwrap();
+        assert!(store.contains(&key));
+        let back = store.get(&key).unwrap();
+        assert_eq!(back.to_json().to_string(), report().to_json().to_string());
+        // Content-addressed layout: two-char shard prefix.
+        assert!(store.path_of(&key).starts_with(dir.join(&key[..2])));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_entries_read_as_miss() {
+        let (store, dir) = tmp_store("corrupt");
+        let job = JobConfig::default_cnn("fedavg");
+        let key = cell_key(&job);
+        std::fs::create_dir_all(store.path_of(&key).parent().unwrap()).unwrap();
+        std::fs::write(store.path_of(&key), "not json at all").unwrap();
+        assert!(store.get(&key).is_none());
+        // A wrong-schema document is also a miss.
+        std::fs::write(store.path_of(&key), "{\"schema\":\"other\"}").unwrap();
+        assert!(store.get(&key).is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn keys_are_hex_sha256() {
+        let key = cell_key(&JobConfig::default_cnn("fedavg"));
+        assert_eq!(key.len(), 64);
+        assert!(key.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+}

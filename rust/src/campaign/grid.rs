@@ -1,0 +1,307 @@
+//! Grid expansion: resolve a [`CampaignSpec`] into the deterministic list
+//! of concrete cells.
+//!
+//! * Axis names expand in sorted order, axis values in listed order; the
+//!   grid enumerates with the **last axis fastest** (mixed-radix decode of
+//!   the cell index), so the cell list is a pure function of the spec.
+//! * Explicit cells are appended after the grid.
+//! * Cells whose resolved configs hash identically are deduplicated
+//!   (first occurrence wins); two *different* configs under one name are a
+//!   spec error (their reports would overwrite each other).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::campaign::cache;
+use crate::campaign::spec::{apply_axis, name_part, CampaignSpec};
+use crate::config::job::JobConfig;
+
+/// One concrete campaign cell: a named, validated job plus its
+/// content-addressed result-store key.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub name: String,
+    pub job: JobConfig,
+    /// SHA-256 of the canonical job config + engine version
+    /// ([`cache::cell_key`]).
+    pub key: String,
+}
+
+/// Expand a spec into its deterministic cell list.
+pub fn expand(spec: &CampaignSpec) -> Result<Vec<Cell>> {
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut seen_keys = std::collections::BTreeSet::new();
+    let mut name_keys: std::collections::BTreeMap<String, String> = Default::default();
+
+    let mut push = |cell: Cell| -> Result<()> {
+        if let Some(prev) = name_keys.get(&cell.name) {
+            if *prev != cell.key {
+                bail!(
+                    "campaign '{}': two different cells share the name '{}' — \
+                     their reports would overwrite each other",
+                    spec.name,
+                    cell.name
+                );
+            }
+        } else {
+            name_keys.insert(cell.name.clone(), cell.key.clone());
+        }
+        if seen_keys.insert(cell.key.clone()) {
+            cells.push(cell);
+        }
+        Ok(())
+    };
+
+    // The cartesian grid over the axes.
+    if !spec.axes.is_empty() {
+        for (axis, vals) in &spec.axes {
+            if vals.is_empty() {
+                // Mirror the YAML-path validation: a zero-value axis would
+                // silently expand to a zero-cell "successful" campaign.
+                bail!("campaign '{}': axis '{axis}' has no values", spec.name);
+            }
+        }
+        let axes: Vec<(&String, &Vec<crate::util::yaml::Yaml>)> = spec.axes.iter().collect();
+        let total: usize = axes.iter().map(|(_, vals)| vals.len()).product();
+        let topology_swept = spec.axes.contains_key("topology");
+        for cell_index in 0..total {
+            let mut rem = cell_index;
+            let mut picks = vec![0usize; axes.len()];
+            for ai in (0..axes.len()).rev() {
+                let len = axes[ai].1.len();
+                picks[ai] = rem % len;
+                rem /= len;
+            }
+            let mut job = spec.base.clone();
+            let mut parts = Vec::with_capacity(axes.len());
+            for (ai, &pick) in picks.iter().enumerate() {
+                let (axis, vals) = axes[ai];
+                let value = &vals[pick];
+                apply_axis(&mut job, axis, value)
+                    .map_err(|e| anyhow!("campaign '{}': {e}", spec.name))?;
+                parts.push(name_part(axis, value));
+            }
+            let name = parts.join("_");
+            if topology_swept && crate::orchestrator::check_topology(&job).is_err() {
+                // A swept topology axis pairs every strategy with every
+                // topology; incompatible grid points (decentralized strategy
+                // × server topology) are skipped rather than failing the
+                // whole campaign. Explicitly pinned cells still error below.
+                crate::warnlog!(
+                    "campaign",
+                    "{}: skipping incompatible grid cell '{name}' ({} × {})",
+                    spec.name,
+                    job.strategy.name(),
+                    job.topology.name()
+                );
+                continue;
+            }
+            push(make_cell(spec, name, job, topology_swept)?)?;
+        }
+    }
+
+    // Explicit cells.
+    for (i, cs) in spec.cells.iter().enumerate() {
+        let mut job = spec.base.clone();
+        let mut parts = Vec::with_capacity(cs.overrides.len());
+        let mut topology_pinned = false;
+        for (axis, value) in &cs.overrides {
+            apply_axis(&mut job, axis, value)
+                .map_err(|e| anyhow!("campaign '{}' cell {i}: {e}", spec.name))?;
+            topology_pinned |= axis == "topology";
+            parts.push(name_part(axis, value));
+        }
+        let name = match &cs.name {
+            Some(n) => n.clone(),
+            None if parts.is_empty() => spec.base.name.clone(),
+            None => parts.join("_"),
+        };
+        push(make_cell(spec, name, job, topology_pinned)?)?;
+    }
+
+    // A spec with no axes and no cells is the degenerate single-cell
+    // campaign: the base job itself.
+    if spec.axes.is_empty() && spec.cells.is_empty() {
+        let job = spec.base.clone();
+        let name = spec.base.name.clone();
+        push(make_cell(spec, name, job, false)?)?;
+    }
+
+    if cells.is_empty() {
+        // Only reachable when every grid point was skipped as incompatible —
+        // a zero-cell campaign "succeeding" would hide a misconfigured spec.
+        bail!(
+            "campaign '{}': expansion produced no runnable cells \
+             (every grid point was skipped as strategy/topology-incompatible)",
+            spec.name
+        );
+    }
+
+    Ok(cells)
+}
+
+/// Finalize one cell: stamp the name, reconcile strategy mode with the
+/// topology, validate, and compute the content-addressed key.
+fn make_cell(
+    spec: &CampaignSpec,
+    name: String,
+    mut job: JobConfig,
+    topology_pinned: bool,
+) -> Result<Cell> {
+    job.name = name.clone();
+    if let Err(e) = crate::orchestrator::check_topology(&job) {
+        if topology_pinned {
+            // The spec explicitly asked for an incompatible combination —
+            // surface the orchestrator's error at expand time.
+            return Err(anyhow!("campaign '{}' cell '{name}': {e}", spec.name));
+        }
+        // Mirror the preset constructors: decentralized strategies default
+        // onto a fully-connected overlay.
+        job.topology = crate::topology::TopologyKind::FullyConnected;
+    }
+    job.validate()
+        .map_err(|e| anyhow!("campaign '{}' cell '{name}': {e}", spec.name))?;
+    let key = cache::cell_key(&job);
+    Ok(Cell { name, job, key })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::yaml::Yaml;
+
+    fn tiny_base() -> JobConfig {
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.rounds = 2;
+        j.dataset.n = 600;
+        j.n_clients = 4;
+        j
+    }
+
+    #[test]
+    fn grid_is_sorted_axes_last_fastest() {
+        let spec = CampaignSpec::builder("g", tiny_base())
+            .axis_strs("strategy", &["fedavg", "fedprox"])
+            .axis_ints("seed", &[1, 2])
+            .build();
+        let cells = expand(&spec).unwrap();
+        // Axis order is sorted ("seed" < "strategy"); the last axis
+        // (strategy) spins fastest.
+        let names: Vec<&str> = cells.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, ["seed1_fedavg", "seed1_fedprox", "seed2_fedavg", "seed2_fedprox"]);
+        assert_eq!(cells[0].job.seed, 1);
+        assert_eq!(cells[3].job.seed, 2);
+        assert_eq!(cells[3].job.strategy.name(), "fedprox");
+        // Expansion is a pure function of the spec.
+        let again = expand(&spec).unwrap();
+        for (a, b) in cells.iter().zip(&again) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.key, b.key);
+        }
+    }
+
+    #[test]
+    fn duplicate_cells_dedup() {
+        let spec = CampaignSpec::builder("d", tiny_base())
+            .axis_strs("strategy", &["fedavg", "fedavg"])
+            .build();
+        let cells = expand(&spec).unwrap();
+        assert_eq!(cells.len(), 1, "identical cells must deduplicate");
+
+        // An explicit cell identical to a grid cell dedups too.
+        let spec = CampaignSpec::builder("d2", tiny_base())
+            .axis_strs("strategy", &["fedavg"])
+            .cell("fedavg", vec![("strategy", "fedavg".into())])
+            .build();
+        assert_eq!(expand(&spec).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn same_name_different_config_is_an_error() {
+        let spec = CampaignSpec::builder("n", tiny_base())
+            .cell("x", vec![("seed", Yaml::Int(1))])
+            .cell("x", vec![("seed", Yaml::Int(2))])
+            .build();
+        assert!(expand(&spec).is_err());
+    }
+
+    #[test]
+    fn empty_spec_is_the_base_job() {
+        let spec = CampaignSpec::builder("solo", tiny_base()).build();
+        let cells = expand(&spec).unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].name, tiny_base().name);
+    }
+
+    #[test]
+    fn decentralized_cells_reconcile_topology() {
+        let spec = CampaignSpec::builder("t", tiny_base())
+            .axis_strs("strategy", &["fedavg", "fedstellar"])
+            .build();
+        let cells = expand(&spec).unwrap();
+        let mesh = cells.iter().find(|c| c.name == "fedstellar").unwrap();
+        assert_eq!(mesh.job.topology, crate::topology::TopologyKind::FullyConnected);
+        // ... but an explicitly pinned incompatible topology is an error.
+        let bad = CampaignSpec::builder("t2", tiny_base())
+            .cell(
+                "bad",
+                vec![
+                    ("strategy", "fedstellar".into()),
+                    ("topology", "client_server".into()),
+                ],
+            )
+            .build();
+        assert!(expand(&bad).is_err());
+    }
+
+    #[test]
+    fn swept_topology_skips_incompatible_grid_points() {
+        // The flagship strategies × topologies grid: the decentralized ×
+        // server-topology point is skipped, everything else expands.
+        let spec = CampaignSpec::builder("sxt", tiny_base())
+            .axis_strs("strategy", &["fedavg", "fedstellar"])
+            .axis_strs("topology", &["client_server", "ring"])
+            .build();
+        let cells = expand(&spec).unwrap();
+        let names: Vec<&str> = cells.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["fedavg_client_server", "fedavg_ring", "fedstellar_ring"],
+            "fedstellar × client_server must be skipped, not fatal"
+        );
+    }
+
+    #[test]
+    fn empty_axis_is_an_error() {
+        let spec = CampaignSpec::builder("e", tiny_base())
+            .axis("seed", Vec::new())
+            .build();
+        assert!(expand(&spec).is_err());
+    }
+
+    #[test]
+    fn all_points_skipped_is_an_error() {
+        // Every grid point incompatible → zero runnable cells must not
+        // masquerade as a successful (empty) campaign.
+        let spec = CampaignSpec::builder("allskip", tiny_base())
+            .axis_strs("strategy", &["fedstellar"])
+            .axis_strs("topology", &["client_server", "hierarchical"])
+            .build();
+        assert!(expand(&spec).is_err());
+    }
+
+    #[test]
+    fn cell_keys_are_schedule_invariant_and_name_sensitive() {
+        let spec = CampaignSpec::builder("k", tiny_base())
+            .axis_ints("seed", &[1])
+            .build();
+        let a = expand(&spec).unwrap();
+        let mut par = spec.clone();
+        par.base.parallelism = 8;
+        let b = expand(&par).unwrap();
+        assert_eq!(a[0].key, b[0].key, "parallelism must not change cell keys");
+        let mut renamed = spec.clone();
+        renamed.base.rounds = 3;
+        let c = expand(&renamed).unwrap();
+        assert_ne!(a[0].key, c[0].key);
+    }
+}

@@ -1,0 +1,34 @@
+//! The campaign engine: declarative experiment sweeps with job-level
+//! scheduling and a content-addressed result cache (the paper's
+//! "streamlined benchmarking" promise, industrialized).
+//!
+//! A campaign is a base [`crate::config::job::JobConfig`] plus sweep axes
+//! and/or explicit cells ([`spec`]), expanded into a deterministic grid of
+//! concrete jobs ([`grid`]), executed on a scoped job-level worker pool
+//! ([`runner`]) that resumes completed cells from a content-addressed
+//! on-disk store ([`cache`]), and aggregated into one CSV/JSON report
+//! ([`report`]).
+//!
+//! Pipeline: **spec → grid → schedule (cache-aware) → store → report.**
+//!
+//! Guarantees (all test-enforced by `rust/tests/campaign.rs`):
+//! * expansion is a pure function of the spec (sorted axes, listed value
+//!   order, duplicate cells deduplicated);
+//! * results are bitwise-identical at any schedule (`campaign.jobs` ×
+//!   `job.parallelism` move only the wall clock);
+//! * re-running an unchanged campaign is all cache hits, and the resumed
+//!   report is byte-identical to the first run's;
+//! * one failing cell never discards the others — completed cells persist
+//!   as they finish and the CLI exits non-zero with the failure list.
+
+pub mod cache;
+pub mod grid;
+pub mod report;
+pub mod runner;
+pub mod spec;
+
+pub use cache::{cell_key, ResultStore, ENGINE_VERSION};
+pub use grid::{expand, Cell};
+pub use report::CampaignReport;
+pub use runner::{run, run_with_options, CampaignOutcome, CellOutcome};
+pub use spec::{CampaignBuilder, CampaignSpec, CellSpec};

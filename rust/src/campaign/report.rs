@@ -1,0 +1,259 @@
+//! The campaign report: per-cell summary metrics aggregated into one
+//! CSV/JSON artifact (plus the dashboard comparison table rendered by the
+//! CLI).
+//!
+//! Rows are built purely from the stored per-cell [`RunReport`]s, in
+//! expansion order — so a campaign resumed entirely from cache reproduces
+//! its report byte-for-byte (the stored first-run wall clocks included).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::campaign::runner::CampaignOutcome;
+use crate::metrics::report::RunReport;
+use crate::util::json::Json;
+
+/// One completed cell's summary row.
+#[derive(Clone, Debug)]
+pub struct CellRow {
+    pub cell: String,
+    pub key: String,
+    pub strategy: String,
+    pub topology: String,
+    pub backend: String,
+    pub n_clients: usize,
+    pub n_workers: usize,
+    pub seed: u64,
+    pub rounds: usize,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    pub final_loss: f64,
+    pub wall_secs: f64,
+    pub sim_round_secs: f64,
+    pub net_bytes: u64,
+    /// Final-round global model hash (provenance).
+    pub model_hash: String,
+}
+
+impl CellRow {
+    fn new(cell: &str, key: &str, r: &RunReport) -> CellRow {
+        CellRow {
+            cell: cell.to_string(),
+            key: key.to_string(),
+            strategy: r.strategy.clone(),
+            topology: r.topology.clone(),
+            backend: r.backend.clone(),
+            n_clients: r.n_clients,
+            n_workers: r.n_workers,
+            seed: r.seed,
+            rounds: r.rounds.len(),
+            final_accuracy: r.final_accuracy(),
+            best_accuracy: r.best_accuracy(),
+            final_loss: r.final_loss(),
+            wall_secs: r.total_wall_secs(),
+            sim_round_secs: r.total_sim_round_secs(),
+            net_bytes: r.total_net_bytes(),
+            model_hash: r
+                .rounds
+                .last()
+                .map(|m| m.model_hash.clone())
+                .unwrap_or_default(),
+        }
+    }
+}
+
+/// The aggregated campaign report.
+#[derive(Clone, Debug)]
+pub struct CampaignReport {
+    pub name: String,
+    pub rows: Vec<CellRow>,
+}
+
+impl CampaignReport {
+    /// Build from a finished campaign (completed-and-persisted cells only,
+    /// in expansion order — failed cells are the CLI's problem, not the
+    /// report's; a cell whose store-put failed re-runs on retry, so putting
+    /// it in the report would break byte-identical resume).
+    pub fn from_outcome(outcome: &CampaignOutcome) -> CampaignReport {
+        CampaignReport {
+            name: outcome.name.clone(),
+            rows: outcome
+                .cells
+                .iter()
+                .filter(|c| c.error.is_none())
+                .filter_map(|c| {
+                    c.report
+                        .as_ref()
+                        .map(|r| CellRow::new(&c.cell.name, &c.cell.key, r))
+                })
+                .collect(),
+        }
+    }
+
+    /// One row per cell.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "cell,key,strategy,topology,backend,n_clients,n_workers,seed,rounds,\
+             final_accuracy,best_accuracy,final_loss,wall_secs,sim_round_secs,net_bytes,model_hash\n",
+        );
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.4},{:.4},{},{}\n",
+                r.cell,
+                r.key,
+                r.strategy,
+                r.topology,
+                r.backend,
+                r.n_clients,
+                r.n_workers,
+                r.seed,
+                r.rounds,
+                r.final_accuracy,
+                r.best_accuracy,
+                r.final_loss,
+                r.wall_secs,
+                r.sim_round_secs,
+                r.net_bytes,
+                r.model_hash
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::from("flsim-campaign-v1")),
+            ("campaign", Json::from(self.name.as_str())),
+            (
+                "cells",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("cell", Json::from(r.cell.as_str())),
+                                ("key", Json::from(r.key.as_str())),
+                                ("strategy", Json::from(r.strategy.as_str())),
+                                ("topology", Json::from(r.topology.as_str())),
+                                ("backend", Json::from(r.backend.as_str())),
+                                ("n_clients", Json::from(r.n_clients)),
+                                ("n_workers", Json::from(r.n_workers)),
+                                ("seed", Json::from(r.seed as usize)),
+                                ("rounds", Json::from(r.rounds)),
+                                ("final_accuracy", Json::Num(r.final_accuracy)),
+                                ("best_accuracy", Json::Num(r.best_accuracy)),
+                                ("final_loss", Json::Num(r.final_loss)),
+                                ("wall_secs", Json::Num(r.wall_secs)),
+                                ("sim_round_secs", Json::Num(r.sim_round_secs)),
+                                ("net_bytes", Json::from(r.net_bytes as usize)),
+                                ("model_hash", Json::from(r.model_hash.as_str())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write `<dir>/<name>.csv` and `<dir>/<name>.json`; returns the paths.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<(PathBuf, PathBuf)> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating report dir {dir:?}"))?;
+        let csv = dir.join(format!("{}.csv", self.name));
+        let json = dir.join(format!("{}.json", self.name));
+        std::fs::write(&csv, self.to_csv()).with_context(|| format!("writing {csv:?}"))?;
+        std::fs::write(&json, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing {json:?}"))?;
+        Ok((csv, json))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::grid::Cell;
+    use crate::campaign::runner::CellOutcome;
+    use crate::config::job::JobConfig;
+    use crate::metrics::report::RoundMetrics;
+
+    fn outcome() -> CampaignOutcome {
+        let job = JobConfig::default_cnn("fedavg");
+        let report = RunReport {
+            label: "a".into(),
+            strategy: "fedavg".into(),
+            topology: "client_server".into(),
+            backend: "cnn".into(),
+            n_clients: 4,
+            n_workers: 1,
+            seed: 1,
+            rounds: vec![RoundMetrics {
+                round: 1,
+                test_accuracy: 0.5,
+                test_loss: 1.1,
+                wall_secs: 2.0,
+                net_bytes: 2048,
+                model_hash: "deadbeef".into(),
+                ..Default::default()
+            }],
+        };
+        CampaignOutcome {
+            name: "demo".into(),
+            cells: vec![
+                CellOutcome {
+                    cell: Cell {
+                        name: "a".into(),
+                        job: job.clone(),
+                        key: "k1".into(),
+                    },
+                    cached: false,
+                    report: Some(report),
+                    error: None,
+                },
+                CellOutcome {
+                    cell: Cell {
+                        name: "b".into(),
+                        job,
+                        key: "k2".into(),
+                    },
+                    cached: false,
+                    report: None,
+                    error: Some("boom".into()),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn report_covers_completed_cells_only() {
+        let rep = CampaignReport::from_outcome(&outcome());
+        assert_eq!(rep.rows.len(), 1);
+        let csv = rep.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.lines().nth(1).unwrap().starts_with("a,k1,fedavg,client_server,cnn,4,1,1,1,"));
+        assert!(csv.contains("deadbeef"));
+        let j = rep.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("campaign").and_then(Json::as_str), Some("demo"));
+        assert_eq!(parsed.get("cells").and_then(Json::as_arr).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn report_is_deterministic() {
+        let o = outcome();
+        let a = CampaignReport::from_outcome(&o);
+        let b = CampaignReport::from_outcome(&o);
+        assert_eq!(a.to_csv(), b.to_csv());
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn outcome_accessors() {
+        let o = outcome();
+        assert_eq!(o.completed().len(), 1);
+        assert_eq!(o.failed().len(), 1);
+        assert!(!o.all_cached());
+        assert_eq!(o.summary(), "campaign 'demo': 2 cells — 0 cached, 1 run, 1 failed");
+    }
+}

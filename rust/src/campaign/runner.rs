@@ -1,0 +1,214 @@
+//! The job-level scheduler: execute a campaign's cells on a scoped worker
+//! pool (outer job-parallelism × the round engine's inner
+//! client-parallelism), resuming cached cells from the result store.
+//!
+//! Scheduling never affects results: every cell's outcome is a pure
+//! function of its `JobConfig` (the round engine's determinism contract),
+//! cells share no mutable state, and the outcome list is assembled in
+//! expansion order regardless of which worker finished first. A failing
+//! cell is recorded and the rest of the campaign keeps running — every
+//! completed cell is persisted to the store as soon as it finishes, so
+//! nothing is lost to one bad cell (the CLI turns recorded failures into a
+//! non-zero exit).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::campaign::cache::ResultStore;
+use crate::campaign::grid::{self, Cell};
+use crate::campaign::spec::CampaignSpec;
+use crate::metrics::report::RunReport;
+use crate::orchestrator::Orchestrator;
+use crate::runtime::pjrt::Runtime;
+
+/// What happened to one cell.
+#[derive(Clone, Debug)]
+pub struct CellOutcome {
+    pub cell: Cell,
+    /// The report came from the result store (no execution happened).
+    pub cached: bool,
+    /// Present iff the cell completed (fresh or cached).
+    pub report: Option<RunReport>,
+    /// Present iff the cell failed.
+    pub error: Option<String>,
+}
+
+/// A finished campaign: one outcome per expanded cell, in expansion order.
+#[derive(Clone, Debug)]
+pub struct CampaignOutcome {
+    pub name: String,
+    pub cells: Vec<CellOutcome>,
+}
+
+impl CampaignOutcome {
+    /// Cells that completed *and* persisted (a cell whose store-put failed
+    /// counts as failed: it will re-run on retry, so treating it as done
+    /// would break the byte-identical-resume contract).
+    pub fn completed(&self) -> Vec<&CellOutcome> {
+        self.cells
+            .iter()
+            .filter(|c| c.report.is_some() && c.error.is_none())
+            .collect()
+    }
+
+    pub fn failed(&self) -> Vec<&CellOutcome> {
+        self.cells.iter().filter(|c| c.error.is_some()).collect()
+    }
+
+    /// Completed (persisted) cells' reports, in expansion order.
+    pub fn reports(&self) -> Vec<RunReport> {
+        self.completed()
+            .into_iter()
+            .filter_map(|c| c.report.clone())
+            .collect()
+    }
+
+    /// True iff every cell resolved from the result store.
+    pub fn all_cached(&self) -> bool {
+        !self.cells.is_empty() && self.cells.iter().all(|c| c.cached)
+    }
+
+    /// `"<cell>: <error>"` lines for every failed cell, in expansion order
+    /// (shared by the CLI's exit message and the experiment runner).
+    pub fn failure_lines(&self) -> Vec<String> {
+        self.failed()
+            .iter()
+            .map(|c| {
+                format!(
+                    "{}: {}",
+                    c.cell.name,
+                    c.error.as_deref().unwrap_or("unknown error")
+                )
+            })
+            .collect()
+    }
+
+    /// One-line summary (the CI smoke job greps this).
+    pub fn summary(&self) -> String {
+        let cached = self.cells.iter().filter(|c| c.cached).count();
+        let failed = self.failed().len();
+        let ran = self.cells.len() - cached - failed;
+        format!(
+            "campaign '{}': {} cells — {} cached, {} run, {} failed",
+            self.name,
+            self.cells.len(),
+            cached,
+            ran,
+            failed
+        )
+    }
+}
+
+/// Expand and execute a campaign against a result store.
+pub fn run(rt: Arc<Runtime>, spec: &CampaignSpec, store: &ResultStore) -> Result<CampaignOutcome> {
+    run_with_options(rt, spec, store, false)
+}
+
+/// Like [`run`], but with `refresh = true` every cell re-executes and
+/// overwrites its store entry even when cached — for measurement contexts
+/// (the figure benches) where serving a stored first-run wall clock would
+/// report stale performance numbers.
+pub fn run_with_options(
+    rt: Arc<Runtime>,
+    spec: &CampaignSpec,
+    store: &ResultStore,
+    refresh: bool,
+) -> Result<CampaignOutcome> {
+    let cells = grid::expand(spec)?;
+
+    // Resolve cache hits up front (serial — cheap file probes), collecting
+    // the misses for the scheduler.
+    let mut slots: Vec<Option<CellOutcome>> = vec![None; cells.len()];
+    let mut misses: Vec<usize> = Vec::new();
+    for (i, cell) in cells.iter().enumerate() {
+        match if refresh { None } else { store.get(&cell.key) } {
+            Some(report) => {
+                slots[i] = Some(CellOutcome {
+                    cell: cell.clone(),
+                    cached: true,
+                    report: Some(report),
+                    error: None,
+                });
+            }
+            None => misses.push(i),
+        }
+    }
+
+    if !misses.is_empty() {
+        let workers = spec.effective_jobs().min(misses.len()).max(1);
+        let next = AtomicUsize::new(0);
+        let done: Mutex<Vec<(usize, CellOutcome)>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let rt = rt.clone();
+                let next = &next;
+                let done = &done;
+                let misses = &misses;
+                let cells = &cells;
+                s.spawn(move || loop {
+                    let slot = next.fetch_add(1, Ordering::Relaxed);
+                    if slot >= misses.len() {
+                        break;
+                    }
+                    let i = misses[slot];
+                    let cell = &cells[i];
+                    println!(
+                        "campaign[{}]: run  {} ({})",
+                        spec.name,
+                        cell.name,
+                        &cell.key[..12]
+                    );
+                    let t0 = std::time::Instant::now();
+                    let outcome = match Orchestrator::new(rt.clone()).run(&cell.job) {
+                        Ok(report) => match store.put(&cell.key, &cell.name, &cell.job, &report) {
+                            Ok(()) => {
+                                println!(
+                                    "campaign[{}]: done {} in {:.1}s (acc {:.3})",
+                                    spec.name,
+                                    cell.name,
+                                    t0.elapsed().as_secs_f64(),
+                                    report.final_accuracy()
+                                );
+                                CellOutcome {
+                                    cell: cell.clone(),
+                                    cached: false,
+                                    report: Some(report),
+                                    error: None,
+                                }
+                            }
+                            Err(e) => CellOutcome {
+                                cell: cell.clone(),
+                                cached: false,
+                                report: Some(report),
+                                error: Some(format!("persisting result: {e:#}")),
+                            },
+                        },
+                        Err(e) => {
+                            println!("campaign[{}]: FAIL {} — {e:#}", spec.name, cell.name);
+                            CellOutcome {
+                                cell: cell.clone(),
+                                cached: false,
+                                report: None,
+                                error: Some(format!("{e:#}")),
+                            }
+                        }
+                    };
+                    done.lock().unwrap().push((i, outcome));
+                });
+            }
+        });
+        for (i, outcome) in done.into_inner().unwrap() {
+            slots[i] = Some(outcome);
+        }
+    }
+
+    Ok(CampaignOutcome {
+        name: spec.name.clone(),
+        cells: slots
+            .into_iter()
+            .map(|s| s.expect("every cell resolves to an outcome"))
+            .collect(),
+    })
+}

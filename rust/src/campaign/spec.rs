@@ -1,0 +1,452 @@
+//! The declarative campaign specification: a complete base [`JobConfig`]
+//! plus sweep *axes* (expanded as a cartesian grid) and/or explicit *cells*
+//! (named per-cell override sets, for sweeps that are not a pure grid —
+//! e.g. Fig 11's paired strategy/topology cells).
+//!
+//! A spec loads from YAML — the regular job-config document with two extra
+//! sections — or is built programmatically through [`CampaignSpec::builder`]:
+//!
+//! ```yaml
+//! campaign:
+//!   name: smoke
+//!   jobs: 2                     # outer job-level parallelism (0 = auto)
+//! axes:
+//!   strategy: [fedavg, fedprox]
+//!   seed: [1, 2]
+//! cells:                        # optional explicit cells (appended after
+//!   - name: mesh                # the grid; keys other than `name` are
+//!     strategy: fedstellar      # axis overrides)
+//! # ... followed by a complete base job config (job/dataset/strategy/
+//! # topology/...) exactly as `flsim run --config` takes it.
+//! ```
+//!
+//! Axis *names* expand in sorted order and axis *values* in listed order,
+//! so the cell list is deterministic no matter how the YAML is formatted.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::job::JobConfig;
+use crate::data::dataset::Distribution;
+use crate::strategy::StrategyKind;
+use crate::topology::TopologyKind;
+use crate::util::yaml::Yaml;
+
+/// An explicit cell: an optional name plus axis overrides applied to the
+/// base job. YAML cells apply overrides in sorted key order (they come out
+/// of a `BTreeMap`); builder cells apply them in listed order. Either way
+/// the result is order-independent: every axis touches a disjoint knob, and
+/// strategy↔topology reconciliation happens once per cell after all
+/// overrides (see [`crate::campaign::grid::expand`]).
+#[derive(Clone, Debug)]
+pub struct CellSpec {
+    pub name: Option<String>,
+    pub overrides: Vec<(String, Yaml)>,
+}
+
+/// A declarative experiment sweep.
+#[derive(Clone, Debug)]
+pub struct CampaignSpec {
+    pub name: String,
+    /// The fully-resolved job every cell starts from.
+    pub base: JobConfig,
+    /// Sweep axes: axis name → values (BTreeMap ⇒ sorted axis order).
+    pub axes: BTreeMap<String, Vec<Yaml>>,
+    /// Explicit cells, appended after the grid.
+    pub cells: Vec<CellSpec>,
+    /// Job-level scheduler width: how many cells run concurrently
+    /// (`0` = one per available core, `1` = serial — the default).
+    pub jobs: usize,
+}
+
+impl CampaignSpec {
+    pub fn builder(name: &str, base: JobConfig) -> CampaignBuilder {
+        CampaignBuilder {
+            spec: CampaignSpec {
+                name: name.to_string(),
+                base,
+                axes: BTreeMap::new(),
+                cells: Vec::new(),
+                jobs: 1,
+            },
+        }
+    }
+
+    pub fn from_yaml_str(src: &str) -> Result<CampaignSpec> {
+        let y = Yaml::parse(src).map_err(|e| anyhow!("campaign spec: {e}"))?;
+        Self::from_yaml(&y)
+    }
+
+    pub fn from_yaml_file(path: &str) -> Result<CampaignSpec> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading campaign spec {path}: {e}"))?;
+        Self::from_yaml_str(&src)
+    }
+
+    pub fn from_yaml(y: &Yaml) -> Result<CampaignSpec> {
+        // The base is the same document's regular job config — `campaign:`,
+        // `axes:` and `cells:` are simply extra top-level sections.
+        let base = JobConfig::from_yaml(y)?;
+
+        let c = y.get("campaign").unwrap_or(&Yaml::Null);
+        let name = c
+            .get("name")
+            .and_then(Yaml::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| base.name.clone());
+        let jobs = match c.get("jobs").and_then(Yaml::as_i64).unwrap_or(1) {
+            n if n < 0 => bail!("campaign.jobs must be >= 0 (0 = auto), got {n}"),
+            n => n as usize,
+        };
+
+        let mut axes = BTreeMap::new();
+        if let Some(a) = y.get("axes") {
+            let m = a
+                .as_map()
+                .ok_or_else(|| anyhow!("campaign spec: 'axes' must be a mapping"))?;
+            for (axis, vals) in m {
+                let vals = vals
+                    .as_seq()
+                    .ok_or_else(|| anyhow!("axis '{axis}': values must be a list"))?;
+                if vals.is_empty() {
+                    bail!("axis '{axis}': empty value list");
+                }
+                axes.insert(axis.clone(), vals.to_vec());
+            }
+        }
+
+        let mut cells = Vec::new();
+        if let Some(cs) = y.get("cells") {
+            let seq = cs
+                .as_seq()
+                .ok_or_else(|| anyhow!("campaign spec: 'cells' must be a list"))?;
+            for cy in seq {
+                let m = cy
+                    .as_map()
+                    .ok_or_else(|| anyhow!("campaign spec: each cell must be a mapping"))?;
+                let mut name = None;
+                let mut overrides = Vec::new();
+                for (k, v) in m {
+                    if k == "name" {
+                        name = v.as_str().map(str::to_string);
+                    } else {
+                        overrides.push((k.clone(), v.clone()));
+                    }
+                }
+                cells.push(CellSpec { name, overrides });
+            }
+        }
+
+        Ok(CampaignSpec {
+            name,
+            base,
+            axes,
+            cells,
+            jobs,
+        })
+    }
+
+    /// The job scheduler's worker count: `jobs`, with `0` resolved to the
+    /// number of available cores.
+    pub fn effective_jobs(&self) -> usize {
+        match self.jobs {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            n => n,
+        }
+    }
+}
+
+/// Fluent construction of a [`CampaignSpec`] from code (the experiment
+/// ports and examples use this instead of YAML).
+pub struct CampaignBuilder {
+    spec: CampaignSpec,
+}
+
+impl CampaignBuilder {
+    /// Add a sweep axis (replaces any previous axis of the same name).
+    pub fn axis(mut self, name: &str, values: Vec<Yaml>) -> CampaignBuilder {
+        self.spec.axes.insert(name.to_string(), values);
+        self
+    }
+
+    /// Add a string-valued sweep axis.
+    pub fn axis_strs(self, name: &str, values: &[&str]) -> CampaignBuilder {
+        self.axis(name, values.iter().map(|v| Yaml::from(*v)).collect())
+    }
+
+    /// Add an integer-valued sweep axis.
+    pub fn axis_ints(self, name: &str, values: &[i64]) -> CampaignBuilder {
+        self.axis(name, values.iter().map(|v| Yaml::from(*v)).collect())
+    }
+
+    /// Add an explicit named cell with axis overrides.
+    pub fn cell(mut self, name: &str, overrides: Vec<(&str, Yaml)>) -> CampaignBuilder {
+        self.spec.cells.push(CellSpec {
+            name: Some(name.to_string()),
+            overrides: overrides
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        });
+        self
+    }
+
+    /// Set the job-level scheduler width (0 = auto).
+    pub fn jobs(mut self, jobs: usize) -> CampaignBuilder {
+        self.spec.jobs = jobs;
+        self
+    }
+
+    pub fn build(self) -> CampaignSpec {
+        self.spec
+    }
+}
+
+/// Apply one axis override to a job. The supported axis names are the
+/// knobs the paper's evaluation grid sweeps (strategy × topology ×
+/// partition × heterogeneity × seed) plus the obvious scale/training knobs.
+pub fn apply_axis(job: &mut JobConfig, axis: &str, value: &Yaml) -> Result<()> {
+    let want_str = || {
+        value
+            .as_str()
+            .ok_or_else(|| anyhow!("axis '{axis}': expected a string, got {value:?}"))
+    };
+    let want_i64 = || {
+        value
+            .as_i64()
+            .ok_or_else(|| anyhow!("axis '{axis}': expected an integer, got {value:?}"))
+    };
+    // Counts and seeds: a negative value must not wrap through `as u64`
+    // (`rounds: [-1]` would otherwise loop for u64::MAX rounds).
+    let want_nonneg = || -> Result<i64> {
+        let v = want_i64()?;
+        if v < 0 {
+            return Err(anyhow!(
+                "axis '{axis}': expected a non-negative integer, got {v}"
+            ));
+        }
+        Ok(v)
+    };
+    let want_f64 = || {
+        value
+            .as_f64()
+            .ok_or_else(|| anyhow!("axis '{axis}': expected a number, got {value:?}"))
+    };
+    match axis {
+        "strategy" => {
+            let name = want_str()?;
+            // Re-selecting the base strategy keeps its configured
+            // hyper-parameters (mu, sigma, ...); a *different* strategy has
+            // no base hyper-params to inherit and parses with its defaults.
+            // Strategy-mode ↔ topology reconciliation happens once per cell
+            // in grid expansion, after all overrides — not here — so cell
+            // behavior never depends on override order.
+            if name != job.strategy.name() {
+                job.strategy = StrategyKind::parse(name, &Yaml::Null)?;
+            }
+        }
+        "topology" => job.topology = TopologyKind::parse(want_str()?)?,
+        "backend" => job.backend = want_str()?.to_string(),
+        "partition" => job.dataset.distribution = parse_partition(value)?,
+        "seed" => job.seed = want_nonneg()? as u64,
+        "rounds" => job.rounds = want_nonneg()? as u64,
+        "clients" => job.n_clients = want_nonneg()? as usize,
+        "workers" => job.n_workers = want_nonneg()? as usize,
+        "dataset_n" => job.dataset.n = want_nonneg()? as usize,
+        "heterogeneity" => job.heterogeneity = want_f64()?,
+        "client_fraction" => job.client_fraction = want_f64()?,
+        "learning_rate" => job.train.learning_rate = want_f64()? as f32,
+        "local_epochs" => job.train.local_epochs = want_nonneg()? as usize,
+        "hw_profile" | "hardware_profile" => {
+            job.hw_profile = crate::aggregate::mean::ReductionOrder::parse(want_str()?)?;
+        }
+        "parallelism" => job.parallelism = want_nonneg()? as usize,
+        _ => bail!(
+            "unknown campaign axis '{axis}' (supported: strategy topology backend partition \
+             seed rounds clients workers dataset_n heterogeneity client_fraction \
+             learning_rate local_epochs hw_profile parallelism)"
+        ),
+    }
+    Ok(())
+}
+
+/// Partition axis values: `iid`, `dirichlet`/`dirichlet:<alpha>`,
+/// `shards`/`shards:<k>`, or the mapping form `{kind: dirichlet, alpha: x}`.
+fn parse_partition(value: &Yaml) -> Result<Distribution> {
+    if let Some(s) = value.as_str() {
+        let (kind, param) = match s.split_once(':') {
+            Some((k, p)) => (k, Some(p)),
+            None => (s, None),
+        };
+        return Ok(match kind {
+            "iid" | "uniform" => Distribution::Iid,
+            "dirichlet" => Distribution::Dirichlet {
+                alpha: match param {
+                    Some(p) => p
+                        .parse()
+                        .map_err(|_| anyhow!("partition: bad dirichlet alpha '{p}'"))?,
+                    None => 0.5,
+                },
+            },
+            "shards" => Distribution::Shards {
+                shards_per_client: match param {
+                    Some(p) => p
+                        .parse()
+                        .map_err(|_| anyhow!("partition: bad shard count '{p}'"))?,
+                    None => 2,
+                },
+            },
+            other => bail!("unknown partition kind '{other}'"),
+        });
+    }
+    if value.as_map().is_some() {
+        let kind = value
+            .get("kind")
+            .and_then(Yaml::as_str)
+            .ok_or_else(|| anyhow!("partition mapping: missing 'kind'"))?;
+        return Ok(match kind {
+            "iid" | "uniform" => Distribution::Iid,
+            "dirichlet" => Distribution::Dirichlet {
+                alpha: value.get("alpha").and_then(Yaml::as_f64).unwrap_or(0.5),
+            },
+            "shards" => Distribution::Shards {
+                shards_per_client: value
+                    .get("shards_per_client")
+                    .and_then(Yaml::as_i64)
+                    .unwrap_or(2) as usize,
+            },
+            other => bail!("unknown partition kind '{other}'"),
+        });
+    }
+    bail!("partition axis: expected a string or mapping, got {value:?}")
+}
+
+/// Human-readable form of an axis value, used in auto-generated cell names.
+pub fn value_label(value: &Yaml) -> String {
+    match value {
+        Yaml::Str(s) => s.clone(),
+        Yaml::Int(i) => i.to_string(),
+        Yaml::Float(f) => format!("{f}"),
+        Yaml::Bool(b) => b.to_string(),
+        other => format!("{other:?}"),
+    }
+}
+
+/// One auto-name fragment for `axis=value`: string values stand alone
+/// (`fedavg`), everything else is prefixed with the axis (`seed1`).
+pub fn name_part(axis: &str, value: &Yaml) -> String {
+    match value {
+        Yaml::Str(s) => s.clone(),
+        other => format!("{axis}{}", value_label(other)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = r#"
+campaign:
+  name: demo
+  jobs: 2
+axes:
+  strategy: [fedavg, fedprox]
+  seed: [1, 2]
+cells:
+  - name: mesh
+    strategy: fedstellar
+job:
+  name: demo_base
+  rounds: 2
+dataset:
+  name: cifar10_synth
+  n: 600
+strategy:
+  name: fedavg
+  backend: cnn
+topology:
+  kind: client_server
+  clients: 4
+  workers: 1
+"#;
+
+    #[test]
+    fn parses_spec_sections() {
+        let s = CampaignSpec::from_yaml_str(SPEC).unwrap();
+        assert_eq!(s.name, "demo");
+        assert_eq!(s.jobs, 2);
+        assert_eq!(s.effective_jobs(), 2);
+        assert_eq!(s.base.rounds, 2);
+        assert_eq!(s.base.n_clients, 4);
+        let axes: Vec<&String> = s.axes.keys().collect();
+        assert_eq!(axes, ["seed", "strategy"]); // sorted axis order
+        assert_eq!(s.axes["strategy"].len(), 2);
+        assert_eq!(s.cells.len(), 1);
+        assert_eq!(s.cells[0].name.as_deref(), Some("mesh"));
+        assert_eq!(s.cells[0].overrides.len(), 1);
+    }
+
+    #[test]
+    fn campaign_name_defaults_to_base_job_name() {
+        let src = SPEC.replace("  name: demo\n", "");
+        let s = CampaignSpec::from_yaml_str(&src).unwrap();
+        assert_eq!(s.name, "demo_base");
+    }
+
+    #[test]
+    fn axis_application() {
+        let mut j = JobConfig::default_cnn("fedavg");
+        apply_axis(&mut j, "seed", &Yaml::Int(7)).unwrap();
+        assert_eq!(j.seed, 7);
+        apply_axis(&mut j, "partition", &Yaml::from("dirichlet:0.1")).unwrap();
+        assert_eq!(j.dataset.distribution, Distribution::Dirichlet { alpha: 0.1 });
+        apply_axis(&mut j, "partition", &Yaml::from("iid")).unwrap();
+        assert_eq!(j.dataset.distribution, Distribution::Iid);
+        apply_axis(&mut j, "heterogeneity", &Yaml::Float(0.5)).unwrap();
+        assert_eq!(j.heterogeneity, 0.5);
+        apply_axis(&mut j, "strategy", &Yaml::from("fedstellar")).unwrap();
+        assert_eq!(j.strategy.name(), "fedstellar");
+        assert!(apply_axis(&mut j, "nonsense", &Yaml::Int(1)).is_err());
+        assert!(apply_axis(&mut j, "seed", &Yaml::from("not_an_int")).is_err());
+        // Negative counts must error, not wrap through `as u64`.
+        assert!(apply_axis(&mut j, "rounds", &Yaml::Int(-1)).is_err());
+        assert!(apply_axis(&mut j, "local_epochs", &Yaml::Int(-2)).is_err());
+        assert!(apply_axis(&mut j, "seed", &Yaml::Int(-3)).is_err());
+    }
+
+    #[test]
+    fn strategy_axis_keeps_base_hyper_params() {
+        let extra = Yaml::parse("mu: 0.1\n").unwrap();
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.strategy = StrategyKind::parse("fedprox", &extra).unwrap();
+        // Re-selecting the base strategy keeps its configured mu ...
+        apply_axis(&mut j, "strategy", &Yaml::from("fedprox")).unwrap();
+        assert_eq!(j.strategy, StrategyKind::FedProx { mu: 0.1 });
+        // ... while a different strategy parses with its own defaults.
+        apply_axis(&mut j, "strategy", &Yaml::from("moon")).unwrap();
+        assert_eq!(j.strategy, StrategyKind::Moon { mu: 1.0, tau: 0.5 });
+    }
+
+    #[test]
+    fn name_parts() {
+        assert_eq!(name_part("strategy", &Yaml::from("fedavg")), "fedavg");
+        assert_eq!(name_part("seed", &Yaml::Int(3)), "seed3");
+        assert_eq!(name_part("heterogeneity", &Yaml::Float(0.5)), "heterogeneity0.5");
+    }
+
+    #[test]
+    fn builder_roundtrip() {
+        let spec = CampaignSpec::builder("b", JobConfig::default_cnn("fedavg"))
+            .axis_strs("strategy", &["fedavg", "fedprox"])
+            .axis_ints("seed", &[1, 2])
+            .cell("mesh", vec![("strategy", "fedstellar".into())])
+            .jobs(0)
+            .build();
+        assert_eq!(spec.axes.len(), 2);
+        assert_eq!(spec.cells.len(), 1);
+        assert!(spec.effective_jobs() >= 1);
+    }
+}

@@ -14,6 +14,7 @@ use crate::data::dataset::{DatasetSpec, Distribution};
 use crate::kvstore::netsim::{LinkModel, LinkPolicy};
 use crate::strategy::StrategyKind;
 use crate::topology::TopologyKind;
+use crate::util::json::Json;
 use crate::util::yaml::Yaml;
 
 /// Training hyper-parameters (paper Fig 2d `train_params`).
@@ -317,6 +318,111 @@ impl JobConfig {
         Ok(cfg)
     }
 
+    /// Canonical JSON of the job in a fixed key order. The campaign result
+    /// cache keys cells on the SHA-256 of this string (plus the engine
+    /// version), independent of YAML field order, spec formatting, or how
+    /// the config was constructed.
+    ///
+    /// Two deliberate choices about what the key covers:
+    /// * `parallelism` is **excluded**: by the determinism contract (README)
+    ///   any worker count produces bitwise-identical results, so a cached
+    ///   cell is valid at every parallelism level and campaign schedule.
+    /// * `name` is **included**: the stored [`RunReport`]'s label must match
+    ///   the cell name for resumed campaign reports to be byte-identical,
+    ///   so a renamed-but-otherwise-identical cell re-runs rather than
+    ///   serving a report under the old label.
+    pub fn canonical_json(&self) -> Json {
+        let opt_f64 = |v: Option<f64>| match v {
+            Some(x) => Json::Num(x),
+            None => Json::Null,
+        };
+        let link = |m: &LinkModel| {
+            Json::obj(vec![
+                ("latency_ms", Json::Num(m.latency_ms)),
+                ("bandwidth_mbps", Json::Num(m.bandwidth_mbps)),
+            ])
+        };
+        Json::obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            // Decimal string, not a JSON number: a u64 seed >= 2^53 would
+            // lose precision through the f64-backed Json::Num and collide
+            // distinct seeds onto one cache key.
+            ("seed", Json::Str(self.seed.to_string())),
+            ("rounds", Json::from(self.rounds as usize)),
+            ("backend", Json::from(self.backend.as_str())),
+            ("strategy", strategy_canonical_json(&self.strategy)),
+            ("topology", Json::from(self.topology.name())),
+            ("n_clients", Json::from(self.n_clients)),
+            ("n_workers", Json::from(self.n_workers)),
+            (
+                "dataset",
+                Json::obj(vec![
+                    ("name", Json::from(self.dataset.name.as_str())),
+                    ("n", Json::from(self.dataset.n)),
+                    ("train_frac", Json::Num(self.dataset.train_frac)),
+                    (
+                        "distribution",
+                        match &self.dataset.distribution {
+                            Distribution::Iid => Json::obj(vec![("kind", Json::from("iid"))]),
+                            Distribution::Dirichlet { alpha } => Json::obj(vec![
+                                ("kind", Json::from("dirichlet")),
+                                ("alpha", Json::Num(*alpha)),
+                            ]),
+                            Distribution::Shards { shards_per_client } => Json::obj(vec![
+                                ("kind", Json::from("shards")),
+                                ("shards_per_client", Json::from(*shards_per_client)),
+                            ]),
+                        },
+                    ),
+                ]),
+            ),
+            (
+                "train",
+                Json::obj(vec![
+                    ("learning_rate", Json::Num(self.train.learning_rate as f64)),
+                    ("local_epochs", Json::from(self.train.local_epochs)),
+                ]),
+            ),
+            (
+                "consensus",
+                Json::obj(vec![
+                    ("runnable", Json::from(self.consensus.runnable.as_str())),
+                    (
+                        "malicious_workers",
+                        Json::Arr(
+                            self.consensus
+                                .malicious_workers
+                                .iter()
+                                .map(|w| Json::from(w.as_str()))
+                                .collect(),
+                        ),
+                    ),
+                    ("on_chain", Json::from(self.consensus.on_chain)),
+                ]),
+            ),
+            (
+                "chain",
+                Json::obj(vec![
+                    ("enabled", Json::from(self.chain.enabled)),
+                    ("platform", Json::from(self.chain.platform.as_str())),
+                ]),
+            ),
+            ("hw_profile", Json::from(self.hw_profile.key())),
+            ("round_timeout_secs", opt_f64(self.round_timeout_secs)),
+            (
+                "network",
+                Json::obj(vec![
+                    ("edge", link(&self.network.edge)),
+                    ("lan", link(&self.network.lan)),
+                    ("wan", link(&self.network.wan)),
+                ]),
+            ),
+            ("heterogeneity", Json::Num(self.heterogeneity)),
+            ("round_deadline_secs", opt_f64(self.round_deadline_secs)),
+            ("client_fraction", Json::Num(self.client_fraction)),
+        ])
+    }
+
     /// The round engine's worker count: `parallelism`, with `0` resolved to
     /// the number of available cores.
     pub fn effective_parallelism(&self) -> usize {
@@ -380,6 +486,42 @@ impl JobConfig {
         }
         Ok(())
     }
+}
+
+/// Strategy selection + hyper-parameters in canonical key order (part of
+/// [`JobConfig::canonical_json`]).
+fn strategy_canonical_json(s: &StrategyKind) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![("name", Json::from(s.name()))];
+    match s {
+        StrategyKind::FedAvg | StrategyKind::Scaffold => {}
+        StrategyKind::FedAvgM { server_momentum } => {
+            pairs.push(("server_momentum", Json::Num(*server_momentum as f64)));
+        }
+        StrategyKind::FedProx { mu } => pairs.push(("mu", Json::Num(*mu as f64))),
+        StrategyKind::Moon { mu, tau } => {
+            pairs.push(("mu", Json::Num(*mu as f64)));
+            pairs.push(("tau", Json::Num(*tau as f64)));
+        }
+        StrategyKind::DpFl { clip, sigma } => {
+            pairs.push(("clip", Json::Num(*clip)));
+            pairs.push(("sigma", Json::Num(*sigma)));
+        }
+        StrategyKind::FedOpt { kind, server_lr } => {
+            pairs.push(("server_opt", Json::from(kind.name())));
+            pairs.push(("server_lr", Json::Num(*server_lr as f64)));
+        }
+        StrategyKind::FlHc {
+            cluster_round,
+            n_clusters,
+        } => {
+            pairs.push(("cluster_round", Json::from(*cluster_round as usize)));
+            pairs.push(("n_clusters", Json::from(*n_clusters)));
+        }
+        StrategyKind::Fedstellar { neighbors } => {
+            pairs.push(("neighbors", Json::from(*neighbors)));
+        }
+    }
+    Json::obj(pairs)
 }
 
 fn parse_link(y: &Yaml, base: LinkModel) -> LinkModel {
@@ -582,6 +724,39 @@ network:
         let mut j = JobConfig::default_cnn("fedavg");
         j.network.edge.bandwidth_mbps = 0.0;
         assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn canonical_json_is_stable_and_excludes_parallelism() {
+        let j = JobConfig::default_cnn("fedavg");
+        let a = j.canonical_json().to_string();
+        assert_eq!(a, j.canonical_json().to_string());
+        let parsed = Json::parse(&a).unwrap();
+        assert_eq!(
+            parsed
+                .get("strategy")
+                .and_then(|s| s.get("name"))
+                .and_then(Json::as_str),
+            Some("fedavg")
+        );
+        // Parallelism is a wall-clock knob, not a result knob — it never
+        // enters the canonical form (cache hits are schedule-invariant).
+        let mut p8 = JobConfig::default_cnn("fedavg");
+        p8.parallelism = 8;
+        assert_eq!(a, p8.canonical_json().to_string());
+        // Every other knob does.
+        let mut seeded = JobConfig::default_cnn("fedavg");
+        seeded.seed = 43;
+        assert_ne!(a, seeded.canonical_json().to_string());
+        // Seeds beyond f64's 2^53 integer range must stay distinct.
+        let mut big_a = JobConfig::default_cnn("fedavg");
+        big_a.seed = (1u64 << 53) + 1;
+        let mut big_b = JobConfig::default_cnn("fedavg");
+        big_b.seed = 1u64 << 53;
+        assert_ne!(
+            big_a.canonical_json().to_string(),
+            big_b.canonical_json().to_string()
+        );
     }
 
     #[test]

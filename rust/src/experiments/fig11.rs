@@ -2,58 +2,55 @@
 //! Expected shape: similar accuracy everywhere; hierarchical slightly higher
 //! loss; hierarchical/decentralized higher CPU+memory; decentralized the
 //! most network bandwidth.
+//!
+//! Ported to a thin campaign spec: three explicit cells (the sweep is
+//! *paired* — the decentralized point swaps both strategy and topology —
+//! so it is not a pure axis grid). Golden `results/fig11/<label>.{csv,json}`
+//! outputs are unchanged, and re-running resumes from the result cache.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::campaign::CampaignSpec;
 use crate::config::job::JobConfig;
-use crate::experiments::{dataset_n_override, rounds_override, save_report};
+use crate::experiments::{dataset_n_override, rounds_override, run_figure_campaign};
 use crate::metrics::dashboard;
 use crate::metrics::report::RunReport;
-use crate::orchestrator::Orchestrator;
 use crate::runtime::pjrt::Runtime;
-use crate::topology::TopologyKind;
+use crate::util::yaml::Yaml;
 
+pub fn spec() -> CampaignSpec {
+    let mut base = JobConfig::default_cnn("fedavg");
+    base.rounds = rounds_override(30);
+    base.dataset.n = dataset_n_override(5000);
+    CampaignSpec::builder("fig11", base)
+        // (1) client-server: FedAvg [1] — the base job as-is.
+        .cell("client_server", vec![])
+        // (2) hierarchical: leaf-cluster aggregation + root merge ([26]'s
+        //     topology; 3 clusters over 10 clients).
+        .cell(
+            "hierarchical",
+            vec![("topology", "hierarchical".into()), ("workers", Yaml::Int(3))],
+        )
+        // (3) decentralized: Fedstellar [24] on a full mesh.
+        .cell("decentralized", vec![("strategy", "fedstellar".into())])
+        .build()
+}
+
+/// The expanded per-cell job list (kept as the historical public surface;
+/// `run()` goes through the campaign engine directly). Infallible for the
+/// static spec above.
 pub fn jobs() -> Vec<JobConfig> {
-    let mut out = Vec::new();
-
-    // (1) client-server: FedAvg [1].
-    let mut cs = JobConfig::default_cnn("fedavg");
-    cs.name = "client_server".into();
-    out.push(cs);
-
-    // (2) hierarchical: leaf-cluster aggregation + root merge ([26]'s
-    //     topology; 3 clusters over 10 clients).
-    let mut h = JobConfig::default_cnn("fedavg");
-    h.name = "hierarchical".into();
-    h.topology = TopologyKind::Hierarchical;
-    h.n_workers = 3;
-    out.push(h);
-
-    // (3) decentralized: Fedstellar [24] on a full mesh.
-    let mut d = JobConfig::default_cnn("fedstellar");
-    d.name = "decentralized".into();
-    out.push(d);
-
-    for j in &mut out {
-        j.rounds = rounds_override(30);
-        j.dataset.n = dataset_n_override(5000);
-    }
-    out
+    crate::campaign::expand(&spec())
+        .expect("fig11 cells expand")
+        .into_iter()
+        .map(|c| c.job)
+        .collect()
 }
 
 pub fn run(rt: Arc<Runtime>) -> Result<Vec<RunReport>> {
-    let orch = Orchestrator::new(rt);
-    let mut reports = Vec::new();
-    for job in jobs() {
-        let (report, _secs) =
-            crate::bench::time_once(&format!("fig11/{}", job.name), || orch.run(&job));
-        let report = report?;
-        println!("{}", dashboard::run_line(&report));
-        save_report("fig11", &report)?;
-        reports.push(report);
-    }
+    let reports = run_figure_campaign(rt, "fig11", &spec())?;
     println!();
     println!("{}", dashboard::comparison("Fig 11: topologies", &reports));
     Ok(reports)

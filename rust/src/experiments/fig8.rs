@@ -2,16 +2,22 @@
 //! the paper's standard setting (CIFAR-10-like, Dirichlet α=0.5, 10
 //! clients, batch 64, 30 rounds): accuracy, loss, wall time, CPU/memory,
 //! network bandwidth.
+//!
+//! Ported to a thin campaign spec: one `strategy` axis over the base
+//! preset, executed through the campaign engine (re-running resumes from
+//! `results/fig8/cache`). Golden outputs — the
+//! `results/fig8/<strategy>.{csv,json}` files and the printed tables — are
+//! unchanged.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::campaign::CampaignSpec;
 use crate::config::job::JobConfig;
-use crate::experiments::{dataset_n_override, rounds_override, save_report};
+use crate::experiments::{dataset_n_override, rounds_override, run_figure_campaign};
 use crate::metrics::dashboard;
 use crate::metrics::report::RunReport;
-use crate::orchestrator::Orchestrator;
 use crate::runtime::pjrt::Runtime;
 
 pub const STRATEGIES: [&str; 7] = [
@@ -24,30 +30,28 @@ pub const STRATEGIES: [&str; 7] = [
     "fedstellar",
 ];
 
+pub fn spec() -> CampaignSpec {
+    let mut base = JobConfig::default_cnn("fedavg");
+    base.rounds = rounds_override(30);
+    base.dataset.n = dataset_n_override(5000);
+    CampaignSpec::builder("fig8", base)
+        .axis_strs("strategy", &STRATEGIES)
+        .build()
+}
+
+/// The expanded per-cell job list (kept as the historical public surface;
+/// `run()` goes through the campaign engine directly). Infallible for the
+/// static spec above.
 pub fn jobs() -> Vec<JobConfig> {
-    STRATEGIES
-        .iter()
-        .map(|s| {
-            let mut j = JobConfig::default_cnn(s);
-            j.rounds = rounds_override(30);
-            j.dataset.n = dataset_n_override(5000);
-            j.name = s.to_string();
-            j
-        })
+    crate::campaign::expand(&spec())
+        .expect("fig8 grid expands")
+        .into_iter()
+        .map(|c| c.job)
         .collect()
 }
 
 pub fn run(rt: Arc<Runtime>) -> Result<Vec<RunReport>> {
-    let orch = Orchestrator::new(rt);
-    let mut reports = Vec::new();
-    for job in jobs() {
-        let (report, _secs) =
-            crate::bench::time_once(&format!("fig8/{}", job.name), || orch.run(&job));
-        let report = report?;
-        println!("{}", dashboard::run_line(&report));
-        save_report("fig8", &report)?;
-        reports.push(report);
-    }
+    let reports = run_figure_campaign(rt, "fig8", &spec())?;
     println!();
     println!("{}", dashboard::comparison("Fig 8: FL techniques", &reports));
     println!(

@@ -3,16 +3,20 @@
 //! property is backend-agnosticism — the same FedAvg job over the `cnn`
 //! ("torch"), `cnn_v2` ("tensorflow") and `mlp` ("sklearn") manifest
 //! backends (DESIGN.md §2).
+//!
+//! Ported to a thin campaign spec: three explicit named cells sweeping the
+//! `backend` axis (the cells carry the paper's library labels, keeping the
+//! golden `results/fig9/<label>.{csv,json}` outputs).
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::campaign::CampaignSpec;
 use crate::config::job::JobConfig;
-use crate::experiments::{dataset_n_override, rounds_override, save_report};
+use crate::experiments::{dataset_n_override, rounds_override, run_figure_campaign};
 use crate::metrics::dashboard;
 use crate::metrics::report::RunReport;
-use crate::orchestrator::Orchestrator;
 use crate::runtime::pjrt::Runtime;
 
 pub const BACKENDS: [(&str, &str); 3] = [
@@ -21,31 +25,30 @@ pub const BACKENDS: [(&str, &str); 3] = [
     ("mlp", "sklearn-analog"),
 ];
 
+pub fn spec() -> CampaignSpec {
+    let mut base = JobConfig::default_cnn("fedavg");
+    base.rounds = rounds_override(30);
+    base.dataset.n = dataset_n_override(5000);
+    let mut b = CampaignSpec::builder("fig9", base);
+    for (backend, label) in BACKENDS {
+        b = b.cell(label, vec![("backend", backend.into())]);
+    }
+    b.build()
+}
+
+/// The expanded per-cell job list (kept as the historical public surface;
+/// `run()` goes through the campaign engine directly). Infallible for the
+/// static spec above.
 pub fn jobs() -> Vec<JobConfig> {
-    BACKENDS
-        .iter()
-        .map(|(backend, label)| {
-            let mut j = JobConfig::default_cnn("fedavg");
-            j.backend = backend.to_string();
-            j.rounds = rounds_override(30);
-            j.dataset.n = dataset_n_override(5000);
-            j.name = label.to_string();
-            j
-        })
+    crate::campaign::expand(&spec())
+        .expect("fig9 cells expand")
+        .into_iter()
+        .map(|c| c.job)
         .collect()
 }
 
 pub fn run(rt: Arc<Runtime>) -> Result<Vec<RunReport>> {
-    let orch = Orchestrator::new(rt);
-    let mut reports = Vec::new();
-    for job in jobs() {
-        let (report, _secs) =
-            crate::bench::time_once(&format!("fig9/{}", job.name), || orch.run(&job));
-        let report = report?;
-        println!("{}", dashboard::run_line(&report));
-        save_report("fig9", &report)?;
-        reports.push(report);
-    }
+    let reports = run_figure_campaign(rt, "fig9", &spec())?;
     println!();
     println!("{}", dashboard::comparison("Fig 9: ML library backends", &reports));
     Ok(reports)

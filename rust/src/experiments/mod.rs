@@ -10,8 +10,11 @@ pub mod tables12;
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::campaign::{CampaignSpec, ResultStore};
+use crate::metrics::dashboard;
+use crate::metrics::report::RunReport;
 use crate::runtime::pjrt::Runtime;
 
 /// Rounds override for quick runs: `FLSIM_ROUNDS=N` (full paper setting
@@ -38,6 +41,48 @@ pub fn save_report(experiment: &str, report: &crate::metrics::report::RunReport)
     report.save_csv(dir.join(format!("{}.csv", report.label)))?;
     report.save_json(dir.join(format!("{}.json", report.label)))?;
     Ok(())
+}
+
+/// Execute a figure's campaign spec over the shared per-experiment result
+/// store (`results/<experiment>/cache` — a second run of the same figure
+/// resumes from cache), keep the per-cell golden outputs
+/// (`results/<experiment>/<label>.{csv,json}`), and return the reports in
+/// spec order.
+///
+/// `FLSIM_REFRESH=1` forces every cell to re-execute and overwrite its
+/// store entry — the figure *bench* binaries set it so wall-clock/CPU
+/// columns are measured fresh instead of served from a stale first run.
+pub fn run_figure_campaign(
+    rt: Arc<Runtime>,
+    experiment: &str,
+    spec: &CampaignSpec,
+) -> Result<Vec<RunReport>> {
+    let store = ResultStore::open(
+        std::path::PathBuf::from("results").join(experiment).join("cache"),
+    )?;
+    let refresh = std::env::var("FLSIM_REFRESH").map(|v| v == "1").unwrap_or(false);
+    let outcome = crate::campaign::run_with_options(rt, spec, &store, refresh)?;
+    let mut reports = Vec::new();
+    for c in outcome.completed() {
+        let r = c.report.as_ref().expect("completed cells carry a report");
+        println!(
+            "{}{}",
+            if c.cached { "[cache] " } else { "" },
+            dashboard::run_line(r)
+        );
+        save_report(experiment, r)?;
+        reports.push(r.clone());
+    }
+    println!("{}", outcome.summary());
+    let failures = outcome.failure_lines();
+    if !failures.is_empty() {
+        bail!(
+            "experiment {experiment}: {} cells failed (completed cells persisted):\n  {}",
+            failures.len(),
+            failures.join("\n  ")
+        );
+    }
+    Ok(reports)
 }
 
 /// Run an experiment by figure/table id.

@@ -18,6 +18,7 @@
 
 pub mod aggregate;
 pub mod bench;
+pub mod campaign;
 pub mod chain;
 pub mod config;
 pub mod consensus;
@@ -35,6 +36,7 @@ pub mod util;
 
 /// Convenient re-exports for examples and binaries.
 pub mod prelude {
+    pub use crate::campaign::{CampaignReport, CampaignSpec, ResultStore};
     pub use crate::config::job::JobConfig;
     pub use crate::controller::sync::FaultPlan;
     pub use crate::data::dataset::DatasetSpec;

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! flsim run --config configs/fedavg_cifar.yaml [--artifacts DIR]
+//! flsim campaign run|list|report --spec configs/sweep.yaml [--store DIR] [--jobs N]
 //! flsim experiment fig8|fig9|fig10|fig11|tables|fig12|all
 //! flsim preset fedavg|scaffold|... [--rounds N] [--clients N]
 //! flsim list
@@ -10,9 +11,9 @@
 //!
 //! (Argument parsing is hand-rolled: the offline image has no clap.)
 
-
 use anyhow::{anyhow, bail, Result};
 
+use flsim::campaign::{CampaignReport, CampaignSpec, ResultStore};
 use flsim::config::job::JobConfig;
 use flsim::experiments;
 use flsim::metrics::dashboard;
@@ -96,6 +97,10 @@ fn run() -> Result<()> {
             experiments::save_report("runs", &report)?;
             Ok(())
         }
+        Some("campaign") => {
+            let sub = args.positional.get(1).map(String::as_str).unwrap_or("help");
+            campaign_cmd(sub, &args, &artifacts)
+        }
         Some("experiment") => {
             let which = args
                 .positional
@@ -146,9 +151,12 @@ fn run() -> Result<()> {
         }
         _ => {
             println!(
-                "usage: flsim <run|preset|experiment|list|info> [options]\n\
+                "usage: flsim <run|campaign|preset|experiment|list|info> [options]\n\
                  \n\
                  flsim run --config <job.yaml> [--artifacts DIR] [--rounds N] [--parallelism N]\n\
+                 flsim campaign run    --spec <sweep.yaml> [--store DIR] [--out DIR] [--jobs N]\n\
+                 flsim campaign list   --spec <sweep.yaml> [--store DIR]\n\
+                 flsim campaign report --spec <sweep.yaml> [--store DIR] [--out DIR]\n\
                  flsim preset <strategy> [--rounds N] [--clients N] [--seed N] [--parallelism N]\n\
                  flsim experiment <fig8|fig9|fig10|fig11|tables|fig12|all>\n\
                  flsim list\n\
@@ -156,6 +164,148 @@ fn run() -> Result<()> {
             );
             Ok(())
         }
+    }
+}
+
+/// `flsim campaign run|list|report` — the sweep engine's CLI surface.
+///
+/// `run` exits non-zero with the failure list when any cell fails, but only
+/// after every other cell has executed and persisted to the result store —
+/// a rerun resumes the completed cells from cache and retries the failures.
+fn campaign_cmd(sub: &str, args: &Args, artifacts: &str) -> Result<()> {
+    let spec_path = args
+        .flags
+        .get("spec")
+        .ok_or_else(|| anyhow!("campaign {sub}: missing --spec <sweep.yaml>"))?;
+    let store_dir = args
+        .flags
+        .get("store")
+        .cloned()
+        .unwrap_or_else(|| "campaigns/cache".to_string());
+    let out_dir = args
+        .flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "campaigns".to_string());
+    let mut spec = CampaignSpec::from_yaml_file(spec_path)?;
+    if let Some(j) = args.flags.get("jobs") {
+        spec.jobs = j.parse().map_err(|_| anyhow!("bad --jobs"))?;
+    }
+    let store = ResultStore::open(&store_dir)?;
+
+    match sub {
+        "run" => {
+            let rt = Runtime::shared(artifacts)?;
+            let outcome = flsim::campaign::run(rt, &spec, &store)?;
+            println!();
+            for c in &outcome.cells {
+                match (&c.report, &c.error) {
+                    (Some(r), None) => println!(
+                        "  [{}] {}",
+                        if c.cached { "cache" } else { " run " },
+                        dashboard::run_line(r)
+                    ),
+                    _ => println!(
+                        "  [FAIL ] {:<22} {}",
+                        c.cell.name,
+                        c.error.as_deref().unwrap_or("unknown error")
+                    ),
+                }
+            }
+            println!("{}", outcome.summary());
+            let report = CampaignReport::from_outcome(&outcome);
+            let (csv, json) = report.save(&out_dir)?;
+            println!("wrote {} and {}", csv.display(), json.display());
+            let reports = outcome.reports();
+            if !reports.is_empty() {
+                println!();
+                println!(
+                    "{}",
+                    dashboard::comparison(&format!("campaign {}", outcome.name), &reports)
+                );
+            }
+            let failures = outcome.failure_lines();
+            if !failures.is_empty() {
+                bail!(
+                    "campaign '{}': {} of {} cells failed (completed cells are persisted \
+                     under {}; re-running resumes them from cache):\n  {}",
+                    outcome.name,
+                    failures.len(),
+                    outcome.cells.len(),
+                    store.dir().display(),
+                    failures.join("\n  ")
+                );
+            }
+            Ok(())
+        }
+        "list" => {
+            let cells = flsim::campaign::expand(&spec)?;
+            println!(
+                "campaign '{}': {} cells (store {})",
+                spec.name,
+                cells.len(),
+                store.dir().display()
+            );
+            for (i, c) in cells.iter().enumerate() {
+                println!(
+                    "  {:>3}  {:<28} {}  {:<10} {:<15} seed {:<6} {}",
+                    i + 1,
+                    c.name,
+                    &c.key[..12],
+                    c.job.strategy.name(),
+                    c.job.topology.name(),
+                    c.job.seed,
+                    if store.contains(&c.key) { "cached" } else { "pending" }
+                );
+            }
+            Ok(())
+        }
+        "report" => {
+            let cells = flsim::campaign::expand(&spec)?;
+            let mut missing = Vec::new();
+            let mut reports = Vec::new();
+            let mut rows_src = Vec::new();
+            for c in &cells {
+                match store.get(&c.key) {
+                    Some(r) => {
+                        reports.push(r.clone());
+                        rows_src.push((c.clone(), r));
+                    }
+                    None => missing.push(c.name.clone()),
+                }
+            }
+            if !missing.is_empty() {
+                bail!(
+                    "campaign '{}': {} of {} cells not in the result store yet \
+                     (run `flsim campaign run --spec ...` first): {}",
+                    spec.name,
+                    missing.len(),
+                    cells.len(),
+                    missing.join(", ")
+                );
+            }
+            let outcome = flsim::campaign::CampaignOutcome {
+                name: spec.name.clone(),
+                cells: rows_src
+                    .into_iter()
+                    .map(|(cell, r)| flsim::campaign::CellOutcome {
+                        cell,
+                        cached: true,
+                        report: Some(r),
+                        error: None,
+                    })
+                    .collect(),
+            };
+            let report = CampaignReport::from_outcome(&outcome);
+            let (csv, json) = report.save(&out_dir)?;
+            println!("wrote {} and {}", csv.display(), json.display());
+            println!(
+                "{}",
+                dashboard::comparison(&format!("campaign {}", spec.name), &reports)
+            );
+            Ok(())
+        }
+        _ => bail!("unknown campaign subcommand '{sub}' (run|list|report)"),
     }
 }
 

@@ -4,7 +4,7 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
 
@@ -150,6 +150,67 @@ impl RunReport {
         ])
     }
 
+    /// Inverse of [`RunReport::to_json`] — used by the campaign result store
+    /// to resume cached cells. Round-trips exactly: Rust's `f64` Display
+    /// prints the shortest representation that re-parses to the same bits,
+    /// so a report serialized, stored, and re-loaded yields byte-identical
+    /// CSV/JSON again.
+    pub fn from_json(j: &Json) -> Result<RunReport> {
+        let s = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("run report json: missing string '{k}'"))
+        };
+        let n = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("run report json: missing number '{k}'"))
+        };
+        let mut rounds = Vec::new();
+        for rj in j
+            .get("rounds")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("run report json: missing 'rounds' array"))?
+        {
+            // Strict like the top level: `to_json` always writes every
+            // field, so a missing one means a corrupt/stale document — the
+            // campaign cache must treat that as a miss, not as zeros.
+            let g = |k: &str| -> Result<f64> {
+                rj.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("run report json: round missing number '{k}'"))
+            };
+            rounds.push(RoundMetrics {
+                round: g("round")? as u64,
+                test_accuracy: g("test_accuracy")?,
+                test_loss: g("test_loss")?,
+                train_loss: g("train_loss")?,
+                wall_secs: g("wall_secs")?,
+                cpu_pct: g("cpu_pct")?,
+                rss_mib: g("rss_mib")?,
+                net_bytes: g("net_bytes")? as u64,
+                sim_net_secs: g("sim_net_secs")?,
+                sim_round_secs: g("sim_round_secs")?,
+                model_hash: rj
+                    .get("model_hash")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("run report json: round missing 'model_hash'"))?
+                    .to_string(),
+            });
+        }
+        Ok(RunReport {
+            label: s("label")?,
+            strategy: s("strategy")?,
+            topology: s("topology")?,
+            backend: s("backend")?,
+            n_clients: n("n_clients")? as usize,
+            n_workers: n("n_workers")? as usize,
+            seed: n("seed")? as u64,
+            rounds,
+        })
+    }
+
     pub fn save_csv(&self, path: impl AsRef<Path>) -> Result<()> {
         std::fs::write(path.as_ref(), self.to_csv())
             .with_context(|| format!("writing {:?}", path.as_ref()))
@@ -231,6 +292,17 @@ mod tests {
             rounds[0].get("sim_round_secs").and_then(Json::as_f64),
             Some(0.5)
         );
+    }
+
+    #[test]
+    fn json_roundtrip_is_byte_identical() {
+        let r = sample();
+        let j1 = r.to_json().to_string();
+        let back = RunReport::from_json(&Json::parse(&j1).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), j1);
+        assert_eq!(back.to_csv(), r.to_csv());
+        assert_eq!(back.seed, 42);
+        assert_eq!(back.rounds[1].net_bytes, 150);
     }
 
     #[test]

@@ -30,6 +30,25 @@ pub use flows::{
 };
 pub use setup::JobState;
 
+/// Strategy-mode ↔ topology compatibility. Shared with campaign grid
+/// expansion so an invalid cell fails at expand time (before any cell has
+/// run) instead of mid-campaign.
+pub fn check_topology(job: &JobConfig) -> Result<()> {
+    if job.strategy.mode() == StrategyMode::Decentralized
+        && !matches!(
+            job.topology,
+            TopologyKind::FullyConnected | TopologyKind::Ring
+        )
+    {
+        bail!(
+            "decentralized strategy '{}' requires a p2p topology, got {}",
+            job.strategy.name(),
+            job.topology.name()
+        );
+    }
+    Ok(())
+}
+
 pub struct Orchestrator {
     rt: Arc<Runtime>,
 }
@@ -47,20 +66,9 @@ impl Orchestrator {
     /// Run with injected node faults (stragglers / crashes).
     pub fn run_with_faults(&self, job: &JobConfig, faults: FaultPlan) -> Result<RunReport> {
         job.validate()?;
+        check_topology(job)?;
         let mut state = setup::JobState::scaffold(self.rt.clone(), job, faults)?;
         let mode = job.strategy.mode();
-        if mode == StrategyMode::Decentralized
-            && !matches!(
-                job.topology,
-                TopologyKind::FullyConnected | TopologyKind::Ring
-            )
-        {
-            bail!(
-                "decentralized strategy '{}' requires a p2p topology, got {}",
-                job.strategy.name(),
-                job.topology.name()
-            );
-        }
 
         for round in 1..=job.rounds {
             let metrics = match (mode, job.topology) {

@@ -230,7 +230,8 @@ impl Overlay {
         self.roles
             .iter()
             .filter(|(_, &r)| {
-                r == role || (r == NodeRole::Hybrid && (include_hybrid_as || role == NodeRole::Worker))
+                r == role
+                    || (r == NodeRole::Hybrid && (include_hybrid_as || role == NodeRole::Worker))
             })
             .map(|(n, _)| n.clone())
             .collect()

@@ -111,6 +111,32 @@ impl Yaml {
     }
 }
 
+impl From<&str> for Yaml {
+    fn from(s: &str) -> Yaml {
+        Yaml::Str(s.to_string())
+    }
+}
+impl From<String> for Yaml {
+    fn from(s: String) -> Yaml {
+        Yaml::Str(s)
+    }
+}
+impl From<i64> for Yaml {
+    fn from(i: i64) -> Yaml {
+        Yaml::Int(i)
+    }
+}
+impl From<f64> for Yaml {
+    fn from(f: f64) -> Yaml {
+        Yaml::Float(f)
+    }
+}
+impl From<bool> for Yaml {
+    fn from(b: bool) -> Yaml {
+        Yaml::Bool(b)
+    }
+}
+
 struct Line {
     indent: usize,
     text: String,

@@ -1,0 +1,324 @@
+//! The campaign engine's contracts (the acceptance criteria of the
+//! campaign PR):
+//!
+//! * grid expansion is deterministic — sorted axis order, listed value
+//!   order, stable cell count, duplicate cells deduplicated;
+//! * cache keys are stable across YAML field reordering and independent of
+//!   wall-clock knobs (`parallelism`, `campaign.jobs`);
+//! * run → resume: an immediate second run of an unchanged campaign hits
+//!   the result cache for every cell and reproduces a **byte-identical**
+//!   campaign report;
+//! * a failing cell never discards completed cells — they persist to the
+//!   store as they finish and are cache hits on the retry.
+
+use std::path::PathBuf;
+
+use flsim::campaign::{self, CampaignReport, CampaignSpec, ResultStore};
+use flsim::config::job::JobConfig;
+use flsim::runtime::pjrt::Runtime;
+use flsim::util::yaml::Yaml;
+
+fn tmp_store(tag: &str) -> (ResultStore, PathBuf) {
+    let dir = std::env::temp_dir().join(format!(
+        "flsim_campaign_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    (ResultStore::open(&dir).unwrap(), dir)
+}
+
+fn tiny_base() -> JobConfig {
+    let mut j = JobConfig::default_cnn("fedavg");
+    j.name = "tiny".into();
+    j.rounds = 2;
+    j.dataset.n = 600;
+    j.n_clients = 4;
+    j
+}
+
+/// A 2×2 strategy × seed sweep over the tiny base.
+fn two_by_two(jobs: usize) -> CampaignSpec {
+    CampaignSpec::builder("twobytwo", tiny_base())
+        .axis_strs("strategy", &["fedavg", "fedprox"])
+        .axis_ints("seed", &[1, 2])
+        .jobs(jobs)
+        .build()
+}
+
+// ---------------------------------------------------------------------------
+// Pure expansion / hashing contracts (no engine needed).
+// ---------------------------------------------------------------------------
+
+const SPEC_A: &str = r#"
+campaign:
+  name: order
+axes:
+  seed: [1, 2]
+  strategy: [fedavg, fedprox]
+job:
+  name: base
+  rounds: 2
+  seed: 9
+dataset:
+  name: cifar10_synth
+  n: 600
+  distribution:
+    kind: dirichlet
+    alpha: 0.5
+strategy:
+  name: fedavg
+  backend: cnn
+  train_params:
+    learning_rate: 0.01
+    local_epochs: 5
+topology:
+  kind: client_server
+  clients: 4
+  workers: 1
+"#;
+
+/// The same campaign with every reorderable construct reordered: axes
+/// listed in the other order, job/dataset/strategy/topology sections and
+/// their fields shuffled.
+const SPEC_B: &str = r#"
+topology:
+  workers: 1
+  clients: 4
+  kind: client_server
+strategy:
+  train_params:
+    local_epochs: 5
+    learning_rate: 0.01
+  backend: cnn
+  name: fedavg
+dataset:
+  distribution:
+    alpha: 0.5
+    kind: dirichlet
+  n: 600
+  name: cifar10_synth
+axes:
+  strategy: [fedavg, fedprox]
+  seed: [1, 2]
+job:
+  seed: 9
+  rounds: 2
+  name: base
+campaign:
+  name: order
+"#;
+
+#[test]
+fn grid_expansion_is_deterministic() {
+    let spec = CampaignSpec::from_yaml_str(SPEC_A).unwrap();
+    let cells = campaign::expand(&spec).unwrap();
+    assert_eq!(cells.len(), 4);
+    let names: Vec<&str> = cells.iter().map(|c| c.name.as_str()).collect();
+    // Axes expand in sorted name order (seed before strategy), values in
+    // listed order, last axis fastest.
+    assert_eq!(names, ["seed1_fedavg", "seed1_fedprox", "seed2_fedavg", "seed2_fedprox"]);
+    // A second expansion is identical.
+    let again = campaign::expand(&spec).unwrap();
+    assert_eq!(
+        cells.iter().map(|c| &c.key).collect::<Vec<_>>(),
+        again.iter().map(|c| &c.key).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn cache_keys_stable_across_yaml_field_reordering() {
+    let a = campaign::expand(&CampaignSpec::from_yaml_str(SPEC_A).unwrap()).unwrap();
+    let b = campaign::expand(&CampaignSpec::from_yaml_str(SPEC_B).unwrap()).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (ca, cb) in a.iter().zip(&b) {
+        assert_eq!(ca.name, cb.name);
+        assert_eq!(
+            ca.key, cb.key,
+            "cell '{}': key must not depend on YAML field order",
+            ca.name
+        );
+    }
+}
+
+#[test]
+fn cache_keys_ignore_schedule_knobs() {
+    let cells_at = |parallelism: usize, jobs: usize| {
+        let mut spec = two_by_two(jobs);
+        spec.base.parallelism = parallelism;
+        campaign::expand(&spec).unwrap()
+    };
+    let a = cells_at(1, 1);
+    let b = cells_at(8, 4);
+    for (ca, cb) in a.iter().zip(&b) {
+        assert_eq!(ca.key, cb.key, "schedule knobs must not change cell keys");
+    }
+}
+
+#[test]
+fn duplicate_cells_dedup_across_grid_and_explicit() {
+    let spec = CampaignSpec::builder("dup", tiny_base())
+        .axis_strs("strategy", &["fedavg", "fedavg", "fedprox"])
+        .cell("fedprox", vec![("strategy", "fedprox".into())])
+        .build();
+    let cells = campaign::expand(&spec).unwrap();
+    assert_eq!(cells.len(), 2);
+    // ... while a name clash between *different* configs is an error.
+    let clash = CampaignSpec::builder("clash", tiny_base())
+        .cell("same", vec![("seed", Yaml::Int(1))])
+        .cell("same", vec![("seed", Yaml::Int(2))])
+        .build();
+    assert!(campaign::expand(&clash).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Engine-backed: run → cached resume → byte-identical report.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn campaign_resumes_from_cache_with_byte_identical_report() {
+    let (store, dir) = tmp_store("resume");
+    let rt = Runtime::shared("artifacts").unwrap();
+    let spec = two_by_two(2);
+
+    let first = campaign::run(rt.clone(), &spec, &store).unwrap();
+    assert_eq!(first.cells.len(), 4);
+    assert!(first.failed().is_empty(), "{:?}", first.failed());
+    assert!(
+        first.cells.iter().all(|c| !c.cached),
+        "first run must execute every cell"
+    );
+    for c in &first.cells {
+        assert!(store.contains(&c.cell.key), "cell {} not persisted", c.cell.name);
+    }
+
+    // Immediate re-run: every cell must be a cache hit — no execution.
+    let execs_before = rt.stats().executions;
+    let second = campaign::run(rt.clone(), &spec, &store).unwrap();
+    assert!(second.all_cached(), "re-run must hit the cache for every cell");
+    assert_eq!(
+        rt.stats().executions,
+        execs_before,
+        "a fully-cached campaign must not touch the engine"
+    );
+
+    // ... and the resumed campaign report is byte-identical.
+    let rep1 = CampaignReport::from_outcome(&first);
+    let rep2 = CampaignReport::from_outcome(&second);
+    assert_eq!(rep1.to_csv(), rep2.to_csv());
+    assert_eq!(rep1.to_json().to_string(), rep2.to_json().to_string());
+
+    // Editing one axis value re-runs only the changed cells.
+    let mut edited = spec.clone();
+    edited.axes.insert("seed".into(), vec![Yaml::Int(1), Yaml::Int(3)]);
+    let third = campaign::run(rt, &edited, &store).unwrap();
+    let cached: Vec<&str> = third
+        .cells
+        .iter()
+        .filter(|c| c.cached)
+        .map(|c| c.cell.name.as_str())
+        .collect();
+    assert_eq!(cached, ["seed1_fedavg", "seed1_fedprox"]);
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn schedule_does_not_change_results() {
+    let (store_serial, dir_a) = tmp_store("sched_serial");
+    let (store_parallel, dir_b) = tmp_store("sched_parallel");
+    let rt = Runtime::shared("artifacts").unwrap();
+
+    let serial = campaign::run(rt.clone(), &two_by_two(1), &store_serial).unwrap();
+    let parallel = campaign::run(rt, &two_by_two(4), &store_parallel).unwrap();
+    assert!(serial.failed().is_empty() && parallel.failed().is_empty());
+    for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+        assert_eq!(a.cell.name, b.cell.name);
+        assert_eq!(a.cell.key, b.cell.key);
+        let (ra, rb) = (a.report.as_ref().unwrap(), b.report.as_ref().unwrap());
+        for (ma, mb) in ra.rounds.iter().zip(&rb.rounds) {
+            assert_eq!(ma.model_hash, mb.model_hash, "cell {}", a.cell.name);
+            assert_eq!(ma.net_bytes, mb.net_bytes, "cell {}", a.cell.name);
+            assert_eq!(
+                ma.test_accuracy.to_bits(),
+                mb.test_accuracy.to_bits(),
+                "cell {}",
+                a.cell.name
+            );
+        }
+    }
+
+    std::fs::remove_dir_all(&dir_a).unwrap();
+    std::fs::remove_dir_all(&dir_b).unwrap();
+}
+
+#[test]
+fn failing_cell_persists_completed_cells() {
+    let (store, dir) = tmp_store("failpersist");
+    let rt = Runtime::shared("artifacts").unwrap();
+
+    let spec = CampaignSpec::builder("partial", tiny_base())
+        .cell("good", vec![("seed", Yaml::Int(1))])
+        .cell("bad", vec![("backend", "no_such_backend".into())])
+        .build();
+
+    let outcome = campaign::run(rt.clone(), &spec, &store).unwrap();
+    assert_eq!(outcome.cells.len(), 2);
+    let good = outcome.cells.iter().find(|c| c.cell.name == "good").unwrap();
+    let bad = outcome.cells.iter().find(|c| c.cell.name == "bad").unwrap();
+    assert!(good.report.is_some() && good.error.is_none());
+    assert!(bad.report.is_none() && bad.error.is_some());
+    assert!(
+        store.contains(&good.cell.key),
+        "completed cell must persist despite the failure"
+    );
+    assert!(!store.contains(&bad.cell.key));
+
+    // The retry resumes the completed cell from cache and re-attempts the
+    // failed one.
+    let retry = campaign::run(rt, &spec, &store).unwrap();
+    let good2 = retry.cells.iter().find(|c| c.cell.name == "good").unwrap();
+    assert!(good2.cached);
+    assert!(retry.cells.iter().any(|c| c.error.is_some()));
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// The fig11-style sweep as a single campaign spec (acceptance criterion).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fig11_style_sweep_runs_and_resumes_as_one_spec() {
+    let (store, dir) = tmp_store("fig11");
+    let rt = Runtime::shared("artifacts").unwrap();
+
+    let mut base = tiny_base();
+    base.rounds = 1;
+    let spec = CampaignSpec::builder("fig11_mini", base)
+        .cell("client_server", vec![])
+        .cell(
+            "hierarchical",
+            vec![("topology", "hierarchical".into()), ("workers", Yaml::Int(3))],
+        )
+        .cell("decentralized", vec![("strategy", "fedstellar".into())])
+        .jobs(2)
+        .build();
+
+    let first = campaign::run(rt.clone(), &spec, &store).unwrap();
+    assert!(first.failed().is_empty(), "{:?}", first.failed());
+    let names: Vec<&str> = first.cells.iter().map(|c| c.cell.name.as_str()).collect();
+    assert_eq!(names, ["client_server", "hierarchical", "decentralized"]);
+
+    let second = campaign::run(rt, &spec, &store).unwrap();
+    assert!(second.all_cached());
+    assert_eq!(
+        CampaignReport::from_outcome(&first).to_csv(),
+        CampaignReport::from_outcome(&second).to_csv()
+    );
+    assert_eq!(
+        CampaignReport::from_outcome(&first).to_json().to_string(),
+        CampaignReport::from_outcome(&second).to_json().to_string()
+    );
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_micro.json against the committed BENCH_baseline.json.
+
+Usage:
+    scripts/check_bench_regression.py BASELINE CURRENT [--tolerance 0.30]
+    scripts/check_bench_regression.py --write-baseline BASELINE CURRENT
+
+Every `results[].ns_per_op` series present in *both* files is compared; a
+current value more than ``tolerance`` (default +/-30%, override with
+``--tolerance`` or the FLSIM_BENCH_TOLERANCE env var) above its baseline is
+a regression and fails the check. Values more than ``tolerance`` *below*
+baseline are reported as improvements with a hint to refresh the baseline
+(stale baselines hide future regressions). Series present in only one file
+are listed informationally (new/retired benches are not failures).
+
+A baseline marked ``"provisional": true`` downgrades regressions to
+warnings and always exits 0: commit the BENCH_micro.json artifact of a real
+CI run (via ``--write-baseline``, which drops the flag) to arm the gate.
+
+Only the Python standard library is used.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    if doc.get("schema") != "flsim-bench-v1":
+        sys.exit(f"{path}: unexpected schema {doc.get('schema')!r}")
+    return doc
+
+
+def index_ns_per_op(doc):
+    return {r["name"]: float(r["ns_per_op"]) for r in doc.get("results", [])}
+
+
+def write_baseline(current_path, baseline_path):
+    doc = load(current_path)
+    doc.pop("provisional", None)
+    doc.pop("note", None)
+    with open(baseline_path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, separators=(",", ":"))
+        f.write("\n")
+    print(f"wrote {baseline_path} from {current_path} ({len(doc.get('results', []))} series)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=float(os.environ.get("FLSIM_BENCH_TOLERANCE", "0.30")),
+        help="allowed fractional drift per series (default 0.30 = +/-30%%)",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="promote CURRENT (arg 2) to BASELINE (arg 1) instead of comparing",
+    )
+    args = ap.parse_args()
+
+    if args.write_baseline:
+        write_baseline(args.current, args.baseline)
+        return
+
+    base_doc = load(args.baseline)
+    cur_doc = load(args.current)
+    provisional = bool(base_doc.get("provisional"))
+    base = index_ns_per_op(base_doc)
+    cur = index_ns_per_op(cur_doc)
+
+    shared = sorted(set(base) & set(cur))
+    only_base = sorted(set(base) - set(cur))
+    only_cur = sorted(set(cur) - set(base))
+
+    regressions, improvements = [], []
+    for name in shared:
+        b, c = base[name], cur[name]
+        if b <= 0.0:
+            continue
+        ratio = c / b
+        line = f"{name}: {b:.1f} -> {c:.1f} ns/op ({ratio - 1.0:+.0%} vs baseline)"
+        if ratio > 1.0 + args.tolerance:
+            regressions.append(line)
+        elif ratio < 1.0 - args.tolerance:
+            improvements.append(line)
+
+    print(
+        f"bench-regression: {len(shared)} series compared "
+        f"(tolerance +/-{args.tolerance:.0%}), "
+        f"{len(regressions)} regressed, {len(improvements)} improved"
+    )
+    for line in improvements:
+        print(f"  IMPROVED  {line}  — consider refreshing BENCH_baseline.json")
+    for line in regressions:
+        print(f"  REGRESSED {line}")
+    for name in only_cur:
+        print(f"  NEW       {name} ({cur[name]:.1f} ns/op) — not in baseline")
+    for name in only_base:
+        print(f"  RETIRED   {name} — in baseline but not in current run")
+
+    if provisional:
+        if not shared:
+            print(
+                "baseline is provisional and empty: promote a real CI run's "
+                "BENCH_micro.json artifact with --write-baseline to arm the gate"
+            )
+        elif regressions:
+            print("baseline is provisional: regressions reported as warnings only")
+        return
+
+    if regressions:
+        sys.exit(f"{len(regressions)} benchmark series regressed beyond the threshold")
+
+
+if __name__ == "__main__":
+    main()
