@@ -1,7 +1,9 @@
 //! Campaign engine demo: a 2×2 sweep (strategy × seed) built through the
 //! declarative builder API, run twice against the content-addressed result
 //! store — the second pass is all cache hits — then aggregated into one
-//! campaign report.
+//! campaign report. A final pass runs the same grid under the ASHA
+//! scheduler: the bottom half of the cells is stopped at the first rung,
+//! so the campaign spends strictly fewer rounds than the full grid.
 //!
 //! ```bash
 //! cargo run --release --example campaign_sweep
@@ -47,5 +49,27 @@ fn main() -> Result<()> {
         "{}",
         dashboard::comparison("campaign sweep_demo", &second.reports())
     );
+
+    // The same grid under ASHA: rung budgets 1, 2 — after every cell has
+    // run one round, only the top half continues to the full two rounds.
+    // (A fresh store: the grid cache above holds *complete* runs, which
+    // would serve every rung and make this demo a no-op.)
+    let asha_spec = CampaignSpec::builder("sweep_demo_asha", spec.base.clone())
+        .axis_strs("strategy", &["fedavg", "fedprox"])
+        .axis_ints("seed", &[1, 2])
+        .jobs(2)
+        .asha(2, 1)
+        .build();
+    let asha_store = ResultStore::open("campaigns/cache_asha")?;
+    let rt = Runtime::shared("artifacts")?;
+    let adaptive = flsim::campaign::run(rt, &asha_spec, &asha_store)?;
+    println!();
+    println!("{}", adaptive.summary());
+    println!(
+        "asha ran {} total rounds vs {} for the full grid",
+        adaptive.total_rounds(),
+        second.cells.len() as u64 * asha_spec.base.rounds
+    );
+    assert!(adaptive.total_rounds() < second.cells.len() as u64 * asha_spec.base.rounds);
     Ok(())
 }

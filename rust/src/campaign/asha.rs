@@ -1,0 +1,369 @@
+//! Successive-halving campaign scheduling (the ASHA family) over the
+//! cancellable round loop.
+//!
+//! Cells climb a rung ladder of round budgets `min_rounds · eta^k` (capped
+//! at the job's full budget). At every rung the scheduler ranks the still-
+//! running cells by the configured metric **at the rung round** and stops
+//! the bottom quantile — only `max(1, n/eta)` cells are promoted to the
+//! next rung. A stopped cell returns a valid partial [`RunReport`] (marked
+//! `stopped_early`, `rounds_completed` recorded) that is persisted as a
+//! rung-level cache entry.
+//!
+//! Three properties are contractual (test-enforced by
+//! `rust/tests/campaign.rs` and the `asha-smoke` CI job):
+//!
+//! * **Determinism.** Rung decisions are *synchronous*: every surviving
+//!   cell reaches the rung round before any cell is stopped, metrics are
+//!   ranked with ties broken by expansion order, and per-round metrics are
+//!   bitwise-reproducible — so the promoted cell set is a pure function of
+//!   `(spec, seed)`, independent of the `campaign.jobs` worker count.
+//!   (A fully asynchronous ASHA promotes on completion order; that breaks
+//!   the determinism contract, so FLsim runs the synchronous variant.)
+//! * **No recomputation within a run.** Promoted cells keep their paused
+//!   [`RunHandle`] between rungs; deepening a cell resumes its live state
+//!   rather than replaying earlier rounds.
+//! * **Rung-level caching.** A stopped cell's prefix report is stored under
+//!   the cell's (full-config) key. Re-running the campaign replays every
+//!   rung decision from the store — zero engine executions — and a later
+//!   campaign that promotes the cell deeper re-runs it from scratch to the
+//!   deeper budget and *upgrades* the entry (never downgrades; see
+//!   [`ResultStore::put_partial`]).
+//!
+//! Per-round metrics stream from the round loop to the scheduler over an
+//! mpsc channel (the orchestrator's `RunControl::on_round` sink), so rung
+//! decisions read live metrics as rounds commit rather than waiting on
+//! finished reports.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::campaign::cache::ResultStore;
+use crate::campaign::grid;
+use crate::campaign::runner::{CampaignOutcome, CellOutcome};
+use crate::campaign::spec::CampaignSpec;
+use crate::controller::sync::FaultPlan;
+use crate::metrics::report::RunReport;
+use crate::orchestrator::{RunControl, RunHandle};
+use crate::runtime::pjrt::Runtime;
+
+/// What the scheduler knows about one cell while the campaign runs.
+struct CellState {
+    /// The engine executed at least one round for this cell this process
+    /// (`false` = every rung was served from the result store).
+    executed: bool,
+    /// Paused live run (present only while the cell is being deepened).
+    handle: Option<RunHandle>,
+    /// Deepest stored report serving this cell from the cache.
+    cached: Option<RunReport>,
+    /// Set once the cell leaves the ladder: its final (possibly partial)
+    /// report.
+    report: Option<RunReport>,
+    error: Option<String>,
+}
+
+impl CellState {
+    fn new() -> CellState {
+        CellState {
+            executed: false,
+            handle: None,
+            cached: None,
+            report: None,
+            error: None,
+        }
+    }
+
+    /// Still climbing the ladder (not failed, not stopped, not complete).
+    fn alive(&self) -> bool {
+        self.error.is_none() && self.report.is_none()
+    }
+}
+
+/// Execute a campaign under the ASHA scheduler. The outcome mirrors the
+/// grid runner's: one [`CellOutcome`] per expanded cell, in expansion
+/// order; stopped cells carry `stopped_early` partial reports.
+pub fn run_asha(
+    rt: Arc<Runtime>,
+    spec: &CampaignSpec,
+    store: &ResultStore,
+) -> Result<CampaignOutcome> {
+    let cells = grid::expand(spec)?;
+    let sched = spec.scheduler;
+    let max_rounds = cells.iter().map(|c| c.job.rounds).max().unwrap_or(1);
+    let ladder = sched.ladder(max_rounds);
+
+    let mut states: Vec<CellState> = cells.iter().map(|_| CellState::new()).collect();
+    // Live metric table: (cell index, round) -> decision metric, fed by the
+    // per-round streaming channel (fresh rounds) and the result store
+    // (replayed rounds).
+    let mut metrics: BTreeMap<(usize, u64), f64> = BTreeMap::new();
+
+    for (rung, &budget) in ladder.iter().enumerate() {
+        // ------------------------------------------------------------------
+        // 1. Resolve this rung from the cache where possible; collect the
+        //    cells that must execute.
+        // ------------------------------------------------------------------
+        let mut work: Vec<(usize, u64)> = Vec::new(); // (cell, target rounds)
+        for (i, cell) in cells.iter().enumerate() {
+            if !states[i].alive() {
+                continue;
+            }
+            let target = budget.min(cell.job.rounds);
+            if states[i].handle.is_some() {
+                work.push((i, target));
+                continue;
+            }
+            // The report cached at an earlier rung may already be deep
+            // enough — no need to re-read and re-parse the store entry.
+            let deep_enough = |r: &RunReport| {
+                if target == cell.job.rounds {
+                    !r.stopped_early
+                } else {
+                    !r.stopped_early || r.rounds_completed() >= target
+                }
+            };
+            if states[i].cached.as_ref().map(&deep_enough).unwrap_or(false) {
+                continue;
+            }
+            let hit = if target == cell.job.rounds {
+                store.get(&cell.key)
+            } else {
+                store.get_at_least(&cell.key, target)
+            };
+            match hit {
+                Some(rep) => {
+                    // Backfill the whole stored series (not just this rung):
+                    // every round is prefix-deterministic, and a deeper
+                    // entry then serves later rung decisions without
+                    // re-reading the store.
+                    for r in 1..=rep.rounds_completed() {
+                        if let Some(v) = rep.metric_at(r, |m| sched.metric_of(m)) {
+                            metrics.insert((i, r), v);
+                        }
+                    }
+                    states[i].cached = Some(rep);
+                }
+                None => {
+                    // Promoted past its stored depth (or never stored): run
+                    // from scratch to the deeper budget — determinism makes
+                    // the replayed prefix bitwise-identical.
+                    states[i].cached = None;
+                    work.push((i, target));
+                }
+            }
+        }
+
+        // ------------------------------------------------------------------
+        // 2. Advance the executing cells on the job-level worker pool,
+        //    streaming per-round metrics back over the channel.
+        // ------------------------------------------------------------------
+        if !work.is_empty() {
+            println!(
+                "campaign[{}]: rung {} (budget {} rounds) — {} cells to run",
+                spec.name,
+                rung + 1,
+                budget,
+                work.len()
+            );
+            let (tx, rx) = mpsc::channel::<(usize, u64, f64)>();
+            let slots: Vec<Mutex<CellSlot>> = states
+                .iter_mut()
+                .map(|s| {
+                    Mutex::new(CellSlot { handle: s.handle.take(), error: None, executed: false })
+                })
+                .collect();
+            let workers = spec.effective_jobs().min(work.len()).max(1);
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    let rt = rt.clone();
+                    let tx = tx.clone();
+                    let next = &next;
+                    let work = &work;
+                    let slots = &slots;
+                    let cells = &cells;
+                    scope.spawn(move || loop {
+                        let slot = next.fetch_add(1, Ordering::Relaxed);
+                        if slot >= work.len() {
+                            break;
+                        }
+                        let (i, target) = work[slot];
+                        let cell = &cells[i];
+                        let mut guard = slots[i].lock().unwrap();
+                        let mut handle = guard.handle.take();
+                        guard.executed = true;
+                        drop(guard);
+                        let result = (|| -> Result<RunHandle> {
+                            let mut h = match handle.take() {
+                                Some(h) => h,
+                                None => RunHandle::start(rt.clone(), &cell.job, FaultPlan::none())?,
+                            };
+                            let sink_tx = Mutex::new(tx.clone());
+                            let ctl = RunControl {
+                                round_budget: Some(target),
+                                on_round: Some(Box::new(move |m| {
+                                    let v = sched.metric_of(m);
+                                    let _ = sink_tx.lock().unwrap().send((i, m.round, v));
+                                })),
+                                ..RunControl::default()
+                            };
+                            h.advance(&ctl)?;
+                            Ok(h)
+                        })();
+                        let mut guard = slots[i].lock().unwrap();
+                        match result {
+                            Ok(h) => guard.handle = Some(h),
+                            Err(e) => {
+                                println!("campaign[{}]: FAIL {} — {e:#}", spec.name, cell.name);
+                                guard.error = Some(format!("{e:#}"));
+                            }
+                        }
+                    });
+                }
+            });
+            drop(tx);
+            for (i, round, value) in rx.try_iter() {
+                metrics.insert((i, round), value);
+            }
+            for (i, slot) in slots.into_iter().enumerate() {
+                let slot = slot.into_inner().unwrap();
+                if slot.executed {
+                    states[i].executed = true;
+                }
+                states[i].handle = slot.handle;
+                if let Some(e) = slot.error {
+                    states[i].error = Some(e);
+                }
+            }
+        }
+
+        // ------------------------------------------------------------------
+        // 3. Finalize cells whose full budget this rung reached.
+        // ------------------------------------------------------------------
+        for (i, cell) in cells.iter().enumerate() {
+            if !states[i].alive() || budget < cell.job.rounds {
+                continue;
+            }
+            let st = &mut states[i];
+            if let Some(handle) = st.handle.take() {
+                match handle.finish() {
+                    Ok(report) => match store.put(&cell.key, &cell.name, &cell.job, &report) {
+                        Ok(()) => {
+                            println!(
+                                "campaign[{}]: done {} ({} rounds, acc {:.3})",
+                                spec.name,
+                                cell.name,
+                                report.rounds_completed(),
+                                report.final_accuracy()
+                            );
+                            st.report = Some(report);
+                        }
+                        Err(e) => {
+                            st.report = Some(report);
+                            st.error = Some(format!("persisting result: {e:#}"));
+                        }
+                    },
+                    Err(e) => st.error = Some(format!("{e:#}")),
+                }
+            } else if let Some(rep) = st.cached.clone() {
+                st.report = Some(rep);
+            } else {
+                st.error = Some("internal: cell left rung with neither handle nor cache".into());
+            }
+        }
+
+        // ------------------------------------------------------------------
+        // 4. Rung decision: rank the continuing cells by their metric at
+        //    the rung round and stop the bottom quantile.
+        // ------------------------------------------------------------------
+        let continuing: Vec<usize> = (0..cells.len())
+            .filter(|&i| states[i].alive() && budget < cells[i].job.rounds)
+            .collect();
+        if continuing.is_empty() || rung + 1 >= ladder.len() {
+            continue;
+        }
+        let mut ranked: Vec<(usize, f64)> = Vec::with_capacity(continuing.len());
+        for &i in &continuing {
+            let v = metrics.get(&(i, budget)).copied().ok_or_else(|| {
+                anyhow!(
+                    "campaign '{}': cell '{}' reached rung budget {budget} without a \
+                     recorded metric",
+                    spec.name,
+                    cells[i].name
+                )
+            })?;
+            ranked.push((i, sched.score(v)));
+        }
+        // Descending score with a *total* order: a NaN metric (diverged
+        // cell) always ranks worst, and ties break by expansion order — so
+        // the sort is deterministic and never promotes a diverged cell over
+        // a healthy one.
+        ranked.sort_by(|a, b| {
+            match (a.1.is_nan(), b.1.is_nan()) {
+                (true, true) => std::cmp::Ordering::Equal,
+                (true, false) => std::cmp::Ordering::Greater, // a after b
+                (false, true) => std::cmp::Ordering::Less,
+                (false, false) => b.1.partial_cmp(&a.1).expect("both finite-or-inf"),
+            }
+            .then(a.0.cmp(&b.0))
+        });
+        let keep = sched.survivors(ranked.len());
+        for &(i, score) in &ranked[keep..] {
+            let cell = &cells[i];
+            let st = &mut states[i];
+            let partial = match st.handle.take() {
+                Some(handle) => {
+                    let report = handle.partial_report();
+                    if let Err(e) = store.put_partial(&cell.key, &cell.name, &cell.job, &report) {
+                        st.error = Some(format!("persisting partial result: {e:#}"));
+                        continue;
+                    }
+                    report
+                }
+                None => match &st.cached {
+                    Some(rep) => rep.truncated(budget),
+                    None => {
+                        st.error =
+                            Some("internal: stopped cell with neither handle nor cache".into());
+                        continue;
+                    }
+                },
+            };
+            println!(
+                "campaign[{}]: stop {} at rung {} ({} rounds, score {:.4})",
+                spec.name,
+                cell.name,
+                rung + 1,
+                partial.rounds_completed(),
+                score
+            );
+            st.report = Some(partial);
+        }
+    }
+
+    Ok(CampaignOutcome {
+        name: spec.name.clone(),
+        cells: cells
+            .into_iter()
+            .zip(states)
+            .map(|(cell, st)| {
+                let cached = !st.executed && st.error.is_none() && st.report.is_some();
+                CellOutcome {
+                    cell,
+                    cached,
+                    report: st.report,
+                    error: st.error,
+                }
+            })
+            .collect(),
+    })
+}
+
+/// Per-cell slot shared with the rung worker pool.
+struct CellSlot {
+    handle: Option<RunHandle>,
+    error: Option<String>,
+    executed: bool,
+}

@@ -7,11 +7,27 @@
 //! resumes instantly: unchanged cells are cache hits at any schedule, and
 //! spec edits re-run exactly the cells they touch.
 //!
+//! **Partial (rung-stopped) entries.** A cell stopped early by the ASHA
+//! scheduler stores its prefix report under the *same* key as the full run
+//! (rung budgets are runtime limits, not config — the key is the full
+//! config's). Lookups are depth-aware:
+//! * [`ResultStore::get`] serves **complete** entries only, so a grid
+//!   campaign never mistakes a rung-stopped prefix for a finished run;
+//! * [`ResultStore::get_at_least`] serves any entry with at least the
+//!   requested number of rounds — a partial entry is a cache *hit for its
+//!   rung* (the determinism contract makes a stored prefix bitwise equal to
+//!   re-running that prefix);
+//! * [`ResultStore::put_partial`] only ever deepens an entry (a shallower
+//!   rung result never overwrites a deeper or complete one), so promoting a
+//!   cell to a deeper rung extends its entry monotonically.
+//!
 //! A stored cell carries the full [`RunReport`] (including first-run wall
 //! times), so a resumed campaign reproduces its report **byte-identically**
 //! — enforced by `rust/tests/campaign.rs`.
 
+use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
 use anyhow::{Context, Result};
 
@@ -25,13 +41,40 @@ use crate::util::json::Json;
 /// instead of being served from cache.
 pub const ENGINE_VERSION: &str = concat!("flsim-", env!("CARGO_PKG_VERSION"), "+engine.v3");
 
-/// Schema tag of one stored cell document.
-const CELL_SCHEMA: &str = "flsim-cell-v1";
+/// Schema tag of one stored cell document. v2 added partial (rung-stopped)
+/// entries — the report's `stopped_early` flag and prefix depth; v1 entries
+/// read as a miss and simply re-run.
+const CELL_SCHEMA: &str = "flsim-cell-v2";
 
 /// The content-addressed key of a resolved job config.
 pub fn cell_key(job: &JobConfig) -> String {
     let doc = format!("{}\n{}", ENGINE_VERSION, job.canonical_json());
     hash::sha256_hex(doc.as_bytes())
+}
+
+/// What `campaign gc` did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcStats {
+    pub scanned: usize,
+    pub evicted: usize,
+    pub kept: usize,
+    /// Crash/cancel residue (`.tmp` files) removed alongside.
+    pub tmp_removed: usize,
+}
+
+/// Eviction policy for [`ResultStore::gc`]. Entries matching *either* bound
+/// are evicted (protected keys always survive).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GcOptions {
+    /// Evict entries whose file is older than this.
+    pub max_age: Option<Duration>,
+    /// Keep at most this many newest unprotected entries.
+    pub keep_last: Option<usize>,
+    /// Sweep `.tmp` residue older than this (`None` = one hour). A young
+    /// temp file may belong to a *live* writer between its write and
+    /// rename — deleting it would fail that writer's atomic commit — so
+    /// only residue older than the bound is treated as crash debris.
+    pub tmp_max_age: Option<Duration>,
 }
 
 /// An on-disk result store rooted at one directory.
@@ -60,16 +103,17 @@ impl ResultStore {
         self.shard(key).join(format!("{key}.json"))
     }
 
-    /// Whether a *loadable* entry exists — delegates to [`ResultStore::get`]
-    /// so `campaign list`'s cached/pending column agrees with what `run`
-    /// will actually do (a corrupt or stale-schema file is not "cached").
+    /// Whether a *loadable, complete* entry exists — delegates to
+    /// [`ResultStore::get`] so `campaign list`'s cached/pending column
+    /// agrees with what `run` will actually do (a corrupt, stale-schema, or
+    /// rung-stopped partial file is not "cached" for a full run).
     pub fn contains(&self, key: &str) -> bool {
         self.get(key).is_some()
     }
 
-    /// Load a cached cell report. Missing, corrupt, or stale-schema entries
-    /// all read as a miss (the cell simply re-runs and overwrites).
-    pub fn get(&self, key: &str) -> Option<RunReport> {
+    /// Load the raw stored report regardless of depth. Missing, corrupt, or
+    /// stale-schema entries all read as a miss.
+    fn get_any(&self, key: &str) -> Option<RunReport> {
         let src = std::fs::read_to_string(self.path_of(key)).ok()?;
         let doc = Json::parse(&src).ok()?;
         if doc.get("schema").and_then(Json::as_str) != Some(CELL_SCHEMA) {
@@ -79,6 +123,23 @@ impl ResultStore {
             return None;
         }
         RunReport::from_json(doc.get("report")?).ok()
+    }
+
+    /// Load a cached **complete** cell report. Missing, corrupt,
+    /// stale-schema, or partial (rung-stopped) entries all read as a miss
+    /// (the cell simply re-runs and overwrites/deepens).
+    pub fn get(&self, key: &str) -> Option<RunReport> {
+        self.get_any(key).filter(|r| !r.stopped_early)
+    }
+
+    /// Load a cached report with at least `rounds` completed rounds — a
+    /// complete run, or a partial entry stopped at (or beyond) that depth.
+    /// The caller gets the stored report as-is (possibly deeper than
+    /// `rounds`); truncate with [`RunReport::truncated`] when a rung-exact
+    /// prefix is needed.
+    pub fn get_at_least(&self, key: &str, rounds: u64) -> Option<RunReport> {
+        self.get_any(key)
+            .filter(|r| !r.stopped_early || r.rounds_completed() >= rounds)
     }
 
     /// Persist one completed cell (atomic: temp file + rename, so a
@@ -106,6 +167,132 @@ impl ResultStore {
             .with_context(|| format!("committing {path:?}"))?;
         Ok(())
     }
+
+    /// Persist a partial (rung-stopped) cell report, but only if it deepens
+    /// what is stored: an existing complete entry, or a partial at least as
+    /// deep, is left untouched (so replaying a rung never downgrades the
+    /// store). Returns whether a write happened.
+    ///
+    /// The check-then-rename is atomic only within one process. Two
+    /// *processes* racing on the same key can interleave so a partial lands
+    /// over a just-committed complete entry — never a torn file, and never
+    /// wrong results: the next full-run lookup simply misses and the cell
+    /// re-executes (wasted compute, not corruption).
+    pub fn put_partial(
+        &self,
+        key: &str,
+        cell: &str,
+        job: &JobConfig,
+        report: &RunReport,
+    ) -> Result<bool> {
+        if let Some(existing) = self.get_any(key) {
+            if !existing.stopped_early || existing.rounds_completed() >= report.rounds_completed() {
+                return Ok(false);
+            }
+        }
+        self.put(key, cell, job, report)?;
+        Ok(true)
+    }
+
+    /// Every entry in the store: `(key, path, mtime)`, unordered.
+    /// Unparseable file names are skipped (they are not store entries).
+    pub fn entries(&self) -> Vec<(String, PathBuf, SystemTime)> {
+        let mut out = Vec::new();
+        let Ok(shards) = std::fs::read_dir(&self.dir) else { return out };
+        for shard in shards.flatten() {
+            if !shard.path().is_dir() {
+                continue;
+            }
+            let Ok(files) = std::fs::read_dir(shard.path()) else { continue };
+            for f in files.flatten() {
+                let path = f.path();
+                let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+                let Some(key) = name.strip_suffix(".json") else { continue };
+                if key.len() != 64 || !key.chars().all(|c| c.is_ascii_hexdigit()) {
+                    continue;
+                }
+                let mtime = f
+                    .metadata()
+                    .and_then(|m| m.modified())
+                    .unwrap_or(UNIX_EPOCH);
+                out.push((key.to_string(), path, mtime));
+            }
+        }
+        out
+    }
+
+    /// Garbage-collect the store: evict unprotected entries older than
+    /// `max_age` and/or beyond the `keep_last` newest, and sweep `.tmp`
+    /// residue left by crashed/cancelled writers. Keys in `protect` — the
+    /// cells of the campaign(s) being resumed — are **never** evicted
+    /// (test-enforced), so a gc'd store still resumes them from cache.
+    pub fn gc(&self, opts: &GcOptions, protect: &BTreeSet<String>) -> Result<GcStats> {
+        let mut stats = GcStats::default();
+        let now = SystemTime::now();
+
+        // Newest-first so `keep_last` keeps the most recent results.
+        let mut entries = self.entries();
+        entries.sort_by(|a, b| b.2.cmp(&a.2).then_with(|| a.0.cmp(&b.0)));
+
+        let mut kept_unprotected = 0usize;
+        for (key, path, mtime) in &entries {
+            stats.scanned += 1;
+            if protect.contains(key) {
+                stats.kept += 1;
+                continue;
+            }
+            let too_old = match opts.max_age {
+                Some(max) => now
+                    .duration_since(*mtime)
+                    .map(|age| age > max)
+                    .unwrap_or(false),
+                None => false,
+            };
+            let over_count = match opts.keep_last {
+                Some(k) => kept_unprotected >= k,
+                None => false,
+            };
+            if too_old || over_count {
+                std::fs::remove_file(path)
+                    .with_context(|| format!("evicting {path:?}"))?;
+                stats.evicted += 1;
+            } else {
+                kept_unprotected += 1;
+                stats.kept += 1;
+            }
+        }
+
+        // `.tmp` residue: a crash or hard cancel between write and rename
+        // leaves these behind — but a *young* temp file may be a live
+        // writer mid-commit, so only sweep past the age bound.
+        let tmp_bound = opts.tmp_max_age.unwrap_or(Duration::from_secs(3600));
+        if let Ok(shards) = std::fs::read_dir(&self.dir) {
+            for shard in shards.flatten() {
+                if !shard.path().is_dir() {
+                    continue;
+                }
+                if let Ok(files) = std::fs::read_dir(shard.path()) {
+                    for f in files.flatten() {
+                        let path = f.path();
+                        let is_tmp = path.extension().map(|e| e == "tmp").unwrap_or(false);
+                        let stale = f
+                            .metadata()
+                            .and_then(|m| m.modified())
+                            .ok()
+                            .and_then(|m| now.duration_since(m).ok())
+                            .map(|age| age > tmp_bound)
+                            .unwrap_or(false);
+                        if is_tmp && stale {
+                            std::fs::remove_file(&path)
+                                .with_context(|| format!("sweeping {path:?}"))?;
+                            stats.tmp_removed += 1;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(stats)
+    }
 }
 
 #[cfg(test)]
@@ -122,7 +309,19 @@ mod tests {
         (ResultStore::open(&dir).unwrap(), dir)
     }
 
-    fn report() -> RunReport {
+    fn round(n: u64) -> RoundMetrics {
+        RoundMetrics {
+            round: n,
+            test_accuracy: 0.2 + 0.1 * n as f64,
+            test_loss: 1.5 - 0.1 * n as f64,
+            wall_secs: 0.8,
+            net_bytes: 1024,
+            model_hash: format!("hash{n}"),
+            ..Default::default()
+        }
+    }
+
+    fn report_of(rounds: u64, stopped_early: bool) -> RunReport {
         RunReport {
             label: "cell_a".into(),
             strategy: "fedavg".into(),
@@ -131,16 +330,13 @@ mod tests {
             n_clients: 4,
             n_workers: 1,
             seed: 1,
-            rounds: vec![RoundMetrics {
-                round: 1,
-                test_accuracy: 0.42,
-                test_loss: 1.3,
-                wall_secs: 0.8,
-                net_bytes: 1024,
-                model_hash: "abc123".into(),
-                ..Default::default()
-            }],
+            stopped_early,
+            rounds: (1..=rounds).map(round).collect(),
         }
+    }
+
+    fn report() -> RunReport {
+        report_of(1, false)
     }
 
     #[test]
@@ -178,5 +374,109 @@ mod tests {
         let key = cell_key(&JobConfig::default_cnn("fedavg"));
         assert_eq!(key.len(), 64);
         assert!(key.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn partial_entries_hit_their_rung_but_not_full_lookups() {
+        let (store, dir) = tmp_store("partial");
+        let job = JobConfig::default_cnn("fedavg");
+        let key = cell_key(&job);
+
+        store.put(&key, "c", &job, &report_of(2, true)).unwrap();
+        // A rung-stopped prefix is not a complete run ...
+        assert!(store.get(&key).is_none());
+        assert!(!store.contains(&key));
+        // ... but is a hit at (or below) its own depth.
+        assert_eq!(store.get_at_least(&key, 2).unwrap().rounds_completed(), 2);
+        assert!(store.get_at_least(&key, 1).is_some());
+        assert!(store.get_at_least(&key, 3).is_none());
+
+        // A complete entry satisfies every depth.
+        store.put(&key, "c", &job, &report_of(3, false)).unwrap();
+        assert!(store.get(&key).is_some());
+        assert!(store.get_at_least(&key, 99).is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn put_partial_only_deepens() {
+        let (store, dir) = tmp_store("deepen");
+        let job = JobConfig::default_cnn("fedavg");
+        let key = cell_key(&job);
+
+        assert!(store.put_partial(&key, "c", &job, &report_of(1, true)).unwrap());
+        // Same depth again: no write.
+        assert!(!store.put_partial(&key, "c", &job, &report_of(1, true)).unwrap());
+        // Deeper partial: upgrades.
+        assert!(store.put_partial(&key, "c", &job, &report_of(2, true)).unwrap());
+        assert_eq!(store.get_at_least(&key, 2).unwrap().rounds_completed(), 2);
+        // Shallower partial: refused.
+        assert!(!store.put_partial(&key, "c", &job, &report_of(1, true)).unwrap());
+        assert_eq!(store.get_at_least(&key, 2).unwrap().rounds_completed(), 2);
+        // A complete entry is never downgraded by any partial.
+        store.put(&key, "c", &job, &report_of(3, false)).unwrap();
+        assert!(!store.put_partial(&key, "c", &job, &report_of(2, true)).unwrap());
+        assert!(store.get(&key).is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gc_respects_protection_and_sweeps_tmp() {
+        let (store, dir) = tmp_store("gc");
+        let mut keys = Vec::new();
+        for seed in 0..4u64 {
+            let mut job = JobConfig::default_cnn("fedavg");
+            job.seed = seed;
+            let key = cell_key(&job);
+            store.put(&key, "c", &job, &report()).unwrap();
+            keys.push(key);
+        }
+        // Fake crash residue.
+        let tmp = store.path_of(&keys[0]).with_file_name(".junk.123.tmp");
+        std::fs::write(&tmp, "torn").unwrap();
+
+        let protect: BTreeSet<String> = keys[..2].iter().cloned().collect();
+        let opts = GcOptions {
+            keep_last: Some(0),
+            max_age: None,
+            // Sweep even fresh residue in the test (production default is
+            // an hour, sparing live writers mid-commit).
+            tmp_max_age: Some(Duration::ZERO),
+        };
+        let stats = store.gc(&opts, &protect).unwrap();
+        assert_eq!(stats.scanned, 4);
+        assert_eq!(stats.evicted, 2, "only unprotected entries evicted");
+        assert_eq!(stats.kept, 2);
+        assert_eq!(stats.tmp_removed, 1);
+        assert!(store.contains(&keys[0]) && store.contains(&keys[1]));
+        assert!(!store.contains(&keys[2]) && !store.contains(&keys[3]));
+        assert!(!tmp.exists());
+
+        // max_age = 0 evicts everything unprotected regardless of count.
+        let opts = GcOptions {
+            keep_last: None,
+            max_age: Some(Duration::from_secs(0)),
+            tmp_max_age: None,
+        };
+        let stats = store.gc(&opts, &BTreeSet::new()).unwrap();
+        assert_eq!(stats.evicted, 2);
+        assert!(store.entries().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn entries_lists_keys_with_mtimes() {
+        let (store, dir) = tmp_store("entries");
+        assert!(store.entries().is_empty());
+        let job = JobConfig::default_cnn("fedavg");
+        let key = cell_key(&job);
+        store.put(&key, "c", &job, &report()).unwrap();
+        // A stray non-entry file is ignored.
+        std::fs::write(dir.join("README"), "not an entry").unwrap();
+        let entries = store.entries();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].0, key);
+        assert!(entries[0].2 > UNIX_EPOCH);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

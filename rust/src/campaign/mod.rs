@@ -7,7 +7,10 @@
 //! concrete jobs ([`grid`]), executed on a scoped job-level worker pool
 //! ([`runner`]) that resumes completed cells from a content-addressed
 //! on-disk store ([`cache`]), and aggregated into one CSV/JSON report
-//! ([`report`]).
+//! ([`report`]). The `campaign.scheduler:` section picks how cells spend
+//! their round budgets: `grid` (default — every cell runs to completion)
+//! or `asha` (successive halving — the bottom quantile is stopped at each
+//! rung, [`asha`]).
 //!
 //! Pipeline: **spec → grid → schedule (cache-aware) → store → report.**
 //!
@@ -21,14 +24,17 @@
 //! * one failing cell never discards the others — completed cells persist
 //!   as they finish and the CLI exits non-zero with the failure list.
 
+pub mod asha;
 pub mod cache;
 pub mod grid;
 pub mod report;
 pub mod runner;
 pub mod spec;
 
-pub use cache::{cell_key, ResultStore, ENGINE_VERSION};
+pub use cache::{cell_key, GcOptions, GcStats, ResultStore, ENGINE_VERSION};
 pub use grid::{expand, Cell};
 pub use report::CampaignReport;
 pub use runner::{run, run_with_options, CampaignOutcome, CellOutcome};
-pub use spec::{CampaignBuilder, CampaignSpec, CellSpec};
+pub use spec::{
+    CampaignBuilder, CampaignSpec, CellSpec, RungMetric, RungMode, SchedulerKind, SchedulerSpec,
+};

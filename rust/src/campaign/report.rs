@@ -26,6 +26,9 @@ pub struct CellRow {
     pub n_workers: usize,
     pub seed: u64,
     pub rounds: usize,
+    /// The scheduler stopped this cell before its full round budget
+    /// (`rounds` is then the rung boundary it reached).
+    pub stopped_early: bool,
     pub final_accuracy: f64,
     pub best_accuracy: f64,
     pub final_loss: f64,
@@ -48,6 +51,7 @@ impl CellRow {
             n_workers: r.n_workers,
             seed: r.seed,
             rounds: r.rounds.len(),
+            stopped_early: r.stopped_early,
             final_accuracy: r.final_accuracy(),
             best_accuracy: r.best_accuracy(),
             final_loss: r.final_loss(),
@@ -94,12 +98,12 @@ impl CampaignReport {
     /// One row per cell.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "cell,key,strategy,topology,backend,n_clients,n_workers,seed,rounds,\
+            "cell,key,strategy,topology,backend,n_clients,n_workers,seed,rounds,stopped_early,\
              final_accuracy,best_accuracy,final_loss,wall_secs,sim_round_secs,net_bytes,model_hash\n",
         );
         for r in &self.rows {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.4},{:.4},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.4},{:.4},{},{}\n",
                 r.cell,
                 r.key,
                 r.strategy,
@@ -109,6 +113,7 @@ impl CampaignReport {
                 r.n_workers,
                 r.seed,
                 r.rounds,
+                r.stopped_early,
                 r.final_accuracy,
                 r.best_accuracy,
                 r.final_loss,
@@ -141,6 +146,7 @@ impl CampaignReport {
                                 ("n_workers", Json::from(r.n_workers)),
                                 ("seed", Json::from(r.seed as usize)),
                                 ("rounds", Json::from(r.rounds)),
+                                ("stopped_early", Json::from(r.stopped_early)),
                                 ("final_accuracy", Json::Num(r.final_accuracy)),
                                 ("best_accuracy", Json::Num(r.best_accuracy)),
                                 ("final_loss", Json::Num(r.final_loss)),
@@ -188,6 +194,7 @@ mod tests {
             n_clients: 4,
             n_workers: 1,
             seed: 1,
+            stopped_early: false,
             rounds: vec![RoundMetrics {
                 round: 1,
                 test_accuracy: 0.5,

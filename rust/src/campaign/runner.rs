@@ -18,7 +18,7 @@ use anyhow::Result;
 
 use crate::campaign::cache::ResultStore;
 use crate::campaign::grid::{self, Cell};
-use crate::campaign::spec::CampaignSpec;
+use crate::campaign::spec::{CampaignSpec, SchedulerKind};
 use crate::metrics::report::RunReport;
 use crate::orchestrator::Orchestrator;
 use crate::runtime::pjrt::Runtime;
@@ -70,6 +70,25 @@ impl CampaignOutcome {
         !self.cells.is_empty() && self.cells.iter().all(|c| c.cached)
     }
 
+    /// Cells the scheduler stopped before their full round budget.
+    pub fn stopped_early(&self) -> Vec<&CellOutcome> {
+        self.cells
+            .iter()
+            .filter(|c| c.report.as_ref().map(|r| r.stopped_early).unwrap_or(false))
+            .collect()
+    }
+
+    /// Total FL rounds represented across all cell reports. On a fresh
+    /// (uncached) campaign this equals the rounds the engine actually
+    /// executed — the ASHA-vs-grid savings measure.
+    pub fn total_rounds(&self) -> u64 {
+        self.cells
+            .iter()
+            .filter_map(|c| c.report.as_ref())
+            .map(|r| r.rounds_completed())
+            .sum()
+    }
+
     /// `"<cell>: <error>"` lines for every failed cell, in expansion order
     /// (shared by the CLI's exit message and the experiment runner).
     pub fn failure_lines(&self) -> Vec<String> {
@@ -85,23 +104,32 @@ impl CampaignOutcome {
             .collect()
     }
 
-    /// One-line summary (the CI smoke job greps this).
+    /// One-line summary (the CI smoke jobs grep this). The `stopped early`
+    /// clause only appears when a scheduler actually stopped cells, so grid
+    /// campaigns keep their historical summary byte-for-byte.
     pub fn summary(&self) -> String {
         let cached = self.cells.iter().filter(|c| c.cached).count();
         let failed = self.failed().len();
         let ran = self.cells.len() - cached - failed;
-        format!(
+        let stopped = self.stopped_early().len();
+        let mut line = format!(
             "campaign '{}': {} cells — {} cached, {} run, {} failed",
             self.name,
             self.cells.len(),
             cached,
             ran,
             failed
-        )
+        );
+        if stopped > 0 {
+            line.push_str(&format!(", {stopped} stopped early"));
+        }
+        line
     }
 }
 
-/// Expand and execute a campaign against a result store.
+/// Expand and execute a campaign against a result store, dispatching on
+/// `campaign.scheduler` (grid runs everything; asha stops the bottom
+/// quantile at each rung — see [`crate::campaign::asha`]).
 pub fn run(rt: Arc<Runtime>, spec: &CampaignSpec, store: &ResultStore) -> Result<CampaignOutcome> {
     run_with_options(rt, spec, store, false)
 }
@@ -109,13 +137,23 @@ pub fn run(rt: Arc<Runtime>, spec: &CampaignSpec, store: &ResultStore) -> Result
 /// Like [`run`], but with `refresh = true` every cell re-executes and
 /// overwrites its store entry even when cached — for measurement contexts
 /// (the figure benches) where serving a stored first-run wall clock would
-/// report stale performance numbers.
+/// report stale performance numbers. Refresh is a grid-only notion: an
+/// adaptive scheduler re-measuring stopped cells is a contradiction.
 pub fn run_with_options(
     rt: Arc<Runtime>,
     spec: &CampaignSpec,
     store: &ResultStore,
     refresh: bool,
 ) -> Result<CampaignOutcome> {
+    if spec.scheduler.kind == SchedulerKind::Asha {
+        if refresh {
+            anyhow::bail!(
+                "campaign '{}': refresh (FLSIM_REFRESH) requires the grid scheduler",
+                spec.name
+            );
+        }
+        return crate::campaign::asha::run_asha(rt, spec, store);
+    }
     let cells = grid::expand(spec)?;
 
     // Resolve cache hits up front (serial — cheap file probes), collecting

@@ -33,6 +33,167 @@ use crate::strategy::StrategyKind;
 use crate::topology::TopologyKind;
 use crate::util::yaml::Yaml;
 
+/// Which campaign scheduler drives the cells.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Every cell runs to its full round budget (the default; byte-for-byte
+    /// the pre-scheduler behaviour).
+    Grid,
+    /// Successive halving over rung budgets: cells run to
+    /// `min_rounds · eta^k` rounds and the bottom quantile is stopped at
+    /// each rung (see [`crate::campaign::asha`]).
+    Asha,
+}
+
+/// The per-round series rung decisions rank cells by.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RungMetric {
+    Accuracy,
+    Loss,
+}
+
+/// Whether a larger or smaller metric value survives a rung.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RungMode {
+    Max,
+    Min,
+}
+
+/// The `campaign.scheduler:` section.
+///
+/// ```yaml
+/// campaign:
+///   scheduler:
+///     kind: asha        # grid (default) | asha
+///     eta: 2            # rung growth & survival factor (>= 2)
+///     min_rounds: 1     # first rung budget (>= 1)
+///     metric: accuracy  # accuracy | loss
+///     mode: max         # max | min (defaults to the metric's direction)
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedulerSpec {
+    pub kind: SchedulerKind,
+    /// Rung growth factor: budgets are `min_rounds · eta^k`, and
+    /// `max(1, n/eta)` of `n` surviving cells are promoted at each rung.
+    pub eta: u64,
+    /// First rung budget (rounds every cell runs before any cell is
+    /// stopped).
+    pub min_rounds: u64,
+    pub metric: RungMetric,
+    pub mode: RungMode,
+}
+
+impl Default for SchedulerSpec {
+    fn default() -> Self {
+        SchedulerSpec {
+            kind: SchedulerKind::Grid,
+            eta: 2,
+            min_rounds: 1,
+            metric: RungMetric::Accuracy,
+            mode: RungMode::Max,
+        }
+    }
+}
+
+impl SchedulerSpec {
+    pub fn from_yaml(y: &Yaml) -> Result<SchedulerSpec> {
+        // A present-but-wrong-typed field must error like any other bad
+        // value, not silently fall back to the default.
+        let str_field = |name: &str| -> Result<Option<&str>> {
+            match y.get(name) {
+                None => Ok(None),
+                Some(v) => v.as_str().map(Some).ok_or_else(|| {
+                    anyhow!("campaign.scheduler.{name}: expected a string, got {v:?}")
+                }),
+            }
+        };
+        let int_field = |name: &str| -> Result<Option<i64>> {
+            match y.get(name) {
+                None => Ok(None),
+                Some(v) => v.as_i64().map(Some).ok_or_else(|| {
+                    anyhow!("campaign.scheduler.{name}: expected an integer, got {v:?}")
+                }),
+            }
+        };
+        let kind = match str_field("kind")?.unwrap_or("grid") {
+            "grid" => SchedulerKind::Grid,
+            "asha" | "sha" | "successive_halving" => SchedulerKind::Asha,
+            other => bail!("campaign.scheduler.kind: unknown scheduler '{other}' (grid|asha)"),
+        };
+        let eta = int_field("eta")?.unwrap_or(2);
+        let min_rounds = int_field("min_rounds")?.unwrap_or(1);
+        let metric = match str_field("metric")?.unwrap_or("accuracy") {
+            "accuracy" | "test_accuracy" => RungMetric::Accuracy,
+            "loss" | "test_loss" => RungMetric::Loss,
+            other => bail!("campaign.scheduler.metric: unknown metric '{other}' (accuracy|loss)"),
+        };
+        let mode = match str_field("mode")? {
+            None => match metric {
+                RungMetric::Accuracy => RungMode::Max,
+                RungMetric::Loss => RungMode::Min,
+            },
+            Some("max") => RungMode::Max,
+            Some("min") => RungMode::Min,
+            Some(other) => bail!("campaign.scheduler.mode: unknown mode '{other}' (max|min)"),
+        };
+        let spec = SchedulerSpec {
+            kind,
+            eta: eta.max(0) as u64,
+            min_rounds: min_rounds.max(0) as u64,
+            metric,
+            mode,
+        };
+        if eta < 2 {
+            bail!("campaign.scheduler.eta must be >= 2, got {eta}");
+        }
+        if min_rounds < 1 {
+            bail!("campaign.scheduler.min_rounds must be >= 1, got {min_rounds}");
+        }
+        Ok(spec)
+    }
+
+    /// The rung budget ladder for a job of `total` rounds: strictly
+    /// increasing `min_rounds · eta^k`, capped at — and always ending on —
+    /// `total`. `min_rounds >= total` degenerates to a single full-budget
+    /// rung (no cell is ever stopped).
+    pub fn ladder(&self, total: u64) -> Vec<u64> {
+        // Defensive: a programmatically-built spec with eta < 2 must not
+        // hang the ladder (the YAML/CLI paths already reject it).
+        let eta = self.eta.max(2);
+        let mut out = Vec::new();
+        let mut b = self.min_rounds.min(total).max(1);
+        loop {
+            out.push(b);
+            if b >= total {
+                return out;
+            }
+            b = b.saturating_mul(eta).min(total);
+        }
+    }
+
+    /// Sign-adjusted rung score: sorting *descending* by this ranks the
+    /// survivors first under either mode.
+    pub fn score(&self, value: f64) -> f64 {
+        match self.mode {
+            RungMode::Max => value,
+            RungMode::Min => -value,
+        }
+    }
+
+    /// Read this scheduler's decision metric out of one round's metrics.
+    pub fn metric_of(&self, m: &crate::metrics::report::RoundMetrics) -> f64 {
+        match self.metric {
+            RungMetric::Accuracy => m.test_accuracy,
+            RungMetric::Loss => m.test_loss,
+        }
+    }
+
+    /// How many of `alive` cells survive a rung decision.
+    pub fn survivors(&self, alive: usize) -> usize {
+        (alive / (self.eta.max(2) as usize)).max(1)
+    }
+}
+
 /// An explicit cell: an optional name plus axis overrides applied to the
 /// base job. YAML cells apply overrides in sorted key order (they come out
 /// of a `BTreeMap`); builder cells apply them in listed order. Either way
@@ -58,6 +219,9 @@ pub struct CampaignSpec {
     /// Job-level scheduler width: how many cells run concurrently
     /// (`0` = one per available core, `1` = serial — the default).
     pub jobs: usize,
+    /// Which scheduler drives the cells (grid = run everything, asha =
+    /// successive halving with rung-level early stopping).
+    pub scheduler: SchedulerSpec,
 }
 
 impl CampaignSpec {
@@ -69,6 +233,7 @@ impl CampaignSpec {
                 axes: BTreeMap::new(),
                 cells: Vec::new(),
                 jobs: 1,
+                scheduler: SchedulerSpec::default(),
             },
         }
     }
@@ -98,6 +263,10 @@ impl CampaignSpec {
         let jobs = match c.get("jobs").and_then(Yaml::as_i64).unwrap_or(1) {
             n if n < 0 => bail!("campaign.jobs must be >= 0 (0 = auto), got {n}"),
             n => n as usize,
+        };
+        let scheduler = match c.get("scheduler") {
+            Some(s) => SchedulerSpec::from_yaml(s)?,
+            None => SchedulerSpec::default(),
         };
 
         let mut axes = BTreeMap::new();
@@ -144,6 +313,7 @@ impl CampaignSpec {
             axes,
             cells,
             jobs,
+            scheduler,
         })
     }
 
@@ -198,6 +368,23 @@ impl CampaignBuilder {
     pub fn jobs(mut self, jobs: usize) -> CampaignBuilder {
         self.spec.jobs = jobs;
         self
+    }
+
+    /// Select the campaign scheduler (grid / asha rung parameters).
+    pub fn scheduler(mut self, scheduler: SchedulerSpec) -> CampaignBuilder {
+        self.spec.scheduler = scheduler;
+        self
+    }
+
+    /// Shorthand: ASHA with the given growth factor and first-rung budget,
+    /// ranking by test accuracy (max).
+    pub fn asha(self, eta: u64, min_rounds: u64) -> CampaignBuilder {
+        self.scheduler(SchedulerSpec {
+            kind: SchedulerKind::Asha,
+            eta,
+            min_rounds,
+            ..SchedulerSpec::default()
+        })
     }
 
     pub fn build(self) -> CampaignSpec {
@@ -435,6 +622,73 @@ topology:
         assert_eq!(name_part("strategy", &Yaml::from("fedavg")), "fedavg");
         assert_eq!(name_part("seed", &Yaml::Int(3)), "seed3");
         assert_eq!(name_part("heterogeneity", &Yaml::Float(0.5)), "heterogeneity0.5");
+    }
+
+    #[test]
+    fn scheduler_section_parses_and_defaults() {
+        // No scheduler section = grid.
+        let s = CampaignSpec::from_yaml_str(SPEC).unwrap();
+        assert_eq!(s.scheduler, SchedulerSpec::default());
+        assert_eq!(s.scheduler.kind, SchedulerKind::Grid);
+
+        let src = SPEC.replace(
+            "  jobs: 2\n",
+            "  jobs: 2\n  scheduler:\n    kind: asha\n    eta: 3\n    min_rounds: 2\n    metric: loss\n",
+        );
+        let s = CampaignSpec::from_yaml_str(&src).unwrap();
+        assert_eq!(s.scheduler.kind, SchedulerKind::Asha);
+        assert_eq!(s.scheduler.eta, 3);
+        assert_eq!(s.scheduler.min_rounds, 2);
+        assert_eq!(s.scheduler.metric, RungMetric::Loss);
+        // Mode defaults to the metric's natural direction.
+        assert_eq!(s.scheduler.mode, RungMode::Min);
+
+        // Explicit mode override wins.
+        let src2 = src.replace("    metric: loss\n", "    metric: loss\n    mode: max\n");
+        let s2 = CampaignSpec::from_yaml_str(&src2).unwrap();
+        assert_eq!(s2.scheduler.mode, RungMode::Max);
+
+        // Bad values are spec errors — including present-but-wrong-typed
+        // fields, which must not silently fall back to defaults.
+        for bad in [
+            "  scheduler:\n    kind: nonsense\n",
+            "  scheduler:\n    kind: asha\n    eta: 1\n",
+            "  scheduler:\n    kind: asha\n    min_rounds: 0\n",
+            "  scheduler:\n    metric: f1\n",
+            "  scheduler:\n    mode: sideways\n",
+            "  scheduler:\n    kind: asha\n    eta: not_a_number\n",
+            "  scheduler:\n    kind: 0\n",
+        ] {
+            let src = SPEC.replace("  jobs: 2\n", &format!("  jobs: 2\n{bad}"));
+            assert!(CampaignSpec::from_yaml_str(&src).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn rung_ladder_math() {
+        let sched = SchedulerSpec {
+            kind: SchedulerKind::Asha,
+            eta: 2,
+            min_rounds: 1,
+            ..SchedulerSpec::default()
+        };
+        assert_eq!(sched.ladder(16), vec![1, 2, 4, 8, 16]);
+        assert_eq!(sched.ladder(10), vec![1, 2, 4, 8, 10]); // capped at total
+        assert_eq!(sched.ladder(1), vec![1]);
+        let s3 = SchedulerSpec { eta: 3, min_rounds: 2, ..sched };
+        assert_eq!(s3.ladder(20), vec![2, 6, 18, 20]);
+        // min_rounds >= total degenerates to a single full rung.
+        let deep = SchedulerSpec { min_rounds: 30, ..sched };
+        assert_eq!(deep.ladder(10), vec![10]);
+        // Survivor count: floor(n/eta), never below 1.
+        assert_eq!(sched.survivors(8), 4);
+        assert_eq!(sched.survivors(3), 1);
+        assert_eq!(sched.survivors(1), 1);
+        assert_eq!(s3.survivors(8), 2);
+        // Score sign-adjusts for minimization.
+        assert_eq!(sched.score(0.75), 0.75);
+        let min_mode = SchedulerSpec { mode: RungMode::Min, ..sched };
+        assert_eq!(min_mode.score(0.75), -0.75);
     }
 
     #[test]

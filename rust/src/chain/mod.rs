@@ -23,7 +23,10 @@ use crate::util::json::Json;
 
 /// The FLsim Blockchain API every platform wrapper implements (the paper's
 /// "wrapper on the FLsim Blockchain API" step for adding a new platform).
-pub trait Blockchain {
+// `Send` is part of the contract: campaign schedulers park a paused
+// `JobState` (which owns the chain) between rungs and may resume it on a
+// different job-pool worker thread.
+pub trait Blockchain: Send {
     fn platform(&self) -> &'static str;
 
     /// Submit a contract-call transaction; it lands in the pending pool.

@@ -47,7 +47,10 @@ pub struct Decision {
 }
 
 /// Pluggable consensus algorithm (the paper's `MyConsensus` outline).
-pub trait Consensus {
+// `Send` is part of the contract: campaign schedulers park a paused
+// `JobState` (which owns the consensus object) between rungs and may resume
+// it on a different job-pool worker thread.
+pub trait Consensus: Send {
     fn name(&self) -> &'static str;
 
     /// Select the next global model among worker proposals. `rng` is the

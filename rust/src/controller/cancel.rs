@@ -1,0 +1,68 @@
+//! Cooperative cancellation for the round loop.
+//!
+//! A [`CancelToken`] is a cheap, clonable flag shared between whoever drives
+//! a run (the campaign scheduler, a CLI signal handler, a test) and the
+//! orchestrator's per-round loop. Cancellation is *cooperative*: the round
+//! loop checks the token at every round boundary and, when it is set, stops
+//! **cleanly** — the in-flight round either completes or never starts, so
+//! the partial [`crate::metrics::report::RunReport`] is always a valid
+//! bitwise prefix of the full run (the determinism contract extends to
+//! partial runs, test-enforced by `rust/tests/campaign.rs`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A shared cancellation flag. Cloning yields a handle to the *same* flag.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation. Idempotent; never blocks. The round loop
+    /// observes it at the next round boundary.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clones_share_the_flag() {
+        let a = CancelToken::new();
+        let b = a.clone();
+        assert!(!a.is_cancelled() && !b.is_cancelled());
+        b.cancel();
+        assert!(a.is_cancelled() && b.is_cancelled());
+        a.cancel(); // idempotent
+        assert!(a.is_cancelled());
+    }
+
+    #[test]
+    fn independent_tokens_do_not_interfere() {
+        let a = CancelToken::new();
+        let b = CancelToken::new();
+        a.cancel();
+        assert!(a.is_cancelled());
+        assert!(!b.is_cancelled());
+    }
+
+    #[test]
+    fn token_crosses_threads() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        std::thread::spawn(move || t2.cancel()).join().unwrap();
+        assert!(t.is_cancelled());
+    }
+}

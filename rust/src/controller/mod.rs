@@ -2,8 +2,10 @@
 //! state machine of Algorithm 1 — ProcessPhase / NodeStage signalling,
 //! stage barriers with timeouts, and fault injection.
 
+pub mod cancel;
 pub mod phases;
 pub mod sync;
 
+pub use cancel::CancelToken;
 pub use phases::{NodeStage, ProcessPhase};
 pub use sync::{FaultPlan, LogicController};

@@ -36,8 +36,9 @@ pub mod util;
 
 /// Convenient re-exports for examples and binaries.
 pub mod prelude {
-    pub use crate::campaign::{CampaignReport, CampaignSpec, ResultStore};
+    pub use crate::campaign::{CampaignReport, CampaignSpec, ResultStore, SchedulerSpec};
     pub use crate::config::job::JobConfig;
+    pub use crate::controller::cancel::CancelToken;
     pub use crate::controller::sync::FaultPlan;
     pub use crate::data::dataset::DatasetSpec;
     pub use crate::kvstore::netsim::{LinkModel, LinkPolicy};

@@ -155,8 +155,11 @@ fn run() -> Result<()> {
                  \n\
                  flsim run --config <job.yaml> [--artifacts DIR] [--rounds N] [--parallelism N]\n\
                  flsim campaign run    --spec <sweep.yaml> [--store DIR] [--out DIR] [--jobs N]\n\
+                 \x20                     [--scheduler grid|asha] [--eta N] [--min-rounds N]\n\
                  flsim campaign list   --spec <sweep.yaml> [--store DIR]\n\
                  flsim campaign report --spec <sweep.yaml> [--store DIR] [--out DIR]\n\
+                 flsim campaign gc     [--spec <sweep.yaml>] [--store DIR]\n\
+                 \x20                     [--max-age-days N | --max-age-secs N] [--keep-last N]\n\
                  flsim preset <strategy> [--rounds N] [--clients N] [--seed N] [--parallelism N]\n\
                  flsim experiment <fig8|fig9|fig10|fig11|tables|fig12|all>\n\
                  flsim list\n\
@@ -167,16 +170,12 @@ fn run() -> Result<()> {
     }
 }
 
-/// `flsim campaign run|list|report` — the sweep engine's CLI surface.
+/// `flsim campaign run|list|report|gc` — the sweep engine's CLI surface.
 ///
 /// `run` exits non-zero with the failure list when any cell fails, but only
 /// after every other cell has executed and persisted to the result store —
 /// a rerun resumes the completed cells from cache and retries the failures.
 fn campaign_cmd(sub: &str, args: &Args, artifacts: &str) -> Result<()> {
-    let spec_path = args
-        .flags
-        .get("spec")
-        .ok_or_else(|| anyhow!("campaign {sub}: missing --spec <sweep.yaml>"))?;
     let store_dir = args
         .flags
         .get("store")
@@ -187,10 +186,27 @@ fn campaign_cmd(sub: &str, args: &Args, artifacts: &str) -> Result<()> {
         .get("out")
         .cloned()
         .unwrap_or_else(|| "campaigns".to_string());
+
+    // `gc` takes --spec optionally (entries of the named campaign are
+    // protected from eviction); everything else requires it.
+    if sub == "gc" {
+        let store = ResultStore::open(&store_dir)?;
+        return campaign_gc(args, &store);
+    }
+    if !matches!(sub, "run" | "list" | "report") {
+        bail!("unknown campaign subcommand '{sub}' (run|list|report|gc)");
+    }
+    let spec_path = args
+        .flags
+        .get("spec")
+        .ok_or_else(|| anyhow!("campaign {sub}: missing --spec <sweep.yaml>"))?;
     let mut spec = CampaignSpec::from_yaml_file(spec_path)?;
     if let Some(j) = args.flags.get("jobs") {
         spec.jobs = j.parse().map_err(|_| anyhow!("bad --jobs"))?;
     }
+    apply_scheduler_overrides(&mut spec, args)?;
+    // Only now — with the subcommand and spec validated — create/open the
+    // store (error paths must not leave stray cache directories behind).
     let store = ResultStore::open(&store_dir)?;
 
     match sub {
@@ -247,6 +263,15 @@ fn campaign_cmd(sub: &str, args: &Args, artifacts: &str) -> Result<()> {
                 store.dir().display()
             );
             for (i, c) in cells.iter().enumerate() {
+                // Complete entry = cached; rung-stopped prefix = partial
+                // (a full run would re-execute, but an asha rung can hit).
+                let status = if store.contains(&c.key) {
+                    "cached".to_string()
+                } else if let Some(p) = store.get_at_least(&c.key, 1) {
+                    format!("partial({} rounds)", p.rounds_completed())
+                } else {
+                    "pending".to_string()
+                };
                 println!(
                     "  {:>3}  {:<28} {}  {:<10} {:<15} seed {:<6} {}",
                     i + 1,
@@ -255,12 +280,22 @@ fn campaign_cmd(sub: &str, args: &Args, artifacts: &str) -> Result<()> {
                     c.job.strategy.name(),
                     c.job.topology.name(),
                     c.job.seed,
-                    if store.contains(&c.key) { "cached" } else { "pending" }
+                    status
                 );
             }
             Ok(())
         }
         "report" => {
+            if spec.scheduler.kind == flsim::campaign::SchedulerKind::Asha {
+                // Which cells are rung-stopped (and at what depth) is the
+                // scheduler's decision, not the store's — `campaign run`
+                // replays those decisions from cache (zero executions) and
+                // writes the same report.
+                bail!(
+                    "campaign report: the asha scheduler decides per-cell depths — \
+                     use `flsim campaign run` (a fully-cached run is free) to regenerate"
+                );
+            }
             let cells = flsim::campaign::expand(&spec)?;
             let mut missing = Vec::new();
             let mut reports = Vec::new();
@@ -305,8 +340,95 @@ fn campaign_cmd(sub: &str, args: &Args, artifacts: &str) -> Result<()> {
             );
             Ok(())
         }
-        _ => bail!("unknown campaign subcommand '{sub}' (run|list|report)"),
+        _ => bail!("unknown campaign subcommand '{sub}' (run|list|report|gc)"),
     }
+}
+
+/// `--scheduler grid|asha [--eta N] [--min-rounds N]` — override the spec's
+/// `campaign.scheduler:` section from the command line.
+fn apply_scheduler_overrides(spec: &mut CampaignSpec, args: &Args) -> Result<()> {
+    use flsim::campaign::SchedulerKind;
+    if let Some(k) = args.flags.get("scheduler") {
+        spec.scheduler.kind = match k.as_str() {
+            "grid" => SchedulerKind::Grid,
+            "asha" | "sha" | "successive_halving" => SchedulerKind::Asha,
+            other => bail!("bad --scheduler '{other}' (grid|asha)"),
+        };
+    }
+    if let Some(e) = args.flags.get("eta") {
+        spec.scheduler.eta = e.parse().map_err(|_| anyhow!("bad --eta"))?;
+        if spec.scheduler.eta < 2 {
+            bail!("--eta must be >= 2");
+        }
+    }
+    if let Some(m) = args.flags.get("min-rounds") {
+        spec.scheduler.min_rounds = m.parse().map_err(|_| anyhow!("bad --min-rounds"))?;
+        if spec.scheduler.min_rounds < 1 {
+            bail!("--min-rounds must be >= 1");
+        }
+    }
+    Ok(())
+}
+
+/// `flsim campaign gc` — result-store lifecycle. Evicts entries older than
+/// `--max-age-days` and/or beyond the `--keep-last` newest, sweeps `.tmp`
+/// residue, and never touches entries of the campaign named by `--spec`
+/// (so a gc'd store still resumes that campaign entirely from cache).
+fn campaign_gc(args: &Args, store: &ResultStore) -> Result<()> {
+    let max_age = match (args.flags.get("max-age-days"), args.flags.get("max-age-secs")) {
+        (Some(_), Some(_)) => bail!("campaign gc: pick one of --max-age-days / --max-age-secs"),
+        (Some(d), None) => {
+            let days: f64 = d.parse().map_err(|_| anyhow!("bad --max-age-days"))?;
+            // `Duration::from_secs_f64` panics on non-finite/overflowing
+            // seconds; reject those (and negatives — NaN fails both signs)
+            // with a clean error instead.
+            if !(days >= 0.0 && days * 86_400.0 <= u64::MAX as f64) {
+                bail!("--max-age-days must be a finite number of days >= 0, got {d}");
+            }
+            Some(std::time::Duration::from_secs_f64(days * 86_400.0))
+        }
+        (None, Some(s)) => {
+            let secs: u64 = s.parse().map_err(|_| anyhow!("bad --max-age-secs"))?;
+            Some(std::time::Duration::from_secs(secs))
+        }
+        (None, None) => None,
+    };
+    let keep_last = match args.flags.get("keep-last") {
+        Some(k) => Some(k.parse::<usize>().map_err(|_| anyhow!("bad --keep-last"))?),
+        None => None,
+    };
+    if max_age.is_none() && keep_last.is_none() {
+        bail!(
+            "campaign gc: nothing to do — pass --max-age-days/--max-age-secs and/or --keep-last"
+        );
+    }
+
+    let mut protect = std::collections::BTreeSet::new();
+    if let Some(spec_path) = args.flags.get("spec") {
+        let spec = CampaignSpec::from_yaml_file(spec_path)?;
+        for cell in flsim::campaign::expand(&spec)? {
+            protect.insert(cell.key);
+        }
+        println!("campaign gc: protecting {} cells of campaign '{}'", protect.len(), spec.name);
+    }
+
+    let opts = flsim::campaign::GcOptions {
+        max_age,
+        keep_last,
+        // Default: `.tmp` residue younger than an hour is spared (it may
+        // be a live writer mid-commit on a shared store).
+        tmp_max_age: None,
+    };
+    let stats = store.gc(&opts, &protect)?;
+    println!(
+        "campaign gc: {} entries scanned — {} evicted, {} kept, {} tmp files swept ({})",
+        stats.scanned,
+        stats.evicted,
+        stats.kept,
+        stats.tmp_removed,
+        store.dir().display()
+    );
+    Ok(())
 }
 
 fn apply_overrides(job: &mut JobConfig, args: &Args) -> Result<()> {

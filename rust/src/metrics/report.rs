@@ -45,6 +45,12 @@ pub struct RunReport {
     pub n_clients: usize,
     pub n_workers: usize,
     pub seed: u64,
+    /// The run stopped at a round boundary before its configured round
+    /// budget (campaign-scheduler rung stop or cooperative cancellation).
+    /// By the determinism contract the recorded rounds are a bitwise
+    /// prefix of the same job run to completion; `rounds.len()` is the
+    /// number of rounds actually completed.
+    pub stopped_early: bool,
     pub rounds: Vec<RoundMetrics>,
 }
 
@@ -87,6 +93,36 @@ impl RunReport {
         self.rounds.iter().map(|r| r.test_accuracy).collect()
     }
 
+    /// Rounds actually completed (for a `stopped_early` report this is the
+    /// rung/cancellation boundary, not the configured budget).
+    pub fn rounds_completed(&self) -> u64 {
+        self.rounds.len() as u64
+    }
+
+    /// The metric recorded *at* round `round` (1-based), if that round was
+    /// completed. Campaign schedulers read rung-decision metrics with this.
+    pub fn metric_at(&self, round: u64, metric: impl Fn(&RoundMetrics) -> f64) -> Option<f64> {
+        if round == 0 {
+            return None;
+        }
+        self.rounds.get(round as usize - 1).map(metric)
+    }
+
+    /// The prefix of this report up to `rounds` completed rounds, marked
+    /// `stopped_early` when it is a strict prefix. By the determinism
+    /// contract this equals the report of the same job run with a round
+    /// budget of `rounds` — the campaign cache uses it to serve a deeper
+    /// stored entry as a *rung-level* hit.
+    pub fn truncated(&self, rounds: u64) -> RunReport {
+        let keep = (rounds as usize).min(self.rounds.len());
+        let mut out = self.clone();
+        out.rounds.truncate(keep);
+        if keep < self.rounds.len() {
+            out.stopped_early = true;
+        }
+        out
+    }
+
     pub fn loss_series(&self) -> Vec<f64> {
         self.rounds.iter().map(|r| r.test_loss).collect()
     }
@@ -124,6 +160,7 @@ impl RunReport {
             ("n_clients", Json::from(self.n_clients)),
             ("n_workers", Json::from(self.n_workers)),
             ("seed", Json::from(self.seed as usize)),
+            ("stopped_early", Json::from(self.stopped_early)),
             (
                 "rounds",
                 Json::Arr(
@@ -207,6 +244,13 @@ impl RunReport {
             n_clients: n("n_clients")? as usize,
             n_workers: n("n_workers")? as usize,
             seed: n("seed")? as u64,
+            // Strict: `to_json` always writes the flag, so a missing one is
+            // a stale/corrupt document (the campaign cache reads it as a
+            // miss rather than silently treating a partial run as full).
+            stopped_early: j
+                .get("stopped_early")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow!("run report json: missing bool 'stopped_early'"))?,
             rounds,
         })
     }
@@ -235,6 +279,7 @@ mod tests {
             n_clients: 10,
             n_workers: 1,
             seed: 42,
+            stopped_early: false,
             rounds: vec![
                 RoundMetrics {
                     round: 1,
@@ -310,5 +355,45 @@ mod tests {
         let r = RunReport::default();
         assert_eq!(r.final_accuracy(), 0.0);
         assert!(r.final_loss().is_nan());
+        assert!(!r.stopped_early);
+        assert_eq!(r.rounds_completed(), 0);
+    }
+
+    #[test]
+    fn truncated_marks_strict_prefixes_stopped_early() {
+        let r = sample();
+        let t = r.truncated(1);
+        assert!(t.stopped_early);
+        assert_eq!(t.rounds_completed(), 1);
+        assert_eq!(t.rounds[0].test_accuracy, 0.4);
+        // Truncating to (or beyond) the full length changes nothing.
+        let full = r.truncated(2);
+        assert!(!full.stopped_early);
+        assert_eq!(full.to_json().to_string(), r.to_json().to_string());
+        let beyond = r.truncated(99);
+        assert!(!beyond.stopped_early);
+        assert_eq!(beyond.rounds_completed(), 2);
+        // A truncated partial round-trips through JSON with the flag intact.
+        let back = RunReport::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
+        assert!(back.stopped_early);
+        assert_eq!(back.to_json().to_string(), t.to_json().to_string());
+    }
+
+    #[test]
+    fn metric_at_reads_one_based_rounds() {
+        let r = sample();
+        assert_eq!(r.metric_at(1, |m| m.test_accuracy), Some(0.4));
+        assert_eq!(r.metric_at(2, |m| m.test_loss), Some(1.2));
+        assert_eq!(r.metric_at(0, |m| m.test_accuracy), None);
+        assert_eq!(r.metric_at(3, |m| m.test_accuracy), None);
+    }
+
+    #[test]
+    fn from_json_requires_stopped_early() {
+        // A pre-partial-results document (no flag) must read as corrupt —
+        // the campaign cache treats that as a miss, not as a complete run.
+        let mut doc = sample().to_json().to_string();
+        doc = doc.replace("\"stopped_early\":false,", "");
+        assert!(RunReport::from_json(&Json::parse(&doc).unwrap()).is_err());
     }
 }

@@ -18,8 +18,9 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::config::job::JobConfig;
+use crate::controller::cancel::CancelToken;
 use crate::controller::sync::FaultPlan;
-use crate::metrics::report::RunReport;
+use crate::metrics::report::{RoundMetrics, RunReport};
 use crate::runtime::pjrt::Runtime;
 use crate::strategy::StrategyMode;
 use crate::topology::TopologyKind;
@@ -49,6 +50,150 @@ pub fn check_topology(job: &JobConfig) -> Result<()> {
     Ok(())
 }
 
+/// A per-round metric observer: streamed the round's metrics the moment the
+/// round commits, before the run finishes. Campaign schedulers hang their
+/// live rung-decision channel off this.
+pub type RoundSink = Box<dyn Fn(&RoundMetrics) + Send + Sync>;
+
+/// How a driven run may be bounded: a cooperative [`CancelToken`] observed
+/// at every round boundary, an optional round budget (run *up to* round
+/// `round_budget`, then pause), and an optional per-round metric sink.
+///
+/// Both stop paths are clean: the in-flight round either commits fully or
+/// never starts, so a stopped run's report is always a valid bitwise prefix
+/// of the full run.
+#[derive(Default)]
+pub struct RunControl {
+    pub cancel: CancelToken,
+    /// Inclusive upper round bound for this drive (`None` = the job's own
+    /// `rounds`). Values above the job budget are clamped to it.
+    pub round_budget: Option<u64>,
+    pub on_round: Option<RoundSink>,
+}
+
+impl RunControl {
+    /// Unbounded: run to the job's configured budget.
+    pub fn unbounded() -> RunControl {
+        RunControl::default()
+    }
+
+    /// Run up to `rounds` completed rounds, then pause.
+    pub fn budget(rounds: u64) -> RunControl {
+        RunControl {
+            round_budget: Some(rounds),
+            ..RunControl::default()
+        }
+    }
+}
+
+/// Why [`RunHandle::advance`] returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunStatus {
+    /// The job's full round budget is done.
+    Completed,
+    /// The drive's `round_budget` was reached; the run is paused and can be
+    /// advanced further.
+    BudgetReached,
+    /// The cancel token fired; the run stopped at a round boundary.
+    Cancelled,
+}
+
+/// A paused, resumable run: the scaffolded [`JobState`] plus the loop
+/// cursor. Campaign schedulers keep promoted cells' handles alive between
+/// rungs so deepening a cell never recomputes its earlier rounds.
+pub struct RunHandle {
+    state: setup::JobState,
+    mode: StrategyMode,
+    /// 1-based next round to execute.
+    next_round: u64,
+}
+
+impl RunHandle {
+    /// Validate + scaffold a job without running any round.
+    pub fn start(rt: Arc<Runtime>, job: &JobConfig, faults: FaultPlan) -> Result<RunHandle> {
+        job.validate()?;
+        check_topology(job)?;
+        let state = setup::JobState::scaffold(rt, job, faults)?;
+        let mode = job.strategy.mode();
+        Ok(RunHandle {
+            state,
+            mode,
+            next_round: 1,
+        })
+    }
+
+    /// Rounds completed so far.
+    pub fn rounds_done(&self) -> u64 {
+        self.next_round - 1
+    }
+
+    /// Drive the round loop under `ctl`: run rounds until the job budget,
+    /// the control's round budget, or cancellation — whichever is first.
+    /// Each committed round is pushed to the report (and streamed to
+    /// `ctl.on_round`) before the next one starts.
+    pub fn advance(&mut self, ctl: &RunControl) -> Result<RunStatus> {
+        let total = self.state.job.rounds;
+        let until = ctl.round_budget.unwrap_or(total).min(total);
+        while self.next_round <= until {
+            if ctl.cancel.is_cancelled() {
+                return Ok(RunStatus::Cancelled);
+            }
+            let round = self.next_round;
+            let metrics = match (self.mode, self.state.job.topology) {
+                (StrategyMode::Decentralized, _) => {
+                    flows::decentralized_round(&mut self.state, round)?
+                }
+                (StrategyMode::Clustered, _) => flows::clustered_round(&mut self.state, round)?,
+                (_, TopologyKind::Hierarchical) => {
+                    flows::hierarchical_round(&mut self.state, round)?
+                }
+                _ => flows::standard_round(&mut self.state, round)?,
+            };
+            self.state.report.rounds.push(metrics);
+            // Bound broker memory (long/large runs).
+            self.state.kv.truncate_before(round);
+            self.next_round += 1;
+            if let Some(sink) = &ctl.on_round {
+                sink(self.state.report.rounds.last().expect("round just pushed"));
+            }
+        }
+        Ok(if self.rounds_done() == total {
+            RunStatus::Completed
+        } else if ctl.cancel.is_cancelled() {
+            RunStatus::Cancelled
+        } else {
+            RunStatus::BudgetReached
+        })
+    }
+
+    /// Snapshot the report so far, `stopped_early` stamped when the run is
+    /// short of its configured budget. Always a valid (prefix) report.
+    pub fn partial_report(&self) -> RunReport {
+        let mut report = self.state.report.clone();
+        report.stopped_early = self.rounds_done() < self.state.job.rounds;
+        report
+    }
+
+    /// Consume a *completed* run: chain verification + the final report.
+    /// Call only after [`RunHandle::advance`] returned
+    /// [`RunStatus::Completed`] (a short run errors rather than laundering a
+    /// partial report as complete — use [`RunHandle::partial_report`]).
+    pub fn finish(self) -> Result<RunReport> {
+        if self.rounds_done() < self.state.job.rounds {
+            bail!(
+                "run '{}' finished at round {} of {} — partial runs report via partial_report()",
+                self.state.job.name,
+                self.rounds_done(),
+                self.state.job.rounds
+            );
+        }
+        if self.state.chain.is_some() {
+            self.state.verify_chain()?;
+        }
+        Ok(self.state.report)
+    }
+}
+
 pub struct Orchestrator {
     rt: Arc<Runtime>,
 }
@@ -65,26 +210,23 @@ impl Orchestrator {
 
     /// Run with injected node faults (stragglers / crashes).
     pub fn run_with_faults(&self, job: &JobConfig, faults: FaultPlan) -> Result<RunReport> {
-        job.validate()?;
-        check_topology(job)?;
-        let mut state = setup::JobState::scaffold(self.rt.clone(), job, faults)?;
-        let mode = job.strategy.mode();
+        self.run_controlled(job, faults, &RunControl::unbounded())
+    }
 
-        for round in 1..=job.rounds {
-            let metrics = match (mode, job.topology) {
-                (StrategyMode::Decentralized, _) => flows::decentralized_round(&mut state, round)?,
-                (StrategyMode::Clustered, _) => flows::clustered_round(&mut state, round)?,
-                (_, TopologyKind::Hierarchical) => flows::hierarchical_round(&mut state, round)?,
-                _ => flows::standard_round(&mut state, round)?,
-            };
-            state.report.rounds.push(metrics);
-            // Bound broker memory (long/large runs).
-            state.kv.truncate_before(round);
+    /// Run under a [`RunControl`]: returns the complete report, or — when
+    /// the control's budget or cancel token stopped the loop early — a valid
+    /// partial report marked `stopped_early` with `rounds_completed`
+    /// recorded (a bitwise prefix of the full run).
+    pub fn run_controlled(
+        &self,
+        job: &JobConfig,
+        faults: FaultPlan,
+        ctl: &RunControl,
+    ) -> Result<RunReport> {
+        let mut handle = RunHandle::start(self.rt.clone(), job, faults)?;
+        match handle.advance(ctl)? {
+            RunStatus::Completed => handle.finish(),
+            RunStatus::BudgetReached | RunStatus::Cancelled => Ok(handle.partial_report()),
         }
-
-        if state.chain.is_some() {
-            state.verify_chain()?;
-        }
-        Ok(state.report)
     }
 }

@@ -167,6 +167,7 @@ impl JobState {
             n_clients: client_names.len(),
             n_workers: worker_names.len(),
             seed: job.seed,
+            stopped_early: false,
             rounds: Vec::new(),
         };
 

@@ -84,6 +84,13 @@ impl Json {
         self.as_f64().map(|n| n as usize)
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     // -- writer ------------------------------------------------------------
 
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {

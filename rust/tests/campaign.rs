@@ -9,12 +9,20 @@
 //!   the result cache for every cell and reproduces a **byte-identical**
 //!   campaign report;
 //! * a failing cell never discards completed cells — they persist to the
-//!   store as they finish and are cache hits on the retry.
+//!   store as they finish and are cache hits on the retry;
+//! * cancellation is clean: a run stopped by budget or token returns a
+//!   bitwise *prefix* of the full run, and no stop path leaves torn
+//!   (`.tmp`) entries in the result store;
+//! * the ASHA scheduler executes strictly fewer rounds than the grid,
+//!   promotes a worker-count-independent cell set, and replays its rung
+//!   decisions entirely from cache on a re-run.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use flsim::campaign::{self, CampaignReport, CampaignSpec, ResultStore};
 use flsim::config::job::JobConfig;
+use flsim::controller::{CancelToken, FaultPlan};
+use flsim::orchestrator::{Orchestrator, RunControl};
 use flsim::runtime::pjrt::Runtime;
 use flsim::util::yaml::Yaml;
 
@@ -319,6 +327,332 @@ fn fig11_style_sweep_runs_and_resumes_as_one_spec() {
         CampaignReport::from_outcome(&first).to_json().to_string(),
         CampaignReport::from_outcome(&second).to_json().to_string()
     );
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Cancellation correctness: stopped runs are bitwise prefixes; no stop path
+// leaves torn store entries.
+// ---------------------------------------------------------------------------
+
+/// Every per-round field two runs must agree on bitwise.
+fn assert_rounds_bitwise_equal(
+    a: &[flsim::metrics::report::RoundMetrics],
+    b: &[flsim::metrics::report::RoundMetrics],
+    what: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{what}: round count");
+    for (ma, mb) in a.iter().zip(b) {
+        let r = ma.round;
+        assert_eq!(ma.round, mb.round, "{what}");
+        assert_eq!(ma.model_hash, mb.model_hash, "{what} round {r}");
+        assert_eq!(ma.net_bytes, mb.net_bytes, "{what} round {r}");
+        assert_eq!(ma.test_accuracy.to_bits(), mb.test_accuracy.to_bits(), "{what} round {r}");
+        assert_eq!(ma.test_loss.to_bits(), mb.test_loss.to_bits(), "{what} round {r}");
+        assert_eq!(ma.train_loss.to_bits(), mb.train_loss.to_bits(), "{what} round {r}");
+        assert_eq!(ma.sim_round_secs.to_bits(), mb.sim_round_secs.to_bits(), "{what} round {r}");
+    }
+}
+
+#[test]
+fn stopped_runs_are_bitwise_prefixes_of_the_full_run() {
+    let rt = Runtime::shared("artifacts").unwrap();
+    let mut job = tiny_base();
+    job.rounds = 4;
+
+    let full = Orchestrator::new(rt.clone()).run(&job).unwrap();
+    assert!(!full.stopped_early);
+    assert_eq!(full.rounds_completed(), 4);
+
+    // Budget stop at round 2: exactly the first two rounds, bit for bit.
+    let budgeted = Orchestrator::new(rt.clone())
+        .run_controlled(&job, FaultPlan::none(), &RunControl::budget(2))
+        .unwrap();
+    assert!(budgeted.stopped_early);
+    assert_eq!(budgeted.rounds_completed(), 2);
+    assert_rounds_bitwise_equal(&budgeted.rounds, &full.rounds[..2], "budget stop");
+
+    // Cooperative cancel fired from the per-round metric sink after round
+    // 3 commits: the loop observes it at the round boundary.
+    let cancel = CancelToken::new();
+    let cancel_in_sink = cancel.clone();
+    let ctl = RunControl {
+        cancel: cancel.clone(),
+        round_budget: None,
+        on_round: Some(Box::new(move |m| {
+            if m.round == 3 {
+                cancel_in_sink.cancel();
+            }
+        })),
+    };
+    let cancelled = Orchestrator::new(rt.clone())
+        .run_controlled(&job, FaultPlan::none(), &ctl)
+        .unwrap();
+    assert!(cancelled.stopped_early);
+    assert_eq!(cancelled.rounds_completed(), 3);
+    assert_rounds_bitwise_equal(&cancelled.rounds, &full.rounds[..3], "cancel stop");
+
+    // A pre-cancelled token yields a valid zero-round partial report.
+    let pre = CancelToken::new();
+    pre.cancel();
+    let ctl = RunControl {
+        cancel: pre,
+        ..RunControl::default()
+    };
+    let empty = Orchestrator::new(rt)
+        .run_controlled(&job, FaultPlan::none(), &ctl)
+        .unwrap();
+    assert!(empty.stopped_early);
+    assert_eq!(empty.rounds_completed(), 0);
+}
+
+/// Walk a store directory asserting no `.tmp` residue anywhere.
+fn assert_no_tmp_residue(dir: &Path) {
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        for entry in std::fs::read_dir(&d).unwrap().flatten() {
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else {
+                assert!(
+                    p.extension().map(|e| e != "tmp").unwrap_or(true),
+                    "torn store entry left behind: {p:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cancelled_campaign_leaves_no_torn_store_entries() {
+    let (store, dir) = tmp_store("torn");
+    let rt = Runtime::shared("artifacts").unwrap();
+    let mut job = tiny_base();
+    job.rounds = 3;
+
+    // A cancelled run whose partial is persisted: the tmp+rename write
+    // must leave exactly the committed entry.
+    let cancel = CancelToken::new();
+    let cancel_in_sink = cancel.clone();
+    let ctl = RunControl {
+        cancel,
+        round_budget: None,
+        on_round: Some(Box::new(move |m| {
+            if m.round == 1 {
+                cancel_in_sink.cancel();
+            }
+        })),
+    };
+    let partial = Orchestrator::new(rt.clone())
+        .run_controlled(&job, FaultPlan::none(), &ctl)
+        .unwrap();
+    assert!(partial.stopped_early);
+    let key = campaign::cell_key(&job);
+    assert!(store.put_partial(&key, "cancelled", &job, &partial).unwrap());
+    assert_no_tmp_residue(&dir);
+    // The committed partial loads cleanly at its depth.
+    assert_eq!(store.get_at_least(&key, 1).unwrap().rounds_completed(), 1);
+    assert!(store.get(&key).is_none(), "partial must not read as complete");
+
+    // An ASHA campaign (many puts + partial puts across rungs) is equally
+    // clean, and every surviving entry is loadable.
+    let spec = eight_cell_asha(2);
+    let outcome = campaign::run(rt, &spec, &store).unwrap();
+    assert!(outcome.failed().is_empty(), "{:?}", outcome.failure_lines());
+    assert_no_tmp_residue(&dir);
+    for (key, _, _) in store.entries() {
+        assert!(
+            store.get_at_least(&key, 1).is_some(),
+            "unloadable store entry {key}"
+        );
+    }
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// The ASHA scheduler's contracts.
+// ---------------------------------------------------------------------------
+
+/// A 2×2×2 sweep (strategy × learning-rate × seed, 4 rounds each) under
+/// ASHA with eta 2 and a one-round first rung: budgets 1, 2, 4.
+fn eight_cell_asha(jobs: usize) -> CampaignSpec {
+    let mut base = tiny_base();
+    base.name = "asha8".into();
+    base.rounds = 4;
+    CampaignSpec::builder("asha8", base)
+        .axis_strs("strategy", &["fedavg", "fedprox"])
+        .axis_ints("seed", &[1, 2])
+        .axis("learning_rate", vec![Yaml::Float(0.01), Yaml::Float(0.02)])
+        .jobs(jobs)
+        .asha(2, 1)
+        .build()
+}
+
+#[test]
+fn asha_runs_fewer_rounds_and_promotes_schedule_invariantly() {
+    let (store_a, dir_a) = tmp_store("asha_serial");
+    let (store_b, dir_b) = tmp_store("asha_parallel");
+    let (store_g, dir_g) = tmp_store("asha_grid");
+    let rt = Runtime::shared("artifacts").unwrap();
+
+    // The identical grid without the scheduler, for the budget comparison
+    // and the prefix check.
+    let mut grid_spec = eight_cell_asha(2);
+    grid_spec.scheduler = flsim::campaign::SchedulerSpec::default();
+    let grid = campaign::run(rt.clone(), &grid_spec, &store_g).unwrap();
+    assert!(grid.failed().is_empty(), "{:?}", grid.failure_lines());
+    assert_eq!(grid.cells.len(), 8);
+    assert_eq!(grid.total_rounds(), 32);
+
+    let serial = campaign::run(rt.clone(), &eight_cell_asha(1), &store_a).unwrap();
+    let parallel = campaign::run(rt.clone(), &eight_cell_asha(4), &store_b).unwrap();
+    for outcome in [&serial, &parallel] {
+        assert!(outcome.failed().is_empty(), "{:?}", outcome.failure_lines());
+        assert_eq!(outcome.cells.len(), 8);
+        // Rung math: 8×1 + 4×1 + 2×2 = 16 rounds, half the grid's 32.
+        assert_eq!(outcome.total_rounds(), 16);
+        assert!(outcome.total_rounds() < grid.total_rounds());
+        assert_eq!(outcome.stopped_early().len(), 6);
+    }
+
+    // The promoted set — which cells survived to which depth — is a pure
+    // function of (spec, seed): identical at any worker count, down to the
+    // per-round metrics.
+    for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+        assert_eq!(a.cell.name, b.cell.name);
+        let (ra, rb) = (a.report.as_ref().unwrap(), b.report.as_ref().unwrap());
+        assert_eq!(
+            ra.stopped_early,
+            rb.stopped_early,
+            "cell {} promoted under one schedule but not the other",
+            a.cell.name
+        );
+        assert_rounds_bitwise_equal(&ra.rounds, &rb.rounds, &a.cell.name);
+    }
+
+    // Every cell's (possibly partial) series is a bitwise prefix of the
+    // same cell run to completion by the grid.
+    for (a, g) in serial.cells.iter().zip(&grid.cells) {
+        assert_eq!(a.cell.key, g.cell.key);
+        let (ra, rg) = (a.report.as_ref().unwrap(), g.report.as_ref().unwrap());
+        let n = ra.rounds.len();
+        assert_rounds_bitwise_equal(&ra.rounds, &rg.rounds[..n], &a.cell.name);
+    }
+
+    std::fs::remove_dir_all(&dir_a).unwrap();
+    std::fs::remove_dir_all(&dir_b).unwrap();
+    std::fs::remove_dir_all(&dir_g).unwrap();
+}
+
+#[test]
+fn asha_rerun_replays_rung_decisions_from_cache() {
+    let (store, dir) = tmp_store("asha_replay");
+    let rt = Runtime::shared("artifacts").unwrap();
+    let spec = eight_cell_asha(2);
+
+    let first = campaign::run(rt.clone(), &spec, &store).unwrap();
+    assert!(first.failed().is_empty(), "{:?}", first.failure_lines());
+    assert!(!first.stopped_early().is_empty());
+
+    // Re-run: every rung decision replays from stored (partial and
+    // complete) entries — zero engine executions, byte-identical report.
+    let execs_before = rt.stats().executions;
+    let second = campaign::run(rt.clone(), &spec, &store).unwrap();
+    assert!(second.all_cached(), "asha re-run must replay from cache");
+    assert_eq!(
+        rt.stats().executions,
+        execs_before,
+        "a fully-cached asha campaign must not touch the engine"
+    );
+    assert_eq!(
+        CampaignReport::from_outcome(&first).to_csv(),
+        CampaignReport::from_outcome(&second).to_csv()
+    );
+    assert_eq!(
+        CampaignReport::from_outcome(&first).to_json().to_string(),
+        CampaignReport::from_outcome(&second).to_json().to_string()
+    );
+
+    // Promoting stopped cells deeper (the grid runs everything to the full
+    // budget) re-runs exactly the rung-stopped cells and *upgrades* their
+    // entries; the subsequent asha re-run is then still fully cached.
+    let mut grid_spec = spec.clone();
+    grid_spec.scheduler = flsim::campaign::SchedulerSpec::default();
+    let grid = campaign::run(rt.clone(), &grid_spec, &store).unwrap();
+    assert!(grid.failed().is_empty(), "{:?}", grid.failure_lines());
+    let cached: Vec<&str> = grid
+        .cells
+        .iter()
+        .filter(|c| c.cached)
+        .map(|c| c.cell.name.as_str())
+        .collect();
+    let promoted: Vec<&str> = first
+        .cells
+        .iter()
+        .filter(|c| !c.report.as_ref().unwrap().stopped_early)
+        .map(|c| c.cell.name.as_str())
+        .collect();
+    assert_eq!(cached, promoted, "grid must resume exactly the promoted cells");
+    let third = campaign::run(rt, &spec, &store).unwrap();
+    assert!(third.all_cached(), "deepened entries must still serve every rung");
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Result-store lifecycle: gc never evicts the campaign being resumed.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gc_never_evicts_entries_of_the_resumed_campaign() {
+    let (store, dir) = tmp_store("gc_resume");
+    let rt = Runtime::shared("artifacts").unwrap();
+    let spec = two_by_two(2);
+
+    let first = campaign::run(rt.clone(), &spec, &store).unwrap();
+    assert!(first.failed().is_empty(), "{:?}", first.failure_lines());
+
+    // Unrelated junk entries share the store.
+    let mut junk_keys = Vec::new();
+    for seed in 100..104u64 {
+        let mut job = tiny_base();
+        job.seed = seed;
+        job.name = format!("junk{seed}");
+        let key = campaign::cell_key(&job);
+        let report = first.cells[0].report.clone().unwrap();
+        store.put(&key, &job.name, &job, &report).unwrap();
+        junk_keys.push(key);
+    }
+
+    // The hardest eviction policy there is (`keep_last 0`), protecting the
+    // campaign about to be resumed — exactly what
+    // `flsim campaign gc --keep-last 0 --spec <spec>` does.
+    let protect: std::collections::BTreeSet<String> = campaign::expand(&spec)
+        .unwrap()
+        .into_iter()
+        .map(|c| c.key)
+        .collect();
+    let opts = campaign::GcOptions {
+        max_age: None,
+        keep_last: Some(0),
+        tmp_max_age: None,
+    };
+    let stats = store.gc(&opts, &protect).unwrap();
+    assert_eq!(stats.scanned, 8);
+    assert_eq!(stats.evicted, 4, "all junk, nothing else");
+    assert_eq!(stats.kept, 4);
+    for k in &junk_keys {
+        assert!(!store.contains(k));
+    }
+
+    // The resumed campaign is untouched: all cache hits, zero executions.
+    let execs_before = rt.stats().executions;
+    let resumed = campaign::run(rt.clone(), &spec, &store).unwrap();
+    assert!(resumed.all_cached(), "gc evicted a protected campaign entry");
+    assert_eq!(rt.stats().executions, execs_before);
 
     std::fs::remove_dir_all(&dir).unwrap();
 }

@@ -5,6 +5,8 @@
 
 use flsim::aggregate::mean::{weighted_mean, ReductionOrder};
 use flsim::aggregate::robust::{coordinate_median, trimmed_mean};
+use flsim::campaign::{self, CampaignSpec};
+use flsim::config::job::JobConfig;
 use flsim::consensus::{by_name, Proposal};
 use flsim::data::dataset::Distribution;
 use flsim::data::partition::Partition;
@@ -255,6 +257,236 @@ fn prop_yaml_scalar_roundtrip() {
             if got != &v {
                 return Err(format!("{k}: {got:?} != {v:?}"));
             }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Campaign grid-expansion invariants (random axis maps).
+// ---------------------------------------------------------------------------
+
+/// A random campaign spec over the supported sweep axes. Returns the spec
+/// plus the per-axis value counts (for the cell-count property). Axes are
+/// *inserted* in a random order so the expansion-order properties exercise
+/// name reordering.
+fn random_grid_spec(rng: &mut Rng) -> (CampaignSpec, Vec<usize>) {
+    let mut base = JobConfig::default_cnn("fedavg");
+    base.name = "prop_base".into();
+    base.rounds = 2;
+    base.dataset.n = 600;
+    base.n_clients = 4;
+
+    // Pools of distinct values per eligible axis.
+    let pools: Vec<(&str, Vec<Yaml>)> = vec![
+        (
+            "strategy",
+            vec!["fedavg", "fedprox", "scaffold", "fedstellar"]
+                .into_iter()
+                .map(Yaml::from)
+                .collect(),
+        ),
+        (
+            "topology",
+            vec!["client_server", "ring", "fully_connected"]
+                .into_iter()
+                .map(Yaml::from)
+                .collect(),
+        ),
+        ("seed", (1..=4).map(Yaml::Int).collect()),
+        ("rounds", vec![Yaml::Int(1), Yaml::Int(2), Yaml::Int(3)]),
+        ("local_epochs", vec![Yaml::Int(1), Yaml::Int(2)]),
+        (
+            "learning_rate",
+            vec![Yaml::Float(0.01), Yaml::Float(0.02), Yaml::Float(0.05)],
+        ),
+        ("heterogeneity", vec![Yaml::Float(0.0), Yaml::Float(0.5)]),
+    ];
+
+    // Pick 1..=4 random axes in random insertion order, each with a random
+    // non-empty prefix of its (distinct) value pool.
+    let n_axes = 1 + rng.below(4);
+    let mut order: Vec<usize> = (0..pools.len()).collect();
+    // Deterministic shuffle.
+    for i in (1..order.len()).rev() {
+        let j = rng.below(i + 1);
+        order.swap(i, j);
+    }
+    let mut spec = CampaignSpec::builder("prop_grid", base);
+    let mut lens = Vec::new();
+    for &pi in order.iter().take(n_axes) {
+        let (axis, pool) = &pools[pi];
+        let take = 1 + rng.below(pool.len());
+        spec = spec.axis(axis, pool[..take].to_vec());
+        lens.push(take);
+    }
+    (spec.build(), lens)
+}
+
+/// How many grid points of `spec` are strategy/topology-incompatible (the
+/// expansion skips them when the topology axis is swept). Computed here by
+/// brute force over the cartesian product, independent of the expansion's
+/// own enumeration.
+fn incompatible_points(spec: &CampaignSpec) -> Result<usize, String> {
+    if !spec.axes.contains_key("topology") {
+        return Ok(0);
+    }
+    let axes: Vec<(&String, &Vec<Yaml>)> = spec.axes.iter().collect();
+    let total: usize = axes.iter().map(|(_, v)| v.len()).product();
+    let mut bad = 0;
+    for mut idx in 0..total {
+        let mut job = spec.base.clone();
+        for (name, vals) in axes.iter().rev() {
+            let pick = idx % vals.len();
+            idx /= vals.len();
+            campaign::spec::apply_axis(&mut job, name, &vals[pick])
+                .map_err(|e| e.to_string())?;
+        }
+        if flsim::orchestrator::check_topology(&job).is_err() {
+            bad += 1;
+        }
+    }
+    Ok(bad)
+}
+
+#[test]
+fn prop_grid_expansion_deterministic_under_axis_reordering() {
+    forall(60, |rng| {
+        let (spec, _) = random_grid_spec(rng);
+        // Rebuild the same spec with axes inserted in reversed order: the
+        // BTreeMap canonicalizes, so expansion must be identical.
+        let mut reordered = CampaignSpec::builder("prop_grid", spec.base.clone());
+        for (axis, vals) in spec.axes.iter().rev() {
+            reordered = reordered.axis(axis, vals.clone());
+        }
+        let (a, b) = match (campaign::expand(&spec), campaign::expand(&reordered.build())) {
+            // An all-incompatible grid errors — identically under
+            // reordering.
+            (Err(_), Err(_)) => return Ok(()),
+            (Ok(a), Ok(b)) => (a, b),
+            (a, b) => {
+                return Err(format!(
+                    "reordering changed expandability: {:?} vs {:?}",
+                    a.map(|c| c.len()),
+                    b.map(|c| c.len())
+                ))
+            }
+        };
+        if a.len() != b.len() {
+            return Err(format!("reordering changed cell count: {} vs {}", a.len(), b.len()));
+        }
+        for (ca, cb) in a.iter().zip(&b) {
+            if ca.name != cb.name || ca.key != cb.key {
+                return Err(format!(
+                    "reordering changed cell: {} / {} vs {} / {}",
+                    ca.name, ca.key, cb.name, cb.key
+                ));
+            }
+        }
+        // And a straight re-expansion is idempotent.
+        let c = campaign::expand(&spec).map_err(|e| e.to_string())?;
+        if a.len() != c.len() || a.iter().zip(&c).any(|(x, y)| x.key != y.key) {
+            return Err("re-expansion diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grid_dedup_never_drops_distinct_keys() {
+    forall(60, |rng| {
+        let (spec, _) = random_grid_spec(rng);
+        let cells = match campaign::expand(&spec) {
+            // All-incompatible grids error (covered by the count property).
+            Err(_) => return Ok(()),
+            Ok(c) => c,
+        };
+        // All surviving keys are pairwise distinct ...
+        let keys: std::collections::BTreeSet<&String> = cells.iter().map(|c| &c.key).collect();
+        if keys.len() != cells.len() {
+            return Err("expansion emitted duplicate keys".into());
+        }
+        // ... and dedup only ever removes *identical* configs: repeating an
+        // axis's value list verbatim doubles the raw product but must leave
+        // the distinct cell set unchanged — no distinct key is dropped, no
+        // duplicate survives.
+        for (axis, vals) in &spec.axes {
+            let mut rep = spec.clone();
+            let mut twice = vals.clone();
+            twice.extend(vals.iter().cloned());
+            rep.axes.insert(axis.clone(), twice);
+            let expanded = campaign::expand(&rep).map_err(|e| e.to_string())?;
+            if expanded.len() != cells.len() {
+                return Err(format!(
+                    "repeating axis '{axis}' values changed the distinct cell count: \
+                     {} vs {}",
+                    expanded.len(),
+                    cells.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grid_cell_count_is_product_minus_skips() {
+    forall(60, |rng| {
+        let (spec, lens) = random_grid_spec(rng);
+        let product: usize = lens.iter().product();
+        let skipped = incompatible_points(&spec)?;
+        let cells = campaign::expand(&spec);
+        if product == skipped {
+            // Every point incompatible: expansion must error, not succeed
+            // empty.
+            return match cells {
+                Err(_) => Ok(()),
+                Ok(c) => Err(format!("all-skipped grid expanded to {} cells", c.len())),
+            };
+        }
+        let cells = cells.map_err(|e| e.to_string())?;
+        // Distinct-config count: the cartesian product minus incompatible
+        // points, minus key-level duplicates (possible when two different
+        // axis picks resolve to one config — e.g. a decentralized strategy
+        // forcing the topology). Compute expected distinct keys by brute
+        // force.
+        let axes: Vec<(&String, &Vec<Yaml>)> = spec.axes.iter().collect();
+        let mut expect = std::collections::BTreeSet::new();
+        let topology_swept = spec.axes.contains_key("topology");
+        for mut idx in 0..product {
+            let mut job = spec.base.clone();
+            let mut picks = Vec::new();
+            for (name, vals) in axes.iter().rev() {
+                let pick = idx % vals.len();
+                idx /= vals.len();
+                picks.push((name.to_string(), vals[pick].clone()));
+            }
+            picks.reverse();
+            for (name, val) in &picks {
+                campaign::spec::apply_axis(&mut job, name, val)
+                    .map_err(|e| e.to_string())?;
+            }
+            if topology_swept && flsim::orchestrator::check_topology(&job).is_err() {
+                continue;
+            }
+            if flsim::orchestrator::check_topology(&job).is_err() {
+                job.topology = flsim::topology::TopologyKind::FullyConnected;
+            }
+            job.name = picks
+                .iter()
+                .map(|(n, v)| campaign::spec::name_part(n, v))
+                .collect::<Vec<_>>()
+                .join("_");
+            expect.insert(campaign::cell_key(&job));
+        }
+        if cells.len() != expect.len() {
+            return Err(format!(
+                "cell count {} != product {} - skipped {} (distinct {})",
+                cells.len(),
+                product,
+                skipped,
+                expect.len()
+            ));
         }
         Ok(())
     });

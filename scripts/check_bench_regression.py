@@ -2,28 +2,125 @@
 """Compare a fresh BENCH_micro.json against the committed BENCH_baseline.json.
 
 Usage:
-    scripts/check_bench_regression.py BASELINE CURRENT [--tolerance 0.30]
+    scripts/check_bench_regression.py BASELINE CURRENT
+        [--tolerance 0.30] [--thresholds SPEC]
     scripts/check_bench_regression.py --write-baseline BASELINE CURRENT
 
-Every `results[].ns_per_op` series present in *both* files is compared; a
-current value more than ``tolerance`` (default +/-30%, override with
-``--tolerance`` or the FLSIM_BENCH_TOLERANCE env var) above its baseline is
-a regression and fails the check. Values more than ``tolerance`` *below*
-baseline are reported as improvements with a hint to refresh the baseline
-(stale baselines hide future regressions). Series present in only one file
-are listed informationally (new/retired benches are not failures).
+Three series kinds are compared, each with its own regression direction and
+default tolerance:
 
-A baseline marked ``"provisional": true`` downgrades regressions to
-warnings and always exits 0: commit the BENCH_micro.json artifact of a real
-CI run (via ``--write-baseline``, which drops the flag) to arm the gate.
+    kind           field            worse when   default tolerance
+    results        ns_per_op        higher       0.30  (host-speed noise)
+    throughput     ops_per_sec      lower        0.30  (host-speed noise)
+    makespan       sim_round_secs   higher       0.01  (virtual clock —
+                                                        deterministic, so
+                                                        any drift is real)
+
+The base ``--tolerance`` (or the FLSIM_BENCH_TOLERANCE env var) replaces the
+0.30 default of the wall-clock kinds; ``--thresholds`` refines per kind or
+per series name:
+
+    --thresholds "makespan=0.02,throughput=0.40,name:round/par*=0.50"
+
+Items are comma-separated ``kind=FRACTION`` (kind: ns_per_op/results,
+ops_per_sec/throughput, sim_round_secs/makespan) or ``name:PATTERN=FRACTION``
+(fnmatch pattern against the series name; first matching pattern wins and
+beats any kind-level setting).
+
+Series present in only one file are listed informationally (new/retired
+benches are not failures). A baseline marked ``"provisional": true``
+downgrades regressions to warnings and always exits 0: commit the
+BENCH_micro.json artifact of a real CI run (via ``--write-baseline``, which
+drops the flag) to arm the gate.
 
 Only the Python standard library is used.
 """
 
 import argparse
+import fnmatch
 import json
 import os
 import sys
+
+# kind -> (json list key, value field, +1 = higher is worse / -1 = lower is
+# worse, default tolerance)
+SERIES_KINDS = {
+    "ns_per_op": ("results", "ns_per_op", +1, 0.30),
+    "ops_per_sec": ("throughput", "ops_per_sec", -1, 0.30),
+    "sim_round_secs": ("makespan", "sim_round_secs", +1, 0.01),
+}
+
+# Accepted aliases for kind-level threshold overrides.
+KIND_ALIASES = {
+    "results": "ns_per_op",
+    "ns_per_op": "ns_per_op",
+    "throughput": "ops_per_sec",
+    "ops_per_sec": "ops_per_sec",
+    "makespan": "sim_round_secs",
+    "sim_round_secs": "sim_round_secs",
+}
+
+
+class ThresholdSpecError(ValueError):
+    """A malformed --thresholds spec."""
+
+
+def parse_thresholds(spec):
+    """Parse a --thresholds spec into (kind_overrides, pattern_overrides).
+
+    ``kind_overrides`` maps canonical kind -> tolerance; ``pattern_overrides``
+    is an ordered list of (fnmatch pattern, tolerance). Raises
+    ThresholdSpecError on malformed input.
+    """
+    kinds, patterns = {}, []
+    if not spec:
+        return kinds, patterns
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        if "=" not in item:
+            raise ThresholdSpecError(f"threshold item {item!r}: expected KEY=FRACTION")
+        key, _, raw = item.partition("=")
+        key = key.strip()
+        try:
+            tol = float(raw.strip())
+        except ValueError:
+            raise ThresholdSpecError(f"threshold item {item!r}: bad fraction {raw.strip()!r}")
+        if tol < 0:
+            raise ThresholdSpecError(f"threshold item {item!r}: tolerance must be >= 0")
+        if key.startswith("name:"):
+            pattern = key[len("name:"):].strip()
+            if not pattern:
+                raise ThresholdSpecError(f"threshold item {item!r}: empty name pattern")
+            patterns.append((pattern, tol))
+        elif key in KIND_ALIASES:
+            kinds[KIND_ALIASES[key]] = tol
+        else:
+            raise ThresholdSpecError(
+                f"threshold item {item!r}: unknown kind {key!r} "
+                f"(use {sorted(set(KIND_ALIASES))} or name:PATTERN)"
+            )
+    return kinds, patterns
+
+
+def tolerance_for(name, kind, base_tolerance, kind_overrides, pattern_overrides):
+    """Resolve one series' tolerance: name pattern > kind override > default.
+
+    ``base_tolerance`` (the --tolerance flag), when given, replaces the
+    built-in default of the wall-clock kinds only — the makespan series is
+    a deterministic virtual clock and keeps its tight default unless
+    explicitly overridden.
+    """
+    for pattern, tol in pattern_overrides:
+        if fnmatch.fnmatch(name, pattern):
+            return tol
+    if kind in kind_overrides:
+        return kind_overrides[kind]
+    default = SERIES_KINDS[kind][3]
+    if base_tolerance is not None and kind != "sim_round_secs":
+        return base_tolerance
+    return default
 
 
 def load(path):
@@ -34,8 +131,27 @@ def load(path):
     return doc
 
 
-def index_ns_per_op(doc):
-    return {r["name"]: float(r["ns_per_op"]) for r in doc.get("results", [])}
+def index_series(doc, kind):
+    list_key, field, _, _ = SERIES_KINDS[kind]
+    out = {}
+    for r in doc.get(list_key, []):
+        out[r["name"]] = float(r[field])
+    return out
+
+
+def classify(kind, base, cur, tol):
+    """Return 'regressed' / 'improved' / 'ok' for one series pair."""
+    if base <= 0.0:
+        return "ok"
+    direction = SERIES_KINDS[kind][2]
+    ratio = cur / base
+    worse = ratio > 1.0 + tol if direction > 0 else ratio < 1.0 - tol
+    better = ratio < 1.0 - tol if direction > 0 else ratio > 1.0 + tol
+    if worse:
+        return "regressed"
+    if better:
+        return "improved"
+    return "ok"
 
 
 def write_baseline(current_path, baseline_path):
@@ -45,18 +161,26 @@ def write_baseline(current_path, baseline_path):
     with open(baseline_path, "w", encoding="utf-8") as f:
         json.dump(doc, f, separators=(",", ":"))
         f.write("\n")
-    print(f"wrote {baseline_path} from {current_path} ({len(doc.get('results', []))} series)")
+    n = sum(len(doc.get(k, [])) for k, _, _, _ in SERIES_KINDS.values())
+    print(f"wrote {baseline_path} from {current_path} ({n} series)")
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
     ap.add_argument("current")
+    env_tol = os.environ.get("FLSIM_BENCH_TOLERANCE")
     ap.add_argument(
         "--tolerance",
         type=float,
-        default=float(os.environ.get("FLSIM_BENCH_TOLERANCE", "0.30")),
-        help="allowed fractional drift per series (default 0.30 = +/-30%%)",
+        default=float(env_tol) if env_tol is not None else None,
+        help="base tolerance for the wall-clock kinds (default 0.30); the "
+        "makespan kind keeps its own default unless set via --thresholds",
+    )
+    ap.add_argument(
+        "--thresholds",
+        default=os.environ.get("FLSIM_BENCH_THRESHOLDS", ""),
+        help='per-kind/per-name tolerances, e.g. "makespan=0.02,name:agg/*=0.5"',
     )
     ap.add_argument(
         "--write-baseline",
@@ -69,44 +193,53 @@ def main():
         write_baseline(args.current, args.baseline)
         return
 
+    try:
+        kind_overrides, pattern_overrides = parse_thresholds(args.thresholds)
+    except ThresholdSpecError as e:
+        sys.exit(f"--thresholds: {e}")
+
     base_doc = load(args.baseline)
     cur_doc = load(args.current)
     provisional = bool(base_doc.get("provisional"))
-    base = index_ns_per_op(base_doc)
-    cur = index_ns_per_op(cur_doc)
 
-    shared = sorted(set(base) & set(cur))
-    only_base = sorted(set(base) - set(cur))
-    only_cur = sorted(set(cur) - set(base))
-
+    compared = 0
     regressions, improvements = [], []
-    for name in shared:
-        b, c = base[name], cur[name]
-        if b <= 0.0:
-            continue
-        ratio = c / b
-        line = f"{name}: {b:.1f} -> {c:.1f} ns/op ({ratio - 1.0:+.0%} vs baseline)"
-        if ratio > 1.0 + args.tolerance:
-            regressions.append(line)
-        elif ratio < 1.0 - args.tolerance:
-            improvements.append(line)
+    for kind, (list_key, _, direction, _) in SERIES_KINDS.items():
+        base = index_series(base_doc, kind)
+        cur = index_series(cur_doc, kind)
+        unit = kind.replace("_", " ")
+        for name in sorted(set(base) & set(cur)):
+            b, c = base[name], cur[name]
+            if b <= 0.0:
+                continue
+            compared += 1
+            tol = tolerance_for(name, kind, args.tolerance, kind_overrides, pattern_overrides)
+            verdict = classify(kind, b, c, tol)
+            drift = c / b - 1.0
+            line = (
+                f"{list_key}/{name}: {b:.4g} -> {c:.4g} {unit} "
+                f"({drift:+.1%} vs baseline, tolerance +/-{tol:.0%})"
+            )
+            if verdict == "regressed":
+                regressions.append(line)
+            elif verdict == "improved":
+                improvements.append(line)
+        for name in sorted(set(cur) - set(base)):
+            print(f"  NEW       {list_key}/{name} ({cur[name]:.4g} {unit}) — not in baseline")
+        for name in sorted(set(base) - set(cur)):
+            print(f"  RETIRED   {list_key}/{name} — in baseline but not in current run")
 
     print(
-        f"bench-regression: {len(shared)} series compared "
-        f"(tolerance +/-{args.tolerance:.0%}), "
+        f"bench-regression: {compared} series compared, "
         f"{len(regressions)} regressed, {len(improvements)} improved"
     )
     for line in improvements:
         print(f"  IMPROVED  {line}  — consider refreshing BENCH_baseline.json")
     for line in regressions:
         print(f"  REGRESSED {line}")
-    for name in only_cur:
-        print(f"  NEW       {name} ({cur[name]:.1f} ns/op) — not in baseline")
-    for name in only_base:
-        print(f"  RETIRED   {name} — in baseline but not in current run")
 
     if provisional:
-        if not shared:
+        if compared == 0:
             print(
                 "baseline is provisional and empty: promote a real CI run's "
                 "BENCH_micro.json artifact with --write-baseline to arm the gate"

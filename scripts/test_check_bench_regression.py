@@ -1,0 +1,176 @@
+#!/usr/bin/env python3
+"""Unit tests for the bench-regression gate (threshold parser + series
+comparison semantics). Stdlib-only; run directly or via the CI step:
+
+    python3 scripts/test_check_bench_regression.py
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import check_bench_regression as gate  # noqa: E402
+
+
+class ParseThresholdsTest(unittest.TestCase):
+    def test_empty_spec_is_no_overrides(self):
+        self.assertEqual(gate.parse_thresholds(""), ({}, []))
+        self.assertEqual(gate.parse_thresholds(None), ({}, []))
+
+    def test_kind_overrides_accept_aliases(self):
+        kinds, patterns = gate.parse_thresholds(
+            "makespan=0.02, throughput=0.4,ns_per_op=0.25"
+        )
+        self.assertEqual(
+            kinds,
+            {"sim_round_secs": 0.02, "ops_per_sec": 0.4, "ns_per_op": 0.25},
+        )
+        self.assertEqual(patterns, [])
+        # Field-name aliases resolve to the same canonical kinds.
+        kinds2, _ = gate.parse_thresholds(
+            "sim_round_secs=0.02,ops_per_sec=0.4,results=0.25"
+        )
+        self.assertEqual(kinds, kinds2)
+
+    def test_name_patterns_keep_order(self):
+        _, patterns = gate.parse_thresholds(
+            "name:round/par*=0.5,name:agg/?=0.1"
+        )
+        self.assertEqual(patterns, [("round/par*", 0.5), ("agg/?", 0.1)])
+
+    def test_trailing_commas_and_spaces_are_fine(self):
+        kinds, patterns = gate.parse_thresholds(" makespan=0.05 , ")
+        self.assertEqual(kinds, {"sim_round_secs": 0.05})
+        self.assertEqual(patterns, [])
+
+    def test_malformed_items_raise(self):
+        for bad in [
+            "makespan",                # no '='
+            "makespan=fast",           # not a number
+            "makespan=-0.1",           # negative
+            "wallclock=0.3",           # unknown kind
+            "name:=0.3",               # empty pattern
+        ]:
+            with self.assertRaises(gate.ThresholdSpecError, msg=bad):
+                gate.parse_thresholds(bad)
+
+
+class ToleranceResolutionTest(unittest.TestCase):
+    def test_defaults_per_kind(self):
+        self.assertEqual(gate.tolerance_for("x", "ns_per_op", None, {}, []), 0.30)
+        self.assertEqual(gate.tolerance_for("x", "ops_per_sec", None, {}, []), 0.30)
+        self.assertEqual(gate.tolerance_for("x", "sim_round_secs", None, {}, []), 0.01)
+
+    def test_base_tolerance_replaces_wall_clock_defaults_only(self):
+        self.assertEqual(gate.tolerance_for("x", "ns_per_op", 0.5, {}, []), 0.5)
+        self.assertEqual(gate.tolerance_for("x", "ops_per_sec", 0.5, {}, []), 0.5)
+        # The virtual clock is deterministic: host-speed slack must not
+        # loosen it implicitly.
+        self.assertEqual(gate.tolerance_for("x", "sim_round_secs", 0.5, {}, []), 0.01)
+
+    def test_precedence_name_over_kind_over_default(self):
+        kinds = {"ns_per_op": 0.2}
+        patterns = [("agg/*", 0.05), ("agg/pairwise", 0.9)]
+        # First matching pattern wins.
+        self.assertEqual(
+            gate.tolerance_for("agg/pairwise", "ns_per_op", None, kinds, patterns), 0.05
+        )
+        self.assertEqual(
+            gate.tolerance_for("kv/publish", "ns_per_op", None, kinds, patterns), 0.2
+        )
+        self.assertEqual(
+            gate.tolerance_for("kv/publish", "ops_per_sec", None, kinds, patterns), 0.30
+        )
+
+
+class ClassifyTest(unittest.TestCase):
+    def test_higher_is_worse_kinds(self):
+        self.assertEqual(gate.classify("ns_per_op", 100.0, 140.0, 0.30), "regressed")
+        self.assertEqual(gate.classify("ns_per_op", 100.0, 120.0, 0.30), "ok")
+        self.assertEqual(gate.classify("ns_per_op", 100.0, 60.0, 0.30), "improved")
+        self.assertEqual(gate.classify("sim_round_secs", 10.0, 10.2, 0.01), "regressed")
+        self.assertEqual(gate.classify("sim_round_secs", 10.0, 10.05, 0.01), "ok")
+
+    def test_lower_is_worse_for_throughput(self):
+        self.assertEqual(gate.classify("ops_per_sec", 50.0, 30.0, 0.30), "regressed")
+        self.assertEqual(gate.classify("ops_per_sec", 50.0, 45.0, 0.30), "ok")
+        self.assertEqual(gate.classify("ops_per_sec", 50.0, 70.0, 0.30), "improved")
+
+    def test_zero_baseline_never_classifies(self):
+        self.assertEqual(gate.classify("ns_per_op", 0.0, 99.0, 0.30), "ok")
+
+
+class EndToEndTest(unittest.TestCase):
+    """Run the script as CI does and check its exit codes."""
+
+    SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "check_bench_regression.py")
+
+    @staticmethod
+    def doc(ns=100.0, ops=50.0, mk=10.0, provisional=False):
+        d = {
+            "schema": "flsim-bench-v1",
+            "results": [{"name": "agg/mean", "ns_per_op": ns, "iters": 5}],
+            "throughput": [{"name": "round/p4", "ops_per_sec": ops}],
+            "makespan": [{"name": "topo/cs", "sim_round_secs": mk}],
+        }
+        if provisional:
+            d["provisional"] = True
+        return d
+
+    def run_gate(self, baseline, current, *extra):
+        with tempfile.TemporaryDirectory() as td:
+            bp = os.path.join(td, "base.json")
+            cp = os.path.join(td, "cur.json")
+            with open(bp, "w", encoding="utf-8") as f:
+                json.dump(baseline, f)
+            with open(cp, "w", encoding="utf-8") as f:
+                json.dump(current, f)
+            proc = subprocess.run(
+                [sys.executable, self.SCRIPT, bp, cp, *extra],
+                capture_output=True,
+                text=True,
+            )
+            return proc.returncode, proc.stdout + proc.stderr
+
+    def test_within_tolerance_passes(self):
+        code, out = self.run_gate(self.doc(), self.doc(ns=110.0, ops=45.0, mk=10.05))
+        self.assertEqual(code, 0, out)
+        self.assertIn("3 series compared", out)
+
+    def test_makespan_is_tight_by_default(self):
+        # +5% makespan is a regression even though the wall-clock kinds
+        # would tolerate it.
+        code, out = self.run_gate(self.doc(), self.doc(mk=10.5))
+        self.assertNotEqual(code, 0, out)
+        self.assertIn("REGRESSED", out)
+        self.assertIn("makespan", out)
+
+    def test_throughput_drop_fails_and_thresholds_can_loosen(self):
+        code, out = self.run_gate(self.doc(), self.doc(ops=30.0))
+        self.assertNotEqual(code, 0, out)
+        code, out = self.run_gate(
+            self.doc(), self.doc(ops=30.0), "--thresholds", "throughput=0.5"
+        )
+        self.assertEqual(code, 0, out)
+
+    def test_provisional_baseline_warns_only(self):
+        code, out = self.run_gate(
+            self.doc(provisional=True), self.doc(ns=500.0, ops=1.0, mk=99.0)
+        )
+        self.assertEqual(code, 0, out)
+        self.assertIn("provisional", out)
+
+    def test_bad_thresholds_spec_fails_fast(self):
+        code, out = self.run_gate(self.doc(), self.doc(), "--thresholds", "nope=0.3")
+        self.assertNotEqual(code, 0, out)
+        self.assertIn("unknown kind", out)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
