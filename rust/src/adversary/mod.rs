@@ -1,0 +1,181 @@
+//! Adversarial scenario runtime: turns the declarative `adversary:` /
+//! `faults:` config sections into concrete per-run state — the compromised
+//! node set and the materialized [`FaultPlan`] (explicit schedules plus
+//! seed-derived churn draws).
+//!
+//! Everything here is deterministic in the job seed: attacker assignment
+//! draws from `root.derive("adversary", 0)` and each node's churn stream is
+//! `seed.derive("churn", name_index(node))`, so a scenario replays
+//! bit-for-bit at any parallelism. Inactive configs touch no RNG stream at
+//! all (the zero-adversary identity contract).
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+use crate::config::adversary::AdversaryConfig;
+use crate::config::job::JobConfig;
+use crate::controller::sync::FaultPlan;
+use crate::orchestrator::name_index;
+use crate::util::rng::Rng;
+
+/// Resolve which clients are compromised: the explicit `nodes` list unioned
+/// with a seed-derived draw of `attack_fraction · n` clients. Inactive
+/// configs return an empty set without touching any RNG stream.
+pub fn select_adversaries(
+    adv: &AdversaryConfig,
+    root: &Rng,
+    client_names: &[String],
+) -> Result<BTreeSet<String>> {
+    let mut out = BTreeSet::new();
+    if !adv.is_active() {
+        return Ok(out);
+    }
+    for n in &adv.nodes {
+        if !client_names.iter().any(|c| c == n) {
+            bail!(
+                "adversary node '{n}' is not in the client fleet ({} clients)",
+                client_names.len()
+            );
+        }
+        out.insert(n.clone());
+    }
+    if adv.attack_fraction > 0.0 {
+        let n = client_names.len();
+        let k = ((adv.attack_fraction * n as f64).round() as usize).min(n);
+        if k > 0 {
+            let mut rng = root.derive("adversary", 0);
+            for i in rng.choose_indices(n, k) {
+                out.insert(client_names[i].clone());
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Materialize the `faults:` section into a [`FaultPlan`]: explicit
+/// drop/crash events verbatim, plus — when churn is active — one
+/// seed-derived availability draw per (client, round), any failed draw
+/// becoming a single-round drop. Per-node streams keyed by `name_index`
+/// make the plan independent of fleet iteration order.
+pub fn materialize_faults(job: &JobConfig, client_names: &[String]) -> FaultPlan {
+    let mut plan = FaultPlan::none();
+    for (node, round) in &job.faults.drops {
+        plan = plan.drop_in_round(node, *round);
+    }
+    for (node, round) in &job.faults.crashes {
+        plan = plan.crash_from(node, *round);
+    }
+    if let Some(churn) = job.faults.churn {
+        if churn.availability < 1.0 {
+            let seed_rng = Rng::seed_from(job.seed);
+            for name in client_names {
+                let mut rng = seed_rng.derive("churn", name_index(name));
+                for round in churn.from_round..=job.rounds {
+                    if rng.next_f64() >= churn.availability {
+                        plan = plan.drop_in_round(name, round);
+                    }
+                }
+            }
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::adversary::{AttackKind, ChurnConfig};
+
+    fn fleet(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("client_{i}")).collect()
+    }
+
+    #[test]
+    fn inactive_config_selects_nobody() {
+        let root = Rng::seed_from(42);
+        let adv = AdversaryConfig::default();
+        assert!(select_adversaries(&adv, &root, &fleet(10)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn fraction_draw_is_deterministic_and_sized() {
+        let root = Rng::seed_from(42);
+        let adv = AdversaryConfig {
+            attack: AttackKind::Scale,
+            attack_fraction: 0.3,
+            scale: 10.0,
+            nodes: vec![],
+        };
+        let a = select_adversaries(&adv, &root, &fleet(10)).unwrap();
+        let b = select_adversaries(&adv, &root, &fleet(10)).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+        // A different seed draws a different cohort (w.h.p. for this seed
+        // pair — pinned, not flaky).
+        let other = select_adversaries(&adv, &Rng::seed_from(43), &fleet(10)).unwrap();
+        assert_ne!(a, other);
+    }
+
+    #[test]
+    fn explicit_nodes_union_with_draw_and_validate() {
+        let root = Rng::seed_from(42);
+        let adv = AdversaryConfig {
+            attack: AttackKind::SignFlip,
+            attack_fraction: 0.0,
+            scale: 10.0,
+            nodes: vec!["client_2".into(), "client_5".into()],
+        };
+        let a = select_adversaries(&adv, &root, &fleet(10)).unwrap();
+        assert_eq!(a, ["client_2", "client_5"].iter().map(|s| s.to_string()).collect());
+        let bad = AdversaryConfig {
+            nodes: vec!["client_99".into()],
+            ..adv
+        };
+        assert!(select_adversaries(&bad, &root, &fleet(10)).is_err());
+    }
+
+    #[test]
+    fn churn_materializes_deterministically() {
+        let mut job = JobConfig::default_cnn("fedavg");
+        job.rounds = 20;
+        job.faults.churn = Some(ChurnConfig {
+            availability: 0.7,
+            from_round: 3,
+        });
+        let names = fleet(5);
+        let a = materialize_faults(&job, &names);
+        let b = materialize_faults(&job, &names);
+        for name in &names {
+            for round in 1..=job.rounds {
+                assert_eq!(a.is_down(name, round), b.is_down(name, round));
+                if round < 3 {
+                    assert!(!a.is_down(name, round), "churn before from_round");
+                }
+            }
+        }
+        // At 30% unavailability over 5×18 draws, some drop must occur.
+        let any_down = names
+            .iter()
+            .any(|n| (3..=job.rounds).any(|r| a.is_down(n, r)));
+        assert!(any_down);
+        // availability 1.0 is a no-op plan.
+        job.faults.churn = Some(ChurnConfig {
+            availability: 1.0,
+            from_round: 1,
+        });
+        assert!(materialize_faults(&job, &names).is_empty());
+    }
+
+    #[test]
+    fn explicit_schedule_materializes_verbatim() {
+        let mut job = JobConfig::default_cnn("fedavg");
+        job.faults.drops.push(("client_1".into(), 3));
+        job.faults.crashes.push(("client_2".into(), 5));
+        let plan = materialize_faults(&job, &fleet(10));
+        assert!(plan.is_down("client_1", 3));
+        assert!(!plan.is_down("client_1", 4));
+        assert!(plan.is_down("client_2", 5) && plan.is_down("client_2", 9));
+        assert!(!plan.is_down("client_2", 4));
+    }
+}

@@ -106,6 +106,21 @@ mod tests {
     }
 
     #[test]
+    fn krum_tie_breaks_on_earliest_index() {
+        // Two identical clusters of equal score: strict `<` keeps the first
+        // minimum, so the winner is the earliest index — deterministic no
+        // matter how the updates were produced.
+        let v = vec![1.0f32; 4];
+        let refs: Vec<&[f32]> = vec![&v, &v, &v, &v, &v, &v];
+        assert_eq!(krum(&refs, 1).unwrap(), 0);
+        // And a permuted-but-equivalent layout still picks the earliest of
+        // the tied minima.
+        let far = vec![9.0f32; 4];
+        let all: Vec<&[f32]> = vec![&far, &v, &v, &v, &v, &v];
+        assert_eq!(krum(&all, 1).unwrap(), 1);
+    }
+
+    #[test]
     fn krum_requires_enough_models() {
         let a = vec![1.0f32];
         let refs: Vec<&[f32]> = vec![&a, &a, &a];

@@ -33,7 +33,7 @@ pub mod spec;
 
 pub use cache::{cell_key, GcOptions, GcStats, ResultStore, ENGINE_VERSION};
 pub use grid::{expand, Cell};
-pub use report::CampaignReport;
+pub use report::{CampaignReport, FrontierReport};
 pub use runner::{run, run_with_options, CampaignOutcome, CellOutcome};
 pub use spec::{
     CampaignBuilder, CampaignSpec, CellSpec, RungMetric, RungMode, SchedulerKind, SchedulerSpec,

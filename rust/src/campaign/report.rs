@@ -6,11 +6,13 @@
 //! expansion order — so a campaign resumed entirely from cache reproduces
 //! its report byte-for-byte (the stored first-run wall clocks included).
 
+use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
 use crate::campaign::runner::CampaignOutcome;
+use crate::config::adversary::RobustAggKind;
 use crate::metrics::report::RunReport;
 use crate::util::json::Json;
 
@@ -176,6 +178,143 @@ impl CampaignReport {
     }
 }
 
+/// The robustness frontier: mean final accuracy pivoted over (attack
+/// fraction × aggregator) — what a one-YAML attack×defense sweep is run
+/// for. Rows are the sorted distinct `attack_fraction` values, columns the
+/// sorted aggregator labels (`weighted_mean` when no robust aggregator is
+/// configured), and each value averages the final accuracy of every
+/// completed cell landing in that (fraction, aggregator) combination
+/// (NaN = no cell there).
+#[derive(Clone, Debug)]
+pub struct FrontierReport {
+    pub name: String,
+    pub fractions: Vec<f64>,
+    pub aggregators: Vec<String>,
+    /// `values[row][col]`, row-major over `fractions` × `aggregators`.
+    pub values: Vec<Vec<f64>>,
+}
+
+impl FrontierReport {
+    /// Pivot a finished campaign into a frontier. Returns `None` unless the
+    /// campaign genuinely swept the adversary surface — at least two
+    /// distinct (fraction, aggregator) combinations and at least one cell
+    /// with an active adversary — so plain campaigns never grow an extra
+    /// artifact.
+    pub fn from_outcome(outcome: &CampaignOutcome) -> Option<FrontierReport> {
+        let mut samples: Vec<(f64, String, f64)> = Vec::new();
+        let mut any_active = false;
+        for c in &outcome.cells {
+            if c.error.is_some() {
+                continue;
+            }
+            let Some(report) = &c.report else { continue };
+            let frac = c.cell.job.adversary.attack_fraction;
+            let agg = match c.cell.job.robust_agg.kind {
+                RobustAggKind::None => "weighted_mean".to_string(),
+                kind => kind.name().to_string(),
+            };
+            any_active |= c.cell.job.adversary.is_active();
+            samples.push((frac, agg, report.final_accuracy()));
+        }
+        let combos: BTreeSet<(u64, &str)> = samples
+            .iter()
+            .map(|(f, a, _)| (f.to_bits(), a.as_str()))
+            .collect();
+        if combos.len() < 2 || !any_active {
+            return None;
+        }
+        let mut fractions: Vec<f64> = samples.iter().map(|s| s.0).collect();
+        fractions.sort_by(f64::total_cmp);
+        fractions.dedup_by(|a, b| a.to_bits() == b.to_bits());
+        let aggregators: Vec<String> = samples
+            .iter()
+            .map(|s| s.1.clone())
+            .collect::<BTreeSet<String>>()
+            .into_iter()
+            .collect();
+        let values = fractions
+            .iter()
+            .map(|f| {
+                aggregators
+                    .iter()
+                    .map(|a| {
+                        let hits: Vec<f64> = samples
+                            .iter()
+                            .filter(|(sf, sa, _)| sf.to_bits() == f.to_bits() && sa == a)
+                            .map(|(_, _, acc)| *acc)
+                            .collect();
+                        if hits.is_empty() {
+                            f64::NAN
+                        } else {
+                            hits.iter().sum::<f64>() / hits.len() as f64
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        Some(FrontierReport {
+            name: outcome.name.clone(),
+            fractions,
+            aggregators,
+            values,
+        })
+    }
+
+    /// Dashboard table (one row per attack fraction).
+    pub fn render(&self) -> String {
+        let mut s = format!("robustness frontier '{}' — mean final accuracy\n", self.name);
+        s.push_str(&format!("{:>16}", "attack_fraction"));
+        for a in &self.aggregators {
+            s.push_str(&format!("  {a:>14}"));
+        }
+        s.push('\n');
+        for (i, f) in self.fractions.iter().enumerate() {
+            s.push_str(&format!("{f:>16.2}"));
+            for v in &self.values[i] {
+                if v.is_nan() {
+                    s.push_str(&format!("  {:>14}", "-"));
+                } else {
+                    s.push_str(&format!("  {v:>14.4}"));
+                }
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// `attack_fraction,<agg>,...` with one row per fraction; empty field =
+    /// no cell at that combination.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("attack_fraction");
+        for a in &self.aggregators {
+            s.push(',');
+            s.push_str(a);
+        }
+        s.push('\n');
+        for (i, f) in self.fractions.iter().enumerate() {
+            s.push_str(&format!("{f}"));
+            for v in &self.values[i] {
+                s.push(',');
+                if !v.is_nan() {
+                    s.push_str(&format!("{v:.6}"));
+                }
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Write `<dir>/<name>_frontier.csv`; returns the path.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<PathBuf> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating report dir {dir:?}"))?;
+        let csv = dir.join(format!("{}_frontier.csv", self.name));
+        std::fs::write(&csv, self.to_csv()).with_context(|| format!("writing {csv:?}"))?;
+        Ok(csv)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,6 +392,78 @@ mod tests {
         let b = CampaignReport::from_outcome(&o);
         assert_eq!(a.to_csv(), b.to_csv());
         assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    fn frontier_outcome() -> CampaignOutcome {
+        let mk = |frac: f64, robust: &str, acc: f64| {
+            let mut job = JobConfig::default_cnn("fedavg");
+            job.adversary.attack_fraction = frac;
+            job.robust_agg = crate::config::adversary::RobustAggConfig::parse_axis(robust).unwrap();
+            let report = RunReport {
+                label: format!("f{frac}_{robust}"),
+                strategy: "fedavg".into(),
+                topology: "client_server".into(),
+                backend: "cnn".into(),
+                n_clients: 4,
+                n_workers: 1,
+                seed: 1,
+                stopped_early: false,
+                rounds: vec![RoundMetrics {
+                    round: 1,
+                    test_accuracy: acc,
+                    ..Default::default()
+                }],
+            };
+            CellOutcome {
+                cell: Cell {
+                    name: format!("f{frac}_{robust}"),
+                    job,
+                    key: format!("k_{frac}_{robust}"),
+                },
+                cached: false,
+                report: Some(report),
+                error: None,
+            }
+        };
+        CampaignOutcome {
+            name: "adv".into(),
+            cells: vec![
+                mk(0.0, "none", 0.9),
+                mk(0.0, "krum", 0.88),
+                mk(0.3, "none", 0.2),
+                mk(0.3, "krum", 0.8),
+            ],
+        }
+    }
+
+    #[test]
+    fn frontier_pivots_fraction_by_aggregator() {
+        let f = FrontierReport::from_outcome(&frontier_outcome()).unwrap();
+        assert_eq!(f.fractions, vec![0.0, 0.3]);
+        assert_eq!(f.aggregators, vec!["krum".to_string(), "weighted_mean".to_string()]);
+        // values[row][col]: rows = fractions, cols = sorted aggregators.
+        assert_eq!(f.values[0], vec![0.88, 0.9]);
+        assert_eq!(f.values[1], vec![0.8, 0.2]);
+        let csv = f.to_csv();
+        assert!(csv.starts_with("attack_fraction,krum,weighted_mean\n"));
+        assert!(csv.contains("0.3,0.800000,0.200000\n"));
+        assert!(f.render().contains("robustness frontier 'adv'"));
+        // Deterministic.
+        let g = FrontierReport::from_outcome(&frontier_outcome()).unwrap();
+        assert_eq!(f.to_csv(), g.to_csv());
+    }
+
+    #[test]
+    fn frontier_absent_for_plain_campaigns() {
+        // No adversary axes swept: the smoke outcome has one completed cell
+        // with an inactive adversary — no frontier.
+        assert!(FrontierReport::from_outcome(&outcome()).is_none());
+        // Even several combos without any *active* adversary stay None.
+        let mut o = frontier_outcome();
+        for c in &mut o.cells {
+            c.cell.job.adversary.attack_fraction = 0.0;
+        }
+        assert!(FrontierReport::from_outcome(&o).is_none());
     }
 
     #[test]

@@ -451,10 +451,33 @@ pub fn apply_axis(job: &mut JobConfig, axis: &str, value: &Yaml) -> Result<()> {
             job.hw_profile = crate::aggregate::mean::ReductionOrder::parse(want_str()?)?;
         }
         "parallelism" => job.parallelism = want_nonneg()? as usize,
+        "attack" => {
+            job.adversary.attack = crate::config::adversary::AttackKind::parse(want_str()?)?;
+        }
+        "attack_fraction" => job.adversary.attack_fraction = want_f64()?,
+        "attack_scale" => job.adversary.scale = want_f64()?,
+        "robust_agg" => {
+            job.robust_agg = crate::config::adversary::RobustAggConfig::parse_axis(want_str()?)?;
+        }
+        "churn" => {
+            // Per-round availability: 1.0 (or anything above) turns churn
+            // off; lower values keep the base config's `from_round` if one
+            // was set, else start churning from round 1.
+            let availability = want_f64()?;
+            job.faults.churn = if availability >= 1.0 {
+                None
+            } else {
+                Some(crate::config::adversary::ChurnConfig {
+                    availability,
+                    from_round: job.faults.churn.map(|c| c.from_round).unwrap_or(1),
+                })
+            };
+        }
         _ => bail!(
             "unknown campaign axis '{axis}' (supported: strategy topology backend partition \
              seed rounds clients workers dataset_n heterogeneity client_fraction \
-             learning_rate local_epochs hw_profile parallelism)"
+             learning_rate local_epochs hw_profile parallelism attack attack_fraction \
+             attack_scale robust_agg churn)"
         ),
     }
     Ok(())
@@ -602,6 +625,33 @@ topology:
         assert!(apply_axis(&mut j, "rounds", &Yaml::Int(-1)).is_err());
         assert!(apply_axis(&mut j, "local_epochs", &Yaml::Int(-2)).is_err());
         assert!(apply_axis(&mut j, "seed", &Yaml::Int(-3)).is_err());
+    }
+
+    #[test]
+    fn adversary_axes_apply() {
+        use crate::config::adversary::{AttackKind, RobustAggKind};
+        let mut j = JobConfig::default_cnn("fedavg");
+        apply_axis(&mut j, "attack", &Yaml::from("sign_flip")).unwrap();
+        assert_eq!(j.adversary.attack, AttackKind::SignFlip);
+        apply_axis(&mut j, "attack_fraction", &Yaml::Float(0.3)).unwrap();
+        assert_eq!(j.adversary.attack_fraction, 0.3);
+        apply_axis(&mut j, "attack_scale", &Yaml::Float(5.0)).unwrap();
+        assert_eq!(j.adversary.scale, 5.0);
+        apply_axis(&mut j, "robust_agg", &Yaml::from("krum:2")).unwrap();
+        assert_eq!(j.robust_agg.kind, RobustAggKind::Krum);
+        assert_eq!(j.robust_agg.f, Some(2));
+        apply_axis(&mut j, "robust_agg", &Yaml::from("none")).unwrap();
+        assert_eq!(j.robust_agg.kind, RobustAggKind::None);
+        // Churn: a sub-1.0 availability turns churn on from round 1 ...
+        apply_axis(&mut j, "churn", &Yaml::Float(0.8)).unwrap();
+        let churn = j.faults.churn.unwrap();
+        assert_eq!(churn.availability, 0.8);
+        assert_eq!(churn.from_round, 1);
+        // ... and 1.0 turns it back off.
+        apply_axis(&mut j, "churn", &Yaml::Float(1.0)).unwrap();
+        assert!(j.faults.churn.is_none());
+        assert!(apply_axis(&mut j, "attack", &Yaml::from("nonsense")).is_err());
+        assert!(apply_axis(&mut j, "robust_agg", &Yaml::from("nonsense")).is_err());
     }
 
     #[test]

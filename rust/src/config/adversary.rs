@@ -1,0 +1,622 @@
+//! Adversarial-scenario configuration: the `adversary:`, `faults:` and
+//! `aggregation:` job sections.
+//!
+//! These three knobs turn the previously code-only adversarial machinery
+//! (fig10's hardwired malicious workers, `FaultPlan` construction,
+//! `aggregate/robust.rs`) into declarative, campaign-sweepable config:
+//!
+//! * `adversary:` — a client-side attack library (label-flip, sign-flip,
+//!   scaled model poisoning, colluding cohorts) with per-node assignment
+//!   either by an explicit node list or by a seed-derived draw of an
+//!   `attack_fraction` of the fleet;
+//! * `faults:` — explicit drop/crash schedules, a stochastic per-round
+//!   availability (churn) process, and replayable trace files, all feeding
+//!   the existing [`crate::controller::sync::FaultPlan`] / barrier-timeout
+//!   machinery;
+//! * `aggregation: robust:` — Byzantine-robust aggregation (krum /
+//!   trimmed-mean / coordinate-median) replacing the strategy's server-side
+//!   mean.
+//!
+//! The determinism contract extends to all of them: every stochastic choice
+//! (attacker assignment, churn draws) is derived from the job seed through
+//! [`crate::util::rng::Rng::derive`], and an *inactive* section (absent,
+//! empty, `attack_fraction: 0.0`, `availability: 1.0`) is bitwise-identical
+//! to a config without it — it contributes nothing to the canonical cache
+//! key and draws nothing from any RNG stream.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+use crate::util::yaml::Yaml;
+
+// ---------------------------------------------------------------------------
+// adversary:
+// ---------------------------------------------------------------------------
+
+/// Client-update attack applied at the update boundary of the round engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttackKind {
+    /// Shift every training label by one class (data poisoning): the client
+    /// trains honestly on corrupted data.
+    LabelFlip,
+    /// Negate the trained parameters before upload.
+    SignFlip,
+    /// Gradient ascent ×λ: submit `start − λ·(trained − start)`, walking the
+    /// model *up* the loss surface `λ` times as fast as honest clients walk
+    /// it down.
+    Scale,
+    /// Colluding cohort: every attacker submits one *shared* poisoned vector
+    /// (seed-derived), concentrating their weight on a single point.
+    Collude,
+}
+
+impl AttackKind {
+    pub fn parse(name: &str) -> Result<AttackKind> {
+        Ok(match name {
+            "label_flip" => AttackKind::LabelFlip,
+            "sign_flip" => AttackKind::SignFlip,
+            "scale" => AttackKind::Scale,
+            "collude" => AttackKind::Collude,
+            _ => bail!(
+                "unknown attack '{name}' (supported: label_flip sign_flip scale collude)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttackKind::LabelFlip => "label_flip",
+            AttackKind::SignFlip => "sign_flip",
+            AttackKind::Scale => "scale",
+            AttackKind::Collude => "collude",
+        }
+    }
+}
+
+/// The `adversary:` section: which attack, applied by whom.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdversaryConfig {
+    pub attack: AttackKind,
+    /// Fraction of the client fleet compromised, assigned by a seed-derived
+    /// draw. `0.0` (the default) disables fraction-based assignment.
+    pub attack_fraction: f64,
+    /// Poison magnitude λ for `scale` / `collude`.
+    pub scale: f64,
+    /// Explicitly compromised nodes (unioned with the fraction draw).
+    pub nodes: Vec<String>,
+}
+
+impl Default for AdversaryConfig {
+    fn default() -> Self {
+        AdversaryConfig {
+            attack: AttackKind::Scale,
+            attack_fraction: 0.0,
+            scale: 10.0,
+            nodes: Vec::new(),
+        }
+    }
+}
+
+impl AdversaryConfig {
+    /// Whether any client is compromised. Inactive configs are contractually
+    /// invisible: no cache-key contribution, no RNG draws, bitwise-identical
+    /// runs.
+    pub fn is_active(&self) -> bool {
+        self.attack_fraction > 0.0 || !self.nodes.is_empty()
+    }
+
+    pub fn from_yaml(y: &Yaml) -> Result<AdversaryConfig> {
+        let mut cfg = AdversaryConfig::default();
+        if let Some(a) = y.get("attack").and_then(Yaml::as_str) {
+            cfg.attack = AttackKind::parse(a)?;
+        }
+        if let Some(f) = y.get("attack_fraction") {
+            cfg.attack_fraction = f
+                .as_f64()
+                .ok_or_else(|| anyhow!("adversary.attack_fraction must be a number"))?;
+        }
+        if let Some(s) = y.get("scale") {
+            cfg.scale = s
+                .as_f64()
+                .ok_or_else(|| anyhow!("adversary.scale must be a number"))?;
+        }
+        if let Some(n) = y.get("nodes").and_then(Yaml::as_seq) {
+            cfg.nodes = n
+                .iter()
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .collect();
+        }
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.attack_fraction.is_finite()
+            || !(0.0..=1.0).contains(&self.attack_fraction)
+        {
+            bail!(
+                "adversary.attack_fraction must be a finite fraction in [0, 1], got {}",
+                self.attack_fraction
+            );
+        }
+        if !self.scale.is_finite() || self.scale <= 0.0 {
+            bail!(
+                "adversary.scale must be a finite positive factor, got {}",
+                self.scale
+            );
+        }
+        for n in &self.nodes {
+            if !n.starts_with("client_") && !n.starts_with("peer_") {
+                bail!("adversary node '{n}' does not name a client/peer node");
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical cache-key fragment — only ever called when active.
+    pub fn canonical_json(&self) -> Json {
+        Json::obj(vec![
+            ("attack", Json::from(self.attack.name())),
+            ("attack_fraction", Json::Num(self.attack_fraction)),
+            ("scale", Json::Num(self.scale)),
+            (
+                "nodes",
+                Json::Arr(self.nodes.iter().map(|n| Json::from(n.as_str())).collect()),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// faults:
+// ---------------------------------------------------------------------------
+
+/// Stochastic availability churn: from `from_round` on, every client is up
+/// in a given round with probability `availability`, drawn from a per-node
+/// seed-derived stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnConfig {
+    pub availability: f64,
+    pub from_round: u64,
+}
+
+/// The `faults:` section: declarative fault schedules feeding the
+/// [`crate::controller::sync::FaultPlan`] / barrier-timeout machinery.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultsConfig {
+    /// `(node, round)` single-round drops.
+    pub drops: Vec<(String, u64)>,
+    /// `(node, from_round)` permanent crashes.
+    pub crashes: Vec<(String, u64)>,
+    pub churn: Option<ChurnConfig>,
+}
+
+impl FaultsConfig {
+    /// Whether this config can affect the run. `availability: 1.0` churn is
+    /// a no-op by construction (no draw ever fails) and is treated as
+    /// inactive so it keeps the zero-adversary identity.
+    pub fn is_active(&self) -> bool {
+        !self.drops.is_empty()
+            || !self.crashes.is_empty()
+            || self.churn.map(|c| c.availability < 1.0).unwrap_or(false)
+    }
+
+    pub fn from_yaml(y: &Yaml) -> Result<FaultsConfig> {
+        let mut cfg = FaultsConfig::default();
+        if let Some(seq) = y.get("drops").and_then(Yaml::as_seq) {
+            for d in seq {
+                let node = d
+                    .get("node")
+                    .and_then(Yaml::as_str)
+                    .ok_or_else(|| anyhow!("faults.drops entry: missing node"))?;
+                let round = d
+                    .get("round")
+                    .and_then(Yaml::as_i64)
+                    .ok_or_else(|| anyhow!("faults.drops entry: missing round"))?;
+                if round < 1 {
+                    bail!("faults.drops: round must be >= 1, got {round}");
+                }
+                cfg.drops.push((node.to_string(), round as u64));
+            }
+        }
+        if let Some(seq) = y.get("crashes").and_then(Yaml::as_seq) {
+            for c in seq {
+                let node = c
+                    .get("node")
+                    .and_then(Yaml::as_str)
+                    .ok_or_else(|| anyhow!("faults.crashes entry: missing node"))?;
+                let round = c
+                    .get("from_round")
+                    .and_then(Yaml::as_i64)
+                    .ok_or_else(|| anyhow!("faults.crashes entry: missing from_round"))?;
+                if round < 1 {
+                    bail!("faults.crashes: from_round must be >= 1, got {round}");
+                }
+                cfg.crashes.push((node.to_string(), round as u64));
+            }
+        }
+        if let Some(c) = y.get("churn") {
+            let availability = c
+                .get("availability")
+                .and_then(Yaml::as_f64)
+                .ok_or_else(|| anyhow!("faults.churn: missing availability"))?;
+            let from_round = match c.get("from_round").and_then(Yaml::as_i64) {
+                None => 1,
+                Some(r) if r >= 1 => r as u64,
+                Some(r) => bail!("faults.churn.from_round must be >= 1, got {r}"),
+            };
+            cfg.churn = Some(ChurnConfig {
+                availability,
+                from_round,
+            });
+        }
+        if let Some(path) = y.get("trace").and_then(Yaml::as_str) {
+            let src = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("faults.trace: reading {path}: {e}"))?;
+            cfg.extend_from_trace(&src)
+                .map_err(|e| anyhow!("faults.trace {path}: {e}"))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Parse a fault trace: one event per line, `drop <node> <round>` or
+    /// `crash <node> <from_round>`; `#` comments and blank lines ignored.
+    /// Trace *contents* (not the path) become part of the config, so the
+    /// canonical cache key covers exactly what the run will do.
+    pub fn extend_from_trace(&mut self, src: &str) -> Result<()> {
+        for (i, raw) in src.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let (verb, node, round) = match (parts.next(), parts.next(), parts.next()) {
+                (Some(v), Some(n), Some(r)) if parts.next().is_none() => (v, n, r),
+                _ => bail!(
+                    "line {}: expected 'drop <node> <round>' or \
+                     'crash <node> <from_round>', got {raw:?}",
+                    i + 1
+                ),
+            };
+            let round: u64 = round
+                .parse()
+                .map_err(|_| anyhow!("line {}: bad round {round:?}", i + 1))?;
+            if round < 1 {
+                bail!("line {}: round must be >= 1", i + 1);
+            }
+            match verb {
+                "drop" => self.drops.push((node.to_string(), round)),
+                "crash" => self.crashes.push((node.to_string(), round)),
+                _ => bail!("line {}: unknown event {verb:?}", i + 1),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (node, round) in self.drops.iter().chain(&self.crashes) {
+            if !node.starts_with("client_")
+                && !node.starts_with("worker_")
+                && !node.starts_with("peer_")
+            {
+                bail!("faults: '{node}' does not name a client/worker/peer node");
+            }
+            if *round < 1 {
+                bail!("faults: round for '{node}' must be >= 1, got {round}");
+            }
+        }
+        if let Some(c) = self.churn {
+            if !c.availability.is_finite() || !(0.0 < c.availability && c.availability <= 1.0) {
+                bail!(
+                    "faults.churn.availability must be a finite probability in (0, 1], got {}",
+                    c.availability
+                );
+            }
+            if c.from_round < 1 {
+                bail!("faults.churn.from_round must be >= 1");
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical cache-key fragment — only ever called when active.
+    pub fn canonical_json(&self) -> Json {
+        let events = |evs: &[(String, u64)]| {
+            Json::Arr(
+                evs.iter()
+                    .map(|(n, r)| {
+                        Json::obj(vec![
+                            ("node", Json::from(n.as_str())),
+                            ("round", Json::from(*r as usize)),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        let mut pairs = vec![
+            ("drops", events(&self.drops)),
+            ("crashes", events(&self.crashes)),
+        ];
+        if let Some(c) = self.churn {
+            pairs.push((
+                "churn",
+                Json::obj(vec![
+                    ("availability", Json::Num(c.availability)),
+                    ("from_round", Json::from(c.from_round as usize)),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aggregation: robust:
+// ---------------------------------------------------------------------------
+
+/// Byzantine-robust server-side aggregation (see `aggregate/robust.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RobustAggKind {
+    /// The strategy's own aggregation (weighted mean for FedAvg-family).
+    None,
+    Krum,
+    TrimmedMean,
+    Median,
+}
+
+impl RobustAggKind {
+    pub fn parse(name: &str) -> Result<RobustAggKind> {
+        Ok(match name {
+            "none" => RobustAggKind::None,
+            "krum" => RobustAggKind::Krum,
+            "trimmed_mean" => RobustAggKind::TrimmedMean,
+            "median" | "coordinate_median" => RobustAggKind::Median,
+            _ => bail!(
+                "unknown robust aggregator '{name}' (supported: none krum trimmed_mean median)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RobustAggKind::None => "none",
+            RobustAggKind::Krum => "krum",
+            RobustAggKind::TrimmedMean => "trimmed_mean",
+            RobustAggKind::Median => "median",
+        }
+    }
+}
+
+/// The `aggregation:` section: `robust: none|krum|trimmed_mean|median` plus
+/// an optional explicit Byzantine count `f` (defaults to the number of
+/// configured adversaries among the round's updates, min 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RobustAggConfig {
+    pub kind: RobustAggKind,
+    pub f: Option<usize>,
+}
+
+impl Default for RobustAggConfig {
+    fn default() -> Self {
+        RobustAggConfig {
+            kind: RobustAggKind::None,
+            f: None,
+        }
+    }
+}
+
+impl RobustAggConfig {
+    pub fn is_active(&self) -> bool {
+        self.kind != RobustAggKind::None
+    }
+
+    pub fn from_yaml(y: &Yaml) -> Result<RobustAggConfig> {
+        let mut cfg = RobustAggConfig::default();
+        if let Some(r) = y.get("robust").and_then(Yaml::as_str) {
+            cfg.kind = RobustAggKind::parse(r)?;
+        }
+        if let Some(f) = y.get("f") {
+            let f = f
+                .as_i64()
+                .ok_or_else(|| anyhow!("aggregation.f must be an integer"))?;
+            if f < 1 {
+                bail!("aggregation.f must be >= 1, got {f}");
+            }
+            cfg.f = Some(f as usize);
+        }
+        Ok(cfg)
+    }
+
+    /// Campaign-axis form: `krum` / `krum:2` / `trimmed_mean:1` / `none`.
+    pub fn parse_axis(value: &str) -> Result<RobustAggConfig> {
+        let (kind, f) = match value.split_once(':') {
+            Some((k, f)) => {
+                let f: usize = f
+                    .parse()
+                    .map_err(|_| anyhow!("robust_agg '{value}': bad f {f:?}"))?;
+                if f < 1 {
+                    bail!("robust_agg '{value}': f must be >= 1");
+                }
+                (RobustAggKind::parse(k)?, Some(f))
+            }
+            None => (RobustAggKind::parse(value)?, None),
+        };
+        Ok(RobustAggConfig { kind, f })
+    }
+
+    /// Canonical cache-key fragment — only ever called when active.
+    pub fn canonical_json(&self) -> Json {
+        Json::obj(vec![
+            ("robust", Json::from(self.kind.name())),
+            (
+                "f",
+                match self.f {
+                    Some(f) => Json::from(f),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attack_kinds_round_trip() {
+        for name in ["label_flip", "sign_flip", "scale", "collude"] {
+            assert_eq!(AttackKind::parse(name).unwrap().name(), name);
+        }
+        assert!(AttackKind::parse("dos").is_err());
+    }
+
+    #[test]
+    fn adversary_defaults_inactive() {
+        let a = AdversaryConfig::default();
+        assert!(!a.is_active());
+        a.validate().unwrap();
+        let y = Yaml::parse("attack: sign_flip\nattack_fraction: 0.3\nscale: 5.0\n").unwrap();
+        let a = AdversaryConfig::from_yaml(&y).unwrap();
+        assert_eq!(a.attack, AttackKind::SignFlip);
+        assert_eq!(a.attack_fraction, 0.3);
+        assert_eq!(a.scale, 5.0);
+        assert!(a.is_active());
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn adversary_validation_rejects_bad_values() {
+        let mut a = AdversaryConfig::default();
+        a.attack_fraction = 1.5;
+        assert!(a.validate().is_err());
+        a.attack_fraction = -0.1;
+        assert!(a.validate().is_err());
+        a.attack_fraction = f64::NAN;
+        assert!(a.validate().is_err());
+        let mut a = AdversaryConfig::default();
+        a.scale = 0.0;
+        assert!(a.validate().is_err());
+        a.scale = f64::INFINITY;
+        assert!(a.validate().is_err());
+        let mut a = AdversaryConfig::default();
+        a.nodes = vec!["worker_0".into()];
+        assert!(a.validate().is_err());
+        a.nodes = vec!["client_2".into()];
+        a.validate().unwrap();
+        assert!(a.is_active());
+    }
+
+    #[test]
+    fn faults_from_yaml_and_activity() {
+        let y = Yaml::parse(
+            "drops:\n  - node: client_1\n    round: 3\ncrashes:\n  - node: client_2\n    \
+             from_round: 4\nchurn:\n  availability: 0.9\n  from_round: 2\n",
+        )
+        .unwrap();
+        let f = FaultsConfig::from_yaml(&y).unwrap();
+        assert_eq!(f.drops, vec![("client_1".to_string(), 3)]);
+        assert_eq!(f.crashes, vec![("client_2".to_string(), 4)]);
+        assert_eq!(
+            f.churn,
+            Some(ChurnConfig {
+                availability: 0.9,
+                from_round: 2
+            })
+        );
+        assert!(f.is_active());
+        f.validate().unwrap();
+        // availability 1.0 alone is a no-op: inactive by contract.
+        let f = FaultsConfig {
+            churn: Some(ChurnConfig {
+                availability: 1.0,
+                from_round: 1,
+            }),
+            ..FaultsConfig::default()
+        };
+        assert!(!f.is_active());
+        f.validate().unwrap();
+        assert!(!FaultsConfig::default().is_active());
+    }
+
+    #[test]
+    fn faults_validation_rejects_bad_values() {
+        let mut f = FaultsConfig::default();
+        f.drops.push(("gateway_1".into(), 2));
+        assert!(f.validate().is_err());
+        let mut f = FaultsConfig::default();
+        f.churn = Some(ChurnConfig {
+            availability: 0.0,
+            from_round: 1,
+        });
+        assert!(f.validate().is_err());
+        f.churn = Some(ChurnConfig {
+            availability: f64::NAN,
+            from_round: 1,
+        });
+        assert!(f.validate().is_err());
+        f.churn = Some(ChurnConfig {
+            availability: 1.5,
+            from_round: 1,
+        });
+        assert!(f.validate().is_err());
+        // Round-0 events would break scaffold's all-nodes barrier.
+        let y = Yaml::parse("drops:\n  - node: client_1\n    round: 0\n").unwrap();
+        assert!(FaultsConfig::from_yaml(&y).is_err());
+    }
+
+    #[test]
+    fn trace_round_trip_and_errors() {
+        let mut f = FaultsConfig::default();
+        f.extend_from_trace(
+            "# header\ndrop client_1 3\n\ncrash worker_0 5  # mid-run failure\n",
+        )
+        .unwrap();
+        assert_eq!(f.drops, vec![("client_1".to_string(), 3)]);
+        assert_eq!(f.crashes, vec![("worker_0".to_string(), 5)]);
+        f.validate().unwrap();
+        let mut f = FaultsConfig::default();
+        assert!(f.extend_from_trace("reboot client_1 3\n").is_err());
+        assert!(f.extend_from_trace("drop client_1\n").is_err());
+        assert!(f.extend_from_trace("drop client_1 zero\n").is_err());
+        assert!(f.extend_from_trace("drop client_1 0\n").is_err());
+    }
+
+    #[test]
+    fn robust_agg_parse_and_axis() {
+        assert!(!RobustAggConfig::default().is_active());
+        let y = Yaml::parse("robust: krum\nf: 2\n").unwrap();
+        let r = RobustAggConfig::from_yaml(&y).unwrap();
+        assert_eq!(r.kind, RobustAggKind::Krum);
+        assert_eq!(r.f, Some(2));
+        assert!(r.is_active());
+        let r = RobustAggConfig::parse_axis("trimmed_mean:1").unwrap();
+        assert_eq!(r.kind, RobustAggKind::TrimmedMean);
+        assert_eq!(r.f, Some(1));
+        let r = RobustAggConfig::parse_axis("median").unwrap();
+        assert_eq!(r.kind, RobustAggKind::Median);
+        assert_eq!(r.f, None);
+        assert!(RobustAggConfig::parse_axis("krum:0").is_err());
+        assert!(RobustAggConfig::parse_axis("geometric").is_err());
+        assert!(RobustAggConfig::from_yaml(&Yaml::parse("f: 0\n").unwrap()).is_err());
+    }
+
+    #[test]
+    fn canonical_fragments_are_stable() {
+        let a = AdversaryConfig {
+            attack: AttackKind::Scale,
+            attack_fraction: 0.3,
+            scale: 10.0,
+            nodes: vec!["client_1".into()],
+        };
+        assert_eq!(
+            a.canonical_json().to_string(),
+            a.canonical_json().to_string()
+        );
+        let mut f = FaultsConfig::default();
+        f.drops.push(("client_1".into(), 3));
+        assert_eq!(
+            f.canonical_json().to_string(),
+            f.canonical_json().to_string()
+        );
+    }
+}

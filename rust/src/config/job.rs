@@ -10,6 +10,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::aggregate::mean::ReductionOrder;
+use crate::config::adversary::{AdversaryConfig, FaultsConfig, RobustAggConfig};
 use crate::data::dataset::{DatasetSpec, Distribution};
 use crate::kvstore::netsim::{LinkModel, LinkPolicy};
 use crate::strategy::StrategyKind;
@@ -110,6 +111,14 @@ pub struct JobConfig {
     pub round_deadline_secs: Option<f64>,
     /// Fraction of clients sampled per round (1.0 = all, paper default).
     pub client_fraction: f64,
+    /// Client-side attack scenario (`adversary:` section). Inactive by
+    /// default — see [`AdversaryConfig::is_active`].
+    pub adversary: AdversaryConfig,
+    /// Declarative fault schedules (`faults:` section): explicit drops and
+    /// crashes, stochastic churn, replayable traces.
+    pub faults: FaultsConfig,
+    /// Byzantine-robust server aggregation (`aggregation: robust:`).
+    pub robust_agg: RobustAggConfig,
     /// Worker threads for the round engine (client training + aggregation).
     /// `1` = fully sequential (the historical behaviour), `0` = one per
     /// available core. Any value produces bitwise-identical results — model
@@ -148,6 +157,9 @@ impl JobConfig {
             heterogeneity: 0.0,
             round_deadline_secs: None,
             client_fraction: 1.0,
+            adversary: AdversaryConfig::default(),
+            faults: FaultsConfig::default(),
+            robust_agg: RobustAggConfig::default(),
             parallelism: 1,
             strategy,
         }
@@ -288,6 +300,18 @@ impl JobConfig {
             .get("client_fraction")
             .and_then(Yaml::as_f64)
             .unwrap_or(1.0);
+        let adversary = match y.get("adversary") {
+            Some(a) => AdversaryConfig::from_yaml(a)?,
+            None => AdversaryConfig::default(),
+        };
+        let faults = match y.get("faults") {
+            Some(f) => FaultsConfig::from_yaml(f)?,
+            None => FaultsConfig::default(),
+        };
+        let robust_agg = match y.get("aggregation") {
+            Some(a) => RobustAggConfig::from_yaml(a)?,
+            None => RobustAggConfig::default(),
+        };
         let parallelism = match get_i64(job, "parallelism").unwrap_or(1) {
             n if n < 0 => bail!("job.parallelism must be >= 0 (0 = auto), got {n}"),
             n => n as usize,
@@ -312,6 +336,9 @@ impl JobConfig {
             heterogeneity,
             round_deadline_secs,
             client_fraction,
+            adversary,
+            faults,
+            robust_agg,
             parallelism,
         };
         cfg.validate()?;
@@ -342,7 +369,7 @@ impl JobConfig {
                 ("bandwidth_mbps", Json::Num(m.bandwidth_mbps)),
             ])
         };
-        Json::obj(vec![
+        let mut pairs: Vec<(&str, Json)> = vec![
             ("name", Json::from(self.name.as_str())),
             // Decimal string, not a JSON number: a u64 seed >= 2^53 would
             // lose precision through the f64-backed Json::Num and collide
@@ -420,7 +447,21 @@ impl JobConfig {
             ("heterogeneity", Json::Num(self.heterogeneity)),
             ("round_deadline_secs", opt_f64(self.round_deadline_secs)),
             ("client_fraction", Json::Num(self.client_fraction)),
-        ])
+        ];
+        // Adversarial sections enter the key only when they can change the
+        // run: an inactive section is contractually bitwise-identical to an
+        // absent one, so it must hash identically too (pre-adversary cache
+        // entries stay valid).
+        if self.adversary.is_active() {
+            pairs.push(("adversary", self.adversary.canonical_json()));
+        }
+        if self.faults.is_active() {
+            pairs.push(("faults", self.faults.canonical_json()));
+        }
+        if self.robust_agg.is_active() {
+            pairs.push(("robust_agg", self.robust_agg.canonical_json()));
+        }
+        Json::obj(pairs)
     }
 
     /// The round engine's worker count: `parallelism`, with `0` resolved to
@@ -441,8 +482,11 @@ impl JobConfig {
         if self.n_clients == 0 {
             bail!("need at least one client");
         }
-        if self.client_fraction <= 0.0 || self.client_fraction > 1.0 {
-            bail!("client_fraction must be in (0, 1]");
+        if !self.client_fraction.is_finite()
+            || self.client_fraction <= 0.0
+            || self.client_fraction > 1.0
+        {
+            bail!("client_fraction must be in (0, 1], got {}", self.client_fraction);
         }
         if self.train.learning_rate <= 0.0 {
             bail!("learning_rate must be positive");
@@ -462,12 +506,27 @@ impl JobConfig {
                 bail!("malicious worker '{w}' does not name a worker/peer node");
             }
         }
-        if self.heterogeneity < 0.0 {
-            bail!("heterogeneity must be >= 0, got {}", self.heterogeneity);
+        if !self.heterogeneity.is_finite() || self.heterogeneity < 0.0 {
+            bail!("heterogeneity must be finite and >= 0, got {}", self.heterogeneity);
         }
         if let Some(d) = self.round_deadline_secs {
-            if d <= 0.0 {
-                bail!("round_deadline_secs must be positive, got {d}");
+            if !d.is_finite() || d <= 0.0 {
+                bail!("round_deadline_secs must be finite and positive, got {d}");
+            }
+        }
+        self.adversary.validate()?;
+        self.faults.validate()?;
+        for (node, _) in self.faults.drops.iter().chain(&self.faults.crashes) {
+            if node.starts_with("client_") || node.starts_with("peer_") {
+                let idx: Option<usize> = node.split('_').nth(1).and_then(|s| s.parse().ok());
+                if let Some(i) = idx {
+                    if i >= self.n_clients {
+                        bail!(
+                            "faults: '{node}' is out of range for {} clients",
+                            self.n_clients
+                        );
+                    }
+                }
             }
         }
         for (name, link) in [
@@ -724,6 +783,88 @@ network:
         let mut j = JobConfig::default_cnn("fedavg");
         j.network.edge.bandwidth_mbps = 0.0;
         assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn adversary_faults_aggregation_sections_parse() {
+        let yaml = r#"
+job:
+  name: adv_test
+  rounds: 4
+dataset: {name: cifar10_synth, n: 600}
+strategy: {name: fedavg, backend: cnn}
+topology: {kind: client_server, clients: 4, workers: 1}
+adversary:
+  attack: scale
+  attack_fraction: 0.25
+  scale: 8.0
+  nodes: [client_3]
+faults:
+  drops:
+    - node: client_1
+      round: 2
+  churn:
+    availability: 0.9
+aggregation:
+  robust: trimmed_mean
+  f: 1
+"#;
+        let j = JobConfig::from_yaml_str(yaml).unwrap();
+        assert_eq!(j.adversary.attack, crate::config::AttackKind::Scale);
+        assert_eq!(j.adversary.attack_fraction, 0.25);
+        assert_eq!(j.adversary.scale, 8.0);
+        assert_eq!(j.adversary.nodes, vec!["client_3"]);
+        assert_eq!(j.faults.drops, vec![("client_1".to_string(), 2)]);
+        assert_eq!(j.faults.churn.unwrap().availability, 0.9);
+        assert_eq!(j.robust_agg.kind, crate::config::RobustAggKind::TrimmedMean);
+        assert_eq!(j.robust_agg.f, Some(1));
+    }
+
+    #[test]
+    fn adversary_validation_via_job() {
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.adversary.attack_fraction = f64::NAN;
+        assert!(j.validate().is_err());
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.adversary.nodes = vec!["worker_0".into()];
+        assert!(j.validate().is_err());
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.faults.drops.push(("client_99".into(), 2));
+        assert!(j.validate().is_err(), "fault node beyond the fleet");
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.heterogeneity = f64::NAN;
+        assert!(j.validate().is_err());
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.round_deadline_secs = Some(f64::NAN);
+        assert!(j.validate().is_err());
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.client_fraction = f64::NAN;
+        assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn canonical_json_ignores_inactive_adversary_sections() {
+        let base = JobConfig::default_cnn("fedavg").canonical_json().to_string();
+        // Inactive sections (defaults, zero fraction, no-op churn) hash
+        // exactly like a pre-adversary config.
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.adversary.attack_fraction = 0.0;
+        j.faults.churn = Some(crate::config::ChurnConfig {
+            availability: 1.0,
+            from_round: 1,
+        });
+        assert_eq!(base, j.canonical_json().to_string());
+        assert!(!base.contains("adversary"));
+        // Active sections each change the key.
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.adversary.attack_fraction = 0.3;
+        assert_ne!(base, j.canonical_json().to_string());
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.faults.drops.push(("client_1".into(), 2));
+        assert_ne!(base, j.canonical_json().to_string());
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.robust_agg.kind = crate::config::RobustAggKind::Krum;
+        assert_ne!(base, j.canonical_json().to_string());
     }
 
     #[test]

@@ -1,6 +1,10 @@
 //! Job configuration (paper §2.2, Fig 2): the YAML schema users scaffold an
 //! FL experiment from, plus programmatic presets for every paper experiment.
 
+pub mod adversary;
 pub mod job;
 
+pub use adversary::{
+    AdversaryConfig, AttackKind, ChurnConfig, FaultsConfig, RobustAggConfig, RobustAggKind,
+};
 pub use job::{ChainConfig, ConsensusConfig, JobConfig, TrainParams};

@@ -18,7 +18,9 @@ use crate::info;
 /// Which nodes fail (drop out) in which rounds.
 #[derive(Clone, Debug, Default)]
 pub struct FaultPlan {
-    drops: BTreeSet<(String, u64)>,
+    /// Per-node rounds missed (transient drops), keyed by node name so the
+    /// per-round barrier poll is a borrowed-key lookup — no allocation.
+    drops: BTreeMap<String, BTreeSet<u64>>,
     /// Nodes dead from a given round onward (crash, not a transient drop).
     crashes: BTreeMap<String, u64>,
 }
@@ -30,18 +32,38 @@ impl FaultPlan {
 
     /// `node` misses `round` (transient straggler).
     pub fn drop_in_round(mut self, node: &str, round: u64) -> FaultPlan {
-        self.drops.insert((node.to_string(), round));
+        self.drops.entry(node.to_string()).or_default().insert(round);
         self
     }
 
-    /// `node` is dead from `round` onward.
+    /// `node` is dead from `round` onward. Repeated crashes keep the
+    /// earliest round.
     pub fn crash_from(mut self, node: &str, round: u64) -> FaultPlan {
-        self.crashes.insert(node.to_string(), round);
+        self.crashes
+            .entry(node.to_string())
+            .and_modify(|r| *r = (*r).min(round))
+            .or_insert(round);
         self
+    }
+
+    /// Fold another plan's events into this one.
+    pub fn merge(&mut self, other: FaultPlan) {
+        for (node, rounds) in other.drops {
+            self.drops.entry(node).or_default().extend(rounds);
+        }
+        for (node, round) in other.crashes {
+            self.crashes
+                .entry(node)
+                .and_modify(|r| *r = (*r).min(round))
+                .or_insert(round);
+        }
     }
 
     pub fn is_down(&self, node: &str, round: u64) -> bool {
-        self.drops.contains(&(node.to_string(), round))
+        self.drops
+            .get(node)
+            .map(|rounds| rounds.contains(&round))
+            .unwrap_or(false)
             || self
                 .crashes
                 .get(node)
@@ -63,7 +85,9 @@ pub struct LogicController {
     /// (`round_deadline_secs`): dropped through the same barrier timeout
     /// arm as fault-plan stragglers, but *emergent* — marked by the round
     /// engine when a node's simulated finish time overruns the deadline.
-    late: BTreeSet<(String, u64)>,
+    /// Keyed by node name (value = the round it was marked in) so the
+    /// per-barrier poll is allocation-free.
+    late: BTreeMap<String, u64>,
     /// Whether barriers may resolve with a partial quorum (Algorithm 1's
     /// `timeout()` arm). When `false`, a faulted node is a hard error.
     pub allow_timeout: bool,
@@ -81,7 +105,7 @@ impl LogicController {
                 .map(|n| (n.clone(), NodeStage::NotReady))
                 .collect(),
             fault_plan: FaultPlan::none(),
-            late: BTreeSet::new(),
+            late: BTreeMap::new(),
             allow_timeout: true,
             emitted: Vec::new(),
         }
@@ -93,15 +117,15 @@ impl LogicController {
     /// dead (only the current round is ever queried) and are pruned here so
     /// chronic stragglers don't grow the set across a long run.
     pub fn mark_late(&mut self, node: &str, round: u64) {
-        self.late.retain(|(_, r)| *r >= round);
-        self.late.insert((node.to_string(), round));
+        self.late.retain(|_, r| *r >= round);
+        self.late.insert(node.to_string(), round);
         self.emit(&format!(
             "straggler: {node} overran the round-{round} virtual deadline"
         ));
     }
 
     pub fn is_late(&self, node: &str, round: u64) -> bool {
-        self.late.contains(&(node.to_string(), round))
+        self.late.get(node).map(|&r| r == round).unwrap_or(false)
     }
 
     /// Down this round: faulted by the plan, or late past the deadline.
@@ -264,6 +288,25 @@ mod tests {
         assert!(!plan.is_down("w", 4));
         assert!(plan.is_down("w", 5));
         assert!(plan.is_down("w", 50));
+    }
+
+    #[test]
+    fn fault_plan_merge_unions_events() {
+        let mut a = FaultPlan::none()
+            .drop_in_round("client_0", 2)
+            .crash_from("client_1", 6);
+        let b = FaultPlan::none()
+            .drop_in_round("client_0", 4)
+            .drop_in_round("client_2", 3)
+            .crash_from("client_1", 4);
+        a.merge(b);
+        assert!(a.is_down("client_0", 2) && a.is_down("client_0", 4));
+        assert!(!a.is_down("client_0", 3));
+        assert!(a.is_down("client_2", 3));
+        // Merged crashes keep the earliest round.
+        assert!(a.is_down("client_1", 4) && a.is_down("client_1", 10));
+        assert!(!a.is_down("client_1", 3));
+        assert!(!a.is_empty());
     }
 
     #[test]

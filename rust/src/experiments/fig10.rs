@@ -4,49 +4,55 @@
 //!
 //! Expected shape: honest > 50% ⇒ poisoning nullified; 1M-1H ⇒ the coin-flip
 //! tie makes the trajectory fluctuate; 1M-0H ⇒ training destroyed.
+//!
+//! Ported to a thin campaign spec: four explicit cells sweeping the
+//! `workers` axis over the malicious-worker base preset, executed through
+//! the campaign engine (re-running resumes from `results/fig10/cache`).
+//! Golden outputs — `results/fig10/<label>.{csv,json}` and the printed
+//! tables — are unchanged.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::campaign::CampaignSpec;
 use crate::config::job::JobConfig;
-use crate::experiments::{dataset_n_override, rounds_override, save_report};
+use crate::experiments::{dataset_n_override, rounds_override, run_figure_campaign};
 use crate::metrics::dashboard;
 use crate::metrics::report::RunReport;
-use crate::orchestrator::Orchestrator;
 use crate::runtime::pjrt::Runtime;
+use crate::util::yaml::Yaml;
 
 /// (label, total workers) — worker_0 is always the malicious one.
 pub const SCENARIOS: [(&str, usize); 4] =
     [("1M-0H", 1), ("1M-1H", 2), ("1M-2H", 3), ("1M-3H", 4)];
 
+pub fn spec() -> CampaignSpec {
+    let mut base = JobConfig::default_cnn("fedavg");
+    base.rounds = rounds_override(30);
+    base.dataset.n = dataset_n_override(5000);
+    base.consensus.runnable = "majority_hash".into();
+    base.consensus.malicious_workers = vec!["worker_0".into()];
+    let mut b = CampaignSpec::builder("fig10", base);
+    for (label, n_workers) in SCENARIOS {
+        b = b.cell(label, vec![("workers", Yaml::Int(n_workers as i64))]);
+    }
+    b.build()
+}
+
+/// The expanded per-cell job list (kept as the historical public surface;
+/// `run()` goes through the campaign engine directly). Infallible for the
+/// static spec above.
 pub fn jobs() -> Vec<JobConfig> {
-    SCENARIOS
-        .iter()
-        .map(|(label, n_workers)| {
-            let mut j = JobConfig::default_cnn("fedavg");
-            j.name = label.to_string();
-            j.n_workers = *n_workers;
-            j.rounds = rounds_override(30);
-            j.dataset.n = dataset_n_override(5000);
-            j.consensus.runnable = "majority_hash".into();
-            j.consensus.malicious_workers = vec!["worker_0".into()];
-            j
-        })
+    crate::campaign::expand(&spec())
+        .expect("fig10 grid expands")
+        .into_iter()
+        .map(|c| c.job)
         .collect()
 }
 
 pub fn run(rt: Arc<Runtime>) -> Result<Vec<RunReport>> {
-    let orch = Orchestrator::new(rt);
-    let mut reports = Vec::new();
-    for job in jobs() {
-        let (report, _secs) =
-            crate::bench::time_once(&format!("fig10/{}", job.name), || orch.run(&job));
-        let report = report?;
-        println!("{}", dashboard::run_line(&report));
-        save_report("fig10", &report)?;
-        reports.push(report);
-    }
+    let reports = run_figure_campaign(rt, "fig10", &spec())?;
     println!();
     println!(
         "{}",

@@ -16,6 +16,7 @@
 //! Python never runs at simulation time: [`runtime`] loads the AOT artifacts
 //! through PJRT (the `xla` crate) and everything else is pure Rust.
 
+pub mod adversary;
 pub mod aggregate;
 pub mod bench;
 pub mod campaign;
@@ -37,6 +38,7 @@ pub mod util;
 /// Convenient re-exports for examples and binaries.
 pub mod prelude {
     pub use crate::campaign::{CampaignReport, CampaignSpec, ResultStore, SchedulerSpec};
+    pub use crate::config::adversary::{AdversaryConfig, FaultsConfig, RobustAggConfig};
     pub use crate::config::job::JobConfig;
     pub use crate::controller::cancel::CancelToken;
     pub use crate::controller::sync::FaultPlan;

@@ -13,7 +13,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use flsim::campaign::{CampaignReport, CampaignSpec, ResultStore};
+use flsim::campaign::{CampaignReport, CampaignSpec, FrontierReport, ResultStore};
 use flsim::config::job::JobConfig;
 use flsim::experiments;
 use flsim::metrics::dashboard;
@@ -232,6 +232,12 @@ fn campaign_cmd(sub: &str, args: &Args, artifacts: &str) -> Result<()> {
             let report = CampaignReport::from_outcome(&outcome);
             let (csv, json) = report.save(&out_dir)?;
             println!("wrote {} and {}", csv.display(), json.display());
+            if let Some(frontier) = FrontierReport::from_outcome(&outcome) {
+                let path = frontier.save(&out_dir)?;
+                println!("wrote {}", path.display());
+                println!();
+                println!("{}", frontier.render());
+            }
             let reports = outcome.reports();
             if !reports.is_empty() {
                 println!();
@@ -334,6 +340,12 @@ fn campaign_cmd(sub: &str, args: &Args, artifacts: &str) -> Result<()> {
             let report = CampaignReport::from_outcome(&outcome);
             let (csv, json) = report.save(&out_dir)?;
             println!("wrote {} and {}", csv.display(), json.display());
+            if let Some(frontier) = FrontierReport::from_outcome(&outcome) {
+                let path = frontier.save(&out_dir)?;
+                println!("wrote {}", path.display());
+                println!();
+                println!("{}", frontier.render());
+            }
             println!(
                 "{}",
                 dashboard::comparison(&format!("campaign {}", spec.name), &reports)

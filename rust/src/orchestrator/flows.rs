@@ -45,6 +45,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::chain::block::Tx;
+use crate::config::adversary::AttackKind;
 use crate::consensus::Proposal;
 use crate::controller::phases::{NodeStage, ProcessPhase};
 use crate::kvstore::store::Payload;
@@ -306,6 +307,12 @@ fn train_clients_to(
         starts.push(start);
     }
 
+    // Adversarial context: starting models are consumed by the worker pool
+    // below, so keep per-client handles only when the run actually has
+    // compromised clients (the zero-adversary path must not clone anything).
+    let attack_starts: Option<Vec<Arc<[f32]>>> =
+        (!state.adversaries.is_empty()).then(|| starts.clone());
+
     // Phase B (parallel): local training on the worker pool.
     let results = {
         let backend = &state.backend;
@@ -330,8 +337,12 @@ fn train_clients_to(
     let deadline = state.job.round_deadline_secs;
     let mut updates = BTreeMap::new();
     let mut phase_secs = 0f64;
-    for ((name, result), pre) in names.iter().zip(results).zip(pre_secs) {
-        let update = result?;
+    let mut collusion: Option<Arc<[f32]>> = None;
+    for (i, ((name, result), pre)) in names.iter().zip(results).zip(pre_secs).enumerate() {
+        let mut update = result?;
+        if let Some(starts) = &attack_starts {
+            apply_attack(state, round, name, &starts[i], &mut update, &mut collusion);
+        }
         let upload_dst = upload_dst_of(state, name);
         let ul_secs = match &upload_dst {
             Some(dst) => state.net.price(name, dst, update.wire_bytes()),
@@ -377,6 +388,55 @@ fn train_clients_to(
         .controller
         .barrier(names, NodeStage::Done, round, min_quorum)?;
     Ok(updates)
+}
+
+/// Apply the configured model-poisoning attack to a compromised client's
+/// update at the upload boundary (label flipping is a *data* attack and is
+/// applied to the client's shard at scaffold time instead, so it needs no
+/// hook here). Honest clients pass through untouched. The collusion vector
+/// is drawn once per training phase from its own derived stream
+/// (`round_rng(round).derive("collude", 0)`) and shared by every colluder,
+/// so it is identical regardless of sampling order or parallelism.
+fn apply_attack(
+    state: &JobState,
+    round: u64,
+    name: &str,
+    start: &Arc<[f32]>,
+    update: &mut ClientUpdate,
+    collusion: &mut Option<Arc<[f32]>>,
+) {
+    if !state.adversaries.contains(name) {
+        return;
+    }
+    let scale = state.job.adversary.scale as f32;
+    match state.job.adversary.attack {
+        AttackKind::LabelFlip => {}
+        AttackKind::SignFlip => {
+            update.params = update.params.iter().map(|p| -p).collect();
+        }
+        AttackKind::Scale => {
+            // Gradient ascent: walk λ× the honest delta away from this
+            // client's own starting model.
+            update.params = start
+                .iter()
+                .zip(update.params.iter())
+                .map(|(s, p)| s - scale * (p - s))
+                .collect();
+        }
+        AttackKind::Collude => {
+            let shared = collusion
+                .get_or_insert_with(|| {
+                    let mut rng = state.round_rng(round).derive("collude", 0);
+                    state
+                        .global
+                        .iter()
+                        .map(|g| g - scale * rng.normal_f32())
+                        .collect()
+                })
+                .clone();
+            update.params = shared;
+        }
+    }
 }
 
 /// Flow-level guard for star flows: an empty update set after a training
@@ -470,9 +530,7 @@ fn worker_proposals(
             );
         }
         let mut agg_rng = state.round_rng(round).derive("agg", name_index(wname));
-        let agg = state
-            .strategy
-            .aggregate(updates, &state.global, plan, &mut agg_rng)?;
+        let agg = state.aggregate_updates(updates, plan, &mut agg_rng)?;
         let agg = {
             let worker = state
                 .workers
@@ -700,10 +758,7 @@ pub fn hierarchical_round(state: &mut JobState, round: u64) -> Result<RoundMetri
         // Leaf aggregation (per-leaf derived stream — proposals must not
         // couple across clusters through a shared RNG).
         let mut agg_rng = state.round_rng(round).derive("agg", name_index(leaf_worker));
-        let agg: Arc<[f32]> = state
-            .strategy
-            .aggregate(&updates, &state.global, plan, &mut agg_rng)?
-            .into();
+        let agg: Arc<[f32]> = state.aggregate_updates(&updates, plan, &mut agg_rng)?.into();
         let weight: f64 = updates.iter().map(|u| u.weight).sum();
         // Leaf worker ships its cluster model upstream (extra hop = the
         // hierarchical bandwidth/CPU overhead of Fig 11); the payload shares

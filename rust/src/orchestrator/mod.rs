@@ -29,6 +29,7 @@ pub use flows::{
     clustered_round as run_clustered_round, decentralized_round as run_decentralized_round,
     hierarchical_round as run_hierarchical_round, standard_round as run_standard_round,
 };
+pub(crate) use flows::name_index;
 pub use setup::JobState;
 
 /// Strategy-mode ↔ topology compatibility. Shared with campaign grid

@@ -2,13 +2,15 @@
 //! dataset generation + distribution, overlay construction, node creation,
 //! strategy / consensus / blockchain instantiation, controller init.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::aggregate::mean::AggPlan;
+use crate::aggregate::robust::{coordinate_median, krum, trimmed_mean};
 use crate::chain::{self, Blockchain};
+use crate::config::adversary::{AttackKind, RobustAggKind};
 use crate::config::job::JobConfig;
 use crate::consensus::{self, Consensus};
 use crate::controller::phases::NodeStage;
@@ -24,7 +26,7 @@ use crate::node::{ClientNode, WorkerBehavior, WorkerNode};
 use crate::orchestrator::eval::EvalSet;
 use crate::runtime::backend::ModelBackend;
 use crate::runtime::pjrt::Runtime;
-use crate::strategy::Strategy;
+use crate::strategy::{ClientUpdate, Strategy};
 use crate::topology::graph::Overlay;
 use crate::util::rng::Rng;
 
@@ -51,6 +53,9 @@ pub struct JobState {
     pub clusters: Option<BTreeMap<String, usize>>,
     /// FL+HC: per-cluster global models.
     pub cluster_models: BTreeMap<usize, Arc<[f32]>>,
+    /// Compromised clients (seed-derived `attack_fraction` draw ∪ explicit
+    /// `adversary.nodes`). Empty when the adversary config is inactive.
+    pub adversaries: BTreeSet<String>,
     pub root_rng: Rng,
     pub report: RunReport,
     /// Virtual-clock record of the last parallel training phase: per-client
@@ -62,7 +67,7 @@ pub struct JobState {
 }
 
 impl JobState {
-    pub fn scaffold(rt: Arc<Runtime>, job: &JobConfig, faults: FaultPlan) -> Result<JobState> {
+    pub fn scaffold(rt: Arc<Runtime>, job: &JobConfig, mut faults: FaultPlan) -> Result<JobState> {
         let root_rng = Rng::seed_from(job.seed);
 
         // Backend + capability check (ML-library agnosticism boundary).
@@ -100,6 +105,24 @@ impl JobState {
         let mut distributor = Distributor::new();
         distributor.archive_partition(&train, &partition, &client_names, &test)?;
 
+        // Adversarial scenario: resolve the compromised cohort (seed-derived
+        // draw ∪ explicit list) and fold the declarative `faults:` schedule
+        // (explicit events + churn draws) into the caller's plan. Inactive
+        // sections resolve to an empty set / empty plan without drawing from
+        // any RNG stream.
+        let adversaries =
+            crate::adversary::select_adversaries(&job.adversary, &root_rng, &client_names)?;
+        if !adversaries.is_empty() {
+            info!(
+                "orchestrator",
+                "adversary: {} compromised client(s) running '{}': {:?}",
+                adversaries.len(),
+                job.adversary.attack.name(),
+                adversaries
+            );
+        }
+        faults.merge(crate::adversary::materialize_faults(job, &client_names));
+
         // Controller over every node; stage flow of Algorithm 1 lines 1-13.
         let all_nodes: Vec<String> = overlay.roles.keys().cloned().collect();
         let mut controller = LogicController::new(&all_nodes);
@@ -117,7 +140,15 @@ impl JobState {
         // scaling its *simulated* train time (virtual clock only).
         let mut clients = BTreeMap::new();
         for (i, name) in client_names.iter().enumerate() {
-            let chunk = distributor.download(name, "train")?;
+            let mut chunk = distributor.download(name, "train")?;
+            // Label-flip is a *data* poisoning attack: corrupt the local
+            // chunk before batching, then train honestly on the bad labels.
+            if job.adversary.attack == AttackKind::LabelFlip && adversaries.contains(name) {
+                let k = chunk.num_classes as i32;
+                for y in &mut chunk.y {
+                    *y = (*y + 1) % k;
+                }
+            }
             let mut batch_rng = root_rng.derive("batching", i as u64);
             let mut node = ClientNode::from_chunk(name, &chunk, &backend, &mut batch_rng)?;
             let mut speed_rng = root_rng.derive("speed", super::flows::name_index(name));
@@ -203,6 +234,7 @@ impl JobState {
             global,
             clusters: None,
             cluster_models: BTreeMap::new(),
+            adversaries,
             root_rng,
             report,
             client_virtual_secs: BTreeMap::new(),
@@ -235,6 +267,51 @@ impl JobState {
     /// Aggregation plan: the job's hardware profile plus its parallelism.
     pub fn agg_plan(&self) -> AggPlan {
         AggPlan::new(self.job.hw_profile, self.parallelism())
+    }
+
+    /// Server-side aggregation dispatch: the strategy's own `aggregate`
+    /// unless `aggregation: robust:` selects a Byzantine-robust rule
+    /// (krum / trimmed-mean / coordinate-median from `aggregate/robust.rs`).
+    /// The assumed Byzantine count is the explicit `aggregation.f` when
+    /// given (invalid values surface as the robust rule's own error), else
+    /// the number of configured adversaries among this round's updates
+    /// (min 1), clamped to what the rule can absorb at this cohort size.
+    pub fn aggregate_updates(
+        &self,
+        updates: &[ClientUpdate],
+        plan: AggPlan,
+        rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        if self.job.robust_agg.kind == RobustAggKind::None {
+            return self.strategy.aggregate(updates, &self.global, plan, rng);
+        }
+        let refs: Vec<&[f32]> = updates.iter().map(|u| u.params.as_ref()).collect();
+        let n = refs.len();
+        let f_for = |cap: usize| {
+            self.job.robust_agg.f.unwrap_or_else(|| {
+                updates
+                    .iter()
+                    .filter(|u| self.adversaries.contains(&u.client))
+                    .count()
+                    .max(1)
+                    .min(cap)
+            })
+        };
+        match self.job.robust_agg.kind {
+            RobustAggKind::None => unreachable!("dispatched above"),
+            RobustAggKind::Krum => {
+                // krum needs n > 2f + 2.
+                let f = f_for(n.saturating_sub(3) / 2);
+                let idx = krum(&refs, f)?;
+                Ok(refs[idx].to_vec())
+            }
+            RobustAggKind::TrimmedMean => {
+                // trimmed_mean needs n > 2·trim.
+                let trim = f_for(n.saturating_sub(1) / 2);
+                trimmed_mean(&refs, trim)
+            }
+            RobustAggKind::Median => coordinate_median(&refs),
+        }
     }
 
     /// Sampled client subset for a round (client_fraction < 1.0).

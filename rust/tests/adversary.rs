@@ -1,0 +1,241 @@
+//! Adversarial-scenario contracts (the robustness PR's acceptance criteria):
+//!
+//! * **zero-adversary identity**: inactive `adversary:` / `faults:` /
+//!   `aggregation:` sections produce bitwise-identical runs — model-hash
+//!   series, traffic bytes and canonical cache keys — to a config without
+//!   the sections at all (no RNG stream is touched, no cache key changes);
+//! * **defense frontier**: under 30% scaled poisoning, krum and
+//!   trimmed-mean strictly outperform plain weighted-mean aggregation;
+//! * **worker invariance**: robust aggregation picks the same model at any
+//!   worker count;
+//! * **replayability**: churn and explicit fault schedules materialize and
+//!   run deterministically end to end, and trace files round-trip through
+//!   the config layer.
+
+use std::sync::Arc;
+
+use flsim::adversary::materialize_faults;
+use flsim::campaign::CampaignSpec;
+use flsim::config::adversary::{AttackKind, RobustAggConfig};
+use flsim::config::job::JobConfig;
+use flsim::metrics::report::RunReport;
+use flsim::orchestrator::Orchestrator;
+use flsim::runtime::pjrt::Runtime;
+
+fn rt() -> Arc<Runtime> {
+    Runtime::shared("artifacts").unwrap()
+}
+
+fn tiny(strategy: &str) -> JobConfig {
+    let mut j = JobConfig::default_cnn(strategy);
+    j.name = "adv_tiny".into();
+    j.rounds = 2;
+    j.dataset.n = 600;
+    j.n_clients = 4;
+    j
+}
+
+/// A 10-client job under 30% scale-attack poisoning (λ = 10).
+fn poisoned() -> JobConfig {
+    let mut j = JobConfig::default_cnn("fedavg");
+    j.name = "adv_poisoned".into();
+    j.rounds = 3;
+    j.dataset.n = 600;
+    j.n_clients = 10;
+    j.seed = 42;
+    j.adversary.attack = AttackKind::Scale;
+    j.adversary.attack_fraction = 0.3;
+    j.adversary.scale = 10.0;
+    j
+}
+
+fn hashes(r: &RunReport) -> Vec<String> {
+    r.rounds.iter().map(|m| m.model_hash.clone()).collect()
+}
+
+fn net_bytes(r: &RunReport) -> Vec<u64> {
+    r.rounds.iter().map(|m| m.net_bytes).collect()
+}
+
+/// The tentpole identity contract: configs whose adversary surface is
+/// *present but inactive* must be indistinguishable — in results and in
+/// cache keys — from configs predating the adversary layer entirely.
+/// dpfl is included because its aggregation consumes RNG, so any stray
+/// stream derivation would shift its noise and change the hashes.
+#[test]
+fn zero_adversary_runs_are_bitwise_identical() {
+    for strategy in ["fedavg", "dpfl"] {
+        let base = tiny(strategy);
+        let orch = Orchestrator::new(rt());
+        let want = orch.run(&base).unwrap();
+
+        let mut with_sections = tiny(strategy);
+        with_sections.adversary.attack = AttackKind::Scale;
+        with_sections.adversary.attack_fraction = 0.0; // inactive
+        with_sections.adversary.scale = 10.0;
+        with_sections.faults.churn = Some(flsim::config::adversary::ChurnConfig {
+            availability: 1.0, // inactive
+            from_round: 1,
+        });
+        with_sections.robust_agg = RobustAggConfig::parse_axis("none").unwrap();
+
+        assert_eq!(
+            base.canonical_json().to_string(),
+            with_sections.canonical_json().to_string(),
+            "{strategy}: inactive sections must not perturb the cache key"
+        );
+        let got = orch.run(&with_sections).unwrap();
+        assert_eq!(hashes(&want), hashes(&got), "{strategy}: model hashes diverged");
+        assert_eq!(net_bytes(&want), net_bytes(&got), "{strategy}: traffic diverged");
+    }
+}
+
+/// The robustness frontier, end to end: 3 of 10 clients submit λ=10
+/// gradient-ascent updates. Plain weighted-mean aggregation is destroyed;
+/// krum and trimmed-mean (auto f = |adversaries ∩ round| = 3) must both
+/// strictly beat it. Deterministic engine ⇒ strict inequalities are stable.
+#[test]
+fn robust_aggregators_beat_weighted_mean_under_poisoning() {
+    let orch = Orchestrator::new(rt());
+    let undefended = orch.run(&poisoned()).unwrap();
+
+    let mut krum = poisoned();
+    krum.robust_agg = RobustAggConfig::parse_axis("krum").unwrap();
+    let krum = orch.run(&krum).unwrap();
+
+    let mut trimmed = poisoned();
+    trimmed.robust_agg = RobustAggConfig::parse_axis("trimmed_mean").unwrap();
+    let trimmed = orch.run(&trimmed).unwrap();
+
+    assert!(
+        krum.final_accuracy() > undefended.final_accuracy(),
+        "krum {} must beat weighted_mean {} under 30% scaled poisoning",
+        krum.final_accuracy(),
+        undefended.final_accuracy()
+    );
+    assert!(
+        trimmed.final_accuracy() > undefended.final_accuracy(),
+        "trimmed_mean {} must beat weighted_mean {} under 30% scaled poisoning",
+        trimmed.final_accuracy(),
+        undefended.final_accuracy()
+    );
+}
+
+/// Robust aggregation must be a pure function of the client updates: with
+/// 1 or 3 workers every worker computes the identical krum winner (no RNG
+/// is consumed), so the consensus model — and the whole hash series — is
+/// invariant to the worker count.
+#[test]
+fn robust_aggregation_is_worker_count_invariant() {
+    let orch = Orchestrator::new(rt());
+    let mut one = poisoned();
+    one.robust_agg = RobustAggConfig::parse_axis("krum").unwrap();
+    let mut three = one.clone();
+    one.n_workers = 1;
+    three.n_workers = 3;
+    let a = orch.run(&one).unwrap();
+    let b = orch.run(&three).unwrap();
+    assert_eq!(hashes(&a), hashes(&b), "krum winner depends on worker count");
+}
+
+/// A label-flip data attack changes training (the poisoned shards differ)
+/// — sanity that the scaffold-time mutation point is actually live.
+#[test]
+fn label_flip_changes_training() {
+    let orch = Orchestrator::new(rt());
+    let clean = orch.run(&tiny("fedavg")).unwrap();
+    let mut flipped = tiny("fedavg");
+    flipped.adversary.attack = AttackKind::LabelFlip;
+    flipped.adversary.attack_fraction = 0.5;
+    let poisoned = orch.run(&flipped).unwrap();
+    assert_ne!(
+        hashes(&clean),
+        hashes(&poisoned),
+        "label flipping on half the fleet must change the trained model"
+    );
+}
+
+/// Stochastic churn materializes the same FaultPlan every time and the run
+/// completes through the barrier-timeout machinery.
+#[test]
+fn churn_replays_deterministically_end_to_end() {
+    let mut job = JobConfig::default_cnn("fedavg");
+    job.name = "adv_churn".into();
+    job.rounds = 3;
+    job.dataset.n = 600;
+    job.n_clients = 10;
+    job.faults.churn = Some(flsim::config::adversary::ChurnConfig {
+        availability: 0.9,
+        from_round: 2,
+    });
+    let names: Vec<String> = (0..10).map(|i| format!("client_{i}")).collect();
+    assert_eq!(
+        format!("{:?}", materialize_faults(&job, &names)),
+        format!("{:?}", materialize_faults(&job, &names)),
+        "churn plan must be a pure function of the job"
+    );
+    let orch = Orchestrator::new(rt());
+    let a = orch.run(&job).unwrap();
+    let b = orch.run(&job).unwrap();
+    assert_eq!(a.rounds.len(), 3);
+    assert_eq!(hashes(&a), hashes(&b), "churn run must replay bit-for-bit");
+}
+
+/// Explicit `faults:` schedules ride the same barrier machinery as the
+/// programmatic FaultPlan: a scheduled drop completes the run without the
+/// dropped client's upload.
+#[test]
+fn declarative_drop_schedule_completes() {
+    let mut job = tiny("fedavg");
+    job.faults.drops.push(("client_1".into(), 2));
+    let report = Orchestrator::new(rt()).run(&job).unwrap();
+    assert_eq!(report.rounds.len(), 2);
+    // And it is a *different* trajectory from the clean run (client_1's
+    // round-2 update is missing from the aggregate).
+    let clean = Orchestrator::new(rt()).run(&tiny("fedavg")).unwrap();
+    assert_eq!(hashes(&report)[0], hashes(&clean)[0]);
+    assert_ne!(hashes(&report)[1], hashes(&clean)[1]);
+}
+
+/// Trace files round-trip through the config layer: `faults: trace:` folds
+/// the file's drop/crash lines into the parsed schedule.
+#[test]
+fn fault_trace_file_round_trips() {
+    let path = std::env::temp_dir().join(format!("flsim_trace_{}.txt", std::process::id()));
+    std::fs::write(
+        &path,
+        "# replayable fault trace\ndrop client_1 2\ncrash client_2 3\n\n",
+    )
+    .unwrap();
+    let src = format!(
+        "job:\n  name: traced\n  rounds: 4\nfaults:\n  trace: {}\ntopology:\n  kind: client_server\n  clients: 4\n  workers: 1\n",
+        path.display()
+    );
+    let job = JobConfig::from_yaml_str(&src).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(job.faults.drops, vec![("client_1".to_string(), 2)]);
+    assert_eq!(job.faults.crashes, vec![("client_2".to_string(), 3)]);
+    job.validate().unwrap();
+}
+
+/// The shipped attack × defense sweep expands to the 6-cell grid the CI
+/// smoke job greps for, with the adversary axes landing in each cell's job.
+#[test]
+fn adversary_sweep_spec_expands() {
+    let spec = CampaignSpec::from_yaml_file("configs/adversary_sweep.yaml").unwrap();
+    assert_eq!(spec.name, "adversary_sweep");
+    let cells = flsim::campaign::expand(&spec).unwrap();
+    assert_eq!(cells.len(), 6);
+    let krum_poisoned = cells
+        .iter()
+        .find(|c| c.job.adversary.attack_fraction > 0.0 && c.job.robust_agg.kind.name() == "krum")
+        .expect("poisoned krum cell in the grid");
+    assert_eq!(krum_poisoned.job.adversary.attack, AttackKind::Scale);
+    assert_eq!(krum_poisoned.job.adversary.scale, 10.0);
+    // Poisoned and clean cells must hash differently (distinct cache keys).
+    let clean_krum = cells
+        .iter()
+        .find(|c| c.job.adversary.attack_fraction == 0.0 && c.job.robust_agg.kind.name() == "krum")
+        .unwrap();
+    assert_ne!(krum_poisoned.key, clean_krum.key);
+}

@@ -506,3 +506,94 @@ fn prop_rng_streams_never_collide() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_inactive_adversary_sections_never_shift_cache_keys() {
+    // The zero-adversary identity contract at the cache-key layer: over
+    // random jobs, bolting on *inactive* adversary/faults/aggregation
+    // sections leaves the canonical key byte-identical, while activating
+    // any one of them changes it.
+    forall(80, |rng| {
+        let mut base = JobConfig::default_cnn("fedavg");
+        base.seed = rng.next_u64() % 1_000_000;
+        base.rounds = 1 + rng.below(20) as u64;
+        base.n_clients = 2 + rng.below(12);
+        let key = base.canonical_json().to_string();
+
+        let mut inactive = base.clone();
+        inactive.adversary.attack_fraction = 0.0;
+        inactive.adversary.scale = 1.0 + rng.next_f64() * 20.0;
+        inactive.faults.churn = Some(flsim::config::adversary::ChurnConfig {
+            availability: 1.0,
+            from_round: 1 + rng.next_u64() % 5,
+        });
+        if inactive.canonical_json().to_string() != key {
+            return Err("inactive sections changed the canonical key".into());
+        }
+
+        let mut active = base.clone();
+        match rng.below(3) {
+            0 => active.adversary.attack_fraction = 0.1 + rng.next_f64() * 0.8,
+            1 => active.faults.drops.push((format!("client_{}", rng.below(4)), 2)),
+            _ => {
+                active.robust_agg =
+                    flsim::config::adversary::RobustAggConfig::parse_axis("krum").unwrap()
+            }
+        }
+        if active.canonical_json().to_string() == key {
+            return Err("an active section failed to change the canonical key".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adversary_selection_and_churn_are_pure() {
+    // Attacker cohorts and churn plans must be pure functions of
+    // (config, seed): same inputs, same outputs — and cohort size must
+    // follow round(fraction · n).
+    forall(80, |rng| {
+        let n = 4 + rng.below(20);
+        let names: Vec<String> = (0..n).map(|i| format!("client_{i}")).collect();
+        let fraction = rng.next_f64();
+        let adv = flsim::config::adversary::AdversaryConfig {
+            attack: flsim::config::adversary::AttackKind::Scale,
+            attack_fraction: fraction,
+            scale: 10.0,
+            nodes: vec![],
+        };
+        let root = Rng::seed_from(rng.next_u64());
+        let a = flsim::adversary::select_adversaries(&adv, &root, &names)
+            .map_err(|e| e.to_string())?;
+        let b = flsim::adversary::select_adversaries(&adv, &root, &names)
+            .map_err(|e| e.to_string())?;
+        if a != b {
+            return Err("adversary selection is not deterministic".into());
+        }
+        let want = ((fraction * n as f64).round() as usize).min(n);
+        if a.len() != want {
+            return Err(format!("cohort {} != round({fraction} * {n}) = {want}", a.len()));
+        }
+
+        let mut job = JobConfig::default_cnn("fedavg");
+        job.seed = rng.next_u64();
+        job.rounds = 2 + rng.next_u64() % 10;
+        job.faults.churn = Some(flsim::config::adversary::ChurnConfig {
+            availability: 0.3 + rng.next_f64() * 0.6,
+            from_round: 1 + rng.next_u64() % 3,
+        });
+        let p = flsim::adversary::materialize_faults(&job, &names);
+        let q = flsim::adversary::materialize_faults(&job, &names);
+        for name in &names {
+            for round in 1..=job.rounds {
+                if p.is_down(name, round) != q.is_down(name, round) {
+                    return Err("churn materialization is not deterministic".into());
+                }
+                if round < job.faults.churn.unwrap().from_round && p.is_down(name, round) {
+                    return Err("churn fired before from_round".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
