@@ -15,8 +15,9 @@ use anyhow::{bail, Result};
 
 use crate::config::adversary::AdversaryConfig;
 use crate::config::job::JobConfig;
-use crate::controller::sync::FaultPlan;
+use crate::controller::sync::{ChurnSpec, FaultPlan};
 use crate::orchestrator::name_index;
+use crate::orchestrator::population::Population;
 use crate::util::rng::Rng;
 
 /// Resolve which clients are compromised: the explicit `nodes` list unioned
@@ -53,6 +54,42 @@ pub fn select_adversaries(
     Ok(out)
 }
 
+/// Index-based variant of [`select_adversaries`] for virtual populations:
+/// the RNG stream and selection are **identical** (the eager fleet's
+/// `client_names` list is sorted, and rank-order iteration over the
+/// [`Population`] yields exactly that list), but no fleet-wide name vector
+/// is ever allocated — only the `k` chosen names materialize.
+pub fn select_adversaries_virtual(
+    adv: &AdversaryConfig,
+    root: &Rng,
+    pop: &Population,
+) -> Result<BTreeSet<String>> {
+    let mut out = BTreeSet::new();
+    if !adv.is_active() {
+        return Ok(out);
+    }
+    for n in &adv.nodes {
+        if pop.rank_of_name(n).is_none() {
+            bail!(
+                "adversary node '{n}' is not in the client fleet ({} clients)",
+                pop.len()
+            );
+        }
+        out.insert(n.clone());
+    }
+    if adv.attack_fraction > 0.0 {
+        let n = pop.len();
+        let k = ((adv.attack_fraction * n as f64).round() as usize).min(n);
+        if k > 0 {
+            let mut rng = root.derive("adversary", 0);
+            for i in rng.choose_indices(n, k) {
+                out.insert(pop.name_at_rank(i));
+            }
+        }
+    }
+    Ok(out)
+}
+
 /// Materialize the `faults:` section into a [`FaultPlan`]: explicit
 /// drop/crash events verbatim, plus — when churn is active — one
 /// seed-derived availability draw per (client, round), any failed draw
@@ -77,6 +114,33 @@ pub fn materialize_faults(job: &JobConfig, client_names: &[String]) -> FaultPlan
                     }
                 }
             }
+        }
+    }
+    plan
+}
+
+/// Virtual-population variant of [`materialize_faults`]: explicit events
+/// verbatim, churn attached as a lazily-replayed [`ChurnSpec`] instead of a
+/// dense per-(client, round) drop table. `FaultPlan::is_down` answers
+/// identically to the eager plan for every fleet client and round
+/// (test-enforced), at O(1) resident state for any fleet size.
+pub fn materialize_faults_virtual(job: &JobConfig) -> FaultPlan {
+    let mut plan = FaultPlan::none();
+    for (node, round) in &job.faults.drops {
+        plan = plan.drop_in_round(node, *round);
+    }
+    for (node, round) in &job.faults.crashes {
+        plan = plan.crash_from(node, *round);
+    }
+    if let Some(churn) = job.faults.churn {
+        if churn.availability < 1.0 {
+            plan = plan.with_churn(ChurnSpec {
+                seed: job.seed,
+                availability: churn.availability,
+                from_round: churn.from_round,
+                rounds: job.rounds,
+                n_clients: job.n_clients as u64,
+            });
         }
     }
     plan
@@ -165,6 +229,67 @@ mod tests {
             from_round: 1,
         });
         assert!(materialize_faults(&job, &names).is_empty());
+    }
+
+    #[test]
+    fn virtual_adversary_selection_matches_eager() {
+        for (seed, n, frac) in [(42u64, 10usize, 0.3), (7, 13, 0.5), (99, 101, 0.07)] {
+            let root = Rng::seed_from(seed);
+            let adv = AdversaryConfig {
+                attack: AttackKind::Scale,
+                attack_fraction: frac,
+                scale: 10.0,
+                nodes: vec!["client_2".into()],
+            };
+            // Eager draws over the sorted name list; virtual over ranks.
+            let mut names = fleet(n);
+            names.sort();
+            let eager = select_adversaries(&adv, &root, &names).unwrap();
+            let pop = Population::new(n).unwrap();
+            let virt = select_adversaries_virtual(&adv, &root, &pop).unwrap();
+            assert_eq!(eager, virt, "seed={seed} n={n} frac={frac}");
+        }
+        // Out-of-fleet explicit nodes are rejected in both paths.
+        let adv = AdversaryConfig {
+            attack: AttackKind::SignFlip,
+            attack_fraction: 0.0,
+            scale: 10.0,
+            nodes: vec!["client_99".into()],
+        };
+        let pop = Population::new(10).unwrap();
+        assert!(select_adversaries_virtual(&adv, &Rng::seed_from(1), &pop).is_err());
+    }
+
+    #[test]
+    fn virtual_fault_plan_matches_dense_plan() {
+        for (seed, n_clients, availability, from_round) in
+            [(42u64, 5usize, 0.7, 3u64), (7, 12, 0.9, 1), (1234, 50, 0.5, 6)]
+        {
+            let mut job = JobConfig::default_cnn("fedavg");
+            job.seed = seed;
+            job.rounds = 15;
+            job.n_clients = n_clients;
+            job.faults.churn = Some(ChurnConfig {
+                availability,
+                from_round,
+            });
+            job.faults.drops.push(("client_1".into(), 2));
+            job.faults.crashes.push(("client_0".into(), 9));
+            let names = fleet(n_clients);
+            let dense = materialize_faults(&job, &names);
+            let lazy = materialize_faults_virtual(&job);
+            for name in &names {
+                for round in 0..=job.rounds + 2 {
+                    assert_eq!(
+                        dense.is_down(name, round),
+                        lazy.is_down(name, round),
+                        "seed={seed} node={name} round={round}"
+                    );
+                }
+            }
+            // Workers are untouched by churn in both plans.
+            assert!(!lazy.is_down("worker_0", from_round));
+        }
     }
 
     #[test]

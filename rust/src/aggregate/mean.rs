@@ -277,6 +277,153 @@ fn pairwise_into(
     }
 }
 
+/// Online weighted-mean accumulator: folds one client model at a time in
+/// O(model) server memory while reproducing [`weighted_mean_plan`]'s output
+/// **bit for bit** for the same reduction order and arrival order (at any
+/// `parallelism` — the block-parallel plan is per-element identical to the
+/// serial one).
+///
+/// Normalized weights are a function of the *total* weight, so the
+/// accumulator needs `total_weight` up front: the left-to-right `f64` sum of
+/// the weights that will be pushed, in push order (the exact sum
+/// `weighted_mean_plan` computes). [`StreamingMean::finish`] cross-checks it
+/// against the weights actually seen.
+///
+/// Per-order state:
+/// * `Sequential` / `Kahan` — one running sum (plus one compensation vector
+///   for Kahan): O(dim).
+/// * `PairwiseTree` — a binary-counter stack of partial sums, one buffer per
+///   set bit of the model count: O(dim × log n). Merging carry-style (older
+///   partial on the left) reproduces exactly the split-at-largest-power-of-2
+///   tree [`pairwise_into`] builds top-down (golden-tested below).
+/// * `Reversed` — inherently non-streamable (the *last* arrival folds
+///   first); the models are collected and reduced at `finish`, documented as
+///   the O(cohort) fallback.
+pub struct StreamingMean {
+    order: ReductionOrder,
+    dim: usize,
+    total_weight: f64,
+    seen_weight: f64,
+    count: usize,
+    /// Running sum (`Sequential` / `Kahan`).
+    acc: Vec<f32>,
+    /// Kahan compensation terms.
+    comp: Vec<f32>,
+    /// Binary-counter partial sums for `PairwiseTree`: `(level, partial)`
+    /// where a level-`l` partial covers `2^l` consecutive models. Levels are
+    /// strictly decreasing bottom-to-top.
+    stack: Vec<(u32, Vec<f32>)>,
+    /// Collected `(model, weight)` pairs for the `Reversed` fallback.
+    collected: Vec<(Vec<f32>, f64)>,
+}
+
+impl StreamingMean {
+    pub fn new(dim: usize, total_weight: f64, order: ReductionOrder) -> Result<StreamingMean> {
+        if dim == 0 {
+            bail!("streaming mean of zero-dimensional models");
+        }
+        if !(total_weight > 0.0 && total_weight.is_finite()) {
+            bail!("non-positive total weight {total_weight}");
+        }
+        Ok(StreamingMean {
+            order,
+            dim,
+            total_weight,
+            seen_weight: 0.0,
+            count: 0,
+            acc: match order {
+                ReductionOrder::Sequential | ReductionOrder::Kahan => vec![0f32; dim],
+                _ => Vec::new(),
+            },
+            comp: match order {
+                ReductionOrder::Kahan => vec![0f32; dim],
+                _ => Vec::new(),
+            },
+            stack: Vec::new(),
+            collected: Vec::new(),
+        })
+    }
+
+    /// Models folded so far.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Fold one client model into the accumulator.
+    pub fn push(&mut self, params: &[f32], weight: f64) -> Result<()> {
+        if params.len() != self.dim {
+            bail!("model {} has dim {} != {}", self.count, params.len(), self.dim);
+        }
+        let wi = (weight / self.total_weight) as f32;
+        self.seen_weight += weight;
+        self.count += 1;
+        match self.order {
+            ReductionOrder::Sequential => axpy(&mut self.acc, wi, params),
+            ReductionOrder::Kahan => {
+                for j in 0..self.dim {
+                    let y = wi * params[j] - self.comp[j];
+                    let t = self.acc[j] + y;
+                    self.comp[j] = (t - self.acc[j]) - y;
+                    self.acc[j] = t;
+                }
+            }
+            ReductionOrder::PairwiseTree => {
+                // Leaf: exactly `pairwise_into`'s n == 1 case (`wi * v`).
+                let leaf: Vec<f32> = params.iter().map(|&v| wi * v).collect();
+                self.stack.push((0, leaf));
+                // Carry: merge equal-level partials, older (left) + newer.
+                while self.stack.len() >= 2
+                    && self.stack[self.stack.len() - 1].0 == self.stack[self.stack.len() - 2].0
+                {
+                    let (_, newer) = self.stack.pop().unwrap();
+                    let (level, older) = self.stack.last_mut().unwrap();
+                    for (o, &t) in older.iter_mut().zip(&newer) {
+                        *o += t;
+                    }
+                    *level += 1;
+                }
+            }
+            ReductionOrder::Reversed => self.collected.push((params.to_vec(), weight)),
+        }
+        Ok(())
+    }
+
+    /// Complete the reduction and return the weighted mean.
+    pub fn finish(mut self) -> Result<Vec<f32>> {
+        if self.count == 0 {
+            bail!("weighted_mean of zero models");
+        }
+        if self.seen_weight.to_bits() != self.total_weight.to_bits() {
+            bail!(
+                "streaming mean saw total weight {} but was constructed for {}",
+                self.seen_weight,
+                self.total_weight
+            );
+        }
+        match self.order {
+            ReductionOrder::Sequential | ReductionOrder::Kahan => Ok(self.acc),
+            ReductionOrder::PairwiseTree => {
+                // Combine leftovers newest-to-oldest with the older (larger)
+                // partial on the left — the order the top-down recursion
+                // adds its right-hand suffixes.
+                let (_, mut running) = self.stack.pop().expect("count > 0 implies partials");
+                while let Some((_, mut older)) = self.stack.pop() {
+                    for (o, &t) in older.iter_mut().zip(&running) {
+                        *o += t;
+                    }
+                    running = older;
+                }
+                Ok(running)
+            }
+            ReductionOrder::Reversed => {
+                let refs: Vec<&[f32]> = self.collected.iter().map(|(p, _)| p.as_slice()).collect();
+                let weights: Vec<f64> = self.collected.iter().map(|(_, w)| *w).collect();
+                weighted_mean_plan(&refs, &weights, AggPlan::sequential(ReductionOrder::Reversed))
+            }
+        }
+    }
+}
+
 /// Server-side momentum (FedAvgM, Hsu et al. [2]):
 /// `v <- beta * v + (w_global - w_avg)`, `w_global <- w_global - v`.
 pub fn apply_server_momentum(
@@ -460,6 +607,70 @@ mod tests {
         assert!(weighted_mean(&[&p1, &p2], &[1.0, 1.0], ReductionOrder::Sequential).is_err());
         assert!(weighted_mean(&[], &[], ReductionOrder::Sequential).is_err());
         assert!(weighted_mean(&[&p1], &[0.0], ReductionOrder::Sequential).is_err());
+    }
+
+    #[test]
+    fn streaming_is_bitwise_equal_to_weighted_mean_plan() {
+        // Every reduction order, model counts around power-of-two
+        // boundaries, a dim spanning several chunks, and both the inline
+        // and block-parallel plans: the streaming fold must reproduce the
+        // collected reduction bit for bit.
+        for n in [1usize, 2, 3, 5, 7, 8, 9, 13, 16, 17, 33] {
+            let (params, weights) = random_models(900 + n as u64, n, 2 * CHUNK + 37);
+            let refs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+            let total: f64 = weights.iter().sum();
+            for order in ReductionOrder::ALL {
+                let mut stream = StreamingMean::new(refs[0].len(), total, order).unwrap();
+                for (p, &w) in refs.iter().zip(&weights) {
+                    stream.push(p, w).unwrap();
+                }
+                let streamed = stream.finish().unwrap();
+                for par in [1usize, 4] {
+                    let plan = AggPlan::new(order, par);
+                    let collected = weighted_mean_plan(&refs, &weights, plan).unwrap();
+                    assert_eq!(
+                        streamed, collected,
+                        "{order:?} streaming diverges at n={n} parallelism={par}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_pairwise_stack_is_logarithmic() {
+        // The binary-counter stack holds one partial per set bit of the
+        // model count — O(model × log cohort), never O(cohort × model).
+        let dim = 64;
+        let mut stream = StreamingMean::new(dim, 1000.0, ReductionOrder::PairwiseTree).unwrap();
+        let model = vec![1.0f32; dim];
+        let mut peak = 0;
+        for _ in 0..1000 {
+            stream.push(&model, 1.0).unwrap();
+            peak = peak.max(stream.stack.len());
+        }
+        assert!(peak <= 10, "stack grew to {peak} partials for 1000 models");
+        assert_eq!(stream.stack.len(), 1000usize.count_ones() as usize);
+        let out = stream.finish().unwrap();
+        assert!(approx_eq(&out, &model, 1e-5));
+    }
+
+    #[test]
+    fn streaming_validates_inputs() {
+        assert!(StreamingMean::new(0, 1.0, ReductionOrder::Sequential).is_err());
+        assert!(StreamingMean::new(4, 0.0, ReductionOrder::Sequential).is_err());
+        assert!(StreamingMean::new(4, f64::NAN, ReductionOrder::Sequential).is_err());
+        // Dim mismatch on push.
+        let mut s = StreamingMean::new(2, 1.0, ReductionOrder::Sequential).unwrap();
+        assert!(s.push(&[1.0, 2.0, 3.0], 1.0).is_err());
+        // Zero models.
+        let s = StreamingMean::new(2, 1.0, ReductionOrder::Sequential).unwrap();
+        assert!(s.finish().is_err());
+        // A total weight that disagrees with the pushed weights is a bug in
+        // the caller's bookkeeping — caught at finish.
+        let mut s = StreamingMean::new(1, 5.0, ReductionOrder::Sequential).unwrap();
+        s.push(&[1.0], 1.0).unwrap();
+        assert!(s.finish().is_err());
     }
 
     #[test]

@@ -94,6 +94,14 @@ pub struct MakespanRecord {
     pub sim_round_secs: f64,
 }
 
+/// A peak-memory measurement (`VmHWM` sampled at a fixed point in the bench
+/// sequence, or a scoped `VmRSS` delta). Bytes; higher is worse.
+#[derive(Clone, Debug)]
+pub struct MemoryRecord {
+    pub name: String,
+    pub mem_peak_bytes: u64,
+}
+
 /// Collects bench results and serializes them as a stable JSON artifact
 /// (`BENCH_micro.json`) for per-PR perf tracking.
 #[derive(Clone, Debug, Default)]
@@ -101,6 +109,7 @@ pub struct BenchSuite {
     pub results: Vec<BenchRecord>,
     pub throughput: Vec<ThroughputRecord>,
     pub makespan: Vec<MakespanRecord>,
+    pub memory: Vec<MemoryRecord>,
 }
 
 impl BenchSuite {
@@ -130,6 +139,15 @@ impl BenchSuite {
         self.makespan.push(MakespanRecord {
             name: name.to_string(),
             sim_round_secs,
+        });
+    }
+
+    /// Record a peak-memory measurement in bytes (higher = worse; the
+    /// regression gate inverts its tolerance accordingly).
+    pub fn push_memory(&mut self, name: &str, mem_peak_bytes: u64) {
+        self.memory.push(MemoryRecord {
+            name: name.to_string(),
+            mem_peak_bytes,
         });
     }
 
@@ -170,11 +188,22 @@ impl BenchSuite {
                 ])
             })
             .collect();
+        let memory: Vec<Json> = self
+            .memory
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("name", Json::from(m.name.as_str())),
+                    ("mem_peak_bytes", Json::from(m.mem_peak_bytes as usize)),
+                ])
+            })
+            .collect();
         let doc = Json::obj(vec![
             ("schema", Json::from("flsim-bench-v1")),
             ("results", Json::Arr(results)),
             ("throughput", Json::Arr(throughput)),
             ("makespan", Json::Arr(makespan)),
+            ("memory", Json::Arr(memory)),
         ]);
         format!("{doc}\n")
     }
@@ -223,6 +252,7 @@ mod tests {
         });
         suite.push_throughput("round/parallelism=4", 12.5);
         suite.push_makespan("topology/client_server", 3.14159);
+        suite.push_memory("scale/n=100000", 123_456_789);
         let j = suite.to_json();
         // Parses with the in-repo JSON parser and carries the values.
         let parsed = crate::util::json::Json::parse(&j).unwrap();
@@ -255,6 +285,18 @@ mod tests {
         assert_eq!(
             ms[0].get("sim_round_secs").and_then(crate::util::json::Json::as_f64),
             Some(3.1416)
+        );
+        let mem = parsed
+            .get("memory")
+            .and_then(crate::util::json::Json::as_arr)
+            .unwrap();
+        assert_eq!(
+            mem[0].get("name").and_then(crate::util::json::Json::as_str),
+            Some("scale/n=100000")
+        );
+        assert_eq!(
+            mem[0].get("mem_peak_bytes").and_then(crate::util::json::Json::as_f64),
+            Some(123_456_789.0)
         );
     }
 }

@@ -249,7 +249,9 @@ pub fn run_asha(
             let st = &mut states[i];
             if let Some(handle) = st.handle.take() {
                 match handle.finish() {
-                    Ok(report) => match store.put(&cell.key, &cell.name, &cell.job, &report) {
+                    Ok(report) => match store
+                        .put(&cell.key, &cell.name, &spec.name, &cell.job, &report)
+                    {
                         Ok(()) => {
                             println!(
                                 "campaign[{}]: done {} ({} rounds, acc {:.3})",
@@ -316,7 +318,9 @@ pub fn run_asha(
             let partial = match st.handle.take() {
                 Some(handle) => {
                     let report = handle.partial_report();
-                    if let Err(e) = store.put_partial(&cell.key, &cell.name, &cell.job, &report) {
+                    let stored =
+                        store.put_partial(&cell.key, &cell.name, &spec.name, &cell.job, &report);
+                    if let Err(e) = stored {
                         st.error = Some(format!("persisting partial result: {e:#}"));
                         continue;
                     }

@@ -144,12 +144,26 @@ impl ResultStore {
 
     /// Persist one completed cell (atomic: temp file + rename, so a
     /// concurrent or crashed campaign never leaves a half-written entry).
-    pub fn put(&self, key: &str, cell: &str, job: &JobConfig, report: &RunReport) -> Result<()> {
+    ///
+    /// `campaign` records which campaign first computed the entry —
+    /// provenance only, surfaced by `campaign list`'s dedup statistics.
+    /// It is *not* part of the key: the whole point of content addressing
+    /// is that identically-configured cells of different campaigns share
+    /// one entry.
+    pub fn put(
+        &self,
+        key: &str,
+        cell: &str,
+        campaign: &str,
+        job: &JobConfig,
+        report: &RunReport,
+    ) -> Result<()> {
         let doc = Json::obj(vec![
             ("schema", Json::from(CELL_SCHEMA)),
             ("key", Json::from(key)),
             ("engine", Json::from(ENGINE_VERSION)),
             ("cell", Json::from(cell)),
+            ("campaign", Json::from(campaign)),
             ("config", job.canonical_json()),
             ("report", report.to_json()),
         ]);
@@ -182,6 +196,7 @@ impl ResultStore {
         &self,
         key: &str,
         cell: &str,
+        campaign: &str,
         job: &JobConfig,
         report: &RunReport,
     ) -> Result<bool> {
@@ -190,8 +205,43 @@ impl ResultStore {
                 return Ok(false);
             }
         }
-        self.put(key, cell, job, report)?;
+        self.put(key, cell, campaign, job, report)?;
         Ok(true)
+    }
+
+    /// Which campaign first computed the stored entry. `None` for misses,
+    /// corrupt/stale entries, and entries predating the provenance field
+    /// (which still serve as cache hits — provenance is informational).
+    pub fn origin(&self, key: &str) -> Option<String> {
+        let src = std::fs::read_to_string(self.path_of(key)).ok()?;
+        let doc = Json::parse(&src).ok()?;
+        if doc.get("schema").and_then(Json::as_str) != Some(CELL_SCHEMA) {
+            return None;
+        }
+        if doc.get("engine").and_then(Json::as_str) != Some(ENGINE_VERSION) {
+            return None;
+        }
+        doc.get("campaign")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+    }
+
+    /// Store-wide provenance census: origin campaign → number of loadable
+    /// entries it first computed. Entries without the provenance field are
+    /// counted under `"(unattributed)"`. Drives `campaign list`'s
+    /// cross-campaign dedup summary.
+    pub fn census(&self) -> std::collections::BTreeMap<String, usize> {
+        let mut out = std::collections::BTreeMap::new();
+        for (key, _, _) in self.entries() {
+            if self.get_any(&key).is_none() {
+                continue; // corrupt or stale-engine: not servable, not counted
+            }
+            let origin = self
+                .origin(&key)
+                .unwrap_or_else(|| "(unattributed)".to_string());
+            *out.entry(origin).or_insert(0) += 1;
+        }
+        out
     }
 
     /// Every entry in the store: `(key, path, mtime)`, unordered.
@@ -346,7 +396,7 @@ mod tests {
         let key = cell_key(&job);
         assert!(!store.contains(&key));
         assert!(store.get(&key).is_none());
-        store.put(&key, "cell_a", &job, &report()).unwrap();
+        store.put(&key, "cell_a", "camp", &job, &report()).unwrap();
         assert!(store.contains(&key));
         let back = store.get(&key).unwrap();
         assert_eq!(back.to_json().to_string(), report().to_json().to_string());
@@ -382,7 +432,7 @@ mod tests {
         let job = JobConfig::default_cnn("fedavg");
         let key = cell_key(&job);
 
-        store.put(&key, "c", &job, &report_of(2, true)).unwrap();
+        store.put(&key, "c", "camp", &job, &report_of(2, true)).unwrap();
         // A rung-stopped prefix is not a complete run ...
         assert!(store.get(&key).is_none());
         assert!(!store.contains(&key));
@@ -392,7 +442,7 @@ mod tests {
         assert!(store.get_at_least(&key, 3).is_none());
 
         // A complete entry satisfies every depth.
-        store.put(&key, "c", &job, &report_of(3, false)).unwrap();
+        store.put(&key, "c", "camp", &job, &report_of(3, false)).unwrap();
         assert!(store.get(&key).is_some());
         assert!(store.get_at_least(&key, 99).is_some());
         std::fs::remove_dir_all(&dir).unwrap();
@@ -404,18 +454,18 @@ mod tests {
         let job = JobConfig::default_cnn("fedavg");
         let key = cell_key(&job);
 
-        assert!(store.put_partial(&key, "c", &job, &report_of(1, true)).unwrap());
+        assert!(store.put_partial(&key, "c", "camp", &job, &report_of(1, true)).unwrap());
         // Same depth again: no write.
-        assert!(!store.put_partial(&key, "c", &job, &report_of(1, true)).unwrap());
+        assert!(!store.put_partial(&key, "c", "camp", &job, &report_of(1, true)).unwrap());
         // Deeper partial: upgrades.
-        assert!(store.put_partial(&key, "c", &job, &report_of(2, true)).unwrap());
+        assert!(store.put_partial(&key, "c", "camp", &job, &report_of(2, true)).unwrap());
         assert_eq!(store.get_at_least(&key, 2).unwrap().rounds_completed(), 2);
         // Shallower partial: refused.
-        assert!(!store.put_partial(&key, "c", &job, &report_of(1, true)).unwrap());
+        assert!(!store.put_partial(&key, "c", "camp", &job, &report_of(1, true)).unwrap());
         assert_eq!(store.get_at_least(&key, 2).unwrap().rounds_completed(), 2);
         // A complete entry is never downgraded by any partial.
-        store.put(&key, "c", &job, &report_of(3, false)).unwrap();
-        assert!(!store.put_partial(&key, "c", &job, &report_of(2, true)).unwrap());
+        store.put(&key, "c", "camp", &job, &report_of(3, false)).unwrap();
+        assert!(!store.put_partial(&key, "c", "camp", &job, &report_of(2, true)).unwrap());
         assert!(store.get(&key).is_some());
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -428,7 +478,7 @@ mod tests {
             let mut job = JobConfig::default_cnn("fedavg");
             job.seed = seed;
             let key = cell_key(&job);
-            store.put(&key, "c", &job, &report()).unwrap();
+            store.put(&key, "c", "camp", &job, &report()).unwrap();
             keys.push(key);
         }
         // Fake crash residue.
@@ -465,12 +515,53 @@ mod tests {
     }
 
     #[test]
+    fn origin_and_census_track_provenance() {
+        let (store, dir) = tmp_store("provenance");
+        let mut keys = Vec::new();
+        for (seed, campaign) in [(1u64, "alpha"), (2, "alpha"), (3, "beta")] {
+            let mut job = JobConfig::default_cnn("fedavg");
+            job.seed = seed;
+            let key = cell_key(&job);
+            store.put(&key, "c", campaign, &job, &report()).unwrap();
+            keys.push(key);
+        }
+        assert_eq!(store.origin(&keys[0]).as_deref(), Some("alpha"));
+        assert_eq!(store.origin(&keys[2]).as_deref(), Some("beta"));
+        assert_eq!(store.origin("ff".repeat(32).as_str()), None);
+
+        // An entry predating the provenance field still serves but reads
+        // unattributed.
+        let mut job = JobConfig::default_cnn("fedavg");
+        job.seed = 4;
+        let legacy_key = cell_key(&job);
+        let doc = Json::obj(vec![
+            ("schema", Json::from(CELL_SCHEMA)),
+            ("key", Json::from(legacy_key.as_str())),
+            ("engine", Json::from(ENGINE_VERSION)),
+            ("cell", Json::from("c")),
+            ("config", job.canonical_json()),
+            ("report", report().to_json()),
+        ]);
+        std::fs::create_dir_all(store.path_of(&legacy_key).parent().unwrap()).unwrap();
+        std::fs::write(store.path_of(&legacy_key), format!("{doc}\n")).unwrap();
+        assert!(store.contains(&legacy_key));
+        assert_eq!(store.origin(&legacy_key), None);
+
+        let census = store.census();
+        assert_eq!(census.get("alpha"), Some(&2));
+        assert_eq!(census.get("beta"), Some(&1));
+        assert_eq!(census.get("(unattributed)"), Some(&1));
+        assert_eq!(census.values().sum::<usize>(), 4);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
     fn entries_lists_keys_with_mtimes() {
         let (store, dir) = tmp_store("entries");
         assert!(store.entries().is_empty());
         let job = JobConfig::default_cnn("fedavg");
         let key = cell_key(&job);
-        store.put(&key, "c", &job, &report()).unwrap();
+        store.put(&key, "c", "camp", &job, &report()).unwrap();
         // A stray non-entry file is ignored.
         std::fs::write(dir.join("README"), "not an entry").unwrap();
         let entries = store.entries();

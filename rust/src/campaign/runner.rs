@@ -200,7 +200,9 @@ pub fn run_with_options(
                     );
                     let t0 = std::time::Instant::now();
                     let outcome = match Orchestrator::new(rt.clone()).run(&cell.job) {
-                        Ok(report) => match store.put(&cell.key, &cell.name, &cell.job, &report) {
+                        Ok(report) => match store
+                            .put(&cell.key, &cell.name, &spec.name, &cell.job, &report)
+                        {
                             Ok(()) => {
                                 println!(
                                     "campaign[{}]: done {} in {:.1}s (acc {:.3})",

@@ -77,6 +77,31 @@ impl Default for ChainConfig {
     }
 }
 
+/// How the client fleet is materialized (README "Cross-device scale").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PopulationMode {
+    /// Every client is a resident [`ClientNode`](crate::node::ClientNode)
+    /// built at scaffold time — memory O(population). The historical
+    /// behaviour and the default.
+    Eager,
+    /// Per-client state (data shard, RNG stream, speed factor, adversary
+    /// membership) is derived lazily from `(seed, name_index)` when a client
+    /// is sampled into a round's cohort — memory O(model + cohort), which is
+    /// what makes 100k–1M-client jobs feasible. Results are bitwise-identical
+    /// to `Eager` (test-enforced contract).
+    Virtual,
+}
+
+impl PopulationMode {
+    pub fn parse(s: &str) -> Result<PopulationMode> {
+        Ok(match s {
+            "eager" => PopulationMode::Eager,
+            "virtual" => PopulationMode::Virtual,
+            other => bail!("job.population must be 'eager' or 'virtual', got '{other}'"),
+        })
+    }
+}
+
 /// A complete FLsim job.
 #[derive(Clone, Debug)]
 pub struct JobConfig {
@@ -125,6 +150,11 @@ pub struct JobConfig {
     /// hashes and byte counts never depend on this knob (see README
     /// "Determinism contract").
     pub parallelism: usize,
+    /// Client fleet materialization: `Eager` (resident nodes, the default)
+    /// or `Virtual` (cohort-lazy, for cross-device scale). Like
+    /// `parallelism`, this knob is result-invariant and therefore excluded
+    /// from [`JobConfig::canonical_json`].
+    pub population: PopulationMode,
 }
 
 impl JobConfig {
@@ -161,6 +191,7 @@ impl JobConfig {
             faults: FaultsConfig::default(),
             robust_agg: RobustAggConfig::default(),
             parallelism: 1,
+            population: PopulationMode::Eager,
             strategy,
         }
     }
@@ -316,6 +347,10 @@ impl JobConfig {
             n if n < 0 => bail!("job.parallelism must be >= 0 (0 = auto), got {n}"),
             n => n as usize,
         };
+        let population = match get_str(job, "population") {
+            Some(s) => PopulationMode::parse(&s)?,
+            None => PopulationMode::Eager,
+        };
 
         let cfg = JobConfig {
             name,
@@ -340,6 +375,7 @@ impl JobConfig {
             faults,
             robust_agg,
             parallelism,
+            population,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -351,9 +387,11 @@ impl JobConfig {
     /// the config was constructed.
     ///
     /// Two deliberate choices about what the key covers:
-    /// * `parallelism` is **excluded**: by the determinism contract (README)
-    ///   any worker count produces bitwise-identical results, so a cached
-    ///   cell is valid at every parallelism level and campaign schedule.
+    /// * `parallelism` and `population` are **excluded**: by the determinism
+    ///   contract (README) any worker count — and either fleet
+    ///   materialization mode — produces bitwise-identical results, so a
+    ///   cached cell is valid at every parallelism level, campaign schedule,
+    ///   and population mode.
     /// * `name` is **included**: the stored [`RunReport`]'s label must match
     ///   the cell name for resumed campaign reports to be byte-identical,
     ///   so a renamed-but-otherwise-identical cell re-runs rather than
@@ -494,12 +532,51 @@ impl JobConfig {
         if self.train.local_epochs == 0 {
             bail!("local_epochs must be >= 1");
         }
-        if self.dataset.n < self.n_clients {
+        // Eager mode gives every client a non-empty shard up front. Virtual
+        // mode caps the shard count at the training-set size instead (clients
+        // beyond it share shards), so a 60k-example dataset can back a
+        // 1M-client population.
+        if self.population == PopulationMode::Eager && self.dataset.n < self.n_clients {
             bail!(
-                "dataset of {} examples cannot cover {} clients",
+                "dataset of {} examples cannot cover {} clients \
+                 (use `population: virtual` for oversubscribed fleets)",
                 self.dataset.n,
                 self.n_clients
             );
+        }
+        if self.population == PopulationMode::Virtual {
+            if !matches!(self.topology, TopologyKind::ClientServer) {
+                bail!(
+                    "population: virtual requires the client_server topology, got {}",
+                    self.topology.name()
+                );
+            }
+            if self.strategy.mode() != crate::strategy::StrategyMode::Global {
+                bail!(
+                    "population: virtual requires a global-mode strategy, got '{}'",
+                    self.strategy.name()
+                );
+            }
+            if self.n_clients > u32::MAX as usize {
+                bail!(
+                    "population: virtual supports at most {} clients, got {}",
+                    u32::MAX,
+                    self.n_clients
+                );
+            }
+            // At cross-device scale the cohort — not the fleet — must stay
+            // bounded: ceil(fraction * n) is what every round materializes.
+            let cohort = (self.client_fraction * self.n_clients as f64).ceil();
+            if self.n_clients > 100_000 && cohort > 100_000.0 {
+                bail!(
+                    "population: virtual with {} clients samples a {}-client cohort \
+                     per round (client_fraction {}); lower client_fraction so the \
+                     materialized cohort stays bounded",
+                    self.n_clients,
+                    cohort as u64,
+                    self.client_fraction
+                );
+            }
         }
         for w in &self.consensus.malicious_workers {
             if !w.starts_with("worker_") && !w.starts_with("peer_") {
@@ -897,6 +974,54 @@ aggregation:
         assert_ne!(
             big_a.canonical_json().to_string(),
             big_b.canonical_json().to_string()
+        );
+    }
+
+    #[test]
+    fn population_mode_parses_and_validates() {
+        // Default is eager.
+        let j = JobConfig::default_cnn("fedavg");
+        assert_eq!(j.population, PopulationMode::Eager);
+        let sample = SAMPLE.replace("  parallelism: 4", "  parallelism: 4\n  population: virtual");
+        let j = JobConfig::from_yaml_str(&sample).unwrap();
+        assert_eq!(j.population, PopulationMode::Virtual);
+        let bad = SAMPLE.replace("  parallelism: 4", "  parallelism: 4\n  population: ghostly");
+        assert!(JobConfig::from_yaml_str(&bad).is_err());
+
+        // Virtual relaxes the dataset-coverage rule (shards are shared)...
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.n_clients = 10_000;
+        assert!(j.validate().is_err(), "eager: 5000 examples, 10k clients");
+        j.population = PopulationMode::Virtual;
+        j.client_fraction = 0.001;
+        j.validate().unwrap();
+        // ...but restricts the orchestration shape to the standard
+        // client_server round loop.
+        let mut j = JobConfig::default_cnn("fedstellar");
+        j.population = PopulationMode::Virtual;
+        assert!(j.validate().is_err(), "virtual + decentralized");
+        let mut j = JobConfig::default_cnn("flhc");
+        j.population = PopulationMode::Virtual;
+        assert!(j.validate().is_err(), "virtual + clustered");
+        // Unbounded cohorts at scale are rejected up front.
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.population = PopulationMode::Virtual;
+        j.n_clients = 1_000_000;
+        j.client_fraction = 1.0;
+        assert!(j.validate().is_err(), "1M-client full-participation cohort");
+        j.client_fraction = 0.0001;
+        j.validate().unwrap();
+    }
+
+    #[test]
+    fn canonical_json_excludes_population_mode() {
+        let eager = JobConfig::default_cnn("fedavg");
+        let mut virt = eager.clone();
+        virt.population = PopulationMode::Virtual;
+        // Same cache key: the modes are contractually bitwise-identical.
+        assert_eq!(
+            eager.canonical_json().to_string(),
+            virt.canonical_json().to_string()
         );
     }
 

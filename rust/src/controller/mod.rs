@@ -8,4 +8,4 @@ pub mod sync;
 
 pub use cancel::CancelToken;
 pub use phases::{NodeStage, ProcessPhase};
-pub use sync::{FaultPlan, LogicController};
+pub use sync::{ChurnSpec, FaultPlan, LogicController};

@@ -14,6 +14,54 @@ use anyhow::{bail, Result};
 
 use crate::controller::phases::{NodeStage, ProcessPhase};
 use crate::info;
+use crate::util::rng::Rng;
+
+/// Stochastic churn evaluated *lazily*: the exact per-client draw sequence
+/// the eager `materialize_faults` loop commits to a dense [`FaultPlan`],
+/// replayed on demand for whichever client is being queried. This is what
+/// lets a 1M-client virtual fleet carry churn without 1M × rounds resident
+/// drop entries (test-enforced identical to the dense plan).
+#[derive(Clone, Debug)]
+pub struct ChurnSpec {
+    /// The job seed the per-client churn streams derive from.
+    pub seed: u64,
+    /// Probability a client is up in any churn round.
+    pub availability: f64,
+    /// First round churn applies to.
+    pub from_round: u64,
+    /// Last round churn applies to (the job's round count).
+    pub rounds: u64,
+    /// Fleet size: only canonical `client_{i}` names with `i < n_clients`
+    /// draw churn (the eager loop only draws for fleet clients).
+    pub n_clients: u64,
+}
+
+impl ChurnSpec {
+    fn is_down(&self, node: &str, round: u64) -> bool {
+        if round < self.from_round || round > self.rounds {
+            return false;
+        }
+        let digits = match node.strip_prefix("client_") {
+            Some(d) => d,
+            None => return false,
+        };
+        if digits.len() > 1 && digits.starts_with('0') {
+            return false;
+        }
+        let id = match digits.parse::<u64>() {
+            Ok(i) if i < self.n_clients => i,
+            _ => return false,
+        };
+        // Replay the client's stream up to this round: the eager loop draws
+        // one f64 per round in from_round..=rounds, in order.
+        let mut rng = Rng::seed_from(self.seed).derive("churn", id);
+        let mut draw = 0.0;
+        for _ in self.from_round..=round {
+            draw = rng.next_f64();
+        }
+        draw >= self.availability
+    }
+}
 
 /// Which nodes fail (drop out) in which rounds.
 #[derive(Clone, Debug, Default)]
@@ -23,6 +71,9 @@ pub struct FaultPlan {
     drops: BTreeMap<String, BTreeSet<u64>>,
     /// Nodes dead from a given round onward (crash, not a transient drop).
     crashes: BTreeMap<String, u64>,
+    /// Churn evaluated lazily per query instead of densely materialized
+    /// (cross-device scale; `None` for eager plans).
+    churn: Option<ChurnSpec>,
 }
 
 impl FaultPlan {
@@ -46,6 +97,12 @@ impl FaultPlan {
         self
     }
 
+    /// Attach lazily-evaluated churn (replaces any previous spec).
+    pub fn with_churn(mut self, spec: ChurnSpec) -> FaultPlan {
+        self.churn = Some(spec);
+        self
+    }
+
     /// Fold another plan's events into this one.
     pub fn merge(&mut self, other: FaultPlan) {
         for (node, rounds) in other.drops {
@@ -56,6 +113,9 @@ impl FaultPlan {
                 .entry(node)
                 .and_modify(|r| *r = (*r).min(round))
                 .or_insert(round);
+        }
+        if other.churn.is_some() {
+            self.churn = other.churn;
         }
     }
 
@@ -69,10 +129,15 @@ impl FaultPlan {
                 .get(node)
                 .map(|&r| round >= r)
                 .unwrap_or(false)
+            || self
+                .churn
+                .as_ref()
+                .map(|c| c.is_down(node, round))
+                .unwrap_or(false)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.drops.is_empty() && self.crashes.is_empty()
+        self.drops.is_empty() && self.crashes.is_empty() && self.churn.is_none()
     }
 }
 
@@ -131,6 +196,34 @@ impl LogicController {
     /// Down this round: faulted by the plan, or late past the deadline.
     fn is_down(&self, node: &str, round: u64) -> bool {
         self.fault_plan.is_down(node, round) || self.is_late(node, round)
+    }
+
+    /// Up this round — the borrowed-key complement of [`Self::alive`], for
+    /// callers that filter a fleet without allocating the name list.
+    pub fn is_alive(&self, node: &str, round: u64) -> bool {
+        !self.is_down(node, round)
+    }
+
+    /// Whether *any* node could be down in `round` (non-empty fault plan or
+    /// a deadline straggler marked this round). When `false`, samplers may
+    /// skip the per-name liveness scan outright — the fast path that keeps
+    /// 1M-client cohort sampling free of per-client name formatting.
+    pub fn may_have_downtime(&self, round: u64) -> bool {
+        !self.fault_plan.is_empty() || self.late.values().any(|&r| r == round)
+    }
+
+    /// Register a node mid-run (virtual-population cohort materialization:
+    /// the controller starts with only the resident worker tier, and each
+    /// round's sampled clients are admitted before the training barrier).
+    pub fn admit(&mut self, node: &str, stage: NodeStage) {
+        self.stages.insert(node.to_string(), stage);
+    }
+
+    /// Drop a node's stage entry (cohort eviction after a round). The node
+    /// can be re-admitted later; fault-plan and lateness state are keyed
+    /// separately and survive.
+    pub fn forget(&mut self, node: &str) {
+        self.stages.remove(node);
     }
 
     pub fn phase(&self) -> ProcessPhase {
@@ -307,6 +400,45 @@ mod tests {
         assert!(a.is_down("client_1", 4) && a.is_down("client_1", 10));
         assert!(!a.is_down("client_1", 3));
         assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn lazy_churn_is_windowed_and_client_scoped() {
+        let plan = FaultPlan::none().with_churn(ChurnSpec {
+            seed: 7,
+            availability: 0.0, // every draw is a drop inside the window
+            from_round: 3,
+            rounds: 6,
+            n_clients: 4,
+        });
+        assert!(!plan.is_empty());
+        assert!(!plan.is_down("client_0", 2), "before the window");
+        assert!(plan.is_down("client_0", 3));
+        assert!(plan.is_down("client_3", 6));
+        assert!(!plan.is_down("client_0", 7), "after the window");
+        // Non-fleet names never draw churn.
+        assert!(!plan.is_down("worker_0", 4));
+        assert!(!plan.is_down("client_4", 4));
+        assert!(!plan.is_down("client_01", 4));
+        // merge carries the spec across.
+        let mut merged = FaultPlan::none().drop_in_round("client_1", 1);
+        merged.merge(plan);
+        assert!(merged.is_down("client_0", 4) && merged.is_down("client_1", 1));
+    }
+
+    #[test]
+    fn admit_and_forget_cycle_cohorts() {
+        let mut lc = LogicController::new(&nodes(&["worker_0"]));
+        assert!(lc.update_stage("client_5", NodeStage::Busy).is_err());
+        lc.admit("client_5", NodeStage::ReadyWithDataset);
+        assert_eq!(lc.stage_of("client_5"), NodeStage::ReadyWithDataset);
+        lc.update_stage("client_5", NodeStage::Busy).unwrap();
+        lc.forget("client_5");
+        assert!(lc.update_stage("client_5", NodeStage::Done).is_err());
+        // Liveness is independent of admission.
+        lc.fault_plan = FaultPlan::none().drop_in_round("client_5", 2);
+        assert!(!lc.is_alive("client_5", 2));
+        assert!(lc.is_alive("client_5", 3));
     }
 
     #[test]

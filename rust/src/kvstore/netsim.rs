@@ -18,7 +18,7 @@
 //! through the Logic Controller's barrier timeout arm (Algorithm 1's
 //! emergent straggler path).
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use crate::topology::graph::{LinkClass, Overlay};
 
@@ -129,6 +129,13 @@ pub struct NetSim {
     /// two borrowed lookups, no allocation — this sits on the per-delivery
     /// metering hot path).
     route_cache: BTreeMap<String, BTreeMap<String, RouteCost>>,
+    /// Cross-device scale fast path: `(n_clients, worker names)` of a
+    /// virtual star. Any `client_{i}` (i < n) ↔ worker pair is a single
+    /// EDGE hop priced closed-form — exactly what BFS over the eager star's
+    /// O(N·workers) edge set would return, without materializing it (a
+    /// 1-worker virtual overlay has *zero* edges, so the worker set must be
+    /// carried here, not inferred from the adjacency).
+    virtual_star: Option<(u64, BTreeSet<String>)>,
     per_node_secs: BTreeMap<String, f64>,
     total_secs: f64,
     total_bytes: u64,
@@ -142,6 +149,7 @@ impl NetSim {
             adj: BTreeMap::new(),
             overrides: BTreeMap::new(),
             route_cache: BTreeMap::new(),
+            virtual_star: None,
             per_node_secs: BTreeMap::new(),
             total_secs: 0.0,
             total_bytes: 0,
@@ -176,6 +184,16 @@ impl NetSim {
             ns.sort();
             ns.dedup();
         }
+    }
+
+    /// Arm the virtual-star fast path: price any `client_{i}` (i <
+    /// `n_clients`) ↔ worker transfer as one EDGE uplink hop without
+    /// consulting the overlay adjacency. Pair with
+    /// [`Overlay::client_server_virtual`], whose client tier is not
+    /// materialized as edges.
+    pub fn set_virtual_star(&mut self, n_clients: u64, workers: BTreeSet<String>) {
+        self.virtual_star = Some((n_clients, workers));
+        self.route_cache.clear();
     }
 
     pub fn set_link(&mut self, src: &str, dst: &str, link: LinkModel) {
@@ -226,6 +244,9 @@ impl NetSim {
                 return RouteCost::from_link(*l);
             }
         }
+        if let Some(c) = self.virtual_star_cost(src, dst) {
+            return c;
+        }
         if let Some(c) = self.route_cache.get(src).and_then(|m| m.get(dst)) {
             return *c;
         }
@@ -246,6 +267,28 @@ impl NetSim {
             .or_default()
             .insert(dst.to_string(), cost);
         cost
+    }
+
+    /// One-EDGE-hop cost for a virtual-star client↔worker pair (either
+    /// direction); `None` for every other pair, which falls through to the
+    /// routed/cached path. Off-star endpoints (e.g. `logic_controller`)
+    /// keep the same default-LAN fallback as the eager overlay gives them.
+    fn virtual_star_cost(&self, src: &str, dst: &str) -> Option<RouteCost> {
+        let (n, workers) = self.virtual_star.as_ref()?;
+        let is_client = |name: &str| {
+            let digits = match name.strip_prefix("client_") {
+                Some(d) => d,
+                None => return false,
+            };
+            // Canonical names only: "client_007" is not a fleet member.
+            if digits.len() > 1 && digits.starts_with('0') {
+                return false;
+            }
+            digits.parse::<u64>().map(|i| i < *n).unwrap_or(false)
+        };
+        let hit = (is_client(src) && workers.contains(dst))
+            || (is_client(dst) && workers.contains(src));
+        hit.then(|| RouteCost::from_link(self.policy.edge))
     }
 
     /// Price a transfer without recording it (pure: used for critical-path
@@ -372,6 +415,41 @@ mod tests {
         let up = net.price("client_0", "worker_0", bytes);
         assert!((up - slow_edge.transfer_secs(bytes)).abs() < 1e-12);
         assert!(up > LinkModel::EDGE.transfer_secs(bytes));
+    }
+
+    #[test]
+    fn virtual_star_prices_like_eager_star() {
+        let bytes = 1u64 << 20;
+        // Eager reference: routed over the materialized star.
+        let mut eager = NetSim::with_policy(LinkPolicy::default());
+        eager.attach_overlay(&Overlay::client_server(4, 2));
+        // Virtual: zero client edges, closed-form fast path.
+        let mut virt = NetSim::with_policy(LinkPolicy::default());
+        let overlay = Overlay::client_server_virtual(4, 2);
+        virt.attach_overlay(&overlay);
+        virt.set_virtual_star(4, overlay.workers().into_iter().collect());
+        for (src, dst) in [
+            ("client_0", "worker_0"),
+            ("worker_1", "client_3"),
+            ("worker_0", "worker_1"),
+            ("logic_controller", "client_0"),
+            ("client_2", "client_2"),
+        ] {
+            assert_eq!(
+                eager.price(src, dst, bytes),
+                virt.price(src, dst, bytes),
+                "{src}->{dst}"
+            );
+        }
+        // Out-of-fleet and non-canonical names are not star members.
+        assert_eq!(
+            virt.price("client_4", "worker_0", bytes),
+            LinkModel::LAN.transfer_secs(bytes)
+        );
+        assert_eq!(
+            virt.price("client_01", "worker_0", bytes),
+            LinkModel::LAN.transfer_secs(bytes)
+        );
     }
 
     #[test]

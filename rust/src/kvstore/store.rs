@@ -16,7 +16,8 @@
 //! network cost model is unchanged).
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
@@ -97,40 +98,116 @@ pub struct Traffic {
     pub msgs_in: u64,
 }
 
-/// The broker. Mutation is serialized by the logic controller (publishes and
-/// metered fetches are committed in deterministic node order even when
-/// training runs on a worker pool), so the store needs no locking (RQ6).
+/// FNV-1a — the shard router (cheap, stable, and already the hash the RNG
+/// purpose-derivation uses elsewhere in the codebase).
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 #[derive(Debug, Default)]
-pub struct KvStore {
+struct TopicShard {
     topics: BTreeMap<String, Vec<Message>>,
-    traffic: BTreeMap<String, Traffic>,
-    total_bytes: u64,
+}
+
+#[derive(Debug, Default)]
+struct TrafficShard {
+    nodes: BTreeMap<String, Traffic>,
+}
+
+/// The broker: topics are partitioned into independently-locked shards
+/// (routed by topic-name hash), per-node traffic accounting into its own
+/// shard set (routed by node name), and the global byte counter is atomic —
+/// so 10k+ concurrent publishes from a worker pool contend only when they
+/// hit the same shard, never on one store-wide lock.
+///
+/// Metering is unchanged from the single-map store: every publish charges
+/// the sender's egress, every metered fetch the reader's ingress, and
+/// `total_bytes` is their exact sum (u64 adds commute, so totals are
+/// schedule-independent — the RQ6 contract holds under any interleaving of
+/// commutative meter updates; the orchestrator's serial commit phases keep
+/// message *ordering* deterministic on top).
+#[derive(Debug)]
+pub struct KvStore {
+    topic_shards: Vec<Mutex<TopicShard>>,
+    traffic_shards: Vec<Mutex<TrafficShard>>,
+    total_bytes: AtomicU64,
+}
+
+impl Default for KvStore {
+    fn default() -> KvStore {
+        KvStore::new()
+    }
 }
 
 impl KvStore {
+    /// Default shard count: enough that a worker pool on any reasonable
+    /// host rarely collides, cheap enough to scan for the aggregate views.
+    const DEFAULT_SHARDS: usize = 64;
+
     pub fn new() -> KvStore {
-        KvStore::default()
+        KvStore::with_shards(KvStore::DEFAULT_SHARDS)
     }
 
-    /// Publish a message; charged to the sender's egress.
-    pub fn publish(&mut self, topic: &str, sender: &str, round: u64, payload: Payload) {
+    /// A store with an explicit shard count (≥ 1); `new` picks the default.
+    pub fn with_shards(n_shards: usize) -> KvStore {
+        let n = n_shards.max(1);
+        KvStore {
+            topic_shards: (0..n).map(|_| Mutex::new(TopicShard::default())).collect(),
+            traffic_shards: (0..n).map(|_| Mutex::new(TrafficShard::default())).collect(),
+            total_bytes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.topic_shards.len()
+    }
+
+    fn topic_shard(&self, topic: &str) -> &Mutex<TopicShard> {
+        &self.topic_shards[(fnv1a(topic) % self.topic_shards.len() as u64) as usize]
+    }
+
+    fn traffic_shard(&self, node: &str) -> &Mutex<TrafficShard> {
+        &self.traffic_shards[(fnv1a(node) % self.traffic_shards.len() as u64) as usize]
+    }
+
+    /// Publish a message; charged to the sender's egress. Takes `&self`:
+    /// concurrent publishes to different topic shards proceed in parallel.
+    pub fn publish(&self, topic: &str, sender: &str, round: u64, payload: Payload) {
         let bytes = payload.wire_bytes();
-        let t = self.traffic.entry(sender.to_string()).or_default();
-        t.bytes_out += bytes;
-        t.msgs_out += 1;
-        self.total_bytes += bytes;
-        self.topics.entry(topic.to_string()).or_default().push(Message {
+        {
+            let mut shard = self.traffic_shard(sender).lock().expect("traffic shard");
+            let t = shard.nodes.entry(sender.to_string()).or_default();
+            t.bytes_out += bytes;
+            t.msgs_out += 1;
+        }
+        self.total_bytes.fetch_add(bytes, Ordering::Relaxed);
+        let msg = Message {
             topic: topic.to_string(),
             sender: sender.to_string(),
             round,
             payload,
-        });
+        };
+        self.topic_shard(topic)
+            .lock()
+            .expect("topic shard")
+            .topics
+            .entry(topic.to_string())
+            .or_default()
+            .push(msg);
     }
 
     /// Fetch the latest message on a topic (charged to the reader's ingress).
     /// Cloning the message clones the payload handle, not the floats.
-    pub fn fetch_latest(&mut self, topic: &str, reader: &str) -> Result<Message> {
+    pub fn fetch_latest(&self, topic: &str, reader: &str) -> Result<Message> {
         let msg = self
+            .topic_shard(topic)
+            .lock()
+            .expect("topic shard")
             .topics
             .get(topic)
             .and_then(|v| v.last())
@@ -141,8 +218,11 @@ impl KvStore {
     }
 
     /// Fetch all messages on a topic for a given round.
-    pub fn fetch_round(&mut self, topic: &str, round: u64, reader: &str) -> Vec<Message> {
+    pub fn fetch_round(&self, topic: &str, round: u64, reader: &str) -> Vec<Message> {
         let msgs: Vec<Message> = self
+            .topic_shard(topic)
+            .lock()
+            .expect("topic shard")
             .topics
             .get(topic)
             .map(|v| v.iter().filter(|m| m.round == round).cloned().collect())
@@ -155,33 +235,62 @@ impl KvStore {
 
     /// Peek without traffic accounting (controller-internal bookkeeping).
     pub fn peek_round(&self, topic: &str, round: u64) -> usize {
-        self.topics
+        self.topic_shard(topic)
+            .lock()
+            .expect("topic shard")
+            .topics
             .get(topic)
             .map(|v| v.iter().filter(|m| m.round == round).count())
             .unwrap_or(0)
     }
 
     pub fn topic_len(&self, topic: &str) -> usize {
-        self.topics.get(topic).map(Vec::len).unwrap_or(0)
+        self.topic_shard(topic)
+            .lock()
+            .expect("topic shard")
+            .topics
+            .get(topic)
+            .map(Vec::len)
+            .unwrap_or(0)
     }
 
-    /// Number of live (non-empty) topics.
+    /// Number of live (non-empty) topics (scans every shard).
     pub fn topic_count(&self) -> usize {
-        self.topics.len()
+        self.topic_shards
+            .iter()
+            .map(|s| s.lock().expect("topic shard").topics.len())
+            .sum()
     }
 
     /// Total retained messages across all topics.
     pub fn message_count(&self) -> usize {
-        self.topics.values().map(Vec::len).sum()
+        self.topic_shards
+            .iter()
+            .map(|s| {
+                s.lock()
+                    .expect("topic shard")
+                    .topics
+                    .values()
+                    .map(Vec::len)
+                    .sum::<usize>()
+            })
+            .sum()
     }
 
     /// Retained payload volume in bytes (what the broker actually holds —
     /// the memory-boundedness metric for long runs).
     pub fn retained_bytes(&self) -> u64 {
-        self.topics
-            .values()
-            .flat_map(|v| v.iter())
-            .map(|m| m.payload.wire_bytes())
+        self.topic_shards
+            .iter()
+            .map(|s| {
+                s.lock()
+                    .expect("topic shard")
+                    .topics
+                    .values()
+                    .flat_map(|v| v.iter())
+                    .map(|m| m.payload.wire_bytes())
+                    .sum::<u64>()
+            })
             .sum()
     }
 
@@ -191,37 +300,48 @@ impl KvStore {
     /// Topics drained to empty are removed outright and surviving buffers
     /// shrink to fit — per-peer/per-cluster topic names (`peer_params/x`)
     /// otherwise accumulate empty `Vec`s (and their capacity) forever.
-    pub fn truncate_before(&mut self, keep_from_round: u64) {
-        self.topics.retain(|_, v| {
-            v.retain(|m| m.round >= keep_from_round);
-            if v.is_empty() {
-                false
-            } else {
-                v.shrink_to_fit();
-                true
-            }
-        });
+    pub fn truncate_before(&self, keep_from_round: u64) {
+        for shard in &self.topic_shards {
+            shard.lock().expect("topic shard").topics.retain(|_, v| {
+                v.retain(|m| m.round >= keep_from_round);
+                if v.is_empty() {
+                    false
+                } else {
+                    v.shrink_to_fit();
+                    true
+                }
+            });
+        }
     }
 
-    fn charge_read(&mut self, reader: &str, msg: &Message) {
+    fn charge_read(&self, reader: &str, msg: &Message) {
         let bytes = msg.payload.wire_bytes();
-        let t = self.traffic.entry(reader.to_string()).or_default();
-        t.bytes_in += bytes;
-        t.msgs_in += 1;
-        self.total_bytes += bytes;
+        {
+            let mut shard = self.traffic_shard(reader).lock().expect("traffic shard");
+            let t = shard.nodes.entry(reader.to_string()).or_default();
+            t.bytes_in += bytes;
+            t.msgs_in += 1;
+        }
+        self.total_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
     pub fn traffic(&self, node: &str) -> Traffic {
-        self.traffic.get(node).cloned().unwrap_or_default()
+        self.traffic_shard(node)
+            .lock()
+            .expect("traffic shard")
+            .nodes
+            .get(node)
+            .cloned()
+            .unwrap_or_default()
     }
 
     pub fn total_bytes(&self) -> u64 {
-        self.total_bytes
+        self.total_bytes.load(Ordering::Relaxed)
     }
 
     /// Sum of all node egress+ingress since `mark` (caller keeps the mark).
     pub fn bytes_since(&self, mark: u64) -> u64 {
-        self.total_bytes - mark
+        self.total_bytes() - mark
     }
 }
 
@@ -231,7 +351,7 @@ mod tests {
 
     #[test]
     fn publish_fetch_roundtrip() {
-        let mut kv = KvStore::new();
+        let kv = KvStore::new();
         kv.publish("global_model", "worker_0", 1, Payload::params(vec![1.0, 2.0]));
         let m = kv.fetch_latest("global_model", "client_3").unwrap();
         assert_eq!(m.payload.as_params().unwrap(), &[1.0, 2.0]);
@@ -240,7 +360,7 @@ mod tests {
 
     #[test]
     fn fetch_round_filters() {
-        let mut kv = KvStore::new();
+        let kv = KvStore::new();
         kv.publish("local/c0", "c0", 1, Payload::Scalar(1.0));
         kv.publish("local/c0", "c0", 2, Payload::Scalar(2.0));
         kv.publish("local/c0", "c0", 2, Payload::Scalar(3.0));
@@ -250,7 +370,7 @@ mod tests {
 
     #[test]
     fn traffic_accounting() {
-        let mut kv = KvStore::new();
+        let kv = KvStore::new();
         kv.publish("t", "alice", 0, Payload::params(vec![0.0; 100]));
         let _ = kv.fetch_latest("t", "bob").unwrap();
         let a = kv.traffic("alice");
@@ -263,14 +383,14 @@ mod tests {
 
     #[test]
     fn missing_topic_errors() {
-        let mut kv = KvStore::new();
+        let kv = KvStore::new();
         assert!(kv.fetch_latest("nope", "x").is_err());
     }
 
     #[test]
     fn fetch_is_zero_copy() {
         let params: Arc<[f32]> = vec![0.5f32; 1024].into();
-        let mut kv = KvStore::new();
+        let kv = KvStore::new();
         kv.publish("t", "a", 1, Payload::Params(params.clone()));
         let m1 = kv.fetch_latest("t", "b").unwrap();
         let m2 = kv.fetch_latest("t", "c").unwrap();
@@ -286,7 +406,7 @@ mod tests {
 
     #[test]
     fn truncate_bounds_memory() {
-        let mut kv = KvStore::new();
+        let kv = KvStore::new();
         for r in 0..10 {
             kv.publish("t", "a", r, Payload::Scalar(r as f64));
         }
@@ -296,7 +416,7 @@ mod tests {
 
     #[test]
     fn truncate_removes_dead_topics_and_bounds_long_runs() {
-        let mut kv = KvStore::new();
+        let kv = KvStore::new();
         // Long simulated run over per-peer topics (the decentralized flows'
         // naming pattern): without topic reclamation this leaks one Vec per
         // peer per round forever.
@@ -326,6 +446,72 @@ mod tests {
         assert_eq!(kv.retained_bytes(), 0);
         // Accounting is unaffected by truncation.
         assert!(kv.total_bytes() > 0);
+    }
+
+    #[test]
+    fn concurrent_publishes_keep_exact_metering_totals() {
+        // 10k+ publishes from a thread pool: shard locks allow them to
+        // proceed concurrently, and every metering total must still come
+        // out exact (commutative u64 adds — no updates lost or doubled).
+        let kv = KvStore::new();
+        let threads = 8usize;
+        let per_thread = 1500usize;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let kv = &kv;
+                s.spawn(move || {
+                    for i in 0..per_thread {
+                        let sender = format!("client_{}", t * per_thread + i);
+                        let topic = format!("client_params/{sender}");
+                        kv.publish(&topic, &sender, 1, Payload::params(vec![t as f32; 16]));
+                    }
+                });
+            }
+        });
+        let n = (threads * per_thread) as u64;
+        let per_msg = 64 + 16 * 4;
+        assert_eq!(kv.total_bytes(), n * per_msg);
+        assert_eq!(kv.message_count(), n as usize);
+        assert_eq!(kv.topic_count(), n as usize);
+        let t0 = kv.traffic("client_0");
+        assert_eq!(t0.bytes_out, per_msg);
+        assert_eq!(t0.msgs_out, 1);
+        // Reads across shards still see every message.
+        assert_eq!(kv.fetch_round("client_params/client_0", 1, "w0").len(), 1);
+        kv.truncate_before(2);
+        assert_eq!(kv.message_count(), 0);
+        assert_eq!(kv.topic_count(), 0);
+    }
+
+    #[test]
+    fn interleaved_publishes_to_one_topic_retain_all_messages() {
+        // Same-topic publishes serialize on that topic's shard lock; the
+        // retained log holds all of them (ordering across threads is the
+        // scheduler's — the orchestrator's serial commit phase is what
+        // fixes order in real runs).
+        let kv = KvStore::with_shards(4);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let kv = &kv;
+                s.spawn(move || {
+                    for i in 0..100u64 {
+                        kv.publish("agg_votes", &format!("w{t}"), i, Payload::Scalar(i as f64));
+                    }
+                });
+            }
+        });
+        assert_eq!(kv.topic_len("agg_votes"), 400);
+        assert_eq!(kv.peek_round("agg_votes", 7), 4);
+    }
+
+    #[test]
+    fn single_shard_store_behaves_identically() {
+        let kv = KvStore::with_shards(1);
+        kv.publish("a", "x", 1, Payload::Scalar(1.0));
+        kv.publish("b", "y", 1, Payload::Text("v".into()));
+        assert_eq!(kv.shard_count(), 1);
+        assert_eq!(kv.topic_count(), 2);
+        assert_eq!(kv.total_bytes(), (64 + 8) + (64 + 1));
     }
 
     #[test]

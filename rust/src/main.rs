@@ -268,11 +268,21 @@ fn campaign_cmd(sub: &str, args: &Args, artifacts: &str) -> Result<()> {
                 cells.len(),
                 store.dir().display()
             );
+            let mut cached = 0usize;
+            let mut shared: std::collections::BTreeMap<String, usize> =
+                std::collections::BTreeMap::new();
             for (i, c) in cells.iter().enumerate() {
                 // Complete entry = cached; rung-stopped prefix = partial
                 // (a full run would re-execute, but an asha rung can hit).
                 let status = if store.contains(&c.key) {
-                    "cached".to_string()
+                    cached += 1;
+                    match store.origin(&c.key) {
+                        Some(origin) if origin != spec.name => {
+                            *shared.entry(origin.clone()).or_insert(0) += 1;
+                            format!("cached (from '{origin}')")
+                        }
+                        _ => "cached".to_string(),
+                    }
                 } else if let Some(p) = store.get_at_least(&c.key, 1) {
                     format!("partial({} rounds)", p.rounds_completed())
                 } else {
@@ -288,6 +298,26 @@ fn campaign_cmd(sub: &str, args: &Args, artifacts: &str) -> Result<()> {
                     c.job.seed,
                     status
                 );
+            }
+            // Cross-campaign dedup: content addressing means a cell another
+            // campaign already computed is a free cache hit here.
+            let deduped: usize = shared.values().sum();
+            println!(
+                "cache: {cached} of {} cells cached, {deduped} first computed by other campaigns",
+                cells.len()
+            );
+            for (origin, n) in &shared {
+                println!("  {n} shared with campaign '{origin}'");
+            }
+            let census = store.census();
+            let total: usize = census.values().sum();
+            println!(
+                "store: {total} entries across {} campaign(s){}",
+                census.len(),
+                if census.is_empty() { "" } else { ":" }
+            );
+            for (origin, n) in &census {
+                println!("  {n:>5}  {origin}");
             }
             Ok(())
         }

@@ -48,20 +48,40 @@ fn cpu_secs() -> f64 {
 }
 
 fn rss_mib() -> f64 {
+    status_kb("VmRSS:") as f64 / 1024.0
+}
+
+/// One `Vm*` field of `/proc/self/status`, in kB (0 off-Linux / on parse
+/// failure — same degradation as the other probes).
+fn status_kb(prefix: &str) -> u64 {
     let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
-        return 0.0;
+        return 0;
     };
     for line in status.lines() {
-        if let Some(rest) = line.strip_prefix("VmRSS:") {
-            let kb = rest
+        if let Some(rest) = line.strip_prefix(prefix) {
+            return rest
                 .split_whitespace()
                 .next()
-                .and_then(|s| s.parse::<f64>().ok())
-                .unwrap_or(0.0);
-            return kb / 1024.0;
+                .and_then(|s| s.parse::<u64>().ok())
+                .unwrap_or(0);
         }
     }
-    0.0
+    0
+}
+
+/// Current resident set size in bytes (`VmRSS`). Deltas of this probe bound
+/// the *incremental* footprint of a scaffold or run, which is what the
+/// scale tests assert ceilings on.
+pub fn rss_bytes() -> u64 {
+    status_kb("VmRSS:") * 1024
+}
+
+/// Peak resident set size in bytes (`VmHWM`): the process high-water mark.
+/// Monotone over the process lifetime — comparable across runs of the same
+/// bench binary, which is why the `mem_peak_bytes` series samples it at
+/// fixed points in the bench sequence.
+pub fn peak_rss_bytes() -> u64 {
+    status_kb("VmHWM:") * 1024
 }
 
 /// CPU utilisation (%) between two snapshots over `wall_secs`.
@@ -81,6 +101,18 @@ mod tests {
         let s = snapshot();
         assert!(s.cpu_secs >= 0.0);
         assert!(s.rss_mib > 1.0, "rss {} MiB", s.rss_mib);
+    }
+
+    #[test]
+    fn peak_rss_is_a_high_water_mark() {
+        let rss = rss_bytes();
+        let peak = peak_rss_bytes();
+        assert!(rss > 1 << 20, "rss {rss} bytes");
+        assert!(peak >= rss, "peak {peak} < current {rss}");
+        // Touch a real allocation; the high-water mark never decreases.
+        let buf = vec![1u8; 4 << 20];
+        std::hint::black_box(&buf);
+        assert!(peak_rss_bytes() >= peak);
     }
 
     #[test]

@@ -668,6 +668,9 @@ pub fn standard_round(state: &mut JobState, round: u64) -> Result<RoundMetrics> 
     if sampled.is_empty() {
         bail!("round {round}: no live clients");
     }
+    // Virtual fleets materialize exactly this round's cohort (no-op for
+    // eager fleets, whose nodes are all resident already).
+    state.ensure_cohort(&sampled)?;
     let updates_map = train_clients(state, round, &sampled, |st, _| st.global.clone())?;
     require_quorum(&updates_map, state, round)?;
     let updates: Vec<ClientUpdate> = updates_map.into_values().collect();
@@ -682,6 +685,9 @@ pub fn standard_round(state: &mut JobState, round: u64) -> Result<RoundMetrics> 
         .into();
 
     let (test_loss, test_accuracy) = state.evaluate(&state.global)?;
+    // Server memory stays O(model + sampled cohort): the round's cohort is
+    // dropped before the metrics snapshot (eager fleets: no-op).
+    state.evict_cohort();
     let global = state.global.clone();
     Ok(scope.finish(
         state,

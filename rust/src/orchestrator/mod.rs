@@ -11,6 +11,7 @@
 
 pub mod eval;
 mod flows;
+pub mod population;
 mod setup;
 
 use std::sync::Arc;

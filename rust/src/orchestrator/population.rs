@@ -1,0 +1,154 @@
+//! Virtual client population: client identity as *data*, not objects.
+//!
+//! The eager scaffold materializes every client up front and keys all
+//! per-client state by the **lexicographic position** of the client's name
+//! (`client_names` is sorted, data shards pair with names by index, batch
+//! RNG streams derive from the enumerate index). To materialize one client
+//! lazily — and bitwise-identically — the virtual path therefore needs the
+//! bijection between a client's numeric id (`client_{id}`, the
+//! `name_index` the RNG/speed/fault draws use) and its lexicographic rank
+//! among all `n` names (the shard/batching index).
+//!
+//! Decimal strings without leading zeros sort lexicographically as a
+//! pre-order walk of the digit trie: `0` first (it has no multi-digit
+//! descendants among valid ids), then each subtree rooted at `1..=9`, where
+//! the children of `x ≥ 1` are `10x ..= 10x+9`. One O(n) DFS builds both
+//! rank tables — 4 bytes per client per table, so a 1M-client population
+//! costs ~8 MB instead of the eager path's gigabytes of resident nodes.
+
+use anyhow::{bail, Result};
+
+/// Rank tables for a `client_0 .. client_{n-1}` population.
+#[derive(Clone, Debug)]
+pub struct Population {
+    /// `id_at_rank[r]` = numeric id of the r-th name in lexicographic order.
+    id_at_rank: Vec<u32>,
+    /// `rank_of_id[id]` = lexicographic rank of `client_{id}` (the inverse
+    /// permutation of `id_at_rank`).
+    rank_of_id: Vec<u32>,
+}
+
+impl Population {
+    pub fn new(n: usize) -> Result<Population> {
+        if n == 0 {
+            bail!("virtual population of zero clients");
+        }
+        if n > u32::MAX as usize {
+            bail!("virtual population of {n} clients exceeds the u32 rank table");
+        }
+        let mut id_at_rank = Vec::with_capacity(n);
+        // "0" sorts before every other decimal string ("0" < "1" < "10").
+        id_at_rank.push(0u32);
+        // Pre-order DFS over the decimal trie, subtrees 1..=9 in order.
+        // Children are pushed in reverse so the stack pops them in lex order.
+        let mut stack: Vec<u64> = Vec::new();
+        for root in (1..10u64).rev() {
+            if root < n as u64 {
+                stack.push(root);
+            }
+        }
+        while let Some(x) = stack.pop() {
+            id_at_rank.push(x as u32);
+            let base = 10 * x;
+            for child in (base..base + 10).rev() {
+                if child < n as u64 {
+                    stack.push(child);
+                }
+            }
+        }
+        debug_assert_eq!(id_at_rank.len(), n);
+        let mut rank_of_id = vec![0u32; n];
+        for (rank, &id) in id_at_rank.iter().enumerate() {
+            rank_of_id[id as usize] = rank as u32;
+        }
+        Ok(Population { id_at_rank, rank_of_id })
+    }
+
+    /// Number of clients in the population.
+    pub fn len(&self) -> usize {
+        self.id_at_rank.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.id_at_rank.is_empty()
+    }
+
+    /// Numeric id of the client at lexicographic rank `rank`.
+    pub fn id_at_rank(&self, rank: usize) -> u64 {
+        self.id_at_rank[rank] as u64
+    }
+
+    /// Lexicographic rank of the client with numeric id `id`.
+    pub fn rank_of_id(&self, id: u64) -> usize {
+        self.rank_of_id[id as usize] as usize
+    }
+
+    /// Name of the client at lexicographic rank `rank`.
+    pub fn name_at_rank(&self, rank: usize) -> String {
+        format!("client_{}", self.id_at_rank[rank])
+    }
+
+    /// Lexicographic rank of a client name, if it belongs to the population.
+    pub fn rank_of_name(&self, name: &str) -> Option<usize> {
+        let id: usize = name.strip_prefix("client_")?.parse().ok()?;
+        if id < self.rank_of_id.len() {
+            Some(self.rank_of_id[id] as usize)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_tables_match_sorted_name_lists() {
+        for n in [1usize, 2, 5, 9, 10, 11, 13, 101, 1000, 1024] {
+            let pop = Population::new(n).unwrap();
+            assert_eq!(pop.len(), n);
+            let mut names: Vec<String> = (0..n).map(|i| format!("client_{i}")).collect();
+            names.sort();
+            for (rank, name) in names.iter().enumerate() {
+                assert_eq!(&pop.name_at_rank(rank), name, "n={n} rank={rank}");
+                assert_eq!(pop.rank_of_name(name), Some(rank), "n={n} rank={rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn tables_are_inverse_permutations() {
+        let pop = Population::new(12345).unwrap();
+        for rank in 0..pop.len() {
+            assert_eq!(pop.rank_of_id(pop.id_at_rank(rank)), rank);
+        }
+    }
+
+    #[test]
+    fn foreign_names_have_no_rank() {
+        let pop = Population::new(10).unwrap();
+        assert_eq!(pop.rank_of_name("client_10"), None);
+        assert_eq!(pop.rank_of_name("worker_0"), None);
+        assert_eq!(pop.rank_of_name("client_x"), None);
+    }
+
+    #[test]
+    fn zero_population_rejected() {
+        assert!(Population::new(0).is_err());
+    }
+
+    #[test]
+    fn large_population_builds_quickly_and_compactly() {
+        // 1M clients: the whole identity layer is two u32 tables (~8 MB).
+        let n = 1_000_000;
+        let pop = Population::new(n).unwrap();
+        assert_eq!(pop.len(), n);
+        // Spot-check the lex order at the tricky boundaries.
+        assert_eq!(pop.name_at_rank(0), "client_0");
+        assert_eq!(pop.name_at_rank(1), "client_1");
+        assert_eq!(pop.name_at_rank(2), "client_10");
+        assert_eq!(pop.id_at_rank(n - 1), 999_999);
+        assert_eq!(pop.rank_of_id(999_999), n - 1);
+    }
+}

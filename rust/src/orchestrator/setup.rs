@@ -7,14 +7,15 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::aggregate::mean::AggPlan;
+use crate::aggregate::mean::{AggPlan, StreamingMean};
 use crate::aggregate::robust::{coordinate_median, krum, trimmed_mean};
 use crate::chain::{self, Blockchain};
 use crate::config::adversary::{AttackKind, RobustAggKind};
-use crate::config::job::JobConfig;
+use crate::config::job::{JobConfig, PopulationMode};
 use crate::consensus::{self, Consensus};
 use crate::controller::phases::NodeStage;
 use crate::controller::sync::{FaultPlan, LogicController};
+use crate::data::dataset::Dataset;
 use crate::data::distributor::Distributor;
 use crate::data::partition::Partition;
 use crate::data::synthetic;
@@ -24,11 +25,28 @@ use crate::kvstore::store::KvStore;
 use crate::metrics::report::RunReport;
 use crate::node::{ClientNode, WorkerBehavior, WorkerNode};
 use crate::orchestrator::eval::EvalSet;
+use crate::orchestrator::population::Population;
 use crate::runtime::backend::ModelBackend;
 use crate::runtime::pjrt::Runtime;
 use crate::strategy::{ClientUpdate, Strategy};
 use crate::topology::graph::Overlay;
 use crate::util::rng::Rng;
+
+/// The shared ingredients a *virtual* fleet derives every client from
+/// (`job.population = virtual`): instead of `n_clients` resident
+/// [`ClientNode`]s, the scaffold keeps the rank tables, the training split
+/// and the shard assignments, and each round's sampled cohort is
+/// materialized on demand — bitwise-identical to the node the eager
+/// scaffold would have built (test-enforced).
+pub struct VirtualFleet {
+    /// Bijection between numeric client ids and lexicographic ranks.
+    pub population: Population,
+    /// The full training split client shards subset from.
+    pub train: Dataset,
+    /// Shard assignments, `min(n_clients, train.len())` of them; clients
+    /// beyond that wrap around (`rank % n_shards`).
+    pub partition: Partition,
+}
 
 /// All live state of a running job.
 pub struct JobState {
@@ -56,6 +74,10 @@ pub struct JobState {
     /// Compromised clients (seed-derived `attack_fraction` draw ∪ explicit
     /// `adversary.nodes`). Empty when the adversary config is inactive.
     pub adversaries: BTreeSet<String>,
+    /// Virtual-population state (`job.population = virtual`): the shard
+    /// source and rank tables lazy cohort materialization derives clients
+    /// from. `None` for eager fleets.
+    pub fleet: Option<VirtualFleet>,
     pub root_rng: Rng,
     pub report: RunReport,
     /// Virtual-clock record of the last parallel training phase: per-client
@@ -88,30 +110,62 @@ impl JobState {
         let mut split_rng = root_rng.derive("split", 0);
         let (train, test) = ds.split(job.dataset.train_frac, &mut split_rng);
 
-        // Overlay + roles.
-        let overlay = Overlay::build(job.topology, job.n_clients, job.n_workers);
+        // Overlay + roles. A virtual fleet keeps only the worker tier
+        // resident — clients exist as an overlay *count*, priced by the
+        // netsim star fast path and materialized per sampled cohort.
+        let virtualized = job.population == PopulationMode::Virtual;
+        let overlay = if virtualized {
+            Overlay::client_server_virtual(job.n_clients, job.n_workers)
+        } else {
+            Overlay::build(job.topology, job.n_clients, job.n_workers)
+        };
         overlay.validate()?;
-        let client_names = overlay.clients();
+        let client_names = overlay.clients(); // empty in virtual mode
         let worker_names = overlay.workers();
+        let population = if virtualized {
+            Some(Population::new(job.n_clients)?)
+        } else {
+            None
+        };
+        let fleet_size = if virtualized {
+            job.n_clients
+        } else {
+            client_names.len()
+        };
 
+        // Shard count: one per client eagerly; capped at the training-set
+        // size for virtual fleets larger than the data (clients then share
+        // shards, `rank % n_shards`). For N ≤ train.len() the partition draw
+        // is identical to the eager one.
+        let n_shards = if virtualized {
+            job.n_clients.min(train.len()).max(1)
+        } else {
+            client_names.len()
+        };
         let mut part_rng = root_rng.derive("partition", 0);
-        let partition = Partition::build(
-            &train,
-            client_names.len(),
-            &job.dataset.distribution,
-            &mut part_rng,
-        );
+        let partition =
+            Partition::build(&train, n_shards, &job.dataset.distribution, &mut part_rng);
 
+        // Virtual fleets skip the content-addressed archive entirely:
+        // cohort members subset the training split directly at
+        // materialization time, which is bitwise what `archive_partition` +
+        // `download` roundtrips to (the codec is exact).
         let mut distributor = Distributor::new();
-        distributor.archive_partition(&train, &partition, &client_names, &test)?;
+        if !virtualized {
+            distributor.archive_partition(&train, &partition, &client_names, &test)?;
+        }
 
         // Adversarial scenario: resolve the compromised cohort (seed-derived
         // draw ∪ explicit list) and fold the declarative `faults:` schedule
         // (explicit events + churn draws) into the caller's plan. Inactive
         // sections resolve to an empty set / empty plan without drawing from
         // any RNG stream.
-        let adversaries =
-            crate::adversary::select_adversaries(&job.adversary, &root_rng, &client_names)?;
+        let adversaries = match &population {
+            Some(pop) => {
+                crate::adversary::select_adversaries_virtual(&job.adversary, &root_rng, pop)?
+            }
+            None => crate::adversary::select_adversaries(&job.adversary, &root_rng, &client_names)?,
+        };
         if !adversaries.is_empty() {
             info!(
                 "orchestrator",
@@ -121,7 +175,11 @@ impl JobState {
                 adversaries
             );
         }
-        faults.merge(crate::adversary::materialize_faults(job, &client_names));
+        if virtualized {
+            faults.merge(crate::adversary::materialize_faults_virtual(job));
+        } else {
+            faults.merge(crate::adversary::materialize_faults(job, &client_names));
+        }
 
         // Controller over every node; stage flow of Algorithm 1 lines 1-13.
         let all_nodes: Vec<String> = overlay.roles.keys().cloned().collect();
@@ -195,7 +253,7 @@ impl JobState {
             strategy: job.strategy.name().to_string(),
             topology: job.topology.name().to_string(),
             backend: job.backend.clone(),
-            n_clients: client_names.len(),
+            n_clients: fleet_size,
             n_workers: worker_names.len(),
             seed: job.seed,
             stopped_early: false,
@@ -206,7 +264,7 @@ impl JobState {
             "orchestrator",
             "scaffolded job '{}': {} clients, {} workers, {} params, {} topology",
             job.name,
-            client_names.len(),
+            fleet_size,
             worker_names.len(),
             backend.param_count,
             job.topology.name()
@@ -216,6 +274,9 @@ impl JobState {
         // with the job's per-class link models.
         let mut net = NetSim::with_policy(job.network);
         net.attach_overlay(&overlay);
+        if virtualized {
+            net.set_virtual_star(job.n_clients as u64, worker_names.iter().cloned().collect());
+        }
 
         Ok(JobState {
             job: job.clone(),
@@ -235,6 +296,11 @@ impl JobState {
             clusters: None,
             cluster_models: BTreeMap::new(),
             adversaries,
+            fleet: population.map(|population| VirtualFleet {
+                population,
+                train,
+                partition,
+            }),
             root_rng,
             report,
             client_virtual_secs: BTreeMap::new(),
@@ -283,6 +349,19 @@ impl JobState {
         rng: &mut Rng,
     ) -> Result<Vec<f32>> {
         if self.job.robust_agg.kind == RobustAggKind::None {
+            // Virtual fleets fold FedAvg online: O(model) accumulator state
+            // instead of the collect-then-reduce path. `StreamingMean` is
+            // golden-tested bitwise against `weighted_mean_plan` — which is
+            // exactly what `FedAvg::aggregate` runs — for every reduction
+            // order, so this gate never changes a result.
+            if self.fleet.is_some() && self.strategy.name() == "fedavg" && !updates.is_empty() {
+                let total: f64 = updates.iter().map(|u| u.weight).sum();
+                let mut stream = StreamingMean::new(updates[0].params.len(), total, plan.order)?;
+                for u in updates {
+                    stream.push(u.params.as_ref(), u.weight)?;
+                }
+                return stream.finish();
+            }
             return self.strategy.aggregate(updates, &self.global, plan, rng);
         }
         let refs: Vec<&[f32]> = updates.iter().map(|u| u.params.as_ref()).collect();
@@ -314,20 +393,144 @@ impl JobState {
         }
     }
 
-    /// Sampled client subset for a round (client_fraction < 1.0).
+    /// Sampled client subset for a round (`client_fraction < 1.0`).
+    ///
+    /// Eager fleets walk the overlay's client roles *borrowed* — only the
+    /// chosen cohort is cloned, not the whole fleet name list every round.
+    /// Virtual fleets sample over lexicographic ranks and format just the
+    /// chosen names; when no downtime is possible this round, the liveness
+    /// scan is skipped outright. Both paths feed `choose_indices` the
+    /// identical `(alive_len, k)` stream, so the cohorts agree bit for bit.
     pub fn sample_clients(&self, round: u64) -> Vec<String> {
-        let names = self.overlay.clients();
-        let alive = self.controller.alive(&names, round);
-        if self.job.client_fraction >= 1.0 {
-            return alive;
+        match &self.fleet {
+            Some(fleet) => self.sample_virtual(fleet, round),
+            None => self.sample_eager(round),
         }
-        let k = ((self.job.client_fraction * alive.len() as f64).ceil() as usize)
-            .clamp(1, alive.len());
+    }
+
+    fn sample_eager(&self, round: u64) -> Vec<String> {
+        let alive: Vec<&str> = self
+            .overlay
+            .client_names()
+            .filter(|n| self.controller.is_alive(n, round))
+            .collect();
+        self.draw_cohort(alive.len(), round, |i| alive[i].to_string())
+    }
+
+    fn sample_virtual(&self, fleet: &VirtualFleet, round: u64) -> Vec<String> {
+        use std::fmt::Write;
+        let alive_ranks: Option<Vec<usize>> = if self.controller.may_have_downtime(round) {
+            let mut ranks = Vec::new();
+            let mut scratch = String::new();
+            for rank in 0..fleet.population.len() {
+                scratch.clear();
+                let _ = write!(scratch, "client_{}", fleet.population.id_at_rank(rank));
+                if self.controller.is_alive(&scratch, round) {
+                    ranks.push(rank);
+                }
+            }
+            Some(ranks)
+        } else {
+            None // every rank is alive; sample over 0..n directly
+        };
+        let alive_len = alive_ranks.as_ref().map_or(fleet.population.len(), Vec::len);
+        self.draw_cohort(alive_len, round, |i| {
+            fleet
+                .population
+                .name_at_rank(alive_ranks.as_ref().map_or(i, |r| r[i]))
+        })
+    }
+
+    /// Shared sampling core; `name_at(i)` resolves the i-th alive client.
+    fn draw_cohort(
+        &self,
+        alive_len: usize,
+        round: u64,
+        name_at: impl Fn(usize) -> String,
+    ) -> Vec<String> {
+        if alive_len == 0 {
+            return Vec::new();
+        }
+        if self.job.client_fraction >= 1.0 {
+            return (0..alive_len).map(name_at).collect();
+        }
+        let k = ((self.job.client_fraction * alive_len as f64).ceil() as usize).clamp(1, alive_len);
         let mut rng = self.round_rng(round).derive("client_sample", 0);
-        let idx = rng.choose_indices(alive.len(), k);
-        let mut out: Vec<String> = idx.into_iter().map(|i| alive[i].clone()).collect();
+        let mut out: Vec<String> =
+            rng.choose_indices(alive_len, k).into_iter().map(name_at).collect();
         out.sort();
         out
+    }
+
+    /// Materialize one sampled virtual client, bitwise-identical to the
+    /// node the eager scaffold builds for the same name: same shard (the
+    /// lex-rank ↔ partition pairing), same label-flip corruption, same
+    /// batching stream (`derive("batching", rank)`) and speed draw
+    /// (`derive("speed", id)`). A client already resident (carrying
+    /// cross-round strategy state) is left untouched.
+    fn materialize_client(&mut self, name: &str) -> Result<()> {
+        if self.clients.contains_key(name) {
+            return Ok(());
+        }
+        let fleet = self
+            .fleet
+            .as_ref()
+            .ok_or_else(|| anyhow!("materialize_client on an eager fleet"))?;
+        let rank = fleet
+            .population
+            .rank_of_name(name)
+            .ok_or_else(|| anyhow!("unknown virtual client '{name}'"))?;
+        let id = fleet.population.id_at_rank(rank);
+        let shard = rank % fleet.partition.n_clients();
+        let mut chunk = fleet.train.subset(&fleet.partition.assignments[shard]);
+        if self.job.adversary.attack == AttackKind::LabelFlip && self.adversaries.contains(name) {
+            let k = chunk.num_classes as i32;
+            for y in &mut chunk.y {
+                *y = (*y + 1) % k;
+            }
+        }
+        let mut batch_rng = self.root_rng.derive("batching", rank as u64);
+        let mut node = ClientNode::from_chunk(name, &chunk, &self.backend, &mut batch_rng)?;
+        let mut speed_rng = self.root_rng.derive("speed", id);
+        node.speed_factor = 1.0 + self.job.heterogeneity * speed_rng.next_f64();
+        self.clients.insert(name.to_string(), node);
+        Ok(())
+    }
+
+    /// Virtual mode: make every sampled client resident and known to the
+    /// controller before the round flows drive it (stage updates bail on
+    /// unknown nodes, and the virtual clock reads the node's speed factor
+    /// in the serial download phase). No-op for eager fleets.
+    pub fn ensure_cohort(&mut self, cohort: &[String]) -> Result<()> {
+        if self.fleet.is_none() {
+            return Ok(());
+        }
+        for name in cohort {
+            self.materialize_client(name)?;
+            self.controller.admit(name, NodeStage::ReadyWithDataset);
+        }
+        Ok(())
+    }
+
+    /// Virtual mode: return the fleet to O(sampled cohort) residency after
+    /// a round commits. Nodes carrying cross-round strategy state (MOON's
+    /// previous params, SCAFFOLD control variates, decentralized local
+    /// models) stay resident — exactly the state an eager fleet would have
+    /// kept. No-op for eager fleets.
+    pub fn evict_cohort(&mut self) {
+        if self.fleet.is_none() {
+            return;
+        }
+        let controller = &mut self.controller;
+        self.clients.retain(|name, node| {
+            let keep = node.state.prev_params.is_some()
+                || node.state.c_local.is_some()
+                || node.local_model.is_some();
+            if !keep {
+                controller.forget(name);
+            }
+            keep
+        });
     }
 
     pub fn verify_chain(&self) -> Result<()> {

@@ -88,6 +88,13 @@ pub struct Overlay {
     pub roles: BTreeMap<String, NodeRole>,
     pub edges: BTreeSet<(String, String)>,
     pub clusters: Vec<Cluster>,
+    /// Cross-device scale: number of *virtual* clients (`client_0 ..
+    /// client_{n-1}`) that are part of the job but not materialized as
+    /// overlay nodes — a 1M-client star would otherwise carry O(N·workers)
+    /// resident edges. `0` = fully materialized overlay (the default).
+    /// Virtual client↔worker links are priced by the network fabric's
+    /// star fast path instead of edge lookups.
+    pub virtual_clients: usize,
 }
 
 impl Overlay {
@@ -124,6 +131,35 @@ impl Overlay {
             workers,
             upstream: None,
         });
+        o
+    }
+
+    /// Star topology with a *virtual* client tier: only the worker mesh is
+    /// materialized; the `n_clients` clients exist as indices (`client_0 ..`)
+    /// resolved on demand. Structurally the same job as
+    /// [`Overlay::client_server`] — the per-round cohort sees identical
+    /// names, link classes, and transfer prices — without the O(N·workers)
+    /// edge set.
+    pub fn client_server_virtual(n_clients: usize, n_workers: usize) -> Overlay {
+        let workers: Vec<String> = (0..n_workers).map(|i| format!("worker_{i}")).collect();
+        let mut o = Overlay::default();
+        for w in &workers {
+            o.roles.insert(w.clone(), NodeRole::Worker);
+        }
+        for a in &workers {
+            for b in &workers {
+                if a != b {
+                    o.edges.insert((a.clone(), b.clone()));
+                }
+            }
+        }
+        o.clusters.push(Cluster {
+            name: "cluster_0".into(),
+            clients: Vec::new(),
+            workers,
+            upstream: None,
+        });
+        o.virtual_clients = n_clients;
         o
     }
 
@@ -222,6 +258,16 @@ impl Overlay {
         self.by_role(NodeRole::Client, true)
     }
 
+    /// Borrowed iteration over the materialized client names (hybrids
+    /// included, same membership as [`Overlay::clients`]) — the round
+    /// sampler walks the whole fleet every round and must not clone it.
+    pub fn client_names(&self) -> impl Iterator<Item = &str> {
+        self.roles
+            .iter()
+            .filter(|(_, &r)| matches!(r, NodeRole::Client | NodeRole::Hybrid))
+            .map(|(n, _)| n.as_str())
+    }
+
     pub fn workers(&self) -> Vec<String> {
         self.by_role(NodeRole::Worker, false)
     }
@@ -276,7 +322,7 @@ impl Overlay {
 
     /// Validate structural invariants the controller depends on.
     pub fn validate(&self) -> Result<()> {
-        if self.clients().is_empty() {
+        if self.clients().is_empty() && self.virtual_clients == 0 {
             return Err(anyhow!("overlay has no clients"));
         }
         if self.workers().is_empty() {
@@ -320,6 +366,34 @@ mod tests {
         // Star overlays have no hierarchical root.
         assert_eq!(o.root_worker(), None);
         o.validate().unwrap();
+    }
+
+    #[test]
+    fn virtual_client_server_shape() {
+        let o = Overlay::client_server_virtual(1_000_000, 2);
+        // Only the worker tier is resident.
+        assert_eq!(o.n_nodes(), 2);
+        assert_eq!(o.virtual_clients, 1_000_000);
+        assert!(o.clients().is_empty());
+        assert_eq!(o.workers().len(), 2);
+        // The server mesh matches the eager star's.
+        assert!(o.has_edge("worker_0", "worker_1"));
+        assert!(o.has_edge("worker_1", "worker_0"));
+        assert!(!o.has_edge("client_0", "worker_0"));
+        // A clientless overlay is only valid because the clients are virtual.
+        o.validate().unwrap();
+        let mut bare = o.clone();
+        bare.virtual_clients = 0;
+        assert!(bare.validate().is_err());
+    }
+
+    #[test]
+    fn client_names_matches_clients() {
+        for o in [Overlay::client_server(7, 2), Overlay::fully_connected(4)] {
+            let borrowed: Vec<String> =
+                o.client_names().map(str::to_string).collect();
+            assert_eq!(borrowed, o.clients());
+        }
     }
 
     #[test]

@@ -450,7 +450,7 @@ fn cancelled_campaign_leaves_no_torn_store_entries() {
         .unwrap();
     assert!(partial.stopped_early);
     let key = campaign::cell_key(&job);
-    assert!(store.put_partial(&key, "cancelled", &job, &partial).unwrap());
+    assert!(store.put_partial(&key, "cancelled", "camp", &job, &partial).unwrap());
     assert_no_tmp_residue(&dir);
     // The committed partial loads cleanly at its depth.
     assert_eq!(store.get_at_least(&key, 1).unwrap().rounds_completed(), 1);
@@ -623,7 +623,7 @@ fn gc_never_evicts_entries_of_the_resumed_campaign() {
         job.name = format!("junk{seed}");
         let key = campaign::cell_key(&job);
         let report = first.cells[0].report.clone().unwrap();
-        store.put(&key, &job.name, &job, &report).unwrap();
+        store.put(&key, &job.name, "camp", &job, &report).unwrap();
         junk_keys.push(key);
     }
 

@@ -1,0 +1,82 @@
+//! Cross-device scale smokes (fig12-style): virtual populations at 100k and
+//! 1M clients must run rounds in O(model + sampled cohort) server memory,
+//! not O(fleet). The ceilings here are deliberately loose multiples of the
+//! expected footprint — they exist to catch an accidental return to
+//! per-client residency (which costs GiB at these fleet sizes), not to pin
+//! allocator behavior.
+
+use flsim::config::job::{JobConfig, PopulationMode};
+use flsim::metrics::resources;
+use flsim::orchestrator::Orchestrator;
+use flsim::runtime::pjrt::Runtime;
+
+fn scale_job(n_clients: usize, cohort: usize) -> JobConfig {
+    let mut job = JobConfig::scale_logreg(n_clients);
+    job.name = format!("scale_{n_clients}");
+    job.population = PopulationMode::Virtual;
+    job.dataset.n = 2_000;
+    job.rounds = 1;
+    job.client_fraction = (cohort as f64 / n_clients as f64).min(1.0);
+    job
+}
+
+#[test]
+fn hundred_k_clients_run_in_bounded_memory() {
+    let rt = Runtime::shared("artifacts").unwrap();
+    let job = scale_job(100_000, 16);
+    let before = resources::rss_bytes();
+    let report = Orchestrator::new(rt).run(&job).unwrap();
+    let delta = resources::rss_bytes().saturating_sub(before);
+
+    assert_eq!(report.n_clients, 100_000);
+    assert_eq!(report.rounds.len(), 1);
+    assert!(report.rounds[0].net_bytes > 0, "traffic must still be metered");
+    // Expected residency: rank tables (~0.8 MB), the 2k-example dataset
+    // (~6 MB), one logreg model (~31 KB) and a 16-client cohort. 256 MiB
+    // leaves an order of magnitude of slack while staying far below what
+    // 100k resident clients would cost.
+    let ceiling = 256u64 << 20;
+    assert!(
+        delta < ceiling,
+        "100k-client round grew RSS by {delta} bytes (ceiling {ceiling}) — \
+         server memory is no longer O(model + cohort)"
+    );
+    // The probe itself must be live on this platform, or the ceiling above
+    // is vacuous.
+    assert!(resources::rss_bytes() > 1 << 20, "rss probe returned ~0");
+}
+
+#[test]
+fn one_million_clients_smoke() {
+    let rt = Runtime::shared("artifacts").unwrap();
+    let job = scale_job(1_000_000, 16);
+    let before = resources::rss_bytes();
+    let report = Orchestrator::new(rt).run(&job).unwrap();
+    let delta = resources::rss_bytes().saturating_sub(before);
+
+    assert_eq!(report.n_clients, 1_000_000);
+    assert_eq!(report.rounds.len(), 1);
+    assert_eq!(report.rounds[0].model_hash.len(), 16);
+    // 1M ranks cost ~8 MB of tables plus one transient shuffle vector in
+    // the sampler; the same 256 MiB ceiling still holds with a wide margin.
+    let ceiling = 256u64 << 20;
+    assert!(
+        delta < ceiling,
+        "1M-client round grew RSS by {delta} bytes (ceiling {ceiling})"
+    );
+}
+
+/// Same virtual job twice — the scale path must stay bitwise reproducible
+/// (the determinism contract does not loosen with fleet size).
+#[test]
+fn scale_run_is_reproducible() {
+    let rt = Runtime::shared("artifacts").unwrap();
+    let job = scale_job(100_000, 8);
+    let a = Orchestrator::new(rt.clone()).run(&job).unwrap();
+    let b = Orchestrator::new(rt).run(&job).unwrap();
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.model_hash, y.model_hash);
+        assert_eq!(x.net_bytes, y.net_bytes);
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+    }
+}

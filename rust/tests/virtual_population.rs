@@ -1,0 +1,215 @@
+//! Virtual-population contract tests: a `population: virtual` job must be
+//! bitwise-identical to the eager scaffold — same cohorts, same shards, same
+//! RNG streams, same adversary draws, same churn — for any fleet size and
+//! any parallelism. These tests enforce that contract at two levels: whole
+//! runs (per-round metrics compared bit for bit) and the scaffold itself
+//! (per-client state compared after lazy materialization).
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use flsim::config::job::{JobConfig, PopulationMode};
+use flsim::config::{AttackKind, ChurnConfig};
+use flsim::controller::sync::FaultPlan;
+use flsim::metrics::report::RunReport;
+use flsim::orchestrator::{JobState, Orchestrator};
+use flsim::runtime::pjrt::Runtime;
+
+fn rt() -> Arc<Runtime> {
+    Runtime::shared("artifacts").unwrap()
+}
+
+/// A small job that is valid in both population modes.
+fn base_job(n_clients: usize) -> JobConfig {
+    let mut j = JobConfig::scale_logreg(n_clients);
+    j.dataset.n = 600;
+    j.rounds = 3;
+    j.client_fraction = 0.5;
+    j
+}
+
+/// Compare every deterministic per-round metric bit for bit. Host-dependent
+/// columns (wall_secs, cpu_pct, rss_mib) are excluded by design.
+fn assert_reports_identical(eager: &RunReport, virt: &RunReport, tag: &str) {
+    assert_eq!(eager.n_clients, virt.n_clients, "{tag}: fleet size");
+    assert_eq!(eager.rounds.len(), virt.rounds.len(), "{tag}: round count");
+    for (e, v) in eager.rounds.iter().zip(&virt.rounds) {
+        let r = e.round;
+        assert_eq!(e.model_hash, v.model_hash, "{tag}: model hash, round {r}");
+        assert_eq!(e.net_bytes, v.net_bytes, "{tag}: net bytes, round {r}");
+        for (col, a, b) in [
+            ("train_loss", e.train_loss, v.train_loss),
+            ("test_loss", e.test_loss, v.test_loss),
+            ("test_accuracy", e.test_accuracy, v.test_accuracy),
+            ("sim_net_secs", e.sim_net_secs, v.sim_net_secs),
+            ("sim_round_secs", e.sim_round_secs, v.sim_round_secs),
+        ] {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{tag}: {col} diverged in round {r} ({a} vs {b})"
+            );
+        }
+    }
+}
+
+fn run_both_modes(mut job: JobConfig, tag: &str) {
+    job.population = PopulationMode::Eager;
+    let eager = Orchestrator::new(rt()).run(&job).unwrap();
+    job.population = PopulationMode::Virtual;
+    let virt = Orchestrator::new(rt()).run(&job).unwrap();
+    assert_reports_identical(&eager, &virt, tag);
+}
+
+#[test]
+fn virtual_run_matches_eager_plain_fedavg() {
+    run_both_modes(base_job(10), "plain");
+}
+
+#[test]
+fn virtual_run_matches_eager_under_churn_and_heterogeneity() {
+    let mut job = base_job(12);
+    job.name = "virt_churn".into();
+    job.heterogeneity = 0.3;
+    job.faults.churn = Some(ChurnConfig {
+        availability: 0.9,
+        from_round: 1,
+    });
+    run_both_modes(job, "churn+hetero");
+}
+
+#[test]
+fn virtual_run_matches_eager_with_label_flip_adversaries() {
+    let mut job = base_job(8);
+    job.name = "virt_adv".into();
+    job.adversary.attack = AttackKind::LabelFlip;
+    job.adversary.attack_fraction = 0.25;
+    run_both_modes(job, "label_flip");
+}
+
+#[test]
+fn virtual_run_is_parallelism_invariant() {
+    let mut golden: Option<RunReport> = None;
+    for par in [1usize, 4] {
+        let mut job = base_job(10);
+        job.name = format!("virt_par{par}");
+        job.population = PopulationMode::Virtual;
+        job.parallelism = par;
+        let report = Orchestrator::new(rt()).run(&job).unwrap();
+        match &golden {
+            None => golden = Some(report),
+            Some(g) => assert_reports_identical(g, &report, "parallelism"),
+        }
+    }
+}
+
+/// Property test over random-ish configs: lazily materializing *every*
+/// client of a virtual scaffold reproduces the eager scaffold's per-client
+/// state exactly — shard size, speed draw, adversary membership — and the
+/// fault plans agree on liveness for every (client, round) pair.
+#[test]
+fn lazy_materialization_matches_eager_scaffold() {
+    for seed in [1u64, 2, 3] {
+        for n in [7usize, 23, 41] {
+            let mut job = base_job(n);
+            job.name = format!("virt_prop_s{seed}_n{n}");
+            job.seed = seed;
+            job.heterogeneity = 0.5;
+            job.adversary.attack = AttackKind::LabelFlip;
+            job.adversary.attack_fraction = 0.3;
+            job.faults.churn = Some(ChurnConfig {
+                availability: 0.8,
+                from_round: 1,
+            });
+
+            job.population = PopulationMode::Eager;
+            let eager = JobState::scaffold(rt(), &job, FaultPlan::none()).unwrap();
+            job.population = PopulationMode::Virtual;
+            let mut virt = JobState::scaffold(rt(), &job, FaultPlan::none()).unwrap();
+
+            let names: Vec<String> = eager.clients.keys().cloned().collect();
+            assert_eq!(names.len(), n, "eager fleet size");
+            assert!(virt.clients.is_empty(), "virtual fleet starts empty");
+            virt.ensure_cohort(&names).unwrap();
+
+            assert_eq!(
+                eager.adversaries, virt.adversaries,
+                "seed {seed} n {n}: adversary draw diverged"
+            );
+            for name in &names {
+                let e = &eager.clients[name];
+                let v = &virt.clients[name];
+                assert_eq!(
+                    e.n_examples, v.n_examples,
+                    "seed {seed} n {n}: shard size of {name}"
+                );
+                assert_eq!(
+                    e.speed_factor.to_bits(),
+                    v.speed_factor.to_bits(),
+                    "seed {seed} n {n}: speed draw of {name}"
+                );
+            }
+            // Churn liveness must agree lazily vs densely for the whole grid.
+            for name in &names {
+                for round in 0..=job.rounds {
+                    assert_eq!(
+                        eager.controller.is_alive(name, round),
+                        virt.controller.is_alive(name, round),
+                        "seed {seed} n {n}: liveness of {name} in round {round}"
+                    );
+                }
+            }
+            // No cross-round strategy state on fedavg: eviction returns the
+            // fleet to zero residency.
+            virt.evict_cohort();
+            assert!(
+                virt.clients.is_empty(),
+                "seed {seed} n {n}: eviction left stateless clients resident"
+            );
+        }
+    }
+}
+
+/// Strategies that carry cross-round client state must keep those nodes
+/// resident through eviction — that state is part of the result.
+#[test]
+fn eviction_keeps_stateful_clients_resident() {
+    // SCAFFOLD needs its control-variate artifact — cnn carries it.
+    let mut job = JobConfig::default_cnn("scaffold");
+    job.name = "virt_scaffold_state".into();
+    job.n_clients = 6;
+    job.dataset.n = 600;
+    job.population = PopulationMode::Virtual;
+    job.client_fraction = 1.0;
+    job.rounds = 2;
+    let report = Orchestrator::new(rt()).run(&job).unwrap();
+    assert_eq!(report.rounds.len(), 2);
+
+    // And the eager twin agrees bitwise even though its fleet never evicts.
+    job.population = PopulationMode::Eager;
+    let eager = Orchestrator::new(rt()).run(&job).unwrap();
+    assert_reports_identical(&eager, &report, "scaffold strategy");
+}
+
+/// The virtual sampler must hand the round flows the exact cohort the eager
+/// sampler would draw — same names, same order.
+#[test]
+fn virtual_sampler_draws_the_eager_cohort() {
+    let mut job = base_job(31);
+    job.name = "virt_sampler".into();
+    job.client_fraction = 0.2;
+    job.population = PopulationMode::Eager;
+    let eager = JobState::scaffold(rt(), &job, FaultPlan::none()).unwrap();
+    job.population = PopulationMode::Virtual;
+    let virt = JobState::scaffold(rt(), &job, FaultPlan::none()).unwrap();
+    for round in 0..5u64 {
+        assert_eq!(
+            eager.sample_clients(round),
+            virt.sample_clients(round),
+            "cohort diverged in round {round}"
+        );
+    }
+    // Distinct rounds draw distinct cohorts (sanity that sampling is live).
+    let all: BTreeSet<Vec<String>> = (0..5).map(|r| virt.sample_clients(r)).collect();
+    assert!(all.len() > 1, "sampler drew the same cohort every round");
+}

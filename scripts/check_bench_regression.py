@@ -15,6 +15,8 @@ default tolerance:
     makespan       sim_round_secs   higher       0.01  (virtual clock —
                                                         deterministic, so
                                                         any drift is real)
+    memory         mem_peak_bytes   higher       0.30  (allocator/kernel
+                                                        noise on VmHWM)
 
 The base ``--tolerance`` (or the FLSIM_BENCH_TOLERANCE env var) replaces the
 0.30 default of the wall-clock kinds; ``--thresholds`` refines per kind or
@@ -48,6 +50,7 @@ SERIES_KINDS = {
     "ns_per_op": ("results", "ns_per_op", +1, 0.30),
     "ops_per_sec": ("throughput", "ops_per_sec", -1, 0.30),
     "sim_round_secs": ("makespan", "sim_round_secs", +1, 0.01),
+    "mem_peak_bytes": ("memory", "mem_peak_bytes", +1, 0.30),
 }
 
 # Accepted aliases for kind-level threshold overrides.
@@ -58,6 +61,8 @@ KIND_ALIASES = {
     "ops_per_sec": "ops_per_sec",
     "makespan": "sim_round_secs",
     "sim_round_secs": "sim_round_secs",
+    "memory": "mem_peak_bytes",
+    "mem_peak_bytes": "mem_peak_bytes",
 }
 
 

@@ -24,16 +24,21 @@ class ParseThresholdsTest(unittest.TestCase):
 
     def test_kind_overrides_accept_aliases(self):
         kinds, patterns = gate.parse_thresholds(
-            "makespan=0.02, throughput=0.4,ns_per_op=0.25"
+            "makespan=0.02, throughput=0.4,ns_per_op=0.25,memory=0.1"
         )
         self.assertEqual(
             kinds,
-            {"sim_round_secs": 0.02, "ops_per_sec": 0.4, "ns_per_op": 0.25},
+            {
+                "sim_round_secs": 0.02,
+                "ops_per_sec": 0.4,
+                "ns_per_op": 0.25,
+                "mem_peak_bytes": 0.1,
+            },
         )
         self.assertEqual(patterns, [])
         # Field-name aliases resolve to the same canonical kinds.
         kinds2, _ = gate.parse_thresholds(
-            "sim_round_secs=0.02,ops_per_sec=0.4,results=0.25"
+            "sim_round_secs=0.02,ops_per_sec=0.4,results=0.25,mem_peak_bytes=0.1"
         )
         self.assertEqual(kinds, kinds2)
 
@@ -65,6 +70,7 @@ class ToleranceResolutionTest(unittest.TestCase):
         self.assertEqual(gate.tolerance_for("x", "ns_per_op", None, {}, []), 0.30)
         self.assertEqual(gate.tolerance_for("x", "ops_per_sec", None, {}, []), 0.30)
         self.assertEqual(gate.tolerance_for("x", "sim_round_secs", None, {}, []), 0.01)
+        self.assertEqual(gate.tolerance_for("x", "mem_peak_bytes", None, {}, []), 0.30)
 
     def test_base_tolerance_replaces_wall_clock_defaults_only(self):
         self.assertEqual(gate.tolerance_for("x", "ns_per_op", 0.5, {}, []), 0.5)
@@ -95,6 +101,10 @@ class ClassifyTest(unittest.TestCase):
         self.assertEqual(gate.classify("ns_per_op", 100.0, 60.0, 0.30), "improved")
         self.assertEqual(gate.classify("sim_round_secs", 10.0, 10.2, 0.01), "regressed")
         self.assertEqual(gate.classify("sim_round_secs", 10.0, 10.05, 0.01), "ok")
+        # Peak memory: more bytes = worse.
+        self.assertEqual(gate.classify("mem_peak_bytes", 1e8, 1.5e8, 0.30), "regressed")
+        self.assertEqual(gate.classify("mem_peak_bytes", 1e8, 1.2e8, 0.30), "ok")
+        self.assertEqual(gate.classify("mem_peak_bytes", 1e8, 0.5e8, 0.30), "improved")
 
     def test_lower_is_worse_for_throughput(self):
         self.assertEqual(gate.classify("ops_per_sec", 50.0, 30.0, 0.30), "regressed")
@@ -112,13 +122,15 @@ class EndToEndTest(unittest.TestCase):
                           "check_bench_regression.py")
 
     @staticmethod
-    def doc(ns=100.0, ops=50.0, mk=10.0, provisional=False):
+    def doc(ns=100.0, ops=50.0, mk=10.0, mem=None, provisional=False):
         d = {
             "schema": "flsim-bench-v1",
             "results": [{"name": "agg/mean", "ns_per_op": ns, "iters": 5}],
             "throughput": [{"name": "round/p4", "ops_per_sec": ops}],
             "makespan": [{"name": "topo/cs", "sim_round_secs": mk}],
         }
+        if mem is not None:
+            d["memory"] = [{"name": "scale/n=100000", "mem_peak_bytes": mem}]
         if provisional:
             d["provisional"] = True
         return d
@@ -158,6 +170,24 @@ class EndToEndTest(unittest.TestCase):
             self.doc(), self.doc(ops=30.0), "--thresholds", "throughput=0.5"
         )
         self.assertEqual(code, 0, out)
+
+    def test_memory_growth_fails_and_is_gated_higher_is_worse(self):
+        code, out = self.run_gate(self.doc(mem=1.0e8), self.doc(mem=1.5e8))
+        self.assertNotEqual(code, 0, out)
+        self.assertIn("REGRESSED", out)
+        self.assertIn("memory/scale/n=100000", out)
+        # Shrinking the peak is an improvement, not a failure.
+        code, out = self.run_gate(self.doc(mem=1.0e8), self.doc(mem=0.5e8))
+        self.assertEqual(code, 0, out)
+        self.assertIn("IMPROVED", out)
+
+    def test_memory_series_new_in_current_is_informational(self):
+        # A baseline predating the memory series must not fail the gate —
+        # new series report as NEW until the baseline is refreshed.
+        code, out = self.run_gate(self.doc(), self.doc(mem=1.0e8))
+        self.assertEqual(code, 0, out)
+        self.assertIn("NEW", out)
+        self.assertIn("memory/scale/n=100000", out)
 
     def test_provisional_baseline_warns_only(self):
         code, out = self.run_gate(
