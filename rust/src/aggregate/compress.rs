@@ -9,7 +9,7 @@ use anyhow::{bail, Result};
 use crate::util::rng::Rng;
 
 /// A compressed model update (delta vs. the global model).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum CompressedUpdate {
     /// Dense f32 delta (no compression).
     Dense(Vec<f32>),
@@ -68,9 +68,17 @@ impl CompressedUpdate {
 /// Keep only the `k` largest-magnitude coordinates of `delta`.
 pub fn top_k(delta: &[f32], k: usize) -> CompressedUpdate {
     let k = k.min(delta.len());
+    if k == 0 {
+        // Empty delta (or k == 0): nothing survives selection. Bailing out
+        // here also keeps `delta.len() - 1` below from underflowing.
+        return CompressedUpdate::TopK {
+            dim: delta.len(),
+            entries: Vec::new(),
+        };
+    }
     let mut idx: Vec<u32> = (0..delta.len() as u32).collect();
     // Partial selection by magnitude.
-    let nth = k.saturating_sub(1).min(delta.len() - 1);
+    let nth = (k - 1).min(delta.len() - 1);
     idx.select_nth_unstable_by(nth, |&a, &b| {
         delta[b as usize]
             .abs()
@@ -90,6 +98,13 @@ pub fn top_k(delta: &[f32], k: usize) -> CompressedUpdate {
 pub fn quantize(delta: &[f32], bits: u8, rng: &mut Rng) -> Result<CompressedUpdate> {
     if !(1..=16).contains(&bits) {
         bail!("quantize: bits {bits} out of [1, 16]");
+    }
+    if let Some(pos) = delta.iter().position(|v| !v.is_finite()) {
+        // NaN/±inf would poison min/max and turn every code into garbage.
+        bail!(
+            "quantize: non-finite value {} at index {pos}",
+            delta[pos]
+        );
     }
     let min = delta.iter().cloned().fold(f32::INFINITY, f32::min);
     let max = delta.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -189,6 +204,27 @@ mod tests {
         let mut rng = Rng::seed_from(0);
         assert!(quantize(&[1.0], 0, &mut rng).is_err());
         assert!(quantize(&[1.0], 17, &mut rng).is_err());
+    }
+
+    #[test]
+    fn topk_empty_delta_and_zero_k_do_not_panic() {
+        // Regression: `delta.len() - 1` underflowed on an empty delta.
+        let c = top_k(&[], 5);
+        assert_eq!(c.decompress(), Vec::<f32>::new());
+        assert!(matches!(&c, CompressedUpdate::TopK { dim: 0, entries } if entries.is_empty()));
+        let d = delta(10, 4);
+        let c = top_k(&d, 0);
+        assert_eq!(c.decompress(), vec![0f32; 10]);
+        assert!(matches!(&c, CompressedUpdate::TopK { dim: 10, entries } if entries.is_empty()));
+    }
+
+    #[test]
+    fn quantize_rejects_non_finite_inputs() {
+        let mut rng = Rng::seed_from(0);
+        assert!(quantize(&[1.0, f32::NAN], 8, &mut rng).is_err());
+        assert!(quantize(&[f32::INFINITY, 0.0], 8, &mut rng).is_err());
+        assert!(quantize(&[f32::NEG_INFINITY], 8, &mut rng).is_err());
+        quantize(&[1.0, -1.0], 8, &mut rng).unwrap();
     }
 
     #[test]

@@ -461,6 +461,25 @@ pub fn scaffold_cv_update(
         .collect()
 }
 
+/// The Gaussian mechanism on an aggregate (DP-FedAvg, Geyer et al. [7]):
+/// per-coordinate noise with std `sigma·clip/n`, drawn from the round's
+/// `"dp_noise"` stream. This is *the* shared noise step behind both the
+/// legacy `dpfl` strategy and the `channel.dp` path — any change here moves
+/// both in lockstep (their bitwise identity is pinned by test).
+pub fn apply_dp_noise(
+    agg: &mut [f32],
+    clip: f64,
+    sigma: f64,
+    n_updates: usize,
+    round_rng: &mut crate::util::rng::Rng,
+) {
+    let std = (sigma * clip / n_updates.max(1) as f64) as f32;
+    let mut noise_rng = round_rng.derive("dp_noise", 0);
+    for v in agg.iter_mut() {
+        *v += std * noise_rng.normal_f32();
+    }
+}
+
 /// DP-FedAvg (Geyer et al. [7]) server-side treatment of one client delta:
 /// clip the update to `clip_norm`, then (the caller) adds Gaussian noise.
 pub fn clip_update(global: &[f32], client: &[f32], clip_norm: f64) -> Vec<f32> {

@@ -39,7 +39,7 @@ use crate::util::json::Json;
 /// Bumped whenever the engine's numeric contract changes (a new reduction
 /// semantics, a retrained reference backend, ...) so stale cells re-run
 /// instead of being served from cache.
-pub const ENGINE_VERSION: &str = concat!("flsim-", env!("CARGO_PKG_VERSION"), "+engine.v3");
+pub const ENGINE_VERSION: &str = concat!("flsim-", env!("CARGO_PKG_VERSION"), "+engine.v4");
 
 /// Schema tag of one stored cell document. v2 added partial (rung-stopped)
 /// entries — the report's `stopped_early` flag and prefix depth; v1 entries

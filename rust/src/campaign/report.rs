@@ -39,6 +39,9 @@ pub struct CellRow {
     pub net_bytes: u64,
     /// Final-round global model hash (provenance).
     pub model_hash: String,
+    /// Cumulative DP ε spent by the cell's final round (0.0 when the cell
+    /// has no `channel.dp` stage).
+    pub dp_epsilon: f64,
 }
 
 impl CellRow {
@@ -65,6 +68,7 @@ impl CellRow {
                 .last()
                 .map(|m| m.model_hash.clone())
                 .unwrap_or_default(),
+            dp_epsilon: r.rounds.last().map(|m| m.dp_epsilon).unwrap_or(0.0),
         }
     }
 }
@@ -101,11 +105,12 @@ impl CampaignReport {
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "cell,key,strategy,topology,backend,n_clients,n_workers,seed,rounds,stopped_early,\
-             final_accuracy,best_accuracy,final_loss,wall_secs,sim_round_secs,net_bytes,model_hash\n",
+             final_accuracy,best_accuracy,final_loss,wall_secs,sim_round_secs,net_bytes,model_hash,\
+             dp_epsilon\n",
         );
         for r in &self.rows {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.4},{:.4},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.4},{:.4},{},{},{:.6}\n",
                 r.cell,
                 r.key,
                 r.strategy,
@@ -122,7 +127,8 @@ impl CampaignReport {
                 r.wall_secs,
                 r.sim_round_secs,
                 r.net_bytes,
-                r.model_hash
+                r.model_hash,
+                r.dp_epsilon
             ));
         }
         s
@@ -156,6 +162,7 @@ impl CampaignReport {
                                 ("sim_round_secs", Json::Num(r.sim_round_secs)),
                                 ("net_bytes", Json::from(r.net_bytes as usize)),
                                 ("model_hash", Json::from(r.model_hash.as_str())),
+                                ("dp_epsilon", Json::Num(r.dp_epsilon)),
                             ])
                         })
                         .collect(),
@@ -178,29 +185,47 @@ impl CampaignReport {
     }
 }
 
-/// The robustness frontier: mean final accuracy pivoted over (attack
-/// fraction × aggregator) — what a one-YAML attack×defense sweep is run
-/// for. Rows are the sorted distinct `attack_fraction` values, columns the
-/// sorted aggregator labels (`weighted_mean` when no robust aggregator is
-/// configured), and each value averages the final accuracy of every
-/// completed cell landing in that (fraction, aggregator) combination
+/// A campaign frontier: summary metrics pivoted over the sweep surface the
+/// campaign actually explored.
+///
+/// * **Adversary sweeps** pivot mean final accuracy over (attack fraction ×
+///   aggregator) — what a one-YAML attack×defense sweep is run for. Rows
+///   are the sorted distinct `attack_fraction` values, columns the sorted
+///   aggregator labels (`weighted_mean` when no robust aggregator is
+///   configured).
+/// * **Channel sweeps** (tried when there is no adversary surface) pivot
+///   mean final accuracy, cumulative DP ε, and wire gigabytes over
+///   (compression × dp σ). Rows are the sorted distinct compression labels
+///   (`none` / `top_k:<k>` / `quantize:<bits>`), columns the
+///   `accuracy_s<σ>` / `epsilon_s<σ>` / `wire_gb_s<σ>` triple per sorted σ.
+///
+/// Each value averages every completed cell landing in that combination
 /// (NaN = no cell there).
 #[derive(Clone, Debug)]
 pub struct FrontierReport {
     pub name: String,
+    /// Adversary pivot rows (empty for a channel frontier).
     pub fractions: Vec<f64>,
+    /// Column labels: aggregators for the adversary pivot, per-σ metric
+    /// columns for the channel pivot.
     pub aggregators: Vec<String>,
-    /// `values[row][col]`, row-major over `fractions` × `aggregators`.
+    /// `values[row][col]`, row-major over rows × `aggregators`.
     pub values: Vec<Vec<f64>>,
+    /// Channel pivot rows (empty for an adversary frontier).
+    pub compress_labels: Vec<String>,
 }
 
 impl FrontierReport {
-    /// Pivot a finished campaign into a frontier. Returns `None` unless the
-    /// campaign genuinely swept the adversary surface — at least two
-    /// distinct (fraction, aggregator) combinations and at least one cell
-    /// with an active adversary — so plain campaigns never grow an extra
-    /// artifact.
+    /// Pivot a finished campaign into a frontier. The adversary pivot wins
+    /// when both surfaces were swept; each pivot returns `None` unless the
+    /// campaign genuinely swept it — at least two distinct combinations and
+    /// at least one cell with the section active — so plain campaigns never
+    /// grow an extra artifact.
     pub fn from_outcome(outcome: &CampaignOutcome) -> Option<FrontierReport> {
+        Self::adversary_pivot(outcome).or_else(|| Self::channel_pivot(outcome))
+    }
+
+    fn adversary_pivot(outcome: &CampaignOutcome) -> Option<FrontierReport> {
         let mut samples: Vec<(f64, String, f64)> = Vec::new();
         let mut any_active = false;
         for c in &outcome.cells {
@@ -257,19 +282,134 @@ impl FrontierReport {
             fractions,
             aggregators,
             values,
+            compress_labels: Vec::new(),
         })
     }
 
-    /// Dashboard table (one row per attack fraction).
+    fn channel_pivot(outcome: &CampaignOutcome) -> Option<FrontierReport> {
+        // (compress label, σ, final accuracy, cumulative ε, wire GB).
+        let mut samples: Vec<(String, f64, f64, f64, f64)> = Vec::new();
+        let mut any_active = false;
+        for c in &outcome.cells {
+            if c.error.is_some() {
+                continue;
+            }
+            let Some(report) = &c.report else { continue };
+            let label = c.cell.job.channel.compress.label();
+            let sigma = c.cell.job.channel.dp.map(|d| d.sigma).unwrap_or(0.0);
+            any_active |= c.cell.job.channel.is_active();
+            let eps = report.rounds.last().map(|m| m.dp_epsilon).unwrap_or(0.0);
+            let wire_gb = report.total_net_bytes() as f64 / 1e9;
+            samples.push((label, sigma, report.final_accuracy(), eps, wire_gb));
+        }
+        let combos: BTreeSet<(&str, u64)> = samples
+            .iter()
+            .map(|(l, s, ..)| (l.as_str(), s.to_bits()))
+            .collect();
+        if combos.len() < 2 || !any_active {
+            return None;
+        }
+        let compress_labels: Vec<String> = samples
+            .iter()
+            .map(|s| s.0.clone())
+            .collect::<BTreeSet<String>>()
+            .into_iter()
+            .collect();
+        let mut sigmas: Vec<f64> = samples.iter().map(|s| s.1).collect();
+        sigmas.sort_by(f64::total_cmp);
+        sigmas.dedup_by(|a, b| a.to_bits() == b.to_bits());
+        let mut aggregators = Vec::new();
+        for s in &sigmas {
+            aggregators.push(format!("accuracy_s{s}"));
+            aggregators.push(format!("epsilon_s{s}"));
+            aggregators.push(format!("wire_gb_s{s}"));
+        }
+        let values = compress_labels
+            .iter()
+            .map(|l| {
+                let mut row = Vec::with_capacity(aggregators.len());
+                for sg in &sigmas {
+                    let hits: Vec<&(String, f64, f64, f64, f64)> = samples
+                        .iter()
+                        .filter(|(sl, ss, ..)| sl == l && ss.to_bits() == sg.to_bits())
+                        .collect();
+                    if hits.is_empty() {
+                        row.extend([f64::NAN; 3]);
+                    } else {
+                        let n = hits.len() as f64;
+                        row.push(hits.iter().map(|h| h.2).sum::<f64>() / n);
+                        row.push(hits.iter().map(|h| h.3).sum::<f64>() / n);
+                        row.push(hits.iter().map(|h| h.4).sum::<f64>() / n);
+                    }
+                }
+                row
+            })
+            .collect();
+        Some(FrontierReport {
+            name: outcome.name.clone(),
+            fractions: Vec::new(),
+            aggregators,
+            values,
+            compress_labels,
+        })
+    }
+
+    fn is_channel(&self) -> bool {
+        !self.compress_labels.is_empty()
+    }
+
+    /// First table/CSV column header.
+    fn axis_name(&self) -> &'static str {
+        if self.is_channel() {
+            "compress"
+        } else {
+            "attack_fraction"
+        }
+    }
+
+    /// Row label in CSV form (the adversary pivot keeps the raw `f64`
+    /// Display it has always written).
+    fn row_csv(&self, i: usize) -> String {
+        if self.is_channel() {
+            self.compress_labels[i].clone()
+        } else {
+            format!("{}", self.fractions[i])
+        }
+    }
+
+    fn row_render(&self, i: usize) -> String {
+        if self.is_channel() {
+            format!("{:>16}", self.compress_labels[i])
+        } else {
+            format!("{:>16.2}", self.fractions[i])
+        }
+    }
+
+    fn n_rows(&self) -> usize {
+        if self.is_channel() {
+            self.compress_labels.len()
+        } else {
+            self.fractions.len()
+        }
+    }
+
+    /// Dashboard table (one row per attack fraction / compression label).
     pub fn render(&self) -> String {
-        let mut s = format!("robustness frontier '{}' — mean final accuracy\n", self.name);
-        s.push_str(&format!("{:>16}", "attack_fraction"));
+        let mut s = if self.is_channel() {
+            format!(
+                "channel frontier '{}' — mean final accuracy / cumulative ε / wire GB\n",
+                self.name
+            )
+        } else {
+            format!("robustness frontier '{}' — mean final accuracy\n", self.name)
+        };
+        s.push_str(&format!("{:>16}", self.axis_name()));
         for a in &self.aggregators {
             s.push_str(&format!("  {a:>14}"));
         }
         s.push('\n');
-        for (i, f) in self.fractions.iter().enumerate() {
-            s.push_str(&format!("{f:>16.2}"));
+        for i in 0..self.n_rows() {
+            s.push_str(&self.row_render(i));
             for v in &self.values[i] {
                 if v.is_nan() {
                     s.push_str(&format!("  {:>14}", "-"));
@@ -282,17 +422,17 @@ impl FrontierReport {
         s
     }
 
-    /// `attack_fraction,<agg>,...` with one row per fraction; empty field =
-    /// no cell at that combination.
+    /// `attack_fraction,<agg>,...` (or `compress,<metric_sσ>,...`) with one
+    /// row per pivot row; empty field = no cell at that combination.
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("attack_fraction");
+        let mut s = String::from(self.axis_name());
         for a in &self.aggregators {
             s.push(',');
             s.push_str(a);
         }
         s.push('\n');
-        for (i, f) in self.fractions.iter().enumerate() {
-            s.push_str(&format!("{f}"));
+        for i in 0..self.n_rows() {
+            s.push_str(&self.row_csv(i));
             for v in &self.values[i] {
                 s.push(',');
                 if !v.is_nan() {
@@ -464,6 +604,123 @@ mod tests {
             c.cell.job.adversary.attack_fraction = 0.0;
         }
         assert!(FrontierReport::from_outcome(&o).is_none());
+    }
+
+    fn channel_outcome() -> CampaignOutcome {
+        use crate::config::channel::{ChannelConfig, DpConfig};
+        let mk = |compress: &str, sigma: f64, acc: f64, eps: f64, bytes: u64| {
+            let mut job = JobConfig::default_cnn("fedavg");
+            job.channel.compress = ChannelConfig::parse_compress_axis(compress).unwrap();
+            job.channel.dp = (sigma > 0.0).then(|| DpConfig {
+                clip: 10.0,
+                sigma,
+                delta: 1e-5,
+            });
+            let name = format!("{compress}_s{sigma}");
+            let report = RunReport {
+                label: name.clone(),
+                strategy: "fedavg".into(),
+                topology: "client_server".into(),
+                backend: "cnn".into(),
+                n_clients: 4,
+                n_workers: 1,
+                seed: 1,
+                stopped_early: false,
+                rounds: vec![RoundMetrics {
+                    round: 1,
+                    test_accuracy: acc,
+                    net_bytes: bytes,
+                    dp_epsilon: eps,
+                    ..Default::default()
+                }],
+            };
+            CellOutcome {
+                cell: Cell {
+                    name: name.clone(),
+                    job,
+                    key: format!("k_{name}"),
+                },
+                cached: false,
+                report: Some(report),
+                error: None,
+            }
+        };
+        CampaignOutcome {
+            name: "chan".into(),
+            cells: vec![
+                mk("none", 0.0, 0.9, 0.0, 3_000_000_000),
+                mk("top_k:8000", 0.0, 0.88, 0.0, 700_000_000),
+                mk("none", 0.01, 0.85, 12.0, 3_000_000_000),
+                mk("top_k:8000", 0.01, 0.83, 12.0, 700_000_000),
+            ],
+        }
+    }
+
+    #[test]
+    fn channel_frontier_pivots_compress_by_sigma() {
+        let f = FrontierReport::from_outcome(&channel_outcome()).unwrap();
+        assert!(f.fractions.is_empty());
+        assert_eq!(
+            f.compress_labels,
+            vec!["none".to_string(), "top_k:8000".to_string()]
+        );
+        assert_eq!(
+            f.aggregators,
+            vec![
+                "accuracy_s0",
+                "epsilon_s0",
+                "wire_gb_s0",
+                "accuracy_s0.01",
+                "epsilon_s0.01",
+                "wire_gb_s0.01"
+            ]
+        );
+        // values[row]: (acc, ε, GB) per σ — none row, then top_k row.
+        assert_eq!(f.values[0][0], 0.9);
+        assert_eq!(f.values[0][1], 0.0);
+        assert_eq!(f.values[0][2], 3.0);
+        assert_eq!(f.values[0][3], 0.85);
+        assert_eq!(f.values[0][4], 12.0);
+        assert_eq!(f.values[1][5], 0.7);
+        let csv = f.to_csv();
+        assert!(csv.starts_with("compress,accuracy_s0,epsilon_s0,wire_gb_s0,"));
+        assert!(csv.contains("top_k:8000,0.880000,"));
+        assert!(f.render().contains("channel frontier 'chan'"));
+        // Deterministic.
+        let g = FrontierReport::from_outcome(&channel_outcome()).unwrap();
+        assert_eq!(f.to_csv(), g.to_csv());
+    }
+
+    #[test]
+    fn adversary_pivot_wins_when_both_surfaces_swept() {
+        let mut o = frontier_outcome();
+        for c in &mut o.cells {
+            c.cell.job.channel.compress =
+                crate::config::channel::ChannelConfig::parse_compress_axis("quantize:4").unwrap();
+        }
+        let f = FrontierReport::from_outcome(&o).unwrap();
+        assert!(f.compress_labels.is_empty());
+        assert!(f.to_csv().starts_with("attack_fraction,"));
+    }
+
+    #[test]
+    fn channel_frontier_requires_a_genuine_sweep() {
+        // A single (compress, σ) combination — even an active one — is not
+        // a sweep.
+        let mut o = channel_outcome();
+        o.cells.truncate(1);
+        assert!(FrontierReport::from_outcome(&o).is_none());
+    }
+
+    #[test]
+    fn cell_rows_carry_dp_epsilon() {
+        let rep = CampaignReport::from_outcome(&channel_outcome());
+        assert_eq!(rep.rows[2].dp_epsilon, 12.0);
+        let csv = rep.to_csv();
+        assert!(csv.lines().next().unwrap().ends_with(",model_hash,dp_epsilon"));
+        assert!(csv.lines().nth(3).unwrap().ends_with(",12.000000"));
+        let j = rep.to_json().to_string();
+        assert!(j.contains("\"dp_epsilon\":12"));
     }
 
     #[test]

@@ -473,11 +473,52 @@ pub fn apply_axis(job: &mut JobConfig, axis: &str, value: &Yaml) -> Result<()> {
                 })
             };
         }
+        "compress" => {
+            job.channel.compress =
+                crate::config::channel::ChannelConfig::parse_compress_axis(want_str()?)?;
+        }
+        "compress_bits" => {
+            // Integer shorthand for quantization sweeps: 0 turns the stage
+            // off, 1..=16 selects `quantize:<bits>`.
+            let bits = want_nonneg()?;
+            job.channel.compress = match bits {
+                0 => crate::config::channel::CompressConfig::default(),
+                b => crate::config::channel::ChannelConfig::parse_compress_axis(&format!(
+                    "quantize:{b}"
+                ))?,
+            };
+        }
+        "dp_sigma" => {
+            // Noise multiplier: 0.0 turns the dp stage off (the channel
+            // identity); positive values keep the base config's clip/delta
+            // if a dp section was set, else fill the documented defaults.
+            let sigma = want_f64()?;
+            job.channel.dp = if sigma <= 0.0 {
+                None
+            } else {
+                let base = job.channel.dp.unwrap_or(crate::config::channel::DpConfig {
+                    clip: crate::config::channel::DpConfig::DEFAULT_CLIP,
+                    sigma,
+                    delta: crate::config::channel::DpConfig::DEFAULT_DELTA,
+                });
+                Some(crate::config::channel::DpConfig { sigma, ..base })
+            };
+        }
+        "secure_agg" => {
+            // Unmasking threshold: 0 turns the stage off.
+            let threshold = want_nonneg()?;
+            job.channel.secure_agg = match threshold {
+                0 => None,
+                t => Some(crate::config::channel::SecureAggConfig {
+                    threshold: t as usize,
+                }),
+            };
+        }
         _ => bail!(
             "unknown campaign axis '{axis}' (supported: strategy topology backend partition \
              seed rounds clients workers dataset_n heterogeneity client_fraction \
              learning_rate local_epochs hw_profile parallelism attack attack_fraction \
-             attack_scale robust_agg churn)"
+             attack_scale robust_agg churn compress compress_bits dp_sigma secure_agg)"
         ),
     }
     Ok(())
@@ -652,6 +693,42 @@ topology:
         assert!(j.faults.churn.is_none());
         assert!(apply_axis(&mut j, "attack", &Yaml::from("nonsense")).is_err());
         assert!(apply_axis(&mut j, "robust_agg", &Yaml::from("nonsense")).is_err());
+    }
+
+    #[test]
+    fn channel_axes_apply() {
+        use crate::config::channel::{CompressKind, DpConfig};
+        let mut j = JobConfig::default_cnn("fedavg");
+        apply_axis(&mut j, "compress", &Yaml::from("top_k:8000")).unwrap();
+        assert_eq!(j.channel.compress.kind, CompressKind::TopK);
+        assert_eq!(j.channel.compress.k, 8000);
+        apply_axis(&mut j, "compress", &Yaml::from("none")).unwrap();
+        assert!(!j.channel.compress.is_active());
+        apply_axis(&mut j, "compress_bits", &Yaml::Int(4)).unwrap();
+        assert_eq!(j.channel.compress.kind, CompressKind::Quantize);
+        assert_eq!(j.channel.compress.bits, 4);
+        apply_axis(&mut j, "compress_bits", &Yaml::Int(0)).unwrap();
+        assert!(!j.channel.compress.is_active());
+        // dp_sigma: 0.0 is the identity; positive keeps base clip/delta.
+        apply_axis(&mut j, "dp_sigma", &Yaml::Float(0.01)).unwrap();
+        let dp = j.channel.dp.unwrap();
+        assert_eq!(dp.sigma, 0.01);
+        assert_eq!(dp.clip, DpConfig::DEFAULT_CLIP);
+        j.channel.dp = Some(DpConfig { clip: 3.0, sigma: 0.5, delta: 1e-6 });
+        apply_axis(&mut j, "dp_sigma", &Yaml::Float(0.02)).unwrap();
+        let dp = j.channel.dp.unwrap();
+        assert_eq!(dp.sigma, 0.02);
+        assert_eq!(dp.clip, 3.0);
+        assert_eq!(dp.delta, 1e-6);
+        apply_axis(&mut j, "dp_sigma", &Yaml::Float(0.0)).unwrap();
+        assert!(j.channel.dp.is_none());
+        apply_axis(&mut j, "secure_agg", &Yaml::Int(5)).unwrap();
+        assert_eq!(j.channel.secure_agg.unwrap().threshold, 5);
+        apply_axis(&mut j, "secure_agg", &Yaml::Int(0)).unwrap();
+        assert!(j.channel.secure_agg.is_none());
+        assert!(apply_axis(&mut j, "compress", &Yaml::from("top_k")).is_err());
+        assert!(apply_axis(&mut j, "compress_bits", &Yaml::Int(17)).is_err());
+        assert!(apply_axis(&mut j, "secure_agg", &Yaml::Int(-1)).is_err());
     }
 
     #[test]

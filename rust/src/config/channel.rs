@@ -1,0 +1,476 @@
+//! Composable channel configuration: the `channel:` job section.
+//!
+//! Every logical client→server transfer can pass through a per-job channel
+//! stack with three independently-toggled stages, applied in a fixed order
+//! at the client-update boundary of the round engine:
+//!
+//! 1. **DP** (`dp: {clip, sigma, delta}`) — server-side DP-FedAvg treatment
+//!    (Geyer et al.): each client delta is L2-clipped to `clip`, and the
+//!    aggregated mean receives Gaussian noise with std `sigma·clip/n`. A DP
+//!    accountant ([`crate::metrics::privacy`]) tracks the cumulative (ε, δ)
+//!    spend per round into RoundMetrics and campaign reports. `fedavg` plus
+//!    `channel.dp` is bitwise-identical to the legacy `dpfl` strategy
+//!    (pinned by test), which it supersedes.
+//! 2. **Compression** (`compress: {kind: none|top_k|quantize, k|bits}`) —
+//!    client deltas are compressed before upload and decompressed
+//!    server-side; the network fabric meters the transfer at the compressed
+//!    [`crate::aggregate::compress::CompressedUpdate::wire_bytes`], so
+//!    `net_bytes` and `sim_round_secs` honestly reflect the channel.
+//! 3. **Secure aggregation** (`secure_agg: {threshold}`) — a cost model of
+//!    masked-share exchange (Bonawitz et al.): each participating client
+//!    additionally exchanges pairwise mask shares, dropped clients cost a
+//!    share-recovery round among survivors, and rounds with fewer than
+//!    `threshold` surviving updates abort. Simulation-only: prices the
+//!    protocol through the network fabric without changing aggregation
+//!    results.
+//!
+//! The determinism contract from the adversary sections extends here: all
+//! channel randomness (quantization dither) derives from the job seed via
+//! [`crate::util::rng::Rng::derive`], and an *inactive* section (absent,
+//! `compress.kind: none`, no `dp:`, no `secure_agg:`) is bitwise-identical
+//! to a config without it — no cache-key contribution, no RNG draws.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+use crate::util::yaml::Yaml;
+
+/// Upload compression scheme (see [`crate::aggregate::compress`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompressKind {
+    /// Dense f32 upload (the identity channel).
+    None,
+    /// Keep the `k` largest-magnitude delta coordinates.
+    TopK,
+    /// Uniform `bits`-bit quantization with stochastic rounding.
+    Quantize,
+}
+
+impl CompressKind {
+    pub fn parse(name: &str) -> Result<CompressKind> {
+        Ok(match name {
+            "none" => CompressKind::None,
+            "top_k" | "topk" => CompressKind::TopK,
+            "quantize" => CompressKind::Quantize,
+            _ => bail!("unknown compression '{name}' (supported: none top_k quantize)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressKind::None => "none",
+            CompressKind::TopK => "top_k",
+            CompressKind::Quantize => "quantize",
+        }
+    }
+}
+
+/// The `channel.compress:` stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompressConfig {
+    pub kind: CompressKind,
+    /// Coordinates kept per upload (`top_k` only).
+    pub k: usize,
+    /// Code width in bits, 1..=16 (`quantize` only).
+    pub bits: u8,
+}
+
+impl Default for CompressConfig {
+    fn default() -> Self {
+        CompressConfig {
+            kind: CompressKind::None,
+            k: 0,
+            bits: 0,
+        }
+    }
+}
+
+impl CompressConfig {
+    pub fn is_active(&self) -> bool {
+        self.kind != CompressKind::None
+    }
+
+    /// Human-readable axis label (`none` / `top_k:8000` / `quantize:4`),
+    /// the inverse of [`ChannelConfig::parse_compress_axis`].
+    pub fn label(&self) -> String {
+        match self.kind {
+            CompressKind::None => "none".into(),
+            CompressKind::TopK => format!("top_k:{}", self.k),
+            CompressKind::Quantize => format!("quantize:{}", self.bits),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self.kind {
+            CompressKind::None => {}
+            CompressKind::TopK => {
+                if self.k < 1 {
+                    bail!("channel.compress: top_k requires k >= 1, got {}", self.k);
+                }
+            }
+            CompressKind::Quantize => {
+                if !(1..=16).contains(&self.bits) {
+                    bail!(
+                        "channel.compress: quantize requires bits in 1..=16, got {}",
+                        self.bits
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical cache-key fragment — only ever called when active.
+    pub fn canonical_json(&self) -> Json {
+        let mut pairs = vec![("kind", Json::from(self.kind.name()))];
+        match self.kind {
+            CompressKind::TopK => pairs.push(("k", Json::from(self.k))),
+            CompressKind::Quantize => pairs.push(("bits", Json::from(self.bits as usize))),
+            CompressKind::None => {}
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// The `channel.dp:` stage — DP-FedAvg server-side clipping + noise with
+/// per-round (ε, δ) accounting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DpConfig {
+    /// L2 clipping bound applied to every client delta.
+    pub clip: f64,
+    /// Noise multiplier: aggregate noise std is `sigma·clip/n`.
+    pub sigma: f64,
+    /// Per-round δ for the (ε, δ) accountant.
+    pub delta: f64,
+}
+
+impl DpConfig {
+    pub const DEFAULT_CLIP: f64 = 10.0;
+    pub const DEFAULT_DELTA: f64 = 1e-5;
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.clip.is_finite() || self.clip <= 0.0 {
+            bail!("channel.dp.clip must be a finite positive bound, got {}", self.clip);
+        }
+        if !self.sigma.is_finite() || self.sigma < 0.0 {
+            bail!(
+                "channel.dp.sigma must be a finite non-negative multiplier, got {}",
+                self.sigma
+            );
+        }
+        if !self.delta.is_finite() || !(0.0 < self.delta && self.delta < 1.0) {
+            bail!("channel.dp.delta must be in (0, 1), got {}", self.delta);
+        }
+        Ok(())
+    }
+
+    /// Canonical cache-key fragment — only ever called when active.
+    pub fn canonical_json(&self) -> Json {
+        Json::obj(vec![
+            ("clip", Json::Num(self.clip)),
+            ("sigma", Json::Num(self.sigma)),
+            ("delta", Json::Num(self.delta)),
+        ])
+    }
+}
+
+/// The `channel.secure_agg:` stage — masked-share exchange cost model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SecureAggConfig {
+    /// Minimum surviving updates required to unmask the aggregate.
+    pub threshold: usize,
+}
+
+impl SecureAggConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.threshold < 1 {
+            bail!(
+                "channel.secure_agg.threshold must be >= 1, got {}",
+                self.threshold
+            );
+        }
+        Ok(())
+    }
+
+    /// Canonical cache-key fragment — only ever called when active.
+    pub fn canonical_json(&self) -> Json {
+        Json::obj(vec![("threshold", Json::from(self.threshold))])
+    }
+}
+
+/// The `channel:` section: the composable per-job transfer stack.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ChannelConfig {
+    pub compress: CompressConfig,
+    pub dp: Option<DpConfig>,
+    pub secure_agg: Option<SecureAggConfig>,
+}
+
+impl ChannelConfig {
+    /// Whether any stage is configured. Inactive channels are contractually
+    /// invisible: no cache-key contribution, no RNG draws, bitwise-identical
+    /// runs.
+    pub fn is_active(&self) -> bool {
+        self.compress.is_active() || self.dp.is_some() || self.secure_agg.is_some()
+    }
+
+    pub fn from_yaml(y: &Yaml) -> Result<ChannelConfig> {
+        let mut cfg = ChannelConfig::default();
+        if let Some(c) = y.get("compress") {
+            let kind = c
+                .get("kind")
+                .and_then(Yaml::as_str)
+                .ok_or_else(|| anyhow!("channel.compress: missing kind"))?;
+            cfg.compress.kind = CompressKind::parse(kind)?;
+            if let Some(k) = c.get("k") {
+                let k = k
+                    .as_i64()
+                    .ok_or_else(|| anyhow!("channel.compress.k must be an integer"))?;
+                if k < 1 {
+                    bail!("channel.compress.k must be >= 1, got {k}");
+                }
+                cfg.compress.k = k as usize;
+            }
+            if let Some(b) = c.get("bits") {
+                let b = b
+                    .as_i64()
+                    .ok_or_else(|| anyhow!("channel.compress.bits must be an integer"))?;
+                if !(1..=16).contains(&b) {
+                    bail!("channel.compress.bits must be in 1..=16, got {b}");
+                }
+                cfg.compress.bits = b as u8;
+            }
+        }
+        if let Some(d) = y.get("dp") {
+            let f = |key: &str, default: f64| -> Result<f64> {
+                match d.get(key) {
+                    None => Ok(default),
+                    Some(v) => v
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("channel.dp.{key} must be a number")),
+                }
+            };
+            cfg.dp = Some(DpConfig {
+                clip: f("clip", DpConfig::DEFAULT_CLIP)?,
+                sigma: d
+                    .get("sigma")
+                    .and_then(Yaml::as_f64)
+                    .ok_or_else(|| anyhow!("channel.dp: missing sigma"))?,
+                delta: f("delta", DpConfig::DEFAULT_DELTA)?,
+            });
+        }
+        if let Some(s) = y.get("secure_agg") {
+            let threshold = s
+                .get("threshold")
+                .and_then(Yaml::as_i64)
+                .ok_or_else(|| anyhow!("channel.secure_agg: missing threshold"))?;
+            if threshold < 1 {
+                bail!("channel.secure_agg.threshold must be >= 1, got {threshold}");
+            }
+            cfg.secure_agg = Some(SecureAggConfig {
+                threshold: threshold as usize,
+            });
+        }
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.compress.validate()?;
+        if let Some(dp) = &self.dp {
+            dp.validate()?;
+        }
+        if let Some(sa) = &self.secure_agg {
+            sa.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Campaign-axis form for the `compress` axis:
+    /// `none` / `top_k:<k>` / `quantize:<bits>`.
+    pub fn parse_compress_axis(value: &str) -> Result<CompressConfig> {
+        let mut cfg = CompressConfig::default();
+        match value.split_once(':') {
+            None => {
+                cfg.kind = CompressKind::parse(value)?;
+                if cfg.kind != CompressKind::None {
+                    bail!(
+                        "compress '{value}': {} needs a parameter ({})",
+                        cfg.kind.name(),
+                        if cfg.kind == CompressKind::TopK {
+                            "top_k:<k>"
+                        } else {
+                            "quantize:<bits>"
+                        }
+                    );
+                }
+            }
+            Some((kind, param)) => {
+                cfg.kind = CompressKind::parse(kind)?;
+                let p: i64 = param
+                    .parse()
+                    .map_err(|_| anyhow!("compress '{value}': bad parameter {param:?}"))?;
+                match cfg.kind {
+                    CompressKind::None => bail!("compress '{value}': none takes no parameter"),
+                    CompressKind::TopK => {
+                        if p < 1 {
+                            bail!("compress '{value}': k must be >= 1");
+                        }
+                        cfg.k = p as usize;
+                    }
+                    CompressKind::Quantize => {
+                        if !(1..=16).contains(&p) {
+                            bail!("compress '{value}': bits must be in 1..=16");
+                        }
+                        cfg.bits = p as u8;
+                    }
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Canonical cache-key fragment — only ever called when active, and
+    /// only includes the stages that are themselves active, so toggling an
+    /// unrelated stage never perturbs the others' key bytes.
+    pub fn canonical_json(&self) -> Json {
+        let mut pairs = Vec::new();
+        if self.compress.is_active() {
+            pairs.push(("compress", self.compress.canonical_json()));
+        }
+        if let Some(dp) = &self.dp {
+            pairs.push(("dp", dp.canonical_json()));
+        }
+        if let Some(sa) = &self.secure_agg {
+            pairs.push(("secure_agg", sa.canonical_json()));
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compress_kinds_round_trip() {
+        for name in ["none", "top_k", "quantize"] {
+            assert_eq!(CompressKind::parse(name).unwrap().name(), name);
+        }
+        assert!(CompressKind::parse("gzip").is_err());
+    }
+
+    #[test]
+    fn defaults_inactive_and_valid() {
+        let c = ChannelConfig::default();
+        assert!(!c.is_active());
+        c.validate().unwrap();
+        assert!(!c.compress.is_active());
+    }
+
+    #[test]
+    fn from_yaml_full_stack() {
+        let y = Yaml::parse(
+            "compress:\n  kind: top_k\n  k: 500\ndp:\n  clip: 5.0\n  sigma: 0.01\n  \
+             delta: 0.00001\nsecure_agg:\n  threshold: 3\n",
+        )
+        .unwrap();
+        let c = ChannelConfig::from_yaml(&y).unwrap();
+        assert_eq!(c.compress.kind, CompressKind::TopK);
+        assert_eq!(c.compress.k, 500);
+        let dp = c.dp.unwrap();
+        assert_eq!(dp.clip, 5.0);
+        assert_eq!(dp.sigma, 0.01);
+        assert_eq!(c.secure_agg.unwrap().threshold, 3);
+        assert!(c.is_active());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn dp_defaults_fill_in() {
+        let y = Yaml::parse("dp:\n  sigma: 0.02\n").unwrap();
+        let c = ChannelConfig::from_yaml(&y).unwrap();
+        let dp = c.dp.unwrap();
+        assert_eq!(dp.clip, DpConfig::DEFAULT_CLIP);
+        assert_eq!(dp.delta, DpConfig::DEFAULT_DELTA);
+        assert_eq!(dp.sigma, 0.02);
+        // sigma is mandatory — a dp section without it is an error, not a
+        // silently-noiseless channel.
+        let y = Yaml::parse("dp:\n  clip: 1.0\n").unwrap();
+        assert!(ChannelConfig::from_yaml(&y).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let mut c = ChannelConfig::default();
+        c.compress.kind = CompressKind::TopK; // k defaults to 0
+        assert!(c.validate().is_err());
+        c.compress.k = 8;
+        c.validate().unwrap();
+        let mut c = ChannelConfig::default();
+        c.compress.kind = CompressKind::Quantize;
+        c.compress.bits = 0;
+        assert!(c.validate().is_err());
+        c.compress.bits = 17;
+        assert!(c.validate().is_err());
+        c.compress.bits = 16;
+        c.validate().unwrap();
+        for (clip, sigma, delta) in [
+            (0.0, 0.01, 1e-5),
+            (f64::NAN, 0.01, 1e-5),
+            (1.0, -0.1, 1e-5),
+            (1.0, f64::INFINITY, 1e-5),
+            (1.0, 0.01, 0.0),
+            (1.0, 0.01, 1.0),
+        ] {
+            let c = ChannelConfig {
+                dp: Some(DpConfig { clip, sigma, delta }),
+                ..ChannelConfig::default()
+            };
+            assert!(c.validate().is_err(), "accepted clip={clip} sigma={sigma} delta={delta}");
+        }
+        let c = ChannelConfig {
+            secure_agg: Some(SecureAggConfig { threshold: 0 }),
+            ..ChannelConfig::default()
+        };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn compress_axis_round_trips() {
+        let c = ChannelConfig::parse_compress_axis("none").unwrap();
+        assert_eq!(c.kind, CompressKind::None);
+        assert_eq!(c.label(), "none");
+        let c = ChannelConfig::parse_compress_axis("top_k:8000").unwrap();
+        assert_eq!(c.kind, CompressKind::TopK);
+        assert_eq!(c.k, 8000);
+        assert_eq!(c.label(), "top_k:8000");
+        let c = ChannelConfig::parse_compress_axis("quantize:4").unwrap();
+        assert_eq!(c.kind, CompressKind::Quantize);
+        assert_eq!(c.bits, 4);
+        assert_eq!(c.label(), "quantize:4");
+        assert!(ChannelConfig::parse_compress_axis("top_k").is_err());
+        assert!(ChannelConfig::parse_compress_axis("top_k:0").is_err());
+        assert!(ChannelConfig::parse_compress_axis("quantize:17").is_err());
+        assert!(ChannelConfig::parse_compress_axis("none:1").is_err());
+        assert!(ChannelConfig::parse_compress_axis("rle:2").is_err());
+    }
+
+    #[test]
+    fn canonical_fragment_covers_only_active_stages() {
+        let mut c = ChannelConfig::default();
+        c.compress = ChannelConfig::parse_compress_axis("quantize:8").unwrap();
+        let compress_only = c.canonical_json().to_string();
+        assert!(compress_only.contains("quantize"));
+        assert!(!compress_only.contains("dp"));
+        c.dp = Some(DpConfig {
+            clip: 10.0,
+            sigma: 0.005,
+            delta: 1e-5,
+        });
+        let with_dp = c.canonical_json().to_string();
+        assert_ne!(compress_only, with_dp);
+        assert!(with_dp.contains("sigma"));
+        // Stable across calls.
+        assert_eq!(with_dp, c.canonical_json().to_string());
+    }
+}

@@ -11,6 +11,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::aggregate::mean::ReductionOrder;
 use crate::config::adversary::{AdversaryConfig, FaultsConfig, RobustAggConfig};
+use crate::config::channel::ChannelConfig;
 use crate::data::dataset::{DatasetSpec, Distribution};
 use crate::kvstore::netsim::{LinkModel, LinkPolicy};
 use crate::strategy::StrategyKind;
@@ -144,6 +145,10 @@ pub struct JobConfig {
     pub faults: FaultsConfig,
     /// Byzantine-robust server aggregation (`aggregation: robust:`).
     pub robust_agg: RobustAggConfig,
+    /// Composable transfer stack (`channel:` section): upload compression,
+    /// DP clipping + noise with (ε, δ) accounting, secure-aggregation cost
+    /// model. Inactive by default — see [`ChannelConfig::is_active`].
+    pub channel: ChannelConfig,
     /// Worker threads for the round engine (client training + aggregation).
     /// `1` = fully sequential (the historical behaviour), `0` = one per
     /// available core. Any value produces bitwise-identical results — model
@@ -190,6 +195,7 @@ impl JobConfig {
             adversary: AdversaryConfig::default(),
             faults: FaultsConfig::default(),
             robust_agg: RobustAggConfig::default(),
+            channel: ChannelConfig::default(),
             parallelism: 1,
             population: PopulationMode::Eager,
             strategy,
@@ -343,6 +349,10 @@ impl JobConfig {
             Some(a) => RobustAggConfig::from_yaml(a)?,
             None => RobustAggConfig::default(),
         };
+        let channel = match y.get("channel") {
+            Some(c) => ChannelConfig::from_yaml(c)?,
+            None => ChannelConfig::default(),
+        };
         let parallelism = match get_i64(job, "parallelism").unwrap_or(1) {
             n if n < 0 => bail!("job.parallelism must be >= 0 (0 = auto), got {n}"),
             n => n as usize,
@@ -374,6 +384,7 @@ impl JobConfig {
             adversary,
             faults,
             robust_agg,
+            channel,
             parallelism,
             population,
         };
@@ -499,6 +510,9 @@ impl JobConfig {
         if self.robust_agg.is_active() {
             pairs.push(("robust_agg", self.robust_agg.canonical_json()));
         }
+        if self.channel.is_active() {
+            pairs.push(("channel", self.channel.canonical_json()));
+        }
         Json::obj(pairs)
     }
 
@@ -593,6 +607,15 @@ impl JobConfig {
         }
         self.adversary.validate()?;
         self.faults.validate()?;
+        self.channel.validate()?;
+        // The dpfl strategy *is* fedavg + channel.dp (pinned bitwise by
+        // test); stacking both would clip and noise the aggregate twice.
+        if self.channel.dp.is_some() && self.strategy.name() == "dpfl" {
+            bail!(
+                "channel.dp composes with any mean-shaped strategy — use \
+                 'fedavg' (the dpfl strategy would apply DP twice)"
+            );
+        }
         for (node, _) in self.faults.drops.iter().chain(&self.faults.crashes) {
             if node.starts_with("client_") || node.starts_with("peer_") {
                 let idx: Option<usize> = node.split('_').nth(1).and_then(|s| s.parse().ok());
@@ -941,6 +964,76 @@ aggregation:
         assert_ne!(base, j.canonical_json().to_string());
         let mut j = JobConfig::default_cnn("fedavg");
         j.robust_agg.kind = crate::config::RobustAggKind::Krum;
+        assert_ne!(base, j.canonical_json().to_string());
+    }
+
+    #[test]
+    fn channel_section_parses() {
+        let yaml = r#"
+job:
+  name: channel_test
+  rounds: 3
+dataset: {name: cifar10_synth, n: 600}
+strategy: {name: fedavg, backend: cnn}
+topology: {kind: client_server, clients: 4, workers: 1}
+channel:
+  compress:
+    kind: quantize
+    bits: 4
+  dp:
+    clip: 5.0
+    sigma: 0.01
+  secure_agg:
+    threshold: 3
+"#;
+        let j = JobConfig::from_yaml_str(yaml).unwrap();
+        assert_eq!(j.channel.compress.kind, crate::config::CompressKind::Quantize);
+        assert_eq!(j.channel.compress.bits, 4);
+        let dp = j.channel.dp.unwrap();
+        assert_eq!(dp.clip, 5.0);
+        assert_eq!(dp.sigma, 0.01);
+        assert_eq!(dp.delta, crate::config::DpConfig::DEFAULT_DELTA);
+        assert_eq!(j.channel.secure_agg.unwrap().threshold, 3);
+        assert!(j.channel.is_active());
+    }
+
+    #[test]
+    fn channel_dp_rejects_dpfl_strategy() {
+        let mut j = JobConfig::default_cnn("dpfl");
+        j.channel.dp = Some(crate::config::DpConfig {
+            clip: 10.0,
+            sigma: 0.005,
+            delta: 1e-5,
+        });
+        assert!(j.validate().is_err(), "dpfl + channel.dp double-applies DP");
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.channel.dp = Some(crate::config::DpConfig {
+            clip: 10.0,
+            sigma: 0.005,
+            delta: 1e-5,
+        });
+        j.validate().unwrap();
+    }
+
+    #[test]
+    fn canonical_json_ignores_inactive_channel() {
+        let base = JobConfig::default_cnn("fedavg").canonical_json().to_string();
+        // Default channel is inactive and invisible.
+        assert!(!base.contains("channel"));
+        // Each active stage changes the key.
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.channel.compress =
+            crate::config::ChannelConfig::parse_compress_axis("top_k:100").unwrap();
+        assert_ne!(base, j.canonical_json().to_string());
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.channel.dp = Some(crate::config::DpConfig {
+            clip: 10.0,
+            sigma: 0.01,
+            delta: 1e-5,
+        });
+        assert_ne!(base, j.canonical_json().to_string());
+        let mut j = JobConfig::default_cnn("fedavg");
+        j.channel.secure_agg = Some(crate::config::SecureAggConfig { threshold: 2 });
         assert_ne!(base, j.canonical_json().to_string());
     }
 

@@ -2,9 +2,11 @@
 //! FL experiment from, plus programmatic presets for every paper experiment.
 
 pub mod adversary;
+pub mod channel;
 pub mod job;
 
 pub use adversary::{
     AdversaryConfig, AttackKind, ChurnConfig, FaultsConfig, RobustAggConfig, RobustAggKind,
 };
+pub use channel::{ChannelConfig, CompressConfig, CompressKind, DpConfig, SecureAggConfig};
 pub use job::{ChainConfig, ConsensusConfig, JobConfig, TrainParams};

@@ -21,16 +21,26 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
+use crate::aggregate::compress::CompressedUpdate;
+
 /// What a node can publish.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Payload {
     /// A flat model-parameter vector (or any other f32 state), shared
     /// zero-copy between publisher, broker and all readers.
     Params(Arc<[f32]>),
+    /// A channel-compressed model update: the broker moves the handle, the
+    /// metering charges the *compressed* wire volume — this is what makes
+    /// `net_bytes`/`sim_round_secs` honest under `channel.compress`.
+    Compressed(Arc<CompressedUpdate>),
     /// An arbitrary small string (hash votes, signals).
     Text(String),
     /// A scalar (e.g. example counts for weighted aggregation).
     Scalar(f64),
+    /// Content-free payload of a given body size: protocol traffic whose
+    /// bytes matter but whose contents the simulation never inspects
+    /// (secure-aggregation mask shares).
+    Opaque(u64),
 }
 
 impl Payload {
@@ -44,10 +54,14 @@ impl Payload {
     /// fixed 64-byte envelope (topic, sender, round — the REST/JSON framing
     /// the paper's deployment would pay, flat-rated).
     pub fn wire_bytes(&self) -> u64 {
-        64 + match self {
-            Payload::Params(p) => (p.len() * 4) as u64,
-            Payload::Text(s) => s.len() as u64,
-            Payload::Scalar(_) => 8,
+        match self {
+            Payload::Params(p) => 64 + (p.len() * 4) as u64,
+            // CompressedUpdate::wire_bytes already includes its own 64-byte
+            // envelope — don't charge the framing twice.
+            Payload::Compressed(c) => c.wire_bytes(),
+            Payload::Text(s) => 64 + s.len() as u64,
+            Payload::Scalar(_) => 64 + 8,
+            Payload::Opaque(body) => 64 + body,
         }
     }
 
@@ -77,6 +91,13 @@ impl Payload {
         match self {
             Payload::Scalar(s) => Ok(*s),
             _ => Err(anyhow!("payload is not Scalar")),
+        }
+    }
+
+    pub fn as_compressed(&self) -> Result<&CompressedUpdate> {
+        match self {
+            Payload::Compressed(c) => Ok(c),
+            _ => Err(anyhow!("payload is not Compressed")),
         }
     }
 }
@@ -520,5 +541,26 @@ mod tests {
         assert!(Payload::Scalar(4.0).params_arc().is_err());
         assert_eq!(Payload::Scalar(4.0).as_scalar().unwrap(), 4.0);
         assert_eq!(Payload::Text("hi".into()).wire_bytes(), 66);
+        assert!(Payload::Scalar(4.0).as_compressed().is_err());
+    }
+
+    #[test]
+    fn compressed_and_opaque_payload_metering() {
+        // Compressed payloads charge exactly the compressed wire volume:
+        // the inner 64-byte envelope, never 64 + 64.
+        let c = crate::aggregate::compress::top_k(&[1.0, -3.0, 0.5, 2.0], 2);
+        let inner = c.wire_bytes();
+        let p = Payload::Compressed(Arc::new(c));
+        assert_eq!(p.wire_bytes(), inner);
+        assert_eq!(inner, 64 + 2 * 8 + 4);
+        let kv = KvStore::new();
+        kv.publish("u", "client_0", 1, p);
+        assert_eq!(kv.traffic("client_0").bytes_out, inner);
+        assert_eq!(kv.total_bytes(), inner);
+        // Opaque = envelope + declared body.
+        assert_eq!(Payload::Opaque(320).wire_bytes(), 64 + 320);
+        let m = kv.fetch_latest("u", "worker_0").unwrap();
+        assert_eq!(m.payload.as_compressed().unwrap().decompress().len(), 4);
+        assert!(m.payload.as_params().is_err());
     }
 }

@@ -3,6 +3,7 @@
 
 pub mod dashboard;
 pub mod html;
+pub mod privacy;
 pub mod report;
 pub mod resources;
 

@@ -1,0 +1,90 @@
+//! DP accountant for the channel's `dp:` stage: cumulative (ε, δ) spend of
+//! the Gaussian mechanism applied round-by-round by
+//! [`apply_dp_noise`](crate::aggregate::mean::apply_dp_noise).
+//!
+//! The accountant is a *pure function of the config and the round number*
+//! — no state is threaded across rounds, so a resumed/cached run reports
+//! exactly the same series as a fresh one, and truncating a report to a
+//! round prefix keeps every row's spend correct.
+//!
+//! Accounting model: each round is one Gaussian-mechanism release at noise
+//! multiplier σ, giving the classical analytic per-round bound
+//! ε = √(2·ln(1.25/δ)) / σ (Dwork & Roth, Thm 3.22), composed linearly over
+//! rounds: ε(T) = T·ε, δ(T) = T·δ. Linear composition is deliberately
+//! conservative — it over-reports spend relative to advanced/RDP
+//! composition, so the dashboards never *understate* the privacy cost.
+
+use crate::config::channel::DpConfig;
+
+/// Per-round ε of the Gaussian mechanism at noise multiplier `sigma` and
+/// per-round `delta`. Returns `None` when σ ≤ 0: zero noise carries no
+/// finite guarantee, and the accountant reports zero spend rather than
+/// serializing an infinity into the metrics schema.
+pub fn epsilon_per_round(sigma: f64, delta: f64) -> Option<f64> {
+    if sigma <= 0.0 || !(0.0 < delta && delta < 1.0) {
+        return None;
+    }
+    Some((2.0 * (1.25 / delta).ln()).sqrt() / sigma)
+}
+
+/// Cumulative (ε, δ) after `round` completed rounds under linear
+/// composition. `(0.0, 0.0)` when the job has no DP stage (or a σ = 0 one)
+/// — the metrics columns always exist, a zero row means "no spend".
+pub fn cumulative(dp: Option<&DpConfig>, round: u64) -> (f64, f64) {
+    match dp.and_then(|d| epsilon_per_round(d.sigma, d.delta).map(|e| (e, d.delta))) {
+        Some((eps, delta)) => (round as f64 * eps, round as f64 * delta),
+        None => (0.0, 0.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dp(sigma: f64, delta: f64) -> DpConfig {
+        DpConfig {
+            clip: 10.0,
+            sigma,
+            delta,
+        }
+    }
+
+    #[test]
+    fn per_round_matches_analytic_bound() {
+        let eps = epsilon_per_round(0.01, 1e-5).unwrap();
+        let expect = (2.0f64 * (1.25f64 / 1e-5).ln()).sqrt() / 0.01;
+        assert!((eps - expect).abs() < 1e-12);
+        // More noise => less spend.
+        assert!(epsilon_per_round(0.02, 1e-5).unwrap() < eps);
+    }
+
+    #[test]
+    fn zero_sigma_has_no_finite_guarantee() {
+        assert_eq!(epsilon_per_round(0.0, 1e-5), None);
+        assert_eq!(epsilon_per_round(-1.0, 1e-5), None);
+        assert_eq!(cumulative(Some(&dp(0.0, 1e-5)), 10), (0.0, 0.0));
+    }
+
+    #[test]
+    fn cumulative_is_linear_in_rounds() {
+        let d = dp(0.01, 1e-5);
+        let (e1, d1) = cumulative(Some(&d), 1);
+        let (e5, d5) = cumulative(Some(&d), 5);
+        assert!((e5 - 5.0 * e1).abs() < 1e-9);
+        assert!((d5 - 5.0 * d1).abs() < 1e-18);
+        assert_eq!(cumulative(Some(&d), 0), (0.0, 0.0));
+    }
+
+    #[test]
+    fn no_dp_reports_zero_spend() {
+        assert_eq!(cumulative(None, 100), (0.0, 0.0));
+    }
+
+    #[test]
+    fn resume_stability_is_positional() {
+        // Row T of a resumed run must equal row T of a fresh run: the spend
+        // is a pure function of (config, round), never of visited history.
+        let d = dp(0.005, 1e-6);
+        assert_eq!(cumulative(Some(&d), 7), cumulative(Some(&d), 7));
+    }
+}

@@ -33,6 +33,12 @@ pub struct RoundMetrics {
     pub sim_round_secs: f64,
     /// Global-model parameter hash (provenance / reproducibility).
     pub model_hash: String,
+    /// Cumulative DP ε spent through this round (0.0 when the job has no
+    /// `channel.dp` stage — the column always exists; see
+    /// [`crate::metrics::privacy`]).
+    pub dp_epsilon: f64,
+    /// Cumulative DP δ spent through this round (0.0 when no DP stage).
+    pub dp_delta: f64,
 }
 
 /// A complete run: configuration echo + per-round series.
@@ -130,11 +136,11 @@ impl RunReport {
     /// CSV export (one row per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,test_accuracy,test_loss,train_loss,wall_secs,cpu_pct,rss_mib,net_bytes,sim_net_secs,sim_round_secs,model_hash\n",
+            "round,test_accuracy,test_loss,train_loss,wall_secs,cpu_pct,rss_mib,net_bytes,sim_net_secs,sim_round_secs,model_hash,dp_epsilon,dp_delta\n",
         );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{:.4},{:.1},{:.1},{},{:.4},{:.4},{}\n",
+                "{},{:.6},{:.6},{:.6},{:.4},{:.1},{:.1},{},{:.4},{:.4},{},{:.6},{:e}\n",
                 r.round,
                 r.test_accuracy,
                 r.test_loss,
@@ -145,7 +151,9 @@ impl RunReport {
                 r.net_bytes,
                 r.sim_net_secs,
                 r.sim_round_secs,
-                r.model_hash
+                r.model_hash,
+                r.dp_epsilon,
+                r.dp_delta
             ));
         }
         s
@@ -179,6 +187,8 @@ impl RunReport {
                                 ("sim_net_secs", Json::from(r.sim_net_secs)),
                                 ("sim_round_secs", Json::from(r.sim_round_secs)),
                                 ("model_hash", Json::from(r.model_hash.as_str())),
+                                ("dp_epsilon", Json::from(r.dp_epsilon)),
+                                ("dp_delta", Json::from(r.dp_delta)),
                             ])
                         })
                         .collect(),
@@ -234,6 +244,8 @@ impl RunReport {
                     .and_then(Json::as_str)
                     .ok_or_else(|| anyhow!("run report json: round missing 'model_hash'"))?
                     .to_string(),
+                dp_epsilon: g("dp_epsilon")?,
+                dp_delta: g("dp_delta")?,
             });
         }
         Ok(RunReport {
@@ -386,6 +398,26 @@ mod tests {
         assert_eq!(r.metric_at(2, |m| m.test_loss), Some(1.2));
         assert_eq!(r.metric_at(0, |m| m.test_accuracy), None);
         assert_eq!(r.metric_at(3, |m| m.test_accuracy), None);
+    }
+
+    #[test]
+    fn dp_columns_always_present_and_round_trip() {
+        let mut r = sample();
+        r.rounds[1].dp_epsilon = 15.3;
+        r.rounds[1].dp_delta = 0.00002;
+        let csv = r.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.ends_with("model_hash,dp_epsilon,dp_delta"));
+        // Zero rows keep the columns (no-DP runs stay schema-compatible).
+        assert!(csv.lines().nth(1).unwrap().ends_with(",0.000000,0e0"));
+        let back = RunReport::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.rounds[1].dp_epsilon, 15.3);
+        assert_eq!(back.rounds[1].dp_delta, 0.00002);
+        assert_eq!(back.to_json().to_string(), r.to_json().to_string());
+        // Strict like every other field: a document without the dp columns
+        // is a stale schema — a cache miss, not a zero-spend run.
+        let doc = r.to_json().to_string().replace("\"dp_epsilon\":15.3,", "");
+        assert!(RunReport::from_json(&Json::parse(&doc).unwrap()).is_err());
     }
 
     #[test]

@@ -44,8 +44,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::aggregate::compress::{self, CompressedUpdate};
 use crate::chain::block::Tx;
 use crate::config::adversary::AttackKind;
+use crate::config::channel::CompressKind;
 use crate::consensus::Proposal;
 use crate::controller::phases::{NodeStage, ProcessPhase};
 use crate::kvstore::store::Payload;
@@ -131,6 +133,10 @@ impl RoundScope {
     ) -> RoundMetrics {
         let wall = self.t0.elapsed().as_secs_f64();
         let res1 = resources::snapshot();
+        // Cumulative privacy spend is a pure function of (config, round):
+        // resumed and truncated reports carry the same series as fresh runs.
+        let (dp_epsilon, dp_delta) =
+            crate::metrics::privacy::cumulative(state.job.channel.dp.as_ref(), round);
         RoundMetrics {
             round,
             test_accuracy,
@@ -143,6 +149,8 @@ impl RoundScope {
             sim_net_secs: state.net.total_secs() - self.net0,
             sim_round_secs,
             model_hash: hash::short_hash(eval_model),
+            dp_epsilon,
+            dp_delta,
         }
     }
 }
@@ -255,6 +263,13 @@ fn train_tasks(
 /// `round_deadline_secs` (when set) are marked late: their upload never
 /// lands, they are excluded from the returned updates, and the closing
 /// barrier resolves through the timeout arm without them.
+///
+/// When the job configures a `channel:`, its stages apply here at the
+/// upload boundary for *every* flow: deltas are compressed (and uploads
+/// metered at the compressed wire bytes), secure-agg share traffic is
+/// priced, and rounds with fewer surviving updates than the secure-agg
+/// threshold abort. The DP stage lives in
+/// [`JobState::aggregate_updates`](crate::orchestrator::setup::JobState).
 fn train_clients_to(
     state: &mut JobState,
     round: u64,
@@ -307,11 +322,14 @@ fn train_clients_to(
         starts.push(start);
     }
 
-    // Adversarial context: starting models are consumed by the worker pool
-    // below, so keep per-client handles only when the run actually has
-    // compromised clients (the zero-adversary path must not clone anything).
-    let attack_starts: Option<Vec<Arc<[f32]>>> =
-        (!state.adversaries.is_empty()).then(|| starts.clone());
+    // Adversarial / channel context: starting models are consumed by the
+    // worker pool below, so keep per-client handles only when phase C
+    // actually needs them — attacks rewrite deltas, and the compression
+    // stage is defined on the delta vs. the start. The plain path must not
+    // clone anything.
+    let keep_starts =
+        !state.adversaries.is_empty() || state.job.channel.compress.is_active();
+    let kept_starts: Option<Vec<Arc<[f32]>>> = keep_starts.then(|| starts.clone());
 
     // Phase B (parallel): local training on the worker pool.
     let results = {
@@ -340,12 +358,41 @@ fn train_clients_to(
     let mut collusion: Option<Arc<[f32]>> = None;
     for (i, ((name, result), pre)) in names.iter().zip(results).zip(pre_secs).enumerate() {
         let mut update = result?;
-        if let Some(starts) = &attack_starts {
+        if let Some(starts) = &kept_starts {
             apply_attack(state, round, name, &starts[i], &mut update, &mut collusion);
         }
+        // Channel stage: compress the delta at the upload boundary (after
+        // any attack — the channel carries whatever the client sends). The
+        // update's params are replaced by the decompressed reconstruction,
+        // so every downstream consumer — eager aggregation and the virtual
+        // StreamingMean fold alike — sees exactly what crossed the wire.
+        let compressed = if state.job.channel.compress.is_active() {
+            let starts = kept_starts.as_ref().expect("starts kept while compressing");
+            Some(Arc::new(compress_for_upload(
+                state,
+                round,
+                name,
+                &starts[i],
+                &mut update,
+            )?))
+        } else {
+            None
+        };
         let upload_dst = upload_dst_of(state, name);
+        // Uploads are priced at what actually crosses the wire: the
+        // compressed payload when the channel compresses, the dense update
+        // (plus any strategy extra) otherwise.
+        let extra_wire = update
+            .extra
+            .as_ref()
+            .map(|e| (e.len() * 4) as u64)
+            .unwrap_or(0);
+        let upload_bytes = match &compressed {
+            Some(c) => c.wire_bytes() + extra_wire,
+            None => update.wire_bytes(),
+        };
         let ul_secs = match &upload_dst {
-            Some(dst) => state.net.price(name, dst, update.wire_bytes()),
+            Some(dst) => state.net.price(name, dst, upload_bytes),
             None => 0.0,
         };
         let finish = pre + ul_secs;
@@ -360,8 +407,27 @@ fn train_clients_to(
         }
         phase_secs = phase_secs.max(finish);
         let topic = upload_topic_of(name);
-        let payload = Payload::Params(update.params.clone());
+        // The KV fabric carries (and meters) the compressed form; readers
+        // that re-deliver this message downstream are charged the same
+        // compressed bytes.
+        let payload = match &compressed {
+            Some(c) => Payload::Compressed(c.clone()),
+            None => Payload::Params(update.params.clone()),
+        };
         publish(state, &topic, name, round, payload);
+        if state.job.channel.secure_agg.is_some() {
+            // Bonawitz-style masked aggregation, as a cost model: each
+            // participant ships one 32-byte pairwise key share per cohort
+            // member alongside its (masked) update. Results are unchanged —
+            // the simulation prices the protocol, it does not execute it.
+            let shares = Payload::Opaque(32 * names.len() as u64);
+            let share_secs = match &upload_dst {
+                Some(dst) => state.net.transfer(name, dst, shares.wire_bytes()),
+                None => 0.0,
+            };
+            phase_secs = phase_secs.max(finish + share_secs);
+            publish(state, "secagg_shares", name, round, shares);
+        }
         if let Some(extra) = &update.extra {
             let payload = Payload::Params(extra.clone());
             let extra_bytes = payload.wire_bytes();
@@ -375,6 +441,34 @@ fn train_clients_to(
         }
         state.controller.update_stage(name, NodeStage::Done)?;
         updates.insert(name.clone(), update);
+    }
+    if let Some(sa) = state.job.channel.secure_agg {
+        if updates.len() < sa.threshold {
+            bail!(
+                "round {round}: secure aggregation needs {} surviving clients to unmask \
+                 the sum, got {} — lower channel.secure_agg.threshold or raise the deadline",
+                sa.threshold,
+                updates.len()
+            );
+        }
+        let dropped = names.len() - updates.len();
+        if dropped > 0 {
+            // Share recovery: for every dropped client, `threshold`
+            // survivors each re-upload a 96-byte recovery share so the
+            // server can unmask the sum without the dropout — the expensive
+            // arm of the protocol, priced serially on the critical path.
+            let recoverers: Vec<String> =
+                updates.keys().take(sa.threshold).cloned().collect();
+            let mut recovery_secs = 0.0;
+            for _ in 0..dropped {
+                for s in &recoverers {
+                    if let Some(dst) = upload_dst_of(state, s) {
+                        recovery_secs += state.net.transfer(s, &dst, 96);
+                    }
+                }
+            }
+            phase_secs += recovery_secs;
+        }
     }
     state.last_phase_secs = phase_secs;
 
@@ -437,6 +531,39 @@ fn apply_attack(
             update.params = shared;
         }
     }
+}
+
+/// Apply the channel's compression stage to one client's upload: compress
+/// the delta vs. the client's starting model, then replace the update's
+/// params with the decompressed reconstruction (the server must aggregate
+/// what the wire carried, not the lossless original). Quantization dither
+/// draws from `round_rng(round).derive("compress", name_index)` — phase C
+/// runs in deterministic client order, so the stream is schedule-invariant.
+fn compress_for_upload(
+    state: &JobState,
+    round: u64,
+    name: &str,
+    start: &Arc<[f32]>,
+    update: &mut ClientUpdate,
+) -> Result<CompressedUpdate> {
+    let cc = &state.job.channel.compress;
+    let delta: Vec<f32> = update
+        .params
+        .iter()
+        .zip(start.iter())
+        .map(|(p, s)| p - s)
+        .collect();
+    let compressed = match cc.kind {
+        CompressKind::TopK => compress::top_k(&delta, cc.k),
+        CompressKind::Quantize => {
+            let mut rng = state.round_rng(round).derive("compress", name_index(name));
+            compress::quantize(&delta, cc.bits, &mut rng)?
+        }
+        CompressKind::None => bail!("compress_for_upload called with an inactive stage"),
+    };
+    let rec = compressed.decompress();
+    update.params = start.iter().zip(rec.iter()).map(|(s, d)| s + d).collect();
+    Ok(compressed)
 }
 
 /// Flow-level guard for star flows: an empty update set after a training

@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::aggregate::mean::{AggPlan, StreamingMean};
+use crate::aggregate::mean::{apply_dp_noise, clip_update, AggPlan, StreamingMean};
 use crate::aggregate::robust::{coordinate_median, krum, trimmed_mean};
 use crate::chain::{self, Blockchain};
 use crate::config::adversary::{AttackKind, RobustAggKind};
@@ -335,6 +335,15 @@ impl JobState {
         AggPlan::new(self.job.hw_profile, self.parallelism())
     }
 
+    /// Whether the strategy's server side is a plain example-weighted mean
+    /// (`weighted_mean_plan` over update params in arrival order): FedAvg,
+    /// FedProx (prox term is client-side), FedAvgM (momentum lives in
+    /// `post_round`). These are the strategies whose aggregate may be
+    /// streamed or channel-DP'd without changing a bit.
+    fn strategy_is_mean_shaped(&self) -> bool {
+        matches!(self.strategy.name(), "fedavg" | "fedprox" | "fedavgm")
+    }
+
     /// Server-side aggregation dispatch: the strategy's own `aggregate`
     /// unless `aggregation: robust:` selects a Byzantine-robust rule
     /// (krum / trimmed-mean / coordinate-median from `aggregate/robust.rs`).
@@ -342,6 +351,11 @@ impl JobState {
     /// given (invalid values surface as the robust rule's own error), else
     /// the number of configured adversaries among this round's updates
     /// (min 1), clamped to what the rule can absorb at this cohort size.
+    ///
+    /// `channel.dp` slots in between: each update's delta is L2-clipped to
+    /// `dp.clip` before the strategy aggregate, and the aggregate receives
+    /// Gaussian noise from the worker's `"dp_noise"` stream — for `fedavg`
+    /// this reproduces the legacy `dpfl` strategy bit for bit (pinned test).
     pub fn aggregate_updates(
         &self,
         updates: &[ClientUpdate],
@@ -349,12 +363,41 @@ impl JobState {
         rng: &mut Rng,
     ) -> Result<Vec<f32>> {
         if self.job.robust_agg.kind == RobustAggKind::None {
-            // Virtual fleets fold FedAvg online: O(model) accumulator state
-            // instead of the collect-then-reduce path. `StreamingMean` is
-            // golden-tested bitwise against `weighted_mean_plan` — which is
-            // exactly what `FedAvg::aggregate` runs — for every reduction
+            if let Some(dp) = self.job.channel.dp {
+                // Virtual fleets fold the clipped deltas online; eager
+                // fleets clip-then-aggregate through the strategy. Both
+                // land on the same weighted mean bitwise (StreamingMean is
+                // golden-tested against weighted_mean_plan), then the same
+                // noise stream.
+                if self.fleet.is_some() && self.strategy_is_mean_shaped() && !updates.is_empty() {
+                    let total: f64 = updates.iter().map(|u| u.weight).sum();
+                    let mut stream =
+                        StreamingMean::new(updates[0].params.len(), total, plan.order)?;
+                    for u in updates {
+                        stream.push(&clip_update(&self.global, &u.params, dp.clip), u.weight)?;
+                    }
+                    let mut agg = stream.finish()?;
+                    apply_dp_noise(&mut agg, dp.clip, dp.sigma, updates.len(), rng);
+                    return Ok(agg);
+                }
+                let clipped: Vec<ClientUpdate> = updates
+                    .iter()
+                    .map(|u| ClientUpdate {
+                        params: clip_update(&self.global, &u.params, dp.clip).into(),
+                        ..u.clone()
+                    })
+                    .collect();
+                let mut agg = self.strategy.aggregate(&clipped, &self.global, plan, rng)?;
+                apply_dp_noise(&mut agg, dp.clip, dp.sigma, updates.len(), rng);
+                return Ok(agg);
+            }
+            // Virtual fleets fold mean-shaped strategies online: O(model)
+            // accumulator state instead of the collect-then-reduce path.
+            // `StreamingMean` is golden-tested bitwise against
+            // `weighted_mean_plan` — which is exactly what the
+            // fedavg/fedprox/fedavgm aggregates run — for every reduction
             // order, so this gate never changes a result.
-            if self.fleet.is_some() && self.strategy.name() == "fedavg" && !updates.is_empty() {
+            if self.fleet.is_some() && self.strategy_is_mean_shaped() && !updates.is_empty() {
                 let total: f64 = updates.iter().map(|u| u.weight).sum();
                 let mut stream = StreamingMean::new(updates[0].params.len(), total, plan.order)?;
                 for u in updates {

@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::aggregate::mean::{clip_update, weighted_mean_plan, AggPlan};
+use crate::aggregate::mean::{apply_dp_noise, clip_update, weighted_mean_plan, AggPlan};
 use crate::strategy::{ClientCtx, ClientUpdate, Strategy};
 use crate::util::rng::Rng;
 
@@ -53,12 +53,9 @@ impl Strategy for DpFl {
         let refs: Vec<&[f32]> = clipped.iter().map(|c| c.as_slice()).collect();
         let weights: Vec<f64> = updates.iter().map(|u| u.weight).collect();
         let mut agg = weighted_mean_plan(&refs, &weights, plan)?;
-        // Gaussian mechanism on the aggregate.
-        let std = (self.sigma * self.clip / updates.len().max(1) as f64) as f32;
-        let mut noise_rng = round_rng.derive("dp_noise", 0);
-        for v in agg.iter_mut() {
-            *v += std * noise_rng.normal_f32();
-        }
+        // Gaussian mechanism on the aggregate (shared with channel.dp —
+        // the composable re-expression this strategy is pinned against).
+        apply_dp_noise(&mut agg, self.clip, self.sigma, updates.len(), round_rng);
         Ok(agg)
     }
 }

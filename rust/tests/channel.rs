@@ -1,0 +1,312 @@
+//! Composable channel-layer contracts (the channel PR's acceptance
+//! criteria):
+//!
+//! * **dpfl supersession**: `fedavg` + `channel.dp` at the legacy strategy's
+//!   defaults reproduces a `dpfl` run bit for bit — same model-hash series,
+//!   same traffic — while only the channel path reports the DP accountant;
+//! * **inactive identity**: a `channel:` section that is present but
+//!   inactive is indistinguishable — in cache keys and in runs — from no
+//!   section at all;
+//! * **compression frontier**: tightening the codec (none → top_k →
+//!   quantize) strictly shrinks both `net_bytes` and the simulated round
+//!   clock, because uploads are metered at compressed wire size;
+//! * **secure aggregation**: share traffic is metered, dropped-client
+//!   recovery is priced, and an unmet unmasking threshold aborts the run;
+//! * **streaming goldens**: fedprox / fedavgm / channel.dp on a virtual
+//!   population (StreamingMean fold) match the eager path bitwise.
+
+use std::sync::Arc;
+
+use flsim::campaign::CampaignSpec;
+use flsim::config::channel::{DpConfig, SecureAggConfig};
+use flsim::config::job::{JobConfig, PopulationMode};
+use flsim::metrics::report::RunReport;
+use flsim::orchestrator::Orchestrator;
+use flsim::runtime::pjrt::Runtime;
+use flsim::strategy::StrategyKind;
+use flsim::util::yaml::Yaml;
+
+fn rt() -> Arc<Runtime> {
+    Runtime::shared("artifacts").unwrap()
+}
+
+fn tiny(strategy: &str) -> JobConfig {
+    let mut j = JobConfig::default_cnn(strategy);
+    j.name = "chan_tiny".into();
+    j.rounds = 2;
+    j.dataset.n = 600;
+    j.n_clients = 4;
+    j
+}
+
+fn hashes(r: &RunReport) -> Vec<String> {
+    r.rounds.iter().map(|m| m.model_hash.clone()).collect()
+}
+
+fn net_bytes(r: &RunReport) -> Vec<u64> {
+    r.rounds.iter().map(|m| m.net_bytes).collect()
+}
+
+fn sim_secs(r: &RunReport) -> f64 {
+    r.rounds.iter().map(|m| m.sim_round_secs).sum()
+}
+
+/// The tentpole pin: the legacy `dpfl` strategy is now *defined* as
+/// `fedavg` + `channel.dp` at its default clip/σ. Both paths clip each
+/// update against the same global, run the same weighted mean, and draw
+/// noise from the same `"dp_noise"` stream — so the hash series must agree
+/// bit for bit. Only the channel path carries the privacy accountant.
+#[test]
+fn fedavg_plus_channel_dp_reproduces_dpfl_bitwise() {
+    let orch = Orchestrator::new(rt());
+    let legacy = orch.run(&tiny("dpfl")).unwrap();
+
+    let mut composed = tiny("fedavg");
+    // dpfl's parse defaults (strategy/mod.rs): clip 10.0, sigma 0.005.
+    composed.channel.dp = Some(DpConfig {
+        clip: 10.0,
+        sigma: 0.005,
+        delta: 1e-5,
+    });
+    let composed = orch.run(&composed).unwrap();
+
+    assert_eq!(
+        hashes(&legacy),
+        hashes(&composed),
+        "fedavg + channel.dp must reproduce dpfl bit for bit"
+    );
+    assert_eq!(
+        net_bytes(&legacy),
+        net_bytes(&composed),
+        "the composed channel must not change wire traffic"
+    );
+
+    // The accountant lives on the channel path only: the legacy strategy
+    // reports zero spend, the composed run reports ε growing linearly.
+    assert_eq!(legacy.rounds.last().unwrap().dp_epsilon, 0.0);
+    let e1 = composed.rounds[0].dp_epsilon;
+    let e2 = composed.rounds[1].dp_epsilon;
+    assert!(e1 > 0.0, "channel.dp run must report a per-round ε");
+    assert!(
+        (e2 - 2.0 * e1).abs() < 1e-9,
+        "linear composition: ε(2) = 2·ε(1), got {e1} then {e2}"
+    );
+    assert_eq!(composed.rounds[1].dp_delta, 2e-5);
+}
+
+/// Identity contract through a real run: junk parameters behind an
+/// inactive codec (`kind: none`) must not perturb the cache key, the RNG
+/// streams, or a single byte of the run.
+#[test]
+fn inactive_channel_section_is_bitwise_invisible() {
+    let base = tiny("fedavg");
+    let orch = Orchestrator::new(rt());
+    let want = orch.run(&base).unwrap();
+
+    let mut with_section = tiny("fedavg");
+    with_section.channel.compress.k = 9_999; // ignored: kind is none
+    with_section.channel.compress.bits = 8;
+
+    assert_eq!(
+        base.canonical_json().to_string(),
+        with_section.canonical_json().to_string(),
+        "inactive channel must not perturb the cache key"
+    );
+    let got = orch.run(&with_section).unwrap();
+    assert_eq!(hashes(&want), hashes(&got), "model hashes diverged");
+    assert_eq!(net_bytes(&want), net_bytes(&got), "traffic diverged");
+}
+
+/// The compression frontier, end to end: per-upload wire size is
+/// 64 + 4·d dense, 64 + 4 + 8k for top_k, 64 + 12 + ⌈d·bits/8⌉ quantized
+/// (d = 74 002 for the cnn backend), so both total traffic and the
+/// simulated clock must strictly shrink as the codec tightens — and the
+/// lossy codecs must actually bend the model trajectory.
+#[test]
+fn tighter_compression_strictly_shrinks_wire_traffic() {
+    let orch = Orchestrator::new(rt());
+    let dense = orch.run(&tiny("fedavg")).unwrap();
+
+    let mut sparse = tiny("fedavg");
+    sparse.channel.compress =
+        flsim::config::channel::ChannelConfig::parse_compress_axis("top_k:8000").unwrap();
+    let sparse = orch.run(&sparse).unwrap();
+
+    let mut quant = tiny("fedavg");
+    quant.channel.compress =
+        flsim::config::channel::ChannelConfig::parse_compress_axis("quantize:4").unwrap();
+    let quant = orch.run(&quant).unwrap();
+
+    for r in 0..2 {
+        assert!(
+            net_bytes(&dense)[r] > net_bytes(&sparse)[r]
+                && net_bytes(&sparse)[r] > net_bytes(&quant)[r],
+            "round {r}: net_bytes must strictly shrink as the codec tightens \
+             ({} > {} > {} expected)",
+            net_bytes(&dense)[r],
+            net_bytes(&sparse)[r],
+            net_bytes(&quant)[r]
+        );
+    }
+    assert!(
+        sim_secs(&dense) > sim_secs(&sparse) && sim_secs(&sparse) > sim_secs(&quant),
+        "sim_round_secs must reflect compressed wire volume ({} > {} > {} expected)",
+        sim_secs(&dense),
+        sim_secs(&sparse),
+        sim_secs(&quant)
+    );
+    // Lossy codecs are live: the trajectory diverges from the dense run,
+    // yet each compressed run replays deterministically.
+    assert_ne!(hashes(&dense), hashes(&sparse), "top_k must be live");
+    assert_ne!(hashes(&dense), hashes(&quant), "quantize must be live");
+    let mut quant2 = tiny("fedavg");
+    quant2.channel.compress =
+        flsim::config::channel::ChannelConfig::parse_compress_axis("quantize:4").unwrap();
+    let quant2 = orch.run(&quant2).unwrap();
+    assert_eq!(
+        hashes(&quant),
+        hashes(&quant2),
+        "stochastic quantization must replay bit for bit under a fixed seed"
+    );
+}
+
+/// Secure aggregation's cost model: every landed upload publishes a
+/// 32·n-byte masking-share vector, so the metered traffic strictly exceeds
+/// the plain run's; a scheduled drop still completes (the survivors replay
+/// the dropped client's shares) as long as the threshold is met.
+#[test]
+fn secure_agg_shares_are_metered() {
+    let orch = Orchestrator::new(rt());
+    let plain = orch.run(&tiny("fedavg")).unwrap();
+
+    let mut sa = tiny("fedavg");
+    sa.channel.secure_agg = Some(SecureAggConfig { threshold: 2 });
+    let sa_run = orch.run(&sa).unwrap();
+    assert_eq!(
+        hashes(&plain),
+        hashes(&sa_run),
+        "secure agg is a cost model — the aggregate itself is unchanged"
+    );
+    for r in 0..2 {
+        assert!(
+            net_bytes(&sa_run)[r] > net_bytes(&plain)[r],
+            "round {r}: share traffic must be metered"
+        );
+    }
+
+    // A drop above threshold: the run completes and round 2 pays the
+    // recovery transfers on the simulated clock.
+    let mut dropped = tiny("fedavg");
+    dropped.channel.secure_agg = Some(SecureAggConfig { threshold: 2 });
+    dropped.faults.drops.push(("client_1".into(), 2));
+    let dropped_run = orch.run(&dropped).unwrap();
+    assert_eq!(dropped_run.rounds.len(), 2);
+
+    let mut plain_dropped = tiny("fedavg");
+    plain_dropped.faults.drops.push(("client_1".into(), 2));
+    let plain_dropped = orch.run(&plain_dropped).unwrap();
+    assert!(
+        dropped_run.rounds[1].sim_round_secs > plain_dropped.rounds[1].sim_round_secs,
+        "dropped-client recovery must cost simulated time"
+    );
+}
+
+/// Below the unmasking threshold the sum is unrecoverable — the run must
+/// abort with an actionable error, not silently aggregate fewer clients.
+#[test]
+fn secure_agg_threshold_shortfall_aborts() {
+    let mut job = tiny("fedavg");
+    job.channel.secure_agg = Some(SecureAggConfig { threshold: 4 });
+    job.faults.drops.push(("client_1".into(), 2));
+    let err = Orchestrator::new(rt()).run(&job).unwrap_err().to_string();
+    assert!(
+        err.contains("secure aggregation"),
+        "want a threshold-shortfall error, got: {err}"
+    );
+}
+
+/// Compare every deterministic per-round metric bit for bit (the
+/// virtual-population golden idiom; host-dependent columns excluded).
+fn assert_reports_identical(eager: &RunReport, virt: &RunReport, tag: &str) {
+    assert_eq!(eager.rounds.len(), virt.rounds.len(), "{tag}: round count");
+    for (e, v) in eager.rounds.iter().zip(&virt.rounds) {
+        let r = e.round;
+        assert_eq!(e.model_hash, v.model_hash, "{tag}: model hash, round {r}");
+        assert_eq!(e.net_bytes, v.net_bytes, "{tag}: net bytes, round {r}");
+        assert_eq!(
+            e.dp_epsilon.to_bits(),
+            v.dp_epsilon.to_bits(),
+            "{tag}: dp_epsilon, round {r}"
+        );
+    }
+}
+
+/// Streaming goldens: strategies newly routed through the O(model)
+/// StreamingMean fold on virtual fleets — fedprox, fedavgm, and the
+/// channel.dp clip-fold — must match their eager collect-then-reduce twins
+/// bit for bit.
+#[test]
+fn virtual_streaming_matches_eager_for_mean_shaped_strategies() {
+    for strategy in ["fedprox", "fedavgm"] {
+        let mut job = JobConfig::scale_logreg(10);
+        job.name = format!("chan_virt_{strategy}");
+        job.strategy = StrategyKind::parse(strategy, &Yaml::Null).unwrap();
+        job.dataset.n = 600;
+        job.rounds = 3;
+        job.client_fraction = 0.5;
+
+        job.population = PopulationMode::Eager;
+        let eager = Orchestrator::new(rt()).run(&job).unwrap();
+        job.population = PopulationMode::Virtual;
+        let virt = Orchestrator::new(rt()).run(&job).unwrap();
+        assert_reports_identical(&eager, &virt, strategy);
+    }
+}
+
+#[test]
+fn virtual_streaming_matches_eager_under_channel_dp() {
+    let mut job = JobConfig::scale_logreg(10);
+    job.name = "chan_virt_dp".into();
+    job.dataset.n = 600;
+    job.rounds = 3;
+    job.client_fraction = 0.5;
+    job.channel.dp = Some(DpConfig {
+        clip: 5.0,
+        sigma: 0.01,
+        delta: 1e-5,
+    });
+
+    job.population = PopulationMode::Eager;
+    let eager = Orchestrator::new(rt()).run(&job).unwrap();
+    job.population = PopulationMode::Virtual;
+    let virt = Orchestrator::new(rt()).run(&job).unwrap();
+    assert_reports_identical(&eager, &virt, "channel.dp");
+    assert!(virt.rounds.last().unwrap().dp_epsilon > 0.0);
+}
+
+/// The shipped compression × DP sweep expands to the 6-cell grid the CI
+/// smoke job greps for, with the channel axes landing in each cell's job.
+#[test]
+fn channel_sweep_spec_expands() {
+    let spec = CampaignSpec::from_yaml_file("configs/channel_sweep.yaml").unwrap();
+    assert_eq!(spec.name, "channel_sweep");
+    let cells = flsim::campaign::expand(&spec).unwrap();
+    assert_eq!(cells.len(), 6);
+
+    let quant_dp = cells
+        .iter()
+        .find(|c| c.job.channel.compress.label() == "quantize:4" && c.job.channel.dp.is_some())
+        .expect("quantize:4 × dp_sigma 0.01 cell in the grid");
+    let dp = quant_dp.job.channel.dp.unwrap();
+    assert_eq!(dp.sigma, 0.01);
+    assert_eq!(dp.clip, flsim::config::channel::DpConfig::DEFAULT_CLIP);
+
+    // dp_sigma 0.0 leaves channel.dp absent entirely (identity contract).
+    let clean_dense = cells
+        .iter()
+        .find(|c| !c.job.channel.compress.is_active() && c.job.channel.dp.is_none())
+        .expect("clean baseline cell in the grid");
+    assert_ne!(quant_dp.key, clean_dense.key, "cells must hash distinctly");
+    let keys: std::collections::BTreeSet<&String> = cells.iter().map(|c| &c.key).collect();
+    assert_eq!(keys.len(), 6, "all six cells must have distinct cache keys");
+}

@@ -510,9 +510,9 @@ fn prop_rng_streams_never_collide() {
 #[test]
 fn prop_inactive_adversary_sections_never_shift_cache_keys() {
     // The zero-adversary identity contract at the cache-key layer: over
-    // random jobs, bolting on *inactive* adversary/faults/aggregation
-    // sections leaves the canonical key byte-identical, while activating
-    // any one of them changes it.
+    // random jobs, bolting on *inactive* adversary/faults/aggregation/
+    // channel sections leaves the canonical key byte-identical, while
+    // activating any one of them changes it.
     forall(80, |rng| {
         let mut base = JobConfig::default_cnn("fedavg");
         base.seed = rng.next_u64() % 1_000_000;
@@ -527,17 +527,36 @@ fn prop_inactive_adversary_sections_never_shift_cache_keys() {
             availability: 1.0,
             from_round: 1 + rng.next_u64() % 5,
         });
+        // kind: none with junk stage parameters is still the identity
+        // channel — the parameters are contractually invisible.
+        inactive.channel.compress.k = rng.below(10_000);
+        inactive.channel.compress.bits = rng.below(16) as u8;
         if inactive.canonical_json().to_string() != key {
             return Err("inactive sections changed the canonical key".into());
         }
 
         let mut active = base.clone();
-        match rng.below(3) {
+        match rng.below(5) {
             0 => active.adversary.attack_fraction = 0.1 + rng.next_f64() * 0.8,
             1 => active.faults.drops.push((format!("client_{}", rng.below(4)), 2)),
-            _ => {
+            2 => {
                 active.robust_agg =
                     flsim::config::adversary::RobustAggConfig::parse_axis("krum").unwrap()
+            }
+            3 => {
+                active.channel.compress =
+                    flsim::config::channel::ChannelConfig::parse_compress_axis(&format!(
+                        "top_k:{}",
+                        1 + rng.below(10_000)
+                    ))
+                    .unwrap()
+            }
+            _ => {
+                active.channel.dp = Some(flsim::config::channel::DpConfig {
+                    clip: 10.0,
+                    sigma: 0.001 + rng.next_f64(),
+                    delta: 1e-5,
+                })
             }
         }
         if active.canonical_json().to_string() == key {
