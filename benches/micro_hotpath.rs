@@ -14,7 +14,7 @@ use flsim::config::job::{JobConfig, PopulationMode};
 use flsim::consensus::{by_name, Proposal};
 use flsim::kvstore::store::{KvStore, Payload};
 use flsim::metrics::resources;
-use flsim::orchestrator::Orchestrator;
+use flsim::orchestrator::{Orchestrator, RunOptions};
 use flsim::runtime::backend::ModelBackend;
 use flsim::runtime::pjrt::Runtime;
 use flsim::util::hash;
@@ -172,7 +172,7 @@ fn main() {
                 job.parallelism = par;
                 let orch = Orchestrator::new(rt.clone());
                 let t0 = std::time::Instant::now();
-                let report = orch.run(&job).unwrap();
+                let report = orch.run(&job, RunOptions::default()).unwrap();
                 let secs = t0.elapsed().as_secs_f64();
                 let rounds_per_sec = job.rounds as f64 / secs;
                 let h = report.rounds.last().unwrap().model_hash.clone();
@@ -226,7 +226,7 @@ fn main() {
                 job.dataset.n = 600;
                 job.n_clients = 6;
                 let orch = Orchestrator::new(rt.clone());
-                let report = orch.run(&job).unwrap();
+                let report = orch.run(&job, RunOptions::default()).unwrap();
                 let sim = report.total_sim_round_secs();
                 let net = report.total_sim_net_secs();
                 println!("topology_makespan {name}: sim_round {sim:.3}s, sim_net {net:.3}s");
@@ -249,7 +249,7 @@ fn main() {
                 job.client_fraction = (16.0 / n as f64).min(1.0);
                 let orch = Orchestrator::new(rt.clone());
                 let t0 = std::time::Instant::now();
-                let report = orch.run(&job).unwrap();
+                let report = orch.run(&job, RunOptions::default()).unwrap();
                 let secs = t0.elapsed().as_secs_f64();
                 assert_eq!(report.rounds.len(), 1, "scale n={n} run incomplete");
                 let peak = resources::peak_rss_bytes();

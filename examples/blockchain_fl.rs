@@ -25,7 +25,7 @@ fn run_on(platform: &str) -> Result<()> {
     job.chain.platform = platform.into();
 
     let rt = Runtime::shared("artifacts")?;
-    let report = Orchestrator::new(rt).run(&job)?;
+    let report = Orchestrator::new(rt).run(&job, RunOptions::default())?;
 
     for r in &report.rounds {
         println!(

@@ -23,14 +23,14 @@ fn main() -> Result<()> {
     mesh.rounds = 6;
     mesh.dataset.n = 1500;
     mesh.n_clients = 6;
-    let mesh_report = orch.run(&mesh)?;
+    let mesh_report = orch.run(&mesh, RunOptions::default())?;
     println!("{}", dashboard::run_line(&mesh_report));
 
     // Ring topology, fewer exchanges per round.
     let mut ring = mesh.clone();
     ring.name = "p2p_ring".into();
     ring.topology = TopologyKind::Ring;
-    let ring_report = orch.run(&ring)?;
+    let ring_report = orch.run(&ring, RunOptions::default())?;
     println!("{}", dashboard::run_line(&ring_report));
 
     // The mesh gossips O(n²) models per round, the ring O(n) — the mesh
@@ -51,7 +51,7 @@ fn main() -> Result<()> {
         .crash_from("peer_2", 5);
     let mut faulty = mesh.clone();
     faulty.name = "p2p_mesh_faulty".into();
-    let faulty_report = orch.run_with_faults(&faulty, faults)?;
+    let faulty_report = orch.run(&faulty, RunOptions::default().faults(faults))?;
     println!("{}", dashboard::run_line(&faulty_report));
     assert_eq!(faulty_report.rounds.len() as u64, faulty.rounds);
     println!("fault-tolerant run completed all rounds despite peer_2 failures ✓");

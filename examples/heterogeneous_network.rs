@@ -63,7 +63,7 @@ fn main() -> Result<()> {
         job.round_deadline_secs.unwrap(),
         slowest.0
     );
-    let report = Orchestrator::new(rt).run(&job)?;
+    let report = Orchestrator::new(rt).run(&job, RunOptions::default())?;
     for r in &report.rounds {
         println!(
             "round {}: accuracy {:.4}  makespan {:.2}s  hash {}",

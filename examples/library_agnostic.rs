@@ -32,7 +32,7 @@ fn main() -> Result<()> {
             job.dataset = DatasetSpec::mnist_iid(1200);
             job.train.learning_rate = 0.05;
         }
-        let report = orch.run(&job)?;
+        let report = orch.run(&job, RunOptions::default())?;
         println!("{}", dashboard::run_line(&report));
         reports.push(report);
     }

@@ -37,7 +37,7 @@ fn main() -> Result<()> {
     );
 
     let rt = Runtime::shared("artifacts")?;
-    let report = Orchestrator::new(rt).run(&job)?;
+    let report = Orchestrator::new(rt).run(&job, RunOptions::default())?;
 
     println!();
     for r in &report.rounds {

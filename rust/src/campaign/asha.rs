@@ -23,11 +23,13 @@
 //!   [`RunHandle`] between rungs; deepening a cell resumes its live state
 //!   rather than replaying earlier rounds.
 //! * **Rung-level caching.** A stopped cell's prefix report is stored under
-//!   the cell's (full-config) key. Re-running the campaign replays every
-//!   rung decision from the store — zero engine executions — and a later
-//!   campaign that promotes the cell deeper re-runs it from scratch to the
-//!   deeper budget and *upgrades* the entry (never downgrades; see
-//!   [`ResultStore::put_partial`]).
+//!   the cell's (full-config) key — with a checkpoint blob (the global
+//!   model at the stop round) when the job is checkpointable. Re-running
+//!   the campaign replays every rung decision from the store — zero engine
+//!   executions — and a later campaign that promotes the cell deeper
+//!   resumes it from the checkpointed rung (scratch replay when no sound
+//!   checkpoint exists) and *upgrades* the entry (never downgrades; see
+//!   [`ResultStore::commit`]).
 //!
 //! Per-round metrics stream from the round loop to the scheduler over an
 //! mpsc channel (the orchestrator's `RunControl::on_round` sink), so rung
@@ -40,9 +42,10 @@ use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use crate::campaign::cache::ResultStore;
+use crate::campaign::cache::{CellOutcome, ResultStore};
+use crate::campaign::checkpoint::Checkpoint;
 use crate::campaign::grid;
-use crate::campaign::runner::{CampaignOutcome, CellOutcome};
+use crate::campaign::runner::{self, CampaignOutcome, CellRun};
 use crate::campaign::spec::CampaignSpec;
 use crate::controller::sync::FaultPlan;
 use crate::metrics::report::RunReport;
@@ -82,8 +85,8 @@ impl CellState {
 }
 
 /// Execute a campaign under the ASHA scheduler. The outcome mirrors the
-/// grid runner's: one [`CellOutcome`] per expanded cell, in expansion
-/// order; stopped cells carry `stopped_early` partial reports.
+/// grid runner's: one [`CellRun`] per expanded cell, in expansion order;
+/// stopped cells carry `stopped_early` partial reports.
 pub fn run_asha(
     rt: Arc<Runtime>,
     spec: &CampaignSpec,
@@ -198,7 +201,20 @@ pub fn run_asha(
                         let result = (|| -> Result<RunHandle> {
                             let mut h = match handle.take() {
                                 Some(h) => h,
-                                None => RunHandle::start(rt.clone(), &cell.job, FaultPlan::none())?,
+                                // No live handle: prefer the checkpointed
+                                // rung from a previous campaign/worker over
+                                // a scratch replay (a broken checkpoint
+                                // just falls back).
+                                None => match runner::resume_handle(
+                                    &rt, cell, store, target, &spec.name,
+                                ) {
+                                    Ok(Some(h)) => h,
+                                    _ => RunHandle::start(
+                                        rt.clone(),
+                                        &cell.job,
+                                        FaultPlan::none(),
+                                    )?,
+                                },
                             };
                             let sink_tx = Mutex::new(tx.clone());
                             let ctl = RunControl {
@@ -249,10 +265,13 @@ pub fn run_asha(
             let st = &mut states[i];
             if let Some(handle) = st.handle.take() {
                 match handle.finish() {
-                    Ok(report) => match store
-                        .put(&cell.key, &cell.name, &spec.name, &cell.job, &report)
-                    {
-                        Ok(()) => {
+                    Ok(report) => match store.commit(
+                        &cell.key,
+                        CellOutcome::new(&cell.job, &report)
+                            .cell(&cell.name)
+                            .campaign(&spec.name),
+                    ) {
+                        Ok(_) => {
                             println!(
                                 "campaign[{}]: done {} ({} rounds, acc {:.3})",
                                 spec.name,
@@ -318,9 +337,19 @@ pub fn run_asha(
             let partial = match st.handle.take() {
                 Some(handle) => {
                     let report = handle.partial_report();
-                    let stored =
-                        store.put_partial(&cell.key, &cell.name, &spec.name, &cell.job, &report);
-                    if let Err(e) = stored {
+                    // Persist the model alongside the prefix (checkpointable
+                    // jobs only) so a later campaign deepens this cell from
+                    // its rung instead of round 1.
+                    let ckpt = handle.checkpoint_params().map(|p| {
+                        Checkpoint::new(&cell.key, report.rounds_completed(), p.to_vec())
+                    });
+                    let mut outcome = CellOutcome::new(&cell.job, &report)
+                        .cell(&cell.name)
+                        .campaign(&spec.name);
+                    if let Some(c) = &ckpt {
+                        outcome = outcome.checkpoint(c);
+                    }
+                    if let Err(e) = store.commit(&cell.key, outcome) {
                         st.error = Some(format!("persisting partial result: {e:#}"));
                         continue;
                     }
@@ -354,7 +383,7 @@ pub fn run_asha(
             .zip(states)
             .map(|(cell, st)| {
                 let cached = !st.executed && st.error.is_none() && st.report.is_some();
-                CellOutcome {
+                CellRun {
                     cell,
                     cached,
                     report: st.report,

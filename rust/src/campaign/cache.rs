@@ -17,9 +17,24 @@
 //!   requested number of rounds — a partial entry is a cache *hit for its
 //!   rung* (the determinism contract makes a stored prefix bitwise equal to
 //!   re-running that prefix);
-//! * [`ResultStore::put_partial`] only ever deepens an entry (a shallower
-//!   rung result never overwrites a deeper or complete one), so promoting a
-//!   cell to a deeper rung extends its entry monotonically.
+//! * a partial [`ResultStore::commit`] only ever *deepens* an entry (a
+//!   shallower rung result never overwrites a deeper or complete one), so
+//!   promoting a cell to a deeper rung extends its entry monotonically.
+//!
+//! **Schema v3** adds two sidecar file kinds next to the cell docs:
+//! * `<shard>/<key>.ckpt` — a [`Checkpoint`] blob (the global model,
+//!   bit-exact) stored alongside a rung-stopped entry so a later campaign
+//!   or another worker resumes the cell *from its rung* instead of round 1;
+//!   removed when the entry completes.
+//! * `<store>/leases/<key>.lease` + `<store>/failed/<key>.json` — the
+//!   worker-coordination layer (see [`crate::campaign::lease`] and
+//!   [`crate::campaign::worker`]). Failure markers let one worker's cell
+//!   failure unblock every other worker's rung barrier; they are cleared by
+//!   the next successful commit of that key.
+//!
+//! v2 entries still read as cache hits (the report format is unchanged);
+//! they simply have no checkpoint, so deepening them replays from scratch.
+//! v1 entries read as a miss and re-run.
 //!
 //! A stored cell carries the full [`RunReport`] (including first-run wall
 //! times), so a resumed campaign reproduces its report **byte-identically**
@@ -29,8 +44,10 @@ use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::campaign::checkpoint::Checkpoint;
+use crate::campaign::lease::{self, LeaseConfig};
 use crate::config::job::JobConfig;
 use crate::metrics::report::RunReport;
 use crate::util::hash;
@@ -41,15 +58,78 @@ use crate::util::json::Json;
 /// instead of being served from cache.
 pub const ENGINE_VERSION: &str = concat!("flsim-", env!("CARGO_PKG_VERSION"), "+engine.v4");
 
-/// Schema tag of one stored cell document. v2 added partial (rung-stopped)
-/// entries — the report's `stopped_early` flag and prefix depth; v1 entries
-/// read as a miss and simply re-run.
-const CELL_SCHEMA: &str = "flsim-cell-v2";
+/// Schema tag of one stored cell document. v3 added checkpoint sidecars
+/// (resumable rung-stopped cells) and the worker-coordination files; v2
+/// (partial entries) still reads as a hit; v1 reads as a miss and re-runs.
+const CELL_SCHEMA: &str = "flsim-cell-v3";
+const CELL_SCHEMA_V2: &str = "flsim-cell-v2";
+
+/// Schema tag of one failure marker (`<store>/failed/<key>.json`).
+const FAILED_SCHEMA: &str = "flsim-failed-v1";
+
+/// Subdirectory of the result store holding failure markers.
+pub const FAILED_DIR: &str = "failed";
+
+fn schema_ok(s: Option<&str>) -> bool {
+    s == Some(CELL_SCHEMA) || s == Some(CELL_SCHEMA_V2)
+}
 
 /// The content-addressed key of a resolved job config.
 pub fn cell_key(job: &JobConfig) -> String {
     let doc = format!("{}\n{}", ENGINE_VERSION, job.canonical_json());
     hash::sha256_hex(doc.as_bytes())
+}
+
+/// One cell execution's result, ready to commit: the report plus its
+/// provenance and (for rung-stopped cells) the resumable model state.
+/// Replaces the old `put`/`put_partial` positional signatures — build with
+/// [`CellOutcome::new`] and chain the optional fields:
+///
+/// ```ignore
+/// store.commit(&key, CellOutcome::new(&job, &report)
+///     .cell("lr=0.01/seed=1")
+///     .campaign("sweep")
+///     .checkpoint(&ckpt))?;
+/// ```
+#[derive(Clone, Copy)]
+pub struct CellOutcome<'a> {
+    job: &'a JobConfig,
+    report: &'a RunReport,
+    cell: &'a str,
+    campaign: &'a str,
+    checkpoint: Option<&'a Checkpoint>,
+}
+
+impl<'a> CellOutcome<'a> {
+    pub fn new(job: &'a JobConfig, report: &'a RunReport) -> CellOutcome<'a> {
+        CellOutcome {
+            job,
+            report,
+            cell: "",
+            campaign: "",
+            checkpoint: None,
+        }
+    }
+
+    /// Cell name within its campaign (provenance, surfaced by `list`).
+    pub fn cell(mut self, name: &'a str) -> CellOutcome<'a> {
+        self.cell = name;
+        self
+    }
+
+    /// Which campaign computed this result (provenance only — content
+    /// addressing shares identically-configured cells across campaigns).
+    pub fn campaign(mut self, name: &'a str) -> CellOutcome<'a> {
+        self.campaign = name;
+        self
+    }
+
+    /// Attach resumable model state to a rung-stopped report. The blob's
+    /// depth must match the report's (`commit` enforces it).
+    pub fn checkpoint(mut self, ckpt: &'a Checkpoint) -> CellOutcome<'a> {
+        self.checkpoint = Some(ckpt);
+        self
+    }
 }
 
 /// What `campaign gc` did.
@@ -60,6 +140,10 @@ pub struct GcStats {
     pub kept: usize,
     /// Crash/cancel residue (`.tmp` files) removed alongside.
     pub tmp_removed: usize,
+    /// Checkpoint blobs removed (with their evicted entry, or orphaned).
+    pub ckpt_removed: usize,
+    /// Expired lease files swept.
+    pub leases_swept: usize,
 }
 
 /// Eviction policy for [`ResultStore::gc`]. Entries matching *either* bound
@@ -75,6 +159,10 @@ pub struct GcOptions {
     /// rename — deleting it would fail that writer's atomic commit — so
     /// only residue older than the bound is treated as crash debris.
     pub tmp_max_age: Option<Duration>,
+    /// Leases whose heartbeat is younger than this are *live*: their
+    /// entries, checkpoints, and temp files are never swept (`None` = the
+    /// default lease expiry). Must match the workers' `--expiry-secs`.
+    pub lease_expiry: Option<Duration>,
 }
 
 /// An on-disk result store rooted at one directory.
@@ -103,6 +191,11 @@ impl ResultStore {
         self.shard(key).join(format!("{key}.json"))
     }
 
+    /// Where a cell's checkpoint blob lives (whether or not it exists yet).
+    pub fn checkpoint_path(&self, key: &str) -> PathBuf {
+        self.shard(key).join(format!("{key}.ckpt"))
+    }
+
     /// Whether a *loadable, complete* entry exists — delegates to
     /// [`ResultStore::get`] so `campaign list`'s cached/pending column
     /// agrees with what `run` will actually do (a corrupt, stale-schema, or
@@ -116,7 +209,7 @@ impl ResultStore {
     fn get_any(&self, key: &str) -> Option<RunReport> {
         let src = std::fs::read_to_string(self.path_of(key)).ok()?;
         let doc = Json::parse(&src).ok()?;
-        if doc.get("schema").and_then(Json::as_str) != Some(CELL_SCHEMA) {
+        if !schema_ok(doc.get("schema").and_then(Json::as_str)) {
             return None;
         }
         if doc.get("engine").and_then(Json::as_str) != Some(ENGINE_VERSION) {
@@ -142,29 +235,63 @@ impl ResultStore {
             .filter(|r| !r.stopped_early || r.rounds_completed() >= rounds)
     }
 
-    /// Persist one completed cell (atomic: temp file + rename, so a
+    /// Commit one cell execution (atomic: temp file + rename, so a
     /// concurrent or crashed campaign never leaves a half-written entry).
+    /// This is the single write path:
     ///
-    /// `campaign` records which campaign first computed the entry —
-    /// provenance only, surfaced by `campaign list`'s dedup statistics.
-    /// It is *not* part of the key: the whole point of content addressing
-    /// is that identically-configured cells of different campaigns share
-    /// one entry.
-    pub fn put(
-        &self,
-        key: &str,
-        cell: &str,
-        campaign: &str,
-        job: &JobConfig,
-        report: &RunReport,
-    ) -> Result<()> {
+    /// * a **complete** report (`!stopped_early`) always writes, removes
+    ///   any now-redundant checkpoint blob, and clears the key's failure
+    ///   marker;
+    /// * a **partial** (rung-stopped) report only *deepens*: an existing
+    ///   complete entry, or a partial at least as deep, is left untouched —
+    ///   replaying a rung never downgrades the store. An attached
+    ///   [`Checkpoint`] is written first (sidecar, then the doc rename as
+    ///   the commit point).
+    ///
+    /// Returns whether a write happened.
+    ///
+    /// The check-then-rename is atomic only within one process. Two
+    /// *processes* racing on the same key can interleave so a partial lands
+    /// over a just-committed complete entry — never a torn file, and never
+    /// wrong results: the next full-run lookup simply misses and the cell
+    /// re-executes (wasted compute, not corruption). The lease layer
+    /// ([`crate::campaign::lease`]) exists to make that race rare.
+    pub fn commit(&self, key: &str, outcome: CellOutcome<'_>) -> Result<bool> {
+        let report = outcome.report;
+        if report.stopped_early {
+            if let Some(existing) = self.get_any(key) {
+                if !existing.stopped_early
+                    || existing.rounds_completed() >= report.rounds_completed()
+                {
+                    return Ok(false);
+                }
+            }
+        }
+        if let Some(ckpt) = outcome.checkpoint {
+            if !report.stopped_early {
+                bail!("commit: a complete report needs no checkpoint");
+            }
+            if ckpt.key != key || ckpt.rounds != report.rounds_completed() {
+                bail!(
+                    "commit: checkpoint (key {}.., round {}) does not match the \
+                     report (key {}.., round {})",
+                    &ckpt.key[..8.min(ckpt.key.len())],
+                    ckpt.rounds,
+                    &key[..8.min(key.len())],
+                    report.rounds_completed()
+                );
+            }
+            self.put_checkpoint(ckpt)?;
+        }
         let doc = Json::obj(vec![
             ("schema", Json::from(CELL_SCHEMA)),
             ("key", Json::from(key)),
             ("engine", Json::from(ENGINE_VERSION)),
-            ("cell", Json::from(cell)),
-            ("campaign", Json::from(campaign)),
-            ("config", job.canonical_json()),
+            ("cell", Json::from(outcome.cell)),
+            ("campaign", Json::from(outcome.campaign)),
+            ("rounds", Json::from(report.rounds_completed() as f64)),
+            ("checkpoint", Json::from(outcome.checkpoint.is_some())),
+            ("config", outcome.job.canonical_json()),
             ("report", report.to_json()),
         ]);
         let shard = self.shard(key);
@@ -179,19 +306,33 @@ impl ResultStore {
             .with_context(|| format!("writing {tmp:?}"))?;
         std::fs::rename(&tmp, &path)
             .with_context(|| format!("committing {path:?}"))?;
+        if !report.stopped_early {
+            self.remove_checkpoint(key);
+        }
+        self.clear_failure(key);
+        Ok(true)
+    }
+
+    /// Deprecated positional write path; use [`ResultStore::commit`].
+    #[deprecated(note = "use ResultStore::commit(key, CellOutcome::new(job, report)...)")]
+    pub fn put(
+        &self,
+        key: &str,
+        cell: &str,
+        campaign: &str,
+        job: &JobConfig,
+        report: &RunReport,
+    ) -> Result<()> {
+        self.commit(
+            key,
+            CellOutcome::new(job, report).cell(cell).campaign(campaign),
+        )?;
         Ok(())
     }
 
-    /// Persist a partial (rung-stopped) cell report, but only if it deepens
-    /// what is stored: an existing complete entry, or a partial at least as
-    /// deep, is left untouched (so replaying a rung never downgrades the
-    /// store). Returns whether a write happened.
-    ///
-    /// The check-then-rename is atomic only within one process. Two
-    /// *processes* racing on the same key can interleave so a partial lands
-    /// over a just-committed complete entry — never a torn file, and never
-    /// wrong results: the next full-run lookup simply misses and the cell
-    /// re-executes (wasted compute, not corruption).
+    /// Deprecated positional write path; use [`ResultStore::commit`] (a
+    /// `stopped_early` report is deepen-only automatically).
+    #[deprecated(note = "use ResultStore::commit(key, CellOutcome::new(job, report)...)")]
     pub fn put_partial(
         &self,
         key: &str,
@@ -200,13 +341,83 @@ impl ResultStore {
         job: &JobConfig,
         report: &RunReport,
     ) -> Result<bool> {
-        if let Some(existing) = self.get_any(key) {
-            if !existing.stopped_early || existing.rounds_completed() >= report.rounds_completed() {
-                return Ok(false);
-            }
+        self.commit(
+            key,
+            CellOutcome::new(job, report).cell(cell).campaign(campaign),
+        )
+    }
+
+    /// Persist a checkpoint blob (atomic sidecar write). Normally called
+    /// via [`ResultStore::commit`] with [`CellOutcome::checkpoint`].
+    pub fn put_checkpoint(&self, ckpt: &Checkpoint) -> Result<()> {
+        let shard = self.shard(&ckpt.key);
+        std::fs::create_dir_all(&shard)
+            .with_context(|| format!("creating store shard {shard:?}"))?;
+        let tmp = shard.join(format!(".{}.{}.ckpt.tmp", ckpt.key, std::process::id()));
+        let path = self.checkpoint_path(&ckpt.key);
+        std::fs::write(&tmp, format!("{}\n", ckpt.to_json()))
+            .with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("committing checkpoint {path:?}"))?;
+        Ok(())
+    }
+
+    /// Load a cell's checkpoint blob. Missing, corrupt, stale-engine, or
+    /// wrong-key blobs all read as a miss (the cell replays from scratch —
+    /// slower, never wrong).
+    pub fn get_checkpoint(&self, key: &str) -> Option<Checkpoint> {
+        let src = std::fs::read_to_string(self.checkpoint_path(key)).ok()?;
+        let doc = Json::parse(&src).ok()?;
+        let ckpt = Checkpoint::from_json(&doc).ok()?;
+        (ckpt.key == key).then_some(ckpt)
+    }
+
+    /// Best-effort removal (a complete entry makes the blob redundant).
+    pub fn remove_checkpoint(&self, key: &str) {
+        let _ = std::fs::remove_file(self.checkpoint_path(key));
+    }
+
+    fn failed_path(&self, key: &str) -> PathBuf {
+        self.dir.join(FAILED_DIR).join(format!("{key}.json"))
+    }
+
+    /// Record that a cell execution failed. Workers consult these so one
+    /// process's failure unblocks every process's rung barrier (instead of
+    /// the survivors polling a cell that will never complete). Cleared by
+    /// the next successful [`ResultStore::commit`] of the key; `campaign
+    /// run` (non-worker) ignores markers and simply retries.
+    pub fn record_failure(&self, key: &str, cell: &str, campaign: &str, error: &str) -> Result<()> {
+        let dir = self.dir.join(FAILED_DIR);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating failure dir {dir:?}"))?;
+        let doc = Json::obj(vec![
+            ("schema", Json::from(FAILED_SCHEMA)),
+            ("key", Json::from(key)),
+            ("cell", Json::from(cell)),
+            ("campaign", Json::from(campaign)),
+            ("error", Json::from(error)),
+        ]);
+        let tmp = dir.join(format!(".{key}.{}.tmp", std::process::id()));
+        std::fs::write(&tmp, format!("{doc}\n"))
+            .with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, self.failed_path(key))
+            .with_context(|| format!("recording failure for {key}"))?;
+        Ok(())
+    }
+
+    /// The recorded failure for a key, if any.
+    pub fn failure(&self, key: &str) -> Option<String> {
+        let src = std::fs::read_to_string(self.failed_path(key)).ok()?;
+        let doc = Json::parse(&src).ok()?;
+        if doc.get("schema").and_then(Json::as_str) != Some(FAILED_SCHEMA) {
+            return None;
         }
-        self.put(key, cell, campaign, job, report)?;
-        Ok(true)
+        doc.get("error").and_then(Json::as_str).map(str::to_string)
+    }
+
+    /// Best-effort removal of a failure marker.
+    pub fn clear_failure(&self, key: &str) {
+        let _ = std::fs::remove_file(self.failed_path(key));
     }
 
     /// Which campaign first computed the stored entry. `None` for misses,
@@ -215,7 +426,7 @@ impl ResultStore {
     pub fn origin(&self, key: &str) -> Option<String> {
         let src = std::fs::read_to_string(self.path_of(key)).ok()?;
         let doc = Json::parse(&src).ok()?;
-        if doc.get("schema").and_then(Json::as_str) != Some(CELL_SCHEMA) {
+        if !schema_ok(doc.get("schema").and_then(Json::as_str)) {
             return None;
         }
         if doc.get("engine").and_then(Json::as_str) != Some(ENGINE_VERSION) {
@@ -244,16 +455,27 @@ impl ResultStore {
         out
     }
 
+    /// The two-hex-char shard directories (skips `leases/`, `failed/`, and
+    /// any stray non-shard directory — their contents are not entries).
+    fn shard_dirs(&self) -> Vec<PathBuf> {
+        let mut out = Vec::new();
+        let Ok(shards) = std::fs::read_dir(&self.dir) else { return out };
+        for shard in shards.flatten() {
+            let path = shard.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            if name.len() == 2 && name.chars().all(|c| c.is_ascii_hexdigit()) && path.is_dir() {
+                out.push(path);
+            }
+        }
+        out
+    }
+
     /// Every entry in the store: `(key, path, mtime)`, unordered.
     /// Unparseable file names are skipped (they are not store entries).
     pub fn entries(&self) -> Vec<(String, PathBuf, SystemTime)> {
         let mut out = Vec::new();
-        let Ok(shards) = std::fs::read_dir(&self.dir) else { return out };
-        for shard in shards.flatten() {
-            if !shard.path().is_dir() {
-                continue;
-            }
-            let Ok(files) = std::fs::read_dir(shard.path()) else { continue };
+        for shard in self.shard_dirs() {
+            let Ok(files) = std::fs::read_dir(&shard) else { continue };
             for f in files.flatten() {
                 let path = f.path();
                 let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
@@ -276,19 +498,30 @@ impl ResultStore {
     /// residue left by crashed/cancelled writers. Keys in `protect` — the
     /// cells of the campaign(s) being resumed — are **never** evicted
     /// (test-enforced), so a gc'd store still resumes them from cache.
+    ///
+    /// Worker coordination is honored (test-enforced): a key with a *live*
+    /// lease (heartbeat younger than `opts.lease_expiry`) keeps its entry,
+    /// its checkpoint blob, and its in-flight `.tmp` files regardless of
+    /// age. Evicting an entry also drops its checkpoint; orphaned
+    /// checkpoints (no entry, no live lease) and expired lease files are
+    /// swept as debris.
     pub fn gc(&self, opts: &GcOptions, protect: &BTreeSet<String>) -> Result<GcStats> {
         let mut stats = GcStats::default();
         let now = SystemTime::now();
+        let expiry = opts.lease_expiry.unwrap_or(LeaseConfig::default().expiry);
+        let leased = lease::live(&self.dir, expiry);
 
         // Newest-first so `keep_last` keeps the most recent results.
         let mut entries = self.entries();
         entries.sort_by(|a, b| b.2.cmp(&a.2).then_with(|| a.0.cmp(&b.0)));
 
         let mut kept_unprotected = 0usize;
+        let mut live_keys: BTreeSet<&str> = BTreeSet::new();
         for (key, path, mtime) in &entries {
             stats.scanned += 1;
-            if protect.contains(key) {
+            if protect.contains(key) || leased.contains_key(key) {
                 stats.kept += 1;
+                live_keys.insert(key);
                 continue;
             }
             let too_old = match opts.max_age {
@@ -306,15 +539,43 @@ impl ResultStore {
                 std::fs::remove_file(path)
                     .with_context(|| format!("evicting {path:?}"))?;
                 stats.evicted += 1;
+                let ckpt = self.checkpoint_path(key);
+                if ckpt.exists() {
+                    std::fs::remove_file(&ckpt)
+                        .with_context(|| format!("evicting checkpoint {ckpt:?}"))?;
+                    stats.ckpt_removed += 1;
+                }
             } else {
                 kept_unprotected += 1;
                 stats.kept += 1;
+                live_keys.insert(key);
+            }
+        }
+
+        // Orphaned checkpoints: no entry and no live lease means nothing
+        // will ever resume from the blob.
+        for shard in self.shard_dirs() {
+            let Ok(files) = std::fs::read_dir(&shard) else { continue };
+            for f in files.flatten() {
+                let path = f.path();
+                let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+                let Some(key) = name.strip_suffix(".ckpt") else { continue };
+                if key.len() != 64 || !key.chars().all(|c| c.is_ascii_hexdigit()) {
+                    continue;
+                }
+                if live_keys.contains(key) || leased.contains_key(key) {
+                    continue;
+                }
+                std::fs::remove_file(&path)
+                    .with_context(|| format!("sweeping orphan checkpoint {path:?}"))?;
+                stats.ckpt_removed += 1;
             }
         }
 
         // `.tmp` residue: a crash or hard cancel between write and rename
         // leaves these behind — but a *young* temp file may be a live
-        // writer mid-commit, so only sweep past the age bound.
+        // writer mid-commit, and a live-leased key's temp file *is* a live
+        // writer's, so sweep only unleased residue past the age bound.
         let tmp_bound = opts.tmp_max_age.unwrap_or(Duration::from_secs(3600));
         if let Ok(shards) = std::fs::read_dir(&self.dir) {
             for shard in shards.flatten() {
@@ -325,6 +586,19 @@ impl ResultStore {
                     for f in files.flatten() {
                         let path = f.path();
                         let is_tmp = path.extension().map(|e| e == "tmp").unwrap_or(false);
+                        if !is_tmp {
+                            continue;
+                        }
+                        // Temp names embed their key (`.{key}.{pid}...tmp`).
+                        let embedded_key = path
+                            .file_name()
+                            .and_then(|n| n.to_str())
+                            .map(|n| n.trim_start_matches('.'))
+                            .filter(|n| n.len() >= 64)
+                            .map(|n| &n[..64]);
+                        if embedded_key.map(|k| leased.contains_key(k)).unwrap_or(false) {
+                            continue;
+                        }
                         let stale = f
                             .metadata()
                             .and_then(|m| m.modified())
@@ -332,12 +606,38 @@ impl ResultStore {
                             .and_then(|m| now.duration_since(m).ok())
                             .map(|age| age > tmp_bound)
                             .unwrap_or(false);
-                        if is_tmp && stale {
+                        if stale {
                             std::fs::remove_file(&path)
                                 .with_context(|| format!("sweeping {path:?}"))?;
                             stats.tmp_removed += 1;
                         }
                     }
+                }
+            }
+        }
+
+        // Expired lease files are debris too (a dead worker's lease that no
+        // survivor ever needed to reclaim).
+        let lease_dir = self.dir.join(lease::LEASE_DIR);
+        if let Ok(files) = std::fs::read_dir(&lease_dir) {
+            for f in files.flatten() {
+                let path = f.path();
+                let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+                let Some(key) = name.strip_suffix(".lease") else { continue };
+                if leased.contains_key(key) {
+                    continue;
+                }
+                let stale = f
+                    .metadata()
+                    .and_then(|m| m.modified())
+                    .ok()
+                    .and_then(|m| now.duration_since(m).ok())
+                    .map(|age| age > expiry)
+                    .unwrap_or(false);
+                if stale {
+                    std::fs::remove_file(&path)
+                        .with_context(|| format!("sweeping expired lease {path:?}"))?;
+                    stats.leases_swept += 1;
                 }
             }
         }
@@ -348,6 +648,7 @@ impl ResultStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::campaign::lease::{Acquire, LeaseManager};
     use crate::metrics::report::RoundMetrics;
 
     fn tmp_store(tag: &str) -> (ResultStore, PathBuf) {
@@ -389,19 +690,65 @@ mod tests {
         report_of(1, false)
     }
 
+    fn commit_simple(store: &ResultStore, key: &str, campaign: &str, job: &JobConfig, r: &RunReport) {
+        store
+            .commit(key, CellOutcome::new(job, r).cell("c").campaign(campaign))
+            .unwrap();
+    }
+
     #[test]
-    fn put_then_get_roundtrips() {
+    fn commit_then_get_roundtrips() {
         let (store, dir) = tmp_store("roundtrip");
         let job = JobConfig::default_cnn("fedavg");
         let key = cell_key(&job);
         assert!(!store.contains(&key));
         assert!(store.get(&key).is_none());
-        store.put(&key, "cell_a", "camp", &job, &report()).unwrap();
+        commit_simple(&store, &key, "camp", &job, &report());
         assert!(store.contains(&key));
         let back = store.get(&key).unwrap();
         assert_eq!(back.to_json().to_string(), report().to_json().to_string());
         // Content-addressed layout: two-char shard prefix.
         assert!(store.path_of(&key).starts_with(dir.join(&key[..2])));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn deprecated_put_shims_still_write() {
+        let (store, dir) = tmp_store("shims");
+        let job = JobConfig::default_cnn("fedavg");
+        let key = cell_key(&job);
+        #[allow(deprecated)]
+        {
+            assert!(store
+                .put_partial(&key, "c", "camp", &job, &report_of(1, true))
+                .unwrap());
+            store.put(&key, "c", "camp", &job, &report()).unwrap();
+        }
+        assert!(store.contains(&key));
+        assert_eq!(store.origin(&key).as_deref(), Some("camp"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn v2_entries_still_read_as_hits() {
+        let (store, dir) = tmp_store("v2compat");
+        let job = JobConfig::default_cnn("fedavg");
+        let key = cell_key(&job);
+        let doc = Json::obj(vec![
+            ("schema", Json::from(CELL_SCHEMA_V2)),
+            ("key", Json::from(key.as_str())),
+            ("engine", Json::from(ENGINE_VERSION)),
+            ("cell", Json::from("c")),
+            ("campaign", Json::from("old")),
+            ("config", job.canonical_json()),
+            ("report", report().to_json()),
+        ]);
+        std::fs::create_dir_all(store.path_of(&key).parent().unwrap()).unwrap();
+        std::fs::write(store.path_of(&key), format!("{doc}\n")).unwrap();
+        assert!(store.contains(&key), "v2 entries must keep serving");
+        assert_eq!(store.origin(&key).as_deref(), Some("old"));
+        // ... and of course have no checkpoint.
+        assert!(store.get_checkpoint(&key).is_none());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -432,7 +779,7 @@ mod tests {
         let job = JobConfig::default_cnn("fedavg");
         let key = cell_key(&job);
 
-        store.put(&key, "c", "camp", &job, &report_of(2, true)).unwrap();
+        commit_simple(&store, &key, "camp", &job, &report_of(2, true));
         // A rung-stopped prefix is not a complete run ...
         assert!(store.get(&key).is_none());
         assert!(!store.contains(&key));
@@ -442,31 +789,87 @@ mod tests {
         assert!(store.get_at_least(&key, 3).is_none());
 
         // A complete entry satisfies every depth.
-        store.put(&key, "c", "camp", &job, &report_of(3, false)).unwrap();
+        commit_simple(&store, &key, "camp", &job, &report_of(3, false));
         assert!(store.get(&key).is_some());
         assert!(store.get_at_least(&key, 99).is_some());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]
-    fn put_partial_only_deepens() {
+    fn partial_commits_only_deepen() {
         let (store, dir) = tmp_store("deepen");
         let job = JobConfig::default_cnn("fedavg");
         let key = cell_key(&job);
+        let commit = |r: &RunReport| {
+            store
+                .commit(&key, CellOutcome::new(&job, r).cell("c").campaign("camp"))
+                .unwrap()
+        };
 
-        assert!(store.put_partial(&key, "c", "camp", &job, &report_of(1, true)).unwrap());
+        assert!(commit(&report_of(1, true)));
         // Same depth again: no write.
-        assert!(!store.put_partial(&key, "c", "camp", &job, &report_of(1, true)).unwrap());
+        assert!(!commit(&report_of(1, true)));
         // Deeper partial: upgrades.
-        assert!(store.put_partial(&key, "c", "camp", &job, &report_of(2, true)).unwrap());
+        assert!(commit(&report_of(2, true)));
         assert_eq!(store.get_at_least(&key, 2).unwrap().rounds_completed(), 2);
         // Shallower partial: refused.
-        assert!(!store.put_partial(&key, "c", "camp", &job, &report_of(1, true)).unwrap());
+        assert!(!commit(&report_of(1, true)));
         assert_eq!(store.get_at_least(&key, 2).unwrap().rounds_completed(), 2);
         // A complete entry is never downgraded by any partial.
-        store.put(&key, "c", "camp", &job, &report_of(3, false)).unwrap();
-        assert!(!store.put_partial(&key, "c", "camp", &job, &report_of(2, true)).unwrap());
+        assert!(commit(&report_of(3, false)));
+        assert!(!commit(&report_of(2, true)));
         assert!(store.get(&key).is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoints_ride_partial_commits_and_complete_removes_them() {
+        let (store, dir) = tmp_store("ckpt");
+        let job = JobConfig::default_cnn("fedavg");
+        let key = cell_key(&job);
+        let ckpt = Checkpoint::new(&key, 2, vec![0.5, -1.25, 3.0]);
+
+        // Depth mismatch between blob and report is a programmer error.
+        assert!(store
+            .commit(
+                &key,
+                CellOutcome::new(&job, &report_of(1, true)).checkpoint(&ckpt)
+            )
+            .is_err());
+
+        assert!(store
+            .commit(
+                &key,
+                CellOutcome::new(&job, &report_of(2, true))
+                    .cell("c")
+                    .campaign("camp")
+                    .checkpoint(&ckpt)
+            )
+            .unwrap());
+        let back = store.get_checkpoint(&key).unwrap();
+        assert_eq!(back.rounds, 2);
+        assert_eq!(back.params, vec![0.5, -1.25, 3.0]);
+
+        // Completing the cell removes the now-redundant blob.
+        commit_simple(&store, &key, "camp", &job, &report_of(3, false));
+        assert!(store.get_checkpoint(&key).is_none());
+        assert!(!store.checkpoint_path(&key).exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn failure_markers_record_and_clear() {
+        let (store, dir) = tmp_store("failures");
+        let job = JobConfig::default_cnn("fedavg");
+        let key = cell_key(&job);
+        assert!(store.failure(&key).is_none());
+        store.record_failure(&key, "c", "camp", "boom").unwrap();
+        assert_eq!(store.failure(&key).as_deref(), Some("boom"));
+        // Failure markers are not entries (census/gc must not count them).
+        assert!(store.entries().is_empty());
+        // The next successful commit clears the marker.
+        commit_simple(&store, &key, "camp", &job, &report());
+        assert!(store.failure(&key).is_none());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -478,7 +881,7 @@ mod tests {
             let mut job = JobConfig::default_cnn("fedavg");
             job.seed = seed;
             let key = cell_key(&job);
-            store.put(&key, "c", "camp", &job, &report()).unwrap();
+            commit_simple(&store, &key, "camp", &job, &report());
             keys.push(key);
         }
         // Fake crash residue.
@@ -492,6 +895,7 @@ mod tests {
             // Sweep even fresh residue in the test (production default is
             // an hour, sparing live writers mid-commit).
             tmp_max_age: Some(Duration::ZERO),
+            lease_expiry: None,
         };
         let stats = store.gc(&opts, &protect).unwrap();
         assert_eq!(stats.scanned, 4);
@@ -507,10 +911,108 @@ mod tests {
             keep_last: None,
             max_age: Some(Duration::from_secs(0)),
             tmp_max_age: None,
+            lease_expiry: None,
         };
         let stats = store.gc(&opts, &BTreeSet::new()).unwrap();
         assert_eq!(stats.evicted, 2);
         assert!(store.entries().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gc_protects_leased_cells_their_checkpoints_and_tmp_files() {
+        let (store, dir) = tmp_store("gc_lease");
+        let job = JobConfig::default_cnn("fedavg");
+        let key = cell_key(&job);
+        let ckpt = Checkpoint::new(&key, 2, vec![1.0, 2.0]);
+        store
+            .commit(
+                &key,
+                CellOutcome::new(&job, &report_of(2, true))
+                    .cell("c")
+                    .campaign("camp")
+                    .checkpoint(&ckpt),
+            )
+            .unwrap();
+        // An in-flight writer's temp file for the leased key.
+        let tmp = store
+            .path_of(&key)
+            .with_file_name(format!(".{key}.999.tmp"));
+        std::fs::write(&tmp, "in flight").unwrap();
+
+        let mgr = LeaseManager::open(store.dir(), "w1", LeaseConfig::default()).unwrap();
+        let lease = match mgr.try_acquire(&key).unwrap() {
+            Acquire::Acquired(l) => l,
+            _ => panic!("fresh key must acquire"),
+        };
+
+        // The most aggressive policy possible: evict everything, sweep all
+        // residue. The live-leased cell must survive untouched.
+        let opts = GcOptions {
+            max_age: Some(Duration::ZERO),
+            keep_last: Some(0),
+            tmp_max_age: Some(Duration::ZERO),
+            lease_expiry: None, // default expiry: the lease is live
+        };
+        let stats = store.gc(&opts, &BTreeSet::new()).unwrap();
+        assert_eq!(stats.evicted, 0, "leased entry must not be evicted");
+        assert_eq!(stats.ckpt_removed, 0, "leased checkpoint must survive");
+        assert!(store.get_at_least(&key, 2).is_some());
+        assert!(store.get_checkpoint(&key).is_some());
+        assert!(tmp.exists(), "leased cell's tmp file must survive");
+
+        // Released (dropped) lease + zero expiry: everything is collectable.
+        drop(lease);
+        let opts = GcOptions {
+            lease_expiry: Some(Duration::ZERO),
+            ..opts
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        let stats = store.gc(&opts, &BTreeSet::new()).unwrap();
+        assert_eq!(stats.evicted, 1);
+        assert_eq!(stats.ckpt_removed, 1);
+        assert!(stats.tmp_removed >= 1);
+        assert!(store.get_at_least(&key, 1).is_none());
+        assert!(store.get_checkpoint(&key).is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gc_sweeps_orphan_checkpoints_and_expired_leases() {
+        let (store, dir) = tmp_store("gc_orphans");
+        let job = JobConfig::default_cnn("fedavg");
+        let key = cell_key(&job);
+        // A checkpoint with no entry (e.g. its entry was evicted by an old
+        // flsim) and no lease: debris.
+        store
+            .put_checkpoint(&Checkpoint::new(&key, 1, vec![0.0]))
+            .unwrap();
+        // An expired lease file from a dead worker nobody reclaimed.
+        let mgr = LeaseManager::open(
+            store.dir(),
+            "dead",
+            LeaseConfig {
+                heartbeat: Duration::from_millis(5),
+                expiry: Duration::from_millis(10),
+            },
+        )
+        .unwrap();
+        let l = match mgr.try_acquire(&key).unwrap() {
+            Acquire::Acquired(l) => l,
+            _ => panic!(),
+        };
+        std::mem::forget(l); // "crash"
+        std::thread::sleep(Duration::from_millis(40));
+
+        let opts = GcOptions {
+            max_age: Some(Duration::ZERO),
+            lease_expiry: Some(Duration::from_millis(10)),
+            ..GcOptions::default()
+        };
+        let stats = store.gc(&opts, &BTreeSet::new()).unwrap();
+        assert_eq!(stats.ckpt_removed, 1);
+        assert_eq!(stats.leases_swept, 1);
+        assert!(store.get_checkpoint(&key).is_none());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -522,7 +1024,7 @@ mod tests {
             let mut job = JobConfig::default_cnn("fedavg");
             job.seed = seed;
             let key = cell_key(&job);
-            store.put(&key, "c", campaign, &job, &report()).unwrap();
+            commit_simple(&store, &key, campaign, &job, &report());
             keys.push(key);
         }
         assert_eq!(store.origin(&keys[0]).as_deref(), Some("alpha"));
@@ -561,9 +1063,12 @@ mod tests {
         assert!(store.entries().is_empty());
         let job = JobConfig::default_cnn("fedavg");
         let key = cell_key(&job);
-        store.put(&key, "c", "camp", &job, &report()).unwrap();
-        // A stray non-entry file is ignored.
+        commit_simple(&store, &key, "camp", &job, &report());
+        // A stray non-entry file is ignored, and so are the coordination
+        // directories (leases/failed hold key-named files that are *not*
+        // entries).
         std::fs::write(dir.join("README"), "not an entry").unwrap();
+        store.record_failure(&key, "c", "camp", "x").unwrap();
         let entries = store.entries();
         assert_eq!(entries.len(), 1);
         assert_eq!(entries[0].0, key);

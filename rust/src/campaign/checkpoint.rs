@@ -1,0 +1,178 @@
+//! Resumable model state for rung-stopped cells (store schema v3).
+//!
+//! For jobs whose only cross-round mutable state is the global model —
+//! central aggregation (fedavg / fedprox / dpfl) on the client-server
+//! flow, eager population, no blockchain (see
+//! [`crate::orchestrator::RunHandle::checkpointable`]) — a partial report
+//! plus the global parameter vector at the stop round is a *complete*
+//! resume point: everything else each round (client sampling, per-node RNG
+//! streams, fault and churn draws, DP accounting, network metering) is
+//! re-derived deterministically from the config. A checkpoint blob stored
+//! alongside a rung-stopped entry therefore lets a later campaign — or
+//! another worker process — deepen the cell from its rung instead of
+//! replaying it from round 1.
+//!
+//! Parameters are serialized as the raw IEEE-754 bit patterns (8 lowercase
+//! hex digits per `f32`), not decimal floats: resume must restore the
+//! model **bit-exactly** or the deepened rounds would diverge from the
+//! determinism contract. A corrupt, truncated, or stale-engine blob reads
+//! as a miss — the cell just re-runs from scratch, never wrong.
+
+use anyhow::{bail, Result};
+
+use crate::campaign::cache::ENGINE_VERSION;
+use crate::util::json::Json;
+
+/// Schema tag of one checkpoint blob (`<shard>/<key>.ckpt`).
+pub const CHECKPOINT_SCHEMA: &str = "flsim-ckpt-v1";
+
+/// A rung-stopped cell's resumable state: the global model exactly as it
+/// stood after `rounds` completed rounds of the run keyed by `key`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// The cell's content-addressed store key.
+    pub key: String,
+    /// Rounds completed when the snapshot was taken — must equal the
+    /// companion partial report's depth.
+    pub rounds: u64,
+    /// Global model parameters, bit-exact.
+    pub params: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn new(key: &str, rounds: u64, params: Vec<f32>) -> Checkpoint {
+        Checkpoint {
+            key: key.to_string(),
+            rounds,
+            params,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::from(CHECKPOINT_SCHEMA)),
+            ("key", Json::from(self.key.as_str())),
+            ("engine", Json::from(ENGINE_VERSION)),
+            ("rounds", Json::from(self.rounds as f64)),
+            ("n_params", Json::from(self.params.len())),
+            ("params_hex", Json::from(encode_params(&self.params).as_str())),
+        ])
+    }
+
+    /// Strict parse: schema, engine, and length mismatches are all errors
+    /// (callers treat any error as a cache miss).
+    pub fn from_json(doc: &Json) -> Result<Checkpoint> {
+        let field = |k: &str| -> Result<&Json> {
+            doc.get(k)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint: missing field '{k}'"))
+        };
+        if field("schema")?.as_str() != Some(CHECKPOINT_SCHEMA) {
+            bail!("checkpoint: unknown schema");
+        }
+        if field("engine")?.as_str() != Some(ENGINE_VERSION) {
+            bail!("checkpoint: stale engine version");
+        }
+        let key = field("key")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint: key is not a string"))?
+            .to_string();
+        let rounds = field("rounds")?
+            .as_f64()
+            .filter(|r| r.fract() == 0.0 && *r >= 0.0)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint: bad rounds"))? as u64;
+        let n = field("n_params")?
+            .as_f64()
+            .filter(|n| n.fract() == 0.0 && *n >= 0.0)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint: bad n_params"))? as usize;
+        let hex = field("params_hex")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint: params_hex is not a string"))?;
+        let params = decode_params(hex)?;
+        if params.len() != n {
+            bail!(
+                "checkpoint: params_hex holds {} values, n_params says {n}",
+                params.len()
+            );
+        }
+        Ok(Checkpoint {
+            key,
+            rounds,
+            params,
+        })
+    }
+}
+
+/// 8 lowercase hex digits per parameter: the `f32`'s big-endian bits.
+fn encode_params(params: &[f32]) -> String {
+    let mut s = String::with_capacity(params.len() * 8);
+    for p in params {
+        s.push_str(&format!("{:08x}", p.to_bits()));
+    }
+    s
+}
+
+fn decode_params(hex: &str) -> Result<Vec<f32>> {
+    if hex.len() % 8 != 0 {
+        bail!("checkpoint: params_hex length {} is not a multiple of 8", hex.len());
+    }
+    let bytes = hex.as_bytes();
+    let mut out = Vec::with_capacity(hex.len() / 8);
+    for chunk in bytes.chunks_exact(8) {
+        let mut bits: u32 = 0;
+        for &b in chunk {
+            let d = (b as char)
+                .to_digit(16)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint: non-hex digit in params_hex"))?;
+            bits = (bits << 4) | d;
+        }
+        out.push(f32::from_bits(bits));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_roundtrip_bit_exactly() {
+        // Include values a decimal codec would mangle: subnormals, NaN with
+        // payload, negative zero, infinities.
+        let params = vec![
+            0.1f32,
+            -0.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::from_bits(0x7fc0_dead), // NaN payload
+            f32::from_bits(1),           // smallest subnormal
+            1.0e-38,
+            3.141_592_7,
+        ];
+        let ckpt = Checkpoint::new(&"ab".repeat(32), 3, params.clone());
+        let back = Checkpoint::from_json(&ckpt.to_json()).unwrap();
+        assert_eq!(back.key, ckpt.key);
+        assert_eq!(back.rounds, 3);
+        assert_eq!(back.params.len(), params.len());
+        for (a, b) in params.iter().zip(&back.params) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bit-exact round trip");
+        }
+    }
+
+    #[test]
+    fn corrupt_blobs_are_errors() {
+        let ckpt = Checkpoint::new(&"cd".repeat(32), 2, vec![1.0, 2.0]);
+        let mut doc = ckpt.to_json();
+        assert!(Checkpoint::from_json(&doc).is_ok());
+        // Truncated hex.
+        doc = Json::parse(
+            &doc.to_string()
+                .replace(&encode_params(&[1.0f32, 2.0]), "3f80"),
+        )
+        .unwrap();
+        assert!(Checkpoint::from_json(&doc).is_err());
+        // Wrong schema.
+        let other = Json::parse(&ckpt.to_json().to_string().replace(CHECKPOINT_SCHEMA, "x"))
+            .unwrap();
+        assert!(Checkpoint::from_json(&other).is_err());
+    }
+}

@@ -1,0 +1,431 @@
+//! Cooperative cell leases: the coordination layer that lets N worker
+//! processes drain one campaign store with no coordinator.
+//!
+//! One lease file per cell key lives under `<store>/leases/<key>.lease`,
+//! a single-line JSON doc (`{"schema":"flsim-lease-v1", key, owner, beat,
+//! pid}`). The protocol rests on three filesystem atomics:
+//!
+//! * **Acquire** — `O_CREAT|O_EXCL` (`create_new`): exactly one process
+//!   creates the canonical path, so at most one holder exists at a time.
+//! * **Heartbeat** — the holder periodically rewrites the doc (temp file +
+//!   rename) with an incremented `beat` counter, refreshing the file's
+//!   mtime.
+//! * **Reclaim** — a lease is *stale* when its heartbeat stopped: the file
+//!   mtime is older than the expiry, or this process has watched the same
+//!   `beat` for longer than the expiry on its own monotonic clock (the
+//!   skew-proof fallback for shared filesystems with drifting clocks).
+//!   Reclaiming renames the stale file *away* — rename is atomic, so
+//!   exactly one contender wins — and then races `create_new` like
+//!   everyone else.
+//!
+//! Leases are an **efficiency** mechanism, not a correctness one: results
+//! are content-addressed and committed atomically, so even the worst case
+//! (a holder paused longer than the expiry, its lease stolen, both
+//! finishing) produces duplicate *work*, never wrong bits. Pick the expiry
+//! well above the longest round plus clock skew; see the README's
+//! "Distributed campaigns" section.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant, SystemTime};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Schema tag of one lease doc.
+pub const LEASE_SCHEMA: &str = "flsim-lease-v1";
+
+/// Subdirectory of the result store holding lease files.
+pub const LEASE_DIR: &str = "leases";
+
+/// Heartbeat / expiry knobs (CLI: `--heartbeat-secs`, `--expiry-secs`).
+#[derive(Clone, Copy, Debug)]
+pub struct LeaseConfig {
+    /// How often a holder rewrites its lease while executing.
+    pub heartbeat: Duration,
+    /// A lease whose heartbeat has been silent this long is stale and may
+    /// be reclaimed. Must comfortably exceed the heartbeat plus any clock
+    /// skew between hosts sharing the store.
+    pub expiry: Duration,
+}
+
+impl Default for LeaseConfig {
+    fn default() -> LeaseConfig {
+        LeaseConfig {
+            heartbeat: Duration::from_secs(2),
+            expiry: Duration::from_secs(20),
+        }
+    }
+}
+
+/// What's known about a lease file on disk (for `campaign list` and gc).
+#[derive(Clone, Debug)]
+pub struct LeaseInfo {
+    pub key: String,
+    pub owner: String,
+    pub beat: u64,
+    /// Time since the last heartbeat (file mtime).
+    pub age: Duration,
+}
+
+/// Outcome of [`LeaseManager::try_acquire`].
+pub enum Acquire {
+    /// This process now holds the cell. Dropping the [`Lease`] releases it.
+    Acquired(Lease),
+    /// A live holder exists; try again later (or work on another cell).
+    Held { owner: String },
+}
+
+/// A held lease. [`Lease::beat`] refreshes it; dropping it releases the
+/// cell (owner-checked, so a stolen lease is never deleted out from under
+/// its new holder).
+pub struct Lease {
+    path: PathBuf,
+    key: String,
+    owner: String,
+    pid: u32,
+    beat: u64,
+}
+
+impl Lease {
+    fn doc(&self) -> String {
+        let d = Json::obj(vec![
+            ("schema", Json::from(LEASE_SCHEMA)),
+            ("key", Json::from(self.key.as_str())),
+            ("owner", Json::from(self.owner.as_str())),
+            ("beat", Json::from(self.beat as f64)),
+            ("pid", Json::from(self.pid as usize)),
+        ]);
+        format!("{d}\n")
+    }
+
+    /// Refresh the lease: atomically rewrite the doc with `beat + 1`.
+    /// Errors if the lease was stolen (we expired and someone reclaimed) —
+    /// the caller should stop heartbeating; its eventual commit is still
+    /// safe (atomic, content-addressed), just possibly duplicated work.
+    pub fn beat(&mut self) -> Result<()> {
+        match read_doc(&self.path) {
+            Some(info) if info.owner == self.owner => {}
+            _ => anyhow::bail!(
+                "lease on {} lost (expired and reclaimed?)",
+                &self.key[..12.min(self.key.len())]
+            ),
+        }
+        self.beat += 1;
+        let tmp = self
+            .path
+            .with_file_name(format!(".{}.{}.beat.tmp", self.key, self.pid));
+        std::fs::write(&tmp, self.doc()).with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("heartbeating {:?}", self.path))?;
+        Ok(())
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        // Owner-checked release: if the lease expired and was reclaimed,
+        // the file now belongs to someone else — leave it alone.
+        if let Some(info) = read_doc(&self.path) {
+            if info.owner == self.owner {
+                let _ = std::fs::remove_file(&self.path);
+            }
+        }
+    }
+}
+
+/// One worker's view of a store's lease directory.
+pub struct LeaseManager {
+    dir: PathBuf,
+    owner: String,
+    cfg: LeaseConfig,
+    /// key → (last beat seen, when that beat was first seen) — the local
+    /// monotonic observation window behind the skew-proof staleness test.
+    observed: Mutex<BTreeMap<String, (u64, Instant)>>,
+}
+
+impl LeaseManager {
+    pub fn open(store_dir: &Path, owner: &str, cfg: LeaseConfig) -> Result<LeaseManager> {
+        let dir = store_dir.join(LEASE_DIR);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating lease dir {dir:?}"))?;
+        Ok(LeaseManager {
+            dir,
+            owner: owner.to_string(),
+            cfg,
+            observed: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn owner(&self) -> &str {
+        &self.owner
+    }
+
+    fn path_of(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.lease"))
+    }
+
+    /// Try to lease `key`. Never blocks: returns [`Acquire::Held`] when a
+    /// live holder exists, reclaiming stale leases along the way.
+    pub fn try_acquire(&self, key: &str) -> Result<Acquire> {
+        let path = self.path_of(key);
+        // Bounded retries: each loop either creates the lease, observes a
+        // live holder, or reclaims a stale one and races again.
+        for _ in 0..8 {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(mut f) => {
+                    let lease = Lease {
+                        path: path.clone(),
+                        key: key.to_string(),
+                        owner: self.owner.clone(),
+                        pid: std::process::id(),
+                        beat: 0,
+                    };
+                    f.write_all(lease.doc().as_bytes())
+                        .with_context(|| format!("writing lease {path:?}"))?;
+                    self.observed.lock().unwrap().remove(key);
+                    return Ok(Acquire::Acquired(lease));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    if self.is_stale(key, &path) {
+                        self.reclaim(key, &path)?;
+                        continue;
+                    }
+                    let owner = read_doc(&path)
+                        .map(|i| i.owner)
+                        .unwrap_or_else(|| "unknown".to_string());
+                    return Ok(Acquire::Held { owner });
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("creating lease {path:?}"));
+                }
+            }
+        }
+        Ok(Acquire::Held {
+            owner: "contended".to_string(),
+        })
+    }
+
+    /// Stale = heartbeat silent past the expiry, judged two ways (either
+    /// suffices): the file mtime is old (prompt recovery, same-host
+    /// clocks), or this process has watched an unchanged beat for the
+    /// expiry on its own monotonic clock (immune to cross-host skew).
+    fn is_stale(&self, key: &str, path: &Path) -> bool {
+        let mtime_age = std::fs::metadata(path)
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|m| SystemTime::now().duration_since(m).ok());
+        if let Some(age) = mtime_age {
+            if age > self.cfg.expiry {
+                return true;
+            }
+        }
+        // An unreadable/torn doc still heartbeats via mtime; watch it under
+        // a sentinel beat so a permanently torn file eventually expires.
+        let beat = read_doc(path).map(|i| i.beat).unwrap_or(u64::MAX);
+        let mut observed = self.observed.lock().unwrap();
+        let now = Instant::now();
+        match observed.get(key) {
+            Some(&(seen_beat, since)) if seen_beat == beat => {
+                now.duration_since(since) > self.cfg.expiry
+            }
+            _ => {
+                observed.insert(key.to_string(), (beat, now));
+                false
+            }
+        }
+    }
+
+    /// Rename the stale lease away (exactly one contender's rename wins)
+    /// and delete the moved file. A `NotFound` means another contender —
+    /// or a release — got there first; both are success.
+    fn reclaim(&self, key: &str, path: &Path) -> Result<()> {
+        let grave = self.dir.join(format!(
+            ".{key}.{}.reclaimed.tmp",
+            std::process::id()
+        ));
+        match std::fs::rename(path, &grave) {
+            Ok(()) => {
+                let _ = std::fs::remove_file(&grave);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                return Err(e).with_context(|| format!("reclaiming lease {path:?}"));
+            }
+        }
+        self.observed.lock().unwrap().remove(key);
+        Ok(())
+    }
+}
+
+fn read_doc(path: &Path) -> Option<LeaseInfo> {
+    let src = std::fs::read_to_string(path).ok()?;
+    let doc = Json::parse(&src).ok()?;
+    if doc.get("schema").and_then(Json::as_str) != Some(LEASE_SCHEMA) {
+        return None;
+    }
+    let age = std::fs::metadata(path)
+        .and_then(|m| m.modified())
+        .ok()
+        .and_then(|m| SystemTime::now().duration_since(m).ok())
+        .unwrap_or(Duration::ZERO);
+    Some(LeaseInfo {
+        key: doc.get("key")?.as_str()?.to_string(),
+        owner: doc.get("owner")?.as_str()?.to_string(),
+        beat: doc.get("beat")?.as_f64()? as u64,
+        age,
+    })
+}
+
+/// The lease (live or stale) on `key`, if any.
+pub fn info(store_dir: &Path, key: &str) -> Option<LeaseInfo> {
+    read_doc(&store_dir.join(LEASE_DIR).join(format!("{key}.lease")))
+}
+
+/// All leases whose heartbeat is younger than `expiry`, keyed by cell key
+/// — the set gc must protect (judged by mtime alone: gc is conservative,
+/// an about-to-expire lease is still protected this pass and collectable
+/// the next).
+pub fn live(store_dir: &Path, expiry: Duration) -> BTreeMap<String, LeaseInfo> {
+    let mut out = BTreeMap::new();
+    let dir = store_dir.join(LEASE_DIR);
+    let Ok(files) = std::fs::read_dir(&dir) else { return out };
+    for f in files.flatten() {
+        let path = f.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        let Some(key) = name.strip_suffix(".lease") else { continue };
+        if key.len() != 64 || !key.chars().all(|c| c.is_ascii_hexdigit()) {
+            continue;
+        }
+        if let Some(info) = read_doc(&path) {
+            if info.age <= expiry {
+                out.insert(key.to_string(), info);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "flsim_lease_test_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn key(n: u8) -> String {
+        format!("{n:02x}").repeat(32)
+    }
+
+    #[test]
+    fn acquire_is_exclusive_and_release_frees() {
+        let dir = tmp_dir("exclusive");
+        let cfg = LeaseConfig::default();
+        let a = LeaseManager::open(&dir, "a", cfg).unwrap();
+        let b = LeaseManager::open(&dir, "b", cfg).unwrap();
+
+        let lease = match a.try_acquire(&key(1)).unwrap() {
+            Acquire::Acquired(l) => l,
+            Acquire::Held { .. } => panic!("fresh key must acquire"),
+        };
+        match b.try_acquire(&key(1)).unwrap() {
+            Acquire::Held { owner } => assert_eq!(owner, "a"),
+            Acquire::Acquired(_) => panic!("held lease must not double-acquire"),
+        }
+        // A different key is independent.
+        assert!(matches!(b.try_acquire(&key(2)).unwrap(), Acquire::Acquired(_)));
+
+        drop(lease);
+        assert!(matches!(b.try_acquire(&key(1)).unwrap(), Acquire::Acquired(_)));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stale_leases_are_reclaimed_after_expiry() {
+        let dir = tmp_dir("reclaim");
+        let cfg = LeaseConfig {
+            heartbeat: Duration::from_millis(10),
+            expiry: Duration::from_millis(120),
+        };
+        let a = LeaseManager::open(&dir, "a", cfg).unwrap();
+        let b = LeaseManager::open(&dir, "b", cfg).unwrap();
+
+        // "a" acquires and then crashes (we just never beat or drop it).
+        let dead = match a.try_acquire(&key(3)).unwrap() {
+            Acquire::Acquired(l) => l,
+            _ => panic!(),
+        };
+        std::mem::forget(dead);
+
+        // Immediately: held. After the expiry with no heartbeat: stolen.
+        assert!(matches!(b.try_acquire(&key(3)).unwrap(), Acquire::Held { .. }));
+        std::thread::sleep(Duration::from_millis(200));
+        let stolen = match b.try_acquire(&key(3)).unwrap() {
+            Acquire::Acquired(l) => l,
+            Acquire::Held { .. } => panic!("expired lease must be reclaimable"),
+        };
+        assert_eq!(info(&dir, &key(3)).unwrap().owner, "b");
+        drop(stolen);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn heartbeat_keeps_a_lease_live() {
+        let dir = tmp_dir("beat");
+        let cfg = LeaseConfig {
+            heartbeat: Duration::from_millis(10),
+            expiry: Duration::from_millis(150),
+        };
+        let a = LeaseManager::open(&dir, "a", cfg).unwrap();
+        let b = LeaseManager::open(&dir, "b", cfg).unwrap();
+        let mut lease = match a.try_acquire(&key(4)).unwrap() {
+            Acquire::Acquired(l) => l,
+            _ => panic!(),
+        };
+        // Beat past the expiry window; the lease must stay held.
+        for _ in 0..6 {
+            std::thread::sleep(Duration::from_millis(50));
+            lease.beat().unwrap();
+            assert!(
+                matches!(b.try_acquire(&key(4)).unwrap(), Acquire::Held { .. }),
+                "a heartbeating lease must not be stolen"
+            );
+        }
+        assert!(info(&dir, &key(4)).unwrap().beat >= 6);
+        drop(lease);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn live_listing_filters_by_age() {
+        let dir = tmp_dir("live");
+        let a = LeaseManager::open(&dir, "a", LeaseConfig::default()).unwrap();
+        let lease = match a.try_acquire(&key(5)).unwrap() {
+            Acquire::Acquired(l) => l,
+            _ => panic!(),
+        };
+        let fresh = live(&dir, Duration::from_secs(60));
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh.get(&key(5)).unwrap().owner, "a");
+        // With a zero expiry every lease reads as already-dead.
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(live(&dir, Duration::ZERO).is_empty());
+        drop(lease);
+        assert!(live(&dir, Duration::from_secs(60)).is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -24,17 +24,29 @@
 //! * one failing cell never discards the others — completed cells persist
 //!   as they finish and the CLI exits non-zero with the failure list.
 
+//! Multi-process: N `flsim campaign worker` processes pointed at one
+//! shared store drain a campaign cooperatively with no coordinator —
+//! lease-based cell claiming ([`lease`]), checkpointed rung promotion
+//! ([`checkpoint`]), and store-replayed (elastic-deterministic) ASHA
+//! decisions ([`worker`]).
+
 pub mod asha;
 pub mod cache;
+pub mod checkpoint;
 pub mod grid;
+pub mod lease;
 pub mod report;
 pub mod runner;
 pub mod spec;
+pub mod worker;
 
-pub use cache::{cell_key, GcOptions, GcStats, ResultStore, ENGINE_VERSION};
+pub use cache::{cell_key, CellOutcome, GcOptions, GcStats, ResultStore, ENGINE_VERSION};
+pub use checkpoint::Checkpoint;
 pub use grid::{expand, Cell};
+pub use lease::{LeaseConfig, LeaseInfo};
 pub use report::{CampaignReport, FrontierReport};
-pub use runner::{run, run_with_options, CampaignOutcome, CellOutcome};
+pub use runner::{run, run_with_options, CampaignOutcome, CellRun};
 pub use spec::{
     CampaignBuilder, CampaignSpec, CellSpec, RungMetric, RungMode, SchedulerKind, SchedulerSpec,
 };
+pub use worker::{drain, WorkerOptions};

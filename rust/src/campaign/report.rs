@@ -459,7 +459,7 @@ impl FrontierReport {
 mod tests {
     use super::*;
     use crate::campaign::grid::Cell;
-    use crate::campaign::runner::CellOutcome;
+    use crate::campaign::runner::CellRun;
     use crate::config::job::JobConfig;
     use crate::metrics::report::RoundMetrics;
 
@@ -487,7 +487,7 @@ mod tests {
         CampaignOutcome {
             name: "demo".into(),
             cells: vec![
-                CellOutcome {
+                CellRun {
                     cell: Cell {
                         name: "a".into(),
                         job: job.clone(),
@@ -497,7 +497,7 @@ mod tests {
                     report: Some(report),
                     error: None,
                 },
-                CellOutcome {
+                CellRun {
                     cell: Cell {
                         name: "b".into(),
                         job,
@@ -554,7 +554,7 @@ mod tests {
                     ..Default::default()
                 }],
             };
-            CellOutcome {
+            CellRun {
                 cell: Cell {
                     name: format!("f{frac}_{robust}"),
                     job,
@@ -634,7 +634,7 @@ mod tests {
                     ..Default::default()
                 }],
             };
-            CellOutcome {
+            CellRun {
                 cell: Cell {
                     name: name.clone(),
                     job,

@@ -16,16 +16,18 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::campaign::cache::ResultStore;
+use crate::campaign::cache::{CellOutcome, ResultStore};
 use crate::campaign::grid::{self, Cell};
 use crate::campaign::spec::{CampaignSpec, SchedulerKind};
 use crate::metrics::report::RunReport;
-use crate::orchestrator::Orchestrator;
+use crate::orchestrator::{Orchestrator, RunControl, RunHandle, RunOptions, RunStatus};
 use crate::runtime::pjrt::Runtime;
 
-/// What happened to one cell.
+/// What happened to one cell. (Named `CellRun` since the write-side commit
+/// payload took the `CellOutcome` name — this is the *read* side: the cell,
+/// where its report came from, and how it ended.)
 #[derive(Clone, Debug)]
-pub struct CellOutcome {
+pub struct CellRun {
     pub cell: Cell,
     /// The report came from the result store (no execution happened).
     pub cached: bool,
@@ -39,21 +41,21 @@ pub struct CellOutcome {
 #[derive(Clone, Debug)]
 pub struct CampaignOutcome {
     pub name: String,
-    pub cells: Vec<CellOutcome>,
+    pub cells: Vec<CellRun>,
 }
 
 impl CampaignOutcome {
-    /// Cells that completed *and* persisted (a cell whose store-put failed
-    /// counts as failed: it will re-run on retry, so treating it as done
-    /// would break the byte-identical-resume contract).
-    pub fn completed(&self) -> Vec<&CellOutcome> {
+    /// Cells that completed *and* persisted (a cell whose store-commit
+    /// failed counts as failed: it will re-run on retry, so treating it as
+    /// done would break the byte-identical-resume contract).
+    pub fn completed(&self) -> Vec<&CellRun> {
         self.cells
             .iter()
             .filter(|c| c.report.is_some() && c.error.is_none())
             .collect()
     }
 
-    pub fn failed(&self) -> Vec<&CellOutcome> {
+    pub fn failed(&self) -> Vec<&CellRun> {
         self.cells.iter().filter(|c| c.error.is_some()).collect()
     }
 
@@ -71,7 +73,7 @@ impl CampaignOutcome {
     }
 
     /// Cells the scheduler stopped before their full round budget.
-    pub fn stopped_early(&self) -> Vec<&CellOutcome> {
+    pub fn stopped_early(&self) -> Vec<&CellRun> {
         self.cells
             .iter()
             .filter(|c| c.report.as_ref().map(|r| r.stopped_early).unwrap_or(false))
@@ -158,12 +160,12 @@ pub fn run_with_options(
 
     // Resolve cache hits up front (serial — cheap file probes), collecting
     // the misses for the scheduler.
-    let mut slots: Vec<Option<CellOutcome>> = vec![None; cells.len()];
+    let mut slots: Vec<Option<CellRun>> = vec![None; cells.len()];
     let mut misses: Vec<usize> = Vec::new();
     for (i, cell) in cells.iter().enumerate() {
         match if refresh { None } else { store.get(&cell.key) } {
             Some(report) => {
-                slots[i] = Some(CellOutcome {
+                slots[i] = Some(CellRun {
                     cell: cell.clone(),
                     cached: true,
                     report: Some(report),
@@ -199,11 +201,14 @@ pub fn run_with_options(
                         &cell.key[..12]
                     );
                     let t0 = std::time::Instant::now();
-                    let outcome = match Orchestrator::new(rt.clone()).run(&cell.job) {
-                        Ok(report) => match store
-                            .put(&cell.key, &cell.name, &spec.name, &cell.job, &report)
-                        {
-                            Ok(()) => {
+                    let outcome = match run_cell_resumable(&rt, cell, store, &spec.name) {
+                        Ok(report) => match store.commit(
+                            &cell.key,
+                            CellOutcome::new(&cell.job, &report)
+                                .cell(&cell.name)
+                                .campaign(&spec.name),
+                        ) {
+                            Ok(_) => {
                                 println!(
                                     "campaign[{}]: done {} in {:.1}s (acc {:.3})",
                                     spec.name,
@@ -211,14 +216,14 @@ pub fn run_with_options(
                                     t0.elapsed().as_secs_f64(),
                                     report.final_accuracy()
                                 );
-                                CellOutcome {
+                                CellRun {
                                     cell: cell.clone(),
                                     cached: false,
                                     report: Some(report),
                                     error: None,
                                 }
                             }
-                            Err(e) => CellOutcome {
+                            Err(e) => CellRun {
                                 cell: cell.clone(),
                                 cached: false,
                                 report: Some(report),
@@ -227,7 +232,7 @@ pub fn run_with_options(
                         },
                         Err(e) => {
                             println!("campaign[{}]: FAIL {} — {e:#}", spec.name, cell.name);
-                            CellOutcome {
+                            CellRun {
                                 cell: cell.clone(),
                                 cached: false,
                                 report: None,
@@ -251,4 +256,77 @@ pub fn run_with_options(
             .map(|s| s.expect("every cell resolves to an outcome"))
             .collect(),
     })
+}
+
+/// Execute one cell to its full round budget, resuming from a stored
+/// rung-stopped prefix + checkpoint blob when the job is checkpointable
+/// (see [`RunHandle::checkpointable`]) instead of replaying from round 1.
+/// Any defect in the stored state — missing blob, depth mismatch, resume
+/// error — falls back to a scratch run: slower, never wrong. Shared by the
+/// grid runner and the worker drain.
+pub(crate) fn run_cell_resumable(
+    rt: &Arc<Runtime>,
+    cell: &Cell,
+    store: &ResultStore,
+    campaign: &str,
+) -> Result<RunReport> {
+    match resume_handle(rt, cell, store, cell.job.rounds, campaign) {
+        Ok(Some(mut handle)) => {
+            let status = handle.advance(&RunControl::unbounded())?;
+            debug_assert_eq!(status, RunStatus::Completed);
+            return handle.finish();
+        }
+        Ok(None) => {}
+        Err(e) => {
+            // A broken checkpoint never fails the cell — scratch re-run.
+            println!(
+                "campaign[{campaign}]: checkpoint for {} unusable ({e:#}), running from scratch",
+                cell.name
+            );
+        }
+    }
+    Orchestrator::new(rt.clone()).run(&cell.job, RunOptions::default())
+}
+
+/// Try to reconstruct a paused run of `cell` from the store (partial entry
+/// + matching checkpoint, strictly shallower than `target`). `Ok(None)`
+/// means "no usable checkpoint — run from scratch"; only resuming itself
+/// can error, and callers may treat even that as a scratch fallback.
+pub(crate) fn resume_handle(
+    rt: &Arc<Runtime>,
+    cell: &Cell,
+    store: &ResultStore,
+    target: u64,
+    campaign: &str,
+) -> Result<Option<crate::orchestrator::RunHandle>> {
+    if !RunHandle::checkpointable(&cell.job) {
+        return Ok(None);
+    }
+    let Some(prefix) = store.get_at_least(&cell.key, 1) else {
+        return Ok(None);
+    };
+    if !prefix.stopped_early || prefix.rounds_completed() >= target {
+        return Ok(None);
+    }
+    let Some(ckpt) = store.get_checkpoint(&cell.key) else {
+        return Ok(None);
+    };
+    if ckpt.rounds != prefix.rounds_completed() {
+        // Blob and entry disagree (e.g. a torn pair of generations):
+        // scratch is the safe path.
+        return Ok(None);
+    }
+    let handle = RunHandle::resume(
+        rt.clone(),
+        &cell.job,
+        crate::controller::sync::FaultPlan::none(),
+        &prefix,
+        &ckpt.params,
+    )?;
+    println!(
+        "campaign[{campaign}]: resume {} from round {} (checkpointed rung)",
+        cell.name,
+        ckpt.rounds + 1
+    );
+    Ok(Some(handle))
 }

@@ -1,0 +1,495 @@
+//! Coordinator-free campaign workers: `flsim campaign worker <store>
+//! <spec>` runs one of these. N worker processes pointed at the same spec
+//! and the same (shared-filesystem) result store cooperatively drain the
+//! campaign: each worker leases a cell ([`crate::campaign::lease`]),
+//! executes it through the cancellable round loop while a heartbeat thread
+//! keeps the lease fresh, and commits the result atomically. A worker that
+//! dies mid-cell simply stops heartbeating; after the expiry any survivor
+//! reclaims the lease and re-runs the cell (losing only that cell's
+//! in-flight rounds — committed work is never lost, and determinism makes
+//! the re-run bitwise identical).
+//!
+//! **Elastic-deterministic ASHA.** Under the ASHA scheduler the workers
+//! must agree on rung promotions without a coordinator. The drain makes
+//! promotion a pure function of `(spec, seed)` — invariant to worker
+//! count, arrival order, and mid-rung crashes (test-enforced by
+//! `rust/tests/campaign_worker.rs`) — by splitting each rung in two:
+//!
+//! 1. **Fill.** Every still-alive cell must reach the rung budget *in the
+//!    store*: each worker leases unfilled cells and deepens them (resuming
+//!    from the cell's checkpoint blob when one exists, scratch otherwise),
+//!    committing the partial report + checkpoint at the rung. Workers that
+//!    find every cell leased **block** at the rung barrier, polling — and
+//!    steal expired leases, so a crashed worker's cell is picked up by a
+//!    survivor. A failed cell leaves a failure marker
+//!    ([`ResultStore::record_failure`]) so every worker's barrier unblocks
+//!    on it rather than waiting forever.
+//! 2. **Promote.** Promotion decisions are **replayed from the store**,
+//!    never improvised: every worker reads the same stored reports, ranks
+//!    them with the exact sort `run_asha` uses (NaN-last, ties by
+//!    expansion order), and derives the same survivor set. Stopped cells'
+//!    outcomes are the stored reports truncated at the rung.
+//!
+//! Leases are an efficiency mechanism, not a correctness one (results are
+//! content-addressed and committed atomically), so the worst case — a
+//! paused worker losing its lease and both finishing — duplicates work,
+//! never corrupts results.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::campaign::cache::{CellOutcome, ResultStore};
+use crate::campaign::checkpoint::Checkpoint;
+use crate::campaign::grid::{self, Cell};
+use crate::campaign::lease::{Acquire, Lease, LeaseConfig, LeaseManager};
+use crate::campaign::runner::{self, CampaignOutcome, CellRun};
+use crate::campaign::spec::{CampaignSpec, SchedulerKind};
+use crate::controller::sync::FaultPlan;
+use crate::metrics::report::RunReport;
+use crate::orchestrator::{RunControl, RunHandle};
+use crate::runtime::pjrt::Runtime;
+
+/// Worker identity and pacing (CLI: `--owner`, `--heartbeat-secs`,
+/// `--expiry-secs`, `--poll-secs`).
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    /// Lease owner id; must be unique among concurrent workers (the CLI
+    /// defaults to `worker-<pid>`).
+    pub owner: String,
+    pub lease: LeaseConfig,
+    /// How long to sleep when every remaining cell is leased elsewhere.
+    pub poll: Duration,
+}
+
+impl WorkerOptions {
+    pub fn new(owner: &str) -> WorkerOptions {
+        WorkerOptions {
+            owner: owner.to_string(),
+            lease: LeaseConfig::default(),
+            poll: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Cooperatively drain a campaign: lease-execute-commit cells until every
+/// cell is resolved (committed by someone, or marked failed). Blocks while
+/// other workers hold the remaining cells, reclaiming expired leases.
+/// The outcome mirrors [`runner::run`]'s: one [`CellRun`] per expanded
+/// cell in expansion order, `cached` meaning "this process executed
+/// nothing for it" (served by the store or by another worker).
+pub fn drain(
+    rt: Arc<Runtime>,
+    spec: &CampaignSpec,
+    store: &ResultStore,
+    opts: &WorkerOptions,
+) -> Result<CampaignOutcome> {
+    match spec.scheduler.kind {
+        SchedulerKind::Grid => drain_grid(rt, spec, store, opts),
+        SchedulerKind::Asha => drain_asha(rt, spec, store, opts),
+    }
+}
+
+/// A held lease kept fresh by a background heartbeat thread while the
+/// holder executes rounds. [`Heartbeat::release`] stops the thread and
+/// drops the lease (releasing the cell). If the lease is stolen out from
+/// under us (we stalled past the expiry), beating fails and the thread
+/// just stops — the eventual commit is still safe, merely duplicated.
+struct Heartbeat {
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<Lease>,
+}
+
+impl Heartbeat {
+    fn spawn(mut lease: Lease, every: Duration) -> Heartbeat {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let thread = std::thread::spawn(move || {
+            while !flag.load(Ordering::Relaxed) {
+                std::thread::park_timeout(every);
+                if flag.load(Ordering::Relaxed) || lease.beat().is_err() {
+                    break;
+                }
+            }
+            lease
+        });
+        Heartbeat { stop, thread }
+    }
+
+    fn release(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.thread.thread().unpark();
+        // Joining hands the lease back and drops it here (owner-checked
+        // release). A panicked heartbeat thread already dropped it.
+        let _ = self.thread.join();
+    }
+}
+
+fn drain_grid(
+    rt: Arc<Runtime>,
+    spec: &CampaignSpec,
+    store: &ResultStore,
+    opts: &WorkerOptions,
+) -> Result<CampaignOutcome> {
+    let cells = grid::expand(spec)?;
+    let mgr = LeaseManager::open(store.dir(), &opts.owner, opts.lease)?;
+    let mut slots: Vec<Option<CellRun>> = vec![None; cells.len()];
+    loop {
+        let mut progressed = false;
+        for (i, cell) in cells.iter().enumerate() {
+            if slots[i].is_some() {
+                continue;
+            }
+            // Resolved by anyone (including an earlier pass of ours — our
+            // own executions fill the slot directly, so a hit here is a
+            // cache/other-worker result).
+            if let Some(report) = store.get(&cell.key) {
+                slots[i] = Some(resolved(cell, true, Some(report), None));
+                progressed = true;
+                continue;
+            }
+            if let Some(err) = store.failure(&cell.key) {
+                slots[i] = Some(resolved(cell, false, None, Some(err)));
+                progressed = true;
+                continue;
+            }
+            match mgr.try_acquire(&cell.key)? {
+                Acquire::Held { .. } => {} // someone else is on it
+                Acquire::Acquired(lease) => {
+                    // A commit may have landed between the probe and the
+                    // acquire — don't re-execute it.
+                    if let Some(report) = store.get(&cell.key) {
+                        drop(lease);
+                        slots[i] = Some(resolved(cell, true, Some(report), None));
+                        progressed = true;
+                        continue;
+                    }
+                    println!(
+                        "worker[{}]: run  {} ({})",
+                        opts.owner,
+                        cell.name,
+                        &cell.key[..12]
+                    );
+                    let hb = Heartbeat::spawn(lease, opts.lease.heartbeat);
+                    let t0 = std::time::Instant::now();
+                    let outcome = match runner::run_cell_resumable(&rt, cell, store, &spec.name)
+                        .and_then(|report| {
+                            store.commit(
+                                &cell.key,
+                                CellOutcome::new(&cell.job, &report)
+                                    .cell(&cell.name)
+                                    .campaign(&spec.name),
+                            )?;
+                            Ok(report)
+                        }) {
+                        Ok(report) => {
+                            println!(
+                                "worker[{}]: done {} in {:.1}s (acc {:.3})",
+                                opts.owner,
+                                cell.name,
+                                t0.elapsed().as_secs_f64(),
+                                report.final_accuracy()
+                            );
+                            resolved(cell, false, Some(report), None)
+                        }
+                        Err(e) => {
+                            let msg = format!("{e:#}");
+                            println!("worker[{}]: FAIL {} — {msg}", opts.owner, cell.name);
+                            let _ = store.record_failure(&cell.key, &cell.name, &spec.name, &msg);
+                            resolved(cell, false, None, Some(msg))
+                        }
+                    };
+                    hb.release();
+                    slots[i] = Some(outcome);
+                    progressed = true;
+                }
+            }
+        }
+        if slots.iter().all(|s| s.is_some()) {
+            break;
+        }
+        if !progressed {
+            std::thread::sleep(opts.poll);
+        }
+    }
+    Ok(CampaignOutcome {
+        name: spec.name.clone(),
+        cells: slots
+            .into_iter()
+            .map(|s| s.expect("loop exits only when every slot is filled"))
+            .collect(),
+    })
+}
+
+fn resolved(cell: &Cell, cached: bool, report: Option<RunReport>, error: Option<String>) -> CellRun {
+    CellRun {
+        cell: cell.clone(),
+        cached,
+        report,
+        error,
+    }
+}
+
+/// Per-cell drain state (worker-side mirror of the scheduler's view, but
+/// derived entirely from the store).
+struct Slot {
+    executed: bool,
+    report: Option<RunReport>,
+    error: Option<String>,
+}
+
+impl Slot {
+    fn alive(&self) -> bool {
+        self.report.is_none() && self.error.is_none()
+    }
+}
+
+fn drain_asha(
+    rt: Arc<Runtime>,
+    spec: &CampaignSpec,
+    store: &ResultStore,
+    opts: &WorkerOptions,
+) -> Result<CampaignOutcome> {
+    let cells = grid::expand(spec)?;
+    let sched = spec.scheduler;
+    let max_rounds = cells.iter().map(|c| c.job.rounds).max().unwrap_or(1);
+    let ladder = sched.ladder(max_rounds);
+    let mgr = LeaseManager::open(store.dir(), &opts.owner, opts.lease)?;
+    let mut slots: Vec<Slot> = cells
+        .iter()
+        .map(|_| Slot {
+            executed: false,
+            report: None,
+            error: None,
+        })
+        .collect();
+
+    for (rung, &budget) in ladder.iter().enumerate() {
+        // --------------------------------------------------------------
+        // 1. Fill: every alive cell must reach this rung's budget in the
+        //    store before anyone decides promotions. Block-or-steal at
+        //    the barrier.
+        // --------------------------------------------------------------
+        loop {
+            let mut all_filled = true;
+            let mut progressed = false;
+            for (i, cell) in cells.iter().enumerate() {
+                if !slots[i].alive() {
+                    continue;
+                }
+                let target = budget.min(cell.job.rounds);
+                if store.get_at_least(&cell.key, target).is_some() {
+                    continue; // filled (by us, another worker, or a cache)
+                }
+                if let Some(err) = store.failure(&cell.key) {
+                    // A cross-process failure unblocks the barrier for
+                    // everyone instead of hanging it.
+                    slots[i].error = Some(err);
+                    progressed = true;
+                    continue;
+                }
+                all_filled = false;
+                match mgr.try_acquire(&cell.key)? {
+                    Acquire::Held { .. } => {}
+                    Acquire::Acquired(lease) => {
+                        if store.get_at_least(&cell.key, target).is_some() {
+                            drop(lease); // raced: committed since the probe
+                            progressed = true;
+                            continue;
+                        }
+                        let hb = Heartbeat::spawn(lease, opts.lease.heartbeat);
+                        let r = deepen_to(&rt, cell, store, spec, opts, target, rung);
+                        hb.release();
+                        match r {
+                            Ok(()) => slots[i].executed = true,
+                            Err(e) => {
+                                let msg = format!("{e:#}");
+                                println!(
+                                    "worker[{}]: FAIL {} — {msg}",
+                                    opts.owner, cell.name
+                                );
+                                let _ = store
+                                    .record_failure(&cell.key, &cell.name, &spec.name, &msg);
+                                slots[i].error = Some(msg);
+                            }
+                        }
+                        progressed = true;
+                    }
+                }
+            }
+            if all_filled {
+                break;
+            }
+            if !progressed {
+                std::thread::sleep(opts.poll);
+            }
+        }
+
+        // --------------------------------------------------------------
+        // 2. Finalize cells whose full budget this rung reached.
+        // --------------------------------------------------------------
+        for (i, cell) in cells.iter().enumerate() {
+            if !slots[i].alive() || budget < cell.job.rounds {
+                continue;
+            }
+            match store.get(&cell.key) {
+                Some(report) => slots[i].report = Some(report),
+                None => {
+                    slots[i].error = Some(
+                        "internal: cell reached its full budget without a complete store entry"
+                            .into(),
+                    )
+                }
+            }
+        }
+
+        // --------------------------------------------------------------
+        // 3. Promote: replay the rung decision purely from the store —
+        //    same metric, same NaN-last ties-by-expansion-order sort as
+        //    `run_asha`, so every worker (and a single-process run)
+        //    derives the identical survivor set.
+        // --------------------------------------------------------------
+        let continuing: Vec<usize> = (0..cells.len())
+            .filter(|&i| slots[i].alive() && budget < cells[i].job.rounds)
+            .collect();
+        if continuing.is_empty() || rung + 1 >= ladder.len() {
+            continue;
+        }
+        let mut ranked: Vec<(usize, f64)> = Vec::with_capacity(continuing.len());
+        for &i in &continuing {
+            let stored = store.get_at_least(&cells[i].key, budget).ok_or_else(|| {
+                anyhow!(
+                    "campaign '{}': cell '{}' passed the rung barrier but its stored \
+                     entry is gone (store gc'd mid-drain?)",
+                    spec.name,
+                    cells[i].name
+                )
+            })?;
+            let v = stored
+                .metric_at(budget, |m| sched.metric_of(m))
+                .ok_or_else(|| {
+                    anyhow!(
+                        "campaign '{}': cell '{}' has no stored metric at rung budget {budget}",
+                        spec.name,
+                        cells[i].name
+                    )
+                })?;
+            ranked.push((i, sched.score(v)));
+        }
+        ranked.sort_by(|a, b| {
+            match (a.1.is_nan(), b.1.is_nan()) {
+                (true, true) => std::cmp::Ordering::Equal,
+                (true, false) => std::cmp::Ordering::Greater,
+                (false, true) => std::cmp::Ordering::Less,
+                (false, false) => b.1.partial_cmp(&a.1).expect("both finite-or-inf"),
+            }
+            .then(a.0.cmp(&b.0))
+        });
+        let keep = sched.survivors(ranked.len());
+        for &(i, score) in &ranked[keep..] {
+            let cell = &cells[i];
+            let stored = store
+                .get_at_least(&cell.key, budget)
+                .expect("ranked cells were just read from the store");
+            println!(
+                "worker[{}]: stop {} at rung {} ({} rounds, score {:.4})",
+                opts.owner,
+                cell.name,
+                rung + 1,
+                budget,
+                score
+            );
+            slots[i].report = Some(stored.truncated(budget));
+        }
+    }
+
+    Ok(CampaignOutcome {
+        name: spec.name.clone(),
+        cells: cells
+            .into_iter()
+            .zip(slots)
+            .map(|(cell, slot)| {
+                let cached = !slot.executed && slot.error.is_none() && slot.report.is_some();
+                CellRun {
+                    cell,
+                    cached,
+                    report: slot.report,
+                    error: slot.error,
+                }
+            })
+            .collect(),
+    })
+}
+
+/// Advance one leased cell to `target` stored rounds: resume from its
+/// checkpoint when sound (otherwise scratch), run to the budget, and
+/// commit — a complete entry at the full budget, or a partial + checkpoint
+/// at a rung.
+fn deepen_to(
+    rt: &Arc<Runtime>,
+    cell: &Cell,
+    store: &ResultStore,
+    spec: &CampaignSpec,
+    opts: &WorkerOptions,
+    target: u64,
+    rung: usize,
+) -> Result<()> {
+    let mut handle = match runner::resume_handle(rt, cell, store, target, &spec.name) {
+        Ok(Some(h)) => h,
+        Ok(None) => RunHandle::start(rt.clone(), &cell.job, FaultPlan::none())?,
+        Err(e) => {
+            println!(
+                "worker[{}]: checkpoint for {} unusable ({e:#}), running from scratch",
+                opts.owner, cell.name
+            );
+            RunHandle::start(rt.clone(), &cell.job, FaultPlan::none())?
+        }
+    };
+    println!(
+        "worker[{}]: rung {} — {} to round {} (from {})",
+        opts.owner,
+        rung + 1,
+        cell.name,
+        target,
+        handle.rounds_done() + 1
+    );
+    handle.advance(&RunControl::budget(target))?;
+    if handle.rounds_done() >= cell.job.rounds {
+        let report = handle.finish()?;
+        store.commit(
+            &cell.key,
+            CellOutcome::new(&cell.job, &report)
+                .cell(&cell.name)
+                .campaign(&spec.name),
+        )?;
+        println!(
+            "worker[{}]: done {} ({} rounds, acc {:.3})",
+            opts.owner,
+            cell.name,
+            report.rounds_completed(),
+            report.final_accuracy()
+        );
+        return Ok(());
+    }
+    let report = handle.partial_report();
+    if report.rounds_completed() < target {
+        bail!(
+            "cell '{}' stalled at round {} of rung target {target}",
+            cell.name,
+            report.rounds_completed()
+        );
+    }
+    let ckpt = handle
+        .checkpoint_params()
+        .map(|p| Checkpoint::new(&cell.key, report.rounds_completed(), p.to_vec()));
+    let mut outcome = CellOutcome::new(&cell.job, &report)
+        .cell(&cell.name)
+        .campaign(&spec.name);
+    if let Some(c) = &ckpt {
+        outcome = outcome.checkpoint(c);
+    }
+    store.commit(&cell.key, outcome)?;
+    Ok(())
+}

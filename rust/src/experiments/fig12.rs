@@ -11,7 +11,7 @@ use crate::config::job::JobConfig;
 use crate::experiments::{rounds_override, save_report};
 use crate::metrics::dashboard;
 use crate::metrics::report::RunReport;
-use crate::orchestrator::Orchestrator;
+use crate::orchestrator::{Orchestrator, RunOptions};
 use crate::runtime::pjrt::Runtime;
 
 pub const CLIENT_COUNTS: [usize; 4] = [100, 250, 500, 1000];
@@ -38,7 +38,7 @@ pub fn run(rt: Arc<Runtime>) -> Result<Vec<RunReport>> {
     let mut reports = Vec::new();
     for job in jobs() {
         let (report, _secs) =
-            crate::bench::time_once(&format!("fig12/{}", job.name), || orch.run(&job));
+            crate::bench::time_once(&format!("fig12/{}", job.name), || orch.run(&job, RunOptions::default()));
         let report = report?;
         println!("{}", dashboard::run_line(&report));
         save_report("fig12", &report)?;

@@ -14,7 +14,7 @@ use crate::config::job::JobConfig;
 use crate::experiments::{dataset_n_override, rounds_override, save_report};
 use crate::metrics::dashboard;
 use crate::metrics::report::RunReport;
-use crate::orchestrator::Orchestrator;
+use crate::orchestrator::{Orchestrator, RunOptions};
 use crate::runtime::pjrt::Runtime;
 
 pub const TRIALS: usize = 3;
@@ -36,7 +36,7 @@ pub fn run(rt: Arc<Runtime>) -> Result<Vec<RunReport>> {
         for profile in ReductionOrder::ALL {
             let job = job_for(profile);
             let label = format!("{} (trial {trial})", profile.profile_name());
-            let (report, _secs) = crate::bench::time_once(&label, || orch.run(&job));
+            let (report, _secs) = crate::bench::time_once(&label, || orch.run(&job, RunOptions::default()));
             let mut report = report?;
             report.label = label;
             save_report("tables12", &report)?;

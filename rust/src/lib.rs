@@ -35,9 +35,17 @@ pub mod strategy;
 pub mod topology;
 pub mod util;
 
-/// Convenient re-exports for examples and binaries.
+/// Convenient re-exports for examples and binaries — the stable public
+/// driving surface (see README "API stability"): construct a [`JobConfig`]
+/// (or a [`CampaignSpec`]), drive it with
+/// `Orchestrator::run(&job, RunOptions::default())` or a campaign runner,
+/// and read [`RunReport`]s back — everything else in the crate is
+/// internal-but-public plumbing that may reshape between minor versions.
 pub mod prelude {
-    pub use crate::campaign::{CampaignReport, CampaignSpec, ResultStore, SchedulerSpec};
+    pub use crate::campaign::{
+        CampaignReport, CampaignSpec, CellOutcome, LeaseConfig, ResultStore, SchedulerSpec,
+        WorkerOptions,
+    };
     pub use crate::config::adversary::{AdversaryConfig, FaultsConfig, RobustAggConfig};
     pub use crate::config::job::JobConfig;
     pub use crate::controller::cancel::CancelToken;
@@ -45,7 +53,7 @@ pub mod prelude {
     pub use crate::data::dataset::DatasetSpec;
     pub use crate::kvstore::netsim::{LinkModel, LinkPolicy};
     pub use crate::metrics::report::RunReport;
-    pub use crate::orchestrator::Orchestrator;
+    pub use crate::orchestrator::{Orchestrator, RunControl, RunHandle, RunOptions};
     pub use crate::runtime::pjrt::Runtime;
     pub use crate::strategy::StrategyKind;
     pub use crate::topology::TopologyKind;

@@ -3,6 +3,7 @@
 //! ```text
 //! flsim run --config configs/fedavg_cifar.yaml [--artifacts DIR]
 //! flsim campaign run|list|report --spec configs/sweep.yaml [--store DIR] [--jobs N]
+//! flsim campaign worker <store> <spec> [--owner ID] [--heartbeat-secs S] [--expiry-secs S]
 //! flsim experiment fig8|fig9|fig10|fig11|tables|fig12|all
 //! flsim preset fedavg|scaffold|... [--rounds N] [--clients N]
 //! flsim list
@@ -13,11 +14,11 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use flsim::campaign::{CampaignReport, CampaignSpec, FrontierReport, ResultStore};
+use flsim::campaign::{lease, CampaignReport, CampaignSpec, FrontierReport, ResultStore};
 use flsim::config::job::JobConfig;
 use flsim::experiments;
 use flsim::metrics::dashboard;
-use flsim::orchestrator::Orchestrator;
+use flsim::orchestrator::{Orchestrator, RunOptions};
 use flsim::runtime::pjrt::Runtime;
 use flsim::strategy::StrategyKind;
 use flsim::util::logging;
@@ -71,7 +72,7 @@ fn run() -> Result<()> {
             let mut job = JobConfig::from_yaml_file(config)?;
             apply_overrides(&mut job, &args)?;
             let rt = Runtime::shared(&artifacts)?;
-            let report = Orchestrator::new(rt).run(&job)?;
+            let report = Orchestrator::new(rt).run(&job, RunOptions::default())?;
             println!("{}", dashboard::run_line(&report));
             println!(
                 "{}",
@@ -92,7 +93,7 @@ fn run() -> Result<()> {
             let mut job = JobConfig::default_cnn(name);
             apply_overrides(&mut job, &args)?;
             let rt = Runtime::shared(&artifacts)?;
-            let report = Orchestrator::new(rt).run(&job)?;
+            let report = Orchestrator::new(rt).run(&job, RunOptions::default())?;
             println!("{}", dashboard::run_line(&report));
             experiments::save_report("runs", &report)?;
             Ok(())
@@ -158,6 +159,8 @@ fn run() -> Result<()> {
                  \x20                     [--scheduler grid|asha] [--eta N] [--min-rounds N]\n\
                  flsim campaign list   --spec <sweep.yaml> [--store DIR]\n\
                  flsim campaign report --spec <sweep.yaml> [--store DIR] [--out DIR]\n\
+                 flsim campaign worker <store> <spec.yaml> [--owner ID] [--heartbeat-secs S]\n\
+                 \x20                     [--expiry-secs S] [--poll-secs S] [--jobs N]\n\
                  flsim campaign gc     [--spec <sweep.yaml>] [--store DIR]\n\
                  \x20                     [--max-age-days N | --max-age-secs N] [--keep-last N]\n\
                  flsim preset <strategy> [--rounds N] [--clients N] [--seed N] [--parallelism N]\n\
@@ -193,8 +196,11 @@ fn campaign_cmd(sub: &str, args: &Args, artifacts: &str) -> Result<()> {
         let store = ResultStore::open(&store_dir)?;
         return campaign_gc(args, &store);
     }
+    if sub == "worker" {
+        return campaign_worker(args, artifacts);
+    }
     if !matches!(sub, "run" | "list" | "report") {
-        bail!("unknown campaign subcommand '{sub}' (run|list|report|gc)");
+        bail!("unknown campaign subcommand '{sub}' (run|list|report|worker|gc)");
     }
     let spec_path = args
         .flags
@@ -271,10 +277,11 @@ fn campaign_cmd(sub: &str, args: &Args, artifacts: &str) -> Result<()> {
             let mut cached = 0usize;
             let mut shared: std::collections::BTreeMap<String, usize> =
                 std::collections::BTreeMap::new();
+            let lease_expiry = flsim::campaign::LeaseConfig::default().expiry;
             for (i, c) in cells.iter().enumerate() {
                 // Complete entry = cached; rung-stopped prefix = partial
                 // (a full run would re-execute, but an asha rung can hit).
-                let status = if store.contains(&c.key) {
+                let mut status = if store.contains(&c.key) {
                     cached += 1;
                     match store.origin(&c.key) {
                         Some(origin) if origin != spec.name => {
@@ -288,6 +295,16 @@ fn campaign_cmd(sub: &str, args: &Args, artifacts: &str) -> Result<()> {
                 } else {
                     "pending".to_string()
                 };
+                // A live lease means a worker is on the cell right now.
+                if let Some(l) = lease::info(store.dir(), &c.key) {
+                    if l.age <= lease_expiry {
+                        status = format!(
+                            "{status}, leased ('{}', {:.0}s)",
+                            l.owner,
+                            l.age.as_secs_f64()
+                        );
+                    }
+                }
                 println!(
                     "  {:>3}  {:<28} {}  {:<10} {:<15} seed {:<6} {}",
                     i + 1,
@@ -359,7 +376,7 @@ fn campaign_cmd(sub: &str, args: &Args, artifacts: &str) -> Result<()> {
                 name: spec.name.clone(),
                 cells: rows_src
                     .into_iter()
-                    .map(|(cell, r)| flsim::campaign::CellOutcome {
+                    .map(|(cell, r)| flsim::campaign::CellRun {
                         cell,
                         cached: true,
                         report: Some(r),
@@ -460,17 +477,109 @@ fn campaign_gc(args: &Args, store: &ResultStore) -> Result<()> {
         // Default: `.tmp` residue younger than an hour is spared (it may
         // be a live writer mid-commit on a shared store).
         tmp_max_age: None,
+        // Live-leased cells (workers mid-cell) are always protected; pass
+        // the workers' --expiry-secs if it differs from the default.
+        lease_expiry: flag_secs(args, "expiry-secs")?,
     };
     let stats = store.gc(&opts, &protect)?;
     println!(
-        "campaign gc: {} entries scanned — {} evicted, {} kept, {} tmp files swept ({})",
+        "campaign gc: {} entries scanned — {} evicted, {} kept, {} tmp files swept, \
+         {} checkpoints removed, {} expired leases swept ({})",
         stats.scanned,
         stats.evicted,
         stats.kept,
         stats.tmp_removed,
+        stats.ckpt_removed,
+        stats.leases_swept,
         store.dir().display()
     );
     Ok(())
+}
+
+/// `flsim campaign worker <store> <spec>` — one cooperative drain process.
+/// Start N of these on a shared filesystem (distinct `--owner` ids; the
+/// pid default suffices on one host) and they divide the campaign's cells
+/// via store leases, with no coordinator. Exits once every cell is
+/// resolved; non-zero if any cell failed (its marker unblocks the other
+/// workers). Writes no campaign report — run `flsim campaign run` against
+/// the drained store (all cache hits, zero executions) to generate it.
+fn campaign_worker(args: &Args, artifacts: &str) -> Result<()> {
+    let store_dir = args
+        .positional
+        .get(2)
+        .cloned()
+        .or_else(|| args.flags.get("store").cloned())
+        .ok_or_else(|| anyhow!("campaign worker: missing <store> (or --store DIR)"))?;
+    let spec_path = args
+        .positional
+        .get(3)
+        .cloned()
+        .or_else(|| args.flags.get("spec").cloned())
+        .ok_or_else(|| anyhow!("campaign worker: missing <spec.yaml> (or --spec FILE)"))?;
+    let mut spec = CampaignSpec::from_yaml_file(&spec_path)?;
+    if let Some(j) = args.flags.get("jobs") {
+        spec.jobs = j.parse().map_err(|_| anyhow!("bad --jobs"))?;
+    }
+    apply_scheduler_overrides(&mut spec, args)?;
+
+    let owner = args
+        .flags
+        .get("owner")
+        .cloned()
+        .unwrap_or_else(|| format!("worker-{}", std::process::id()));
+    let mut opts = flsim::campaign::WorkerOptions::new(&owner);
+    if let Some(d) = flag_secs(args, "heartbeat-secs")? {
+        opts.lease.heartbeat = d;
+    }
+    if let Some(d) = flag_secs(args, "expiry-secs")? {
+        opts.lease.expiry = d;
+    }
+    if let Some(d) = flag_secs(args, "poll-secs")? {
+        opts.poll = d;
+    }
+    if opts.lease.expiry <= opts.lease.heartbeat {
+        bail!(
+            "--expiry-secs ({:.1}) must exceed --heartbeat-secs ({:.1}) — a healthy \
+             worker would look dead",
+            opts.lease.expiry.as_secs_f64(),
+            opts.lease.heartbeat.as_secs_f64()
+        );
+    }
+
+    let store = ResultStore::open(&store_dir)?;
+    let rt = Runtime::shared(artifacts)?;
+    println!(
+        "worker[{owner}]: draining campaign '{}' against {}",
+        spec.name,
+        store.dir().display()
+    );
+    let outcome = flsim::campaign::drain(rt, &spec, &store, &opts)?;
+    println!("{}", outcome.summary());
+    let failures = outcome.failure_lines();
+    if !failures.is_empty() {
+        bail!(
+            "campaign '{}': {} of {} cells failed:\n  {}",
+            outcome.name,
+            failures.len(),
+            outcome.cells.len(),
+            failures.join("\n  ")
+        );
+    }
+    Ok(())
+}
+
+/// Parse a `--<name> <seconds>` flag (fractional allowed, must be positive).
+fn flag_secs(args: &Args, name: &str) -> Result<Option<std::time::Duration>> {
+    match args.flags.get(name) {
+        None => Ok(None),
+        Some(v) => {
+            let secs: f64 = v.parse().map_err(|_| anyhow!("bad --{name}"))?;
+            if !(secs > 0.0 && secs.is_finite()) {
+                bail!("--{name} must be a positive number of seconds, got {v}");
+            }
+            Ok(Some(std::time::Duration::from_secs_f64(secs)))
+        }
+    }
 }
 
 fn apply_overrides(job: &mut JobConfig, args: &Args) -> Result<()> {

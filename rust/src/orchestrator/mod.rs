@@ -18,12 +18,12 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::config::job::JobConfig;
+use crate::config::job::{JobConfig, PopulationMode};
 use crate::controller::cancel::CancelToken;
 use crate::controller::sync::FaultPlan;
 use crate::metrics::report::{RoundMetrics, RunReport};
 use crate::runtime::pjrt::Runtime;
-use crate::strategy::StrategyMode;
+use crate::strategy::{StrategyKind, StrategyMode};
 use crate::topology::TopologyKind;
 
 pub use flows::{
@@ -88,6 +88,37 @@ impl RunControl {
     }
 }
 
+/// Everything that shapes *how* a job is driven, as opposed to *what* runs
+/// (the [`JobConfig`]): the cancellation/budget/metric-sink control and the
+/// injected fault plan. `RunOptions::default()` is the plain
+/// run-to-completion path, so the common call reads
+/// `orc.run(&job, RunOptions::default())`; chain the builders for more:
+///
+/// ```ignore
+/// orc.run(&job, RunOptions::default()
+///     .faults(FaultPlan::none().crash_from("client_3", 5))
+///     .control(RunControl::budget(10)))?;
+/// ```
+#[derive(Default)]
+pub struct RunOptions {
+    pub control: RunControl,
+    pub faults: FaultPlan,
+}
+
+impl RunOptions {
+    /// Drive under this [`RunControl`] (cancel token / round budget / sink).
+    pub fn control(mut self, control: RunControl) -> RunOptions {
+        self.control = control;
+        self
+    }
+
+    /// Inject this [`FaultPlan`] (stragglers / crashes / churn).
+    pub fn faults(mut self, faults: FaultPlan) -> RunOptions {
+        self.faults = faults;
+        self
+    }
+}
+
 /// Why [`RunHandle::advance`] returned.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RunStatus {
@@ -122,6 +153,80 @@ impl RunHandle {
             mode,
             next_round: 1,
         })
+    }
+
+    /// Whether a paused run of this job can be reconstructed from `(partial
+    /// report, global model params)` alone — i.e. whether checkpoints are
+    /// sound for it. True exactly when the global parameter vector is the
+    /// *only* cross-round mutable state: central aggregation on the
+    /// client-server flow with the eager (materialized) population and no
+    /// blockchain. Everything else each round — client sampling, per-node
+    /// RNG streams, fault/churn draws, DP accounting, network metering — is
+    /// re-derived deterministically from the config and the round number.
+    ///
+    /// Deliberately conservative: strategies with server-side optimizer
+    /// state (fedavgm/fedopt), per-client state (scaffold/moon), clustering,
+    /// decentralized gossip, chains, and the virtual population all return
+    /// false and simply replay from round 1 — slower, never wrong. The gate
+    /// is a pure function of the config, so writers and readers of a
+    /// checkpoint always agree on whether one can exist.
+    pub fn checkpointable(job: &JobConfig) -> bool {
+        matches!(
+            job.strategy,
+            StrategyKind::FedAvg | StrategyKind::FedProx { .. } | StrategyKind::DpFl { .. }
+        ) && job.topology == TopologyKind::ClientServer
+            && !job.chain.enabled
+            && job.population == PopulationMode::Eager
+    }
+
+    /// The global model exactly as it stands now — the payload for a
+    /// [`crate::campaign::Checkpoint`] — or `None` when this job is not
+    /// [`RunHandle::checkpointable`].
+    pub fn checkpoint_params(&self) -> Option<Arc<[f32]>> {
+        RunHandle::checkpointable(&self.state.job).then(|| self.state.global.clone())
+    }
+
+    /// Reconstruct a paused run from a stored partial report and the
+    /// checkpointed global model, positioned to continue at round
+    /// `prefix.rounds_completed() + 1`. The caller guarantees `prefix` and
+    /// `params` come from the *same* stored cell (the store keys both by
+    /// the job's content hash); depth and length mismatches are errors.
+    pub fn resume(
+        rt: Arc<Runtime>,
+        job: &JobConfig,
+        faults: FaultPlan,
+        prefix: &RunReport,
+        params: &[f32],
+    ) -> Result<RunHandle> {
+        if !RunHandle::checkpointable(job) {
+            bail!(
+                "job '{}' is not checkpointable (strategy/topology/population \
+                 carries cross-round state beyond the global model)",
+                job.name
+            );
+        }
+        let done = prefix.rounds_completed();
+        if done == 0 || done > job.rounds {
+            bail!(
+                "cannot resume '{}' at round {done} of a {}-round budget",
+                job.name,
+                job.rounds
+            );
+        }
+        let mut handle = RunHandle::start(rt, job, faults)?;
+        if params.len() != handle.state.global.len() {
+            bail!(
+                "checkpoint holds {} params, job '{}' scaffolds {}",
+                params.len(),
+                job.name,
+                handle.state.global.len()
+            );
+        }
+        handle.state.global = params.into();
+        handle.state.report.rounds = prefix.rounds.clone();
+        handle.state.report.stopped_early = false;
+        handle.next_round = done + 1;
+        Ok(handle)
     }
 
     /// Rounds completed so far.
@@ -205,20 +310,28 @@ impl Orchestrator {
         Orchestrator { rt }
     }
 
-    /// Run a job to completion and return the per-round report.
-    pub fn run(&self, job: &JobConfig) -> Result<RunReport> {
-        self.run_with_faults(job, FaultPlan::none())
+    /// Run a job and return the per-round report. This is the single
+    /// entrypoint: `RunOptions::default()` runs to completion with no
+    /// faults; a control whose budget or cancel token stops the loop early
+    /// yields a valid partial report marked `stopped_early` (a bitwise
+    /// prefix of the full run); a fault plan injects stragglers/crashes.
+    pub fn run(&self, job: &JobConfig, opts: RunOptions) -> Result<RunReport> {
+        let mut handle = RunHandle::start(self.rt.clone(), job, opts.faults)?;
+        match handle.advance(&opts.control)? {
+            RunStatus::Completed => handle.finish(),
+            RunStatus::BudgetReached | RunStatus::Cancelled => Ok(handle.partial_report()),
+        }
     }
 
-    /// Run with injected node faults (stragglers / crashes).
+    /// Deprecated: use `run(job, RunOptions::default().faults(faults))`.
+    #[deprecated(note = "use Orchestrator::run(job, RunOptions::default().faults(faults))")]
     pub fn run_with_faults(&self, job: &JobConfig, faults: FaultPlan) -> Result<RunReport> {
-        self.run_controlled(job, faults, &RunControl::unbounded())
+        self.run(job, RunOptions::default().faults(faults))
     }
 
-    /// Run under a [`RunControl`]: returns the complete report, or — when
-    /// the control's budget or cancel token stopped the loop early — a valid
-    /// partial report marked `stopped_early` with `rounds_completed`
-    /// recorded (a bitwise prefix of the full run).
+    /// Deprecated: use `run(job, RunOptions { control, faults })` (the
+    /// by-reference control is the only signature difference).
+    #[deprecated(note = "use Orchestrator::run(job, RunOptions::default().control(...))")]
     pub fn run_controlled(
         &self,
         job: &JobConfig,

@@ -19,7 +19,7 @@ use flsim::campaign::CampaignSpec;
 use flsim::config::adversary::{AttackKind, RobustAggConfig};
 use flsim::config::job::JobConfig;
 use flsim::metrics::report::RunReport;
-use flsim::orchestrator::Orchestrator;
+use flsim::orchestrator::{Orchestrator, RunOptions};
 use flsim::runtime::pjrt::Runtime;
 
 fn rt() -> Arc<Runtime> {
@@ -67,7 +67,7 @@ fn zero_adversary_runs_are_bitwise_identical() {
     for strategy in ["fedavg", "dpfl"] {
         let base = tiny(strategy);
         let orch = Orchestrator::new(rt());
-        let want = orch.run(&base).unwrap();
+        let want = orch.run(&base, RunOptions::default()).unwrap();
 
         let mut with_sections = tiny(strategy);
         with_sections.adversary.attack = AttackKind::Scale;
@@ -84,7 +84,7 @@ fn zero_adversary_runs_are_bitwise_identical() {
             with_sections.canonical_json().to_string(),
             "{strategy}: inactive sections must not perturb the cache key"
         );
-        let got = orch.run(&with_sections).unwrap();
+        let got = orch.run(&with_sections, RunOptions::default()).unwrap();
         assert_eq!(hashes(&want), hashes(&got), "{strategy}: model hashes diverged");
         assert_eq!(net_bytes(&want), net_bytes(&got), "{strategy}: traffic diverged");
     }
@@ -101,11 +101,11 @@ fn robust_aggregators_beat_weighted_mean_under_poisoning() {
 
     let mut krum = poisoned();
     krum.robust_agg = RobustAggConfig::parse_axis("krum").unwrap();
-    let krum = orch.run(&krum).unwrap();
+    let krum = orch.run(&krum, RunOptions::default()).unwrap();
 
     let mut trimmed = poisoned();
     trimmed.robust_agg = RobustAggConfig::parse_axis("trimmed_mean").unwrap();
-    let trimmed = orch.run(&trimmed).unwrap();
+    let trimmed = orch.run(&trimmed, RunOptions::default()).unwrap();
 
     assert!(
         krum.final_accuracy() > undefended.final_accuracy(),
@@ -133,8 +133,8 @@ fn robust_aggregation_is_worker_count_invariant() {
     let mut three = one.clone();
     one.n_workers = 1;
     three.n_workers = 3;
-    let a = orch.run(&one).unwrap();
-    let b = orch.run(&three).unwrap();
+    let a = orch.run(&one, RunOptions::default()).unwrap();
+    let b = orch.run(&three, RunOptions::default()).unwrap();
     assert_eq!(hashes(&a), hashes(&b), "krum winner depends on worker count");
 }
 
@@ -147,7 +147,7 @@ fn label_flip_changes_training() {
     let mut flipped = tiny("fedavg");
     flipped.adversary.attack = AttackKind::LabelFlip;
     flipped.adversary.attack_fraction = 0.5;
-    let poisoned = orch.run(&flipped).unwrap();
+    let poisoned = orch.run(&flipped, RunOptions::default()).unwrap();
     assert_ne!(
         hashes(&clean),
         hashes(&poisoned),
@@ -175,8 +175,8 @@ fn churn_replays_deterministically_end_to_end() {
         "churn plan must be a pure function of the job"
     );
     let orch = Orchestrator::new(rt());
-    let a = orch.run(&job).unwrap();
-    let b = orch.run(&job).unwrap();
+    let a = orch.run(&job, RunOptions::default()).unwrap();
+    let b = orch.run(&job, RunOptions::default()).unwrap();
     assert_eq!(a.rounds.len(), 3);
     assert_eq!(hashes(&a), hashes(&b), "churn run must replay bit-for-bit");
 }
@@ -188,7 +188,7 @@ fn churn_replays_deterministically_end_to_end() {
 fn declarative_drop_schedule_completes() {
     let mut job = tiny("fedavg");
     job.faults.drops.push(("client_1".into(), 2));
-    let report = Orchestrator::new(rt()).run(&job).unwrap();
+    let report = Orchestrator::new(rt()).run(&job, RunOptions::default()).unwrap();
     assert_eq!(report.rounds.len(), 2);
     // And it is a *different* trajectory from the clean run (client_1's
     // round-2 update is missing from the aggregate).

@@ -22,7 +22,7 @@ use std::path::{Path, PathBuf};
 use flsim::campaign::{self, CampaignReport, CampaignSpec, ResultStore};
 use flsim::config::job::JobConfig;
 use flsim::controller::{CancelToken, FaultPlan};
-use flsim::orchestrator::{Orchestrator, RunControl};
+use flsim::orchestrator::{Orchestrator, RunControl, RunOptions};
 use flsim::runtime::pjrt::Runtime;
 use flsim::util::yaml::Yaml;
 
@@ -361,13 +361,13 @@ fn stopped_runs_are_bitwise_prefixes_of_the_full_run() {
     let mut job = tiny_base();
     job.rounds = 4;
 
-    let full = Orchestrator::new(rt.clone()).run(&job).unwrap();
+    let full = Orchestrator::new(rt.clone()).run(&job, RunOptions::default()).unwrap();
     assert!(!full.stopped_early);
     assert_eq!(full.rounds_completed(), 4);
 
     // Budget stop at round 2: exactly the first two rounds, bit for bit.
     let budgeted = Orchestrator::new(rt.clone())
-        .run_controlled(&job, FaultPlan::none(), &RunControl::budget(2))
+        .run(&job, RunOptions::default().control(RunControl::budget(2)))
         .unwrap();
     assert!(budgeted.stopped_early);
     assert_eq!(budgeted.rounds_completed(), 2);
@@ -387,7 +387,7 @@ fn stopped_runs_are_bitwise_prefixes_of_the_full_run() {
         })),
     };
     let cancelled = Orchestrator::new(rt.clone())
-        .run_controlled(&job, FaultPlan::none(), &ctl)
+        .run(&job, RunOptions::default().control(ctl))
         .unwrap();
     assert!(cancelled.stopped_early);
     assert_eq!(cancelled.rounds_completed(), 3);
@@ -401,7 +401,7 @@ fn stopped_runs_are_bitwise_prefixes_of_the_full_run() {
         ..RunControl::default()
     };
     let empty = Orchestrator::new(rt)
-        .run_controlled(&job, FaultPlan::none(), &ctl)
+        .run(&job, RunOptions::default().control(ctl))
         .unwrap();
     assert!(empty.stopped_early);
     assert_eq!(empty.rounds_completed(), 0);
@@ -446,11 +446,18 @@ fn cancelled_campaign_leaves_no_torn_store_entries() {
         })),
     };
     let partial = Orchestrator::new(rt.clone())
-        .run_controlled(&job, FaultPlan::none(), &ctl)
+        .run(&job, RunOptions::default().control(ctl))
         .unwrap();
     assert!(partial.stopped_early);
     let key = campaign::cell_key(&job);
-    assert!(store.put_partial(&key, "cancelled", "camp", &job, &partial).unwrap());
+    assert!(store
+        .commit(
+            &key,
+            campaign::CellOutcome::new(&job, &partial)
+                .cell("cancelled")
+                .campaign("camp"),
+        )
+        .unwrap());
     assert_no_tmp_residue(&dir);
     // The committed partial loads cleanly at its depth.
     assert_eq!(store.get_at_least(&key, 1).unwrap().rounds_completed(), 1);
@@ -623,7 +630,14 @@ fn gc_never_evicts_entries_of_the_resumed_campaign() {
         job.name = format!("junk{seed}");
         let key = campaign::cell_key(&job);
         let report = first.cells[0].report.clone().unwrap();
-        store.put(&key, &job.name, "camp", &job, &report).unwrap();
+        store
+            .commit(
+                &key,
+                campaign::CellOutcome::new(&job, &report)
+                    .cell(&job.name)
+                    .campaign("camp"),
+            )
+            .unwrap();
         junk_keys.push(key);
     }
 
@@ -638,7 +652,7 @@ fn gc_never_evicts_entries_of_the_resumed_campaign() {
     let opts = campaign::GcOptions {
         max_age: None,
         keep_last: Some(0),
-        tmp_max_age: None,
+        ..campaign::GcOptions::default()
     };
     let stats = store.gc(&opts, &protect).unwrap();
     assert_eq!(stats.scanned, 8);

@@ -1,0 +1,497 @@
+//! Distributed-worker contracts (the acceptance criteria of the
+//! lease-based campaign-worker PR):
+//!
+//! * two concurrent workers drain one store with **zero duplicate
+//!   executions** — every cell is executed by exactly one of them, and the
+//!   drained store serves the campaign report entirely from cache;
+//! * SIGKILLing a worker mid-cell loses no committed work: the survivor
+//!   reclaims the expired lease, finishes the campaign, and the final
+//!   report is byte-stable and bitwise-identical (modulo wall clocks) to a
+//!   single-process run;
+//! * a rung-stopped ASHA cell resumes from its checkpointed rung instead
+//!   of round 1 — strictly fewer engine executions, identical bits — and
+//!   completing the cell removes the checkpoint blob;
+//! * ASHA promotions are **elastic-deterministic**: the promoted set and
+//!   every per-round metric are invariant to worker count ∈ {1, 2, 4} and
+//!   equal to the in-process scheduler's (property-tested over sampled
+//!   specs, mirroring `rust/tests/proptests.rs`'s hand-rolled harness).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use flsim::campaign::{
+    self, lease, CampaignOutcome, CampaignReport, CampaignSpec, ResultStore, SchedulerSpec,
+    WorkerOptions,
+};
+use flsim::config::job::JobConfig;
+use flsim::controller::FaultPlan;
+use flsim::metrics::report::RoundMetrics;
+use flsim::orchestrator::{Orchestrator, RunControl, RunHandle, RunOptions};
+use flsim::runtime::pjrt::Runtime;
+use flsim::util::yaml::Yaml;
+
+fn tmp_store(tag: &str) -> (ResultStore, PathBuf) {
+    let dir = std::env::temp_dir().join(format!(
+        "flsim_worker_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    (ResultStore::open(&dir).unwrap(), dir)
+}
+
+fn tiny_base() -> JobConfig {
+    let mut j = JobConfig::default_cnn("fedavg");
+    j.name = "tiny".into();
+    j.rounds = 2;
+    j.dataset.n = 600;
+    j.n_clients = 4;
+    j
+}
+
+/// In-process workers never crash, so a long expiry makes lease stealing
+/// impossible — any duplicate execution the tests observe is a real
+/// protocol bug, not an expiry race.
+fn fast_opts(owner: &str) -> WorkerOptions {
+    let mut o = WorkerOptions::new(owner);
+    o.lease.heartbeat = Duration::from_millis(100);
+    o.lease.expiry = Duration::from_secs(60);
+    o.poll = Duration::from_millis(10);
+    o
+}
+
+/// Run `n` cooperative workers (threads, one shared store) to completion.
+fn drain_n(
+    rt: &Arc<Runtime>,
+    spec: &CampaignSpec,
+    store: &ResultStore,
+    n: usize,
+) -> Vec<CampaignOutcome> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|w| {
+                let rt = rt.clone();
+                let opts = fast_opts(&format!("w{w}"));
+                s.spawn(move || campaign::drain(rt, spec, store, &opts))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker thread panicked").unwrap())
+            .collect()
+    })
+}
+
+/// Every per-round field two runs must agree on bitwise — everything except
+/// the wall clocks (`wall_secs`, `cpu_pct`, `rss_mib`), which belong to
+/// whichever process happened to execute the cell.
+fn assert_rounds_bitwise_equal(a: &[RoundMetrics], b: &[RoundMetrics], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: round count");
+    for (ma, mb) in a.iter().zip(b) {
+        let r = ma.round;
+        assert_eq!(ma.round, mb.round, "{what}");
+        assert_eq!(ma.model_hash, mb.model_hash, "{what} round {r}");
+        assert_eq!(ma.net_bytes, mb.net_bytes, "{what} round {r}");
+        assert_eq!(ma.test_accuracy.to_bits(), mb.test_accuracy.to_bits(), "{what} round {r}");
+        assert_eq!(ma.test_loss.to_bits(), mb.test_loss.to_bits(), "{what} round {r}");
+        assert_eq!(ma.train_loss.to_bits(), mb.train_loss.to_bits(), "{what} round {r}");
+        assert_eq!(ma.sim_round_secs.to_bits(), mb.sim_round_secs.to_bits(), "{what} round {r}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Two cooperative workers: disjoint execution, complete store.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn two_workers_drain_disjointly_and_the_store_serves_the_report() {
+    let (store, dir) = tmp_store("pair");
+    let rt = Runtime::shared("artifacts").unwrap();
+    let spec = CampaignSpec::builder("pair", tiny_base())
+        .axis_strs("strategy", &["fedavg", "fedprox"])
+        .axis_ints("seed", &[1, 2])
+        .build();
+
+    let outcomes = drain_n(&rt, &spec, &store, 2);
+    let (a, b) = (&outcomes[0], &outcomes[1]);
+    for o in [a, b] {
+        assert!(o.failed().is_empty(), "{:?}", o.failure_lines());
+        assert_eq!(o.cells.len(), 4);
+        assert!(o.cells.iter().all(|c| c.report.is_some()));
+    }
+
+    // Zero duplicate executions: each cell was executed by exactly one
+    // worker (`cached == false` marks "this drain executed it"); both
+    // workers agree on the bits regardless of who ran what.
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ca.cell.key, cb.cell.key);
+        assert!(
+            !ca.cached ^ !cb.cached,
+            "cell {} executed by {} workers",
+            ca.cell.name,
+            [ca, cb].iter().filter(|c| !c.cached).count()
+        );
+        assert_rounds_bitwise_equal(
+            &ca.report.as_ref().unwrap().rounds,
+            &cb.report.as_ref().unwrap().rounds,
+            &ca.cell.name,
+        );
+    }
+    assert!(lease::live(store.dir(), Duration::from_secs(60)).is_empty());
+
+    // The drained store serves the whole campaign from cache — zero engine
+    // executions — and matches a single-process run bit for bit.
+    let execs = rt.stats().executions;
+    let replay = campaign::run(rt.clone(), &spec, &store).unwrap();
+    assert!(replay.all_cached(), "drained store must serve every cell");
+    assert_eq!(rt.stats().executions, execs);
+
+    let (store_solo, dir_solo) = tmp_store("pair_solo");
+    let solo = campaign::run(rt, &spec, &store_solo).unwrap();
+    for (w, s) in replay.cells.iter().zip(&solo.cells) {
+        assert_rounds_bitwise_equal(
+            &w.report.as_ref().unwrap().rounds,
+            &s.report.as_ref().unwrap().rounds,
+            &w.cell.name,
+        );
+    }
+
+    std::fs::remove_dir_all(&dir).unwrap();
+    std::fs::remove_dir_all(&dir_solo).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Crash recovery: SIGKILL one of two worker processes mid-cell.
+// ---------------------------------------------------------------------------
+
+/// Four-cell grid (seed sweep) with enough rounds that the kill lands
+/// mid-cell. `parallelism: 1` keeps each worker process single-threaded.
+const KILL_SPEC: &str = r#"
+campaign:
+  name: killtest
+axes:
+  seed: [1, 2, 3, 4]
+job:
+  name: kt
+  rounds: 6
+  parallelism: 1
+dataset:
+  name: cifar10_synth
+  n: 600
+  distribution:
+    kind: dirichlet
+    alpha: 0.5
+strategy:
+  name: fedavg
+  backend: cnn
+  train_params:
+    learning_rate: 0.01
+    local_epochs: 2
+topology:
+  kind: client_server
+  clients: 4
+  workers: 1
+"#;
+
+#[test]
+fn killed_worker_is_reclaimed_and_loses_no_committed_work() {
+    let base = std::env::temp_dir().join(format!("flsim_worker_kill_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).unwrap();
+    let store_dir = base.join("store");
+    let spec_path = base.join("kill.yaml");
+    std::fs::write(&spec_path, KILL_SPEC).unwrap();
+
+    let spawn = |owner: &str| {
+        std::process::Command::new(env!("CARGO_BIN_EXE_flsim"))
+            .args([
+                "campaign",
+                "worker",
+                store_dir.to_str().unwrap(),
+                spec_path.to_str().unwrap(),
+                "--owner",
+                owner,
+                "--heartbeat-secs",
+                "0.1",
+                "--expiry-secs",
+                "1.0",
+                "--poll-secs",
+                "0.1",
+            ])
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::piped())
+            .spawn()
+            .expect("spawning flsim campaign worker")
+    };
+
+    // Worker 1 starts draining; SIGKILL it the moment it holds a lease —
+    // mid-cell, heartbeat thread and all.
+    let mut w1 = spawn("w1");
+    let lease_dir = store_dir.join("leases");
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        let leased = std::fs::read_dir(&lease_dir)
+            .map(|d| {
+                d.flatten()
+                    .any(|f| f.path().extension().map(|e| e == "lease").unwrap_or(false))
+            })
+            .unwrap_or(false);
+        if leased {
+            break;
+        }
+        if let Some(status) = w1.try_wait().unwrap() {
+            panic!("worker 1 exited before leasing anything: {status}");
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "worker 1 never leased a cell"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    w1.kill().unwrap(); // SIGKILL on unix — no Drop, no lease release
+    w1.wait().unwrap();
+
+    // The survivor reclaims the orphaned lease after the 1s expiry and
+    // finishes the campaign alone.
+    let w2 = spawn("w2");
+    let out = w2.wait_with_output().unwrap();
+    assert!(
+        out.status.success(),
+        "worker 2 failed:\n{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // Every cell is complete in the store; no live lease remains.
+    let spec = CampaignSpec::from_yaml_file(spec_path.to_str().unwrap()).unwrap();
+    let store = ResultStore::open(&store_dir).unwrap();
+    for c in campaign::expand(&spec).unwrap() {
+        assert!(
+            store.get(&c.key).is_some(),
+            "cell {} missing after the two-worker drain",
+            c.name
+        );
+    }
+    assert!(
+        lease::live(store.dir(), Duration::from_secs(60)).is_empty(),
+        "live lease left behind after drain"
+    );
+
+    // The drained store serves the campaign entirely from cache, and the
+    // report it yields is byte-identical across generations.
+    let rt = Runtime::shared("artifacts").unwrap();
+    let execs = rt.stats().executions;
+    let first = campaign::run(rt.clone(), &spec, &store).unwrap();
+    assert!(first.all_cached(), "drained store must serve every cell");
+    assert_eq!(rt.stats().executions, execs, "replay must not touch the engine");
+    let second = campaign::run(rt.clone(), &spec, &store).unwrap();
+    assert_eq!(
+        CampaignReport::from_outcome(&first).to_csv(),
+        CampaignReport::from_outcome(&second).to_csv()
+    );
+    assert_eq!(
+        CampaignReport::from_outcome(&first).to_json().to_string(),
+        CampaignReport::from_outcome(&second).to_json().to_string()
+    );
+
+    // And the surviving bits are the single-process run's, exactly.
+    let (store_solo, dir_solo) = tmp_store("kill_solo");
+    let solo = campaign::run(rt, &spec, &store_solo).unwrap();
+    for (w, s) in first.cells.iter().zip(&solo.cells) {
+        assert_rounds_bitwise_equal(
+            &w.report.as_ref().unwrap().rounds,
+            &s.report.as_ref().unwrap().rounds,
+            &w.cell.name,
+        );
+    }
+
+    std::fs::remove_dir_all(&base).unwrap();
+    std::fs::remove_dir_all(&dir_solo).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Checkpointed rung promotion: resume from the rung, not from round 1.
+// ---------------------------------------------------------------------------
+
+/// The campaign.rs eight-cell ASHA sweep (2×2×2, 4 rounds, rungs 1/2/4) —
+/// every cell checkpointable (fedavg/fedprox, client-server, eager).
+fn eight_cell_asha() -> CampaignSpec {
+    let mut base = tiny_base();
+    base.name = "asha8".into();
+    base.rounds = 4;
+    CampaignSpec::builder("asha8", base)
+        .axis_strs("strategy", &["fedavg", "fedprox"])
+        .axis_ints("seed", &[1, 2])
+        .axis("learning_rate", vec![Yaml::Float(0.01), Yaml::Float(0.02)])
+        .jobs(2)
+        .asha(2, 1)
+        .build()
+}
+
+#[test]
+fn rung_stopped_cells_resume_from_their_checkpoints() {
+    let (store, dir) = tmp_store("ckpt");
+    let rt = Runtime::shared("artifacts").unwrap();
+    let spec = eight_cell_asha();
+
+    let first = campaign::run(rt.clone(), &spec, &store).unwrap();
+    assert!(first.failed().is_empty(), "{:?}", first.failure_lines());
+    let stopped: Vec<_> = first
+        .cells
+        .iter()
+        .filter(|c| c.report.as_ref().unwrap().stopped_early)
+        .collect();
+    assert!(!stopped.is_empty());
+
+    // Every rung-stopped cell left a checkpoint blob at its stored depth.
+    for c in &stopped {
+        let depth = store
+            .get_at_least(&c.cell.key, 1)
+            .expect("rung-stopped cell must have a partial entry")
+            .rounds_completed();
+        let ckpt = store
+            .get_checkpoint(&c.cell.key)
+            .expect("rung-stopped checkpointable cell must leave a checkpoint");
+        assert_eq!(ckpt.key, c.cell.key);
+        assert_eq!(ckpt.rounds, depth);
+    }
+
+    // A grid run over the same store resumes each stopped cell from its
+    // checkpointed rung: strictly fewer engine executions than running the
+    // same grid from scratch, identical bits.
+    let mut grid_spec = spec.clone();
+    grid_spec.scheduler = SchedulerSpec::default();
+    let before = rt.stats().executions;
+    let resumed = campaign::run(rt.clone(), &grid_spec, &store).unwrap();
+    let resumed_execs = rt.stats().executions - before;
+    assert!(resumed.failed().is_empty(), "{:?}", resumed.failure_lines());
+
+    let (store_scratch, dir_scratch) = tmp_store("ckpt_scratch");
+    let before = rt.stats().executions;
+    let scratch = campaign::run(rt.clone(), &grid_spec, &store_scratch).unwrap();
+    let scratch_execs = rt.stats().executions - before;
+    assert!(
+        resumed_execs < scratch_execs,
+        "resume-from-checkpoint must save executions ({resumed_execs} vs {scratch_execs})"
+    );
+    for (a, b) in resumed.cells.iter().zip(&scratch.cells) {
+        assert_rounds_bitwise_equal(
+            &a.report.as_ref().unwrap().rounds,
+            &b.report.as_ref().unwrap().rounds,
+            &a.cell.name,
+        );
+    }
+
+    // Completing a cell removes its checkpoint (complete entries supersede
+    // the blob; gc would otherwise sweep it as an orphan).
+    for c in &stopped {
+        assert!(
+            store.get_checkpoint(&c.cell.key).is_none(),
+            "checkpoint for {} must be removed by the complete commit",
+            c.cell.name
+        );
+    }
+
+    std::fs::remove_dir_all(&dir).unwrap();
+    std::fs::remove_dir_all(&dir_scratch).unwrap();
+}
+
+#[test]
+fn resume_continues_bitwise_and_refuses_stateful_strategies() {
+    let rt = Runtime::shared("artifacts").unwrap();
+    let mut job = tiny_base();
+    job.rounds = 4;
+
+    let full = Orchestrator::new(rt.clone())
+        .run(&job, RunOptions::default())
+        .unwrap();
+
+    // Pause at round 2 and capture (partial report, params) — the exact
+    // payload a worker commits at a rung.
+    let mut h = RunHandle::start(rt.clone(), &job, FaultPlan::none()).unwrap();
+    h.advance(&RunControl::budget(2)).unwrap();
+    let prefix = h.partial_report();
+    let params = h.checkpoint_params().expect("fedavg/client-server is checkpointable");
+    assert!(prefix.stopped_early);
+    assert_eq!(prefix.rounds_completed(), 2);
+    drop(h);
+
+    // Resuming replays nothing: rounds 3 and 4 continue bitwise from the
+    // checkpoint, reproducing the uninterrupted run exactly.
+    let mut r = RunHandle::resume(rt.clone(), &job, FaultPlan::none(), &prefix, &params).unwrap();
+    assert_eq!(r.rounds_done(), 2);
+    r.advance(&RunControl::unbounded()).unwrap();
+    let resumed = r.finish().unwrap();
+    assert!(!resumed.stopped_early);
+    assert_rounds_bitwise_equal(&resumed.rounds, &full.rounds, "checkpoint resume");
+
+    // Strategies with cross-round state beyond the global model are not
+    // checkpointable and must refuse to resume rather than resume wrongly.
+    let stateful = JobConfig::default_cnn("scaffold");
+    assert!(!RunHandle::checkpointable(&stateful));
+    let sh = RunHandle::start(rt.clone(), &stateful, FaultPlan::none()).unwrap();
+    assert!(sh.checkpoint_params().is_none());
+    assert!(RunHandle::resume(rt, &stateful, FaultPlan::none(), &prefix, &params).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Elastic-deterministic ASHA: promotions invariant to worker count.
+// ---------------------------------------------------------------------------
+
+/// Sampled spec variants for the worker-count property (hand-rolled
+/// generator in the proptests.rs idiom — proptest is not vendored).
+fn asha_variant(v: u64) -> CampaignSpec {
+    let mut base = tiny_base();
+    base.name = format!("asha_inv{v}");
+    base.rounds = 4;
+    CampaignSpec::builder(&format!("asha_inv{v}"), base)
+        .axis_strs("strategy", &["fedavg", "fedprox"])
+        .axis_ints("seed", &[(10 * v + 1) as i64, (10 * v + 2) as i64])
+        .axis("learning_rate", vec![Yaml::Float(0.01), Yaml::Float(0.02)])
+        .jobs(2)
+        .asha(2, 1)
+        .build()
+}
+
+#[test]
+fn asha_promotions_invariant_to_worker_count() {
+    let rt = Runtime::shared("artifacts").unwrap();
+    for variant in 0..2u64 {
+        let spec = asha_variant(variant);
+
+        // Ground truth: the in-process scheduler on its own store.
+        let (store_ref, dir_ref) = tmp_store(&format!("inv{variant}_ref"));
+        let reference = campaign::run(rt.clone(), &spec, &store_ref).unwrap();
+        assert!(reference.failed().is_empty(), "{:?}", reference.failure_lines());
+
+        for &w in &[1usize, 2, 4] {
+            let (store, dir) = tmp_store(&format!("inv{variant}_w{w}"));
+            let outcomes = drain_n(&rt, &spec, &store, w);
+
+            // Every worker derives the identical outcome (cached flags
+            // aside — those only say who did the work).
+            for o in &outcomes {
+                assert!(o.failed().is_empty(), "{:?}", o.failure_lines());
+                assert_eq!(o.cells.len(), reference.cells.len());
+                for (c, r) in o.cells.iter().zip(&reference.cells) {
+                    assert_eq!(c.cell.key, r.cell.key, "variant {variant}, {w} workers");
+                    let (cr, rr) = (c.report.as_ref().unwrap(), r.report.as_ref().unwrap());
+                    assert_eq!(
+                        cr.stopped_early,
+                        rr.stopped_early,
+                        "variant {variant}: cell {} promoted under {w} workers but not \
+                         by the in-process scheduler",
+                        c.cell.name
+                    );
+                    assert_rounds_bitwise_equal(
+                        &cr.rounds,
+                        &rr.rounds,
+                        &format!("variant {variant}, {w} workers, cell {}", c.cell.name),
+                    );
+                }
+            }
+            std::fs::remove_dir_all(&dir).unwrap();
+        }
+        std::fs::remove_dir_all(&dir_ref).unwrap();
+    }
+}

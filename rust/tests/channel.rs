@@ -21,7 +21,7 @@ use flsim::campaign::CampaignSpec;
 use flsim::config::channel::{DpConfig, SecureAggConfig};
 use flsim::config::job::{JobConfig, PopulationMode};
 use flsim::metrics::report::RunReport;
-use flsim::orchestrator::Orchestrator;
+use flsim::orchestrator::{Orchestrator, RunOptions};
 use flsim::runtime::pjrt::Runtime;
 use flsim::strategy::StrategyKind;
 use flsim::util::yaml::Yaml;
@@ -68,7 +68,7 @@ fn fedavg_plus_channel_dp_reproduces_dpfl_bitwise() {
         sigma: 0.005,
         delta: 1e-5,
     });
-    let composed = orch.run(&composed).unwrap();
+    let composed = orch.run(&composed, RunOptions::default()).unwrap();
 
     assert_eq!(
         hashes(&legacy),
@@ -101,7 +101,7 @@ fn fedavg_plus_channel_dp_reproduces_dpfl_bitwise() {
 fn inactive_channel_section_is_bitwise_invisible() {
     let base = tiny("fedavg");
     let orch = Orchestrator::new(rt());
-    let want = orch.run(&base).unwrap();
+    let want = orch.run(&base, RunOptions::default()).unwrap();
 
     let mut with_section = tiny("fedavg");
     with_section.channel.compress.k = 9_999; // ignored: kind is none
@@ -112,7 +112,7 @@ fn inactive_channel_section_is_bitwise_invisible() {
         with_section.canonical_json().to_string(),
         "inactive channel must not perturb the cache key"
     );
-    let got = orch.run(&with_section).unwrap();
+    let got = orch.run(&with_section, RunOptions::default()).unwrap();
     assert_eq!(hashes(&want), hashes(&got), "model hashes diverged");
     assert_eq!(net_bytes(&want), net_bytes(&got), "traffic diverged");
 }
@@ -130,12 +130,12 @@ fn tighter_compression_strictly_shrinks_wire_traffic() {
     let mut sparse = tiny("fedavg");
     sparse.channel.compress =
         flsim::config::channel::ChannelConfig::parse_compress_axis("top_k:8000").unwrap();
-    let sparse = orch.run(&sparse).unwrap();
+    let sparse = orch.run(&sparse, RunOptions::default()).unwrap();
 
     let mut quant = tiny("fedavg");
     quant.channel.compress =
         flsim::config::channel::ChannelConfig::parse_compress_axis("quantize:4").unwrap();
-    let quant = orch.run(&quant).unwrap();
+    let quant = orch.run(&quant, RunOptions::default()).unwrap();
 
     for r in 0..2 {
         assert!(
@@ -162,7 +162,7 @@ fn tighter_compression_strictly_shrinks_wire_traffic() {
     let mut quant2 = tiny("fedavg");
     quant2.channel.compress =
         flsim::config::channel::ChannelConfig::parse_compress_axis("quantize:4").unwrap();
-    let quant2 = orch.run(&quant2).unwrap();
+    let quant2 = orch.run(&quant2, RunOptions::default()).unwrap();
     assert_eq!(
         hashes(&quant),
         hashes(&quant2),
@@ -181,7 +181,7 @@ fn secure_agg_shares_are_metered() {
 
     let mut sa = tiny("fedavg");
     sa.channel.secure_agg = Some(SecureAggConfig { threshold: 2 });
-    let sa_run = orch.run(&sa).unwrap();
+    let sa_run = orch.run(&sa, RunOptions::default()).unwrap();
     assert_eq!(
         hashes(&plain),
         hashes(&sa_run),
@@ -199,12 +199,12 @@ fn secure_agg_shares_are_metered() {
     let mut dropped = tiny("fedavg");
     dropped.channel.secure_agg = Some(SecureAggConfig { threshold: 2 });
     dropped.faults.drops.push(("client_1".into(), 2));
-    let dropped_run = orch.run(&dropped).unwrap();
+    let dropped_run = orch.run(&dropped, RunOptions::default()).unwrap();
     assert_eq!(dropped_run.rounds.len(), 2);
 
     let mut plain_dropped = tiny("fedavg");
     plain_dropped.faults.drops.push(("client_1".into(), 2));
-    let plain_dropped = orch.run(&plain_dropped).unwrap();
+    let plain_dropped = orch.run(&plain_dropped, RunOptions::default()).unwrap();
     assert!(
         dropped_run.rounds[1].sim_round_secs > plain_dropped.rounds[1].sim_round_secs,
         "dropped-client recovery must cost simulated time"
@@ -218,7 +218,7 @@ fn secure_agg_threshold_shortfall_aborts() {
     let mut job = tiny("fedavg");
     job.channel.secure_agg = Some(SecureAggConfig { threshold: 4 });
     job.faults.drops.push(("client_1".into(), 2));
-    let err = Orchestrator::new(rt()).run(&job).unwrap_err().to_string();
+    let err = Orchestrator::new(rt()).run(&job, RunOptions::default()).unwrap_err().to_string();
     assert!(
         err.contains("secure aggregation"),
         "want a threshold-shortfall error, got: {err}"
@@ -256,9 +256,9 @@ fn virtual_streaming_matches_eager_for_mean_shaped_strategies() {
         job.client_fraction = 0.5;
 
         job.population = PopulationMode::Eager;
-        let eager = Orchestrator::new(rt()).run(&job).unwrap();
+        let eager = Orchestrator::new(rt()).run(&job, RunOptions::default()).unwrap();
         job.population = PopulationMode::Virtual;
-        let virt = Orchestrator::new(rt()).run(&job).unwrap();
+        let virt = Orchestrator::new(rt()).run(&job, RunOptions::default()).unwrap();
         assert_reports_identical(&eager, &virt, strategy);
     }
 }
@@ -277,9 +277,9 @@ fn virtual_streaming_matches_eager_under_channel_dp() {
     });
 
     job.population = PopulationMode::Eager;
-    let eager = Orchestrator::new(rt()).run(&job).unwrap();
+    let eager = Orchestrator::new(rt()).run(&job, RunOptions::default()).unwrap();
     job.population = PopulationMode::Virtual;
-    let virt = Orchestrator::new(rt()).run(&job).unwrap();
+    let virt = Orchestrator::new(rt()).run(&job, RunOptions::default()).unwrap();
     assert_reports_identical(&eager, &virt, "channel.dp");
     assert!(virt.rounds.last().unwrap().dp_epsilon > 0.0);
 }

@@ -5,7 +5,7 @@
 use flsim::config::job::JobConfig;
 use flsim::controller::sync::FaultPlan;
 use flsim::data::dataset::DatasetSpec;
-use flsim::orchestrator::Orchestrator;
+use flsim::orchestrator::{Orchestrator, RunOptions};
 use flsim::runtime::pjrt::Runtime;
 use flsim::topology::TopologyKind;
 
@@ -42,7 +42,7 @@ fn fedavg_end_to_end_learns_and_meters() {
     let mut job = mini_job("fedavg");
     job.rounds = 4;
     job.dataset.n = 1200;
-    let report = Orchestrator::new(rt).run(&job).unwrap();
+    let report = Orchestrator::new(rt).run(&job, RunOptions::default()).unwrap();
     assert_eq!(report.rounds.len(), 4);
     // Loss must drop over 4 rounds on the synthetic set.
     assert!(report.rounds[3].test_loss < report.rounds[0].test_loss);
@@ -59,8 +59,8 @@ fn same_seed_is_bitwise_reproducible() {
     let rt = Runtime::shared(artifacts_dir()).unwrap();
     let orch = Orchestrator::new(rt);
     let job = mini_job("fedavg");
-    let a = orch.run(&job).unwrap();
-    let b = orch.run(&job).unwrap();
+    let a = orch.run(&job, RunOptions::default()).unwrap();
+    let b = orch.run(&job, RunOptions::default()).unwrap();
     for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
         assert_eq!(ra.model_hash, rb.model_hash, "round {}", ra.round);
         assert_eq!(ra.test_accuracy, rb.test_accuracy);
@@ -76,8 +76,8 @@ fn different_seed_changes_trajectory() {
     let mut j2 = mini_job("fedavg");
     j1.seed = 1;
     j2.seed = 2;
-    let a = orch.run(&j1).unwrap();
-    let b = orch.run(&j2).unwrap();
+    let a = orch.run(&j1, RunOptions::default()).unwrap();
+    let b = orch.run(&j2, RunOptions::default()).unwrap();
     assert_ne!(a.rounds[0].model_hash, b.rounds[0].model_hash);
 }
 
@@ -105,11 +105,11 @@ fn multi_worker_consensus_defeats_malicious_worker() {
     job.dataset.n = 1200;
     job.n_workers = 3;
     job.consensus.malicious_workers = vec!["worker_0".into()];
-    let poisoned_guarded = orch.run(&job).unwrap();
+    let poisoned_guarded = orch.run(&job, RunOptions::default()).unwrap();
 
     let mut solo = job.clone();
     solo.n_workers = 1; // the only worker is malicious -> training destroyed
-    let destroyed = orch.run(&solo).unwrap();
+    let destroyed = orch.run(&solo, RunOptions::default()).unwrap();
 
     assert!(
         poisoned_guarded.final_accuracy() > destroyed.final_accuracy(),
@@ -128,7 +128,7 @@ fn hierarchical_topology_runs_and_costs_more_bandwidth() {
     let mut job = mini_job("fedavg");
     job.topology = TopologyKind::Hierarchical;
     job.n_workers = 3;
-    let hier = orch.run(&job).unwrap();
+    let hier = orch.run(&job, RunOptions::default()).unwrap();
     assert_eq!(hier.rounds.len(), 2);
     assert!(hier.total_net_bytes() > flat.total_net_bytes());
 }
@@ -139,11 +139,11 @@ fn decentralized_flow_runs_with_ring_and_mesh() {
     let orch = Orchestrator::new(rt);
     let mut mesh = mini_job("fedstellar");
     mesh.n_clients = 5;
-    let mesh_report = orch.run(&mesh).unwrap();
+    let mesh_report = orch.run(&mesh, RunOptions::default()).unwrap();
 
     let mut ring = mesh.clone();
     ring.topology = TopologyKind::Ring;
-    let ring_report = orch.run(&ring).unwrap();
+    let ring_report = orch.run(&ring, RunOptions::default()).unwrap();
     assert!(mesh_report.total_net_bytes() > ring_report.total_net_bytes());
 }
 
@@ -152,7 +152,7 @@ fn decentralized_strategy_rejects_star_topology() {
     let rt = Runtime::shared(artifacts_dir()).unwrap();
     let mut job = mini_job("fedstellar");
     job.topology = TopologyKind::ClientServer;
-    assert!(Orchestrator::new(rt).run(&job).is_err());
+    assert!(Orchestrator::new(rt).run(&job, RunOptions::default()).is_err());
 }
 
 #[test]
@@ -164,7 +164,7 @@ fn fault_injection_survives_client_drop() {
     let faults = FaultPlan::none()
         .drop_in_round("client_2", 2)
         .crash_from("client_7", 3);
-    let report = orch.run_with_faults(&job, faults).unwrap();
+    let report = orch.run(&job, RunOptions::default().faults(faults)).unwrap();
     assert_eq!(report.rounds.len(), 3);
 }
 
@@ -182,7 +182,7 @@ fn bcfl_on_chain_consensus_roundtrip() {
         let report = Orchestrator::new(
             Runtime::shared(artifacts_dir()).unwrap(),
         )
-        .run(&job)
+        .run(&job, RunOptions::default())
         .unwrap();
         assert_eq!(report.rounds.len(), 2, "{platform}");
         let _ = &orch;
@@ -197,7 +197,7 @@ fn library_agnostic_backends_run_same_job() {
         let mut job = mini_job("fedavg");
         job.backend = backend.into();
         job.rounds = 1;
-        let report = orch.run(&job).unwrap();
+        let report = orch.run(&job, RunOptions::default()).unwrap();
         assert_eq!(report.rounds.len(), 1, "{backend}");
     }
     // logreg with the MNIST-shaped dataset.
@@ -205,7 +205,7 @@ fn library_agnostic_backends_run_same_job() {
     job.backend = "logreg".into();
     job.dataset = DatasetSpec::mnist_iid(600);
     job.rounds = 1;
-    let report = orch.run(&job).unwrap();
+    let report = orch.run(&job, RunOptions::default()).unwrap();
     assert_eq!(report.rounds.len(), 1);
 }
 
@@ -215,7 +215,7 @@ fn strategy_missing_artifact_fails_cleanly() {
     // mlp has no moon artifact — must error with a helpful message, not panic.
     let mut job = mini_job("moon");
     job.backend = "mlp".into();
-    let err = Orchestrator::new(rt).run(&job).unwrap_err().to_string();
+    let err = Orchestrator::new(rt).run(&job, RunOptions::default()).unwrap_err().to_string();
     assert!(err.contains("moon"), "unhelpful error: {err}");
 }
 
@@ -235,7 +235,7 @@ topology: {kind: client_server, clients: 4, workers: 1}
 "#;
     let job = JobConfig::from_yaml_str(yaml).unwrap();
     let rt = Runtime::shared(artifacts_dir()).unwrap();
-    let report = Orchestrator::new(rt).run(&job).unwrap();
+    let report = Orchestrator::new(rt).run(&job, RunOptions::default()).unwrap();
     assert_eq!(report.rounds.len(), 2);
     assert_eq!(report.n_clients, 4);
 }
@@ -253,8 +253,8 @@ fn hw_profiles_reproduce_within_and_drift_across() {
     for order in ReductionOrder::ALL {
         let mut j = base.clone();
         j.hw_profile = order;
-        let a = orch.run(&j).unwrap();
-        let b = orch.run(&j).unwrap();
+        let a = orch.run(&j, RunOptions::default()).unwrap();
+        let b = orch.run(&j, RunOptions::default()).unwrap();
         assert_eq!(
             a.rounds.last().unwrap().model_hash,
             b.rounds.last().unwrap().model_hash,

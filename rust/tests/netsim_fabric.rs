@@ -14,7 +14,7 @@ use flsim::config::job::JobConfig;
 use flsim::controller::sync::FaultPlan;
 use flsim::kvstore::netsim::LinkModel;
 use flsim::metrics::report::RunReport;
-use flsim::orchestrator::{run_standard_round, JobState, Orchestrator};
+use flsim::orchestrator::{run_standard_round, JobState, Orchestrator, RunOptions};
 use flsim::runtime::pjrt::Runtime;
 use flsim::topology::TopologyKind;
 
@@ -39,7 +39,7 @@ fn fig11e_topology_transfer_time_ordering() {
     let mut hier_job = mini("fedavg");
     hier_job.topology = TopologyKind::Hierarchical;
     hier_job.n_workers = 3;
-    let hier = orch.run(&hier_job).unwrap();
+    let hier = orch.run(&hier_job, RunOptions::default()).unwrap();
 
     let fc = orch.run(&mini("fedstellar")).unwrap();
 
@@ -78,7 +78,7 @@ fn virtual_clock_is_observational_without_a_deadline() {
         latency_ms: 500.0,
         bandwidth_mbps: 0.25,
     };
-    let fabric = orch.run(&fabric_job).unwrap();
+    let fabric = orch.run(&fabric_job, RunOptions::default()).unwrap();
 
     assert_eq!(plain.rounds.len(), fabric.rounds.len());
     for (a, b) in plain.rounds.iter().zip(&fabric.rounds) {
@@ -152,12 +152,15 @@ fn deadline_straggler_drop_matches_fault_plan_drop() {
     // Emergent drop: the deadline cuts the straggler every round.
     let mut deadline_job = base.clone();
     deadline_job.round_deadline_secs = Some(deadline);
-    let emergent = Orchestrator::new(rt()).run(&deadline_job).unwrap();
+    let emergent = Orchestrator::new(rt()).run(&deadline_job, RunOptions::default()).unwrap();
 
     // Scripted drop: the equivalent FaultPlan crash (same client, every
     // round). The surviving quorum must produce identical training metrics.
     let scripted: RunReport = Orchestrator::new(rt())
-        .run_with_faults(&base, FaultPlan::none().crash_from(&straggler, 1))
+        .run(
+            &base,
+            RunOptions::default().faults(FaultPlan::none().crash_from(&straggler, 1)),
+        )
         .unwrap();
 
     assert_eq!(emergent.rounds.len(), scripted.rounds.len());

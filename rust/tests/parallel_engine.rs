@@ -7,7 +7,7 @@
 use flsim::config::job::JobConfig;
 use flsim::controller::sync::FaultPlan;
 use flsim::metrics::report::RunReport;
-use flsim::orchestrator::{JobState, Orchestrator};
+use flsim::orchestrator::{JobState, Orchestrator, RunOptions};
 use flsim::runtime::pjrt::Runtime;
 use flsim::topology::TopologyKind;
 
@@ -15,7 +15,7 @@ fn run_at(parallelism: usize, base: &JobConfig) -> RunReport {
     let mut job = base.clone();
     job.parallelism = parallelism;
     let rt = Runtime::shared("artifacts").unwrap();
-    Orchestrator::new(rt).run(&job).unwrap()
+    Orchestrator::new(rt).run(&job, RunOptions::default()).unwrap()
 }
 
 fn assert_bitwise_equal(a: &RunReport, b: &RunReport, label: &str) {
@@ -118,11 +118,13 @@ fn parallel_equals_sequential_under_sampling_and_faults() {
     let mut j1 = base.clone();
     j1.parallelism = 1;
     let seq = Orchestrator::new(rt.clone())
-        .run_with_faults(&j1, faults())
+        .run(&j1, RunOptions::default().faults(faults()))
         .unwrap();
     let mut j4 = base.clone();
     j4.parallelism = 4;
-    let par = Orchestrator::new(rt).run_with_faults(&j4, faults()).unwrap();
+    let par = Orchestrator::new(rt)
+        .run(&j4, RunOptions::default().faults(faults()))
+        .unwrap();
     assert_bitwise_equal(&seq, &par, "sampling+faults");
 }
 

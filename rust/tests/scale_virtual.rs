@@ -7,7 +7,7 @@
 
 use flsim::config::job::{JobConfig, PopulationMode};
 use flsim::metrics::resources;
-use flsim::orchestrator::Orchestrator;
+use flsim::orchestrator::{Orchestrator, RunOptions};
 use flsim::runtime::pjrt::Runtime;
 
 fn scale_job(n_clients: usize, cohort: usize) -> JobConfig {
@@ -25,7 +25,7 @@ fn hundred_k_clients_run_in_bounded_memory() {
     let rt = Runtime::shared("artifacts").unwrap();
     let job = scale_job(100_000, 16);
     let before = resources::rss_bytes();
-    let report = Orchestrator::new(rt).run(&job).unwrap();
+    let report = Orchestrator::new(rt).run(&job, RunOptions::default()).unwrap();
     let delta = resources::rss_bytes().saturating_sub(before);
 
     assert_eq!(report.n_clients, 100_000);
@@ -51,7 +51,7 @@ fn one_million_clients_smoke() {
     let rt = Runtime::shared("artifacts").unwrap();
     let job = scale_job(1_000_000, 16);
     let before = resources::rss_bytes();
-    let report = Orchestrator::new(rt).run(&job).unwrap();
+    let report = Orchestrator::new(rt).run(&job, RunOptions::default()).unwrap();
     let delta = resources::rss_bytes().saturating_sub(before);
 
     assert_eq!(report.n_clients, 1_000_000);
@@ -72,8 +72,8 @@ fn one_million_clients_smoke() {
 fn scale_run_is_reproducible() {
     let rt = Runtime::shared("artifacts").unwrap();
     let job = scale_job(100_000, 8);
-    let a = Orchestrator::new(rt.clone()).run(&job).unwrap();
-    let b = Orchestrator::new(rt).run(&job).unwrap();
+    let a = Orchestrator::new(rt.clone()).run(&job, RunOptions::default()).unwrap();
+    let b = Orchestrator::new(rt).run(&job, RunOptions::default()).unwrap();
     for (x, y) in a.rounds.iter().zip(&b.rounds) {
         assert_eq!(x.model_hash, y.model_hash);
         assert_eq!(x.net_bytes, y.net_bytes);

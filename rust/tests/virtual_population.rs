@@ -12,7 +12,7 @@ use flsim::config::job::{JobConfig, PopulationMode};
 use flsim::config::{AttackKind, ChurnConfig};
 use flsim::controller::sync::FaultPlan;
 use flsim::metrics::report::RunReport;
-use flsim::orchestrator::{JobState, Orchestrator};
+use flsim::orchestrator::{JobState, Orchestrator, RunOptions};
 use flsim::runtime::pjrt::Runtime;
 
 fn rt() -> Arc<Runtime> {
@@ -55,9 +55,9 @@ fn assert_reports_identical(eager: &RunReport, virt: &RunReport, tag: &str) {
 
 fn run_both_modes(mut job: JobConfig, tag: &str) {
     job.population = PopulationMode::Eager;
-    let eager = Orchestrator::new(rt()).run(&job).unwrap();
+    let eager = Orchestrator::new(rt()).run(&job, RunOptions::default()).unwrap();
     job.population = PopulationMode::Virtual;
-    let virt = Orchestrator::new(rt()).run(&job).unwrap();
+    let virt = Orchestrator::new(rt()).run(&job, RunOptions::default()).unwrap();
     assert_reports_identical(&eager, &virt, tag);
 }
 
@@ -95,7 +95,7 @@ fn virtual_run_is_parallelism_invariant() {
         job.name = format!("virt_par{par}");
         job.population = PopulationMode::Virtual;
         job.parallelism = par;
-        let report = Orchestrator::new(rt()).run(&job).unwrap();
+        let report = Orchestrator::new(rt()).run(&job, RunOptions::default()).unwrap();
         match &golden {
             None => golden = Some(report),
             Some(g) => assert_reports_identical(g, &report, "parallelism"),
@@ -182,12 +182,12 @@ fn eviction_keeps_stateful_clients_resident() {
     job.population = PopulationMode::Virtual;
     job.client_fraction = 1.0;
     job.rounds = 2;
-    let report = Orchestrator::new(rt()).run(&job).unwrap();
+    let report = Orchestrator::new(rt()).run(&job, RunOptions::default()).unwrap();
     assert_eq!(report.rounds.len(), 2);
 
     // And the eager twin agrees bitwise even though its fleet never evicts.
     job.population = PopulationMode::Eager;
-    let eager = Orchestrator::new(rt()).run(&job).unwrap();
+    let eager = Orchestrator::new(rt()).run(&job, RunOptions::default()).unwrap();
     assert_reports_identical(&eager, &report, "scaffold strategy");
 }
 
