@@ -69,6 +69,67 @@ fn main() {
         }
     }
 
+    // SIMD-blocked inner kernels (aggregate::kernel): the fixed-width
+    // blocked loops every reduction order now runs on. Tracked ns/op so a
+    // codegen regression (lost vectorization) shows up as a gate failure.
+    {
+        use flsim::aggregate::kernel::{axpy, kahan_axpy, scale};
+        use flsim::aggregate::mean::StreamingMean;
+        let x = &models[0];
+        let mut out = vec![0f32; dim];
+        let r = bench(&format!("agg_kernel/axpy/{dim}"), 3, 50, || {
+            axpy(&mut out, 0.1, x);
+            std::hint::black_box(&out);
+        });
+        suite.push(&r);
+        let r = bench(&format!("agg_kernel/scale/{dim}"), 3, 50, || {
+            scale(&mut out, 0.1, x);
+            std::hint::black_box(&out);
+        });
+        suite.push(&r);
+        let mut comp = vec![0f32; dim];
+        let r = bench(&format!("agg_kernel/kahan_axpy/{dim}"), 3, 50, || {
+            kahan_axpy(&mut out, &mut comp, 0.1, x);
+            std::hint::black_box(&out);
+        });
+        suite.push(&r);
+        let r = bench(&format!("agg_kernel/streaming_push/10x{dim}"), 3, 20, || {
+            let mut sm =
+                StreamingMean::new(dim, refs.len() as f64, ReductionOrder::PairwiseTree).unwrap();
+            for m in &refs {
+                sm.push(m, 1.0).unwrap();
+            }
+            std::hint::black_box(sm.finish().unwrap());
+        });
+        suite.push(&r);
+    }
+
+    // Round-buffer arena: steady-state store() (pool hit, copy into a
+    // recycled buffer) vs the pass-through alloc path — plus the reuse
+    // fraction over the bench itself, printed for the log.
+    {
+        use flsim::kvstore::arena::RoundArena;
+        let src = &models[0];
+        let arena = RoundArena::new();
+        let r = bench(&format!("arena/store_pooled/{dim}"), 3, 50, || {
+            std::hint::black_box(arena.store(src));
+        });
+        suite.push(&r);
+        let off = RoundArena::disabled();
+        let r = bench(&format!("arena/store_alloc/{dim}"), 3, 50, || {
+            std::hint::black_box(off.store(src));
+        });
+        suite.push(&r);
+        let s = arena.stats();
+        println!(
+            "arena reuse: {} reused / {} allocated ({:.1}% pool hits)",
+            s.reused,
+            s.allocated,
+            100.0 * s.reused as f64 / (s.reused + s.allocated).max(1) as f64
+        );
+        assert!(s.reused > 0, "arena never recycled a buffer in the bench loop");
+    }
+
     let r = bench("hash_params/72986", 3, 20, || {
         std::hint::black_box(hash::hash_params(&models[0]));
     });

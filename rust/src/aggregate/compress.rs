@@ -77,13 +77,23 @@ pub fn top_k(delta: &[f32], k: usize) -> CompressedUpdate {
         };
     }
     let mut idx: Vec<u32> = (0..delta.len() as u32).collect();
-    // Partial selection by magnitude.
+    // Partial selection by magnitude, via `total_cmp` so the order stays
+    // total (no `partial_cmp(..).unwrap()` abort) when an adversarial or
+    // diverged client uploads NaN/±inf. NaN magnitudes rank strictly last
+    // (mapped below every finite and infinite magnitude), so NaN
+    // coordinates are only kept once every non-NaN coordinate is; ties
+    // break on the lower index, making the selection fully deterministic.
+    let magnitude = |i: u32| {
+        let v = delta[i as usize];
+        if v.is_nan() {
+            f32::NEG_INFINITY
+        } else {
+            v.abs()
+        }
+    };
     let nth = (k - 1).min(delta.len() - 1);
     idx.select_nth_unstable_by(nth, |&a, &b| {
-        delta[b as usize]
-            .abs()
-            .partial_cmp(&delta[a as usize].abs())
-            .unwrap()
+        magnitude(b).total_cmp(&magnitude(a)).then(a.cmp(&b))
     });
     let mut entries: Vec<(u32, f32)> =
         idx[..k].iter().map(|&i| (i, delta[i as usize])).collect();
@@ -98,6 +108,18 @@ pub fn top_k(delta: &[f32], k: usize) -> CompressedUpdate {
 pub fn quantize(delta: &[f32], bits: u8, rng: &mut Rng) -> Result<CompressedUpdate> {
     if !(1..=16).contains(&bits) {
         bail!("quantize: bits {bits} out of [1, 16]");
+    }
+    if delta.is_empty() {
+        // Without this guard the min/max folds below leak their identities
+        // (`min = +inf, max = −inf`) into the struct. Canonical empty
+        // encoding instead, mirroring `top_k`'s empty-delta guard.
+        return Ok(CompressedUpdate::Quantized {
+            dim: 0,
+            bits,
+            min: 0.0,
+            max: 0.0,
+            codes: Vec::new(),
+        });
     }
     if let Some(pos) = delta.iter().position(|v| !v.is_finite()) {
         // NaN/±inf would poison min/max and turn every code into garbage.
@@ -216,6 +238,60 @@ mod tests {
         let c = top_k(&d, 0);
         assert_eq!(c.decompress(), vec![0f32; 10]);
         assert!(matches!(&c, CompressedUpdate::TopK { dim: 10, entries } if entries.is_empty()));
+    }
+
+    #[test]
+    fn topk_non_finite_deltas_select_deterministically() {
+        // Regression: the old `partial_cmp(..).unwrap()` comparator aborted
+        // the whole run on the first NaN an adversarial client uploaded.
+        let mut d = vec![0.001f32; 64];
+        d[3] = f32::NAN;
+        d[9] = f32::INFINITY;
+        d[17] = f32::NEG_INFINITY;
+        d[30] = -7.0;
+        let c = top_k(&d, 3);
+        let CompressedUpdate::TopK { dim, entries } = &c else {
+            panic!("top_k must return TopK");
+        };
+        assert_eq!(*dim, 64);
+        // ±inf outrank every finite magnitude; NaN ranks last and is never
+        // selected while any non-NaN coordinate remains.
+        let kept: Vec<u32> = entries.iter().map(|&(i, _)| i).collect();
+        assert_eq!(kept, vec![9, 17, 30]);
+        assert_eq!(top_k(&d, 3), c, "selection must be deterministic");
+        // k large enough to exhaust non-NaN coordinates keeps the NaN too
+        // (decompress reproduces it in place) — still no panic.
+        let full = top_k(&d, 64);
+        let back = full.decompress();
+        assert!(back[3].is_nan());
+        assert_eq!(back[9], f32::INFINITY);
+        // All-NaN delta: the degenerate worst case, selection still total.
+        let all_nan = vec![f32::NAN; 8];
+        let c = top_k(&all_nan, 2);
+        assert!(c.decompress().iter().take(2).all(|v| v.is_nan()));
+    }
+
+    #[test]
+    fn quantize_empty_delta_round_trips_canonically() {
+        // Regression: the min/max fold identities (`+inf` / `−inf`)
+        // survived into the struct for an empty delta.
+        let mut rng = Rng::seed_from(0);
+        let c = quantize(&[], 8, &mut rng).unwrap();
+        let CompressedUpdate::Quantized {
+            dim,
+            bits,
+            min,
+            max,
+            codes,
+        } = &c
+        else {
+            panic!("quantize must return Quantized");
+        };
+        assert_eq!((*dim, *bits), (0, 8));
+        assert_eq!((*min, *max), (0.0, 0.0), "canonical empty encoding");
+        assert!(codes.is_empty());
+        assert_eq!(c.decompress(), Vec::<f32>::new());
+        assert_eq!(c.wire_bytes(), 64 + 12);
     }
 
     #[test]

@@ -1,0 +1,183 @@
+//! SIMD-friendly blocked elementwise kernels for the aggregation hot path.
+//!
+//! Every kernel here is a *map* over the element axis: output element `j`
+//! depends only on the inputs at index `j`, and the per-element operation
+//! sequence is exactly the scalar loop it replaced. Restructuring the loop
+//! into fixed-width [`LANES`]-element blocks (with a scalar tail) therefore
+//! cannot change a single bit of the result — the same IEEE-754 ops run on
+//! the same operands in the same per-element order; only the *iteration
+//! grouping* changes, which is what lets LLVM's auto-vectorizer emit one
+//! f32x8-style SIMD op per block instead of eight scalar ops.
+//!
+//! The reduction *across models* — the bit-exactness contract behind
+//! `ReductionOrder` (the paper's Tables 1–2 hardware profiles) — lives
+//! entirely in `mean.rs`'s call order. These kernels never reduce across the
+//! element axis, so they are safe under every profile, including Kahan
+//! (Rust never contracts `a * b + c` into an FMA or reassociates floats, so
+//! the compensation algebra survives verbatim in each lane).
+//!
+//! `chunks_exact(LANES)` is the whole trick: the compiler sees a
+//! constant-length body with no bounds checks and no cross-iteration
+//! dependence, which is the exact shape the SLP/loop vectorizers look for.
+//! Bitwise equality against the scalar forms is pinned by the property
+//! tests in `tests/agg_kernels.rs` at tail dims (`dim % LANES != 0`).
+
+/// Fixed SIMD block width: 8 × f32 = one AVX2 register (two NEON
+/// registers) — the widest unit every tier-1 target auto-vectorizes.
+pub const LANES: usize = 8;
+
+/// `out[j] += a * x[j]` — the weighted-accumulate at the core of
+/// `Sequential` / `Reversed` aggregation and `StreamingMean::push`.
+#[inline]
+pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let n = out.len() - out.len() % LANES;
+    for (o, v) in out[..n].chunks_exact_mut(LANES).zip(x[..n].chunks_exact(LANES)) {
+        for j in 0..LANES {
+            o[j] += a * v[j];
+        }
+    }
+    for (o, &v) in out[n..].iter_mut().zip(&x[n..]) {
+        *o += a * v;
+    }
+}
+
+/// `out[j] = a * x[j]` — the weighted leaf of the pairwise tree (both the
+/// top-down recursion and the streaming binary counter).
+#[inline]
+pub fn scale(out: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let n = out.len() - out.len() % LANES;
+    for (o, v) in out[..n].chunks_exact_mut(LANES).zip(x[..n].chunks_exact(LANES)) {
+        for j in 0..LANES {
+            o[j] = a * v[j];
+        }
+    }
+    for (o, &v) in out[n..].iter_mut().zip(&x[n..]) {
+        *o = a * v;
+    }
+}
+
+/// `out[j] += x[j]` — the pairwise-tree merge (recursive and carry-style).
+#[inline]
+pub fn add_assign(out: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let n = out.len() - out.len() % LANES;
+    for (o, v) in out[..n].chunks_exact_mut(LANES).zip(x[..n].chunks_exact(LANES)) {
+        for j in 0..LANES {
+            o[j] += v[j];
+        }
+    }
+    for (o, &v) in out[n..].iter_mut().zip(&x[n..]) {
+        *o += v;
+    }
+}
+
+/// One blocked Kahan-compensated accumulate:
+/// `y = a·x[j] − comp[j]; t = acc[j] + y; comp[j] = (t − acc[j]) − y;
+/// acc[j] = t` — the exact scalar compensation algebra, per lane.
+#[inline]
+pub fn kahan_axpy(acc: &mut [f32], comp: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    debug_assert_eq!(acc.len(), comp.len());
+    let n = acc.len() - acc.len() % LANES;
+    for ((ac, cc), xc) in acc[..n]
+        .chunks_exact_mut(LANES)
+        .zip(comp[..n].chunks_exact_mut(LANES))
+        .zip(x[..n].chunks_exact(LANES))
+    {
+        for j in 0..LANES {
+            let y = a * xc[j] - cc[j];
+            let t = ac[j] + y;
+            cc[j] = (t - ac[j]) - y;
+            ac[j] = t;
+        }
+    }
+    for j in n..acc.len() {
+        let y = a * x[j] - comp[j];
+        let t = acc[j] + y;
+        comp[j] = (t - acc[j]) - y;
+        acc[j] = t;
+    }
+}
+
+/// `out[j] = w[j] − a·g[j]` — the SGD weight update of the reference
+/// engine's train steps (per batch, per client, per round on the fallback
+/// backend).
+#[inline]
+pub fn sub_scaled_into(out: &mut [f32], w: &[f32], a: f32, g: &[f32]) {
+    debug_assert_eq!(out.len(), w.len());
+    debug_assert_eq!(out.len(), g.len());
+    let n = out.len() - out.len() % LANES;
+    for ((o, wc), gc) in out[..n]
+        .chunks_exact_mut(LANES)
+        .zip(w[..n].chunks_exact(LANES))
+        .zip(g[..n].chunks_exact(LANES))
+    {
+        for j in 0..LANES {
+            o[j] = wc[j] - a * gc[j];
+        }
+    }
+    for j in n..out.len() {
+        out[j] = w[j] - a * g[j];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vals(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = crate::util::rng::Rng::seed_from(seed);
+        (0..n).map(|_| rng.normal_f32() * 3.0).collect()
+    }
+
+    /// Every kernel vs its scalar form, at dims exercising empty, sub-block,
+    /// exact-block and tail shapes. `assert_eq!` on f32 slices is bitwise
+    /// (no NaNs generated here), which is the whole contract.
+    #[test]
+    fn blocked_kernels_match_scalar_forms_bitwise() {
+        for dim in [0usize, 1, 3, 7, 8, 9, 16, 23, 64, 127, 1000] {
+            let x = vals(dim as u64 + 1, dim);
+            let base = vals(dim as u64 + 1000, dim);
+            let a = 0.37f32;
+
+            let mut blocked = base.clone();
+            axpy(&mut blocked, a, &x);
+            let mut scalar = base.clone();
+            for (o, &v) in scalar.iter_mut().zip(&x) {
+                *o += a * v;
+            }
+            assert_eq!(blocked, scalar, "axpy dim={dim}");
+
+            let mut blocked = base.clone();
+            scale(&mut blocked, a, &x);
+            let scalar: Vec<f32> = x.iter().map(|&v| a * v).collect();
+            assert_eq!(blocked, scalar, "scale dim={dim}");
+
+            let mut blocked = base.clone();
+            add_assign(&mut blocked, &x);
+            let scalar: Vec<f32> = base.iter().zip(&x).map(|(&b, &v)| b + v).collect();
+            assert_eq!(blocked, scalar, "add_assign dim={dim}");
+
+            let mut acc_b = base.clone();
+            let mut comp_b = vals(dim as u64 + 2000, dim);
+            let mut acc_s = acc_b.clone();
+            let mut comp_s = comp_b.clone();
+            kahan_axpy(&mut acc_b, &mut comp_b, a, &x);
+            for j in 0..dim {
+                let y = a * x[j] - comp_s[j];
+                let t = acc_s[j] + y;
+                comp_s[j] = (t - acc_s[j]) - y;
+                acc_s[j] = t;
+            }
+            assert_eq!(acc_b, acc_s, "kahan acc dim={dim}");
+            assert_eq!(comp_b, comp_s, "kahan comp dim={dim}");
+
+            let mut blocked = vec![0f32; dim];
+            sub_scaled_into(&mut blocked, &base, a, &x);
+            let scalar: Vec<f32> = base.iter().zip(&x).map(|(&w, &g)| w - a * g).collect();
+            assert_eq!(blocked, scalar, "sub_scaled_into dim={dim}");
+        }
+    }
+}

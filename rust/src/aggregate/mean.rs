@@ -24,8 +24,16 @@
 //! The pairwise tree is reduced with a chunked recursion over `O(log n)`
 //! bounded scratch buffers instead of the previous one-`Vec`-per-leaf
 //! construction (which allocated `n_models × dim` floats per call).
+//!
+//! The inner element loops (`axpy`, the Kahan compensation, the pairwise
+//! leaf/merge) are the SIMD-blocked kernels of [`super::kernel`]: fixed
+//! 8-lane blocks plus a scalar tail. Blocking the *element* axis never
+//! touches the per-element operation order, so each profile's bit pattern
+//! is unchanged (pinned by the goldens below and `tests/agg_kernels.rs`).
 
 use anyhow::{bail, Result};
+
+use super::kernel::{add_assign, axpy, kahan_axpy, scale};
 
 /// Floating-point reduction order = simulated hardware profile.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -214,13 +222,7 @@ fn fill_chunk(
             scratch.clear();
             scratch.resize(len, 0.0);
             for (p, &wi) in params.iter().zip(w) {
-                let pc = &p[lo..lo + len];
-                for j in 0..len {
-                    let y = wi * pc[j] - scratch[j];
-                    let t = out[j] + y;
-                    scratch[j] = (t - out[j]) - y;
-                    out[j] = t;
-                }
+                kahan_axpy(out, scratch, wi, &p[lo..lo + len]);
             }
         }
         ReductionOrder::PairwiseTree => {
@@ -235,13 +237,6 @@ fn fill_chunk(
             scratch.resize(depth * len, 0.0);
             pairwise_into(params, w, 0, n, lo, out, scratch);
         }
-    }
-}
-
-#[inline]
-fn axpy(out: &mut [f32], wi: f32, p: &[f32]) {
-    for (o, &v) in out.iter_mut().zip(p) {
-        *o += wi * v;
     }
 }
 
@@ -261,20 +256,14 @@ fn pairwise_into(
     let n = mhi - mlo;
     let len = out.len();
     if n == 1 {
-        let p = &params[mlo][lo..lo + len];
-        let wi = w[mlo];
-        for (o, &v) in out.iter_mut().zip(p) {
-            *o = wi * v;
-        }
+        scale(out, w[mlo], &params[mlo][lo..lo + len]);
         return;
     }
     let split = 1usize << (n - 1).ilog2();
     let (tmp, rest) = scratch.split_at_mut(len);
     pairwise_into(params, w, mlo, mlo + split, lo, out, rest);
     pairwise_into(params, w, mlo + split, mhi, lo, tmp, rest);
-    for (o, &t) in out.iter_mut().zip(tmp.iter()) {
-        *o += t;
-    }
+    add_assign(out, tmp);
 }
 
 /// Online weighted-mean accumulator: folds one client model at a time in
@@ -313,6 +302,10 @@ pub struct StreamingMean {
     /// where a level-`l` partial covers `2^l` consecutive models. Levels are
     /// strictly decreasing bottom-to-top.
     stack: Vec<(u32, Vec<f32>)>,
+    /// Leaf buffers freed by carry merges, recycled by later pushes — the
+    /// pairwise fold allocates O(log n) buffers total instead of one per
+    /// model.
+    free: Vec<Vec<f32>>,
     /// Collected `(model, weight)` pairs for the `Reversed` fallback.
     collected: Vec<(Vec<f32>, f64)>,
 }
@@ -340,6 +333,7 @@ impl StreamingMean {
                 _ => Vec::new(),
             },
             stack: Vec::new(),
+            free: Vec::new(),
             collected: Vec::new(),
         })
     }
@@ -359,17 +353,15 @@ impl StreamingMean {
         self.count += 1;
         match self.order {
             ReductionOrder::Sequential => axpy(&mut self.acc, wi, params),
-            ReductionOrder::Kahan => {
-                for j in 0..self.dim {
-                    let y = wi * params[j] - self.comp[j];
-                    let t = self.acc[j] + y;
-                    self.comp[j] = (t - self.acc[j]) - y;
-                    self.acc[j] = t;
-                }
-            }
+            ReductionOrder::Kahan => kahan_axpy(&mut self.acc, &mut self.comp, wi, params),
             ReductionOrder::PairwiseTree => {
-                // Leaf: exactly `pairwise_into`'s n == 1 case (`wi * v`).
-                let leaf: Vec<f32> = params.iter().map(|&v| wi * v).collect();
+                // Leaf: exactly `pairwise_into`'s n == 1 case (`wi * v`),
+                // written into a recycled buffer when a merge freed one.
+                let mut leaf = self
+                    .free
+                    .pop()
+                    .unwrap_or_else(|| vec![0f32; self.dim]);
+                scale(&mut leaf, wi, params);
                 self.stack.push((0, leaf));
                 // Carry: merge equal-level partials, older (left) + newer.
                 while self.stack.len() >= 2
@@ -377,10 +369,9 @@ impl StreamingMean {
                 {
                     let (_, newer) = self.stack.pop().unwrap();
                     let (level, older) = self.stack.last_mut().unwrap();
-                    for (o, &t) in older.iter_mut().zip(&newer) {
-                        *o += t;
-                    }
+                    add_assign(older, &newer);
                     *level += 1;
+                    self.free.push(newer);
                 }
             }
             ReductionOrder::Reversed => self.collected.push((params.to_vec(), weight)),
@@ -408,9 +399,7 @@ impl StreamingMean {
                 // adds its right-hand suffixes.
                 let (_, mut running) = self.stack.pop().expect("count > 0 implies partials");
                 while let Some((_, mut older)) = self.stack.pop() {
-                    for (o, &t) in older.iter_mut().zip(&running) {
-                        *o += t;
-                    }
+                    add_assign(&mut older, &running);
                     running = older;
                 }
                 Ok(running)

@@ -5,6 +5,7 @@
 
 pub mod cluster;
 pub mod compress;
+pub mod kernel;
 pub mod mean;
 pub mod robust;
 pub mod server_opt;

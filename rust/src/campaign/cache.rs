@@ -82,8 +82,7 @@ pub fn cell_key(job: &JobConfig) -> String {
 
 /// One cell execution's result, ready to commit: the report plus its
 /// provenance and (for rung-stopped cells) the resumable model state.
-/// Replaces the old `put`/`put_partial` positional signatures — build with
-/// [`CellOutcome::new`] and chain the optional fields:
+/// Build with [`CellOutcome::new`] and chain the optional fields:
 ///
 /// ```ignore
 /// store.commit(&key, CellOutcome::new(&job, &report)
@@ -311,40 +310,6 @@ impl ResultStore {
         }
         self.clear_failure(key);
         Ok(true)
-    }
-
-    /// Deprecated positional write path; use [`ResultStore::commit`].
-    #[deprecated(note = "use ResultStore::commit(key, CellOutcome::new(job, report)...)")]
-    pub fn put(
-        &self,
-        key: &str,
-        cell: &str,
-        campaign: &str,
-        job: &JobConfig,
-        report: &RunReport,
-    ) -> Result<()> {
-        self.commit(
-            key,
-            CellOutcome::new(job, report).cell(cell).campaign(campaign),
-        )?;
-        Ok(())
-    }
-
-    /// Deprecated positional write path; use [`ResultStore::commit`] (a
-    /// `stopped_early` report is deepen-only automatically).
-    #[deprecated(note = "use ResultStore::commit(key, CellOutcome::new(job, report)...)")]
-    pub fn put_partial(
-        &self,
-        key: &str,
-        cell: &str,
-        campaign: &str,
-        job: &JobConfig,
-        report: &RunReport,
-    ) -> Result<bool> {
-        self.commit(
-            key,
-            CellOutcome::new(job, report).cell(cell).campaign(campaign),
-        )
     }
 
     /// Persist a checkpoint blob (atomic sidecar write). Normally called
@@ -709,23 +674,6 @@ mod tests {
         assert_eq!(back.to_json().to_string(), report().to_json().to_string());
         // Content-addressed layout: two-char shard prefix.
         assert!(store.path_of(&key).starts_with(dir.join(&key[..2])));
-        std::fs::remove_dir_all(&dir).unwrap();
-    }
-
-    #[test]
-    fn deprecated_put_shims_still_write() {
-        let (store, dir) = tmp_store("shims");
-        let job = JobConfig::default_cnn("fedavg");
-        let key = cell_key(&job);
-        #[allow(deprecated)]
-        {
-            assert!(store
-                .put_partial(&key, "c", "camp", &job, &report_of(1, true))
-                .unwrap());
-            store.put(&key, "c", "camp", &job, &report()).unwrap();
-        }
-        assert!(store.contains(&key));
-        assert_eq!(store.origin(&key).as_deref(), Some("camp"));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -160,6 +160,12 @@ pub struct JobConfig {
     /// `parallelism`, this knob is result-invariant and therefore excluded
     /// from [`JobConfig::canonical_json`].
     pub population: PopulationMode,
+    /// Round-buffer arena (`arena: false` to disable): recycle the
+    /// per-round `Arc<[f32]>` parameter allocations through
+    /// [`crate::kvstore::RoundArena`]. Purely an allocator knob — values
+    /// are copied bit-for-bit either way — so it is result-invariant and
+    /// excluded from [`JobConfig::canonical_json`] like `parallelism`.
+    pub arena: bool,
 }
 
 impl JobConfig {
@@ -198,6 +204,7 @@ impl JobConfig {
             channel: ChannelConfig::default(),
             parallelism: 1,
             population: PopulationMode::Eager,
+            arena: true,
             strategy,
         }
     }
@@ -361,6 +368,10 @@ impl JobConfig {
             Some(s) => PopulationMode::parse(&s)?,
             None => PopulationMode::Eager,
         };
+        let arena = job
+            .get("arena")
+            .and_then(Yaml::as_bool)
+            .unwrap_or(true);
 
         let cfg = JobConfig {
             name,
@@ -387,6 +398,7 @@ impl JobConfig {
             channel,
             parallelism,
             population,
+            arena,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -398,11 +410,11 @@ impl JobConfig {
     /// the config was constructed.
     ///
     /// Two deliberate choices about what the key covers:
-    /// * `parallelism` and `population` are **excluded**: by the determinism
-    ///   contract (README) any worker count — and either fleet
-    ///   materialization mode — produces bitwise-identical results, so a
-    ///   cached cell is valid at every parallelism level, campaign schedule,
-    ///   and population mode.
+    /// * `parallelism`, `population` and `arena` are **excluded**: by the
+    ///   determinism contract (README) any worker count, either fleet
+    ///   materialization mode, and either buffer-recycling mode produce
+    ///   bitwise-identical results, so a cached cell is valid at every
+    ///   parallelism level, campaign schedule, population and arena mode.
     /// * `name` is **included**: the stored [`RunReport`]'s label must match
     ///   the cell name for resumed campaign reports to be byte-identical,
     ///   so a renamed-but-otherwise-identical cell re-runs rather than
@@ -1055,6 +1067,11 @@ channel:
         let mut p8 = JobConfig::default_cnn("fedavg");
         p8.parallelism = 8;
         assert_eq!(a, p8.canonical_json().to_string());
+        // Same for the buffer-recycling knob: where bytes land is not a
+        // result property.
+        let mut no_arena = JobConfig::default_cnn("fedavg");
+        no_arena.arena = false;
+        assert_eq!(a, no_arena.canonical_json().to_string());
         // Every other knob does.
         let mut seeded = JobConfig::default_cnn("fedavg");
         seeded.seed = 43;

@@ -2,8 +2,10 @@
 //! nodes share model parameters and auxiliary state, plus the network
 //! simulator that prices every transfer for the bandwidth metrics.
 
+pub mod arena;
 pub mod netsim;
 pub mod store;
 
+pub use arena::{ArenaStats, RoundArena};
 pub use netsim::{LinkModel, LinkPolicy, NetSim, SIM_STEP_SECS};
 pub use store::{KvStore, Message, Payload};

@@ -50,6 +50,7 @@ use crate::config::adversary::AttackKind;
 use crate::config::channel::CompressKind;
 use crate::consensus::Proposal;
 use crate::controller::phases::{NodeStage, ProcessPhase};
+use crate::kvstore::arena::RoundArena;
 use crate::kvstore::store::Payload;
 use crate::metrics::report::RoundMetrics;
 use crate::metrics::resources;
@@ -207,6 +208,7 @@ fn collect_tasks<'a>(
 fn train_tasks(
     backend: &ModelBackend,
     strategy: &dyn Strategy,
+    arena: &RoundArena,
     extra_state: Option<&[f32]>,
     lr: f32,
     epochs: usize,
@@ -225,6 +227,7 @@ fn train_tasks(
             n_examples: t.node.n_examples,
             state: &mut t.node.state,
             rng: &mut t.rng,
+            arena,
         };
         strategy.client_train(&mut ctx)
     };
@@ -335,10 +338,12 @@ fn train_clients_to(
     let results = {
         let backend = &state.backend;
         let strategy: &dyn Strategy = state.strategy.as_ref();
+        let arena = &state.arena;
         let mut tasks = collect_tasks(&mut state.clients, names, starts, rngs)?;
         train_tasks(
             backend,
             strategy,
+            arena,
             extra_state.as_deref(),
             lr,
             epochs,
@@ -506,26 +511,29 @@ fn apply_attack(
     match state.job.adversary.attack {
         AttackKind::LabelFlip => {}
         AttackKind::SignFlip => {
-            update.params = update.params.iter().map(|p| -p).collect();
+            let flipped: Vec<f32> = update.params.iter().map(|p| -p).collect();
+            update.params = state.arena.store_vec(flipped);
         }
         AttackKind::Scale => {
             // Gradient ascent: walk λ× the honest delta away from this
             // client's own starting model.
-            update.params = start
+            let scaled: Vec<f32> = start
                 .iter()
                 .zip(update.params.iter())
                 .map(|(s, p)| s - scale * (p - s))
                 .collect();
+            update.params = state.arena.store_vec(scaled);
         }
         AttackKind::Collude => {
             let shared = collusion
                 .get_or_insert_with(|| {
                     let mut rng = state.round_rng(round).derive("collude", 0);
-                    state
+                    let poison: Vec<f32> = state
                         .global
                         .iter()
                         .map(|g| g - scale * rng.normal_f32())
-                        .collect()
+                        .collect();
+                    state.arena.store_vec(poison)
                 })
                 .clone();
             update.params = shared;
@@ -562,7 +570,8 @@ fn compress_for_upload(
         CompressKind::None => bail!("compress_for_upload called with an inactive stage"),
     };
     let rec = compressed.decompress();
-    update.params = start.iter().zip(rec.iter()).map(|(s, d)| s + d).collect();
+    let rebuilt: Vec<f32> = start.iter().zip(rec.iter()).map(|(s, d)| s + d).collect();
+    update.params = state.arena.store_vec(rebuilt);
     Ok(compressed)
 }
 
@@ -806,10 +815,8 @@ pub fn standard_round(state: &mut JobState, round: u64) -> Result<RoundMetrics> 
 
     let (winner, agg_secs) = aggregate_and_consensus(state, round, &updates, &mut rng)?;
     let global_before = state.global.clone();
-    state.global = state
-        .strategy
-        .post_round(&updates, &global_before, winner)
-        .into();
+    let next_global = state.strategy.post_round(&updates, &global_before, winner);
+    state.global = state.arena.store_vec(next_global);
 
     let (test_loss, test_accuracy) = state.evaluate(&state.global)?;
     // Server memory stays O(model + sampled cohort): the round's cohort is
@@ -891,7 +898,8 @@ pub fn hierarchical_round(state: &mut JobState, round: u64) -> Result<RoundMetri
         // Leaf aggregation (per-leaf derived stream — proposals must not
         // couple across clusters through a shared RNG).
         let mut agg_rng = state.round_rng(round).derive("agg", name_index(leaf_worker));
-        let agg: Arc<[f32]> = state.aggregate_updates(&updates, plan, &mut agg_rng)?.into();
+        let agg_vec = state.aggregate_updates(&updates, plan, &mut agg_rng)?;
+        let agg: Arc<[f32]> = state.arena.store_vec(agg_vec);
         let weight: f64 = updates.iter().map(|u| u.weight).sum();
         // Leaf worker ships its cluster model upstream (extra hop = the
         // hierarchical bandwidth/CPU overhead of Fig 11); the payload shares
@@ -919,10 +927,8 @@ pub fn hierarchical_round(state: &mut JobState, round: u64) -> Result<RoundMetri
     let weights: Vec<f64> = cluster_aggs.iter().map(|u| u.weight).collect();
     let merged = crate::aggregate::mean::weighted_mean_plan(&refs, &weights, plan)?;
     let global_before = state.global.clone();
-    state.global = state
-        .strategy
-        .post_round(&cluster_aggs, &global_before, merged)
-        .into();
+    let next_global = state.strategy.post_round(&cluster_aggs, &global_before, merged);
+    state.global = state.arena.store_vec(next_global);
 
     // Example-weighted over clusters (each cluster's loss is already
     // example-weighted over its members, and carries its total weight).
@@ -995,9 +1001,8 @@ pub fn clustered_round(state: &mut JobState, round: u64) -> Result<RoundMetrics>
                     .collect();
                 let refs: Vec<&[f32]> = members.iter().map(|u| u.params.as_ref()).collect();
                 let ws: Vec<f64> = members.iter().map(|u| u.weight).collect();
-                let model: Arc<[f32]> =
-                    crate::aggregate::mean::weighted_mean_plan(&refs, &ws, plan)?.into();
-                models.insert(cid, model);
+                let model_vec = crate::aggregate::mean::weighted_mean_plan(&refs, &ws, plan)?;
+                models.insert(cid, state.arena.store_vec(model_vec));
             }
             state
                 .controller
@@ -1009,10 +1014,8 @@ pub fn clustered_round(state: &mut JobState, round: u64) -> Result<RoundMetrics>
                 aggregate_and_consensus(state, round, &updates, &mut rng)?;
             sim_round_secs += agg_secs;
             let global_before = state.global.clone();
-            state.global = state
-                .strategy
-                .post_round(&updates, &global_before, winner)
-                .into();
+            let next_global = state.strategy.post_round(&updates, &global_before, winner);
+            state.global = state.arena.store_vec(next_global);
         }
 
         let (test_loss, test_accuracy) = clustered_eval(state)?;
@@ -1086,7 +1089,8 @@ pub fn clustered_round(state: &mut JobState, round: u64) -> Result<RoundMetrics>
         let refs: Vec<&[f32]> = members.iter().map(|u| u.params.as_ref()).collect();
         let ws: Vec<f64> = members.iter().map(|u| u.weight).collect();
         let model = crate::aggregate::mean::weighted_mean_plan(&refs, &ws, plan)?;
-        state.cluster_models.insert(cid, model.into());
+        let model = state.arena.store_vec(model);
+        state.cluster_models.insert(cid, model);
     }
 
     let (test_loss, test_accuracy) = clustered_eval(state)?;
@@ -1207,7 +1211,7 @@ pub fn decentralized_round(state: &mut JobState, round: u64) -> Result<RoundMetr
         gossip_phase = gossip_phase.max(peer_secs);
         let weights = vec![1.0; stack.len()];
         let merged = crate::aggregate::mean::weighted_mean_plan(&stack, &weights, plan)?;
-        merged_models.insert(peer.clone(), merged.into());
+        merged_models.insert(peer.clone(), state.arena.store_vec(merged));
     }
     for (peer, model) in &merged_models {
         if let Some(node) = state.clients.get_mut(peer) {
@@ -1218,8 +1222,8 @@ pub fn decentralized_round(state: &mut JobState, round: u64) -> Result<RoundMetr
     // Report on the uniform mean of peer models (the "virtual global").
     let refs: Vec<&[f32]> = merged_models.values().map(|m| m.as_ref()).collect();
     let weights = vec![1.0; refs.len()];
-    state.global =
-        crate::aggregate::mean::weighted_mean_plan(&refs, &weights, plan)?.into();
+    let virtual_global = crate::aggregate::mean::weighted_mean_plan(&refs, &weights, plan)?;
+    state.global = state.arena.store_vec(virtual_global);
 
     let (test_loss, test_accuracy) = state.evaluate(&state.global)?;
     let global = state.global.clone();

@@ -322,26 +322,4 @@ impl Orchestrator {
             RunStatus::BudgetReached | RunStatus::Cancelled => Ok(handle.partial_report()),
         }
     }
-
-    /// Deprecated: use `run(job, RunOptions::default().faults(faults))`.
-    #[deprecated(note = "use Orchestrator::run(job, RunOptions::default().faults(faults))")]
-    pub fn run_with_faults(&self, job: &JobConfig, faults: FaultPlan) -> Result<RunReport> {
-        self.run(job, RunOptions::default().faults(faults))
-    }
-
-    /// Deprecated: use `run(job, RunOptions { control, faults })` (the
-    /// by-reference control is the only signature difference).
-    #[deprecated(note = "use Orchestrator::run(job, RunOptions::default().control(...))")]
-    pub fn run_controlled(
-        &self,
-        job: &JobConfig,
-        faults: FaultPlan,
-        ctl: &RunControl,
-    ) -> Result<RunReport> {
-        let mut handle = RunHandle::start(self.rt.clone(), job, faults)?;
-        match handle.advance(ctl)? {
-            RunStatus::Completed => handle.finish(),
-            RunStatus::BudgetReached | RunStatus::Cancelled => Ok(handle.partial_report()),
-        }
-    }
 }

@@ -20,6 +20,7 @@ use crate::data::distributor::Distributor;
 use crate::data::partition::Partition;
 use crate::data::synthetic;
 use crate::info;
+use crate::kvstore::arena::RoundArena;
 use crate::kvstore::netsim::NetSim;
 use crate::kvstore::store::KvStore;
 use crate::metrics::report::RunReport;
@@ -58,6 +59,10 @@ pub struct JobState {
     pub controller: LogicController,
     pub kv: KvStore,
     pub net: NetSim,
+    /// Round-buffer arena every per-round `Vec<f32> → Arc<[f32]>`
+    /// conversion goes through (client updates, proposals, cluster / peer /
+    /// global models). Pass-through when `job.arena` is off.
+    pub arena: RoundArena,
     pub strategy: Box<dyn Strategy>,
     pub consensus: Box<dyn Consensus>,
     pub chain: Option<Box<dyn Blockchain>>,
@@ -287,6 +292,11 @@ impl JobState {
             controller,
             kv: KvStore::new(),
             net,
+            arena: if job.arena {
+                RoundArena::new()
+            } else {
+                RoundArena::disabled()
+            },
             strategy,
             consensus,
             chain,
@@ -383,7 +393,9 @@ impl JobState {
                 let clipped: Vec<ClientUpdate> = updates
                     .iter()
                     .map(|u| ClientUpdate {
-                        params: clip_update(&self.global, &u.params, dp.clip).into(),
+                        params: self
+                            .arena
+                            .store_vec(clip_update(&self.global, &u.params, dp.clip)),
                         ..u.clone()
                     })
                     .collect();

@@ -496,12 +496,11 @@ impl ReferenceEngine {
     }
 
     fn finish_step(t: &TrainIn, grad: &[f32], loss: f32) -> Vec<Literal> {
-        let new_w: Vec<f32> = t
-            .w
-            .iter()
-            .zip(grad)
-            .map(|(&w, &g)| w - t.lr * g)
-            .collect();
+        // Blocked `w − lr·g` (same per-element ops as the scalar map it
+        // replaced — see aggregate::kernel): this runs once per batch per
+        // client on the fallback backend.
+        let mut new_w = vec![0f32; t.w.len()];
+        crate::aggregate::kernel::sub_scaled_into(&mut new_w, t.w, t.lr, grad);
         vec![Literal::vec_f32(new_w), Literal::scalar_f32(loss)]
     }
 }

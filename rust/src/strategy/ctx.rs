@@ -4,6 +4,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::kvstore::arena::RoundArena;
 use crate::runtime::backend::ModelBackend;
 use crate::runtime::tensor::Literal;
 use crate::util::rng::Rng;
@@ -41,6 +42,10 @@ pub struct ClientCtx<'a> {
     pub state: &'a mut ClientState,
     /// Client-round-derived deterministic stream.
     pub rng: &'a mut Rng,
+    /// Round-buffer arena the upload `Arc<[f32]>`s are shared through
+    /// (recycled allocations — see [`RoundArena`]). Thread-safe: client
+    /// tasks on the worker pool all point at the job's one arena.
+    pub arena: &'a RoundArena,
 }
 
 /// What a client uploads after local training (paper consensus phase 1,
@@ -103,5 +108,12 @@ impl<'a> ClientCtx<'a> {
     /// Total batch steps one round performs (local_epochs × batches).
     pub fn steps_per_round(&self) -> usize {
         self.local_epochs * self.batches.len()
+    }
+
+    /// Share an owned parameter vector as the upload `Arc<[f32]>`, through
+    /// the round arena (recycles a released round buffer when one is free;
+    /// bit-for-bit the same values as `v.into()`).
+    pub fn share(&self, v: Vec<f32>) -> Arc<[f32]> {
+        self.arena.store_vec(v)
     }
 }

@@ -26,7 +26,7 @@ impl Strategy for FedProx {
         })?;
         Ok(ClientUpdate {
             client: ctx.client.to_string(),
-            params: params.into(),
+            params: ctx.share(params),
             weight: ctx.n_examples as f64,
             extra: None,
             mean_loss,

@@ -42,7 +42,7 @@ impl Strategy for FlHc {
             ctx.run_epochs(&start, |b, p, x, y| b.sgd(p, x, y, lr))?;
         Ok(ClientUpdate {
             client: ctx.client.to_string(),
-            params: params.into(),
+            params: ctx.share(params),
             weight: ctx.n_examples as f64,
             extra: None,
             mean_loss,

@@ -37,7 +37,7 @@ impl Strategy for Moon {
         ctx.state.prev_params = Some(params.clone());
         Ok(ClientUpdate {
             client: ctx.client.to_string(),
-            params: params.into(),
+            params: ctx.share(params),
             weight: ctx.n_examples as f64,
             extra: None,
             mean_loss,

@@ -56,9 +56,9 @@ impl Strategy for Scaffold {
 
         Ok(ClientUpdate {
             client: ctx.client.to_string(),
-            params: params.into(),
+            params: ctx.share(params),
             weight: ctx.n_examples as f64,
-            extra: Some(dci.into()),
+            extra: Some(ctx.share(dci)),
             mean_loss,
         })
     }

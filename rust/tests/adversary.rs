@@ -97,7 +97,7 @@ fn zero_adversary_runs_are_bitwise_identical() {
 #[test]
 fn robust_aggregators_beat_weighted_mean_under_poisoning() {
     let orch = Orchestrator::new(rt());
-    let undefended = orch.run(&poisoned()).unwrap();
+    let undefended = orch.run(&poisoned(), RunOptions::default()).unwrap();
 
     let mut krum = poisoned();
     krum.robust_agg = RobustAggConfig::parse_axis("krum").unwrap();
@@ -143,7 +143,7 @@ fn robust_aggregation_is_worker_count_invariant() {
 #[test]
 fn label_flip_changes_training() {
     let orch = Orchestrator::new(rt());
-    let clean = orch.run(&tiny("fedavg")).unwrap();
+    let clean = orch.run(&tiny("fedavg"), RunOptions::default()).unwrap();
     let mut flipped = tiny("fedavg");
     flipped.adversary.attack = AttackKind::LabelFlip;
     flipped.adversary.attack_fraction = 0.5;
@@ -192,7 +192,7 @@ fn declarative_drop_schedule_completes() {
     assert_eq!(report.rounds.len(), 2);
     // And it is a *different* trajectory from the clean run (client_1's
     // round-2 update is missing from the aggregate).
-    let clean = Orchestrator::new(rt()).run(&tiny("fedavg")).unwrap();
+    let clean = Orchestrator::new(rt()).run(&tiny("fedavg"), RunOptions::default()).unwrap();
     assert_eq!(hashes(&report)[0], hashes(&clean)[0]);
     assert_ne!(hashes(&report)[1], hashes(&clean)[1]);
 }

@@ -1,0 +1,155 @@
+//! Bitwise pin of the SIMD-blocked aggregation kernels against scalar
+//! reference reductions.
+//!
+//! The blocked kernels (`aggregate::kernel`, 8-lane fixed-width blocks +
+//! scalar tail) vectorize the *element* axis only, so each output element's
+//! floating-point operation sequence is exactly what its `ReductionOrder`
+//! defines — blocking must never move a bit. This test re-implements every
+//! reduction order as straight-line scalar code (no blocking, no chunking,
+//! no threads) and asserts `weighted_mean_plan` and `StreamingMean`
+//! reproduce it bit for bit across:
+//!
+//! * all 4 reduction orders (the simulated hardware profiles),
+//! * parallelism 1 / 4 / 8 (block-parallel chunking engaged on the large
+//!   dim, inline on the small ones),
+//! * dims deliberately NOT multiples of the 8-lane block width, so the
+//!   scalar tail path is always exercised (13, 127, CHUNK+37, 32·CHUNK+5).
+
+use flsim::aggregate::kernel::LANES;
+use flsim::aggregate::mean::{weighted_mean_plan, AggPlan, ReductionOrder, StreamingMean};
+use flsim::util::rng::Rng;
+
+/// Element chunk size of the plan executor (mirrors aggregate::mean::CHUNK).
+const CHUNK: usize = 4096;
+
+fn random_models(seed: u64, n: usize, dim: usize) -> (Vec<Vec<f32>>, Vec<f64>) {
+    let mut rng = Rng::seed_from(seed);
+    let params: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..dim).map(|_| rng.normal_f32() * 3.0).collect())
+        .collect();
+    let weights: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+    (params, weights)
+}
+
+/// Per-element scalar pairwise tree: split at the largest power of two
+/// strictly below n, left + right — the association `pairwise_into` uses.
+fn scalar_pairwise_elem(params: &[&[f32]], w: &[f32], mlo: usize, mhi: usize, j: usize) -> f32 {
+    let n = mhi - mlo;
+    if n == 1 {
+        return w[mlo] * params[mlo][j];
+    }
+    let split = 1usize << (n - 1).ilog2();
+    let left = scalar_pairwise_elem(params, w, mlo, mlo + split, j);
+    let right = scalar_pairwise_elem(params, w, mlo + split, mhi, j);
+    left + right
+}
+
+/// Straight-line scalar weighted mean — the unblocked reference every
+/// profile's kernel path must match bitwise.
+fn scalar_reference(params: &[&[f32]], weights: &[f64], order: ReductionOrder) -> Vec<f32> {
+    let wsum: f64 = weights.iter().sum();
+    let w: Vec<f32> = weights.iter().map(|&x| (x / wsum) as f32).collect();
+    let dim = params[0].len();
+    let mut out = vec![0f32; dim];
+    match order {
+        ReductionOrder::Sequential => {
+            for (p, &wi) in params.iter().zip(&w) {
+                for j in 0..dim {
+                    out[j] += wi * p[j];
+                }
+            }
+        }
+        ReductionOrder::Reversed => {
+            for i in (0..params.len()).rev() {
+                for j in 0..dim {
+                    out[j] += w[i] * params[i][j];
+                }
+            }
+        }
+        ReductionOrder::Kahan => {
+            let mut comp = vec![0f32; dim];
+            for (p, &wi) in params.iter().zip(&w) {
+                for j in 0..dim {
+                    let y = wi * p[j] - comp[j];
+                    let t = out[j] + y;
+                    comp[j] = (t - out[j]) - y;
+                    out[j] = t;
+                }
+            }
+        }
+        ReductionOrder::PairwiseTree => {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = scalar_pairwise_elem(params, &w, 0, params.len(), j);
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn blocked_plan_matches_scalar_reference_bitwise() {
+    // Small dims exercise the scalar-tail path (dim < LANES and dim just
+    // past one block); the CHUNK+37 dim spans a chunk boundary with a
+    // ragged tail in the second chunk.
+    for &dim in &[13usize, 127, CHUNK + 37] {
+        assert_ne!(dim % LANES, 0, "dim {dim} must not align to the block width");
+        for &n in &[1usize, 3, 7, 10] {
+            let (params, weights) = random_models(40_000 + (dim * 31 + n) as u64, n, dim);
+            let refs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+            for order in ReductionOrder::ALL {
+                let golden = scalar_reference(&refs, &weights, order);
+                for par in [1usize, 4, 8] {
+                    let got =
+                        weighted_mean_plan(&refs, &weights, AggPlan::new(order, par)).unwrap();
+                    assert_eq!(
+                        got, golden,
+                        "{order:?} dim={dim} n={n} p{par} diverges from scalar reference"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_plan_matches_scalar_reference_with_parallel_chunking_engaged() {
+    // 32 chunks + 5 ragged elements: enough chunks that parallelism 8
+    // genuinely spawns 8 workers (the executor requires >= 4 chunks per
+    // thread), with both a mid-vector block tail and a final partial chunk.
+    let dim = 32 * CHUNK + 5;
+    assert_ne!(dim % LANES, 0);
+    let (params, weights) = random_models(41_000, 7, dim);
+    let refs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+    for order in ReductionOrder::ALL {
+        let golden = scalar_reference(&refs, &weights, order);
+        for par in [1usize, 8] {
+            let got = weighted_mean_plan(&refs, &weights, AggPlan::new(order, par)).unwrap();
+            assert_eq!(got, golden, "{order:?} p{par} diverges at dim={dim}");
+        }
+    }
+}
+
+#[test]
+fn streaming_mean_matches_scalar_reference_bitwise() {
+    // The streaming fold (recycled leaf buffers included) must land on the
+    // same bits as the straight-line scalar reduction for every profile,
+    // at cohort sizes around power-of-two boundaries and a ragged dim.
+    let dim = CHUNK + 37;
+    for &n in &[1usize, 2, 5, 8, 9, 16, 17] {
+        let (params, weights) = random_models(42_000 + n as u64, n, dim);
+        let refs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+        let total: f64 = weights.iter().sum();
+        for order in ReductionOrder::ALL {
+            let golden = scalar_reference(&refs, &weights, order);
+            let mut stream = StreamingMean::new(dim, total, order).unwrap();
+            for (p, &w) in refs.iter().zip(&weights) {
+                stream.push(p, w).unwrap();
+            }
+            assert_eq!(
+                stream.finish().unwrap(),
+                golden,
+                "{order:?} streaming diverges at n={n}"
+            );
+        }
+    }
+}

@@ -59,7 +59,7 @@ fn sim_secs(r: &RunReport) -> f64 {
 #[test]
 fn fedavg_plus_channel_dp_reproduces_dpfl_bitwise() {
     let orch = Orchestrator::new(rt());
-    let legacy = orch.run(&tiny("dpfl")).unwrap();
+    let legacy = orch.run(&tiny("dpfl"), RunOptions::default()).unwrap();
 
     let mut composed = tiny("fedavg");
     // dpfl's parse defaults (strategy/mod.rs): clip 10.0, sigma 0.005.
@@ -125,7 +125,7 @@ fn inactive_channel_section_is_bitwise_invisible() {
 #[test]
 fn tighter_compression_strictly_shrinks_wire_traffic() {
     let orch = Orchestrator::new(rt());
-    let dense = orch.run(&tiny("fedavg")).unwrap();
+    let dense = orch.run(&tiny("fedavg"), RunOptions::default()).unwrap();
 
     let mut sparse = tiny("fedavg");
     sparse.channel.compress =
@@ -177,7 +177,7 @@ fn tighter_compression_strictly_shrinks_wire_traffic() {
 #[test]
 fn secure_agg_shares_are_metered() {
     let orch = Orchestrator::new(rt());
-    let plain = orch.run(&tiny("fedavg")).unwrap();
+    let plain = orch.run(&tiny("fedavg"), RunOptions::default()).unwrap();
 
     let mut sa = tiny("fedavg");
     sa.channel.secure_agg = Some(SecureAggConfig { threshold: 2 });
@@ -309,4 +309,33 @@ fn channel_sweep_spec_expands() {
     assert_ne!(quant_dp.key, clean_dense.key, "cells must hash distinctly");
     let keys: std::collections::BTreeSet<&String> = cells.iter().map(|c| &c.key).collect();
     assert_eq!(keys.len(), 6, "all six cells must have distinct cache keys");
+}
+
+/// NaN-safety regression for the top_k codec, through a real adversarial
+/// job: a λ = 1e39 scale attack overflows f32 (the λ cast alone is ±inf),
+/// so poisoned uploads — and therefore the aggregated global and every
+/// subsequent client delta — carry ±inf and NaN (inf · 0, inf − inf). The
+/// old magnitude comparator (`partial_cmp(..).unwrap()`) panicked on the
+/// first NaN; the `total_cmp` selection must instead rank NaNs strictly
+/// last and let the run complete — deterministically, since poisoned bit
+/// patterns replay exactly.
+#[test]
+fn topk_survives_non_finite_poisoned_uploads() {
+    let mut job = tiny("fedavg");
+    job.name = "chan_nan_topk".into();
+    job.adversary.attack = flsim::config::adversary::AttackKind::Scale;
+    job.adversary.attack_fraction = 0.5;
+    job.adversary.scale = 1e39; // > f32::MAX: non-finite from round 1 on
+    job.channel.compress =
+        flsim::config::channel::ChannelConfig::parse_compress_axis("top_k:500").unwrap();
+
+    let orch = Orchestrator::new(rt());
+    let a = orch.run(&job, RunOptions::default()).unwrap();
+    assert_eq!(a.rounds.len(), 2, "poisoned top_k run must complete");
+    let b = orch.run(&job, RunOptions::default()).unwrap();
+    assert_eq!(
+        hashes(&a),
+        hashes(&b),
+        "non-finite top_k selection must replay bit for bit"
+    );
 }

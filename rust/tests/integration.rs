@@ -85,8 +85,8 @@ fn different_seed_changes_trajectory() {
 fn scaffold_moves_extra_state_over_the_wire() {
     let rt = Runtime::shared(artifacts_dir()).unwrap();
     let orch = Orchestrator::new(rt);
-    let fedavg = orch.run(&mini_job("fedavg")).unwrap();
-    let scaffold = orch.run(&mini_job("scaffold")).unwrap();
+    let fedavg = orch.run(&mini_job("fedavg"), RunOptions::default()).unwrap();
+    let scaffold = orch.run(&mini_job("scaffold"), RunOptions::default()).unwrap();
     // Control variates ≈ double the client upload volume.
     assert!(
         scaffold.total_net_bytes() > fedavg.total_net_bytes() * 4 / 3,
@@ -123,7 +123,7 @@ fn multi_worker_consensus_defeats_malicious_worker() {
 fn hierarchical_topology_runs_and_costs_more_bandwidth() {
     let rt = Runtime::shared(artifacts_dir()).unwrap();
     let orch = Orchestrator::new(rt);
-    let flat = orch.run(&mini_job("fedavg")).unwrap();
+    let flat = orch.run(&mini_job("fedavg"), RunOptions::default()).unwrap();
 
     let mut job = mini_job("fedavg");
     job.topology = TopologyKind::Hierarchical;

@@ -34,14 +34,14 @@ fn mini(strategy: &str) -> JobConfig {
 fn fig11e_topology_transfer_time_ordering() {
     let orch = Orchestrator::new(rt());
 
-    let cs = orch.run(&mini("fedavg")).unwrap();
+    let cs = orch.run(&mini("fedavg"), RunOptions::default()).unwrap();
 
     let mut hier_job = mini("fedavg");
     hier_job.topology = TopologyKind::Hierarchical;
     hier_job.n_workers = 3;
     let hier = orch.run(&hier_job, RunOptions::default()).unwrap();
 
-    let fc = orch.run(&mini("fedstellar")).unwrap();
+    let fc = orch.run(&mini("fedstellar"), RunOptions::default()).unwrap();
 
     let (cs_t, hier_t, fc_t) = (
         cs.total_sim_net_secs(),
@@ -67,7 +67,7 @@ fn fig11e_topology_transfer_time_ordering() {
 #[test]
 fn virtual_clock_is_observational_without_a_deadline() {
     let orch = Orchestrator::new(rt());
-    let plain = orch.run(&mini("fedavg")).unwrap();
+    let plain = orch.run(&mini("fedavg"), RunOptions::default()).unwrap();
 
     // Same job with a radically different fabric: slow uplinks, a 3x
     // compute spread — but no deadline. Every training result must be
